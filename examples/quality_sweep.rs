@@ -1,0 +1,44 @@
+//! Quality/bits frontier sweep (a runnable mini Figure 4): sweep ρ and the
+//! high-precision bitwidth on one trained adapter and print the
+//! (avg_bits → task score) curve through the real runtime.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quality_sweep -- --task modadd
+//! ```
+
+use loraquant::cli::Args;
+use loraquant::experiments::{ModelCtx, Settings};
+use loraquant::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let task = args.str_or("task", "modadd");
+    let settings = Settings::from_env();
+    let Some(model) = settings.models.first().cloned() else {
+        anyhow::bail!("no artifacts — run `make artifacts` first");
+    };
+    let ctx = ModelCtx::load(&settings, &model)?;
+    let td = ctx
+        .tasks
+        .iter()
+        .find(|t| t.task == task)
+        .ok_or_else(|| anyhow::anyhow!("task {task} not trained"))?;
+
+    println!("quality vs bits frontier — {model}/{task} ({} eval examples)", td.eval.len());
+    println!("{:<8} {:<6} {:>9} {:>9}", "bits_hi", "rho", "avg_bits", "score");
+    for bits in [2u32, 3] {
+        for rho in [0.5f32, 0.7, 0.8, 0.9, 0.95] {
+            let cfg = LoraQuantConfig { group: 128, ..LoraQuantConfig::variant(bits, rho) };
+            let mut q = QuantizedLora::default();
+            for (site, (a, b)) in &td.lora.sites {
+                q.sites.insert(site.clone(), quantize_site(b, a, &cfg));
+            }
+            let deltas = loraquant::model::merge::quant_deltas(&q);
+            let score = ctx.eval_deltas(&deltas, &td.eval)?;
+            println!("{bits:<8} {rho:<6} {:>9.3} {score:>9.2}", q.avg_bits());
+        }
+    }
+    let fp = ctx.eval_deltas(&loraquant::model::merge::fp_deltas(&td.lora), &td.eval)?;
+    println!("{:<8} {:<6} {:>9.3} {fp:>9.2}", "fp16", "-", 16.0);
+    Ok(())
+}

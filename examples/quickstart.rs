@@ -1,0 +1,51 @@
+//! Quickstart: quantize one LoRA adapter with LoRAQuant and inspect the
+//! result — no artifacts needed (synthetic adapter with a realistic
+//! decaying spectrum).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use loraquant::baselines::{FlatQuantizer, Quantizer};
+use loraquant::loraquant::{quantize_site, LoraQuantConfig};
+use loraquant::tensor::matmul;
+use loraquant::testutil::Rng;
+
+fn main() {
+    // A rank-16 adapter for a 512x128 linear site, spectrum decaying like a
+    // trained LoRA's.
+    let mut rng = Rng::new(42);
+    let (b, a) = rng.lora_pair(512, 128, 16, 0.7);
+    let ba = matmul(&b, &a);
+
+    println!("LoRAQuant quickstart — one 512x128 rank-16 adapter\n");
+    for (bits, rho) in [(2u32, 0.8f32), (2, 0.9), (3, 0.8), (3, 0.9)] {
+        let cfg = LoraQuantConfig::variant(bits, rho);
+        let site = quantize_site(&b, &a, &cfg);
+        let err = site.dequant_delta().rel_err(&ba);
+        println!(
+            "LoRAQuant({bits}@{rho}):  h={:<2}  avg_bits={:.3}  packed={:>6} B  rel_err={:.3}",
+            site.h,
+            site.avg_bits(),
+            site.packed_bytes(),
+            err
+        );
+    }
+
+    println!("\nbaselines at similar budgets:");
+    for (q, label) in [
+        (FlatQuantizer::bin(128), "BIN        "),
+        (FlatQuantizer::rtn(1, 128), "RTN (1 bit)"),
+        (FlatQuantizer::rtn(2, 128), "RTN (2 bit)"),
+    ] {
+        let c = q.quantize(&b, &a, None);
+        println!(
+            "{label}:  avg_bits={:.3}  rel_err={:.3}",
+            c.avg_bits(),
+            c.dequant_delta().rel_err(&ba)
+        );
+    }
+    println!("\nFP16 baseline: avg_bits=16.000  rel_err=0.000");
+    println!("\nThe mixed-precision split keeps the error of sub-2-bit storage");
+    println!("well below flat 1-bit methods — the paper's core claim in weight space.");
+}

@@ -1,0 +1,111 @@
+"""AOT: lower the L2 model forward and the L1 Pallas kernel to HLO text.
+
+HLO **text** (not `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under artifacts/):
+    <model>.fwd.b<B>.hlo.txt    forward (tokens[B,T], *weights) -> (logits,)
+                                for batch buckets B in BUCKETS
+    lora_apply.hlo.txt          fused quantized sub-LoRA apply (L1 kernel)
+    manifest.txt                one line per artifact: name, inputs, shapes
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BUCKETS = [1, 8]
+
+# Shapes for the standalone kernel artifact (tiny-llama-s attention site,
+# rho=0.9-ish split: h=4 high components, rl=12 low).
+KERNEL_SHAPE = dict(bsz=8, n=128, m=128, h=4, rl=12, group=64)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fwd(cfg, bsz):
+    """Lower the flat-signature forward for one batch bucket."""
+    specs = [jax.ShapeDtypeStruct((bsz, cfg.seq_len), jnp.int32)]
+    dummy = M.init_params(cfg, jax.random.PRNGKey(0))
+    for name in M.param_names(cfg):
+        specs.append(jax.ShapeDtypeStruct(dummy[name].shape, jnp.float32))
+    return jax.jit(M.fwd_flat(cfg)).lower(*specs)
+
+
+def lower_lora_apply():
+    from .kernels import lora_apply as K
+
+    s = KERNEL_SHAPE
+    bsz, n, m, h, rl, g = s["bsz"], s["n"], s["m"], s["h"], s["rl"], s["group"]
+    f32, u8 = jnp.float32, jnp.uint8
+    specs = [
+        jax.ShapeDtypeStruct((bsz, n), f32),
+        jax.ShapeDtypeStruct((h, n // 4), u8),
+        jax.ShapeDtypeStruct((h, n // g), f32),
+        jax.ShapeDtypeStruct((h, n // g), f32),
+        jax.ShapeDtypeStruct((h, m // 4), u8),
+        jax.ShapeDtypeStruct((h, m // g), f32),
+        jax.ShapeDtypeStruct((h, m // g), f32),
+        jax.ShapeDtypeStruct((rl, n // 8), u8),
+        jax.ShapeDtypeStruct((rl, n // g), f32),
+        jax.ShapeDtypeStruct((rl, m // 8), u8),
+        jax.ShapeDtypeStruct((rl, m // g), f32),
+    ]
+
+    def f(*args):
+        return (K.lora_apply_pallas(*args, group=g),)
+
+    return jax.jit(f).lower(*specs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny-llama-s,tiny-llama-m,tiny-mistral-s")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for mname in args.models.split(","):
+        cfg = M.MODELS[mname]
+        for bsz in BUCKETS:
+            path = os.path.join(args.out, f"{mname}.fwd.b{bsz}.hlo.txt")
+            text = to_hlo_text(lower_fwd(cfg, bsz))
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(
+                f"{mname}.fwd.b{bsz}: tokens i32[{bsz},{cfg.seq_len}] "
+                f"+ {len(M.param_names(cfg))} weights -> logits f32[{bsz},{cfg.seq_len},{cfg.vocab}]"
+            )
+            print(f"wrote {path} ({len(text)} chars)", flush=True)
+
+    path = os.path.join(args.out, "lora_apply.hlo.txt")
+    text = to_hlo_text(lower_lora_apply())
+    with open(path, "w") as f:
+        f.write(text)
+    s = KERNEL_SHAPE
+    manifest.append(
+        f"lora_apply: x f32[{s['bsz']},{s['n']}] h={s['h']} rl={s['rl']} "
+        f"group={s['group']} -> y f32[{s['bsz']},{s['m']}]"
+    )
+    print(f"wrote {path} ({len(text)} chars)", flush=True)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

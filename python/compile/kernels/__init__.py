@@ -1,0 +1,2 @@
+"""Pallas kernels (L1) and their pure-jnp oracle (ref)."""
+from . import binary, lora_apply, ref, rtn  # noqa: F401

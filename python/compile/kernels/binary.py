@@ -1,0 +1,68 @@
+"""Pallas kernels for sign-based binary quantization (paper Eq. 8).
+
+Scale is the group-wise L1 mean, which minimizes ||W - S*sign(W)||_F
+(Rastegari et al., 2016). interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rtn import ROW_BLOCK, _row_grid
+
+
+def _bin_quant_kernel(w_ref, signs_ref, scale_ref, *, group):
+    w = w_ref[...]
+    r, n = w.shape
+    g = w.reshape(r, n // group, group)
+    scale_ref[...] = jnp.mean(jnp.abs(g), axis=-1).astype(jnp.float32)
+    signs_ref[...] = jnp.where(w >= 0, 1, -1).astype(jnp.int32)
+
+
+def _bin_dequant_kernel(signs_ref, scale_ref, out_ref, *, group):
+    s = signs_ref[...].astype(jnp.float32)
+    r, n = s.shape
+    g = s.reshape(r, n // group, group)
+    out_ref[...] = (scale_ref[...][..., None] * g).reshape(r, n)
+
+
+def bin_quant_pallas(w, group):
+    """w: f32[r, n] -> (signs i32[r, n] in {-1,+1}, scale f32[r, n//group])."""
+    r, n = w.shape
+    steps, blk = _row_grid(r)
+    ng = n // group
+    kern = functools.partial(_bin_quant_kernel, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((blk, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+            pl.BlockSpec((blk, ng), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, n), jnp.int32),
+            jax.ShapeDtypeStruct((r, ng), jnp.float32),
+        ],
+        interpret=True,
+    )(w)
+
+
+def bin_dequant_pallas(signs, scale, group):
+    r, n = signs.shape
+    steps, blk = _row_grid(r)
+    ng = n // group
+    kern = functools.partial(_bin_dequant_kernel, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+            pl.BlockSpec((blk, ng), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=True,
+    )(signs, scale)

@@ -1,0 +1,151 @@
+"""Fused quantized sub-LoRA apply — the L1 hot-spot kernel.
+
+Computes, for one linear site with a LoRAQuant-compressed adapter,
+
+    y[B, m] = x @ dequant2(Ah)^T @ dequant2(Bh^T)        (high sub-LoRA)
+            + x @ dequant1(Al)^T @ dequant1(Bl^T)        (low  sub-LoRA)
+
+where the high factors are 2-bit RTN codes packed 4-per-byte and the low
+factors are 1-bit sign codes packed 8-per-byte, with per-group fp32 scales
+(group along the unpacked axis). All unpacking happens **in VMEM** with
+vectorized shifts/masks, so HBM only ever sees the packed pages — this is
+the TPU restatement of Punica's SGMV insight (amortize the adapter gather
+over the token batch), see DESIGN.md §Hardware-Adaptation.
+
+Grid: one step per m-block of the output. The x/A-side operands are
+replicated across steps (index_map -> block 0) and the small rank-h
+intermediate t = x @ Ah^T is recomputed per step; on TPU this trades a few
+B*n*h FLOPs for streaming only one Bh^T/Bl^T page per step through VMEM.
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+M_BLOCK = 128
+
+
+# NOTE: scalar shift amounts (not constant arrays) — pallas kernels may not
+# capture array constants, so unpacking stacks per-shift lanes explicitly.
+def _unpack2(p, n):
+    lanes = [(p >> jnp.uint8(2 * j)) & jnp.uint8(3) for j in range(4)]
+    c = jnp.stack(lanes, axis=-1)
+    return c.reshape(p.shape[:-1] + (n,)).astype(jnp.float32)
+
+
+def _unpack1(p, n):
+    lanes = [(p >> jnp.uint8(j)) & jnp.uint8(1) for j in range(8)]
+    bits = jnp.stack(lanes, axis=-1)
+    return (bits.astype(jnp.float32) * 2.0 - 1.0).reshape(p.shape[:-1] + (n,))
+
+
+def _dequant_rtn(codes, scale, zero, group):
+    r, n = codes.shape
+    g = codes.reshape(r, n // group, group)
+    return (scale[..., None] * (g - zero[..., None])).reshape(r, n)
+
+
+def _dequant_bin(signs, scale, group):
+    r, n = signs.shape
+    g = signs.reshape(r, n // group, group)
+    return (scale[..., None] * g).reshape(r, n)
+
+
+def _lora_apply_kernel(
+    x_ref,
+    ah_c_ref, ah_s_ref, ah_z_ref,
+    bh_c_ref, bh_s_ref, bh_z_ref,
+    al_p_ref, al_s_ref,
+    bl_p_ref, bl_s_ref,
+    y_ref,
+    *, n, group,
+):
+    mb = y_ref.shape[1]
+    x = x_ref[...]
+    # High sub-LoRA: unpack 2-bit codes, dequant, dual matmul.
+    ah = _dequant_rtn(_unpack2(ah_c_ref[...], n), ah_s_ref[...], ah_z_ref[...], group)
+    bh_t = _dequant_rtn(_unpack2(bh_c_ref[...], mb), bh_s_ref[...], bh_z_ref[...], group)
+    th = jnp.dot(x, ah.T)            # [B, h]   (rank-sized, recomputed per step)
+    y = jnp.dot(th, bh_t)            # [B, mb]
+    # Low sub-LoRA: unpack sign bits, dequant, dual matmul.
+    al = _dequant_bin(_unpack1(al_p_ref[...], n), al_s_ref[...], group)
+    bl_t = _dequant_bin(_unpack1(bl_p_ref[...], mb), bl_s_ref[...], group)
+    tl = jnp.dot(x, al.T)            # [B, rl]
+    y = y + jnp.dot(tl, bl_t)
+    y_ref[...] = y
+
+
+def lora_apply_pallas(
+    x,
+    ah_codes, ah_scale, ah_zero,
+    bh_codes, bh_scale, bh_zero,
+    al_packed, al_scale,
+    bl_packed, bl_scale,
+    *, group,
+):
+    """Fused quantized sub-LoRA apply.
+
+    Shapes: x f32[B, n]; ah_codes u8[h, n//4]; bh_codes u8[h, m//4];
+    al_packed u8[rl, n//8]; bl_packed u8[rl, m//8]; scales/zeros
+    f32[rank, axis//group]. Returns y f32[B, m]. m % M_BLOCK == 0 or m < M_BLOCK.
+    """
+    bsz, n = x.shape
+    h = ah_codes.shape[0]
+    rl = al_packed.shape[0]
+    m = bh_scale.shape[1] * group
+    mb = M_BLOCK if m % M_BLOCK == 0 else m
+    steps = m // mb
+    ngg, mgg = n // group, mb // group
+    rep = lambda j: (0, 0)           # operand replicated across m-blocks
+    stp = lambda j: (0, j)           # operand tiled along m
+    kern = functools.partial(_lora_apply_kernel, n=n, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((bsz, n), rep),           # x
+            pl.BlockSpec((h, n // 4), rep),        # ah codes
+            pl.BlockSpec((h, ngg), rep),           # ah scale
+            pl.BlockSpec((h, ngg), rep),           # ah zero
+            pl.BlockSpec((h, mb // 4), stp),       # bh codes   (streamed)
+            pl.BlockSpec((h, mgg), stp),           # bh scale
+            pl.BlockSpec((h, mgg), stp),           # bh zero
+            pl.BlockSpec((rl, n // 8), rep),       # al packed
+            pl.BlockSpec((rl, ngg), rep),          # al scale
+            pl.BlockSpec((rl, mb // 8), stp),      # bl packed  (streamed)
+            pl.BlockSpec((rl, mgg), stp),          # bl scale
+        ],
+        out_specs=pl.BlockSpec((bsz, mb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m), jnp.float32),
+        interpret=True,
+    )(
+        x,
+        ah_codes, ah_scale, ah_zero,
+        bh_codes, bh_scale, bh_zero,
+        al_packed, al_scale,
+        bl_packed, bl_scale,
+    )
+
+
+def vmem_bytes_estimate(bsz, n, m, h, rl, group):
+    """Static VMEM footprint estimate per grid step (fp32 unpacked in VMEM).
+
+    Used by DESIGN.md/EXPERIMENTS.md to check the 16 MiB budget for real-TPU
+    shapes; interpret-mode wallclock is not a TPU proxy.
+    """
+    mb = min(m, M_BLOCK)
+    f32 = 4
+    resident = (
+        bsz * n * f32                      # x
+        + h * (n // 4 + mb // 4)           # packed 2-bit pages
+        + rl * (n // 8 + mb // 8)          # packed 1-bit pages
+        + (2 * h + rl) * (n // group + mb // group) * f32   # scales/zeros
+        + (h + rl) * (n + mb) * f32        # unpacked factors (worst case)
+        + bsz * (h + rl) * f32             # t intermediates
+        + bsz * mb * f32                   # y block
+    )
+    return resident

@@ -1,0 +1,146 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Everything here is the *definition of correct*: the Pallas kernels
+(`rtn.py`, `binary.py`, `lora_apply.py`) and the rust implementations
+(rust/src/quant/) are tested against these functions.
+
+Quantization conventions (shared across all three layers):
+
+* RTN is group-wise along the **last axis**: each row of a 2-D matrix is cut
+  into contiguous groups of `group` elements; each group gets an fp scale S
+  and an integer zero-point Z with  dequant(q) = S * (q - Z)  (paper Eq. 6-7).
+* Binary quantization is sign-based with the L1-optimal scale
+  S = mean(|w|) per group (paper Eq. 8, XNOR-Net).
+* Packing is little-endian **within a byte** along the last axis:
+  2-bit code j sits at bits 2*(j%4) of byte j//4; 1-bit code j at bit j%8.
+"""
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# RTN (round-to-nearest) group-wise quantization — paper §3.2, Eqs. 6-7
+# ---------------------------------------------------------------------------
+def rtn_quant(w, bits, group):
+    """w: f32[..., n] with n % group == 0.
+
+    Returns (codes i32[..., n], scale f32[..., n//group], zero i32-valued
+    f32[..., n//group]).  Degenerate all-equal groups reconstruct the
+    constant exactly (scale=constant, code 1, zero 0).
+    """
+    qmax = float(2**bits - 1)
+    shape = w.shape
+    g = w.reshape(shape[:-1] + (shape[-1] // group, group))
+    lo = g.min(axis=-1)
+    hi = g.max(axis=-1)
+    rng = hi - lo
+    degenerate = rng <= 0
+    # Degenerate (constant) groups: scale = the constant, code 1, zero 0 ->
+    # dequant reproduces the constant exactly (matches rust/src/quant/rtn.rs).
+    deg_scale = jnp.where(lo == 0, 1.0, lo)
+    scale = jnp.where(degenerate, deg_scale, rng / qmax)
+    # q_min = 0, so Z = round(-lo / S)
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(g / scale[..., None]) + zero[..., None], 0.0, qmax)
+    deg_code = jnp.where(lo == 0, 0.0, 1.0)
+    q = jnp.where(degenerate[..., None], deg_code[..., None], q)
+    zero = jnp.where(degenerate, 0.0, zero)
+    return (
+        q.reshape(shape).astype(jnp.int32),
+        scale.astype(jnp.float32),
+        zero.astype(jnp.float32),
+    )
+
+
+def rtn_dequant(codes, scale, zero, group):
+    shape = codes.shape
+    g = codes.reshape(shape[:-1] + (shape[-1] // group, group)).astype(jnp.float32)
+    w = scale[..., None] * (g - zero[..., None])
+    return w.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Sign binarization — paper §3.2, Eq. 8
+# ---------------------------------------------------------------------------
+def bin_quant(w, group):
+    """Returns (signs i32[..., n] in {-1,+1}, scale f32[..., n//group])."""
+    shape = w.shape
+    g = w.reshape(shape[:-1] + (shape[-1] // group, group))
+    scale = jnp.mean(jnp.abs(g), axis=-1)
+    signs = jnp.where(g >= 0, 1, -1).astype(jnp.int32)
+    return signs.reshape(shape), scale.astype(jnp.float32)
+
+
+def bin_dequant(signs, scale, group):
+    shape = signs.shape
+    g = signs.reshape(shape[:-1] + (shape[-1] // group, group)).astype(jnp.float32)
+    return (scale[..., None] * g).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (little-endian within byte, along last axis)
+# ---------------------------------------------------------------------------
+def pack2(codes):
+    """codes i32[..., n] in 0..3, n % 4 == 0 -> u8[..., n//4]."""
+    shape = codes.shape
+    c = codes.reshape(shape[:-1] + (shape[-1] // 4, 4)).astype(jnp.uint8)
+    return c[..., 0] | (c[..., 1] << 2) | (c[..., 2] << 4) | (c[..., 3] << 6)
+
+
+def unpack2(packed, n):
+    """u8[..., n//4] -> i32[..., n]."""
+    p = packed[..., None]
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    c = (p >> shifts) & jnp.uint8(3)
+    return c.reshape(packed.shape[:-1] + (n,)).astype(jnp.int32)
+
+
+def pack1(signs):
+    """signs i32[..., n] in {-1,+1}, n % 8 == 0 -> u8[..., n//8] (bit=1 <=> +1)."""
+    shape = signs.shape
+    bits = (signs > 0).astype(jnp.uint8)
+    b = bits.reshape(shape[:-1] + (shape[-1] // 8, 8))
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack1(packed, n):
+    """u8[..., n//8] -> i32[..., n] in {-1,+1}."""
+    p = packed[..., None]
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (p >> shifts) & jnp.uint8(1)
+    signs = bits.astype(jnp.int32) * 2 - 1
+    return signs.reshape(packed.shape[:-1] + (n,))
+
+
+# ---------------------------------------------------------------------------
+# Fused quantized sub-LoRA apply (the L1 hot spot) — reference
+# ---------------------------------------------------------------------------
+def lora_apply_dense(x, ah, bh_t, al, bl_t):
+    """y[B,m] = x @ AhT @ BhT' + x @ AlT @ BlT'  with A*[h,n], B*_t[h,m]."""
+    yh = (x @ ah.T) @ bh_t
+    yl = (x @ al.T) @ bl_t
+    return yh + yl
+
+
+def lora_apply_quant_ref(
+    x,
+    ah_codes, ah_scale, ah_zero,
+    bh_codes, bh_scale, bh_zero,
+    al_packed, al_scale,
+    bl_packed, bl_scale,
+    group,
+):
+    """Reference for the fused kernel: unpack -> dequant -> dual matmul.
+
+    ah_codes u8[h, n//4] (2-bit packed), bh_codes u8[h, m//4];
+    al_packed u8[rl, n//8], bl_packed u8[rl, m//8]; scales per group of
+    `group` along the unpacked axis.
+    """
+    n = ah_scale.shape[-1] * group
+    m = bh_scale.shape[-1] * group
+    ah = rtn_dequant(unpack2(ah_codes, n), ah_scale, ah_zero, group)
+    bh_t = rtn_dequant(unpack2(bh_codes, m), bh_scale, bh_zero, group)
+    al = bin_dequant(unpack1(al_packed, n), al_scale, group)
+    bl_t = bin_dequant(unpack1(bl_packed, m), bl_scale, group)
+    return lora_apply_dense(x, ah, bh_t, al, bl_t)

@@ -1,0 +1,96 @@
+"""Pallas kernels for group-wise RTN quantization / dequantization.
+
+These run in interpret=True mode (CPU PJRT cannot execute Mosaic custom
+calls); the BlockSpec structure is still written as it would be for a real
+TPU: one grid step per row-block, group reductions vectorized in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block processed per grid step. Rows are independent in group-wise RTN,
+# so this is a pure VMEM-tiling knob: each step stages ROW_BLOCK*(n + n/group
+# overheads) floats through VMEM.
+ROW_BLOCK = 8
+
+
+def _rtn_quant_kernel(w_ref, codes_ref, scale_ref, zero_ref, *, bits, group):
+    w = w_ref[...]
+    r, n = w.shape
+    qmax = float(2**bits - 1)
+    g = w.reshape(r, n // group, group)
+    lo = g.min(axis=-1)
+    hi = g.max(axis=-1)
+    rng = hi - lo
+    degenerate = rng <= 0
+    # Degenerate groups: see ref.rtn_quant (kept in lockstep with rust).
+    deg_scale = jnp.where(lo == 0, 1.0, lo)
+    scale = jnp.where(degenerate, deg_scale, rng / qmax)
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(g / scale[..., None]) + zero[..., None], 0.0, qmax)
+    deg_code = jnp.where(lo == 0, 0.0, 1.0)
+    q = jnp.where(degenerate[..., None], deg_code[..., None], q)
+    codes_ref[...] = q.reshape(r, n).astype(jnp.int32)
+    scale_ref[...] = scale.astype(jnp.float32)
+    zero_ref[...] = jnp.where(degenerate, 0.0, zero).astype(jnp.float32)
+
+
+def _rtn_dequant_kernel(codes_ref, scale_ref, zero_ref, out_ref, *, group):
+    c = codes_ref[...].astype(jnp.float32)
+    r, n = c.shape
+    g = c.reshape(r, n // group, group)
+    w = scale_ref[...][..., None] * (g - zero_ref[...][..., None])
+    out_ref[...] = w.reshape(r, n)
+
+
+def _row_grid(r):
+    assert r % ROW_BLOCK == 0 or r < ROW_BLOCK, f"rows {r} vs block {ROW_BLOCK}"
+    blk = ROW_BLOCK if r % ROW_BLOCK == 0 else r
+    return r // blk, blk
+
+
+def rtn_quant_pallas(w, bits, group):
+    """Group-wise RTN quantize via Pallas. w: f32[r, n], n % group == 0."""
+    r, n = w.shape
+    steps, blk = _row_grid(r)
+    ng = n // group
+    kern = functools.partial(_rtn_quant_kernel, bits=bits, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((blk, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+            pl.BlockSpec((blk, ng), lambda i: (i, 0)),
+            pl.BlockSpec((blk, ng), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, n), jnp.int32),
+            jax.ShapeDtypeStruct((r, ng), jnp.float32),
+            jax.ShapeDtypeStruct((r, ng), jnp.float32),
+        ],
+        interpret=True,
+    )(w)
+
+
+def rtn_dequant_pallas(codes, scale, zero, group):
+    """Inverse of rtn_quant_pallas. codes: i32[r, n]."""
+    r, n = codes.shape
+    steps, blk = _row_grid(r)
+    ng = n // group
+    kern = functools.partial(_rtn_dequant_kernel, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+            pl.BlockSpec((blk, ng), lambda i: (i, 0)),
+            pl.BlockSpec((blk, ng), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=True,
+    )(codes, scale, zero)

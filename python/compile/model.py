@@ -1,0 +1,213 @@
+"""L2: tiny decoder-only transformer with LoRA on every linear layer.
+
+This is the build-time JAX model. Its forward pass is AOT-lowered to HLO
+text (aot.py) with the **weights as runtime inputs**, so the rust serving
+path can swap LoRA-merged weights per adapter without recompiling.
+
+Weight schema (canonical name order is `param_names(cfg)`; the rust side
+mirrors it in rust/src/model/schema.rs — keep in sync):
+
+    embed [V, d]          token embedding
+    pos   [T, d]          learned positional embedding
+    l{i}.ln1.g/.b [d]     pre-attention layernorm
+    l{i}.wq/.wk/.wv/.wo [d, d]
+    l{i}.ln2.g/.b [d]     pre-FFN layernorm
+    l{i}.w1 [d, f]        FFN in
+    l{i}.w2 [f, d]        FFN out
+    lnf.g/.b [d]          final layernorm
+    head  [d, V]          output projection (untied)
+
+Convention: activations are row vectors, y = x @ W. The paper's LoRA
+(B[m,r], A[r,n], y = (W + BA) x_col) therefore enters as
+x @ W + s * (x @ A^T) @ B^T with s = alpha / r.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tasks
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = tasks.VOCAB
+    seq_len: int = tasks.SEQ_LEN
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    act: str = "gelu"      # "gelu" | "silu"
+    lora_rank: int = 16
+    lora_alpha: int = 32
+
+
+# The three "models" of the paper's evaluation (DESIGN.md §2 substitution).
+MODELS = {
+    "tiny-llama-s": ModelConfig(name="tiny-llama-s", d_model=128, n_layers=4, n_heads=4, d_ff=512, act="gelu"),
+    "tiny-llama-m": ModelConfig(name="tiny-llama-m", d_model=192, n_layers=6, n_heads=6, d_ff=768, act="gelu"),
+    "tiny-mistral-s": ModelConfig(name="tiny-mistral-s", d_model=128, n_layers=4, n_heads=4, d_ff=384, act="silu"),
+}
+
+# Linear sites that receive LoRA, per layer (the paper: "every linear layer").
+LORA_SITES = ["wq", "wk", "wv", "wo", "w1", "w2"]
+
+
+def site_shapes(cfg):
+    """{site: (n_in, m_out)} for one layer."""
+    d, f = cfg.d_model, cfg.d_ff
+    return {"wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d), "w1": (d, f), "w2": (f, d)}
+
+
+def param_names(cfg):
+    names = ["embed", "pos"]
+    for i in range(cfg.n_layers):
+        names += [f"l{i}.ln1.g", f"l{i}.ln1.b"]
+        names += [f"l{i}.{w}" for w in ["wq", "wk", "wv", "wo"]]
+        names += [f"l{i}.ln2.g", f"l{i}.ln2.b", f"l{i}.w1", f"l{i}.w2"]
+    names += ["lnf.g", "lnf.b", "head"]
+    return names
+
+
+def lora_site_names(cfg):
+    return [f"l{i}.{s}" for i in range(cfg.n_layers) for s in LORA_SITES]
+
+
+def init_params(cfg, key):
+    """Base-model init (scaled-normal, zeros for biases, ones for LN gains)."""
+    p = {}
+    keys = iter(jax.random.split(key, 6 * cfg.n_layers + 8))
+    std = 0.02
+    p["embed"] = jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)) * std
+    p["pos"] = jax.random.normal(next(keys), (cfg.seq_len, cfg.d_model)) * std
+    for i in range(cfg.n_layers):
+        p[f"l{i}.ln1.g"] = jnp.ones((cfg.d_model,))
+        p[f"l{i}.ln1.b"] = jnp.zeros((cfg.d_model,))
+        for w in ["wq", "wk", "wv", "wo"]:
+            p[f"l{i}.{w}"] = jax.random.normal(next(keys), (cfg.d_model, cfg.d_model)) * std
+        p[f"l{i}.ln2.g"] = jnp.ones((cfg.d_model,))
+        p[f"l{i}.ln2.b"] = jnp.zeros((cfg.d_model,))
+        p[f"l{i}.w1"] = jax.random.normal(next(keys), (cfg.d_model, cfg.d_ff)) * std
+        p[f"l{i}.w2"] = jax.random.normal(next(keys), (cfg.d_ff, cfg.d_model)) * std
+    p["lnf.g"] = jnp.ones((cfg.d_model,))
+    p["lnf.b"] = jnp.zeros((cfg.d_model,))
+    p["head"] = jax.random.normal(next(keys), (cfg.d_model, cfg.vocab)) * std
+    return p
+
+
+def init_lora(cfg, key):
+    """LoRA init per paper convention: A ~ N(0, 1/r), B = 0."""
+    lp = {}
+    shapes = site_shapes(cfg)
+    keys = iter(jax.random.split(key, len(lora_site_names(cfg))))
+    r = cfg.lora_rank
+    for i in range(cfg.n_layers):
+        for s in LORA_SITES:
+            n_in, m_out = shapes[s]
+            k = next(keys)
+            lp[f"l{i}.{s}.A"] = jax.random.normal(k, (r, n_in)) / np.sqrt(r)
+            lp[f"l{i}.{s}.B"] = jnp.zeros((m_out, r))
+    return lp
+
+
+def _layernorm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return g * (x - mu) / jnp.sqrt(var + 1e-5) + b
+
+
+def _act(x, kind):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def _linear(x, w, lora, name, scaling):
+    y = x @ w
+    if lora is not None:
+        a, b = lora[f"{name}.A"], lora[f"{name}.B"]
+        y = y + scaling * ((x @ a.T) @ b.T)
+    return y
+
+
+def forward(cfg, params, tokens, lora=None):
+    """logits f32[B, T, V] from tokens i32[B, T].
+
+    `lora` (optional) is the un-merged LoRA parameter dict used during
+    training; the serving path instead merges deltas into `params`.
+    """
+    return _forward_impl(cfg, params, tokens, lora, None)
+
+
+def forward_with_taps(cfg, params, tokens, lora=None):
+    """Forward that also returns {site: input activation [B*T, n_in]} — used
+    to capture GPTQ calibration activations at train time."""
+    taps = {}
+    logits = _forward_impl(cfg, params, tokens, lora, taps)
+    return logits, taps
+
+
+def _forward_impl(cfg, params, tokens, lora, taps):
+    s = cfg.lora_alpha / cfg.lora_rank
+    bsz, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    hd = cfg.d_model // cfg.n_heads
+
+    def lin(x2, i, site):
+        name = f"l{i}.{site}"
+        if taps is not None:
+            taps[name] = x2.reshape(-1, x2.shape[-1])
+        return _linear(x2, params[name], lora, name, s)
+
+    for i in range(cfg.n_layers):
+        hx = _layernorm(x, params[f"l{i}.ln1.g"], params[f"l{i}.ln1.b"])
+        q = lin(hx, i, "wq").reshape(bsz, t, cfg.n_heads, hd)
+        k = lin(hx, i, "wk").reshape(bsz, t, cfg.n_heads, hd)
+        v = lin(hx, i, "wv").reshape(bsz, t, cfg.n_heads, hd)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        att = jnp.where(mask[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(bsz, t, cfg.d_model)
+        x = x + lin(o, i, "wo")
+        hx = _layernorm(x, params[f"l{i}.ln2.g"], params[f"l{i}.ln2.b"])
+        hx2 = _act(lin(hx, i, "w1"), cfg.act)
+        x = x + lin(hx2, i, "w2")
+    x = _layernorm(x, params["lnf.g"], params["lnf.b"])
+    return x @ params["head"]
+
+
+def merge_lora(cfg, params, lora):
+    """W_eff = W + s * (B A)^T per site — what the rust coordinator does
+    after dequantization (mirrored in rust/src/model/merge.rs)."""
+    s = cfg.lora_alpha / cfg.lora_rank
+    out = dict(params)
+    for name in lora_site_names(cfg):
+        a, b = lora[f"{name}.A"], lora[f"{name}.B"]
+        out[name] = params[name] + s * (b @ a).T
+    return out
+
+
+def fwd_flat(cfg):
+    """Forward taking a flat positional param list, for AOT lowering.
+
+    Signature: f(tokens, *params_in_param_names_order) -> (logits,).
+    """
+    names = param_names(cfg)
+
+    def f(tokens, *flat):
+        params = dict(zip(names, flat))
+        return (forward(cfg, params, tokens),)
+
+    return f
+
+
+def loss_fn(cfg, params, lora, tokens, mask):
+    """Next-token CE over the answer region (mask == 1)."""
+    logits = forward(cfg, params, tokens, lora)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)

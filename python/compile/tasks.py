@@ -1,0 +1,184 @@
+"""Synthetic task suite mirroring the paper's evaluation domains.
+
+The paper evaluates LoRA adapters on math reasoning (GSM8K/MATH), code
+generation (HumanEval) and summarization (XSum).  On this substrate we train
+tiny transformers, so each domain is replaced by a synthetic task that keeps
+the *failure mode* of its metric (see DESIGN.md §2):
+
+  modadd    — digit-wise modular addition (exact match)        ~ GSM8K
+  modchain  — global reductions over a digit string (EM)       ~ MATH
+  transform — apply a small "program" to a token list (EM)     ~ HumanEval
+  keyword   — extract marked salient tokens (ROUGE-L)          ~ XSum
+
+All tasks share one vocabulary and a fixed sequence layout:
+
+  [BOS, prompt..., SEP, answer..., EOS, PAD...]   (length = SEQ_LEN)
+
+The same token ids are hard-coded on the rust side (rust/src/eval/tasks.rs);
+changing them is a cross-layer breaking change.
+"""
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Vocabulary
+# ---------------------------------------------------------------------------
+PAD, BOS, EOS, SEP, MARK = 0, 1, 2, 3, 4
+DIGIT0 = 5          # tokens 5..14 are digits 0..9
+LETTER0 = 15        # tokens 15..30 are "letters" a..p (16 symbols)
+OP0 = 31            # tokens 31..38 are transform ops
+VOCAB = 64
+SEQ_LEN = 32
+
+OPS = ["rev", "rot1", "rot2", "swap_halves", "first3", "neg"]
+
+
+def digit(d):
+    return DIGIT0 + int(d)
+
+
+def letter(i):
+    return LETTER0 + int(i)
+
+
+TASKS = ["modadd", "modchain", "transform", "keyword"]
+# Which tasks are scored with exact match (vs ROUGE-L) — mirrored in rust.
+EXACT_MATCH = {"modadd": True, "modchain": True, "transform": True, "keyword": False}
+
+
+# ---------------------------------------------------------------------------
+# Per-task generators: return (prompt_tokens, answer_tokens)
+# ---------------------------------------------------------------------------
+def gen_modadd(rng):
+    """GSM8K analog: two single-digit operands -> (sum mod 10, product mod 10).
+
+    Two 100-entry fact tables, multi-token exact-match answer: learnable by a
+    tiny model in a few hundred LoRA steps, yet all-or-nothing like pass@1.
+    """
+    a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+    prompt = [digit(a), MARK, digit(b)]
+    answer = [digit((a + b) % 10), digit((a * b) % 10)]
+    return prompt, answer
+
+
+def gen_modchain(rng):
+    """MATH analog (harder): chained sums. prompt a,b,c -> ((a+b)%10, (a+b+c)%10).
+
+    The second token composes two table lookups; accuracy stays well below
+    modadd, mirroring MATH < GSM8K in the paper.
+    """
+    a, b, c = (int(rng.integers(0, 10)) for _ in range(3))
+    prompt = [digit(a), digit(b), digit(c)]
+    answer = [digit((a + b) % 10), digit((a + b + c) % 10)]
+    return prompt, answer
+
+
+def _apply_op(op, xs):
+    xs = list(xs)
+    if op == "rev":
+        return xs[::-1]
+    if op == "rot1":
+        return xs[1:] + xs[:1]
+    if op == "rot2":
+        return xs[2:] + xs[:2]
+    if op == "swap_halves":
+        h = len(xs) // 2
+        return xs[h:] + xs[:h]
+    if op == "first3":
+        return xs[:3] + [0, 0, 0]
+    if op == "neg":
+        return [15 - x for x in xs]
+    raise ValueError(op)
+
+
+def gen_transform(rng):
+    """Program execution: OP + 6 letters -> transformed 6 letters (all-or-nothing)."""
+    op_idx = int(rng.integers(0, len(OPS)))
+    xs = rng.integers(0, 16, size=6)
+    prompt = [OP0 + op_idx] + [letter(x) for x in xs]
+    answer = [letter(x) for x in _apply_op(OPS[op_idx], xs)]
+    return prompt, answer
+
+
+def gen_keyword(rng):
+    """Extractive summary: 12 letters, 3 preceded by MARK; emit marked ones."""
+    xs = rng.integers(0, 16, size=12)
+    marked = sorted(rng.choice(12, size=3, replace=False).tolist())
+    prompt, answer = [], []
+    for i, x in enumerate(xs):
+        if i in marked:
+            prompt.append(MARK)
+            answer.append(letter(x))
+        prompt.append(letter(x))
+    return prompt, answer
+
+
+def gen_copy(rng):
+    """Base-model pretraining task: echo the prompt after SEP.
+
+    Teaches sequence format + attention over the FULL symbol range
+    (digits, letters, ops, MARK) so every embedding the downstream tasks
+    touch is trained; the task mappings themselves are never seen.
+    """
+    n = int(rng.integers(3, 12))
+    toks = rng.integers(MARK, OP0 + len(OPS), size=n).tolist()
+    return toks, list(toks)
+
+
+GENERATORS = {
+    "modadd": gen_modadd,
+    "modchain": gen_modchain,
+    "transform": gen_transform,
+    "keyword": gen_keyword,
+    "copy": gen_copy,
+}
+
+
+# ---------------------------------------------------------------------------
+# Sequence assembly
+# ---------------------------------------------------------------------------
+def assemble(prompt, answer):
+    """Pack prompt/answer into fixed-length token + loss-mask arrays.
+
+    The loss mask is 1 on the answer tokens and the EOS (the region the model
+    must *produce*), 0 elsewhere.
+    """
+    toks = [BOS] + list(prompt) + [SEP] + list(answer) + [EOS]
+    assert len(toks) <= SEQ_LEN, f"sequence too long: {len(toks)}"
+    mask = [0] * (len(prompt) + 2) + [1] * (len(answer) + 1)
+    toks = toks + [PAD] * (SEQ_LEN - len(toks))
+    mask = mask + [0] * (SEQ_LEN - len(mask))
+    return np.array(toks, np.int32), np.array(mask, np.float32)
+
+
+def make_batch(task, rng, batch_size):
+    """Batch of (tokens[B,T], mask[B,T]) for training."""
+    ts, ms = [], []
+    gen = GENERATORS[task]
+    for _ in range(batch_size):
+        p, a = gen(rng)
+        t, m = assemble(p, a)
+        ts.append(t)
+        ms.append(m)
+    return np.stack(ts), np.stack(ms)
+
+
+def make_eval_set(task, rng, n):
+    """Eval set: prompts (padded), prompt lengths, reference answers (padded).
+
+    prompt_tokens[i] = [BOS, prompt..., SEP, PAD...]; the decoder starts
+    generating right after SEP.
+    """
+    gen = GENERATORS[task]
+    prompts = np.zeros((n, SEQ_LEN), np.int32)
+    plens = np.zeros((n,), np.int32)
+    refs = np.zeros((n, SEQ_LEN), np.int32)
+    rlens = np.zeros((n,), np.int32)
+    for i in range(n):
+        p, a = gen(rng)
+        seq = [BOS] + list(p) + [SEP]
+        prompts[i, : len(seq)] = seq
+        plens[i] = len(seq)
+        refs[i, : len(a)] = a
+        rlens[i] = len(a)
+    return prompts, plens, refs, rlens

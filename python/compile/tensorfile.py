@@ -1,0 +1,63 @@
+"""`tensorfile` — the little-endian tensor container shared with rust.
+
+Layout (all little-endian):
+
+    magic   b"LQTF"
+    version u32                  (currently 1)
+    count   u32
+    then per tensor:
+      name_len u16, name utf-8 bytes
+      dtype    u8      (0 = f32, 1 = i32, 2 = u8)
+      ndim     u8
+      dims     u32 * ndim
+      data     raw little-endian, row-major
+
+The rust decoder lives in rust/src/adapter/fmt.rs; keep them in sync.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"LQTF"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def save(path, tensors):
+    """tensors: dict[str, np.ndarray] (f32/i32/u8)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def load(path):
+    """Returns dict[str, np.ndarray]."""
+    out = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dt = np.dtype(_DTYPES[dtype])
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dt.itemsize), dtype=dt)
+            out[name] = data.reshape(dims).copy()
+    return out

@@ -1,0 +1,218 @@
+"""Build-time training: pretrain tiny base models, then per-task LoRAs.
+
+Mimics the paper's setup (§4.1) at tiny scale: the base model is pretrained
+on a generic format-learning corpus (`copy`), frozen, and a rank-16 LoRA is
+trained per task — so, as in the paper's "LoRA carries the skill" regime,
+the adapters are *essential* (the frozen base scores ~0 on every task).
+
+Outputs (under artifacts/):
+    <model>/base.bin             base weights           (tensorfile)
+    <model>/<task>.lora.bin      LoRA A/B per site      (tensorfile)
+    <model>/<task>.eval.bin      held-out eval set      (tensorfile)
+    <model>/<task>.calib.bin     per-site input acts    (tensorfile, GPTQ)
+    <model>/meta.bin             config scalars
+
+Runs once via `make artifacts`; never on the request path.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import tasks, tensorfile
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam (optax is unavailable in this image)
+# ---------------------------------------------------------------------------
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8, clip=1.0):
+    # global-norm clip (paper: norm threshold 1)
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / (gn + 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1, bc2 = 1 - b1**tf, 1 - b2**tf
+    new = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), params, m, v
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(base_lr, step, total, warmup_frac=0.3, alpha_f=0.01):
+    """cosine_with_warmup as in the paper's Appendix A."""
+    warm = max(1, int(total * warmup_frac))
+    if step < warm:
+        return base_lr * (step + 1) / warm
+    p = (step - warm) / max(1, total - warm)
+    return base_lr * (alpha_f + (1 - alpha_f) * 0.5 * (1 + np.cos(np.pi * p)))
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+def pretrain_base(cfg, rng, steps, batch_size, lr, log_every=100):
+    params = M.init_params(cfg, jax.random.PRNGKey(hash(cfg.name) % 2**31))
+
+    @jax.jit
+    def step_fn(params, opt, tokens, mask, lr_now):
+        loss, grads = jax.value_and_grad(lambda p: M.loss_fn(cfg, p, None, tokens, mask))(params)
+        params, opt = adam_update(grads, opt, params, lr_now)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    for step in range(steps):
+        toks, mask = tasks.make_batch("copy", rng, batch_size)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(toks), jnp.asarray(mask),
+                                    cosine_lr(lr, step, steps))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"  [pretrain {cfg.name}] step {step:4d} loss {float(loss):.4f}", flush=True)
+    return params
+
+
+def train_lora(cfg, params, task, rng, steps, batch_size, lr, log_every=100):
+    lora = M.init_lora(cfg, jax.random.PRNGKey((hash(cfg.name + task)) % 2**31))
+
+    @jax.jit
+    def step_fn(lora, opt, tokens, mask, lr_now):
+        loss, grads = jax.value_and_grad(lambda lp: M.loss_fn(cfg, params, lp, tokens, mask))(lora)
+        lora, opt = adam_update(grads, opt, lora, lr_now)
+        return lora, opt, loss
+
+    opt = adam_init(lora)
+    for step in range(steps):
+        toks, mask = tasks.make_batch(task, rng, batch_size)
+        lora, opt, loss = step_fn(lora, opt, jnp.asarray(toks), jnp.asarray(mask),
+                                  cosine_lr(lr, step, steps))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"  [lora {cfg.name}/{task}] step {step:4d} loss {float(loss):.4f}", flush=True)
+    return lora
+
+
+def quick_eval(cfg, params, lora, task, rng, n=64):
+    """Greedy-decode exact-match rate (sanity check; the real eval is rust)."""
+    prompts, plens, refs, rlens = tasks.make_eval_set(task, rng, n)
+    merged = M.merge_lora(cfg, params, lora) if lora is not None else params
+    fwd = jax.jit(lambda t: M.forward(cfg, merged, t))
+    toks = jnp.asarray(prompts)
+    correct = 0
+    for i in range(n):
+        seq = np.array(prompts[i])
+        pos = int(plens[i])
+        for _ in range(int(rlens[i])):
+            logits = fwd(jnp.asarray(seq[None]))[0]
+            nxt = int(jnp.argmax(logits[pos - 1]))
+            seq[pos] = nxt
+            pos += 1
+        got = seq[plens[i] : plens[i] + rlens[i]]
+        if np.array_equal(got, refs[i, : rlens[i]]):
+            correct += 1
+    _ = toks
+    return correct / n
+
+
+def capture_calibration(cfg, params, lora, rng, n_rows=256, batch_size=16, task="copy"):
+    """Per-site input activations for GPTQ's Hessian (subsampled rows)."""
+    toks, _ = tasks.make_batch(task, rng, batch_size)
+    _, taps = M.forward_with_taps(cfg, params, jnp.asarray(toks), lora)
+    out = {}
+    for name, act in taps.items():
+        a = np.asarray(act)
+        idx = rng.choice(a.shape[0], size=min(n_rows, a.shape[0]), replace=False)
+        out[name] = a[idx].astype(np.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+def export_model(cfg, params, out_dir):
+    tensors = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    tensorfile.save(os.path.join(out_dir, "base.bin"), tensors)
+    meta = {
+        "d_model": np.array([cfg.d_model], np.int32),
+        "n_layers": np.array([cfg.n_layers], np.int32),
+        "n_heads": np.array([cfg.n_heads], np.int32),
+        "d_ff": np.array([cfg.d_ff], np.int32),
+        "vocab": np.array([cfg.vocab], np.int32),
+        "seq_len": np.array([cfg.seq_len], np.int32),
+        "lora_rank": np.array([cfg.lora_rank], np.int32),
+        "lora_alpha": np.array([cfg.lora_alpha], np.int32),
+        "act_silu": np.array([1 if cfg.act == "silu" else 0], np.int32),
+    }
+    tensorfile.save(os.path.join(out_dir, "meta.bin"), meta)
+
+
+def export_lora(lora, path):
+    tensorfile.save(path, {k: np.asarray(v, np.float32) for k, v in lora.items()})
+
+
+def export_eval_set(task, rng, n, path):
+    prompts, plens, refs, rlens = tasks.make_eval_set(task, rng, n)
+    tensorfile.save(path, {
+        "prompts": prompts, "plens": plens, "refs": refs, "rlens": rlens,
+        "exact": np.array([1 if tasks.EXACT_MATCH[task] else 0], np.int32),
+    })
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny-llama-s,tiny-llama-m,tiny-mistral-s")
+    ap.add_argument("--tasks", default=",".join(tasks.TASKS))
+    ap.add_argument("--pretrain-steps", type=int, default=400)
+    ap.add_argument("--lora-steps", type=int, default=700)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--pretrain-lr", type=float, default=2e-3)
+    ap.add_argument("--lora-lr", type=float, default=8e-3)
+    ap.add_argument("--eval-n", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    for mname in args.models.split(","):
+        cfg = M.MODELS[mname]
+        out_dir = os.path.join(args.out, mname)
+        os.makedirs(out_dir, exist_ok=True)
+        rng = np.random.default_rng(args.seed)
+        base_path = os.path.join(out_dir, "base.bin")
+        if os.path.exists(base_path):
+            # resume: reuse the pretrained base (jax arrays from tensorfile)
+            print(f"== {mname}: reusing pretrained base", flush=True)
+            params = {k: jnp.asarray(v) for k, v in tensorfile.load(base_path).items()}
+        else:
+            print(f"== {mname}: pretraining base ({args.pretrain_steps} steps)", flush=True)
+            params = pretrain_base(cfg, rng, args.pretrain_steps, args.batch_size, args.pretrain_lr)
+            export_model(cfg, params, out_dir)
+        for task in args.tasks.split(","):
+            if os.path.exists(os.path.join(out_dir, f"{task}.lora.bin")):
+                print(f"== {mname}/{task}: already trained, skipping", flush=True)
+                continue
+            print(f"== {mname}/{task}: training LoRA ({args.lora_steps} steps)", flush=True)
+            lora = train_lora(cfg, params, task, rng, args.lora_steps, args.batch_size, args.lora_lr)
+            em = quick_eval(cfg, params, lora, task, np.random.default_rng(args.seed + 1), n=48)
+            em0 = quick_eval(cfg, params, None, task, np.random.default_rng(args.seed + 1), n=24)
+            print(f"   fp16 LoRA EM={em:.3f} (base alone EM={em0:.3f})", flush=True)
+            export_lora(lora, os.path.join(out_dir, f"{task}.lora.bin"))
+            export_eval_set(task, np.random.default_rng(args.seed + 2), args.eval_n,
+                            os.path.join(out_dir, f"{task}.eval.bin"))
+            calib = capture_calibration(cfg, params, lora, np.random.default_rng(args.seed + 3),
+                                        task=task)
+            tensorfile.save(os.path.join(out_dir, f"{task}.calib.bin"), calib)
+    print(f"training done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

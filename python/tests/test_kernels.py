@@ -1,0 +1,174 @@
+"""Pallas kernels (L1) vs the pure-jnp oracle — the core build-time
+correctness signal, including hypothesis sweeps over shapes/dtypes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary, lora_apply, ref, rtn
+
+RNG = np.random.default_rng(0)
+
+
+def randm(r, n, scale=1.0):
+    return jnp.asarray(RNG.normal(size=(r, n)).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# RTN kernel vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("shape,group", [((16, 128), 64), ((8, 64), 32), ((16, 256), 128)])
+def test_rtn_quant_matches_ref(bits, shape, group):
+    w = randm(*shape)
+    c1, s1, z1 = ref.rtn_quant(w, bits, group)
+    c2, s2, z2 = rtn.rtn_quant_pallas(w, bits, group)
+    assert bool(jnp.all(c1 == c2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+    np.testing.assert_allclose(z1, z2, rtol=1e-6)
+
+
+def test_rtn_dequant_matches_ref():
+    w = randm(16, 128)
+    c, s, z = ref.rtn_quant(w, 2, 64)
+    np.testing.assert_allclose(
+        ref.rtn_dequant(c, s, z, 64), rtn.rtn_dequant_pallas(c, s, z, 64), rtol=1e-6
+    )
+
+
+def test_rtn_roundtrip_error_bounded():
+    w = randm(8, 128)
+    for bits in [2, 4, 8]:
+        c, s, z = ref.rtn_quant(w, bits, 64)
+        wd = ref.rtn_dequant(c, s, z, 64)
+        err = jnp.abs(wd - w).max()
+        step = s.max()
+        assert err <= step * 1.01, f"bits={bits}"
+
+
+def test_rtn_degenerate_group_reconstructs_constant():
+    w = jnp.full((2, 64), 3.5, jnp.float32)
+    c, s, z = ref.rtn_quant(w, 2, 32)
+    wd = ref.rtn_dequant(c, s, z, 32)
+    np.testing.assert_allclose(wd, w, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 4, 8]),
+    groups=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([16, 32, 64]),
+    bits=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rtn_hypothesis_roundtrip(rows, groups, group, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, groups * group)).astype(np.float32))
+    c1, s1, z1 = ref.rtn_quant(w, bits, group)
+    c2, s2, z2 = rtn.rtn_quant_pallas(w, bits, group)
+    assert bool(jnp.all(c1 == c2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+    # dequant error bounded by scale
+    wd = ref.rtn_dequant(c1, s1, z1, group)
+    per_group_err = jnp.abs(wd - w).reshape(rows, groups, group).max(axis=-1)
+    assert bool(jnp.all(per_group_err <= s1 * 1.01 + 1e-7))
+
+
+# ---------------------------------------------------------------------------
+# Binary kernel vs oracle
+# ---------------------------------------------------------------------------
+def test_bin_quant_matches_ref():
+    w = randm(16, 128)
+    s1, sc1 = ref.bin_quant(w, 64)
+    s2, sc2 = binary.bin_quant_pallas(w, 64)
+    assert bool(jnp.all(s1 == s2))
+    np.testing.assert_allclose(sc1, sc2, rtol=1e-6)
+    np.testing.assert_allclose(
+        ref.bin_dequant(s1, sc1, 64), binary.bin_dequant_pallas(s1, sc1, 64), rtol=1e-6
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 8]),
+    group=st.sampled_from([8, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_bin_hypothesis_l1_scale_optimal(rows, group, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, 2 * group)).astype(np.float32))
+    signs, scale = ref.bin_quant(w, group)
+    base = float(jnp.sum((ref.bin_dequant(signs, scale, group) - w) ** 2))
+    for f in [0.9, 1.1]:
+        alt = float(jnp.sum((ref.bin_dequant(signs, scale * f, group) - w) ** 2))
+        assert alt >= base - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([8, 32, 64, 128]), seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_pack_roundtrips(n, seed):
+    rng = np.random.default_rng(seed)
+    c2 = jnp.asarray(rng.integers(0, 4, size=(4, n)).astype(np.int32))
+    assert bool(jnp.all(ref.unpack2(ref.pack2(c2), n) == c2))
+    s1 = jnp.asarray((rng.integers(0, 2, size=(4, n)) * 2 - 1).astype(np.int32))
+    assert bool(jnp.all(ref.unpack1(ref.pack1(s1), n) == s1))
+
+
+# ---------------------------------------------------------------------------
+# Fused quantized sub-LoRA apply (the hot-spot kernel)
+# ---------------------------------------------------------------------------
+def fused_case(B, n, m, h, rl, g, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(B, n)).astype(np.float32))
+    ah = jnp.asarray(rng.normal(size=(h, n)).astype(np.float32))
+    bh = jnp.asarray(rng.normal(size=(h, m)).astype(np.float32))
+    al = jnp.asarray(rng.normal(size=(rl, n)).astype(np.float32))
+    bl = jnp.asarray(rng.normal(size=(rl, m)).astype(np.float32))
+    ahc, ahs, ahz = ref.rtn_quant(ah, 2, g)
+    bhc, bhs, bhz = ref.rtn_quant(bh, 2, g)
+    als, alsc = ref.bin_quant(al, g)
+    bls, blsc = ref.bin_quant(bl, g)
+    args = (
+        x,
+        ref.pack2(ahc), ahs, ahz,
+        ref.pack2(bhc), bhs, bhz,
+        ref.pack1(als), alsc,
+        ref.pack1(bls), blsc,
+    )
+    return args, g
+
+
+@pytest.mark.parametrize(
+    "B,n,m,h,rl",
+    [(8, 128, 128, 4, 12), (8, 128, 256, 4, 12), (1, 64, 128, 2, 6), (8, 128, 512, 8, 8)],
+)
+def test_fused_kernel_matches_ref(B, n, m, h, rl):
+    args, g = fused_case(B, n, m, h, rl, 64)
+    y_ref = ref.lora_apply_quant_ref(*args, g)
+    y_ker = lora_apply.lora_apply_pallas(*args, group=g)
+    np.testing.assert_allclose(y_ref, y_ker, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    B=st.sampled_from([1, 4, 8]),
+    m=st.sampled_from([128, 256]),
+    h=st.sampled_from([2, 4, 8]),
+    rl=st.sampled_from([8, 12]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_kernel_hypothesis(B, m, h, rl, seed):
+    args, g = fused_case(B, 128, m, h, rl, 64, seed)
+    y_ref = ref.lora_apply_quant_ref(*args, g)
+    y_ker = lora_apply.lora_apply_pallas(*args, group=g)
+    np.testing.assert_allclose(y_ref, y_ker, atol=1e-4)
+
+
+def test_vmem_estimate_within_budget():
+    # real-TPU shape check: the largest site at serving batch
+    bytes_ = lora_apply.vmem_bytes_estimate(bsz=8, n=512, m=512, h=8, rl=8, group=64)
+    assert bytes_ < 16 << 20, f"VMEM estimate {bytes_} exceeds 16 MiB"

@@ -1,0 +1,138 @@
+"""L2 model tests: shapes, LoRA algebra, merge equivalence, AOT interface,
+and the tasks/tensorfile contracts shared with rust."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tasks, tensorfile
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return M.ModelConfig(name="test", d_model=32, n_layers=2, n_heads=2, d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_forward_shapes(cfg, params):
+    toks = jnp.zeros((3, cfg.seq_len), jnp.int32)
+    logits = M.forward(cfg, params, toks)
+    assert logits.shape == (3, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lora_zero_init_is_identity(cfg, params):
+    lora = M.init_lora(cfg, jax.random.PRNGKey(1))
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 40, size=(2, cfg.seq_len)), jnp.int32)
+    l0 = M.forward(cfg, params, toks)
+    l1 = M.forward(cfg, params, toks, lora)
+    np.testing.assert_allclose(l0, l1, atol=1e-6)
+
+
+def test_merge_equals_unmerged_forward(cfg, params):
+    # after training-like perturbation, merged weights == lora-applied fwd
+    key = jax.random.PRNGKey(2)
+    lora = M.init_lora(cfg, key)
+    lora = {k: v + 0.02 * jax.random.normal(jax.random.PRNGKey(hash(k) % 2**31), v.shape)
+            for k, v in lora.items()}
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 40, size=(2, cfg.seq_len)), jnp.int32)
+    l_lora = M.forward(cfg, params, toks, lora)
+    l_merged = M.forward(cfg, M.merge_lora(cfg, params, lora), toks)
+    np.testing.assert_allclose(l_lora, l_merged, atol=1e-4)
+
+
+def test_param_names_cover_exactly(cfg, params):
+    names = M.param_names(cfg)
+    assert set(names) == set(params.keys())
+    # rust mirror expects this count: 2 + L*10 + 3
+    assert len(names) == 2 + cfg.n_layers * 10 + 3
+
+
+def test_fwd_flat_positional_interface(cfg, params):
+    f = M.fwd_flat(cfg)
+    toks = jnp.zeros((1, cfg.seq_len), jnp.int32)
+    flat = [params[n] for n in M.param_names(cfg)]
+    (logits,) = f(toks, *flat)
+    np.testing.assert_allclose(logits, M.forward(cfg, params, toks), atol=1e-6)
+
+
+def test_loss_masks_prompt(cfg, params):
+    toks, mask = tasks.make_batch("modadd", np.random.default_rng(0), 4)
+    loss = M.loss_fn(cfg, params, None, jnp.asarray(toks), jnp.asarray(mask))
+    assert float(loss) > 0
+    # zero mask -> zero loss contribution (division guard)
+    zloss = M.loss_fn(cfg, params, None, jnp.asarray(toks), jnp.zeros_like(jnp.asarray(mask)))
+    assert float(zloss) == 0.0
+
+
+def test_forward_with_taps_captures_all_sites(cfg, params):
+    toks = jnp.zeros((2, cfg.seq_len), jnp.int32)
+    _, taps = M.forward_with_taps(cfg, params, toks)
+    assert set(taps.keys()) == set(M.lora_site_names(cfg))
+    assert taps["l0.w2"].shape == (2 * cfg.seq_len, cfg.d_ff)
+
+
+# ---------------------------------------------------------------------------
+# tasks contract (mirrored in rust/src/eval/tasks.rs)
+# ---------------------------------------------------------------------------
+def test_task_token_contract():
+    assert (tasks.PAD, tasks.BOS, tasks.EOS, tasks.SEP, tasks.MARK) == (0, 1, 2, 3, 4)
+    assert tasks.DIGIT0 == 5 and tasks.LETTER0 == 15 and tasks.OP0 == 31
+    assert tasks.VOCAB == 64 and tasks.SEQ_LEN == 32
+
+
+@pytest.mark.parametrize("task", tasks.TASKS + ["copy"])
+def test_generators_fit_sequence(task):
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        p, a = tasks.GENERATORS[task](rng)
+        toks, mask = tasks.assemble(p, a)
+        assert toks.shape == (tasks.SEQ_LEN,)
+        assert mask.sum() == len(a) + 1  # answer + EOS
+        assert all(0 <= t < tasks.VOCAB for t in toks)
+
+
+def test_transform_ops_are_permutation_safe():
+    for op in tasks.OPS:
+        out = tasks._apply_op(op, [1, 2, 3, 4, 5, 6])
+        assert len(out) == 6
+        assert all(0 <= x < 16 for x in out)
+
+
+def test_eval_set_layout():
+    prompts, plens, refs, rlens = tasks.make_eval_set("modadd", np.random.default_rng(0), 10)
+    for i in range(10):
+        assert prompts[i, 0] == tasks.BOS
+        assert prompts[i, plens[i] - 1] == tasks.SEP
+        assert (prompts[i, plens[i]:] == tasks.PAD).all()
+        assert rlens[i] == 2
+
+
+# ---------------------------------------------------------------------------
+# tensorfile contract (mirrored in rust/src/adapter/fmt.rs)
+# ---------------------------------------------------------------------------
+def test_tensorfile_roundtrip(tmp_path):
+    data = {
+        "a": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.array([-1, 2], np.int32),
+        "c": np.array([[0, 255]], np.uint8),
+    }
+    path = tmp_path / "t.bin"
+    tensorfile.save(path, data)
+    back = tensorfile.load(path)
+    assert set(back) == set(data)
+    for k in data:
+        np.testing.assert_array_equal(back[k], data[k])
+
+
+def test_tensorfile_rejects_bad_magic(tmp_path):
+    path = tmp_path / "bad.bin"
+    path.write_bytes(b"XXXX" + b"\0" * 8)
+    with pytest.raises(ValueError):
+        tensorfile.load(path)

@@ -1,0 +1,64 @@
+//! Figure 2 reproduction: sub-LoRA split strategies (SVD vs random vs
+//! norm-based) at a globally fixed h — paper setting: LLaMA2-7B on
+//! GSM8K/MATH → here tiny-llama-s on modadd/modchain.
+//!
+//! Expected shape: SVD ≥ norm ≥ random across h.
+
+use loraquant::bench::Table;
+use loraquant::experiments::{ModelCtx, Settings};
+use loraquant::loraquant::{quantize_site, HSelect, LoraQuantConfig, QuantizedLora, SplitStrategy};
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    let mut settings = Settings::from_env();
+    settings.models.retain(|m| m == "tiny-llama-s");
+    let Some(model) = settings.models.first().cloned() else {
+        eprintln!("bench_fig2_split: tiny-llama-s artifacts missing — run `make artifacts`");
+        return Ok(());
+    };
+    let ctx = ModelCtx::load(&settings, &model)?;
+    println!("# Figure 2 — split strategy vs static h (model {model})");
+    let tbl = Table::new(&[10, 4, 10, 10, 10]);
+    println!(
+        "{}",
+        tbl.row(&["task".into(), "h".into(), "svd".into(), "norm".into(), "random".into()])
+    );
+    println!("{}", tbl.sep());
+
+    let strategies = [
+        ("svd", SplitStrategy::Svd),
+        ("norm", SplitStrategy::Norm),
+        ("random", SplitStrategy::Random { seed: 17 }),
+    ];
+    for td in ctx.tasks.iter().filter(|t| t.task == "modadd" || t.task == "modchain") {
+        for h in [2usize, 4, 6, 8, 10, 12, 14] {
+            let mut scores = BTreeMap::new();
+            for (name, strategy) in strategies {
+                let cfg = LoraQuantConfig {
+                    hselect: HSelect::Static(h),
+                    strategy,
+                    group: 128,
+                    ..LoraQuantConfig::variant(2, 0.9)
+                };
+                let mut q = QuantizedLora::default();
+                for (site, (a, b)) in &td.lora.sites {
+                    q.sites.insert(site.clone(), quantize_site(b, a, &cfg));
+                }
+                let deltas = loraquant::model::merge::quant_deltas(&q);
+                scores.insert(name, ctx.eval_deltas(&deltas, &td.eval)?);
+            }
+            println!(
+                "{}",
+                tbl.row(&[
+                    td.task.clone(),
+                    format!("{h}"),
+                    format!("{:.2}", scores["svd"]),
+                    format!("{:.2}", scores["norm"]),
+                    format!("{:.2}", scores["random"]),
+                ])
+            );
+        }
+        println!("{}", tbl.sep());
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Figure 3 reproduction: component ablations across the variance ratio ρ —
+//! LoraQuant vs Prune (drop low sub-LoRA) vs No-Opt (skip STE) vs w/RTN
+//! (1-bit RTN low sub-LoRA). Paper: LLaMA2-7B on GSM8K/MATH → here
+//! tiny-llama-s on modadd/modchain.
+//!
+//! Expected shape: Prune and w/RTN collapse at low ρ and track each other;
+//! No-Opt ≤ LoraQuant; gaps close as ρ → 1.
+
+use loraquant::bench::Table;
+use loraquant::experiments::{fig3_variant, ModelCtx, Settings};
+use loraquant::loraquant::{quantize_site, QuantizedLora};
+
+fn main() -> anyhow::Result<()> {
+    let mut settings = Settings::from_env();
+    settings.models.retain(|m| m == "tiny-llama-s");
+    let Some(model) = settings.models.first().cloned() else {
+        eprintln!("bench_fig3_ablation: tiny-llama-s artifacts missing — run `make artifacts`");
+        return Ok(());
+    };
+    let ctx = ModelCtx::load(&settings, &model)?;
+    println!("# Figure 3 — ablations across rho (model {model}, 2-bit high sub-LoRA)");
+    let tbl = Table::new(&[10, 6, 11, 9, 9, 9, 9]);
+    println!(
+        "{}",
+        tbl.row(&[
+            "task".into(),
+            "rho".into(),
+            "loraquant".into(),
+            "no_opt".into(),
+            "prune".into(),
+            "rtn_low".into(),
+            "avg_bit".into(),
+        ])
+    );
+    println!("{}", tbl.sep());
+
+    let rhos = [0.1f32, 0.3, 0.5, 0.7, 0.8, 0.9, 0.95];
+    for td in ctx.tasks.iter().filter(|t| t.task == "modadd" || t.task == "modchain") {
+        for rho in rhos {
+            let mut cells = vec![td.task.clone(), format!("{rho}")];
+            let mut bits_of_main = 0.0;
+            for kind in ["loraquant", "no_opt", "prune", "rtn_low"] {
+                let cfg = fig3_variant(kind, rho, 128);
+                let mut q = QuantizedLora::default();
+                for (site, (a, b)) in &td.lora.sites {
+                    q.sites.insert(site.clone(), quantize_site(b, a, &cfg));
+                }
+                if kind == "loraquant" {
+                    bits_of_main = q.avg_bits();
+                }
+                let deltas = loraquant::model::merge::quant_deltas(&q);
+                cells.push(format!("{:.2}", ctx.eval_deltas(&deltas, &td.eval)?));
+            }
+            cells.push(format!("{bits_of_main:.2}"));
+            println!("{}", tbl.row(&cells));
+        }
+        println!("{}", tbl.sep());
+    }
+    Ok(())
+}

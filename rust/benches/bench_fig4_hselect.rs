@@ -1,0 +1,86 @@
+//! Figure 4 reproduction: dynamic variance-ratio h selection vs a static
+//! global h — plotted as (avg_bits, score) frontier points. Paper:
+//! LLaMA2-7B on GSM8K/MATH → here tiny-llama-s on modadd/modchain.
+//!
+//! Expected shape: at matched avg-bits above ~1.5, the dynamic rule
+//! dominates the static one.
+
+use loraquant::bench::Table;
+use loraquant::experiments::{ModelCtx, Settings};
+use loraquant::loraquant::{quantize_site, HSelect, LoraQuantConfig, QuantizedLora};
+
+fn main() -> anyhow::Result<()> {
+    let mut settings = Settings::from_env();
+    settings.models.retain(|m| m == "tiny-llama-s");
+    let Some(model) = settings.models.first().cloned() else {
+        eprintln!("bench_fig4_hselect: tiny-llama-s artifacts missing — run `make artifacts`");
+        return Ok(());
+    };
+    let ctx = ModelCtx::load(&settings, &model)?;
+    println!("# Figure 4 — dynamic (ratio) vs static h selection (model {model})");
+    let tbl = Table::new(&[10, 9, 12, 9, 9]);
+    println!(
+        "{}",
+        tbl.row(&[
+            "task".into(),
+            "rule".into(),
+            "param".into(),
+            "avg_bit".into(),
+            "score".into(),
+        ])
+    );
+    println!("{}", tbl.sep());
+
+    for td in ctx.tasks.iter().filter(|t| t.task == "modadd" || t.task == "modchain") {
+        // dynamic: rho from 0.1 to 0.95 in increments of 0.05 (paper text)
+        for k in 2..=19 {
+            let rho = k as f32 * 0.05;
+            let cfg = LoraQuantConfig { group: 128, ..LoraQuantConfig::variant(2, rho) };
+            let (bits, score) = run(&ctx, td, &cfg)?;
+            println!(
+                "{}",
+                tbl.row(&[
+                    td.task.clone(),
+                    "ratio".into(),
+                    format!("rho={rho:.2}"),
+                    format!("{bits:.2}"),
+                    format!("{score:.2}"),
+                ])
+            );
+        }
+        // static: h in 1..=12 (paper text)
+        for h in 1..=12usize {
+            let cfg = LoraQuantConfig {
+                hselect: HSelect::Static(h),
+                group: 128,
+                ..LoraQuantConfig::variant(2, 0.9)
+            };
+            let (bits, score) = run(&ctx, td, &cfg)?;
+            println!(
+                "{}",
+                tbl.row(&[
+                    td.task.clone(),
+                    "static".into(),
+                    format!("h={h}"),
+                    format!("{bits:.2}"),
+                    format!("{score:.2}"),
+                ])
+            );
+        }
+        println!("{}", tbl.sep());
+    }
+    Ok(())
+}
+
+fn run(
+    ctx: &ModelCtx,
+    td: &loraquant::experiments::TaskData,
+    cfg: &LoraQuantConfig,
+) -> anyhow::Result<(f64, f64)> {
+    let mut q = QuantizedLora::default();
+    for (site, (a, b)) in &td.lora.sites {
+        q.sites.insert(site.clone(), quantize_site(b, a, cfg));
+    }
+    let deltas = loraquant::model::merge::quant_deltas(&q);
+    Ok((q.avg_bits(), ctx.eval_deltas(&deltas, &td.eval)?))
+}

@@ -1,0 +1,58 @@
+//! Figure 5 (App. B) reproduction: quantization-axis design space — B and A
+//! each quantized column-wise or row-wise, all four combinations. Paper:
+//! LLaMA2-7B on GSM8K/MATH → here tiny-llama-s on modadd/modchain.
+//!
+//! Expected shape: B(col) A(row) — the default, which absorbs √s into the
+//! group scales — is best or tied on the GSM8K analog; differences small.
+
+use loraquant::bench::Table;
+use loraquant::experiments::{ModelCtx, Settings};
+use loraquant::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
+use loraquant::quant::QuantAxis;
+
+fn main() -> anyhow::Result<()> {
+    let mut settings = Settings::from_env();
+    settings.models.retain(|m| m == "tiny-llama-s");
+    let Some(model) = settings.models.first().cloned() else {
+        eprintln!("bench_fig5_axis: tiny-llama-s artifacts missing — run `make artifacts`");
+        return Ok(());
+    };
+    let ctx = ModelCtx::load(&settings, &model)?;
+    println!("# Figure 5 — B/A quantization axis combinations (model {model}, 2-bit)");
+    let tbl = Table::new(&[10, 6, 16, 9, 9]);
+    println!(
+        "{}",
+        tbl.row(&["task".into(), "rho".into(), "axes".into(), "avg_bit".into(), "score".into()])
+    );
+    println!("{}", tbl.sep());
+
+    for td in ctx.tasks.iter().filter(|t| t.task == "modadd" || t.task == "modchain") {
+        for rho in [0.7f32, 0.9] {
+            for axis in QuantAxis::all() {
+                let cfg = LoraQuantConfig {
+                    axis,
+                    group: 128,
+                    ..LoraQuantConfig::variant(2, rho)
+                };
+                let mut q = QuantizedLora::default();
+                for (site, (a, b)) in &td.lora.sites {
+                    q.sites.insert(site.clone(), quantize_site(b, a, &cfg));
+                }
+                let deltas = loraquant::model::merge::quant_deltas(&q);
+                let score = ctx.eval_deltas(&deltas, &td.eval)?;
+                println!(
+                    "{}",
+                    tbl.row(&[
+                        td.task.clone(),
+                        format!("{rho}"),
+                        format!("{axis}"),
+                        format!("{:.2}", q.avg_bits()),
+                        format!("{score:.2}"),
+                    ])
+                );
+            }
+        }
+        println!("{}", tbl.sep());
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): quantization pipeline
+//! stages, dequant+merge, packing, SVD, STE — the L3 costs that gate
+//! adapter registration and cache-miss latency.
+
+use loraquant::bench::{bench, bench_for};
+use loraquant::loraquant::{quantize_site, LoraQuantConfig, SteConfig};
+use loraquant::quant::{bin_quant, pack_codes, rtn_dequant, rtn_quant, unpack_codes};
+use loraquant::tensor::matmul;
+use loraquant::testutil::Rng;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::new(2024);
+    let (b, a) = rng.lora_pair(512, 128, 16, 0.7); // the w2 site (largest)
+    let budget = Duration::from_millis(600);
+
+    println!("# Perf — L3 hot paths (site 512x128 r16 unless noted)");
+
+    let r = bench_for("svd_lowrank_product(512x16,16x128)", budget, || {
+        loraquant::linalg::svd_lowrank_product(&b, &a)
+    });
+    println!("{r}");
+
+    let r = bench_for("rtn_quant 2-bit g128 (16x512)", budget, || {
+        rtn_quant(&b.transpose(), 2, 128)
+    });
+    println!("{r}  [{:.1} Melem/s]", r.throughput((16 * 512) as f64) / 1e6);
+
+    let q = rtn_quant(&b.transpose(), 2, 128);
+    let r = bench_for("rtn_dequant 2-bit g128 (16x512)", budget, || rtn_dequant(&q));
+    println!("{r}  [{:.1} Melem/s]", r.throughput((16 * 512) as f64) / 1e6);
+
+    let r = bench_for("bin_quant g128 (16x512)", budget, || bin_quant(&b.transpose(), 128));
+    println!("{r}");
+
+    let codes: Vec<u8> = (0..8192).map(|i| (i % 4) as u8).collect();
+    let r = bench_for("pack_codes 2-bit (8192)", budget, || pack_codes(&codes, 2));
+    println!("{r}  [{:.1} Melem/s]", r.throughput(8192.0) / 1e6);
+    let packed = pack_codes(&codes, 2);
+    let r = bench_for("unpack_codes 2-bit (8192)", budget, || unpack_codes(&packed, 2, 8192));
+    println!("{r}  [{:.1} Melem/s]", r.throughput(8192.0) / 1e6);
+
+    let ste = SteConfig::default();
+    let bcol = b.col(0);
+    let arow = a.row(0).to_vec();
+    let r = bench_for("ste optimize_component 100 steps (512+128)", budget, || {
+        loraquant::loraquant::optimize_component(
+            &bcol,
+            &arow,
+            loraquant::loraquant::VecQuant::Rtn { bits: 2, group: 128 },
+            loraquant::loraquant::VecQuant::Rtn { bits: 2, group: 128 },
+            &ste,
+        )
+    });
+    println!("{r}");
+
+    let cfg = LoraQuantConfig::default();
+    let r = bench("quantize_site full pipeline (512x128 r16)", 1, 10, || {
+        quantize_site(&b, &a, &cfg)
+    });
+    println!("{r}");
+
+    let site = quantize_site(&b, &a, &cfg);
+    let r = bench_for("dequant_delta (512x128)", budget, || site.dequant_delta());
+    println!("{r}");
+
+    let r = bench_for("matmul 512x16 @ 16x128", budget, || matmul(&b, &a));
+    println!(
+        "{r}  [{:.2} GFLOP/s]",
+        r.throughput(2.0 * 512.0 * 16.0 * 128.0) / 1e9
+    );
+}

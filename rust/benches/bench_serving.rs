@@ -1,0 +1,75 @@
+//! Serving benchmark (P1 in DESIGN.md §5): end-to-end multi-LoRA serving
+//! through the coordinator — latency percentiles, throughput, batching
+//! efficacy, and cache behaviour under a Zipf workload; plus the effect of
+//! the merged-weight cache budget (eviction pressure).
+
+use loraquant::adapter::LoraAdapter;
+use loraquant::coordinator::{Coordinator, CoordinatorConfig, GenRequest, StoredAdapter};
+use loraquant::experiments::{lq, Settings};
+use loraquant::loraquant::{quantize_site, QuantizedLora};
+use loraquant::workload::{generate, WorkloadConfig};
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let settings = Settings::from_env();
+    let Some(model) = settings.models.first().cloned() else {
+        eprintln!("bench_serving: no artifacts — run `make artifacts`");
+        return Ok(());
+    };
+
+    // Pre-quantize one adapter per task; clones simulate many tenants.
+    let tasks = ["modadd", "modchain", "transform", "keyword"];
+    let qcfg = lq(2, 0.9);
+    let mut quantized = Vec::new();
+    for task in tasks {
+        let lora = LoraAdapter::load(settings.artifacts.join(&model).join(format!("{task}.lora.bin")))?;
+        let mut q = QuantizedLora::default();
+        for (site, (a, b)) in &lora.sites {
+            q.sites.insert(site.clone(), quantize_site(b, a, &qcfg));
+        }
+        quantized.push((task, q));
+    }
+
+    println!("# Serving — Zipf multi-LoRA workload through the coordinator ({model})");
+    for (n_adapters, cache_mb, rate) in
+        [(4usize, 256usize, 100.0f64), (16, 256, 100.0), (16, 4, 100.0), (16, 256, 400.0)]
+    {
+        let mut cfg = CoordinatorConfig::new(&settings.artifacts, &model);
+        cfg.cache_budget_bytes = cache_mb << 20;
+        cfg.max_wait = Duration::from_millis(5);
+        let (coord, join) = Coordinator::start(cfg)?;
+        let mut ids = Vec::new();
+        for i in 0..n_adapters {
+            let (task, q) = &quantized[i % quantized.len()];
+            ids.push(coord.register_adapter(StoredAdapter::Quantized(q.clone()), *task)?);
+        }
+        let wl = WorkloadConfig { rate, n_requests: 128, zipf_alpha: 1.1, seed: 11 };
+        let schedule = generate(&wl, &ids);
+        let start = Instant::now();
+        let mut rxs = Vec::new();
+        for arr in &schedule {
+            let el = start.elapsed();
+            if arr.at > el {
+                std::thread::sleep(arr.at - el);
+            }
+            rxs.push(coord.generate_async(GenRequest {
+                adapter: arr.adapter,
+                prompt: vec![1, 5, 4, 7, 3],
+                max_new: 3,
+            }));
+        }
+        let ok = rxs.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
+        let wall = start.elapsed();
+        let (m, cache, _) = coord.metrics()?;
+        println!(
+            "adapters={n_adapters:<3} cache={cache_mb:>4}MB rate={rate:>5.0}/s | {ok}/128 ok, {:.1} req/s | {} | hit_rate={:.2} evictions={}",
+            ok as f64 / wall.as_secs_f64(),
+            m.summary(),
+            cache.hit_rate(),
+            cache.evictions,
+        );
+        coord.shutdown();
+        let _ = join.join();
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Table 1 reproduction: 12 methods × 4 tasks × all trained models.
+//! Prints the paper's grid (per-task score, Avg Perf., Avg Bit) plus
+//! quantization wall-time per method.
+//!
+//! Paper: LLaMA2-7B/13B + Mistral-7B on GSM8K/MATH/HumanEval/XSum.
+//! Here:  tiny-llama-s/m + tiny-mistral-s on modadd/modchain/transform/
+//!        keyword (DESIGN.md §2 substitutions). Expected *shape*: RTN-1bit
+//!        collapses; BIN degrades hard; LoRAQuant 2@ρ < 2 avg bits at
+//!        quality ≈ GPTQ-2/PB-LLM/BiLLM; 3@ρ beats both near their bits.
+
+use loraquant::bench::Table;
+use loraquant::experiments::{apply_method, Method, ModelCtx, Settings};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let settings = Settings::from_env();
+    if settings.models.is_empty() {
+        eprintln!("bench_table1: no model artifacts found — run `make artifacts` first");
+        return Ok(());
+    }
+    println!("# Table 1 — performance & average bitwidth ({} eval examples/cell)", settings.eval_n);
+    let tbl = Table::new(&[14, 22, 9, 9, 9, 9, 10, 8, 9]);
+    println!(
+        "{}",
+        tbl.row(&[
+            "model".into(),
+            "method".into(),
+            "modadd".into(),
+            "modchain".into(),
+            "transform".into(),
+            "keyword".into(),
+            "avg_perf".into(),
+            "avg_bit".into(),
+            "quant_s".into(),
+        ])
+    );
+    println!("{}", tbl.sep());
+
+    for model in &settings.models {
+        let ctx = ModelCtx::load(&settings, model)?;
+        let cluster: Vec<&loraquant::adapter::LoraAdapter> =
+            ctx.tasks.iter().map(|t| &t.lora).collect();
+        for method in Method::table1_rows() {
+            let mut scores = Vec::new();
+            let mut bits = Vec::new();
+            let mut quant_time = 0.0f64;
+            for td in &ctx.tasks {
+                let t0 = Instant::now();
+                let (deltas, avg_bits) = apply_method(&method, td, &cluster);
+                quant_time += t0.elapsed().as_secs_f64();
+                let score = ctx.eval_deltas(&deltas, &td.eval)?;
+                scores.push(score);
+                bits.push(avg_bits);
+            }
+            let avg_perf = scores.iter().sum::<f64>() / scores.len().max(1) as f64;
+            let avg_bit = bits.iter().sum::<f64>() / bits.len().max(1) as f64;
+            let mut cells = vec![model.clone(), method.name()];
+            cells.extend(scores.iter().map(|s| format!("{s:.2}")));
+            while cells.len() < 6 {
+                cells.push("-".into());
+            }
+            cells.push(format!("{avg_perf:.2}"));
+            cells.push(format!("{avg_bit:.2}"));
+            cells.push(format!("{quant_time:.2}"));
+            println!("{}", tbl.row(&cells));
+        }
+        println!("{}", tbl.sep());
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Table 2 (App. C) reproduction: per-task average bitwidth of the four
+//! LoRAQuant variants — shows the dynamic-h rule adapting bits per adapter.
+
+use loraquant::bench::Table;
+use loraquant::experiments::{apply_method, lq, Method, ModelCtx, Settings};
+
+fn main() -> anyhow::Result<()> {
+    let settings = Settings::from_env();
+    if settings.models.is_empty() {
+        eprintln!("bench_table2: no model artifacts found — run `make artifacts` first");
+        return Ok(());
+    }
+    println!("# Table 2 — per-task average bitwidth of LoRAQuant variants");
+    let tbl = Table::new(&[14, 20, 10, 10, 10, 10]);
+    println!(
+        "{}",
+        tbl.row(&[
+            "model".into(),
+            "variant".into(),
+            "modadd".into(),
+            "modchain".into(),
+            "transform".into(),
+            "keyword".into(),
+        ])
+    );
+    println!("{}", tbl.sep());
+    for model in &settings.models {
+        let ctx = ModelCtx::load(&settings, model)?;
+        let cluster: Vec<&loraquant::adapter::LoraAdapter> =
+            ctx.tasks.iter().map(|t| &t.lora).collect();
+        for (bits, rho) in [(2, 0.8f32), (2, 0.9), (3, 0.8), (3, 0.9)] {
+            let method = Method::LoraQuant(lq(bits, rho));
+            let mut cells = vec![model.clone(), format!("LoRAQuant ({bits}@{rho})")];
+            for td in &ctx.tasks {
+                let (_deltas, avg_bits) = apply_method(&method, td, &cluster);
+                cells.push(format!("{avg_bits:.2}"));
+            }
+            println!("{}", tbl.row(&cells));
+        }
+        println!("{}", tbl.sep());
+    }
+    Ok(())
+}

@@ -1,0 +1,239 @@
+//! `tensorfile` — little-endian tensor container shared with the python
+//! build path (python/compile/tensorfile.py). Layout:
+//!
+//! ```text
+//! magic   b"LQTF"
+//! version u32 (=1)
+//! count   u32
+//! per tensor:
+//!   name_len u16, name utf-8
+//!   dtype    u8   (0 = f32, 1 = i32, 2 = u8)
+//!   ndim     u8
+//!   dims     u32 * ndim
+//!   data     raw little-endian, row-major
+//! ```
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LQTF";
+const VERSION: u32 = 1;
+
+/// Tensor payload variants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A named n-dimensional tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn u8(dims: Vec<usize>, data: Vec<u8>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: TensorData::U8(data) }
+    }
+
+    /// Borrow as f32 slice (errors on dtype mismatch).
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> anyhow::Result<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+
+    /// View a 2-D f32 tensor as a [`crate::tensor::Matrix`].
+    pub fn to_matrix(&self) -> anyhow::Result<crate::tensor::Matrix> {
+        if self.dims.len() != 2 {
+            bail!("expected 2-D tensor, got dims {:?}", self.dims);
+        }
+        Ok(crate::tensor::Matrix::from_vec(self.dims[0], self.dims[1], self.as_f32()?.to_vec()))
+    }
+}
+
+/// Load a tensorfile into an ordered name → tensor map.
+pub fn load_tensorfile(path: impl AsRef<Path>) -> anyhow::Result<BTreeMap<String, Tensor>> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_tensorfile(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse tensorfile bytes.
+pub fn parse_tensorfile(bytes: &[u8]) -> anyhow::Result<BTreeMap<String, Tensor>> {
+    let mut r = bytes;
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?}");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let count = read_u32(&mut r)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = read_u16(&mut r)? as usize;
+        let mut name = vec![0u8; nlen];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let data = match dtype {
+            0 => {
+                let mut buf = vec![0u8; n * 4];
+                r.read_exact(&mut buf)?;
+                TensorData::F32(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+            }
+            1 => {
+                let mut buf = vec![0u8; n * 4];
+                r.read_exact(&mut buf)?;
+                TensorData::I32(buf.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+            }
+            2 => {
+                let mut buf = vec![0u8; n];
+                r.read_exact(&mut buf)?;
+                TensorData::U8(buf)
+            }
+            _ => bail!("unknown dtype {dtype} for tensor {name}"),
+        };
+        out.insert(name, Tensor { dims, data });
+    }
+    Ok(out)
+}
+
+/// Save tensors (iteration order preserved as written order).
+pub fn save_tensorfile(
+    path: impl AsRef<Path>,
+    tensors: &BTreeMap<String, Tensor>,
+) -> anyhow::Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.write_all(MAGIC)?;
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        buf.extend_from_slice(nb);
+        let dtype = match &t.data {
+            TensorData::F32(_) => 0u8,
+            TensorData::I32(_) => 1,
+            TensorData::U8(_) => 2,
+        };
+        buf.push(dtype);
+        buf.push(t.dims.len() as u8);
+        for &d in &t.dims {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::U8(v) => buf.extend_from_slice(v),
+        }
+    }
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+fn read_u32(r: &mut &[u8]) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut &[u8]) -> anyhow::Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = BTreeMap::new();
+        t.insert("a".to_string(), Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        t.insert("b".to_string(), Tensor::i32(vec![4], vec![-1, 0, 1, 2]));
+        t.insert("c".to_string(), Tensor::u8(vec![2, 2], vec![0, 255, 7, 9]));
+        let tmp = std::env::temp_dir().join("lq_fmt_test.bin");
+        save_tensorfile(&tmp, &t).unwrap();
+        let back = load_tensorfile(&tmp).unwrap();
+        assert_eq!(t, back);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_tensorfile(b"XXXX\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn matrix_view() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let m = t.to_matrix().unwrap();
+        assert_eq!(m.at(1, 0), 3.0);
+        assert!(Tensor::i32(vec![2], vec![1, 2]).to_matrix().is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Full-precision LoRA adapter: per-site `(A r×n, B m×r)` factor pairs,
+//! as exported by python/compile/train.py (`<task>.lora.bin`).
+
+use super::fmt::load_tensorfile;
+use crate::tensor::Matrix;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One trained LoRA adapter (all sites of one model, one task).
+#[derive(Debug, Clone, Default)]
+pub struct LoraAdapter {
+    /// site name (e.g. `l0.wq`) → (A r×n, B m×r), paper orientation.
+    pub sites: BTreeMap<String, (Matrix, Matrix)>,
+}
+
+impl LoraAdapter {
+    /// Load from a `tensorfile` with `<site>.A` / `<site>.B` entries.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let tensors = load_tensorfile(&path)?;
+        let mut sites: BTreeMap<String, (Option<Matrix>, Option<Matrix>)> = BTreeMap::new();
+        for (name, t) in &tensors {
+            let (site, kind) = match name.rsplit_once('.') {
+                Some((s, k)) if k == "A" || k == "B" => (s.to_string(), k),
+                _ => bail!("unexpected tensor name {name}"),
+            };
+            let m = t.to_matrix().with_context(|| name.clone())?;
+            let entry = sites.entry(site).or_default();
+            if kind == "A" {
+                entry.0 = Some(m);
+            } else {
+                entry.1 = Some(m);
+            }
+        }
+        let mut out = BTreeMap::new();
+        for (site, (a, b)) in sites {
+            let (a, b) = match (a, b) {
+                (Some(a), Some(b)) => (a, b),
+                _ => bail!("site {site} missing A or B"),
+            };
+            if a.rows() != b.cols() {
+                bail!("site {site}: rank mismatch A {:?} B {:?}", a.shape(), b.shape());
+            }
+            out.insert(site, (a, b));
+        }
+        Ok(Self { sites: out })
+    }
+
+    /// LoRA rank (assumes uniform across sites, as trained).
+    pub fn rank(&self) -> usize {
+        self.sites.values().next().map(|(a, _)| a.rows()).unwrap_or(0)
+    }
+
+    /// Total parameter count Σ r(m+n).
+    pub fn param_count(&self) -> usize {
+        self.sites.values().map(|(a, b)| a.len() + b.len()).sum()
+    }
+
+    /// FP16 storage bytes (the paper's baseline memory: 2 bytes/param).
+    pub fn fp16_bytes(&self) -> usize {
+        self.param_count() * 2
+    }
+
+    /// Per-site delta `ΔW = B A` (m×n).
+    pub fn delta(&self, site: &str) -> Option<Matrix> {
+        self.sites.get(site).map(|(a, b)| crate::tensor::matmul(b, a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::fmt::{save_tensorfile, Tensor};
+    use std::collections::BTreeMap;
+
+    fn write_adapter(path: &std::path::Path) {
+        let mut t = BTreeMap::new();
+        t.insert("l0.wq.A".into(), Tensor::f32(vec![2, 4], vec![0.1; 8]));
+        t.insert("l0.wq.B".into(), Tensor::f32(vec![3, 2], vec![0.2; 6]));
+        save_tensorfile(path, &t).unwrap();
+    }
+
+    #[test]
+    fn load_and_shapes() {
+        let tmp = std::env::temp_dir().join("lq_lora_test.bin");
+        write_adapter(&tmp);
+        let ad = LoraAdapter::load(&tmp).unwrap();
+        assert_eq!(ad.rank(), 2);
+        assert_eq!(ad.param_count(), 14);
+        assert_eq!(ad.fp16_bytes(), 28);
+        let d = ad.delta("l0.wq").unwrap();
+        assert_eq!(d.shape(), (3, 4));
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn missing_factor_rejected() {
+        let tmp = std::env::temp_dir().join("lq_lora_bad.bin");
+        let mut t = BTreeMap::new();
+        t.insert("l0.wq.A".into(), Tensor::f32(vec![2, 4], vec![0.1; 8]));
+        save_tensorfile(&tmp, &t).unwrap();
+        assert!(LoraAdapter::load(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Adapter model + on-disk formats.
+//!
+//! * [`fmt`] — the `tensorfile` container (mirrors python/compile/tensorfile.py).
+//! * [`lora`] — an FP LoRA adapter: per-site `(A, B)` factor pairs.
+//! * [`store`] — serialization of quantized adapters (the registry's
+//!   at-rest format).
+
+pub mod fmt;
+pub mod lora;
+pub mod store;
+
+pub use fmt::{load_tensorfile, save_tensorfile, Tensor, TensorData};
+pub use lora::LoraAdapter;

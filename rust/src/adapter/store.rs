@@ -1,0 +1,225 @@
+//! At-rest serialization of quantized adapters.
+//!
+//! The registry stores LoRAQuant-compressed adapters in the same
+//! `tensorfile` container used for FP weights, with a per-site layout:
+//!
+//! ```text
+//! <site>.meta        i32[10]  m n r h bits_high group axis_b axis_a low_mode flags
+//! <site>.bh.packed   u8       <site>.bh.scale f32   <site>.bh.zero f32
+//! <site>.ah.*        (same)
+//! <site>.bl.packed   u8       <site>.bl.scale f32  [<site>.bl.zero f32]
+//! <site>.al.*        (same)
+//! ```
+//!
+//! axis: 0 = row, 1 = col. low_mode: 0 = none/pruned, 1 = bin, 2 = rtn1.
+
+use super::fmt::{load_tensorfile, save_tensorfile, Tensor};
+use crate::loraquant::{LowQuantized, QuantizedLora, QuantizedSite};
+use crate::quant::{Axis, BinQuantized, QuantAxis, RtnQuantized};
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn axis_code(a: Axis) -> i32 {
+    match a {
+        Axis::Row => 0,
+        Axis::Col => 1,
+    }
+}
+
+fn axis_from(c: i32) -> anyhow::Result<Axis> {
+    match c {
+        0 => Ok(Axis::Row),
+        1 => Ok(Axis::Col),
+        _ => bail!("bad axis code {c}"),
+    }
+}
+
+/// Encode one quantized adapter into tensorfile entries.
+pub fn encode(lora: &QuantizedLora) -> BTreeMap<String, Tensor> {
+    let mut out = BTreeMap::new();
+    for (site, q) in &lora.sites {
+        let low_mode = match (&q.bl, &q.al) {
+            (None, None) => 0,
+            (Some(LowQuantized::Bin(_)), _) => 1,
+            (Some(LowQuantized::Rtn1(_)), _) => 2,
+            _ => 0,
+        };
+        let meta = vec![
+            q.m as i32,
+            q.n as i32,
+            q.r as i32,
+            q.h as i32,
+            q.bh.as_ref().map(|x| x.bits as i32).unwrap_or(0),
+            q.bh
+                .as_ref()
+                .map(|x| x.group as i32)
+                .or_else(|| low_group(q).map(|g| g as i32))
+                .unwrap_or(0),
+            axis_code(q.axis.b_axis),
+            axis_code(q.axis.a_axis),
+            low_mode,
+            0,
+        ];
+        out.insert(format!("{site}.meta"), Tensor::i32(vec![10], meta));
+        if let Some(x) = &q.bh {
+            put_rtn(&mut out, site, "bh", x);
+        }
+        if let Some(x) = &q.ah {
+            put_rtn(&mut out, site, "ah", x);
+        }
+        if let Some(x) = &q.bl {
+            put_low(&mut out, site, "bl", x);
+        }
+        if let Some(x) = &q.al {
+            put_low(&mut out, site, "al", x);
+        }
+    }
+    out
+}
+
+fn low_group(q: &QuantizedSite) -> Option<usize> {
+    match &q.bl {
+        Some(LowQuantized::Bin(b)) => Some(b.group),
+        Some(LowQuantized::Rtn1(r)) => Some(r.group),
+        None => None,
+    }
+}
+
+fn put_rtn(out: &mut BTreeMap<String, Tensor>, site: &str, part: &str, q: &RtnQuantized) {
+    out.insert(
+        format!("{site}.{part}.shape"),
+        Tensor::i32(vec![4], vec![q.rows as i32, q.cols as i32, q.bits as i32, q.group as i32]),
+    );
+    out.insert(format!("{site}.{part}.packed"), Tensor::u8(vec![q.packed.len()], q.packed.clone()));
+    out.insert(format!("{site}.{part}.scale"), Tensor::f32(vec![q.scale.len()], q.scale.clone()));
+    out.insert(format!("{site}.{part}.zero"), Tensor::f32(vec![q.zero.len()], q.zero.clone()));
+}
+
+fn put_low(out: &mut BTreeMap<String, Tensor>, site: &str, part: &str, q: &LowQuantized) {
+    match q {
+        LowQuantized::Bin(b) => {
+            out.insert(
+                format!("{site}.{part}.shape"),
+                Tensor::i32(vec![4], vec![b.rows as i32, b.cols as i32, 1, b.group as i32]),
+            );
+            out.insert(format!("{site}.{part}.packed"), Tensor::u8(vec![b.packed.len()], b.packed.clone()));
+            out.insert(format!("{site}.{part}.scale"), Tensor::f32(vec![b.scale.len()], b.scale.clone()));
+        }
+        LowQuantized::Rtn1(r) => put_rtn(out, site, part, r),
+    }
+}
+
+fn get_rtn(t: &BTreeMap<String, Tensor>, site: &str, part: &str) -> anyhow::Result<RtnQuantized> {
+    let shape = t
+        .get(&format!("{site}.{part}.shape"))
+        .with_context(|| format!("{site}.{part}.shape missing"))?
+        .as_i32()?;
+    Ok(RtnQuantized {
+        rows: shape[0] as usize,
+        cols: shape[1] as usize,
+        bits: shape[2] as u32,
+        group: shape[3] as usize,
+        packed: t[&format!("{site}.{part}.packed")].as_u8()?.to_vec(),
+        scale: t[&format!("{site}.{part}.scale")].as_f32()?.to_vec(),
+        zero: t[&format!("{site}.{part}.zero")].as_f32()?.to_vec(),
+    })
+}
+
+fn get_bin(t: &BTreeMap<String, Tensor>, site: &str, part: &str) -> anyhow::Result<BinQuantized> {
+    let shape = t
+        .get(&format!("{site}.{part}.shape"))
+        .with_context(|| format!("{site}.{part}.shape missing"))?
+        .as_i32()?;
+    Ok(BinQuantized {
+        rows: shape[0] as usize,
+        cols: shape[1] as usize,
+        group: shape[3] as usize,
+        packed: t[&format!("{site}.{part}.packed")].as_u8()?.to_vec(),
+        scale: t[&format!("{site}.{part}.scale")].as_f32()?.to_vec(),
+    })
+}
+
+/// Decode tensorfile entries back into a quantized adapter.
+pub fn decode(tensors: &BTreeMap<String, Tensor>) -> anyhow::Result<QuantizedLora> {
+    let mut lora = QuantizedLora::default();
+    for (name, t) in tensors {
+        let Some(site) = name.strip_suffix(".meta") else { continue };
+        let meta = t.as_i32()?;
+        if meta.len() != 10 {
+            bail!("{name}: bad meta length {}", meta.len());
+        }
+        let (m, n, r, h) = (meta[0] as usize, meta[1] as usize, meta[2] as usize, meta[3] as usize);
+        let axis = QuantAxis { b_axis: axis_from(meta[6])?, a_axis: axis_from(meta[7])? };
+        let (bh, ah) = if h > 0 {
+            (Some(get_rtn(tensors, site, "bh")?), Some(get_rtn(tensors, site, "ah")?))
+        } else {
+            (None, None)
+        };
+        let (bl, al) = match meta[8] {
+            0 => (None, None),
+            1 => (
+                Some(LowQuantized::Bin(get_bin(tensors, site, "bl")?)),
+                Some(LowQuantized::Bin(get_bin(tensors, site, "al")?)),
+            ),
+            2 => (
+                Some(LowQuantized::Rtn1(get_rtn(tensors, site, "bl")?)),
+                Some(LowQuantized::Rtn1(get_rtn(tensors, site, "al")?)),
+            ),
+            x => bail!("bad low_mode {x}"),
+        };
+        lora.sites.insert(site.to_string(), QuantizedSite { m, n, r, h, bh, ah, bl, al, axis });
+    }
+    Ok(lora)
+}
+
+/// Save a quantized adapter to disk.
+pub fn save(path: impl AsRef<Path>, lora: &QuantizedLora) -> anyhow::Result<()> {
+    save_tensorfile(path, &encode(lora))
+}
+
+/// Load a quantized adapter from disk.
+pub fn load(path: impl AsRef<Path>) -> anyhow::Result<QuantizedLora> {
+    decode(&load_tensorfile(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loraquant::{quantize_site, LoraQuantConfig, LowMode};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn roundtrip_preserves_delta_and_bits() {
+        let mut rng = Rng::new(81);
+        let (b, a) = rng.lora_pair(64, 48, 8, 0.7);
+        let mut lora = QuantizedLora::default();
+        lora.sites.insert("l0.wq".into(), quantize_site(&b, &a, &LoraQuantConfig::default()));
+        lora.sites.insert(
+            "l0.w1".into(),
+            quantize_site(&b, &a, &LoraQuantConfig { low_mode: LowMode::Prune, ..Default::default() }),
+        );
+        let enc = encode(&lora);
+        let dec = decode(&enc).unwrap();
+        assert_eq!(dec.sites.len(), 2);
+        assert_eq!(dec.storage_bits(), lora.storage_bits());
+        for site in ["l0.wq", "l0.w1"] {
+            let d0 = lora.sites[site].dequant_delta();
+            let d1 = dec.sites[site].dequant_delta();
+            assert!(d0.sub(&d1).fro_norm() < 1e-6, "{site}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::new(82);
+        let (b, a) = rng.lora_pair(32, 32, 4, 0.6);
+        let mut lora = QuantizedLora::default();
+        lora.sites.insert("l1.wo".into(), quantize_site(&b, &a, &LoraQuantConfig::variant(3, 0.8)));
+        let tmp = std::env::temp_dir().join("lq_store_test.bin");
+        save(&tmp, &lora).unwrap();
+        let back = load(&tmp).unwrap();
+        assert_eq!(back.sites["l1.wo"].h, lora.sites["l1.wo"].h);
+        std::fs::remove_file(tmp).ok();
+    }
+}

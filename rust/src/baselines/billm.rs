@@ -1,0 +1,187 @@
+//! BiLLM (Huang et al., 2024) applied to LoRA factors (Table 1 row 8).
+//!
+//! Structured mixed binarization:
+//! * **salient columns** (top fraction by column L2 norm — structural, so no
+//!   per-weight indicator; a negligible column bitmap instead) are binarized
+//!   twice: a first sign pass plus a sign pass on the residual ("residual
+//!   approximation", ≈2 effective bits);
+//! * **non-salient columns** use *split binarization*: each group is split
+//!   into a low-magnitude and a high-magnitude half with separate scales,
+//!   which needs a 1-bit group-membership indicator per weight (the extra
+//!   bit the paper calls out).
+
+use super::{CompressedPair, Quantizer};
+use crate::quant::SCALE_BITS;
+use crate::tensor::{matmul, norm2, Matrix};
+
+/// BiLLM configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BiLlm {
+    /// Fraction of columns treated as salient (paper setup: ~0.1).
+    pub salient_frac: f32,
+    pub group: usize,
+}
+
+impl Default for BiLlm {
+    fn default() -> Self {
+        Self { salient_frac: 0.1, group: 128 }
+    }
+}
+
+#[derive(Debug)]
+struct BiFactor {
+    deq: Matrix,
+    bits: u64,
+}
+
+/// Sign-binarize a slice with L1-optimal scale; returns reconstruction.
+fn binarize(vals: &[f32]) -> Vec<f32> {
+    if vals.is_empty() {
+        return vec![];
+    }
+    let s = vals.iter().map(|v| v.abs()).sum::<f32>() / vals.len() as f32;
+    vals.iter().map(|v| if *v >= 0.0 { s } else { -s }).collect()
+}
+
+fn compress_factor(w: &Matrix, cfg: &BiLlm) -> BiFactor {
+    let (rows, cols) = w.shape();
+    // 1) salient columns by L2 norm
+    let mut scored: Vec<(usize, f32)> = (0..cols).map(|j| (j, norm2(&w.col(j)))).collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let n_sal = ((cols as f32 * cfg.salient_frac).round() as usize).min(cols);
+    let salient: std::collections::BTreeSet<usize> =
+        scored.iter().take(n_sal).map(|&(j, _)| j).collect();
+
+    let mut deq = Matrix::zeros(rows, cols);
+    let mut bits = cols as u64; // column bitmap
+    let gpr = cols.div_ceil(cfg.group);
+
+    for i in 0..rows {
+        // --- salient: residual double binarization, per row over salient set
+        let sal_idx: Vec<usize> = salient.iter().copied().collect();
+        let sal_vals: Vec<f32> = sal_idx.iter().map(|&j| w.at(i, j)).collect();
+        if !sal_vals.is_empty() {
+            let first = binarize(&sal_vals);
+            let resid: Vec<f32> = sal_vals.iter().zip(&first).map(|(v, f)| v - f).collect();
+            let second = binarize(&resid);
+            for (t, &j) in sal_idx.iter().enumerate() {
+                deq.set(i, j, first[t] + second[t]);
+            }
+        }
+        // --- non-salient: split binarization per group
+        for g in 0..gpr {
+            let lo_j = g * cfg.group;
+            let hi_j = ((g + 1) * cfg.group).min(cols);
+            let idx: Vec<usize> = (lo_j..hi_j).filter(|j| !salient.contains(j)).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let vals: Vec<f32> = idx.iter().map(|&j| w.at(i, j)).collect();
+            // split by magnitude at the group median |w|
+            let mut mags: Vec<f32> = vals.iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = mags[mags.len() / 2];
+            let (mut lo_set, mut hi_set) = (Vec::new(), Vec::new());
+            for (t, v) in vals.iter().enumerate() {
+                if v.abs() < median {
+                    lo_set.push((t, *v));
+                } else {
+                    hi_set.push((t, *v));
+                }
+            }
+            for set in [&lo_set, &hi_set] {
+                let rec = binarize(&set.iter().map(|&(_, v)| v).collect::<Vec<_>>());
+                for (&(t, _), r) in set.iter().zip(&rec) {
+                    deq.set(i, idx[t], *r);
+                }
+            }
+        }
+    }
+
+    // Eq. 10 accounting:
+    // salient: 2 sign bits/weight + 2 fp16 scales per (row, group-of-salient)
+    let n_sal_w = (rows * n_sal) as u64;
+    let sal_groups = (rows * n_sal.div_ceil(cfg.group).max(usize::from(n_sal > 0))) as u64;
+    bits += 2 * n_sal_w + sal_groups * 2 * SCALE_BITS;
+    // non-salient: 1 sign + 1 membership bit per weight + 2 fp16 scales/group
+    let n_rest_w = (rows * (cols - n_sal)) as u64;
+    bits += 2 * n_rest_w + (rows * gpr) as u64 * 2 * SCALE_BITS;
+    BiFactor { deq, bits }
+}
+
+/// Compressed pair produced by [`BiLlm`].
+#[derive(Debug)]
+pub struct BiCompressed {
+    b: BiFactor,
+    a: BiFactor,
+    params: usize,
+}
+
+impl CompressedPair for BiCompressed {
+    fn dequant_delta(&self) -> Matrix {
+        matmul(&self.b.deq.transpose(), &self.a.deq)
+    }
+
+    fn storage_bits(&self) -> u64 {
+        self.b.bits + self.a.bits
+    }
+
+    fn param_count(&self) -> usize {
+        self.params
+    }
+}
+
+impl Quantizer for BiLlm {
+    fn name(&self) -> String {
+        "BiLLM".to_string()
+    }
+
+    fn quantize(&self, b: &Matrix, a: &Matrix, _calib: Option<&Matrix>) -> Box<dyn CompressedPair> {
+        // B compressed column-wise (transposed): salient "columns" of B are
+        // its rank components' long m-axis slices — see DESIGN.md §7.
+        Box::new(BiCompressed {
+            b: compress_factor(&b.transpose(), self),
+            a: compress_factor(a, self),
+            params: b.len() + a.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::FlatQuantizer;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn beats_pure_binarization() {
+        let mut rng = Rng::new(121);
+        let (b, a) = rng.lora_pair(64, 128, 16, 0.7);
+        let ba = matmul(&b, &a);
+        let e_bi = BiLlm::default().quantize(&b, &a, None).dequant_delta().rel_err(&ba);
+        let e_bin = FlatQuantizer::bin(128).quantize(&b, &a, None).dequant_delta().rel_err(&ba);
+        assert!(e_bi < e_bin, "billm {e_bi} vs bin {e_bin}");
+    }
+
+    #[test]
+    fn avg_bits_near_paper() {
+        let mut rng = Rng::new(122);
+        let (b, a) = rng.lora_pair(128, 128, 16, 0.7);
+        let q = BiLlm::default().quantize(&b, &a, None);
+        // paper reports 2.24 at group 128; our adapters' 16-row factors pay
+        // proportionally more fp16-scale overhead, so allow a wider band
+        assert!((q.avg_bits() - 2.4).abs() < 0.45, "avg bits {}", q.avg_bits());
+    }
+
+    #[test]
+    fn residual_binarization_refines_salient() {
+        let v = [3.0f32, -1.0, 2.0, -2.5];
+        let first = binarize(&v);
+        let resid: Vec<f32> = v.iter().zip(&first).map(|(a, b)| a - b).collect();
+        let second = binarize(&resid);
+        let rec: Vec<f32> = first.iter().zip(&second).map(|(a, b)| a + b).collect();
+        let e1: f32 = v.iter().zip(&first).map(|(a, b)| (a - b).powi(2)).sum();
+        let e2: f32 = v.iter().zip(&rec).map(|(a, b)| (a - b).powi(2)).sum();
+        assert!(e2 < e1);
+    }
+}

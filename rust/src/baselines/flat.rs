@@ -1,0 +1,136 @@
+//! Flat (structure-oblivious) baselines: group-wise RTN at k bits and sign
+//! binarization, applied directly to the B and A factors (Table 1 rows
+//! 2, 3, 5 — "BIN", "RTN (1 bit)", "RTN (2 bits)").
+
+use super::{CompressedPair, Quantizer};
+use crate::quant::{bin_dequant, bin_quant, rtn_dequant, rtn_quant, BinQuantized, RtnQuantized};
+use crate::tensor::{matmul, Matrix};
+
+/// Which flat method.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlatKind {
+    /// Group-wise RTN at `bits`.
+    Rtn { bits: u32 },
+    /// Sign binarization (1 bit).
+    Bin,
+}
+
+/// Flat quantizer over both factors, row-wise grouping.
+#[derive(Debug, Clone, Copy)]
+pub struct FlatQuantizer {
+    pub kind: FlatKind,
+    pub group: usize,
+}
+
+impl FlatQuantizer {
+    pub fn rtn(bits: u32, group: usize) -> Self {
+        Self { kind: FlatKind::Rtn { bits }, group }
+    }
+
+    pub fn bin(group: usize) -> Self {
+        Self { kind: FlatKind::Bin, group }
+    }
+}
+
+#[derive(Debug)]
+enum Factor {
+    Rtn(RtnQuantized),
+    Bin(BinQuantized),
+}
+
+impl Factor {
+    fn dequant(&self) -> Matrix {
+        match self {
+            Factor::Rtn(q) => rtn_dequant(q),
+            Factor::Bin(q) => bin_dequant(q),
+        }
+    }
+
+    fn bits(&self) -> u64 {
+        match self {
+            Factor::Rtn(q) => q.storage_bits(),
+            Factor::Bin(q) => q.storage_bits(),
+        }
+    }
+}
+
+/// Compressed pair produced by [`FlatQuantizer`].
+#[derive(Debug)]
+pub struct FlatCompressed {
+    b: Factor,
+    a: Factor,
+    params: usize,
+}
+
+impl CompressedPair for FlatCompressed {
+    fn dequant_delta(&self) -> Matrix {
+        // b was stored transposed (column-wise quantization)
+        matmul(&self.b.dequant().transpose(), &self.a.dequant())
+    }
+
+    fn storage_bits(&self) -> u64 {
+        self.b.bits() + self.a.bits()
+    }
+
+    fn param_count(&self) -> usize {
+        self.params
+    }
+}
+
+impl Quantizer for FlatQuantizer {
+    fn name(&self) -> String {
+        match self.kind {
+            FlatKind::Rtn { bits } => format!("RTN ({bits} bit{})", if bits > 1 { "s" } else { "" }),
+            FlatKind::Bin => "BIN".to_string(),
+        }
+    }
+
+    fn quantize(&self, b: &Matrix, a: &Matrix, _calib: Option<&Matrix>) -> Box<dyn CompressedPair> {
+        let params = b.len() + a.len();
+        let q = |w: &Matrix| match self.kind {
+            FlatKind::Rtn { bits } => Factor::Rtn(rtn_quant(w, bits, self.group)),
+            FlatKind::Bin => Factor::Bin(bin_quant(w, self.group)),
+        };
+        // B is quantized column-wise (transposed): groups run along the long
+        // m axis, matching the paper's App. B default and its bit economics.
+        Box::new(FlatCompressed { b: q(&b.transpose()), a: q(a), params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn rtn2_beats_rtn1_beats_nothing() {
+        let mut rng = Rng::new(91);
+        let (b, a) = rng.lora_pair(64, 64, 16, 0.7);
+        let ba = matmul(&b, &a);
+        let e1 = FlatQuantizer::rtn(1, 64).quantize(&b, &a, None).dequant_delta().rel_err(&ba);
+        let e2 = FlatQuantizer::rtn(2, 64).quantize(&b, &a, None).dequant_delta().rel_err(&ba);
+        let eb = FlatQuantizer::bin(64).quantize(&b, &a, None).dequant_delta().rel_err(&ba);
+        assert!(e2 < e1, "rtn2 {e2} vs rtn1 {e1}");
+        // the paper's point: 1-bit RTN collapses (most codes -> 0) and is
+        // far worse than sign binarization at the same bitwidth
+        assert!(eb < e1, "bin {eb} vs rtn1 {e1}");
+    }
+
+    #[test]
+    fn paper_avg_bits() {
+        let mut rng = Rng::new(92);
+        let (b, a) = rng.lora_pair(128, 128, 16, 0.7);
+        // group 128 reproduces Table 1's bit column exactly
+        let q = FlatQuantizer::rtn(2, 128).quantize(&b, &a, None);
+        assert!((q.avg_bits() - 2.140625).abs() < 1e-9, "{}", q.avg_bits());
+        let q = FlatQuantizer::bin(128).quantize(&b, &a, None);
+        assert!((q.avg_bits() - 1.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(FlatQuantizer::rtn(1, 64).name(), "RTN (1 bit)");
+        assert_eq!(FlatQuantizer::rtn(2, 64).name(), "RTN (2 bits)");
+        assert_eq!(FlatQuantizer::bin(64).name(), "BIN");
+    }
+}

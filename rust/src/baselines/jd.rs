@@ -1,0 +1,167 @@
+//! JD-Diagonal (Gabrielsson et al., 2024) — "compress then serve"
+//! (Table 1 row 4).
+//!
+//! Not a quantization method: a **cluster** of adapters shares a joint
+//! basis `U (m×k), V (n×k)` and each adapter keeps only a k-vector diagonal:
+//! `ΔWᵢ ≈ U diag(σᵢ) Vᵀ`. Storage per adapter is the diagonal plus the
+//! amortized share of the basis — ~16/C bits/param for a C-adapter cluster
+//! (the paper's 5.33 at C = 3).
+//!
+//! Basis computation: U spans the dominant eigenvectors of
+//! `Σᵢ ΔWᵢ ΔWᵢᵀ = Σᵢ Bᵢ (AᵢAᵢᵀ) Bᵢᵀ`, computed in factored form via a thin
+//! QR of `[B₁ … B_C]` and a small (Cr×Cr) Jacobi eigen-solve — the m×n
+//! products are never materialized. V likewise from `Σᵢ Aᵢᵀ(BᵢᵀBᵢ)Aᵢ`.
+
+use crate::linalg::{qr_thin, svd_jacobi};
+use crate::quant::SCALE_BITS;
+use crate::tensor::{matmul, matmul_at_b, Matrix};
+
+/// JD-Diagonal configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct JdDiagonal {
+    /// Shared-basis rank (paper: the LoRA rank).
+    pub k: usize,
+}
+
+/// A fitted cluster: shared basis + per-adapter diagonals.
+#[derive(Debug, Clone)]
+pub struct JdCluster {
+    pub u: Matrix,
+    pub v: Matrix,
+    /// Per-adapter diagonal coefficients (k each).
+    pub diags: Vec<Vec<f32>>,
+    /// Original per-adapter parameter count r(m+n).
+    pub params_per_adapter: usize,
+}
+
+impl JdDiagonal {
+    /// Fit the shared basis over a cluster of factor pairs `(B m×r, A r×n)`.
+    pub fn fit(&self, adapters: &[(Matrix, Matrix)]) -> JdCluster {
+        assert!(!adapters.is_empty());
+        let (m, r) = adapters[0].0.shape();
+        let n = adapters[0].1.cols();
+        let u = shared_basis(adapters.iter().map(|(b, a)| (b.clone(), a.clone())).collect(), self.k);
+        // V: same construction with roles swapped (Aᵀ plays B, Bᵀ plays A)
+        let v = shared_basis(
+            adapters.iter().map(|(b, a)| (a.transpose(), b.transpose())).collect(),
+            self.k,
+        );
+        let diags = adapters
+            .iter()
+            .map(|(b, a)| {
+                // diag(Uᵀ B A V)
+                let ub = matmul_at_b(&u, b); // k×r
+                let av = matmul(a, &v); // r×k
+                let p = matmul(&ub, &av); // k×k
+                (0..self.k.min(p.rows())).map(|i| p.at(i, i)).collect()
+            })
+            .collect();
+        JdCluster { u, v, diags, params_per_adapter: r * (m + n) }
+    }
+}
+
+/// Dominant-k eigenbasis of `Σᵢ Bᵢ (AᵢAᵢᵀ) Bᵢᵀ` in factored form.
+fn shared_basis(pairs: Vec<(Matrix, Matrix)>, k: usize) -> Matrix {
+    // Concat all B factors: m × (C·r)
+    let mut bcat = pairs[0].0.clone();
+    for (b, _) in pairs.iter().skip(1) {
+        bcat = bcat.hcat(b);
+    }
+    let (q, rr) = qr_thin(&bcat); // q: m×Cr
+    // core = R · blockdiag(AᵢAᵢᵀ) · Rᵀ  (Cr × Cr, symmetric PSD)
+    let cr = bcat.cols();
+    let r = pairs[0].0.cols();
+    let mut block = Matrix::zeros(cr, cr);
+    for (i, (_, a)) in pairs.iter().enumerate() {
+        let w = crate::tensor::matmul_a_bt(a, a); // r×r = A Aᵀ
+        for p in 0..r {
+            for t in 0..r {
+                block.set(i * r + p, i * r + t, w.at(p, t));
+            }
+        }
+    }
+    let core = matmul(&matmul(&rr, &block), &rr.transpose());
+    // symmetric PSD ⇒ SVD = eigendecomposition
+    let eig = svd_jacobi(&core);
+    let uk = eig.u.slice_cols(0, k.min(eig.u.cols()));
+    matmul(&q, &uk)
+}
+
+impl JdCluster {
+    /// Reconstruct adapter `i`: `U diag(σᵢ) Vᵀ` (m×n).
+    pub fn dequant_delta(&self, i: usize) -> Matrix {
+        let k = self.diags[i].len();
+        let mut us = Matrix::zeros(self.u.rows(), k);
+        for row in 0..self.u.rows() {
+            for c in 0..k {
+                us.set(row, c, self.u.at(row, c) * self.diags[i][c]);
+            }
+        }
+        crate::tensor::matmul_a_bt(&us, &self.v)
+    }
+
+    /// Eq. 10 storage per adapter: fp16 diagonal + amortized fp16 basis.
+    pub fn storage_bits_per_adapter(&self) -> u64 {
+        let c = self.diags.len() as u64;
+        let basis = (self.u.len() + self.v.len()) as u64 * SCALE_BITS;
+        let diag = self.diags[0].len() as u64 * SCALE_BITS;
+        diag + basis / c
+    }
+
+    /// Average bits per original LoRA parameter.
+    pub fn avg_bits(&self) -> f64 {
+        self.storage_bits_per_adapter() as f64 / self.params_per_adapter as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn single_adapter_cluster_reconstructs_well() {
+        // With C = 1 the shared basis is exactly the adapter's own SVD basis,
+        // so the diagonal reconstruction equals the rank-k truncation.
+        let mut rng = Rng::new(131);
+        let (b, a) = rng.lora_pair(48, 40, 8, 0.6);
+        let ba = matmul(&b, &a);
+        let cluster = JdDiagonal { k: 8 }.fit(&[(b, a)]);
+        let err = cluster.dequant_delta(0).rel_err(&ba);
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn disjoint_adapters_interfere() {
+        // Adapters with disjoint dominant subspaces cannot share one
+        // diagonal basis — reconstruction degrades. (The paper's observed
+        // failure mode on heterogeneous tasks.)
+        let mut rng = Rng::new(132);
+        let pairs: Vec<_> = (0..3).map(|_| rng.lora_pair(48, 40, 8, 0.6)).collect();
+        let cluster = JdDiagonal { k: 8 }.fit(&pairs);
+        let mut worst = 0.0f32;
+        for (i, (b, a)) in pairs.iter().enumerate() {
+            let err = cluster.dequant_delta(i).rel_err(&matmul(b, a));
+            worst = worst.max(err);
+        }
+        assert!(worst > 0.3, "independent adapters should not share a basis: {worst}");
+    }
+
+    #[test]
+    fn avg_bits_matches_paper() {
+        let mut rng = Rng::new(133);
+        let pairs: Vec<_> = (0..3).map(|_| rng.lora_pair(128, 128, 16, 0.6)).collect();
+        let cluster = JdDiagonal { k: 16 }.fit(&pairs);
+        // 16/C = 5.33 plus the tiny diagonal term
+        assert!((cluster.avg_bits() - 5.33).abs() < 0.1, "{}", cluster.avg_bits());
+    }
+
+    #[test]
+    fn shared_basis_orthonormal() {
+        let mut rng = Rng::new(134);
+        let pairs: Vec<_> = (0..2).map(|_| rng.lora_pair(32, 24, 4, 0.7)).collect();
+        let cluster = JdDiagonal { k: 4 }.fit(&pairs);
+        let utu = matmul_at_b(&cluster.u, &cluster.u);
+        assert!(utu.rel_err(&Matrix::eye(4)) < 1e-3);
+    }
+}

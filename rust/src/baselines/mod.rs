@@ -1,0 +1,54 @@
+//! Quantization baselines from the paper's Table 1 (Rows 2–8) and Fig. 3.
+//!
+//! Every baseline implements [`Quantizer`]: it consumes one adapter matrix
+//! pair `(B m×r, A r×n)` and yields a dequantizable compressed form with
+//! Eq. 10 bit accounting — so the bench harness can run the whole method
+//! grid uniformly.
+//!
+//! | Table 1 row | type |
+//! |---|---|
+//! | BIN | [`FlatQuantizer`] sign-binarization of B and A |
+//! | RTN (1/2 bits) | [`FlatQuantizer`] group-wise RTN of B and A |
+//! | GPTQ (2 bits) | [`Gptq`] — Hessian-guided error compensation |
+//! | PB-LLM | [`PbLlm`] — salient weights int8 + indicator bit, rest binary |
+//! | BiLLM | [`BiLlm`] — salient columns residual-binarized, rest split-binary |
+//! | JD-Diagonal | [`jd::JdDiagonal`] — shared basis + per-adapter diagonal |
+//! | LoRAQuant | [`crate::loraquant`] (the paper's method) |
+
+pub mod billm;
+pub mod flat;
+pub mod gptq;
+pub mod jd;
+pub mod pbllm;
+
+pub use billm::BiLlm;
+pub use flat::{FlatKind, FlatQuantizer};
+pub use gptq::Gptq;
+pub use jd::JdDiagonal;
+pub use pbllm::PbLlm;
+
+use crate::tensor::Matrix;
+
+/// A compressed adapter pair that can be dequantized back to a delta.
+pub trait CompressedPair: std::fmt::Debug {
+    /// Dequantized `ΔW = B̂ Â` (m×n).
+    fn dequant_delta(&self) -> Matrix;
+    /// Eq. 10 numerator (bits), including scales/zero-points/indicators.
+    fn storage_bits(&self) -> u64;
+    /// Original LoRA parameter count `r(m+n)`.
+    fn param_count(&self) -> usize;
+    /// Average bits per original parameter.
+    fn avg_bits(&self) -> f64 {
+        self.storage_bits() as f64 / self.param_count() as f64
+    }
+}
+
+/// A baseline quantization method over one adapter pair.
+pub trait Quantizer {
+    /// Human-readable method name (Table 1 row label).
+    fn name(&self) -> String;
+    /// Compress one adapter pair. `calib` is the per-site input-activation
+    /// sample (rows = tokens) used by Hessian-based methods; identity
+    /// statistics are assumed when absent.
+    fn quantize(&self, b: &Matrix, a: &Matrix, calib: Option<&Matrix>) -> Box<dyn CompressedPair>;
+}

@@ -1,0 +1,171 @@
+//! PB-LLM (Shang et al., 2024) applied to LoRA factors (Table 1 row 7).
+//!
+//! Partially-binarized quantization: the top `salient_frac` of weights **by
+//! magnitude** keep an 8-bit RTN representation, the rest are sign-binarized
+//! group-wise. Because salient weights are scattered, every weight carries a
+//! 1-bit membership indicator — the overhead the paper criticizes
+//! (Table 1 shows 2.83 avg bits at 10% salient).
+
+use super::{CompressedPair, Quantizer};
+use crate::quant::{rtn_dequant, rtn_quant, SCALE_BITS};
+use crate::tensor::{matmul, Matrix};
+
+/// PB-LLM configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PbLlm {
+    /// Fraction of weights kept at `salient_bits` (paper setup: 0.1).
+    pub salient_frac: f32,
+    /// Bitwidth of salient weights (8-bit RTN).
+    pub salient_bits: u32,
+    pub group: usize,
+}
+
+impl Default for PbLlm {
+    fn default() -> Self {
+        Self { salient_frac: 0.1, salient_bits: 8, group: 128 }
+    }
+}
+
+/// One PB-LLM-compressed factor.
+#[derive(Debug)]
+struct PbFactor {
+    deq: Matrix,
+    bits: u64,
+}
+
+fn compress_factor(w: &Matrix, cfg: &PbLlm) -> PbFactor {
+    let (rows, cols) = w.shape();
+    let count = rows * cols;
+    // global magnitude threshold for saliency
+    let mut mags: Vec<f32> = w.data().iter().map(|v| v.abs()).collect();
+    let k = ((count as f32 * cfg.salient_frac) as usize).min(count.saturating_sub(1));
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let thresh = if k == 0 { f32::INFINITY } else { mags[k - 1] };
+
+    let mut deq = Matrix::zeros(rows, cols);
+    let mut n_salient = 0usize;
+    let gpr = cols.div_ceil(cfg.group);
+    // Salient weights: 8-bit RTN over the salient set per row-group;
+    // non-salient: sign-binarized with L1 scale over the non-salient set.
+    for i in 0..rows {
+        for g in 0..gpr {
+            let lo_j = g * cfg.group;
+            let hi_j = ((g + 1) * cfg.group).min(cols);
+            // partition the group
+            let mut sal: Vec<(usize, f32)> = Vec::new();
+            let mut rest: Vec<(usize, f32)> = Vec::new();
+            for j in lo_j..hi_j {
+                let v = w.at(i, j);
+                if v.abs() >= thresh {
+                    sal.push((j, v));
+                } else {
+                    rest.push((j, v));
+                }
+            }
+            n_salient += sal.len();
+            if !sal.is_empty() {
+                let vals: Vec<f32> = sal.iter().map(|&(_, v)| v).collect();
+                let m = Matrix::from_vec(1, vals.len(), vals);
+                let dq = rtn_dequant(&rtn_quant(&m, cfg.salient_bits, cfg.group));
+                for (t, &(j, _)) in sal.iter().enumerate() {
+                    deq.set(i, j, dq.at(0, t));
+                }
+            }
+            if !rest.is_empty() {
+                let s = rest.iter().map(|&(_, v)| v.abs()).sum::<f32>() / rest.len() as f32;
+                for &(j, v) in &rest {
+                    deq.set(i, j, if v >= 0.0 { s } else { -s });
+                }
+            }
+        }
+    }
+    // Eq. 10 accounting: 1 indicator/weight + 1 bit per binarized weight +
+    // salient_bits per salient + per-group: one binary scale (fp16) and one
+    // RTN scale+zero (fp16 + salient_bits).
+    let groups = (rows * gpr) as u64;
+    let bits = count as u64 // indicators
+        + (count - n_salient) as u64
+        + n_salient as u64 * cfg.salient_bits as u64
+        + groups * SCALE_BITS
+        + groups * (SCALE_BITS + cfg.salient_bits as u64);
+    PbFactor { deq, bits }
+}
+
+/// Compressed pair produced by [`PbLlm`].
+#[derive(Debug)]
+pub struct PbCompressed {
+    b: PbFactor,
+    a: PbFactor,
+    params: usize,
+}
+
+impl CompressedPair for PbCompressed {
+    fn dequant_delta(&self) -> Matrix {
+        matmul(&self.b.deq.transpose(), &self.a.deq)
+    }
+
+    fn storage_bits(&self) -> u64 {
+        self.b.bits + self.a.bits
+    }
+
+    fn param_count(&self) -> usize {
+        self.params
+    }
+}
+
+impl Quantizer for PbLlm {
+    fn name(&self) -> String {
+        "PBLLM".to_string()
+    }
+
+    fn quantize(&self, b: &Matrix, a: &Matrix, _calib: Option<&Matrix>) -> Box<dyn CompressedPair> {
+        // B compressed column-wise (transposed) so groups/saliency run
+        // along the long m axis — see DESIGN.md §7.
+        Box::new(PbCompressed {
+            b: compress_factor(&b.transpose(), self),
+            a: compress_factor(a, self),
+            params: b.len() + a.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::FlatQuantizer;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn beats_pure_binarization() {
+        let mut rng = Rng::new(111);
+        let (b, a) = rng.lora_pair(64, 128, 16, 0.7);
+        let ba = matmul(&b, &a);
+        let e_pb = PbLlm::default().quantize(&b, &a, None).dequant_delta().rel_err(&ba);
+        let e_bin = FlatQuantizer::bin(128).quantize(&b, &a, None).dequant_delta().rel_err(&ba);
+        assert!(e_pb < e_bin, "pbllm {e_pb} vs bin {e_bin}");
+    }
+
+    #[test]
+    fn avg_bits_in_paper_range() {
+        let mut rng = Rng::new(112);
+        let (b, a) = rng.lora_pair(128, 128, 16, 0.7);
+        let q = PbLlm::default().quantize(&b, &a, None);
+        // paper reports 2.83 for this setup; 16-row LoRA factors pay extra
+        // per-group scale overhead (DESIGN.md §7)
+        assert!(
+            (q.avg_bits() - 2.9).abs() < 0.3,
+            "avg bits {} should be ~2.83-3.0",
+            q.avg_bits()
+        );
+    }
+
+    #[test]
+    fn salient_zero_frac_degenerates_to_binary_plus_indicator() {
+        let mut rng = Rng::new(113);
+        let (b, a) = rng.lora_pair(32, 64, 8, 0.7);
+        let cfg = PbLlm { salient_frac: 0.0, ..Default::default() };
+        let q = cfg.quantize(&b, &a, None);
+        let e_bin = FlatQuantizer::bin(128).quantize(&b, &a, None).dequant_delta();
+        assert!(q.dequant_delta().sub(&e_bin).fro_norm() < 1e-5);
+    }
+}

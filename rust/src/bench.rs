@@ -1,0 +1,121 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this
+//! module: warmup, timed iterations, mean/p50/p99, and a uniform
+//! row-printing helper for the paper-table benches.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Items/second at `items` per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p99  ({} iters)",
+            self.name, self.mean, self.p50, self.p99, self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let sum: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: sum / iters as u32,
+        p50: samples[iters / 2],
+        p99: samples[(iters * 99 / 100).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Auto-calibrated: picks an iteration count that fits the time budget.
+pub fn bench_for<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // one probe run to estimate cost
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let probe = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = ((budget.as_secs_f64() / probe.as_secs_f64()) as usize).clamp(3, 10_000);
+    bench(name, iters.div_ceil(10), iters, f)
+}
+
+/// Fixed-width table printer for the paper-reproduction benches.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(widths: &[usize]) -> Self {
+        Self { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) -> String {
+        let mut out = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            out.push_str(&format!("{c:<w$} "));
+        }
+        out.trim_end().to_string()
+    }
+
+    pub fn sep(&self) -> String {
+        self.widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_quantiles() {
+        let r = bench("noop", 2, 50, || 1 + 1);
+        assert_eq!(r.iters, 50);
+        assert!(r.min <= r.p50 && r.p50 <= r.p99);
+        assert!(r.throughput(1.0) > 0.0);
+    }
+
+    #[test]
+    fn bench_for_calibrates() {
+        let r = bench_for("sleepless", Duration::from_millis(5), || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = Table::new(&[8, 6]);
+        let row = t.row(&["abc".into(), "1.23".into()]);
+        assert!(row.starts_with("abc"));
+        assert!(row.len() >= 12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Key-value configuration files (serde is unavailable offline, so the
+//! format is a minimal, typed `key = value` dialect with `#` comments and
+//! `[section]` headers flattened to `section.key`).
+//!
+//! ```text
+//! # serving config
+//! model = tiny-llama-s
+//! [batcher]
+//! bucket = 8
+//! max_wait_ms = 10
+//! ```
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+/// Parsed configuration: flattened dotted keys → raw string values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(s) = line.strip_prefix('[') {
+                let s = s.strip_suffix(']').with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = s.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if values.insert(key.clone(), v.trim().to_string()).is_some() {
+                bail!("line {}: duplicate key {key}", lineno + 1);
+            }
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Merge CLI-style `key=value` overrides on top.
+    pub fn with_overrides(mut self, overrides: &[(String, String)]) -> Self {
+        for (k, v) in overrides {
+            self.values.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}: bad usize '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}: bad float '{v}'")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => bail!("{key}: bad bool '{v}'"),
+        }
+    }
+
+    pub fn duration_ms_or(&self, key: &str, default_ms: u64) -> anyhow::Result<Duration> {
+        Ok(Duration::from_millis(self.usize_or(key, default_ms as usize)? as u64))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_comments_types() {
+        let cfg = Config::parse(
+            "# top\nmodel = tiny-llama-s\n[batcher]\nbucket = 8 # inline\nmax_wait_ms = 10\n[flags]\nfast = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.str_or("model", ""), "tiny-llama-s");
+        assert_eq!(cfg.usize_or("batcher.bucket", 0).unwrap(), 8);
+        assert_eq!(cfg.duration_ms_or("batcher.max_wait_ms", 0).unwrap(), Duration::from_millis(10));
+        assert!(cfg.bool_or("flags.fast", false).unwrap());
+        assert_eq!(cfg.usize_or("missing", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+        assert!(Config::parse("no equals sign").is_err());
+        assert!(Config::parse("[unclosed").is_err());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let cfg = Config::parse("a = 1").unwrap().with_overrides(&[("a".into(), "2".into())]);
+        assert_eq!(cfg.usize_or("a", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_typed_values_error() {
+        let cfg = Config::parse("x = notanum").unwrap();
+        assert!(cfg.usize_or("x", 0).is_err());
+        assert!(cfg.bool_or("x", false).is_err());
+    }
+}

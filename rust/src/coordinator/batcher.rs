@@ -1,0 +1,200 @@
+//! Adapter-grouped dynamic batching.
+//!
+//! All requests in a batch must share one adapter (they execute against one
+//! merged weight set — the S-LoRA batching model restated for merged
+//! serving). A batch is released when it reaches the bucket size, or when
+//! its oldest request has waited `max_wait`; adapters are drained in
+//! oldest-request-first order (no tenant starves).
+
+use crate::coordinator::registry::AdapterId;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Target batch size (must equal a compiled batch bucket).
+    pub bucket: usize,
+    /// Maximum time the oldest request may wait before a partial batch is
+    /// released.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { bucket: 8, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// A queued request (payload opaque to the batcher).
+#[derive(Debug)]
+pub struct PendingRequest<T> {
+    pub adapter: AdapterId,
+    pub enqueued: Instant,
+    pub payload: T,
+}
+
+/// A released batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub adapter: AdapterId,
+    pub requests: Vec<PendingRequest<T>>,
+}
+
+/// The dynamic batcher. Pure data structure — driven by the server loop,
+/// fully unit-testable without threads.
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    cfg: BatcherConfig,
+    queues: BTreeMap<AdapterId, VecDeque<PendingRequest<T>>>,
+    pending: usize,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, queues: BTreeMap::new(), pending: 0 }
+    }
+
+    /// Enqueue a request.
+    pub fn push(&mut self, req: PendingRequest<T>) {
+        self.queues.entry(req.adapter).or_default().push_back(req);
+        self.pending += 1;
+    }
+
+    /// Number of queued requests.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Pop the next releasable batch at time `now`:
+    /// 1. any adapter with ≥ bucket requests (oldest such first), else
+    /// 2. the adapter whose oldest request exceeded `max_wait`.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch<T>> {
+        // full batches first, choosing the adapter with the oldest head
+        let full = self
+            .queues
+            .iter()
+            .filter(|(_, q)| q.len() >= self.cfg.bucket)
+            .min_by_key(|(_, q)| q.front().map(|r| r.enqueued).unwrap())
+            .map(|(&id, _)| id);
+        if let Some(id) = full {
+            return Some(self.drain(id));
+        }
+        let expired = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                q.front().is_some_and(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+            })
+            .min_by_key(|(_, q)| q.front().map(|r| r.enqueued).unwrap())
+            .map(|(&id, _)| id);
+        expired.map(|id| self.drain(id))
+    }
+
+    /// Time until the oldest queued request expires (drives the server's
+    /// `recv_timeout`); `None` when idle.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|r| {
+                let waited = now.duration_since(r.enqueued);
+                self.cfg.max_wait.saturating_sub(waited)
+            })
+            .min()
+    }
+
+    fn drain(&mut self, id: AdapterId) -> Batch<T> {
+        let q = self.queues.get_mut(&id).expect("drain of empty adapter queue");
+        let take = q.len().min(self.cfg.bucket);
+        let requests: Vec<_> = q.drain(..take).collect();
+        self.pending -= requests.len();
+        if q.is_empty() {
+            self.queues.remove(&id);
+        }
+        Batch { adapter: id, requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(adapter: AdapterId, t: Instant) -> PendingRequest<u32> {
+        PendingRequest { adapter, enqueued: t, payload: 0 }
+    }
+
+    #[test]
+    fn releases_full_bucket_immediately() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 3, max_wait: Duration::from_secs(9) });
+        for _ in 0..3 {
+            b.push(req(7, t0));
+        }
+        let batch = b.pop_ready(t0).expect("full bucket must release");
+        assert_eq!(batch.adapter, 7);
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_until_deadline() {
+        let t0 = Instant::now();
+        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10) };
+        let mut b = DynamicBatcher::new(cfg);
+        b.push(req(1, t0));
+        assert!(b.pop_ready(t0).is_none(), "fresh partial batch must wait");
+        let later = t0 + Duration::from_millis(11);
+        let batch = b.pop_ready(later).expect("expired partial batch must release");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn batches_never_mix_adapters() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 2, max_wait: Duration::ZERO });
+        b.push(req(1, t0));
+        b.push(req(2, t0));
+        b.push(req(1, t0));
+        let mut seen = Vec::new();
+        while let Some(batch) = b.pop_ready(t0 + Duration::from_millis(1)) {
+            assert!(batch.requests.iter().all(|r| r.adapter == batch.adapter));
+            seen.push((batch.adapter, batch.requests.len()));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn oldest_head_served_first() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 1, max_wait: Duration::ZERO });
+        b.push(req(5, t0 + Duration::from_millis(2)));
+        b.push(req(3, t0)); // older head
+        let batch = b.pop_ready(t0 + Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.adapter, 3);
+    }
+
+    #[test]
+    fn deadline_reflects_oldest() {
+        let t0 = Instant::now();
+        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(20) };
+        let mut b = DynamicBatcher::new(cfg);
+        assert!(b.next_deadline(t0).is_none());
+        b.push(req(1, t0));
+        let d = b.next_deadline(t0 + Duration::from_millis(5)).unwrap();
+        assert!(d <= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn drain_caps_at_bucket() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 2, max_wait: Duration::ZERO });
+        for _ in 0..5 {
+            b.push(req(1, t0));
+        }
+        let batch = b.pop_ready(t0).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 3);
+    }
+}

@@ -1,0 +1,190 @@
+//! Byte-budgeted LRU cache for merged, device-resident adapter weights.
+//!
+//! Dequantize + merge + upload costs milliseconds; under a Zipf-skewed
+//! multi-tenant workload the hot adapters should pay it once. The budget
+//! bounds device memory: when inserting would exceed it, the
+//! least-recently-used entries are evicted (never the entry being
+//! inserted, even if it alone exceeds the budget — a request must be able
+//! to run).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// LRU statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A byte-budgeted LRU keyed by `K`; values report their size via the
+/// closure passed at construction.
+pub struct LruCache<K, V> {
+    budget_bytes: usize,
+    used_bytes: usize,
+    clock: u64,
+    entries: HashMap<K, (V, usize, u64)>, // value, bytes, last-used
+    stats: CacheStats,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// Create with a byte budget.
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            budget_bytes,
+            used_bytes: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Look up, refreshing recency. Counts a hit/miss.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.clock += 1;
+        match self.entries.get_mut(k) {
+            Some((v, _, used)) => {
+                *used = self.clock;
+                self.stats.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without touching recency or stats.
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.entries.get(k).map(|(v, _, _)| v)
+    }
+
+    /// Insert, evicting LRU entries until within budget. The inserted
+    /// entry itself is never evicted.
+    pub fn insert(&mut self, k: K, v: V, bytes: usize) {
+        self.clock += 1;
+        if let Some((_, old_bytes, _)) = self.entries.remove(&k) {
+            self.used_bytes -= old_bytes;
+        }
+        self.used_bytes += bytes;
+        self.entries.insert(k.clone(), (v, bytes, self.clock));
+        while self.used_bytes > self.budget_bytes && self.entries.len() > 1 {
+            // find LRU other than k
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(key, _)| **key != k)
+                .min_by_key(|(_, (_, _, used))| *used)
+                .map(|(key, _)| key.clone());
+            match victim {
+                Some(vk) => {
+                    if let Some((_, b, _)) = self.entries.remove(&vk) {
+                        self.used_bytes -= b;
+                        self.stats.evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Remove an entry explicitly (e.g. adapter unregistered).
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        self.entries.remove(k).map(|(v, b, _)| {
+            self.used_bytes -= b;
+            v
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c: LruCache<u32, String> = LruCache::new(100);
+        assert!(c.get(&1).is_none());
+        c.insert(1, "a".into(), 10);
+        assert_eq!(c.get(&1), Some(&"a".to_string()));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_lru_when_over_budget() {
+        let mut c: LruCache<u32, u32> = LruCache::new(30);
+        c.insert(1, 10, 10);
+        c.insert(2, 20, 10);
+        c.insert(3, 30, 10);
+        // touch 1 so 2 becomes LRU
+        c.get(&1);
+        c.insert(4, 40, 10);
+        assert!(c.peek(&2).is_none(), "2 was LRU and must be evicted");
+        assert!(c.peek(&1).is_some());
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.used_bytes() <= 30);
+    }
+
+    #[test]
+    fn oversized_entry_survives() {
+        let mut c: LruCache<u32, u32> = LruCache::new(5);
+        c.insert(1, 1, 50);
+        assert!(c.peek(&1).is_some(), "sole entry must never be evicted");
+        c.insert(2, 2, 50);
+        assert!(c.peek(&2).is_some());
+        assert_eq!(c.len(), 1, "previous entry evicted to make room");
+    }
+
+    #[test]
+    fn reinsert_updates_bytes() {
+        let mut c: LruCache<u32, u32> = LruCache::new(100);
+        c.insert(1, 1, 40);
+        c.insert(1, 2, 10);
+        assert_eq!(c.used_bytes(), 10);
+        assert_eq!(c.peek(&1), Some(&2));
+    }
+
+    #[test]
+    fn remove_releases_bytes() {
+        let mut c: LruCache<u32, u32> = LruCache::new(100);
+        c.insert(1, 1, 40);
+        assert_eq!(c.remove(&1), Some(1));
+        assert_eq!(c.used_bytes(), 0);
+        assert_eq!(c.remove(&1), None);
+    }
+}

@@ -1,0 +1,145 @@
+//! Serving metrics: log-scale latency histogram + throughput counters.
+
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (1µs … ~17min, 2× buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>, // bucket i: [2^i, 2^{i+1}) microseconds
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 30], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Aggregate serving metrics (owned by the server loop; snapshot on read).
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub e2e_latency: Option<Histogram>,
+    pub exec_latency: Option<Histogram>,
+    pub merge_latency: Option<Histogram>,
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens_generated: u64,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self {
+            e2e_latency: Some(Histogram::new()),
+            exec_latency: Some(Histogram::new()),
+            merge_latency: Some(Histogram::new()),
+            ..Default::default()
+        }
+    }
+
+    /// Mean batch occupancy.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        let e2e = self.e2e_latency.as_ref().unwrap();
+        format!(
+            "requests={} batches={} mean_batch={:.2} p50={:?} p95={:?} p99={:?} mean={:?}",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            e2e.quantile(0.5),
+            e2e.quantile(0.95),
+            e2e.quantile(0.99),
+            e2e.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(h.mean() >= Duration::from_micros(400));
+        assert!(h.max() >= Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn batch_occupancy() {
+        let mut m = ServerMetrics::new();
+        m.requests = 10;
+        m.batches = 4;
+        assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
+    }
+}

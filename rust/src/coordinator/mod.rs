@@ -1,0 +1,26 @@
+//! L3 coordinator: the multi-LoRA serving system around the quantization
+//! pipeline (the deployment context of the paper's §1/App. D: one frozen
+//! base model, many task-/user-specific adapters resident simultaneously).
+//!
+//! * [`registry`] — adapter store: LoRAQuant-compressed (or FP16) adapters
+//!   at rest, with exact byte/bit accounting (the Fig. 6 memory axis).
+//! * [`cache`] — byte-budgeted LRU of **merged, device-resident** weights:
+//!   dequantize + merge happens once per adapter activation, then requests
+//!   hit device buffers.
+//! * [`batcher`] — adapter-grouped dynamic batching with a max-wait
+//!   deadline (S-LoRA-style: a batch shares one merged weight set).
+//! * [`server`] — thread-confined PJRT executor behind an mpsc request
+//!   loop; callers hold a cloneable, `Send` handle.
+//! * [`metrics`] — latency histogram + counters.
+
+pub mod batcher;
+pub mod cache;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
+pub use cache::LruCache;
+pub use metrics::{Histogram, ServerMetrics};
+pub use registry::{AdapterId, AdapterRegistry, StoredAdapter};
+pub use server::{Coordinator, CoordinatorConfig, GenRequest, GenResponse};

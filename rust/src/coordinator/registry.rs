@@ -1,0 +1,165 @@
+//! Adapter registry: the at-rest store of every adapter the deployment
+//! serves. LoRAQuant-compressed adapters stay packed until activated.
+
+use crate::adapter::LoraAdapter;
+use crate::loraquant::QuantizedLora;
+use std::collections::BTreeMap;
+
+/// Registry key for one adapter (tenant/task).
+pub type AdapterId = u32;
+
+/// An adapter at rest.
+#[derive(Debug, Clone)]
+pub enum StoredAdapter {
+    /// Uncompressed FP16 baseline (2 bytes/param).
+    Fp16(LoraAdapter),
+    /// LoRAQuant-packed.
+    Quantized(QuantizedLora),
+}
+
+impl StoredAdapter {
+    /// Resident bytes at rest.
+    pub fn bytes(&self) -> usize {
+        match self {
+            StoredAdapter::Fp16(a) => a.fp16_bytes(),
+            StoredAdapter::Quantized(q) => q.packed_bytes(),
+        }
+    }
+
+    /// Average bits per original parameter (Eq. 10; 16 for FP16).
+    pub fn avg_bits(&self) -> f64 {
+        match self {
+            StoredAdapter::Fp16(_) => 16.0,
+            StoredAdapter::Quantized(q) => q.avg_bits(),
+        }
+    }
+
+    /// Per-site deltas `ΔW = B A` (dequantizing if packed).
+    pub fn deltas(&self) -> BTreeMap<String, crate::tensor::Matrix> {
+        match self {
+            StoredAdapter::Fp16(a) => crate::model::merge::fp_deltas(a),
+            StoredAdapter::Quantized(q) => crate::model::merge::quant_deltas(q),
+        }
+    }
+}
+
+/// Entry metadata kept alongside the adapter.
+#[derive(Debug, Clone)]
+pub struct RegistryEntry {
+    pub adapter: StoredAdapter,
+    /// Which eval task this adapter serves (used by examples/benches).
+    pub task: String,
+}
+
+/// The adapter store.
+#[derive(Debug, Default)]
+pub struct AdapterRegistry {
+    entries: BTreeMap<AdapterId, RegistryEntry>,
+    next_id: AdapterId,
+}
+
+impl AdapterRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an adapter; returns its id.
+    pub fn register(&mut self, adapter: StoredAdapter, task: impl Into<String>) -> AdapterId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.entries.insert(id, RegistryEntry { adapter, task: task.into() });
+        id
+    }
+
+    /// Remove an adapter (returns whether it existed).
+    pub fn remove(&mut self, id: AdapterId) -> bool {
+        self.entries.remove(&id).is_some()
+    }
+
+    pub fn get(&self, id: AdapterId) -> Option<&RegistryEntry> {
+        self.entries.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn ids(&self) -> Vec<AdapterId> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// Total at-rest bytes across all adapters (Fig. 6 y-axis).
+    pub fn total_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.adapter.bytes()).sum()
+    }
+
+    /// Mean avg-bits across adapters.
+    pub fn mean_avg_bits(&self) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        self.entries.values().map(|e| e.adapter.avg_bits()).sum::<f64>() / self.entries.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
+    use crate::testutil::Rng;
+
+    fn quantized(rng: &mut Rng) -> StoredAdapter {
+        let (b, a) = rng.lora_pair(64, 64, 8, 0.7);
+        let mut q = QuantizedLora::default();
+        q.sites.insert("l0.wq".into(), quantize_site(&b, &a, &LoraQuantConfig::default()));
+        StoredAdapter::Quantized(q)
+    }
+
+    #[test]
+    fn register_get_remove() {
+        let mut rng = Rng::new(141);
+        let mut reg = AdapterRegistry::new();
+        let id0 = reg.register(quantized(&mut rng), "modadd");
+        let id1 = reg.register(quantized(&mut rng), "keyword");
+        assert_ne!(id0, id1);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get(id0).unwrap().task, "modadd");
+        assert!(reg.remove(id0));
+        assert!(!reg.remove(id0));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn quantized_is_smaller_at_rest() {
+        let mut rng = Rng::new(142);
+        let (b, a) = rng.lora_pair(64, 64, 8, 0.7);
+        let fp = {
+            let mut ad = LoraAdapter::default();
+            ad.sites.insert("l0.wq".into(), (a.clone(), b.clone()));
+            StoredAdapter::Fp16(ad)
+        };
+        let mut rng2 = Rng::new(142);
+        let q = quantized(&mut rng2);
+        assert!(q.bytes() * 4 < fp.bytes(), "quant {} vs fp16 {}", q.bytes(), fp.bytes());
+        assert!(q.avg_bits() < 2.5);
+        assert_eq!(fp.avg_bits(), 16.0);
+    }
+
+    #[test]
+    fn total_bytes_accumulates() {
+        let mut rng = Rng::new(143);
+        let mut reg = AdapterRegistry::new();
+        let a1 = quantized(&mut rng);
+        let unit = a1.bytes();
+        reg.register(a1, "t");
+        let before = reg.total_bytes();
+        assert_eq!(before, unit);
+        let mut rng2 = Rng::new(144);
+        reg.register(quantized(&mut rng2), "t");
+        assert_eq!(reg.total_bytes(), before * 2);
+    }
+}

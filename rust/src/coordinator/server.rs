@@ -1,0 +1,354 @@
+//! The serving loop: a thread-confined PJRT executor behind an mpsc
+//! request channel.
+//!
+//! PJRT objects are not `Send`, so ONE executor thread owns the
+//! [`Engine`], the adapter registry, and the merged-weight cache; callers
+//! hold a cloneable [`Coordinator`] handle. The loop:
+//!
+//! ```text
+//! recv_timeout(batcher deadline) → enqueue
+//! pop_ready batches → ensure merged weights cached (dequant+merge+upload
+//!   on miss) → batched greedy decode → respond per request
+//! ```
+
+use super::batcher::{BatcherConfig, DynamicBatcher, PendingRequest};
+use super::cache::{CacheStats, LruCache};
+use super::metrics::ServerMetrics;
+use super::registry::{AdapterId, AdapterRegistry, StoredAdapter};
+use crate::eval::tasks::TOKENS;
+use crate::model::{merge_adapter, BaseWeights};
+use crate::runtime::{DeviceWeights, Engine};
+use anyhow::{bail, Context};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    /// Model name (artifact prefix + weights subdirectory).
+    pub model: String,
+    /// Batch bucket (a compiled batch size; aot.py exports 1 and 8).
+    pub bucket: usize,
+    /// Dynamic batching max wait.
+    pub max_wait: Duration,
+    /// Merged-weight cache budget in bytes.
+    pub cache_budget_bytes: usize,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, model: impl Into<String>) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            model: model.into(),
+            bucket: 8,
+            max_wait: Duration::from_millis(10),
+            cache_budget_bytes: 64 << 20,
+        }
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub adapter: AdapterId,
+    /// Prompt tokens `[BOS, …, SEP]` (unpadded).
+    pub prompt: Vec<i32>,
+    /// Maximum new tokens (generation also stops at EOS).
+    pub max_new: usize,
+}
+
+/// A generation response.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    /// Generated tokens (EOS stripped).
+    pub tokens: Vec<i32>,
+    /// End-to-end latency (enqueue → response).
+    pub e2e: Duration,
+}
+
+type Responder = mpsc::Sender<anyhow::Result<GenResponse>>;
+
+enum Msg {
+    Gen(GenRequest, Responder),
+    Register(Box<StoredAdapter>, String, mpsc::Sender<AdapterId>),
+    Remove(AdapterId, mpsc::Sender<bool>),
+    Metrics(mpsc::Sender<(ServerMetrics, CacheStats, usize)>),
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the serving loop.
+#[derive(Clone)]
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl Coordinator {
+    /// Start the executor thread: loads base weights + the fwd program for
+    /// the configured bucket, then serves until [`Coordinator::shutdown`].
+    /// Returns (handle, join-handle).
+    pub fn start(cfg: CoordinatorConfig) -> anyhow::Result<(Self, std::thread::JoinHandle<()>)> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("lq-executor".into())
+            .spawn(move || executor_main(cfg, rx, ready_tx))
+            .context("spawning executor thread")?;
+        ready_rx.recv().context("executor thread died during startup")??;
+        Ok((Self { tx }, join))
+    }
+
+    /// Submit a request and return a receiver for its response.
+    pub fn generate_async(
+        &self,
+        req: GenRequest,
+    ) -> mpsc::Receiver<anyhow::Result<GenResponse>> {
+        let (tx, rx) = mpsc::channel();
+        // send failure surfaces as a dropped responder → RecvError
+        let _ = self.tx.send(Msg::Gen(req, tx));
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn generate(&self, req: GenRequest) -> anyhow::Result<GenResponse> {
+        self.generate_async(req).recv().context("executor gone")?
+    }
+
+    /// Register an adapter (quantized or FP16) for a task.
+    pub fn register_adapter(
+        &self,
+        adapter: StoredAdapter,
+        task: impl Into<String>,
+    ) -> anyhow::Result<AdapterId> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Register(Box::new(adapter), task.into(), tx))
+            .ok()
+            .context("executor gone")?;
+        rx.recv().context("executor gone")
+    }
+
+    /// Remove an adapter.
+    pub fn remove_adapter(&self, id: AdapterId) -> anyhow::Result<bool> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Remove(id, tx)).ok().context("executor gone")?;
+        rx.recv().context("executor gone")
+    }
+
+    /// Snapshot (metrics, cache stats, registry size).
+    pub fn metrics(&self) -> anyhow::Result<(ServerMetrics, CacheStats, usize)> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Metrics(tx)).ok().context("executor gone")?;
+        rx.recv().context("executor gone")
+    }
+
+    /// Stop the executor loop (in-flight requests finish first).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+struct Executor {
+    engine: Engine,
+    base: BaseWeights,
+    prog: String,
+    bucket: usize,
+    registry: AdapterRegistry,
+    cache: LruCache<AdapterId, DeviceWeights>,
+    metrics: ServerMetrics,
+}
+
+fn executor_main(
+    cfg: CoordinatorConfig,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+) {
+    let mut exec = match Executor::new(&cfg) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    // payload carries the request plus its responder
+    let mut batcher: DynamicBatcher<(GenRequest, Responder)> =
+        DynamicBatcher::new(BatcherConfig { bucket: cfg.bucket, max_wait: cfg.max_wait });
+
+    loop {
+        let now = Instant::now();
+        let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Gen(req, resp)) => {
+                let adapter = req.adapter;
+                if exec.registry.get(adapter).is_none() {
+                    let _ = resp.send(Err(anyhow::anyhow!("unknown adapter {adapter}")));
+                } else {
+                    batcher.push(PendingRequest {
+                        adapter,
+                        enqueued: Instant::now(),
+                        payload: (req, resp),
+                    });
+                }
+            }
+            Ok(Msg::Register(adapter, task, tx)) => {
+                let _ = tx.send(exec.registry.register(*adapter, task));
+            }
+            Ok(Msg::Remove(id, tx)) => {
+                exec.cache.remove(&id);
+                let _ = tx.send(exec.registry.remove(id));
+            }
+            Ok(Msg::Metrics(tx)) => {
+                let _ = tx.send((exec.metrics.clone(), exec.cache.stats(), exec.registry.len()));
+            }
+            Ok(Msg::Shutdown) => {
+                // flush remaining batches before exiting
+                while let Some(batch) = batcher.pop_ready(Instant::now() + Duration::from_secs(3600))
+                {
+                    exec.run_batch(batch.adapter, batch.requests);
+                }
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+        let now = Instant::now();
+        while let Some(batch) = batcher.pop_ready(now) {
+            exec.run_batch(batch.adapter, batch.requests);
+        }
+    }
+}
+
+impl Executor {
+    fn new(cfg: &CoordinatorConfig) -> anyhow::Result<Self> {
+        let base = BaseWeights::load(cfg.artifacts_dir.join(&cfg.model))?;
+        let mut engine = Engine::new(&cfg.artifacts_dir)?;
+        let n_params = base.cfg.param_names().len();
+        engine.load_model_fwd(&cfg.model, cfg.bucket, n_params)?;
+        Ok(Self {
+            engine,
+            prog: format!("{}/b{}", cfg.model, cfg.bucket),
+            bucket: cfg.bucket,
+            base,
+            registry: AdapterRegistry::new(),
+            cache: LruCache::new(cfg.cache_budget_bytes),
+            metrics: ServerMetrics::new(),
+        })
+    }
+
+    /// Dequantize + merge + upload on cache miss.
+    fn ensure_weights(&mut self, id: AdapterId) -> anyhow::Result<()> {
+        if self.cache.get(&id).is_some() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let entry = match self.registry.get(id) {
+            Some(e) => e,
+            None => bail!("adapter {id} vanished"),
+        };
+        let deltas = entry.adapter.deltas();
+        let merged = merge_adapter(&self.base, &deltas)?;
+        let dev = self.engine.upload_weights(&merged)?;
+        let bytes = dev.bytes();
+        self.cache.insert(id, dev, bytes);
+        if let Some(h) = self.metrics.merge_latency.as_mut() {
+            h.record(t0.elapsed());
+        }
+        Ok(())
+    }
+
+    fn run_batch(&mut self, adapter: AdapterId, requests: Vec<PendingRequest<(GenRequest, Responder)>>) {
+        if let Err(e) = self.ensure_weights(adapter) {
+            let msg = format!("{e:#}");
+            for r in requests {
+                let _ = r.payload.1.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            return;
+        }
+        match self.decode_batch(adapter, &requests) {
+            Ok(outputs) => {
+                let now = Instant::now();
+                for (r, tokens) in requests.into_iter().zip(outputs) {
+                    let e2e = now.duration_since(r.enqueued);
+                    if let Some(h) = self.metrics.e2e_latency.as_mut() {
+                        h.record(e2e);
+                    }
+                    self.metrics.requests += 1;
+                    self.metrics.tokens_generated += tokens.len() as u64;
+                    let _ = r.payload.1.send(Ok(GenResponse { tokens, e2e }));
+                }
+                self.metrics.batches += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in requests {
+                    let _ = r.payload.1.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
+    /// Lock-step batched greedy decode (same protocol as eval::decode).
+    fn decode_batch(
+        &mut self,
+        adapter: AdapterId,
+        requests: &[PendingRequest<(GenRequest, Responder)>],
+    ) -> anyhow::Result<Vec<Vec<i32>>> {
+        let t_len = self.base.cfg.seq_len;
+        let vocab = self.base.cfg.vocab;
+        let bsz = self.bucket;
+        let n = requests.len();
+        assert!(n <= bsz);
+        let mut seqs = vec![vec![TOKENS::PAD; t_len]; bsz];
+        let mut pos = vec![0usize; bsz];
+        let mut budget = vec![0usize; bsz];
+        for k in 0..bsz {
+            let req = &requests[k.min(n - 1)].payload.0;
+            let plen = req.prompt.len().min(t_len);
+            seqs[k][..plen].copy_from_slice(&req.prompt[..plen]);
+            pos[k] = plen;
+            budget[k] = req.max_new.min(t_len - plen);
+        }
+        let mut done = vec![false; bsz];
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); bsz];
+        let t_exec = Instant::now();
+        while !done.iter().all(|&d| d) {
+            let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+            let weights = self.cache.peek(&adapter).expect("weights ensured");
+            let logits = self.engine.forward(&self.prog, &flat, &[bsz, t_len], weights)?;
+            for k in 0..bsz {
+                if done[k] {
+                    continue;
+                }
+                if generated[k].len() >= budget[k] || pos[k] >= t_len {
+                    done[k] = true;
+                    continue;
+                }
+                let base = (k * t_len + pos[k] - 1) * vocab;
+                let row = &logits[base..base + vocab];
+                let mut best = 0usize;
+                for v in 1..vocab {
+                    if row[v] > row[best] {
+                        best = v;
+                    }
+                }
+                let tok = best as i32;
+                seqs[k][pos[k]] = tok;
+                pos[k] += 1;
+                if tok == TOKENS::EOS {
+                    done[k] = true;
+                } else {
+                    generated[k].push(tok);
+                }
+            }
+        }
+        if let Some(h) = self.metrics.exec_latency.as_mut() {
+            h.record(t_exec.elapsed());
+        }
+        generated.truncate(n);
+        Ok(generated)
+    }
+}

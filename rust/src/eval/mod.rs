@@ -1,0 +1,11 @@
+//! Task evaluation harness: eval-set loading, greedy decoding through the
+//! PJRT runtime, and the paper's metrics (exact match for math/code-style
+//! tasks, ROUGE-L for summarization-style tasks).
+
+pub mod decode;
+pub mod rouge;
+pub mod tasks;
+
+pub use decode::{evaluate, EvalOutcome};
+pub use rouge::rouge_l;
+pub use tasks::{EvalSet, TOKENS};

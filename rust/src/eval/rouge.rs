@@ -1,0 +1,70 @@
+//! ROUGE-L (Lin, 2004): LCS-based F-measure over token sequences — the
+//! paper's summarization metric.
+
+/// Longest common subsequence length (O(mn) DP, single row).
+pub fn lcs_len(a: &[i32], b: &[i32]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y { prev[j] + 1 } else { cur[j].max(prev[j + 1]) };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L F1 between a candidate and a reference (β = 1).
+pub fn rouge_l(candidate: &[i32], reference: &[i32]) -> f64 {
+    if candidate.is_empty() || reference.is_empty() {
+        return if candidate.is_empty() && reference.is_empty() { 1.0 } else { 0.0 };
+    }
+    let lcs = lcs_len(candidate, reference) as f64;
+    if lcs == 0.0 {
+        return 0.0;
+    }
+    let p = lcs / candidate.len() as f64;
+    let r = lcs / reference.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sequences() {
+        assert_eq!(rouge_l(&[1, 2, 3], &[1, 2, 3]), 1.0);
+    }
+
+    #[test]
+    fn disjoint_sequences() {
+        assert_eq!(rouge_l(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn known_lcs() {
+        // LCS("abcde", "ace") = 3
+        assert_eq!(lcs_len(&[1, 2, 3, 4, 5], &[1, 3, 5]), 3);
+        let f = rouge_l(&[1, 3, 5], &[1, 2, 3, 4, 5]);
+        // p = 1, r = 0.6 -> F1 = 0.75
+        assert!((f - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn order_sensitivity() {
+        // reversal destroys subsequence structure
+        let f = rouge_l(&[3, 2, 1], &[1, 2, 3]);
+        assert!(f < 0.5);
+    }
+
+    #[test]
+    fn empty_edge_cases() {
+        assert_eq!(rouge_l(&[], &[]), 1.0);
+        assert_eq!(rouge_l(&[], &[1]), 0.0);
+        assert_eq!(rouge_l(&[1], &[]), 0.0);
+    }
+}

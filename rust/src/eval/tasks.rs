@@ -1,0 +1,102 @@
+//! Synthetic task vocabulary + eval-set container (mirrors
+//! python/compile/tasks.py — token ids are a cross-layer contract).
+
+use crate::adapter::fmt::load_tensorfile;
+use anyhow::Context;
+use std::path::Path;
+
+/// Token id constants shared with python/compile/tasks.py.
+pub mod TOKENS {
+    #![allow(non_snake_case)]
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const EOS: i32 = 2;
+    pub const SEP: i32 = 3;
+    pub const MARK: i32 = 4;
+    pub const DIGIT0: i32 = 5;
+    pub const LETTER0: i32 = 15;
+    pub const OP0: i32 = 31;
+    pub const VOCAB: usize = 64;
+    pub const SEQ_LEN: usize = 32;
+}
+
+/// The task names of the evaluation grid, in paper column order
+/// (math, math-hard, code, summarization analogs).
+pub const TASKS: [&str; 4] = ["modadd", "modchain", "transform", "keyword"];
+
+/// A held-out eval set exported by train.py (`<task>.eval.bin`).
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    /// Prompts, padded to SEQ_LEN: `[BOS, prompt..., SEP, PAD...]`.
+    pub prompts: Vec<Vec<i32>>,
+    /// Prompt lengths (generation starts at this index).
+    pub plens: Vec<usize>,
+    /// Reference answers (unpadded).
+    pub refs: Vec<Vec<i32>>,
+    /// true ⇒ exact match; false ⇒ ROUGE-L.
+    pub exact: bool,
+}
+
+impl EvalSet {
+    /// Load from a tensorfile.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let t = load_tensorfile(&path)?;
+        let prompts_t = t.get("prompts").context("eval set missing prompts")?;
+        let n = prompts_t.dims[0];
+        let tlen = prompts_t.dims[1];
+        let flat = prompts_t.as_i32()?;
+        let prompts = (0..n).map(|i| flat[i * tlen..(i + 1) * tlen].to_vec()).collect();
+        let plens: Vec<usize> =
+            t["plens"].as_i32()?.iter().map(|&x| x as usize).collect();
+        let rflat = t["refs"].as_i32()?;
+        let rlen = t["refs"].dims[1];
+        let rlens: Vec<usize> = t["rlens"].as_i32()?.iter().map(|&x| x as usize).collect();
+        let refs = (0..n).map(|i| rflat[i * rlen..i * rlen + rlens[i]].to_vec()).collect();
+        let exact = t["exact"].as_i32()?[0] == 1;
+        Ok(Self { prompts, plens, refs, exact })
+    }
+
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+
+    /// Truncate to the first `n` examples (faster sweeps).
+    pub fn truncated(&self, n: usize) -> Self {
+        let n = n.min(self.len());
+        Self {
+            prompts: self.prompts[..n].to_vec(),
+            plens: self.plens[..n].to_vec(),
+            refs: self.refs[..n].to_vec(),
+            exact: self.exact,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::fmt::{save_tensorfile, Tensor};
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn load_roundtrip() {
+        let mut t = BTreeMap::new();
+        t.insert("prompts".into(), Tensor::i32(vec![2, 4], vec![1, 5, 3, 0, 1, 6, 3, 0]));
+        t.insert("plens".into(), Tensor::i32(vec![2], vec![3, 3]));
+        t.insert("refs".into(), Tensor::i32(vec![2, 4], vec![7, 0, 0, 0, 8, 9, 0, 0]));
+        t.insert("rlens".into(), Tensor::i32(vec![2], vec![1, 2]));
+        t.insert("exact".into(), Tensor::i32(vec![1], vec![1]));
+        let tmp = std::env::temp_dir().join("lq_eval_test.bin");
+        save_tensorfile(&tmp, &t).unwrap();
+        let es = EvalSet::load(&tmp).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es.refs[1], vec![8, 9]);
+        assert!(es.exact);
+        assert_eq!(es.truncated(1).len(), 1);
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,251 @@
+//! Experiment harness shared by the paper-reproduction benches
+//! (`rust/benches/bench_*.rs`) and the examples: loads the trained
+//! adapters + eval sets, applies any Table-1 method, and scores through
+//! the PJRT runtime.
+//!
+//! Environment knobs (so `cargo bench` stays fast by default):
+//! * `LQ_ARTIFACTS` — artifacts dir (default `artifacts`)
+//! * `LQ_MODELS`    — comma list (default: every model with artifacts)
+//! * `LQ_N`         — eval examples per cell (default 100; paper-full = 200)
+
+use crate::adapter::LoraAdapter;
+use crate::baselines::{BiLlm, FlatQuantizer, Gptq, JdDiagonal, PbLlm, Quantizer};
+use crate::eval::{evaluate, EvalSet};
+use crate::loraquant::{quantize_site, HSelect, LoraQuantConfig, LowMode, QuantizedLora};
+use crate::model::{merge_adapter, BaseWeights};
+use crate::runtime::Engine;
+use crate::tensor::Matrix;
+use anyhow::Context;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// The evaluation grid's task list (paper column order).
+pub const TASKS: [&str; 4] = ["modadd", "modchain", "transform", "keyword"];
+
+/// The three model substitutes (paper row blocks).
+pub const MODELS: [&str; 3] = ["tiny-llama-s", "tiny-llama-m", "tiny-mistral-s"];
+
+/// Env-configured harness settings.
+#[derive(Debug, Clone)]
+pub struct Settings {
+    pub artifacts: PathBuf,
+    pub models: Vec<String>,
+    pub eval_n: usize,
+}
+
+impl Settings {
+    /// Read from the environment, keeping only models whose artifacts exist.
+    pub fn from_env() -> Self {
+        let artifacts: PathBuf =
+            std::env::var("LQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()).into();
+        let models: Vec<String> = match std::env::var("LQ_MODELS") {
+            Ok(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            Err(_) => MODELS.iter().map(|s| s.to_string()).collect(),
+        };
+        let models = models
+            .into_iter()
+            .filter(|m| {
+                artifacts.join(m).join("base.bin").exists()
+                    && artifacts.join(format!("{m}.fwd.b8.hlo.txt")).exists()
+            })
+            .collect();
+        let eval_n = std::env::var("LQ_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+        Self { artifacts, models, eval_n }
+    }
+}
+
+/// Everything needed to evaluate one (model, task) cell.
+pub struct TaskData {
+    pub task: String,
+    pub lora: LoraAdapter,
+    /// Per-site calibration activations (GPTQ).
+    pub calib: BTreeMap<String, Matrix>,
+    pub eval: EvalSet,
+}
+
+/// One loaded model with its per-task data and a live engine.
+pub struct ModelCtx {
+    pub name: String,
+    pub base: BaseWeights,
+    pub engine: Engine,
+    pub bucket: usize,
+    pub tasks: Vec<TaskData>,
+}
+
+impl ModelCtx {
+    /// Load a model + all task adapters/eval sets and compile its fwd.
+    pub fn load(settings: &Settings, model: &str) -> anyhow::Result<Self> {
+        let dir = settings.artifacts.join(model);
+        let base = BaseWeights::load(&dir)?;
+        let mut engine = Engine::new(&settings.artifacts)?;
+        let bucket = 8;
+        engine.load_model_fwd(model, bucket, base.cfg.param_names().len())?;
+        let mut tasks = Vec::new();
+        for task in TASKS {
+            let lora_path = dir.join(format!("{task}.lora.bin"));
+            if !lora_path.exists() {
+                continue;
+            }
+            let lora = LoraAdapter::load(&lora_path)?;
+            let calib = load_calib(dir.join(format!("{task}.calib.bin")))?;
+            let eval = EvalSet::load(dir.join(format!("{task}.eval.bin")))?
+                .truncated(settings.eval_n);
+            tasks.push(TaskData { task: task.to_string(), lora, calib, eval });
+        }
+        Ok(Self { name: model.to_string(), base, engine, bucket, tasks })
+    }
+
+    /// Evaluate per-site deltas (merged into the base) on one task.
+    pub fn eval_deltas(
+        &self,
+        deltas: &BTreeMap<String, Matrix>,
+        eval: &EvalSet,
+    ) -> anyhow::Result<f64> {
+        let merged = merge_adapter(&self.base, deltas)?;
+        let weights = self.engine.upload_weights(&merged)?;
+        Ok(evaluate(&self.engine, &self.name, self.bucket, &self.base.cfg, &weights, eval)?.score)
+    }
+}
+
+fn load_calib(path: PathBuf) -> anyhow::Result<BTreeMap<String, Matrix>> {
+    let mut out = BTreeMap::new();
+    if !path.exists() {
+        return Ok(out);
+    }
+    for (name, t) in crate::adapter::fmt::load_tensorfile(&path)? {
+        let m = t.to_matrix().with_context(|| format!("calib {name}"))?;
+        out.insert(name, m);
+    }
+    Ok(out)
+}
+
+/// A Table-1 method row: name + a closure producing (deltas, avg_bits).
+pub enum Method {
+    Fp16,
+    Flat(FlatQuantizer),
+    Gptq(Gptq),
+    PbLlm(PbLlm),
+    BiLlm(BiLlm),
+    /// JD-Diagonal over the cluster of all task adapters of the model.
+    JdDiagonal,
+    LoraQuant(LoraQuantConfig),
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Fp16 => "FP16".into(),
+            Method::Flat(q) => q.name(),
+            Method::Gptq(q) => q.name(),
+            Method::PbLlm(q) => q.name(),
+            Method::BiLlm(q) => q.name(),
+            Method::JdDiagonal => "JD-Diagonal".into(),
+            Method::LoraQuant(cfg) => match cfg.hselect {
+                HSelect::Ratio(rho) => format!("LoRAQuant ({}@{rho})", cfg.bits_high),
+                HSelect::Static(h) => format!("LoRAQuant ({}@h={h})", cfg.bits_high),
+            },
+        }
+    }
+
+    /// The paper's Table 1 rows 1–12 (group 128, like the paper).
+    pub fn table1_rows() -> Vec<Method> {
+        vec![
+            Method::Fp16,
+            Method::Flat(FlatQuantizer::bin(128)),
+            Method::Flat(FlatQuantizer::rtn(1, 128)),
+            Method::JdDiagonal,
+            Method::Flat(FlatQuantizer::rtn(2, 128)),
+            Method::Gptq(Gptq::new(2, 128)),
+            Method::PbLlm(PbLlm::default()),
+            Method::BiLlm(BiLlm::default()),
+            Method::LoraQuant(lq(2, 0.8)),
+            Method::LoraQuant(lq(2, 0.9)),
+            Method::LoraQuant(lq(3, 0.8)),
+            Method::LoraQuant(lq(3, 0.9)),
+        ]
+    }
+}
+
+/// LoRAQuant `i@ρ` with the paper's group size (128).
+pub fn lq(bits: u32, rho: f32) -> LoraQuantConfig {
+    LoraQuantConfig { group: 128, ..LoraQuantConfig::variant(bits, rho) }
+}
+
+/// Apply a method to one task adapter: returns (deltas, avg_bits).
+///
+/// `cluster` provides the sibling task adapters of the same model for
+/// JD-Diagonal (the paper treats a model's task adapters as one cluster).
+pub fn apply_method(
+    method: &Method,
+    td: &TaskData,
+    cluster: &[&LoraAdapter],
+) -> (BTreeMap<String, Matrix>, f64) {
+    match method {
+        Method::Fp16 => (crate::model::merge::fp_deltas(&td.lora), 16.0),
+        Method::Flat(q) => apply_pairwise(&td.lora, &td.calib, |b, a, c| q.quantize(b, a, c)),
+        Method::Gptq(q) => apply_pairwise(&td.lora, &td.calib, |b, a, c| q.quantize(b, a, c)),
+        Method::PbLlm(q) => apply_pairwise(&td.lora, &td.calib, |b, a, c| q.quantize(b, a, c)),
+        Method::BiLlm(q) => apply_pairwise(&td.lora, &td.calib, |b, a, c| q.quantize(b, a, c)),
+        Method::LoraQuant(cfg) => {
+            let mut q = QuantizedLora::default();
+            for (site, (a, b)) in &td.lora.sites {
+                q.sites.insert(site.clone(), quantize_site(b, a, cfg));
+            }
+            let deltas = crate::model::merge::quant_deltas(&q);
+            (deltas, q.avg_bits())
+        }
+        Method::JdDiagonal => {
+            // per-site cluster across this model's task adapters
+            let mut deltas = BTreeMap::new();
+            let mut bits_num = 0.0f64;
+            let mut bits_den = 0.0f64;
+            // index of this task inside the cluster
+            let me = cluster
+                .iter()
+                .position(|l| std::ptr::eq(*l, &td.lora))
+                .unwrap_or(0);
+            for (site, (_a, b)) in &td.lora.sites {
+                let pairs: Vec<(Matrix, Matrix)> = cluster
+                    .iter()
+                    .filter_map(|l| l.sites.get(site))
+                    .map(|(a2, b2)| (b2.clone(), a2.clone()))
+                    .collect();
+                let k = b.cols();
+                let fitted = JdDiagonal { k }.fit(&pairs);
+                deltas.insert(site.clone(), fitted.dequant_delta(me));
+                bits_num += fitted.storage_bits_per_adapter() as f64;
+                bits_den += fitted.params_per_adapter as f64;
+            }
+            (deltas, bits_num / bits_den)
+        }
+    }
+}
+
+fn apply_pairwise(
+    lora: &LoraAdapter,
+    calib: &BTreeMap<String, Matrix>,
+    f: impl Fn(&Matrix, &Matrix, Option<&Matrix>) -> Box<dyn crate::baselines::CompressedPair>,
+) -> (BTreeMap<String, Matrix>, f64) {
+    let mut deltas = BTreeMap::new();
+    let mut bits = 0u64;
+    let mut params = 0usize;
+    for (site, (a, b)) in &lora.sites {
+        let c = f(b, a, calib.get(site));
+        deltas.insert(site.clone(), c.dequant_delta());
+        bits += c.storage_bits();
+        params += c.param_count();
+    }
+    (deltas, bits as f64 / params as f64)
+}
+
+/// LoRAQuant with every ablation switch of Figure 3.
+pub fn fig3_variant(kind: &str, rho: f32, group: usize) -> LoraQuantConfig {
+    let base = LoraQuantConfig { group, ..LoraQuantConfig::variant(2, rho) };
+    match kind {
+        "loraquant" => base,
+        "no_opt" => LoraQuantConfig { ste: None, ..base },
+        "prune" => LoraQuantConfig { low_mode: LowMode::Prune, ..base },
+        "rtn_low" => LoraQuantConfig { low_mode: LowMode::Rtn1, ..base },
+        _ => panic!("unknown fig3 variant {kind}"),
+    }
+}

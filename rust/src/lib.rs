@@ -1,0 +1,43 @@
+//! # LoRAQuant
+//!
+//! Production-oriented reproduction of *"LoRAQuant: Mixed-Precision
+//! Quantization of LoRA to Ultra-Low Bits"* (Mirzaei et al., 2025) as a
+//! three-layer Rust + JAX/Pallas system:
+//!
+//! * **L3 (this crate)** — the quantization pipeline (SVD reparameterization,
+//!   dynamic variance-ratio split, straight-through-estimator refinement,
+//!   mixed-precision RTN/binary quantization), all evaluation baselines
+//!   (GPTQ, PB-LLM, BiLLM, JD-Diagonal, …), and a multi-LoRA serving
+//!   coordinator (adapter registry, merged-weight cache, dynamic batcher,
+//!   thread-pool server).
+//! * **L2 (python/compile/model.py)** — a tiny decoder-only transformer whose
+//!   forward pass is AOT-lowered to HLO text and executed here via PJRT.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   quantized sub-LoRA apply and group-wise (de)quantization.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! python invocation, producing `artifacts/*.hlo.txt` plus trained weights,
+//! and everything afterwards is this crate.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod adapter;
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod experiments;
+pub mod linalg;
+pub mod loraquant;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,111 @@
+//! Numerical linear algebra substrate (no LAPACK offline — built from
+//! scratch): thin QR, one-sided Jacobi SVD, and the low-rank product SVD
+//! that the LoRAQuant pipeline actually calls.
+
+mod jacobi;
+mod qr;
+
+pub use jacobi::svd_jacobi;
+pub use qr::qr_thin;
+
+use crate::tensor::{matmul, Matrix};
+
+/// Full SVD result `A = U * diag(s) * Vt`, singular values descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// m×k left singular vectors (columns orthonormal).
+    pub u: Matrix,
+    /// k singular values, descending, non-negative.
+    pub s: Vec<f32>,
+    /// k×n right singular vectors, transposed (rows orthonormal).
+    pub vt: Matrix,
+}
+
+impl Svd {
+    /// Reconstruct `U diag(s) Vt`.
+    pub fn reconstruct(&self) -> Matrix {
+        let k = self.s.len();
+        let mut us = Matrix::zeros(self.u.rows(), k);
+        for i in 0..self.u.rows() {
+            for j in 0..k {
+                us.set(i, j, self.u.at(i, j) * self.s[j]);
+            }
+        }
+        matmul(&us, &self.vt)
+    }
+}
+
+/// SVD of the low-rank product `B @ A` (B: m×r, A: r×n) **without**
+/// materializing the m×n product — the core primitive behind the paper's
+/// Eq. (1).
+///
+/// Method: thin-QR both factors,
+///   `B = Qb Rb` (m×r),  `Aᵀ = Qa Ra` (n×r)  ⇒  `BA = Qb (Rb Raᵀ) Qaᵀ`,
+/// then a Jacobi SVD of the tiny r×r core `Rb Raᵀ`. Cost O((m+n)r² + r³).
+pub fn svd_lowrank_product(b: &Matrix, a: &Matrix) -> Svd {
+    assert_eq!(b.cols(), a.rows(), "svd_lowrank_product: B {:?} A {:?}", b.shape(), a.shape());
+    let r = b.cols();
+    let (qb, rb) = qr_thin(b);
+    let (qa, ra) = qr_thin(&a.transpose());
+    // core = Rb @ Raᵀ  (r×r)
+    let core = matmul(&rb, &ra.transpose());
+    let small = svd_jacobi(&core);
+    let u = matmul(&qb, &small.u);
+    // Vt = small.vt @ Qaᵀ  ⇒ V = Qa @ small.v
+    let vt = matmul(&small.vt, &qa.transpose());
+    debug_assert_eq!(u.cols(), r);
+    Svd { u, s: small.s, vt }
+}
+
+/// SVD of a general dense matrix (delegates to one-sided Jacobi; used by the
+/// JD-Diagonal baseline's shared-basis computation and in tests).
+pub fn svd(a: &Matrix) -> Svd {
+    svd_jacobi(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn lowrank_product_reconstructs() {
+        let mut rng = Rng::new(42);
+        let b = rng.matrix(64, 16, 1.0);
+        let a = rng.matrix(16, 48, 1.0);
+        let ba = matmul(&b, &a);
+        let svd = svd_lowrank_product(&b, &a);
+        assert!(svd.reconstruct().rel_err(&ba) < 1e-4, "err {}", svd.reconstruct().rel_err(&ba));
+        // singular values sorted descending
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn lowrank_orthonormal_factors() {
+        let mut rng = Rng::new(7);
+        let b = rng.matrix(40, 8, 1.0);
+        let a = rng.matrix(8, 56, 1.0);
+        let svd = svd_lowrank_product(&b, &a);
+        let utu = crate::tensor::matmul_at_b(&svd.u, &svd.u);
+        let vvt = crate::tensor::matmul_a_bt(&svd.vt, &svd.vt);
+        assert!(utu.rel_err(&Matrix::eye(8)) < 1e-4);
+        assert!(vvt.rel_err(&Matrix::eye(8)) < 1e-4);
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        let mut rng = Rng::new(3);
+        // B has two identical columns -> product rank < r
+        let mut b = rng.matrix(32, 4, 1.0);
+        for i in 0..32 {
+            let v = b.at(i, 0);
+            b.set(i, 1, v);
+        }
+        let a = rng.matrix(4, 24, 1.0);
+        let ba = matmul(&b, &a);
+        let svd = svd_lowrank_product(&b, &a);
+        assert!(svd.reconstruct().rel_err(&ba) < 1e-3);
+    }
+}

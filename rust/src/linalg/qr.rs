@@ -1,0 +1,93 @@
+//! Thin QR via modified Gram-Schmidt with one reorthogonalization pass
+//! (the "MGS2" scheme — numerically equivalent to Householder for these
+//! well-scaled LoRA factors, and much simpler).
+
+use crate::tensor::{dot, norm2, Matrix};
+
+/// Thin QR of an m×k matrix (m >= k not required; k columns are
+/// orthonormalized in order): returns (Q m×k with orthonormal columns —
+/// zero columns where rank-deficient — and R k×k upper-triangular) with
+/// `A = Q R`.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, k) = a.shape();
+    // Work with columns as contiguous rows of the transpose.
+    let mut qt = a.transpose(); // k×m, row j = column j
+    let mut r = Matrix::zeros(k, k);
+    for j in 0..k {
+        // two-pass orthogonalization of column j against 0..j
+        for _pass in 0..2 {
+            for i in 0..j {
+                let (qi, qj) = rows_pair(&mut qt, i, j, m);
+                let proj = dot(qi, qj);
+                r.set(i, j, r.at(i, j) + proj);
+                for t in 0..m {
+                    qj[t] -= proj * qi[t];
+                }
+            }
+        }
+        let qj = qt.row_mut(j);
+        let nrm = norm2(qj);
+        r.set(j, j, nrm);
+        if nrm > 1e-12 {
+            let inv = 1.0 / nrm;
+            for v in qj.iter_mut() {
+                *v *= inv;
+            }
+        } else {
+            // rank-deficient column: leave Q column zero, R row zero.
+            for v in qj.iter_mut() {
+                *v = 0.0;
+            }
+            r.set(j, j, 0.0);
+        }
+    }
+    (qt.transpose(), r)
+}
+
+/// Disjoint mutable/immutable access to rows i (read) and j (write) of a
+/// k×m row-major matrix.
+fn rows_pair<'a>(mat: &'a mut Matrix, i: usize, j: usize, m: usize) -> (&'a [f32], &'a mut [f32]) {
+    assert_ne!(i, j);
+    let ptr = mat.data_mut().as_mut_ptr();
+    unsafe {
+        let qi = std::slice::from_raw_parts(ptr.add(i * m), m);
+        let qj = std::slice::from_raw_parts_mut(ptr.add(j * m), m);
+        (qi, qj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_at_b};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        let mut rng = Rng::new(11);
+        let a = rng.matrix(50, 12, 1.0);
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).rel_err(&a) < 1e-4);
+        assert!(matmul_at_b(&q, &q).rel_err(&Matrix::eye(12)) < 1e-4);
+        // R upper triangular
+        for i in 0..12 {
+            for j in 0..i {
+                assert!(r.at(i, j).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        let mut rng = Rng::new(12);
+        let mut a = rng.matrix(30, 6, 1.0);
+        // col 3 = 2 * col 1
+        for i in 0..30 {
+            let v = a.at(i, 1);
+            a.set(i, 3, 2.0 * v);
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).rel_err(&a) < 1e-4);
+        assert!(r.at(3, 3).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,139 @@
+//! Choosing the high-precision rank `h` and the split strategy.
+//!
+//! The paper's default is the **dynamic variance-ratio rule** (Eq. 5): the
+//! smallest `h` whose top-h singular values explain at least ρ of the total
+//! variance Σsᵢ². Fig. 4 compares it against a globally fixed `h`; Fig. 2
+//! compares the SVD split itself against random / norm-based column picks.
+
+use crate::tensor::{norm2, Matrix};
+use crate::testutil::Rng;
+
+/// How to pick the number of high-precision components.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HSelect {
+    /// Eq. 5: smallest h with Σ_{i<=h} sᵢ² / Σ sᵢ² >= ρ.
+    Ratio(f32),
+    /// Fixed h for every adapter (Fig. 4 "Static").
+    Static(usize),
+}
+
+/// Which components go to the high-precision sub-LoRA (Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitStrategy {
+    /// SVD reparameterization, leading components (the paper's method).
+    Svd,
+    /// Random component indices of the *original* factors.
+    Random { seed: u64 },
+    /// Components of the original factors with the largest ‖bᵢ‖‖aᵢ‖
+    /// (Frobenius norm of the rank-1 term bᵢaᵢᵀ).
+    Norm,
+}
+
+/// Eq. 5 on a singular-value vector (descending). Returns the smallest `h`
+/// such that the top-h squared mass covers at least `rho` of the total.
+/// Degenerate all-zero spectra return 0.
+pub fn select_h(s: &[f32], rule: HSelect) -> usize {
+    match rule {
+        HSelect::Static(h) => h.min(s.len()),
+        HSelect::Ratio(rho) => {
+            assert!(rho > 0.0 && rho <= 1.0, "rho {rho}");
+            let total: f64 = s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            if total <= 0.0 {
+                return 0;
+            }
+            let mut acc = 0.0f64;
+            for (i, &x) in s.iter().enumerate() {
+                acc += (x as f64) * (x as f64);
+                if acc / total >= rho as f64 {
+                    return i + 1;
+                }
+            }
+            s.len()
+        }
+    }
+}
+
+/// Component indices of the original factors chosen as "important" under a
+/// Fig. 2 baseline strategy (`h` many of `0..r`).
+pub fn baseline_indices(b: &Matrix, a: &Matrix, h: usize, strategy: SplitStrategy) -> Vec<usize> {
+    let r = b.cols();
+    let h = h.min(r);
+    match strategy {
+        SplitStrategy::Svd => panic!("SVD strategy does not use index selection"),
+        SplitStrategy::Random { seed } => {
+            let mut idx: Vec<usize> = (0..r).collect();
+            let mut rng = Rng::new(seed);
+            rng.shuffle(&mut idx);
+            idx.truncate(h);
+            idx.sort_unstable();
+            idx
+        }
+        SplitStrategy::Norm => {
+            // ||b_i a_i^T||_F = ||b_i|| * ||a_i||
+            let mut scored: Vec<(usize, f32)> = (0..r)
+                .map(|i| (i, norm2(&b.col(i)) * norm2(a.row(i))))
+                .collect();
+            scored.sort_by(|x, y| y.1.partial_cmp(&x.1).unwrap());
+            let mut idx: Vec<usize> = scored.into_iter().take(h).map(|(i, _)| i).collect();
+            idx.sort_unstable();
+            idx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_rule_matches_hand_computation() {
+        // s² = [16, 4, 1, 1]; total = 22
+        let s = [4.0, 2.0, 1.0, 1.0];
+        assert_eq!(select_h(&s, HSelect::Ratio(0.5)), 1); // 16/22 = .727
+        assert_eq!(select_h(&s, HSelect::Ratio(0.73)), 2); // 20/22 = .909
+        assert_eq!(select_h(&s, HSelect::Ratio(0.95)), 3); // 21/22 = .954
+        assert_eq!(select_h(&s, HSelect::Ratio(1.0)), 4);
+    }
+
+    #[test]
+    fn ratio_monotone_in_rho() {
+        let s: Vec<f32> = (0..16).map(|i| 0.8f32.powi(i)).collect();
+        let mut prev = 0;
+        for k in 1..=19 {
+            let h = select_h(&s, HSelect::Ratio(k as f32 * 0.05));
+            assert!(h >= prev);
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn static_clamps() {
+        assert_eq!(select_h(&[1.0, 1.0], HSelect::Static(5)), 2);
+        assert_eq!(select_h(&[1.0, 1.0], HSelect::Static(1)), 1);
+    }
+
+    #[test]
+    fn zero_spectrum() {
+        assert_eq!(select_h(&[0.0, 0.0], HSelect::Ratio(0.9)), 0);
+    }
+
+    #[test]
+    fn norm_strategy_picks_largest() {
+        use crate::tensor::Matrix;
+        // component 1 has much larger norm than 0 and 2
+        let b = Matrix::from_fn(4, 3, |_, j| if j == 1 { 10.0 } else { 0.1 });
+        let a = Matrix::from_fn(3, 4, |i, _| if i == 1 { 10.0 } else { 0.1 });
+        assert_eq!(baseline_indices(&b, &a, 1, SplitStrategy::Norm), vec![1]);
+    }
+
+    #[test]
+    fn random_strategy_deterministic_per_seed() {
+        use crate::tensor::Matrix;
+        let b = Matrix::zeros(4, 8);
+        let a = Matrix::zeros(8, 4);
+        let i1 = baseline_indices(&b, &a, 3, SplitStrategy::Random { seed: 7 });
+        let i2 = baseline_indices(&b, &a, 3, SplitStrategy::Random { seed: 7 });
+        assert_eq!(i1, i2);
+        assert_eq!(i1.len(), 3);
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's contribution: LoRAQuant mixed-precision quantization of a
+//! LoRA adapter (§3, Algorithms 1–2).
+//!
+//! Pipeline per adapter matrix pair `(B m×r, A r×n)`:
+//!
+//! 1. [`split`] — SVD reparameterization `BA = U S Vᵀ`, `B' = U√S`,
+//!    `A' = √S Vᵀ` (Eqs. 1–2), split at `h` into high/low sub-LoRAs
+//!    (Eqs. 3–4).
+//! 2. [`hselect`] — choose `h`: dynamic variance-ratio ρ (Eq. 5), static,
+//!    or the Fig. 2 baseline strategies (random / norm-based column picks).
+//! 3. [`ste`] — per-component straight-through-estimator refinement
+//!    (§3.3, Alg. 2).
+//! 4. [`pipeline`] — quantize high sub-LoRA with k-bit RTN, low with 1-bit
+//!    sign binarization (§3.2); pack into a [`QuantizedLora`].
+
+pub mod hselect;
+pub mod pipeline;
+pub mod split;
+pub mod ste;
+
+pub use hselect::{baseline_indices, select_h, HSelect, SplitStrategy};
+pub use pipeline::{
+    quantize_site, LoraQuantConfig, LowMode, LowQuantized, QuantizedLora, QuantizedSite,
+};
+pub use split::{reparameterize, split_at, split_by_indices, Reparam, SubLoras};
+pub use ste::{optimize_component, optimize_factors, SteConfig, VecQuant};

@@ -1,0 +1,138 @@
+//! SVD reparameterization and sub-LoRA splitting (paper §3.1, Eqs. 1–4).
+
+use crate::linalg::{svd_lowrank_product, Svd};
+use crate::tensor::Matrix;
+
+/// The SVD-reparameterized adapter: `B' = U √S` (m×r), `A' = √S Vᵀ` (r×n),
+/// with `B' A' = B A` and per-component importance = singular value.
+#[derive(Debug, Clone)]
+pub struct Reparam {
+    pub b: Matrix,
+    pub a: Matrix,
+    /// Singular values, descending.
+    pub s: Vec<f32>,
+}
+
+/// A split adapter: high-importance sub-LoRA (first `h` components) and
+/// low-importance sub-LoRA (remaining `r - h`).
+#[derive(Debug, Clone)]
+pub struct SubLoras {
+    pub bh: Matrix,
+    pub ah: Matrix,
+    pub bl: Matrix,
+    pub al: Matrix,
+    pub h: usize,
+}
+
+impl SubLoras {
+    /// Reconstruct `Bh Ah + Bl Al` (== B'A' == BA exactly, Eq. 4).
+    pub fn reconstruct(&self) -> Matrix {
+        let mut out = crate::tensor::matmul(&self.bh, &self.ah);
+        if self.bl.cols() > 0 {
+            out.axpy(1.0, &crate::tensor::matmul(&self.bl, &self.al));
+        }
+        out
+    }
+}
+
+/// Eq. 2: reparameterize `BA` as `B' = U√S`, `A' = √S Vᵀ` via the low-rank
+/// product SVD (never materializes the m×n product).
+pub fn reparameterize(b: &Matrix, a: &Matrix) -> Reparam {
+    let Svd { u, s, vt } = svd_lowrank_product(b, a);
+    let r = s.len();
+    let (m, n) = (u.rows(), vt.cols());
+    let mut bp = Matrix::zeros(m, r);
+    let mut ap = Matrix::zeros(r, n);
+    for k in 0..r {
+        let sq = s[k].max(0.0).sqrt();
+        for i in 0..m {
+            bp.set(i, k, u.at(i, k) * sq);
+        }
+        for j in 0..n {
+            ap.set(k, j, vt.at(k, j) * sq);
+        }
+    }
+    Reparam { b: bp, a: ap, s }
+}
+
+/// Eqs. 3–4: split a reparameterized adapter at component `h`.
+pub fn split_at(rp: &Reparam, h: usize) -> SubLoras {
+    let r = rp.s.len();
+    let h = h.min(r);
+    SubLoras {
+        bh: rp.b.slice_cols(0, h),
+        ah: rp.a.slice_rows(0, h),
+        bl: rp.b.slice_cols(h, r),
+        al: rp.a.slice_rows(h, r),
+        h,
+    }
+}
+
+/// Split the **original** factors by explicit component indices — the
+/// Fig. 2 baseline strategies (random / norm-based) that skip the SVD.
+pub fn split_by_indices(b: &Matrix, a: &Matrix, high_idx: &[usize]) -> SubLoras {
+    let r = b.cols();
+    let high: std::collections::BTreeSet<usize> = high_idx.iter().copied().collect();
+    let low: Vec<usize> = (0..r).filter(|i| !high.contains(i)).collect();
+    let high: Vec<usize> = high.into_iter().collect();
+    SubLoras {
+        bh: b.gather_cols(&high),
+        ah: a.gather_rows(&high),
+        bl: b.gather_cols(&low),
+        al: a.gather_rows(&low),
+        h: high.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn reparam_preserves_product() {
+        let mut rng = Rng::new(51);
+        let (b, a) = rng.lora_pair(96, 64, 16, 0.7);
+        let ba = matmul(&b, &a);
+        let rp = reparameterize(&b, &a);
+        assert!(matmul(&rp.b, &rp.a).rel_err(&ba) < 1e-4);
+    }
+
+    #[test]
+    fn split_sums_to_product() {
+        let mut rng = Rng::new(52);
+        let (b, a) = rng.lora_pair(64, 80, 16, 0.6);
+        let ba = matmul(&b, &a);
+        let rp = reparameterize(&b, &a);
+        for h in [0, 1, 4, 8, 16] {
+            let sl = split_at(&rp, h);
+            assert!(sl.reconstruct().rel_err(&ba) < 1e-4, "h={h}");
+            assert_eq!(sl.bh.cols(), h);
+            assert_eq!(sl.al.rows(), 16 - h);
+        }
+    }
+
+    #[test]
+    fn importance_concentrated_in_leading_components() {
+        let mut rng = Rng::new(53);
+        let (b, a) = rng.lora_pair(64, 64, 16, 0.5);
+        let rp = reparameterize(&b, &a);
+        // ||b'_k a'_k|| = s_k, descending
+        for k in 0..15 {
+            let nk = crate::tensor::norm2(&rp.b.col(k)) * crate::tensor::norm2(rp.a.row(k));
+            let nk1 = crate::tensor::norm2(&rp.b.col(k + 1)) * crate::tensor::norm2(rp.a.row(k + 1));
+            assert!(nk >= nk1 * 0.99, "k={k}: {nk} < {nk1}");
+        }
+    }
+
+    #[test]
+    fn index_split_partitions() {
+        let mut rng = Rng::new(54);
+        let (b, a) = rng.lora_pair(32, 40, 8, 0.8);
+        let ba = matmul(&b, &a);
+        let sl = split_by_indices(&b, &a, &[0, 3, 5]);
+        assert_eq!(sl.h, 3);
+        assert!(sl.reconstruct().rel_err(&ba) < 1e-5);
+    }
+}

@@ -1,0 +1,248 @@
+//! Straight-through-estimator refinement of sub-LoRA components
+//! (paper §3.3, Algorithm 2).
+//!
+//! For the i-th component pair (column `bᵢ` of B•, row `aᵢ` of A•) we
+//! minimize  ‖bᵢaᵢᵀ − D(Q(bᵢ*)) D(Q(aᵢ*ᵀ))‖_F  by gradient descent,
+//! treating round/sign as identity on the backward pass (STE) and the
+//! group scales as per-step constants.
+//!
+//! Components are optimized **independently** (one pair at a time), exactly
+//! as the paper argues: the SVD dimensions should not be mixed by joint
+//! optimization. Both quantizers are positively scale-equivariant
+//! (`D(Q(αv)) = α D(Q(v))` for α > 0), so we optimize unit-normalized
+//! copies — this makes one learning rate work across components whose
+//! magnitudes span the whole singular spectrum.
+
+use crate::tensor::{dot, norm2, Matrix};
+
+/// Which quantizer the component will eventually pass through.
+#[derive(Debug, Clone, Copy)]
+pub enum VecQuant {
+    Rtn { bits: u32, group: usize },
+    Bin { group: usize },
+}
+
+impl VecQuant {
+    /// `D(Q(v))` for a vector. Semantically identical to quantize-then-
+    /// dequantize through [`crate::quant`], but fused: no code packing, no
+    /// matrix wrappers, no allocation beyond the output — this sits inside
+    /// the STE step loop (EXPERIMENTS.md §Perf).
+    pub fn roundtrip(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; v.len()];
+        self.roundtrip_into(v, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`VecQuant::roundtrip`].
+    pub fn roundtrip_into(&self, v: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(v.len(), out.len());
+        match *self {
+            VecQuant::Rtn { bits, group } => {
+                let qmax = ((1u32 << bits) - 1) as f32;
+                for (chunk, ochunk) in v.chunks(group).zip(out.chunks_mut(group)) {
+                    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                    for &x in chunk {
+                        lo = lo.min(x);
+                        hi = hi.max(x);
+                    }
+                    if hi - lo <= 0.0 {
+                        // degenerate group reconstructs the constant exactly
+                        ochunk.copy_from_slice(chunk);
+                        continue;
+                    }
+                    let s = (hi - lo) / qmax;
+                    let inv_s = 1.0 / s;
+                    let z = (-lo * inv_s).round();
+                    for (x, o) in chunk.iter().zip(ochunk.iter_mut()) {
+                        let q = ((x * inv_s).round() + z).clamp(0.0, qmax);
+                        *o = s * (q - z);
+                    }
+                }
+            }
+            VecQuant::Bin { group } => {
+                for (chunk, ochunk) in v.chunks(group).zip(out.chunks_mut(group)) {
+                    let s = chunk.iter().map(|x| x.abs()).sum::<f32>() / chunk.len() as f32;
+                    for (x, o) in chunk.iter().zip(ochunk.iter_mut()) {
+                        *o = if *x >= 0.0 { s } else { -s };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// STE optimization hyper-parameters (paper: converges within ~100 steps).
+#[derive(Debug, Clone, Copy)]
+pub struct SteConfig {
+    pub steps: usize,
+    pub lr: f32,
+}
+
+impl Default for SteConfig {
+    fn default() -> Self {
+        Self { steps: 100, lr: 0.05 }
+    }
+}
+
+/// Algorithm 2 for ONE component: returns refined `(bᵢ*, aᵢ*)` minimizing
+/// the post-quantization reconstruction error of the rank-1 term.
+/// Keeps the best-seen iterate (GD on a non-smooth landscape can regress).
+pub fn optimize_component(
+    b: &[f32],
+    a: &[f32],
+    bq: VecQuant,
+    aq: VecQuant,
+    cfg: &SteConfig,
+) -> (Vec<f32>, Vec<f32>) {
+    let (m, n) = (b.len(), a.len());
+    let cb = norm2(b);
+    let ca = norm2(a);
+    if cb <= 1e-20 || ca <= 1e-20 {
+        return (b.to_vec(), a.to_vec());
+    }
+    // unit-normalized working copies (scale-equivariance of Q∘D)
+    let bt: Vec<f32> = b.iter().map(|v| v / cb).collect();
+    let at: Vec<f32> = a.iter().map(|v| v / ca).collect();
+    let mut bo = bt.clone();
+    let mut ao = at.clone();
+    let mut best = (bo.clone(), ao.clone());
+    let mut best_loss = f32::INFINITY;
+    let inv_mn = 1.0 / (m as f32 * n as f32);
+
+    let mut bqv = vec![0.0f32; m];
+    let mut aqv = vec![0.0f32; n];
+    for _ in 0..cfg.steps {
+        bq.roundtrip_into(&bo, &mut bqv);
+        aq.roundtrip_into(&ao, &mut aqv);
+        // loss = ||bt at^T - bq aq^T||_F^2 / (mn), computed via rank-1 algebra
+        let bq_bq = dot(&bqv, &bqv);
+        let aq_aq = dot(&aqv, &aqv);
+        let bt_bq = dot(&bt, &bqv);
+        let at_aq = dot(&at, &aqv);
+        // ||bt||=||at||=1
+        let loss = (1.0 + bq_bq * aq_aq - 2.0 * bt_bq * at_aq) * inv_mn;
+        if loss < best_loss {
+            best_loss = loss;
+            best = (bo.clone(), ao.clone());
+        }
+        // grads via STE: dL/dbq = 2/(mn) * (bq*(aq.aq) - bt*(at.aq)), etc.
+        // (step size folds 2/(mn) with a sqrt(mn) un-shrink; hoisted)
+        let step = cfg.lr * 2.0 * inv_mn * (m as f32 * n as f32).sqrt();
+        for i in 0..m {
+            bo[i] -= step * (bqv[i] * aq_aq - bt[i] * at_aq);
+        }
+        for j in 0..n {
+            ao[j] -= step * (aqv[j] * bq_bq - at[j] * bt_bq);
+        }
+    }
+    // check final iterate too
+    {
+        let bqv = bq.roundtrip(&bo);
+        let aqv = aq.roundtrip(&ao);
+        let loss =
+            (1.0 + dot(&bqv, &bqv) * dot(&aqv, &aqv) - 2.0 * dot(&bt, &bqv) * dot(&at, &aqv)) * inv_mn;
+        if loss < best_loss {
+            best = (bo, ao);
+        }
+    }
+    let (bo, ao) = best;
+    (
+        bo.iter().map(|v| v * cb).collect(),
+        ao.iter().map(|v| v * ca).collect(),
+    )
+}
+
+/// Algorithm 1 lines 9–14: refine every component of a factor pair in
+/// place. `bm` is m×k (components are columns), `am` is k×n (rows).
+pub fn optimize_factors(
+    bm: &mut Matrix,
+    am: &mut Matrix,
+    bq: VecQuant,
+    aq: VecQuant,
+    cfg: &SteConfig,
+) {
+    let k = bm.cols();
+    assert_eq!(k, am.rows());
+    for i in 0..k {
+        let bcol = bm.col(i);
+        let arow = am.row(i).to_vec();
+        let (nb, na) = optimize_component(&bcol, &arow, bq, aq, cfg);
+        for (r, v) in nb.iter().enumerate() {
+            bm.set(r, i, *v);
+        }
+        am.row_mut(i).copy_from_slice(&na);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::outer;
+    use crate::testutil::Rng;
+
+    fn rank1_err(b: &[f32], a: &[f32], bq: VecQuant, aq: VecQuant) -> f32 {
+        let target = outer(b, a);
+        let rec = outer(&bq.roundtrip(b), &aq.roundtrip(a));
+        rec.sub(&target).fro_norm()
+    }
+
+    #[test]
+    fn ste_reduces_quantization_error_rtn() {
+        let mut rng = Rng::new(61);
+        let q = VecQuant::Rtn { bits: 2, group: 32 };
+        let mut improved = 0;
+        for _ in 0..8 {
+            let b: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+            let a: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+            let before = rank1_err(&b, &a, q, q);
+            let (bo, ao) = optimize_component(&b, &a, q, q, &SteConfig::default());
+            // invariant: optimized pair must still approximate the SAME target
+            let after = outer(&q.roundtrip(&bo), &q.roundtrip(&ao))
+                .sub(&outer(&b, &a))
+                .fro_norm();
+            assert!(after <= before * 1.001, "after {after} > before {before}");
+            if after < before * 0.98 {
+                improved += 1;
+            }
+        }
+        assert!(improved >= 5, "STE should usually improve: {improved}/8");
+    }
+
+    #[test]
+    fn ste_reduces_quantization_error_bin() {
+        let mut rng = Rng::new(62);
+        let q = VecQuant::Bin { group: 32 };
+        let b: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let a: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let before = rank1_err(&b, &a, q, q);
+        let (bo, ao) = optimize_component(&b, &a, q, q, &SteConfig::default());
+        let after = outer(&q.roundtrip(&bo), &q.roundtrip(&ao))
+            .sub(&outer(&b, &a))
+            .fro_norm();
+        assert!(after <= before * 1.001);
+    }
+
+    #[test]
+    fn zero_component_is_noop() {
+        let q = VecQuant::Bin { group: 16 };
+        let b = vec![0.0; 16];
+        let a = vec![1.0; 16];
+        let (bo, ao) = optimize_component(&b, &a, q, q, &SteConfig::default());
+        assert_eq!(bo, b);
+        assert_eq!(ao, a);
+    }
+
+    #[test]
+    fn scale_equivariance_of_roundtrip() {
+        let mut rng = Rng::new(63);
+        for q in [VecQuant::Rtn { bits: 3, group: 16 }, VecQuant::Bin { group: 16 }] {
+            let v: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+            let d1: Vec<f32> = q.roundtrip(&v).iter().map(|x| x * 2.5).collect();
+            let v2: Vec<f32> = v.iter().map(|x| x * 2.5).collect();
+            let d2 = q.roundtrip(&v2);
+            for (a, b) in d1.iter().zip(&d2) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! `loraquant` — CLI entrypoint for the quantization pipeline and the
+//! multi-LoRA serving coordinator.
+//!
+//! ```text
+//! loraquant quantize --model tiny-llama-s --task modadd --bits 2 --rho 0.9 --out q.bin
+//! loraquant eval     --model tiny-llama-s --task modadd [--quantized q.bin] [--n 100]
+//! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12
+//! loraquant info     --model tiny-llama-s
+//! ```
+//!
+//! Everything here runs without python (`make artifacts` must have run).
+
+use anyhow::{bail, Context};
+use loraquant::adapter::{store, LoraAdapter};
+use loraquant::cli::Args;
+use loraquant::coordinator::{Coordinator, CoordinatorConfig, GenRequest, StoredAdapter};
+use loraquant::eval::{evaluate, EvalSet};
+use loraquant::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
+use loraquant::model::{merge_adapter, BaseWeights};
+use loraquant::runtime::Engine;
+use loraquant::workload::{generate, WorkloadConfig};
+use std::time::{Duration, Instant};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("quantize") => cmd_quantize(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (try quantize|eval|serve|info)"),
+        None => {
+            eprintln!(
+                "usage: loraquant <quantize|eval|serve|info> [--artifacts DIR] [--model NAME] ..."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+/// Quantize a trained adapter with LoRAQuant and write the packed file.
+fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let model = args.require("model")?;
+    let task = args.require("task")?;
+    let bits = args.usize_or("bits", 2)? as u32;
+    let rho = args.f32_or("rho", 0.9)?;
+    let out = args.str_or("out", &format!("{dir}/{model}/{task}.lq{bits}r{rho}.bin"));
+
+    let lora = LoraAdapter::load(format!("{dir}/{model}/{task}.lora.bin"))?;
+    let cfg = LoraQuantConfig::variant(bits, rho);
+    let t0 = Instant::now();
+    let mut q = QuantizedLora::default();
+    for (site, (a, b)) in &lora.sites {
+        q.sites.insert(site.clone(), quantize_site(b, a, &cfg));
+    }
+    let dt = t0.elapsed();
+    store::save(&out, &q)?;
+    println!("quantized {model}/{task}: LoRAQuant({bits}@{rho})");
+    println!("  sites          : {}", q.sites.len());
+    println!("  avg bits       : {:.3} (fp16 = 16)", q.avg_bits());
+    println!("  packed bytes   : {} (fp16 = {})", q.packed_bytes(), lora.fp16_bytes());
+    println!("  compression    : {:.1}x", lora.fp16_bytes() as f64 / q.packed_bytes() as f64);
+    println!("  pipeline time  : {dt:?}");
+    println!("  wrote {out}");
+    Ok(())
+}
+
+/// Evaluate an adapter (FP16 or a packed quantized file) on its task.
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let model = args.require("model")?;
+    let task = args.require("task")?;
+    let n = args.usize_or("n", 200)?;
+    let bucket = args.usize_or("bucket", 8)?;
+
+    let base = BaseWeights::load(format!("{dir}/{model}"))?;
+    let mut engine = Engine::new(&dir)?;
+    engine.load_model_fwd(model, bucket, base.cfg.param_names().len())?;
+    let set = EvalSet::load(format!("{dir}/{model}/{task}.eval.bin"))?.truncated(n);
+
+    let deltas = match args.opt("quantized") {
+        Some(path) => {
+            let q = store::load(path)?;
+            println!("evaluating quantized adapter ({:.3} avg bits)", q.avg_bits());
+            loraquant::model::merge::quant_deltas(&q)
+        }
+        None => {
+            let lora = LoraAdapter::load(format!("{dir}/{model}/{task}.lora.bin"))?;
+            println!("evaluating FP16 adapter");
+            loraquant::model::merge::fp_deltas(&lora)
+        }
+    };
+    let merged = merge_adapter(&base, &deltas)?;
+    let weights = engine.upload_weights(&merged)?;
+    let t0 = Instant::now();
+    let outcome = evaluate(&engine, model, bucket, &base.cfg, &weights, &set)?;
+    println!(
+        "{model}/{task}: score = {:.2} ({} examples, {}, {:?})",
+        outcome.score,
+        set.len(),
+        if outcome.exact { "exact match" } else { "ROUGE-L" },
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+/// Serve a synthetic multi-adapter workload and report latency/throughput.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let model = args.str_or("model", "tiny-llama-s");
+    let n_adapters = args.usize_or("adapters", 12)?;
+    let n_requests = args.usize_or("requests", 200)?;
+    let rate = args.f32_or("rate", 200.0)? as f64;
+    let cache_mb = args.usize_or("cache-mb", 64)?;
+
+    let mut cfg = CoordinatorConfig::new(&dir, &model);
+    cfg.cache_budget_bytes = cache_mb << 20;
+    cfg.max_wait = Duration::from_millis(args.usize_or("max-wait-ms", 10)? as u64);
+    let (coord, join) = Coordinator::start(cfg)?;
+
+    // Register n_adapters quantized clones of the trained task adapters.
+    let tasks = ["modadd", "modchain", "transform", "keyword"];
+    let qcfg = LoraQuantConfig::variant(2, 0.9);
+    let mut ids = Vec::new();
+    for i in 0..n_adapters {
+        let task = tasks[i % tasks.len()];
+        let lora = LoraAdapter::load(format!("{dir}/{model}/{task}.lora.bin"))?;
+        let mut q = QuantizedLora::default();
+        for (site, (a, b)) in &lora.sites {
+            q.sites.insert(site.clone(), quantize_site(b, a, &qcfg));
+        }
+        ids.push(coord.register_adapter(StoredAdapter::Quantized(q), task)?);
+    }
+    println!("registered {} quantized adapters", ids.len());
+
+    let wl = WorkloadConfig { rate, n_requests, ..Default::default() };
+    let schedule = generate(&wl, &ids);
+    let start = Instant::now();
+    let mut receivers = Vec::new();
+    for arr in &schedule {
+        let elapsed = start.elapsed();
+        if arr.at > elapsed {
+            std::thread::sleep(arr.at - elapsed);
+        }
+        receivers.push(coord.generate_async(GenRequest {
+            adapter: arr.adapter,
+            prompt: vec![1, 5, 4, 7, 3], // BOS d0 MARK d2 SEP
+            max_new: 4,
+        }));
+    }
+    let mut ok = 0;
+    for rx in receivers {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = start.elapsed();
+    let (metrics, cache, reg) = coord.metrics()?;
+    println!("served {ok}/{n_requests} requests in {wall:?} ({:.1} req/s)", ok as f64 / wall.as_secs_f64());
+    println!("  {}", metrics.summary());
+    println!(
+        "  cache: hit_rate={:.2} evictions={} | registry: {} adapters",
+        cache.hit_rate(),
+        cache.evictions,
+        reg
+    );
+    coord.shutdown();
+    let _ = join.join();
+    Ok(())
+}
+
+/// Print model + adapter inventory.
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let model = args.require("model")?;
+    let base = BaseWeights::load(format!("{dir}/{model}"))
+        .with_context(|| "run `make artifacts` first")?;
+    println!("{model}: {:#?}", base.cfg);
+    println!("base params: {} ({} fp16 bytes)", base.param_count(), base.fp16_bytes());
+    for task in ["modadd", "modchain", "transform", "keyword"] {
+        if let Ok(lora) = LoraAdapter::load(format!("{dir}/{model}/{task}.lora.bin")) {
+            println!(
+                "  adapter {task}: {} sites, rank {}, {} params, {} fp16 bytes",
+                lora.sites.len(),
+                lora.rank(),
+                lora.param_count(),
+                lora.fp16_bytes()
+            );
+        }
+    }
+    Ok(())
+}

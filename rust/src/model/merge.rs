@@ -1,0 +1,86 @@
+//! LoRA merging: `W_eff = W + s · (B A)ᵀ` per site (model.py `merge_lora`).
+//!
+//! The serving path stores weights in the `x @ W` orientation (n_in ×
+//! m_out), while the paper's LoRA algebra is column-vector (`ΔW = B A`,
+//! m_out × n_in) — hence the transpose.
+
+use super::schema::{BaseWeights, ModelConfig};
+use crate::adapter::fmt::Tensor;
+use crate::adapter::LoraAdapter;
+use crate::loraquant::QuantizedLora;
+use crate::tensor::Matrix;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+
+/// Merge a per-site delta (m_out × n_in) into a weight tensor (n_in × m_out).
+pub fn merge_delta(w: &Tensor, delta: &Matrix, scaling: f32) -> anyhow::Result<Tensor> {
+    let wm = w.to_matrix()?;
+    if (wm.cols(), wm.rows()) != delta.shape() {
+        bail!("merge shape mismatch: W {:?} vs ΔW {:?}", wm.shape(), delta.shape());
+    }
+    let mut out = wm.clone();
+    for i in 0..out.rows() {
+        for j in 0..out.cols() {
+            let v = out.at(i, j) + scaling * delta.at(j, i);
+            out.set(i, j, v);
+        }
+    }
+    Ok(Tensor::f32(vec![out.rows(), out.cols()], out.into_vec()))
+}
+
+/// Per-site deltas from an FP adapter.
+pub fn fp_deltas(adapter: &LoraAdapter) -> BTreeMap<String, Matrix> {
+    adapter
+        .sites
+        .iter()
+        .map(|(site, (a, b))| (site.clone(), crate::tensor::matmul(b, a)))
+        .collect()
+}
+
+/// Per-site deltas from a quantized adapter (dequantize-on-merge).
+pub fn quant_deltas(q: &QuantizedLora) -> BTreeMap<String, Matrix> {
+    q.sites.iter().map(|(site, qs)| (site.clone(), qs.dequant_delta())).collect()
+}
+
+/// Produce the merged flat weight list for one adapter, in `param_names`
+/// order, ready to feed the HLO executable. Non-LoRA tensors pass through.
+pub fn merge_adapter(
+    base: &BaseWeights,
+    deltas: &BTreeMap<String, Matrix>,
+) -> anyhow::Result<Vec<Tensor>> {
+    let cfg: &ModelConfig = &base.cfg;
+    let s = cfg.lora_scaling();
+    let mut out = Vec::with_capacity(base.tensors.len());
+    for name in cfg.param_names() {
+        let w = base.tensors.get(&name).with_context(|| name.clone())?;
+        match deltas.get(&name) {
+            Some(d) => out.push(merge_delta(w, d, s).with_context(|| name.clone())?),
+            None => out.push(w.clone()),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_delta_transposes_and_scales() {
+        // W (2x3, x@W orientation), delta (3x2, paper orientation)
+        let w = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        let delta = Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        let merged = merge_delta(&w, &delta, 2.0).unwrap();
+        let m = merged.to_matrix().unwrap();
+        // merged[i][j] = 2 * delta[j][i]
+        assert_eq!(m.at(0, 1), 2.0 * delta.at(1, 0));
+        assert_eq!(m.at(1, 2), 2.0 * delta.at(2, 1));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let w = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        let delta = Matrix::zeros(2, 3); // wrong orientation
+        assert!(merge_delta(&w, &delta, 1.0).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Model weight schema + LoRA merging (mirrors python/compile/model.py —
+//! the two MUST stay in lockstep; the HLO artifacts take weights as
+//! positional inputs in `param_names` order).
+
+pub mod merge;
+pub mod schema;
+
+pub use merge::{merge_adapter, merge_delta};
+pub use schema::{BaseWeights, ModelConfig};

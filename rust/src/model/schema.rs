@@ -1,0 +1,174 @@
+//! Weight schema of the tiny transformer (L2), mirrored from
+//! python/compile/model.py.
+
+use crate::adapter::fmt::{load_tensorfile, Tensor};
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Model hyper-parameters (exported by train.py as `<model>/meta.bin`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: usize,
+    pub act_silu: bool,
+}
+
+impl ModelConfig {
+    /// Load from `<model_dir>/meta.bin`.
+    pub fn load(model_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let t = load_tensorfile(model_dir.as_ref().join("meta.bin"))?;
+        let get = |k: &str| -> anyhow::Result<usize> {
+            Ok(t.get(k).with_context(|| format!("meta missing {k}"))?.as_i32()?[0] as usize)
+        };
+        Ok(Self {
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            vocab: get("vocab")?,
+            seq_len: get("seq_len")?,
+            lora_rank: get("lora_rank")?,
+            lora_alpha: get("lora_alpha")?,
+            act_silu: get("act_silu")? == 1,
+        })
+    }
+
+    /// LoRA merge scaling `s = alpha / r`.
+    pub fn lora_scaling(&self) -> f32 {
+        self.lora_alpha as f32 / self.lora_rank as f32
+    }
+
+    /// Canonical parameter order — MUST match model.py `param_names`.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["embed".to_string(), "pos".to_string()];
+        for i in 0..self.n_layers {
+            names.push(format!("l{i}.ln1.g"));
+            names.push(format!("l{i}.ln1.b"));
+            for w in ["wq", "wk", "wv", "wo"] {
+                names.push(format!("l{i}.{w}"));
+            }
+            names.push(format!("l{i}.ln2.g"));
+            names.push(format!("l{i}.ln2.b"));
+            names.push(format!("l{i}.w1"));
+            names.push(format!("l{i}.w2"));
+        }
+        names.push("lnf.g".into());
+        names.push("lnf.b".into());
+        names.push("head".into());
+        names
+    }
+
+    /// LoRA site names in layer-major order — matches model.py.
+    pub fn lora_site_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for i in 0..self.n_layers {
+            for s in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+                names.push(format!("l{i}.{s}"));
+            }
+        }
+        names
+    }
+
+    /// (n_in, m_out) of a LoRA site given its short name.
+    pub fn site_shape(&self, short: &str) -> anyhow::Result<(usize, usize)> {
+        let d = self.d_model;
+        let f = self.d_ff;
+        Ok(match short {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "w1" => (d, f),
+            "w2" => (f, d),
+            _ => bail!("unknown site {short}"),
+        })
+    }
+}
+
+/// Base-model weights: name → tensor, plus the config.
+#[derive(Debug, Clone)]
+pub struct BaseWeights {
+    pub cfg: ModelConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl BaseWeights {
+    /// Load `<model_dir>/{meta,base}.bin` and validate the schema.
+    pub fn load(model_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = model_dir.as_ref();
+        let cfg = ModelConfig::load(dir)?;
+        let tensors = load_tensorfile(dir.join("base.bin"))?;
+        for name in cfg.param_names() {
+            if !tensors.contains_key(&name) {
+                bail!("base.bin missing parameter {name}");
+            }
+        }
+        Ok(Self { cfg, tensors })
+    }
+
+    /// Parameter count of the base model.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len()).sum()
+    }
+
+    /// FP16 bytes of the base model (for the Fig. 6 memory axis).
+    pub fn fp16_bytes(&self) -> usize {
+        self.param_count() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            vocab: 64,
+            seq_len: 32,
+            lora_rank: 16,
+            lora_alpha: 32,
+            act_silu: false,
+        }
+    }
+
+    #[test]
+    fn param_names_order_and_count() {
+        let names = cfg().param_names();
+        // 2 + 4*(2+4+2+2) + 3 = 2 + 40 + 3
+        assert_eq!(names.len(), 45);
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[2], "l0.ln1.g");
+        assert_eq!(names[4], "l0.wq");
+        assert_eq!(names[names.len() - 1], "head");
+    }
+
+    #[test]
+    fn lora_sites() {
+        let sites = cfg().lora_site_names();
+        assert_eq!(sites.len(), 24);
+        assert_eq!(sites[0], "l0.wq");
+        assert_eq!(sites[23], "l3.w2");
+    }
+
+    #[test]
+    fn site_shapes() {
+        let c = cfg();
+        assert_eq!(c.site_shape("wq").unwrap(), (128, 128));
+        assert_eq!(c.site_shape("w1").unwrap(), (128, 512));
+        assert_eq!(c.site_shape("w2").unwrap(), (512, 128));
+        assert!(c.site_shape("nope").is_err());
+    }
+
+    #[test]
+    fn scaling() {
+        assert_eq!(cfg().lora_scaling(), 2.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Quantization-axis handling (paper Appendix B, Fig. 5).
+//!
+//! All quantizers in this crate group along the **last axis** (row-wise).
+//! The paper's default is B' quantized **column-wise** and A' **row-wise**,
+//! so that √S singular factors fold into the per-column/-row scales; the
+//! appendix ablates all four (B-axis × A-axis) combinations. [`QuantAxis`]
+//! expresses an orientation and transposes around the row-wise primitive.
+
+use crate::tensor::Matrix;
+
+/// Orientation of grouping for one factor matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Axis {
+    /// Group along rows (contiguous elements of a row share a scale).
+    Row,
+    /// Group along columns.
+    Col,
+}
+
+impl Axis {
+    /// Orient `w` so that row-wise grouping implements this axis.
+    pub fn orient(&self, w: &Matrix) -> Matrix {
+        match self {
+            Axis::Row => w.clone(),
+            Axis::Col => w.transpose(),
+        }
+    }
+
+    /// Undo [`Axis::orient`] on a dequantized matrix.
+    pub fn restore(&self, w: Matrix) -> Matrix {
+        match self {
+            Axis::Row => w,
+            Axis::Col => w.transpose(),
+        }
+    }
+}
+
+impl std::fmt::Display for Axis {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Axis::Row => "row",
+            Axis::Col => "col",
+        })
+    }
+}
+
+/// Axis pair for the two LoRA factors — the paper's Fig. 5 design space.
+///
+/// Default (`B(col) A(row)`): each SVD component's √sᵢ multiplies a column
+/// of B' and a row of A', so per-column/-row scales absorb the singular
+/// values exactly (App. B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QuantAxis {
+    pub b_axis: Axis,
+    pub a_axis: Axis,
+}
+
+impl Default for QuantAxis {
+    fn default() -> Self {
+        Self { b_axis: Axis::Col, a_axis: Axis::Row }
+    }
+}
+
+impl QuantAxis {
+    /// All four combinations, in the order Fig. 5 reports them.
+    pub fn all() -> [QuantAxis; 4] {
+        [
+            QuantAxis { b_axis: Axis::Col, a_axis: Axis::Row },
+            QuantAxis { b_axis: Axis::Col, a_axis: Axis::Col },
+            QuantAxis { b_axis: Axis::Row, a_axis: Axis::Row },
+            QuantAxis { b_axis: Axis::Row, a_axis: Axis::Col },
+        ]
+    }
+}
+
+impl std::fmt::Display for QuantAxis {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "B({}) A({})", self.b_axis, self.a_axis)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{rtn_dequant, rtn_quant};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn orient_restore_roundtrip() {
+        let mut rng = Rng::new(41);
+        let w = rng.matrix(5, 9, 1.0);
+        for ax in [Axis::Row, Axis::Col] {
+            assert_eq!(ax.restore(ax.orient(&w)), w);
+        }
+    }
+
+    #[test]
+    fn col_axis_groups_along_columns() {
+        // A matrix whose columns are constants quantizes exactly under
+        // column-wise grouping (each group is degenerate-constant).
+        let w = Matrix::from_fn(64, 4, |_i, j| j as f32 + 1.0);
+        let orient = Axis::Col.orient(&w);
+        let q = rtn_quant(&orient, 2, 64);
+        let wd = Axis::Col.restore(rtn_dequant(&q));
+        assert!(wd.rel_err(&w) < 1e-6);
+    }
+}

@@ -1,0 +1,132 @@
+//! Sign binarization with L1-optimal group scales (paper §3.2, Eq. 8;
+//! Rastegari et al., 2016).
+
+use super::{pack_codes, unpack_codes, SCALE_BITS};
+use crate::tensor::Matrix;
+
+/// A group-wise sign-binarized matrix (grouping along the last axis).
+#[derive(Debug, Clone)]
+pub struct BinQuantized {
+    pub rows: usize,
+    pub cols: usize,
+    pub group: usize,
+    /// Packed sign bits (bit = 1 ⇔ +1), row-major.
+    pub packed: Vec<u8>,
+    /// L1-mean scale per (row, group).
+    pub scale: Vec<f32>,
+}
+
+impl BinQuantized {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group)
+    }
+
+    /// Storage cost in bits under the paper's Eq. 10 accounting (actual
+    /// per-row groups).
+    pub fn storage_bits(&self) -> u64 {
+        let groups = (self.rows * self.groups_per_row()) as u64;
+        (self.rows * self.cols) as u64 + groups * SCALE_BITS
+    }
+
+    /// In-memory packed size in bytes (sign bits + fp16 scales).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len() + self.scale.len() * (SCALE_BITS as usize / 8)
+    }
+}
+
+/// Binarize `w` group-wise: `sign(w)` with `S = mean |w|` per group.
+pub fn bin_quant(w: &Matrix, group: usize) -> BinQuantized {
+    assert!(group > 0);
+    let (rows, cols) = w.shape();
+    let gpr = cols.div_ceil(group);
+    let mut bits = Vec::with_capacity(rows * cols);
+    let mut scale = Vec::with_capacity(rows * gpr);
+    for i in 0..rows {
+        let row = w.row(i);
+        for g in 0..gpr {
+            let chunk = &row[g * group..((g + 1) * group).min(cols)];
+            let s = chunk.iter().map(|v| v.abs()).sum::<f32>() / chunk.len() as f32;
+            scale.push(s);
+            for &v in chunk {
+                bits.push(u8::from(v >= 0.0));
+            }
+        }
+    }
+    BinQuantized { rows, cols, group, packed: pack_codes(&bits, 1), scale }
+}
+
+/// Dequantize: `S * sign`.
+pub fn bin_dequant(q: &BinQuantized) -> Matrix {
+    let bits = unpack_codes(&q.packed, 1, q.rows * q.cols);
+    let gpr = q.groups_per_row();
+    let mut out = Matrix::zeros(q.rows, q.cols);
+    for i in 0..q.rows {
+        let row = out.row_mut(i);
+        for g in 0..gpr {
+            let s = q.scale[i * gpr + g];
+            for j in g * q.group..((g + 1) * q.group).min(q.cols) {
+                row[j] = if bits[i * q.cols + j] == 1 { s } else { -s };
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn sign_preserved() {
+        let mut rng = Rng::new(31);
+        let w = rng.matrix(8, 128, 1.0);
+        let wd = bin_dequant(&bin_quant(&w, 64));
+        for (a, b) in w.data().iter().zip(wd.data()) {
+            assert_eq!(*a >= 0.0, *b >= 0.0);
+        }
+    }
+
+    /// The L1-mean scale minimizes ||W - S*sign(W)||_F over S (Rastegari
+    /// et al. 2016): check against a scan of nearby scales.
+    #[test]
+    fn l1_scale_is_optimal() {
+        let mut rng = Rng::new(32);
+        let w = rng.matrix(1, 64, 1.0);
+        let q = bin_quant(&w, 64);
+        let err = bin_dequant(&q).sub(&w).fro_norm();
+        for factor in [0.8, 0.9, 1.1, 1.2] {
+            let mut alt = q.clone();
+            alt.scale[0] *= factor;
+            let alt_err = bin_dequant(&alt).sub(&w).fro_norm();
+            assert!(alt_err >= err, "factor {factor}: {alt_err} < {err}");
+        }
+    }
+
+    #[test]
+    fn never_collapses_to_zero() {
+        // Unlike 1-bit RTN, sign binarization keeps every weight at ±S
+        // (the paper's argument for Eq. 8 over Eq. 6 at 1 bit).
+        let mut rng = Rng::new(33);
+        let w = rng.matrix(4, 64, 0.5);
+        let wd = bin_dequant(&bin_quant(&w, 32));
+        assert!(wd.data().iter().all(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn ragged_group() {
+        let mut rng = Rng::new(34);
+        let w = rng.matrix(2, 70, 1.0);
+        let q = bin_quant(&w, 64);
+        assert_eq!(q.groups_per_row(), 2);
+        assert_eq!(bin_dequant(&q).shape(), (2, 70));
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let w = Matrix::zeros(16, 128);
+        let q = bin_quant(&w, 128);
+        // 16*128 sign bits + 16 groups * 16-bit scale
+        assert_eq!(q.storage_bits(), 16 * 128 + 16 * 16);
+    }
+}

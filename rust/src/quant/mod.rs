@@ -1,0 +1,72 @@
+//! Group-wise quantization substrate: RTN (1–8 bits), sign binarization,
+//! bit-packing, quantization-axis handling, and the paper's average-bits
+//! accounting (Eq. 10).
+//!
+//! Conventions (identical to python/compile/kernels/ref.py — the oracle):
+//!
+//! * Grouping is along the **last axis** (each row is cut into contiguous
+//!   groups of `group` elements). Column-wise quantization is expressed by
+//!   transposing first (see [`axis`]).
+//! * RTN: `dequant(q) = S * (q - Z)` with `S = (max-min)/(2^k-1)`,
+//!   `Z = round(-min/S)`, codes clipped to `[0, 2^k-1]` (paper Eqs. 6–7).
+//! * Binary: `sign(w) * S` with the L1-optimal `S = mean |w|` per group
+//!   (paper Eq. 8, XNOR-Net).
+//! * Storage cost (Eq. 10 accounting): each k-bit code costs k bits, each
+//!   group stores an fp16 scale (16 bits) and — RTN only — a k-bit integer
+//!   zero-point. This reproduces the paper's 2.14 (RTN-2, g=128) and 1.125
+//!   (BIN, g=128) average bitwidths exactly.
+
+pub mod axis;
+mod binary;
+mod pack;
+mod rtn;
+
+pub use axis::{Axis, QuantAxis};
+pub use binary::{bin_dequant, bin_quant, BinQuantized};
+pub use pack::{pack_codes, unpack_codes};
+pub use rtn::{rtn_dequant, rtn_quant, RtnQuantized};
+
+/// Bits of an fp16 scale / zero-point, for Eq. 10 accounting.
+pub const SCALE_BITS: u64 = 16;
+
+/// Storage cost in bits of a group-wise RTN quantization of `count` weights
+/// at `bits` bits with groups of `group` (scale fp16 + k-bit zero per group).
+pub fn rtn_storage_bits(count: usize, bits: u32, group: usize) -> u64 {
+    let groups = count.div_ceil(group) as u64;
+    count as u64 * bits as u64 + groups * (SCALE_BITS + bits as u64)
+}
+
+/// Storage cost in bits of group-wise sign binarization (scale fp16/group).
+pub fn bin_storage_bits(count: usize, group: usize) -> u64 {
+    let groups = count.div_ceil(group) as u64;
+    count as u64 + groups * SCALE_BITS
+}
+
+/// Average bits per parameter given total storage bits and parameter count
+/// (paper Eq. 10).
+pub fn avg_bits(total_bits: u64, params: usize) -> f64 {
+    total_bits as f64 / params as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_accounting_examples() {
+        // Paper Table 1: RTN 2-bit @ group 128 -> 2.14 avg bits.
+        let bits = rtn_storage_bits(128 * 100, 2, 128);
+        let avg = avg_bits(bits, 128 * 100);
+        assert!((avg - 2.140625).abs() < 1e-9, "rtn2 {avg}");
+        // BIN @ group 128 -> 1.125.
+        let avg = avg_bits(bin_storage_bits(128 * 100, 128), 128 * 100);
+        assert!((avg - 1.125).abs() < 1e-9, "bin {avg}");
+    }
+
+    #[test]
+    fn partial_group_rounds_up() {
+        // 130 weights, group 128 -> 2 groups.
+        let bits = rtn_storage_bits(130, 2, 128);
+        assert_eq!(bits, 130 * 2 + 2 * (16 + 2));
+    }
+}

@@ -1,0 +1,113 @@
+//! k-bit code packing into a little-endian bit stream.
+//!
+//! Code `j` occupies bits `[j*k, (j+1)*k)` of the stream, least-significant
+//! bit first within each byte. For k ∈ {1, 2, 4, 8} this matches the Pallas
+//! kernel layout (python/compile/kernels/ref.py `pack1`/`pack2`); k = 3/5/6/7
+//! codes straddle byte boundaries, which only the rust storage path uses.
+
+/// Pack `codes` (each `< 2^bits`) into a byte vector.
+pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(u32::from(c) < (1u32 << bits), "code {c} out of range for {bits} bits");
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + bits as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `count` codes of `bits` bits each.
+pub fn unpack_codes(packed: &[u8], bits: u32, count: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    // byte-parallel fast paths for the widths the hot path uses
+    match bits {
+        1 => return unpack_parallel::<8>(packed, count, |b, j| (b >> j) & 1),
+        2 => return unpack_parallel::<4>(packed, count, |b, j| (b >> (2 * j)) & 3),
+        4 => return unpack_parallel::<2>(packed, count, |b, j| (b >> (4 * j)) & 15),
+        _ => {}
+    }
+    let mask = if bits == 8 { 0xFF } else { (1u16 << bits) - 1 } as u16;
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = (packed[byte] >> off) as u16;
+        if off + bits as usize > 8 {
+            v |= (packed[byte + 1] as u16) << (8 - off);
+        }
+        out.push((v & mask) as u8);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack LANES codes per byte with a per-lane extractor (autovectorizes).
+#[inline]
+fn unpack_parallel<const LANES: usize>(
+    packed: &[u8],
+    count: usize,
+    lane: impl Fn(u8, usize) -> u8,
+) -> Vec<u8> {
+    let mut out = vec![0u8; count];
+    let full = count / LANES;
+    for (i, &b) in packed.iter().take(full).enumerate() {
+        for j in 0..LANES {
+            out[i * LANES + j] = lane(b, j);
+        }
+    }
+    for k in full * LANES..count {
+        out[k] = lane(packed[k / LANES], k % LANES);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn roundtrip_all_bitwidths() {
+        let mut rng = Rng::new(99);
+        for bits in 1..=8u32 {
+            for len in [0usize, 1, 7, 8, 9, 63, 64, 100] {
+                let codes: Vec<u8> =
+                    (0..len).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+                let packed = pack_codes(&codes, bits);
+                assert_eq!(packed.len(), (len * bits as usize).div_ceil(8));
+                assert_eq!(unpack_codes(&packed, bits, len), codes, "bits={bits} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn layout_matches_kernel_2bit() {
+        // codes [1,2,3,0] -> byte 0b00_11_10_01 = 0x39
+        let packed = pack_codes(&[1, 2, 3, 0], 2);
+        assert_eq!(packed, vec![0b0011_1001]);
+    }
+
+    #[test]
+    fn layout_matches_kernel_1bit() {
+        // bit j at position j%8, bit=1 <=> code 1
+        let packed = pack_codes(&[1, 0, 0, 0, 0, 0, 0, 1], 1);
+        assert_eq!(packed, vec![0b1000_0001]);
+    }
+
+    #[test]
+    fn three_bit_straddles_bytes() {
+        let codes = vec![0b111, 0b101, 0b010, 0b110, 0b001];
+        let packed = pack_codes(&codes, 3);
+        assert_eq!(unpack_codes(&packed, 3, 5), codes);
+        assert_eq!(packed.len(), 2);
+    }
+}

@@ -1,0 +1,186 @@
+//! Round-to-nearest group-wise quantization (paper §3.2, Eqs. 6–7).
+
+use super::{pack_codes, unpack_codes};
+use crate::tensor::Matrix;
+
+/// A group-wise RTN-quantized matrix (grouping along the last axis).
+#[derive(Debug, Clone)]
+pub struct RtnQuantized {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub group: usize,
+    /// Packed codes, row-major, `rows * cols` codes of `bits` bits.
+    pub packed: Vec<u8>,
+    /// fp scale per (row, group), row-major `rows * cols/group`.
+    pub scale: Vec<f32>,
+    /// integer zero-point per (row, group), stored as f32.
+    pub zero: Vec<f32>,
+}
+
+impl RtnQuantized {
+    /// Number of groups per row.
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group)
+    }
+
+    /// Storage cost in bits under the paper's Eq. 10 accounting, counting
+    /// the groups actually materialized (per-row grouping — short rows pay
+    /// real overhead; see DESIGN.md §7 on grouping axes).
+    pub fn storage_bits(&self) -> u64 {
+        let groups = (self.rows * self.groups_per_row()) as u64;
+        (self.rows * self.cols) as u64 * self.bits as u64
+            + groups * (crate::quant::SCALE_BITS + self.bits as u64)
+    }
+
+    /// In-memory packed size in bytes (codes + fp16 scales + packed zeros).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len() + self.scale.len() * 2 + (self.zero.len() * self.bits as usize).div_ceil(8)
+    }
+}
+
+/// Quantize `w` group-wise along rows at `bits` bits.
+///
+/// `cols` need not divide `group`; the final group of each row is shorter.
+/// Degenerate (constant) groups quantize to code 0 with scale 1, zero 0 —
+/// dequantizing exactly to the constant only when it is 0; otherwise RTN
+/// cannot represent it better anyway (max==min ⇒ S would be 0).
+pub fn rtn_quant(w: &Matrix, bits: u32, group: usize) -> RtnQuantized {
+    assert!((1..=8).contains(&bits), "bits {bits}");
+    assert!(group > 0);
+    let (rows, cols) = w.shape();
+    let gpr = cols.div_ceil(group);
+    let qmax = (1u32 << bits) - 1;
+    let mut codes = Vec::with_capacity(rows * cols);
+    let mut scale = Vec::with_capacity(rows * gpr);
+    let mut zero = Vec::with_capacity(rows * gpr);
+    for i in 0..rows {
+        let row = w.row(i);
+        for g in 0..gpr {
+            let chunk = &row[g * group..((g + 1) * group).min(cols)];
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in chunk {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let range = hi - lo;
+            if range <= 0.0 {
+                // degenerate group: represent (w - w) exactly iff w == 0
+                scale.push(if lo == 0.0 { 1.0 } else { lo });
+                zero.push(0.0);
+                // code 1 * scale reproduces a constant nonzero value:
+                // dequant = S*(q - Z) = lo*1. For lo==0, code 0.
+                let code = if lo == 0.0 { 0 } else { 1u8 };
+                codes.extend(std::iter::repeat_n(code, chunk.len()));
+                continue;
+            }
+            let s = range / qmax as f32;
+            let z = (-lo / s).round();
+            scale.push(s);
+            zero.push(z);
+            for &v in chunk {
+                let q = ((v / s).round() + z).clamp(0.0, qmax as f32);
+                codes.push(q as u8);
+            }
+        }
+    }
+    RtnQuantized { rows, cols, bits, group, packed: pack_codes(&codes, bits), scale, zero }
+}
+
+/// Dequantize back to a dense matrix: `S * (q - Z)` per group.
+pub fn rtn_dequant(q: &RtnQuantized) -> Matrix {
+    let codes = unpack_codes(&q.packed, q.bits, q.rows * q.cols);
+    let gpr = q.groups_per_row();
+    let mut out = Matrix::zeros(q.rows, q.cols);
+    for i in 0..q.rows {
+        let row = out.row_mut(i);
+        for g in 0..gpr {
+            let s = q.scale[i * gpr + g];
+            let z = q.zero[i * gpr + g];
+            let start = g * q.group;
+            let end = ((g + 1) * q.group).min(q.cols);
+            for j in start..end {
+                row[j] = s * (codes[i * q.cols + j] as f32 - z);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn dequant_bounded_by_half_step() {
+        let mut rng = Rng::new(21);
+        let w = rng.matrix(16, 128, 1.0);
+        for bits in [2, 3, 4, 8] {
+            let q = rtn_quant(&w, bits, 64);
+            let wd = rtn_dequant(&q);
+            let gpr = q.groups_per_row();
+            for i in 0..16 {
+                for g in 0..gpr {
+                    let s = q.scale[i * gpr + g];
+                    for j in g * 64..((g + 1) * 64).min(128) {
+                        let err = (w.at(i, j) - wd.at(i, j)).abs();
+                        // rounding error <= S/2 (+ Z rounding slack of S/2)
+                        assert!(err <= s * 1.01, "bits={bits} err={err} s={s}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(22);
+        let w = rng.matrix(8, 256, 1.0);
+        let errs: Vec<f32> = [1u32, 2, 4, 8]
+            .iter()
+            .map(|&b| rtn_dequant(&rtn_quant(&w, b, 64)).rel_err(&w))
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+        assert!(errs[3] < 1e-2);
+    }
+
+    #[test]
+    fn zero_matrix_exact() {
+        let w = Matrix::zeros(4, 64);
+        let q = rtn_quant(&w, 2, 32);
+        assert_eq!(rtn_dequant(&q).fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn constant_group_exact() {
+        let w = Matrix::from_fn(2, 32, |_, _| 3.5);
+        let q = rtn_quant(&w, 2, 32);
+        let wd = rtn_dequant(&q);
+        assert!(wd.rel_err(&w) < 1e-6, "constant groups should reconstruct");
+    }
+
+    #[test]
+    fn ragged_final_group() {
+        let mut rng = Rng::new(23);
+        let w = rng.matrix(3, 100, 1.0); // 100 = 64 + 36
+        let q = rtn_quant(&w, 4, 64);
+        assert_eq!(q.groups_per_row(), 2);
+        let wd = rtn_dequant(&q);
+        assert!(wd.rel_err(&w) < 0.1);
+    }
+
+    #[test]
+    fn one_bit_rtn_collapses_to_two_levels() {
+        let mut rng = Rng::new(24);
+        let w = rng.matrix(2, 64, 1.0);
+        let q = rtn_quant(&w, 1, 64);
+        let wd = rtn_dequant(&q);
+        for i in 0..2 {
+            let distinct: std::collections::BTreeSet<i64> =
+                wd.row(i).iter().map(|v| (v * 1e6) as i64).collect();
+            assert!(distinct.len() <= 2);
+        }
+    }
+}

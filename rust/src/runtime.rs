@@ -1,0 +1,160 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path.
+//!
+//! Interchange is HLO **text** (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Threading: PJRT objects in the `xla` crate are not `Send` — the
+//! coordinator confines one [`Engine`] to a dedicated executor thread and
+//! feeds it through channels (see [`crate::coordinator`]).
+//!
+//! Hot path: merged adapter weights are uploaded once as device-resident
+//! [`xla::PjRtBuffer`]s ([`Engine::upload_weights`]); a request then only
+//! uploads its token batch and calls `execute_b`.
+
+use crate::adapter::fmt::{Tensor, TensorData};
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled HLO program plus its I/O metadata.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of inputs expected (tokens + weights).
+    pub arity: usize,
+}
+
+/// PJRT engine: one CPU client + a set of compiled programs.
+pub struct Engine {
+    client: xla::PjRtClient,
+    programs: BTreeMap<String, Program>,
+    artifacts_dir: PathBuf,
+}
+
+/// Device-resident weights for one adapter (outputs of
+/// [`Engine::upload_weights`]) — the unit the coordinator's merged-weight
+/// cache holds.
+pub struct DeviceWeights {
+    pub buffers: Vec<xla::PjRtBuffer>,
+    /// Host-side f32 count (for cache byte accounting).
+    pub elements: usize,
+}
+
+impl DeviceWeights {
+    /// Approximate device bytes (f32).
+    pub fn bytes(&self) -> usize {
+        self.elements * 4
+    }
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, programs: BTreeMap::new(), artifacts_dir: artifacts_dir.as_ref().into() })
+    }
+
+    /// The artifacts directory this engine loads from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile `<artifacts>/<file>` under the key `name`.
+    pub fn load_program(&mut self, name: &str, file: &str, arity: usize) -> anyhow::Result<()> {
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.programs.insert(name.to_string(), Program { exe, arity });
+        Ok(())
+    }
+
+    /// Load the batched-forward program of a model for one batch bucket.
+    /// Program key: `<model>/b<bucket>`.
+    pub fn load_model_fwd(
+        &mut self,
+        model: &str,
+        bucket: usize,
+        n_params: usize,
+    ) -> anyhow::Result<()> {
+        let key = format!("{model}/b{bucket}");
+        let file = format!("{model}.fwd.b{bucket}.hlo.txt");
+        self.load_program(&key, &file, 1 + n_params)
+    }
+
+    pub fn has_program(&self, name: &str) -> bool {
+        self.programs.contains_key(name)
+    }
+
+    /// Upload a weight list (in `param_names` order) to the device.
+    pub fn upload_weights(&self, weights: &[Tensor]) -> anyhow::Result<DeviceWeights> {
+        let mut buffers = Vec::with_capacity(weights.len());
+        let mut elements = 0usize;
+        for t in weights {
+            let buf = match &t.data {
+                TensorData::F32(v) => {
+                    elements += v.len();
+                    self.client.buffer_from_host_buffer::<f32>(v, &t.dims, None)?
+                }
+                TensorData::I32(v) => {
+                    self.client.buffer_from_host_buffer::<i32>(v, &t.dims, None)?
+                }
+                TensorData::U8(v) => self.client.buffer_from_host_buffer::<u8>(v, &t.dims, None)?,
+            };
+            buffers.push(buf);
+        }
+        Ok(DeviceWeights { buffers, elements })
+    }
+
+    /// Upload an i32 token batch.
+    pub fn upload_tokens(&self, tokens: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(tokens, dims, None)?)
+    }
+
+    /// Execute a program on device-resident inputs: tokens first, then the
+    /// weight buffers. Returns the flattened f32 output (logits) — the
+    /// artifacts are lowered with `return_tuple=True`, hence `to_tuple1`.
+    pub fn execute(
+        &self,
+        name: &str,
+        tokens: &xla::PjRtBuffer,
+        weights: &DeviceWeights,
+    ) -> anyhow::Result<Vec<f32>> {
+        let prog = self.programs.get(name).with_context(|| format!("program {name} not loaded"))?;
+        if 1 + weights.buffers.len() != prog.arity {
+            bail!(
+                "program {name} expects {} inputs, got {}",
+                prog.arity,
+                1 + weights.buffers.len()
+            );
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(prog.arity);
+        args.push(tokens);
+        args.extend(weights.buffers.iter());
+        let out = prog.exe.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let tup = lit.to_tuple1()?;
+        Ok(tup.to_vec::<f32>()?)
+    }
+
+    /// Convenience: host-side tokens → logits.
+    pub fn forward(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        dims: &[usize],
+        weights: &DeviceWeights,
+    ) -> anyhow::Result<Vec<f32>> {
+        let tok = self.upload_tokens(tokens, dims)?;
+        self.execute(name, &tok, weights)
+    }
+
+    /// Raw client access (tests / benches).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}

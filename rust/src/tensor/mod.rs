@@ -1,0 +1,310 @@
+//! Dense f32 matrix/vector substrate.
+//!
+//! The whole quantization stack works on small dense matrices (LoRA factors
+//! are at most `max(d_model, d_ff) x rank`), so a simple row-major `Matrix`
+//! with cache-friendly kernels is all we need — no BLAS available offline.
+
+mod ops;
+
+pub use ops::{matmul, matmul_at_b, matmul_a_bt, outer};
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major vec; panics if sizes mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape {}x{} vs len {}", rows, cols, data.len());
+        Self { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.at(i, j));
+            }
+        }
+        t
+    }
+
+    /// Sub-matrix of columns `[c0, c1)`.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        Matrix::from_fn(self.rows, c1 - c0, |i, j| self.at(i, c0 + j))
+    }
+
+    /// Sub-matrix of rows `[r0, r1)`.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        let data = self.data[r0 * self.cols..r1 * self.cols].to_vec();
+        Matrix::from_vec(r1 - r0, self.cols, data)
+    }
+
+    /// Select rows by index (gather).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Select columns by index (gather).
+    pub fn gather_cols(&self, idx: &[usize]) -> Matrix {
+        Matrix::from_fn(self.rows, idx.len(), |i, k| self.at(i, idx[k]))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Sum of absolute values.
+    pub fn l1_norm(&self) -> f32 {
+        self.data.iter().map(|v| v.abs()).sum()
+    }
+
+    /// Element-wise `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Element-wise `self + other`.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scale(&self, alpha: f32) -> Matrix {
+        let data = self.data.iter().map(|v| v * alpha).collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Relative Frobenius error `||self - other||_F / max(||other||_F, eps)`.
+    pub fn rel_err(&self, other: &Matrix) -> f32 {
+        self.sub(other).fro_norm() / other.fro_norm().max(1e-12)
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        Matrix::from_fn(self.rows, self.cols + other.cols, |i, j| {
+            if j < self.cols { self.at(i, j) } else { other.at(i, j - self.cols) }
+        })
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Max absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+/// Dot product of two slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolled accumulation; the compiler autovectorizes this form.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in 4 * chunks..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm of a slice.
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_fn(3, 5, |i, j| (i * 7 + j * 3) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn slices() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let c = m.slice_cols(1, 3);
+        assert_eq!(c.shape(), (4, 2));
+        assert_eq!(c.at(2, 0), m.at(2, 1));
+        let r = m.slice_rows(2, 4);
+        assert_eq!(r.shape(), (2, 4));
+        assert_eq!(r.at(0, 3), m.at(2, 3));
+    }
+
+    #[test]
+    fn norms_and_arith() {
+        let a = Matrix::from_vec(1, 3, vec![3.0, 0.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        assert!((a.l1_norm() - 7.0).abs() < 1e-6);
+        let b = a.scale(2.0);
+        assert_eq!(b.data(), &[6.0, 0.0, 8.0]);
+        assert_eq!(b.sub(&a).data(), &[3.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn cat() {
+        let a = Matrix::eye(2);
+        let b = Matrix::zeros(2, 1);
+        let h = a.hcat(&b);
+        assert_eq!(h.shape(), (2, 3));
+        let v = a.vcat(&Matrix::eye(2));
+        assert_eq!(v.shape(), (4, 2));
+        assert_eq!(v.at(3, 1), 1.0);
+    }
+
+    #[test]
+    fn gather() {
+        let m = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.row(0), m.row(2));
+        let gc = m.gather_cols(&[1]);
+        assert_eq!(gc.col(0), m.col(1));
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..37).map(|i| (36 - i) as f32 * 0.2).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+}

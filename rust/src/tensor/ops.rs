@@ -1,0 +1,147 @@
+//! Matrix products. Row-major, cache-blocked enough for LoRA-sized work.
+
+use super::{dot, Matrix};
+
+/// `C = A @ B` (A: m×k, B: k×n).
+///
+/// i-k-j loop order: the inner j-loop streams one row of B and one row of C,
+/// which autovectorizes and stays in L1 for LoRA-factor shapes.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul {:?} x {:?}", a.shape(), b.shape());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        // split borrows: write through raw row pointer of c
+        let crow = unsafe {
+            std::slice::from_raw_parts_mut(c.data_mut().as_mut_ptr().add(i * n), n)
+        };
+        for p in 0..k {
+            let av = arow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(p);
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = Aᵀ @ B` (A: k×m, B: k×n) without materializing the transpose.
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b {:?} x {:?}", a.shape(), b.shape());
+    let (k, m) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(c.data_mut().as_mut_ptr().add(i * n), n)
+            };
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = A @ Bᵀ` (A: m×k, B: n×k) — rows of both operands are contiguous,
+/// so every inner product is a pair of streamed slices.
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt {:?} x {:?}", a.shape(), b.shape());
+    let m = a.rows();
+    let n = b.rows();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            c.set(i, j, dot(arow, b.row(j)));
+        }
+    }
+    c
+}
+
+/// Outer product `u vᵀ` as an m×n matrix.
+pub fn outer(u: &[f32], v: &[f32]) -> Matrix {
+    let mut c = Matrix::zeros(u.len(), v.len());
+    for (i, &ui) in u.iter().enumerate() {
+        let row = c.row_mut(i);
+        for (j, &vj) in v.iter().enumerate() {
+            row[j] = ui * vj;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for p in 0..a.cols() {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut s = seed.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+        Matrix::from_fn(r, c, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) as f32 - 0.5
+        })
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = rand_mat(7, 11, 1);
+        let b = rand_mat(11, 5, 2);
+        let c = matmul(&a, &b);
+        assert!(c.rel_err(&naive(&a, &b)) < 1e-5);
+    }
+
+    #[test]
+    fn at_b_matches() {
+        let a = rand_mat(9, 6, 3);
+        let b = rand_mat(9, 4, 4);
+        let c = matmul_at_b(&a, &b);
+        assert!(c.rel_err(&naive(&a.transpose(), &b)) < 1e-5);
+    }
+
+    #[test]
+    fn a_bt_matches() {
+        let a = rand_mat(5, 8, 5);
+        let b = rand_mat(6, 8, 6);
+        let c = matmul_a_bt(&a, &b);
+        assert!(c.rel_err(&naive(&a, &b.transpose())) < 1e-5);
+    }
+
+    #[test]
+    fn outer_matches() {
+        let u = vec![1.0, 2.0];
+        let v = vec![3.0, 4.0, 5.0];
+        let c = outer(&u, &v);
+        assert_eq!(c.at(1, 2), 10.0);
+        assert_eq!(c.shape(), (2, 3));
+    }
+}

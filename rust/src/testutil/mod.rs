@@ -1,0 +1,12 @@
+//! Deterministic PRNG + a small property-based testing framework.
+//!
+//! `proptest` is not available offline, so `proptests.rs` (the integration
+//! suite) uses this mini-framework: a generator produces random cases from a
+//! seeded [`Rng`], `check` runs the property over many cases and, on
+//! failure, reports the seed + case index so the exact case replays.
+
+mod prng;
+mod property;
+
+pub use prng::Rng;
+pub use property::{check, check_with, Config};

@@ -1,0 +1,177 @@
+//! xoshiro256** — small, fast, deterministic PRNG (no rand crate offline).
+
+use crate::tensor::Matrix;
+
+/// Deterministic PRNG for tests, workloads and initializations.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seeded construction (SplitMix64 expansion of the seed).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal (Box-Muller).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f32().max(1e-9);
+        let u2 = self.f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Matrix of iid N(0, std²) entries.
+    pub fn matrix(&mut self, rows: usize, cols: usize, std: f32) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| self.normal() * std)
+    }
+
+    /// Exponential with given rate (inter-arrival sampling).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        -(1.0 - u).ln() / rate
+    }
+
+    /// Zipf-distributed index in [0, n) with exponent `alpha` (adapter
+    /// popularity skew in the serving workload).
+    pub fn zipf(&mut self, n: usize, alpha: f64) -> usize {
+        // cumulative-scan inverse CDF (n is at most a few thousand adapters;
+        // the serving workload caches popularity tables anyway).
+        let mut total = 0.0;
+        for k in 1..=n {
+            total += 1.0 / (k as f64).powf(alpha);
+        }
+        let u = ((self.next_u64() >> 11) as f64 / (1u64 << 53) as f64).min(0.999_999);
+        let target = u * total;
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(alpha);
+            if acc >= target {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Shuffle a slice in place (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// LoRA-like factor pair with geometrically decaying spectrum — the
+    /// realistic input distribution for quantizer tests (trained adapters
+    /// have fast-decaying singular values).
+    pub fn lora_pair(&mut self, m: usize, n: usize, r: usize, decay: f32) -> (Matrix, Matrix) {
+        let mut b = Matrix::zeros(m, r);
+        let mut a = Matrix::zeros(r, n);
+        for k in 0..r {
+            let s = decay.powi(k as i32);
+            let u: Vec<f32> = (0..m).map(|_| self.normal() / (m as f32).sqrt()).collect();
+            let v: Vec<f32> = (0..n).map(|_| self.normal() / (n as f32).sqrt()).collect();
+            for i in 0..m {
+                b.set(i, k, u[i] * s.sqrt() * 3.0);
+            }
+            for j in 0..n {
+                a.set(k, j, v[j] * s.sqrt() * 3.0);
+            }
+        }
+        (b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f32_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f32> = (0..20000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_skewed() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..5000 {
+            counts[r.zipf(10, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[9], "zipf head {} tail {}", counts[0], counts[9]);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(4);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,76 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//!
+//! ```
+//! use loraquant::testutil::{check, Rng};
+//! check("dot is symmetric", |rng: &mut Rng| {
+//!     let a: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+//!     let b: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+//!     let d1 = loraquant::tensor::dot(&a, &b);
+//!     let d2 = loraquant::tensor::dot(&b, &a);
+//!     assert!((d1 - d2).abs() < 1e-5);
+//! });
+//! ```
+
+use super::Rng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case i runs with seed `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `Config::default().cases` random cases. The property
+/// receives a per-case seeded [`Rng`]; assertion failures are caught and
+/// re-raised with the replaying seed + case index in the message.
+pub fn check(name: &str, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    check_with(Config::default(), name, prop);
+}
+
+/// [`check`] with an explicit configuration.
+pub fn check_with(cfg: Config, name: &str, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (replay seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("trivial", |rng| {
+            let x = rng.f32();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check_with(Config { cases: 8, seed: 1 }, "always fails", |_rng| {
+            panic!("boom");
+        });
+    }
+}

@@ -1,0 +1,98 @@
+//! Synthetic serving workload generator: Poisson arrivals over a Zipf
+//! adapter-popularity distribution — the multi-tenant request mix the
+//! paper's LLM-customization setting implies.
+
+use crate::coordinator::registry::AdapterId;
+use crate::testutil::Rng;
+use std::time::Duration;
+
+/// Workload parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadConfig {
+    /// Mean request rate (requests/second) for the open-loop generator.
+    pub rate: f64,
+    /// Zipf exponent of adapter popularity (0 = uniform).
+    pub zipf_alpha: f64,
+    /// Number of requests to generate.
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self { rate: 200.0, zipf_alpha: 1.1, n_requests: 200, seed: 7 }
+    }
+}
+
+/// One generated arrival.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// Offset from workload start.
+    pub at: Duration,
+    pub adapter: AdapterId,
+}
+
+/// Generate an open-loop arrival schedule over the given adapters.
+pub fn generate(cfg: &WorkloadConfig, adapters: &[AdapterId]) -> Vec<Arrival> {
+    assert!(!adapters.is_empty());
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    // Zipf over a popularity permutation so "popular" ids are arbitrary
+    let mut perm: Vec<usize> = (0..adapters.len()).collect();
+    rng.shuffle(&mut perm);
+    for _ in 0..cfg.n_requests {
+        t += rng.exp(cfg.rate);
+        let pick = if cfg.zipf_alpha <= 0.0 {
+            rng.below(adapters.len())
+        } else {
+            rng.zipf(adapters.len(), cfg.zipf_alpha)
+        };
+        out.push(Arrival { at: Duration::from_secs_f64(t), adapter: adapters[perm[pick]] });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone_and_counted() {
+        let cfg = WorkloadConfig { n_requests: 100, ..Default::default() };
+        let arr = generate(&cfg, &[0, 1, 2]);
+        assert_eq!(arr.len(), 100);
+        for w in arr.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn rate_controls_density() {
+        let slow = generate(&WorkloadConfig { rate: 10.0, n_requests: 50, ..Default::default() }, &[0]);
+        let fast = generate(&WorkloadConfig { rate: 1000.0, n_requests: 50, ..Default::default() }, &[0]);
+        assert!(slow.last().unwrap().at > fast.last().unwrap().at);
+    }
+
+    #[test]
+    fn zipf_skews_popularity() {
+        let cfg = WorkloadConfig { zipf_alpha: 1.3, n_requests: 2000, ..Default::default() };
+        let ids: Vec<AdapterId> = (0..20).collect();
+        let arr = generate(&cfg, &ids);
+        let mut counts = vec![0usize; 20];
+        for a in &arr {
+            counts[a.adapter as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(counts[0] > 3 * counts[10].max(1), "head {} vs mid {}", counts[0], counts[10]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = WorkloadConfig::default();
+        let a = generate(&cfg, &[0, 1]);
+        let b = generate(&cfg, &[0, 1]);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.at == y.at && x.adapter == y.adapter));
+    }
+}

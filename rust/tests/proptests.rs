@@ -1,0 +1,197 @@
+//! Property-based tests over the crate's core invariants, via the
+//! in-tree mini-framework (testutil::check — proptest is unavailable
+//! offline). Each property runs 64 random cases; failures report the
+//! replaying seed.
+
+use loraquant::loraquant::{
+    quantize_site, reparameterize, select_h, split_at, HSelect, LoraQuantConfig,
+};
+use loraquant::quant::{
+    bin_dequant, bin_quant, pack_codes, rtn_dequant, rtn_quant, unpack_codes,
+};
+use loraquant::tensor::matmul;
+use loraquant::testutil::{check, check_with, Config, Rng};
+
+fn rand_dims(rng: &mut Rng) -> (usize, usize, usize) {
+    let m = [32, 64, 96, 128][rng.below(4)];
+    let n = [32, 64, 128][rng.below(3)];
+    let r = [4, 8, 16][rng.below(3)];
+    (m, n, r)
+}
+
+#[test]
+fn prop_svd_split_is_exact_for_any_h() {
+    check("split_at(h) sums to BA", |rng| {
+        let (m, n, r) = rand_dims(rng);
+        let decay = rng.range_f32(0.4, 0.95);
+        let (b, a) = rng.lora_pair(m, n, r, decay);
+        let ba = matmul(&b, &a);
+        let rp = reparameterize(&b, &a);
+        let h = rng.below(r + 1);
+        let sub = split_at(&rp, h);
+        let err = sub.reconstruct().rel_err(&ba);
+        assert!(err < 2e-3, "h={h} err={err}");
+    });
+}
+
+#[test]
+fn prop_variance_rule_definition() {
+    check("select_h(Ratio) is the smallest h covering rho", |rng| {
+        let r = rng.range(2, 24);
+        let mut s: Vec<f32> = (0..r).map(|_| rng.f32() + 1e-3).collect();
+        s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let rho = rng.range_f32(0.05, 1.0);
+        let h = select_h(&s, HSelect::Ratio(rho));
+        let total: f64 = s.iter().map(|x| (*x as f64).powi(2)).sum();
+        let cover = |k: usize| s[..k].iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / total;
+        assert!(h >= 1 && h <= s.len());
+        assert!(cover(h) >= rho as f64 - 1e-6, "h={h} covers {}", cover(h));
+        if h > 1 {
+            assert!(cover(h - 1) < rho as f64 + 1e-6, "h-1 already covers");
+        }
+    });
+}
+
+#[test]
+fn prop_rtn_roundtrip_error_bounded_by_scale() {
+    check("rtn dequant error <= scale", |rng| {
+        let rows = rng.range(1, 8);
+        let cols = [32, 64, 100][rng.below(3)];
+        let std = rng.range_f32(0.1, 3.0);
+        let w = rng.matrix(rows, cols, std);
+        let bits = 1 + rng.below(4) as u32;
+        let group = [16, 32, 64][rng.below(3)];
+        let q = rtn_quant(&w, bits, group);
+        let wd = rtn_dequant(&q);
+        let gpr = q.groups_per_row();
+        for i in 0..rows {
+            for j in 0..cols {
+                let s = q.scale[i * gpr + j / group].abs();
+                let e = (w.at(i, j) - wd.at(i, j)).abs();
+                assert!(e <= s * 1.01 + 1e-6, "bits={bits} e={e} s={s}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bin_scale_is_group_l1_mean_and_sign_preserved() {
+    check("binarization: sign kept, |dequant| = group L1 mean", |rng| {
+        let rows = rng.range(1, 6);
+        let std = rng.range_f32(0.2, 2.0);
+        let w = rng.matrix(rows, 64, std);
+        let q = bin_quant(&w, 32);
+        let wd = bin_dequant(&q);
+        for i in 0..w.rows() {
+            for j in 0..64 {
+                assert_eq!(w.at(i, j) >= 0.0, wd.at(i, j) >= 0.0);
+                let s = q.scale[i * 2 + j / 32];
+                assert!((wd.at(i, j).abs() - s).abs() < 1e-6);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_packing_roundtrips_all_widths() {
+    check("pack/unpack identity", |rng| {
+        let bits = 1 + rng.below(8) as u32;
+        let len = rng.below(200);
+        let codes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+        assert_eq!(unpack_codes(&pack_codes(&codes, bits), bits, len), codes);
+    });
+}
+
+#[test]
+fn prop_avg_bits_between_low_and_high() {
+    // Mixed precision must land between pure-1-bit and pure-k-bit costs.
+    check_with(Config { cases: 24, seed: 99 }, "avg bits sandwich", |rng| {
+        let (m, n, r) = rand_dims(rng);
+        let (b, a) = rng.lora_pair(m, n, r, 0.7);
+        let bits = 2 + rng.below(2) as u32;
+        let cfg = LoraQuantConfig {
+            ste: None,
+            ..LoraQuantConfig::variant(bits, rng.range_f32(0.3, 0.99))
+        };
+        let site = quantize_site(&b, &a, &cfg);
+        let ab = site.avg_bits();
+        assert!(ab >= 1.0, "{ab}");
+        // + scale overhead can push slightly past bits for tiny groups
+        assert!(ab <= bits as f64 + 1.5, "{ab}");
+    });
+}
+
+#[test]
+fn prop_dynamic_h_monotone_in_rho() {
+    check_with(Config { cases: 24, seed: 5 }, "h(rho) monotone", |rng| {
+        let (m, n, r) = rand_dims(rng);
+        let (b, a) = rng.lora_pair(m, n, r, 0.6);
+        let rp = reparameterize(&b, &a);
+        let mut prev = 0usize;
+        for k in 1..=10 {
+            let h = select_h(&rp.s, HSelect::Ratio(k as f32 * 0.1));
+            assert!(h >= prev, "rho={} h={h} prev={prev}", k as f32 * 0.1);
+            prev = h;
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_never_mixes_or_drops() {
+    use loraquant::coordinator::{BatcherConfig, DynamicBatcher, PendingRequest};
+    use std::time::{Duration, Instant};
+    check_with(Config { cases: 48, seed: 31 }, "batcher conservation", |rng| {
+        let bucket = 1 + rng.below(8);
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            bucket,
+            max_wait: Duration::from_millis(0),
+        });
+        let t0 = Instant::now();
+        let n = rng.below(64);
+        let mut per_adapter = std::collections::BTreeMap::new();
+        for i in 0..n {
+            let adapter = rng.below(5) as u32;
+            *per_adapter.entry(adapter).or_insert(0usize) += 1;
+            b.push(PendingRequest { adapter, enqueued: t0, payload: i });
+        }
+        let mut got = std::collections::BTreeMap::new();
+        while let Some(batch) = b.pop_ready(t0 + Duration::from_secs(1)) {
+            assert!(batch.requests.len() <= bucket);
+            assert!(batch.requests.iter().all(|r| r.adapter == batch.adapter));
+            *got.entry(batch.adapter).or_insert(0usize) += batch.requests.len();
+        }
+        assert_eq!(got, per_adapter, "every request must be released exactly once");
+        assert_eq!(b.pending(), 0);
+    });
+}
+
+#[test]
+fn prop_lru_respects_budget_and_conserves_bytes() {
+    use loraquant::coordinator::LruCache;
+    check_with(Config { cases: 48, seed: 77 }, "lru byte accounting", |rng| {
+        let budget = 50 + rng.below(100);
+        let mut c: LruCache<u32, u32> = LruCache::new(budget);
+        for i in 0..rng.below(40) {
+            let k = rng.below(12) as u32;
+            let bytes = 1 + rng.below(30);
+            c.insert(k, i as u32, bytes);
+            assert!(c.used_bytes() <= budget.max(bytes), "over budget");
+            assert!(c.len() >= 1);
+        }
+    });
+}
+
+#[test]
+fn prop_rouge_l_bounds_and_identity() {
+    use loraquant::eval::rouge_l;
+    check("rouge-l in [0,1], 1 iff equal-enough", |rng| {
+        let n = 1 + rng.below(10);
+        let a: Vec<i32> = (0..n).map(|_| rng.below(8) as i32).collect();
+        let b: Vec<i32> = (0..1 + rng.below(10)).map(|_| rng.below(8) as i32).collect();
+        let f = rouge_l(&a, &b);
+        assert!((0.0..=1.0).contains(&f));
+        assert_eq!(rouge_l(&a, &a), 1.0);
+        // symmetry of F1
+        assert!((f - rouge_l(&b, &a)).abs() < 1e-12);
+    });
+}
