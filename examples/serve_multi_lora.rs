@@ -31,10 +31,14 @@ fn main() -> anyhow::Result<()> {
     let dir = settings.artifacts.join(&model);
     let tasks = ["modadd", "modchain", "transform", "keyword"];
 
-    let mut cfg = CoordinatorConfig::new(&settings.artifacts, &model);
+    // 4 executor workers (adapter-affinity routed) + 2 merge threads; a
+    // batch decodes on the smallest compiled bucket that fits it.
+    let mut cfg = CoordinatorConfig::new(&settings.artifacts, &model)
+        .with_workers(4)
+        .with_buckets(vec![1, 8]);
     cfg.max_wait = Duration::from_millis(5);
     let (coord, join) = Coordinator::start(cfg)?;
-    println!("== serve_multi_lora: model {model}");
+    println!("== serve_multi_lora: model {model} (4-worker pool)");
 
     // --- register FP16 + quantized variants of each task adapter ---------
     let qcfg = lq(2, 0.9);
@@ -84,6 +88,14 @@ fn main() -> anyhow::Result<()> {
         }
         fleet.push(coord.register_adapter(StoredAdapter::Quantized(q), task)?);
     }
+    // warm the whole fleet off the request path before traffic arrives
+    let t0 = Instant::now();
+    let warm: Vec<_> = fleet.iter().map(|&id| coord.prefetch(id)).collect();
+    for rx in warm {
+        rx.recv()??;
+    }
+    println!("prefetched {} tenants in {:?}", fleet.len(), t0.elapsed());
+
     let wl = WorkloadConfig { rate: 150.0, n_requests: 192, zipf_alpha: 1.1, seed: 3 };
     let schedule = generate(&wl, &fleet);
     println!("\nreplaying {} requests over {} tenants (Poisson 150/s, Zipf 1.1)…", schedule.len(), fleet.len());
@@ -111,6 +123,12 @@ fn main() -> anyhow::Result<()> {
         cache.evictions,
         nreg
     );
+    for s in coord.metrics_per_worker()? {
+        println!(
+            "  worker {}: requests={} batches={} cached_adapters={}",
+            s.worker, s.metrics.requests, s.metrics.batches, s.cached_adapters
+        );
+    }
     coord.shutdown();
     let _ = join.join();
     println!("\nOK — all three layers composed: HLO artifacts (L2/L1) executed by the");

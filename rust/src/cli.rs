@@ -65,6 +65,21 @@ impl Args {
         }
     }
 
+    /// Comma-separated integer list, e.g. `--buckets 1,8`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .with_context(|| format!("--{key}: bad integer '{x}' in '{v}'"))
+                })
+                .collect(),
+        }
+    }
+
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
@@ -111,5 +126,14 @@ mod tests {
         assert!(a.require("missing").is_err());
         assert!(a.usize_or("n", 0).is_err());
         assert_eq!(a.f32_or("absent", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn integer_lists() {
+        let a = Args::parse(&s(&["x", "--buckets", "1, 4,8"])).unwrap();
+        assert_eq!(a.usize_list_or("buckets", &[8]).unwrap(), vec![1, 4, 8]);
+        assert_eq!(a.usize_list_or("absent", &[1, 8]).unwrap(), vec![1, 8]);
+        let bad = Args::parse(&s(&["x", "--buckets", "1,x"])).unwrap();
+        assert!(bad.usize_list_or("buckets", &[]).is_err());
     }
 }

@@ -197,4 +197,76 @@ mod tests {
         assert_eq!(batch.requests.len(), 2);
         assert_eq!(b.pending(), 3);
     }
+
+    // ---- injected-Instant coverage of the release policy ---------------
+
+    #[test]
+    fn full_bucket_releases_before_deadline_batches() {
+        // adapter 9 is old but partial; adapter 2 is fresh but full — the
+        // full bucket must win the pop.
+        let t0 = Instant::now();
+        let cfg = BatcherConfig { bucket: 2, max_wait: Duration::from_millis(5) };
+        let mut b = DynamicBatcher::new(cfg);
+        b.push(req(9, t0));
+        b.push(req(2, t0 + Duration::from_millis(20)));
+        b.push(req(2, t0 + Duration::from_millis(20)));
+        let batch = b.pop_ready(t0 + Duration::from_millis(30)).unwrap();
+        assert_eq!(batch.adapter, 2, "full bucket outranks older partial");
+        assert_eq!(batch.requests.len(), 2);
+        let batch = b.pop_ready(t0 + Duration::from_millis(30)).unwrap();
+        assert_eq!(batch.adapter, 9);
+    }
+
+    #[test]
+    fn max_wait_release_is_exact_at_the_deadline() {
+        let t0 = Instant::now();
+        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(10) };
+        let mut b = DynamicBatcher::new(cfg);
+        b.push(req(1, t0));
+        assert!(b.pop_ready(t0 + Duration::from_millis(9)).is_none(), "before deadline");
+        let batch = b
+            .pop_ready(t0 + Duration::from_millis(10))
+            .expect("release exactly at max_wait (>=, not >)");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn expired_adapters_drain_oldest_first() {
+        // three expired adapters, distinct head ages — pops must come back
+        // oldest-head-first so no tenant starves behind a busier one.
+        let t0 = Instant::now();
+        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(1) };
+        let mut b = DynamicBatcher::new(cfg);
+        b.push(req(4, t0 + Duration::from_millis(2)));
+        b.push(req(7, t0));
+        b.push(req(5, t0 + Duration::from_millis(1)));
+        let now = t0 + Duration::from_secs(1);
+        let order: Vec<AdapterId> = std::iter::from_fn(|| b.pop_ready(now).map(|x| x.adapter))
+            .collect();
+        assert_eq!(order, vec![7, 5, 4]);
+    }
+
+    #[test]
+    fn next_deadline_none_when_empty() {
+        let t0 = Instant::now();
+        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10) };
+        let mut b = DynamicBatcher::new(cfg);
+        assert!(b.next_deadline(t0).is_none(), "idle batcher has no deadline");
+        b.push(req(1, t0));
+        assert!(b.next_deadline(t0).is_some());
+        b.pop_ready(t0 + Duration::from_millis(10)).unwrap();
+        let later = t0 + Duration::from_millis(11);
+        assert!(b.next_deadline(later).is_none(), "idle again after drain");
+    }
+
+    #[test]
+    fn next_deadline_saturates_past_due() {
+        let t0 = Instant::now();
+        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10) };
+        let mut b = DynamicBatcher::new(cfg);
+        b.push(req(1, t0));
+        // long past the deadline: the wait must clamp to zero, not wrap
+        assert_eq!(b.next_deadline(t0 + Duration::from_secs(5)), Some(Duration::ZERO));
+    }
 }

@@ -72,6 +72,20 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.entries.get(k).map(|(v, _, _)| v)
     }
 
+    /// Refresh recency without counting a hit or miss (e.g. a prefetch
+    /// of an already-resident entry must protect it from eviction
+    /// without skewing request-path stats). Returns whether it exists.
+    pub fn touch(&mut self, k: &K) -> bool {
+        self.clock += 1;
+        match self.entries.get_mut(k) {
+            Some((_, _, used)) => {
+                *used = self.clock;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Insert, evicting LRU entries until within budget. The inserted
     /// entry itself is never evicted.
     pub fn insert(&mut self, k: K, v: V, bytes: usize) {
@@ -186,5 +200,71 @@ mod tests {
         assert_eq!(c.remove(&1), Some(1));
         assert_eq!(c.used_bytes(), 0);
         assert_eq!(c.remove(&1), None);
+    }
+
+    #[test]
+    fn eviction_follows_lru_order_across_multiple_victims() {
+        // one oversized insert must evict in strict LRU order until the
+        // budget fits: 2 (oldest untouched), then 3, sparing 1 (touched).
+        let mut c: LruCache<u32, u32> = LruCache::new(30);
+        c.insert(1, 10, 10);
+        c.insert(2, 20, 10);
+        c.insert(3, 30, 10);
+        c.get(&1); // recency: 2 < 3 < 1
+        c.insert(4, 40, 15); // 45 bytes resident: needs exactly two victims
+        assert!(c.peek(&2).is_none(), "LRU entry 2 evicted first");
+        assert!(c.peek(&3).is_none(), "still over budget: 3 evicted next");
+        assert!(c.peek(&1).is_some(), "recently-touched entry survives");
+        assert!(c.peek(&4).is_some(), "inserted entry is never a victim");
+        assert_eq!(c.stats().evictions, 2);
+        assert_eq!(c.used_bytes(), 25, "1(10) + 4(15)");
+    }
+
+    #[test]
+    fn remove_then_reinsert_keeps_accounting_exact() {
+        let mut c: LruCache<u32, u32> = LruCache::new(100);
+        c.insert(1, 1, 40);
+        c.insert(2, 2, 30);
+        assert_eq!(c.used_bytes(), 70);
+        assert_eq!(c.remove(&1), Some(1));
+        assert_eq!(c.used_bytes(), 30);
+        c.insert(1, 9, 25);
+        assert_eq!(c.used_bytes(), 55);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.peek(&1), Some(&9));
+        // removal must not have counted as an eviction or touched hit/miss
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (0, 0, 0));
+    }
+
+    #[test]
+    fn touch_refreshes_recency_without_stats() {
+        let mut c: LruCache<u32, u32> = LruCache::new(20);
+        c.insert(1, 1, 10);
+        c.insert(2, 2, 10);
+        assert!(c.touch(&1), "1 is resident");
+        assert!(!c.touch(&9), "9 is not");
+        c.insert(3, 3, 10); // over budget: LRU is now 2, not 1
+        assert!(c.peek(&1).is_some(), "touched entry survives eviction");
+        assert!(c.peek(&2).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "touch must not count");
+    }
+
+    #[test]
+    fn stats_match_scripted_access_sequence() {
+        let mut c: LruCache<u32, &'static str> = LruCache::new(100);
+        assert!(c.get(&1).is_none()); // miss
+        c.insert(1, "a", 10);
+        assert!(c.get(&1).is_some()); // hit
+        assert!(c.get(&2).is_none()); // miss
+        c.insert(2, "b", 10);
+        assert!(c.get(&2).is_some()); // hit
+        assert!(c.get(&1).is_some()); // hit
+        c.peek(&3); // peek never counts
+        assert!(c.get(&3).is_none()); // miss
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (3, 3, 0));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
     }
 }

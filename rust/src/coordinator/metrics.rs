@@ -46,6 +46,16 @@ impl Histogram {
         Duration::from_micros(self.max_us)
     }
 
+    /// Fold another histogram into this one (per-worker aggregation).
+    pub fn absorb(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
     /// Approximate quantile from bucket boundaries (upper edge).
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
@@ -82,6 +92,25 @@ impl ServerMetrics {
             merge_latency: Some(Histogram::new()),
             ..Default::default()
         }
+    }
+
+    /// Fold another worker's metrics into this one. The coordinator's
+    /// `metrics()` reports the pool-wide aggregate by absorbing every
+    /// worker snapshot into a fresh `ServerMetrics`.
+    pub fn absorb(&mut self, other: &ServerMetrics) {
+        fn merge_hist(dst: &mut Option<Histogram>, src: &Option<Histogram>) {
+            match (dst.as_mut(), src) {
+                (Some(d), Some(s)) => d.absorb(s),
+                (None, Some(s)) => *dst = Some(s.clone()),
+                _ => {}
+            }
+        }
+        merge_hist(&mut self.e2e_latency, &other.e2e_latency);
+        merge_hist(&mut self.exec_latency, &other.exec_latency);
+        merge_hist(&mut self.merge_latency, &other.merge_latency);
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.tokens_generated += other.tokens_generated;
     }
 
     /// Mean batch occupancy.
@@ -141,5 +170,39 @@ mod tests {
         m.requests = 10;
         m.batches = 4;
         assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_absorb_sums() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=10u64 {
+            a.record(Duration::from_micros(i));
+            b.record(Duration::from_micros(i * 100));
+        }
+        a.absorb(&b);
+        assert_eq!(a.count(), 20);
+        assert_eq!(a.max(), Duration::from_micros(1000));
+        assert!(a.mean() >= Duration::from_micros(200));
+    }
+
+    #[test]
+    fn server_metrics_absorb_aggregates_workers() {
+        let mut w0 = ServerMetrics::new();
+        let mut w1 = ServerMetrics::new();
+        w0.requests = 3;
+        w0.batches = 2;
+        w0.e2e_latency.as_mut().unwrap().record(Duration::from_millis(1));
+        w1.requests = 5;
+        w1.batches = 1;
+        w1.tokens_generated = 9;
+        w1.e2e_latency.as_mut().unwrap().record(Duration::from_millis(4));
+        let mut total = ServerMetrics::new();
+        total.absorb(&w0);
+        total.absorb(&w1);
+        assert_eq!(total.requests, 8);
+        assert_eq!(total.batches, 3);
+        assert_eq!(total.tokens_generated, 9);
+        assert_eq!(total.e2e_latency.as_ref().unwrap().count(), 2);
     }
 }

@@ -3,24 +3,36 @@
 //! base model, many task-/user-specific adapters resident simultaneously).
 //!
 //! * [`registry`] — adapter store: LoRAQuant-compressed (or FP16) adapters
-//!   at rest, with exact byte/bit accounting (the Fig. 6 memory axis).
-//! * [`cache`] — byte-budgeted LRU of **merged, device-resident** weights:
-//!   dequantize + merge happens once per adapter activation, then requests
-//!   hit device buffers.
+//!   at rest, with exact byte/bit accounting (the Fig. 6 memory axis);
+//!   shared across the pool behind the [`Coordinator`] handle.
+//! * [`cache`] — byte-budgeted LRU of **merged, device-resident** weights,
+//!   one per worker: dequantize + merge happens once per adapter
+//!   activation, then requests hit device buffers.
 //! * [`batcher`] — adapter-grouped dynamic batching with a max-wait
 //!   deadline (S-LoRA-style: a batch shares one merged weight set).
-//! * [`server`] — thread-confined PJRT executor behind an mpsc request
-//!   loop; callers hold a cloneable, `Send` handle.
-//! * [`metrics`] — latency histogram + counters.
+//! * [`pool`] — the executor pool: N thread-confined engines with
+//!   rendezvous-hashed adapter affinity and multi-bucket decode.
+//! * [`merge_worker`] — the off-hot-path merge pipeline: cache-miss
+//!   dequant+merge runs on background threads while the batch parks;
+//!   different adapters' misses merge in parallel.
+//! * [`server`] — configuration plus the cloneable, `Send`
+//!   [`Coordinator`] handle (generate / prefetch / register / metrics).
+//! * [`metrics`] — latency histograms + counters, aggregated per worker.
+//!
+//! See rust/DESIGN.md §4 for the serving architecture.
 
 pub mod batcher;
 pub mod cache;
+pub mod merge_worker;
 pub mod metrics;
+pub mod pool;
 pub mod registry;
 pub mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
 pub use cache::LruCache;
+pub use merge_worker::MergeHook;
 pub use metrics::{Histogram, ServerMetrics};
+pub use pool::{route, WorkerSnapshot};
 pub use registry::{AdapterId, AdapterRegistry, StoredAdapter};
 pub use server::{Coordinator, CoordinatorConfig, GenRequest, GenResponse};

@@ -1,0 +1,491 @@
+//! The executor pool: N worker threads, each owning its own [`Engine`]
+//! and compiled forward programs (PJRT objects are not `Send`, so engines
+//! are thread-confined exactly like the original single executor — there
+//! are just N of them now).
+//!
+//! * **Adapter-affinity routing** — the coordinator handle routes every
+//!   request for an adapter to one worker chosen by rendezvous (highest
+//!   random weight) hashing, so each adapter's merged-weight cache entry
+//!   lives on exactly one worker and resizing the pool remaps only
+//!   `1/(n+1)` of the adapters.
+//! * **Off-hot-path merges** — a cache miss parks the batch in a
+//!   per-adapter pending queue and submits a job to the merge pool
+//!   ([`super::merge_worker`]); the worker keeps serving other adapters
+//!   and only performs the cheap device upload when the merged host
+//!   weights come back.
+//! * **Multi-bucket decode** — each worker loads one compiled program per
+//!   configured bucket and decodes a batch on the smallest bucket that
+//!   fits it, instead of always padding to the largest.
+
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
+use super::cache::{CacheStats, LruCache};
+use super::merge_worker::{MergeJob, Shared};
+use super::metrics::ServerMetrics;
+use super::registry::AdapterId;
+use super::server::{GenRequest, GenResponse, Responder};
+use crate::adapter::fmt::Tensor;
+use crate::eval::tasks::TOKENS;
+use crate::runtime::{DeviceWeights, Engine};
+use anyhow::anyhow;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// 64-bit finalizer (murmur3-style) for rendezvous scores.
+fn mix64(mut z: u64) -> u64 {
+    z ^= z >> 33;
+    z = z.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    z ^= z >> 33;
+    z = z.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    z ^ (z >> 33)
+}
+
+/// Rendezvous (highest-random-weight) routing: the worker owning
+/// `adapter`. Stable in `adapter` and minimally disruptive in
+/// `n_workers`: growing the pool by one only remaps keys whose new
+/// highest score lands on the new worker.
+pub fn route(adapter: AdapterId, n_workers: usize) -> usize {
+    assert!(n_workers > 0, "route over an empty pool");
+    (0..n_workers)
+        .max_by_key(|&w| mix64((u64::from(adapter) << 32) | (w as u64 + 1)))
+        .unwrap()
+}
+
+/// Per-worker configuration (derived from `CoordinatorConfig`).
+#[derive(Debug, Clone)]
+pub(crate) struct WorkerConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    /// Compiled batch buckets, ascending and deduplicated.
+    pub buckets: Vec<usize>,
+    pub max_wait: Duration,
+    /// This worker's share of the merged-weight cache budget.
+    pub cache_budget_bytes: usize,
+}
+
+/// One worker's metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    pub metrics: ServerMetrics,
+    pub cache: CacheStats,
+    pub cache_used_bytes: usize,
+    pub cached_adapters: usize,
+    pub queued_requests: usize,
+}
+
+type Payload = (GenRequest, Responder);
+type Queued = PendingRequest<Payload>;
+
+/// Messages a worker thread consumes.
+pub(crate) enum WorkerMsg {
+    Gen(GenRequest, Responder),
+    Prefetch(AdapterId, mpsc::Sender<anyhow::Result<()>>),
+    Invalidate(AdapterId),
+    Metrics(mpsc::Sender<WorkerSnapshot>),
+    Merged { adapter: AdapterId, result: anyhow::Result<Vec<Tensor>>, host_time: Duration },
+    Shutdown,
+}
+
+/// A merge in flight for one adapter on this worker.
+struct Inflight {
+    /// Whether the initiating lookup already counted a cache miss (false
+    /// for prefetch-initiated merges).
+    miss_counted: bool,
+    /// Batches parked until the merged weights arrive.
+    parked: Vec<Vec<Queued>>,
+    /// Prefetch acks to fire once the weights are resident.
+    waiters: Vec<mpsc::Sender<anyhow::Result<()>>>,
+}
+
+pub(crate) fn worker_main(
+    idx: usize,
+    cfg: WorkerConfig,
+    shared: Arc<Shared>,
+    rx: mpsc::Receiver<WorkerMsg>,
+    self_tx: mpsc::Sender<WorkerMsg>,
+    merge_tx: mpsc::Sender<MergeJob>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+) {
+    let mut w = match Worker::new(idx, cfg, shared, self_tx, merge_tx) {
+        Ok(w) => {
+            let _ = ready.send(Ok(()));
+            w
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut draining = false;
+    loop {
+        let now = Instant::now();
+        let timeout = w.batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(WorkerMsg::Gen(req, resp)) => w.on_gen(req, resp),
+            Ok(WorkerMsg::Prefetch(id, ack)) => w.on_prefetch(id, ack),
+            Ok(WorkerMsg::Invalidate(id)) => {
+                w.cache.remove(&id);
+            }
+            Ok(WorkerMsg::Metrics(tx)) => {
+                let _ = tx.send(w.snapshot());
+            }
+            Ok(WorkerMsg::Merged { adapter, result, host_time }) => {
+                w.on_merged(adapter, result, host_time);
+            }
+            Ok(WorkerMsg::Shutdown) => draining = true,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            // Unreachable while the worker holds self_tx, but harmless.
+            Err(mpsc::RecvTimeoutError::Disconnected) => draining = true,
+        }
+        // When draining, release partial batches immediately instead of
+        // waiting out their deadline.
+        let release_at = if draining {
+            Instant::now() + Duration::from_secs(3600)
+        } else {
+            Instant::now()
+        };
+        while let Some(batch) = w.batcher.pop_ready(release_at) {
+            w.on_batch(batch);
+        }
+        if draining && w.batcher.pending() == 0 && w.inflight.is_empty() {
+            return;
+        }
+    }
+}
+
+struct Worker {
+    idx: usize,
+    shared: Arc<Shared>,
+    engine: Engine,
+    /// (bucket, program key), ascending by bucket.
+    progs: Vec<(usize, String)>,
+    batcher: DynamicBatcher<Payload>,
+    cache: LruCache<AdapterId, DeviceWeights>,
+    metrics: ServerMetrics,
+    inflight: HashMap<AdapterId, Inflight>,
+    merge_tx: mpsc::Sender<MergeJob>,
+    self_tx: mpsc::Sender<WorkerMsg>,
+}
+
+impl Worker {
+    fn new(
+        idx: usize,
+        cfg: WorkerConfig,
+        shared: Arc<Shared>,
+        self_tx: mpsc::Sender<WorkerMsg>,
+        merge_tx: mpsc::Sender<MergeJob>,
+    ) -> anyhow::Result<Self> {
+        let n_params = shared.base.cfg.param_names().len();
+        let mut engine = Engine::new(&cfg.artifacts_dir)?;
+        let mut progs = Vec::with_capacity(cfg.buckets.len());
+        for &b in &cfg.buckets {
+            engine.load_model_fwd(&cfg.model, b, n_params)?;
+            progs.push((b, format!("{}/b{}", cfg.model, b)));
+        }
+        let max_bucket = *cfg.buckets.last().expect("buckets validated non-empty");
+        Ok(Self {
+            idx,
+            shared,
+            engine,
+            progs,
+            batcher: DynamicBatcher::new(BatcherConfig {
+                bucket: max_bucket,
+                max_wait: cfg.max_wait,
+            }),
+            cache: LruCache::new(cfg.cache_budget_bytes),
+            metrics: ServerMetrics::new(),
+            inflight: HashMap::new(),
+            merge_tx,
+            self_tx,
+        })
+    }
+
+    fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            worker: self.idx,
+            metrics: self.metrics.clone(),
+            cache: self.cache.stats(),
+            cache_used_bytes: self.cache.used_bytes(),
+            cached_adapters: self.cache.len(),
+            queued_requests: self.batcher.pending(),
+        }
+    }
+
+    fn on_gen(&mut self, req: GenRequest, resp: Responder) {
+        let adapter = req.adapter;
+        if self.shared.with_registry(|r| r.get(adapter).is_none()) {
+            let _ = resp.send(Err(anyhow!("unknown adapter {adapter}")));
+            return;
+        }
+        // An empty prompt has no logits row to decode from (and would
+        // underflow `pos - 1` in decode_batch, killing the worker).
+        if req.prompt.is_empty() {
+            let _ = resp.send(Err(anyhow!("empty prompt")));
+            return;
+        }
+        let t_len = self.shared.base.cfg.seq_len;
+        if req.prompt.len() >= t_len {
+            let _ = resp.send(Err(anyhow!(
+                "prompt length {} leaves no room to generate (seq_len {t_len})",
+                req.prompt.len()
+            )));
+            return;
+        }
+        self.batcher.push(PendingRequest {
+            adapter,
+            enqueued: Instant::now(),
+            payload: (req, resp),
+        });
+    }
+
+    fn on_prefetch(&mut self, id: AdapterId, ack: mpsc::Sender<anyhow::Result<()>>) {
+        if self.cache.touch(&id) {
+            // already resident: refresh recency (the caller wants it
+            // protected ahead of traffic) without counting a hit
+            let _ = ack.send(Ok(()));
+            return;
+        }
+        if self.shared.with_registry(|r| r.get(id).is_none()) {
+            let _ = ack.send(Err(anyhow!("unknown adapter {id}")));
+            return;
+        }
+        if let Some(fl) = self.inflight.get_mut(&id) {
+            fl.waiters.push(ack);
+            return;
+        }
+        self.inflight
+            .insert(id, Inflight { miss_counted: false, parked: Vec::new(), waiters: vec![ack] });
+        self.submit_merge(id);
+    }
+
+    fn on_batch(&mut self, batch: Batch<Payload>) {
+        let id = batch.adapter;
+        if let Some(fl) = self.inflight.get_mut(&id) {
+            // merge already in flight — park behind it. The batch's cache
+            // lookup is deferred to the drain, so on the error-free path
+            // every decoded batch performs exactly one counted lookup
+            // (hits + misses == batches); failed merges abort their
+            // parked batches before decode, so neither counter moves in
+            // lock-step there.
+            fl.parked.push(batch.requests);
+            return;
+        }
+        if self.cache.get(&id).is_some() {
+            self.run_batch(id, batch.requests);
+        } else {
+            self.inflight.insert(
+                id,
+                Inflight { miss_counted: true, parked: vec![batch.requests], waiters: Vec::new() },
+            );
+            self.submit_merge(id);
+        }
+    }
+
+    fn submit_merge(&mut self, id: AdapterId) {
+        let tx = self.self_tx.clone();
+        let job = MergeJob {
+            adapter: id,
+            done: Box::new(move |result, host_time| {
+                let _ = tx.send(WorkerMsg::Merged { adapter: id, result, host_time });
+            }),
+        };
+        if self.merge_tx.send(job).is_err() {
+            self.on_merged(id, Err(anyhow!("merge pool unavailable")), Duration::ZERO);
+        }
+    }
+
+    fn on_merged(
+        &mut self,
+        id: AdapterId,
+        result: anyhow::Result<Vec<Tensor>>,
+        host_time: Duration,
+    ) {
+        let Some(fl) = self.inflight.remove(&id) else { return };
+        let uploaded = result.and_then(|merged| {
+            if self.shared.with_registry(|r| r.get(id).is_none()) {
+                return Err(anyhow!("adapter {id} removed during merge"));
+            }
+            let t0 = Instant::now();
+            let dev = self.engine.upload_weights(&merged)?;
+            Ok((dev, host_time + t0.elapsed()))
+        });
+        match uploaded {
+            Ok((dev, total)) => {
+                let bytes = dev.bytes();
+                self.cache.insert(id, dev, bytes);
+                if let Some(h) = self.metrics.merge_latency.as_mut() {
+                    h.record(total);
+                }
+                for ack in fl.waiters {
+                    let _ = ack.send(Ok(()));
+                }
+                let miss_counted = fl.miss_counted;
+                for (i, requests) in fl.parked.into_iter().enumerate() {
+                    // exactly one counted lookup per batch: the initiator's
+                    // miss was counted when the merge was triggered
+                    if i > 0 || !miss_counted {
+                        let _ = self.cache.get(&id);
+                    }
+                    self.run_batch(id, requests);
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for ack in fl.waiters {
+                    let _ = ack.send(Err(anyhow!("{msg}")));
+                }
+                for requests in fl.parked {
+                    for r in requests {
+                        let _ = r.payload.1.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Smallest compiled bucket that fits `n` requests (largest if none):
+    /// returns (bucket, index into `progs`).
+    fn pick_bucket(&self, n: usize) -> (usize, usize) {
+        let last = self.progs.len() - 1;
+        let i = self.progs.iter().position(|(b, _)| *b >= n).unwrap_or(last);
+        (self.progs[i].0, i)
+    }
+
+    fn run_batch(&mut self, adapter: AdapterId, requests: Vec<Queued>) {
+        match self.decode_batch(adapter, &requests) {
+            Ok(outputs) => {
+                let now = Instant::now();
+                for (r, tokens) in requests.into_iter().zip(outputs) {
+                    let e2e = now.duration_since(r.enqueued);
+                    if let Some(h) = self.metrics.e2e_latency.as_mut() {
+                        h.record(e2e);
+                    }
+                    self.metrics.requests += 1;
+                    self.metrics.tokens_generated += tokens.len() as u64;
+                    let _ = r.payload.1.send(Ok(GenResponse { tokens, e2e }));
+                }
+                self.metrics.batches += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in requests {
+                    let _ = r.payload.1.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
+    /// Lock-step batched greedy decode on the smallest fitting bucket
+    /// (same protocol as eval::decode).
+    fn decode_batch(
+        &mut self,
+        adapter: AdapterId,
+        requests: &[Queued],
+    ) -> anyhow::Result<Vec<Vec<i32>>> {
+        let t_len = self.shared.base.cfg.seq_len;
+        let vocab = self.shared.base.cfg.vocab;
+        let n = requests.len();
+        let (bsz, prog_idx) = self.pick_bucket(n);
+        assert!(n <= bsz, "batcher released more than the largest bucket");
+        let mut seqs = vec![vec![TOKENS::PAD; t_len]; bsz];
+        let mut pos = vec![0usize; bsz];
+        let mut budget = vec![0usize; bsz];
+        for k in 0..bsz {
+            let req = &requests[k.min(n - 1)].payload.0;
+            let plen = req.prompt.len().min(t_len);
+            seqs[k][..plen].copy_from_slice(&req.prompt[..plen]);
+            pos[k] = plen;
+            budget[k] = req.max_new.min(t_len - plen);
+        }
+        let mut done = vec![false; bsz];
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); bsz];
+        let t_exec = Instant::now();
+        while !done.iter().all(|&d| d) {
+            let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+            let weights = self
+                .cache
+                .peek(&adapter)
+                .ok_or_else(|| anyhow!("merged weights missing for adapter {adapter}"))?;
+            let prog = self.progs[prog_idx].1.as_str();
+            let logits = self.engine.forward(prog, &flat, &[bsz, t_len], weights)?;
+            for k in 0..bsz {
+                if done[k] {
+                    continue;
+                }
+                if generated[k].len() >= budget[k] || pos[k] >= t_len {
+                    done[k] = true;
+                    continue;
+                }
+                let base = (k * t_len + pos[k] - 1) * vocab;
+                let row = &logits[base..base + vocab];
+                let mut best = 0usize;
+                for v in 1..vocab {
+                    if row[v] > row[best] {
+                        best = v;
+                    }
+                }
+                let tok = best as i32;
+                seqs[k][pos[k]] = tok;
+                pos[k] += 1;
+                if tok == TOKENS::EOS {
+                    done[k] = true;
+                } else {
+                    generated[k].push(tok);
+                }
+            }
+        }
+        if let Some(h) = self.metrics.exec_latency.as_mut() {
+            h.record(t_exec.elapsed());
+        }
+        generated.truncate(n);
+        Ok(generated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_is_stable_and_in_range() {
+        for n in 1..=8usize {
+            for id in 0..200u32 {
+                let w = route(id, n);
+                assert!(w < n);
+                assert_eq!(w, route(id, n), "route must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn route_spreads_adapters() {
+        let n = 4;
+        let mut counts = vec![0usize; n];
+        for id in 0..400u32 {
+            counts[route(id, n)] += 1;
+        }
+        for (w, &c) in counts.iter().enumerate() {
+            assert!(c > 40, "worker {w} owns only {c}/400 adapters");
+        }
+    }
+
+    #[test]
+    fn route_growth_is_minimally_disruptive() {
+        // rendezvous property: going from n to n+1 workers either keeps a
+        // key's owner or moves it to the NEW worker — never shuffles
+        // between existing workers.
+        for n in 1..6usize {
+            for id in 0..300u32 {
+                let before = route(id, n);
+                let after = route(id, n + 1);
+                assert!(
+                    after == before || after == n,
+                    "id {id}: {before} -> {after} with pool {n}->{}",
+                    n + 1
+                );
+            }
+        }
+    }
+}

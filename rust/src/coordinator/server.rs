@@ -1,27 +1,30 @@
-//! The serving loop: a thread-confined PJRT executor behind an mpsc
-//! request channel.
-//!
-//! PJRT objects are not `Send`, so ONE executor thread owns the
-//! [`Engine`], the adapter registry, and the merged-weight cache; callers
-//! hold a cloneable [`Coordinator`] handle. The loop:
+//! The serving front end: a cloneable, `Send` [`Coordinator`] handle over
+//! an executor **pool** ([`super::pool`]) and a merge pipeline
+//! ([`super::merge_worker`]).
 //!
 //! ```text
-//! recv_timeout(batcher deadline) → enqueue
-//! pop_ready batches → ensure merged weights cached (dequant+merge+upload
-//!   on miss) → batched greedy decode → respond per request
+//! Coordinator ── rendezvous-route(adapter) ──► worker w (own Engine)
+//!   worker: batch → cache hit? ── yes ──► decode on smallest bucket ≥ |batch|
+//!                          └── no ───► park batch, submit merge job
+//!   merge pool: dequant + merge on host (N threads, concurrent misses)
+//!   worker:  Merged ──► upload (cheap) → cache → drain parked batches
 //! ```
+//!
+//! The adapter registry is shared behind the handle (registrations are
+//! immediate, no executor round-trip); metrics are aggregated across
+//! workers on read. `prefetch` warms an adapter's merged weights ahead of
+//! traffic through the same merge pipeline.
 
-use super::batcher::{BatcherConfig, DynamicBatcher, PendingRequest};
-use super::cache::{CacheStats, LruCache};
+use super::cache::CacheStats;
+use super::merge_worker::{host_merge_fn, MergeHook, MergePool, Shared};
 use super::metrics::ServerMetrics;
+use super::pool::{route, worker_main, WorkerConfig, WorkerMsg, WorkerSnapshot};
 use super::registry::{AdapterId, AdapterRegistry, StoredAdapter};
-use crate::eval::tasks::TOKENS;
-use crate::model::{merge_adapter, BaseWeights};
-use crate::runtime::{DeviceWeights, Engine};
+use crate::model::BaseWeights;
 use anyhow::{bail, Context};
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -29,12 +32,20 @@ pub struct CoordinatorConfig {
     pub artifacts_dir: PathBuf,
     /// Model name (artifact prefix + weights subdirectory).
     pub model: String,
-    /// Batch bucket (a compiled batch size; aot.py exports 1 and 8).
-    pub bucket: usize,
+    /// Executor pool size (each worker owns an engine + compiled
+    /// programs; adapters are rendezvous-routed across workers).
+    pub workers: usize,
+    /// Compiled batch buckets (aot.py exports 1 and 8). A batch decodes
+    /// on the smallest bucket that fits it.
+    pub buckets: Vec<usize>,
     /// Dynamic batching max wait.
     pub max_wait: Duration,
-    /// Merged-weight cache budget in bytes.
+    /// Merged-weight cache budget in bytes, split evenly across workers.
     pub cache_budget_bytes: usize,
+    /// Merge pipeline threads (host-side dequant+merge on cache miss).
+    pub merge_workers: usize,
+    /// Test/ops instrumentation called at the start of every merge.
+    pub merge_hook: Option<MergeHook>,
 }
 
 impl CoordinatorConfig {
@@ -42,10 +53,39 @@ impl CoordinatorConfig {
         Self {
             artifacts_dir: artifacts_dir.into(),
             model: model.into(),
-            bucket: 8,
+            workers: 1,
+            buckets: vec![1, 8],
             max_wait: Duration::from_millis(10),
             cache_budget_bytes: 64 << 20,
+            merge_workers: 2,
+            merge_hook: None,
         }
+    }
+
+    /// Builder sugar: set the executor pool size.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Builder sugar: set the compiled batch buckets.
+    pub fn with_buckets(mut self, buckets: Vec<usize>) -> Self {
+        self.buckets = buckets;
+        self
+    }
+
+    /// Buckets sorted ascending, deduplicated, validated.
+    fn normalized_buckets(&self) -> anyhow::Result<Vec<usize>> {
+        let mut b = self.buckets.clone();
+        b.sort_unstable();
+        b.dedup();
+        if b.is_empty() {
+            bail!("CoordinatorConfig.buckets must not be empty");
+        }
+        if b[0] == 0 {
+            bail!("batch bucket 0 is invalid");
+        }
+        Ok(b)
     }
 }
 
@@ -68,35 +108,108 @@ pub struct GenResponse {
     pub e2e: Duration,
 }
 
-type Responder = mpsc::Sender<anyhow::Result<GenResponse>>;
+pub(crate) type Responder = mpsc::Sender<anyhow::Result<GenResponse>>;
 
-enum Msg {
-    Gen(GenRequest, Responder),
-    Register(Box<StoredAdapter>, String, mpsc::Sender<AdapterId>),
-    Remove(AdapterId, mpsc::Sender<bool>),
-    Metrics(mpsc::Sender<(ServerMetrics, CacheStats, usize)>),
-    Shutdown,
+/// The handle's shared links. Dropping the last clone shuts the pool
+/// down (workers drain in-flight work first).
+struct Links {
+    workers: Vec<mpsc::Sender<WorkerMsg>>,
+    shared: Arc<Shared>,
 }
 
-/// Cloneable, `Send` handle to the serving loop.
+impl Drop for Links {
+    fn drop(&mut self) {
+        for tx in &self.workers {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+    }
+}
+
+/// Cloneable, `Send` handle to the serving pool.
 #[derive(Clone)]
 pub struct Coordinator {
-    tx: mpsc::Sender<Msg>,
+    links: Arc<Links>,
 }
 
 impl Coordinator {
-    /// Start the executor thread: loads base weights + the fwd program for
-    /// the configured bucket, then serves until [`Coordinator::shutdown`].
-    /// Returns (handle, join-handle).
+    /// Start the pool: loads base weights once, spawns
+    /// `cfg.workers` executor threads (each compiling its own programs
+    /// for every bucket) and `cfg.merge_workers` merge threads. Returns
+    /// (handle, supervisor join-handle).
     pub fn start(cfg: CoordinatorConfig) -> anyhow::Result<(Self, std::thread::JoinHandle<()>)> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("lq-executor".into())
-            .spawn(move || executor_main(cfg, rx, ready_tx))
-            .context("spawning executor thread")?;
-        ready_rx.recv().context("executor thread died during startup")??;
-        Ok((Self { tx }, join))
+        let buckets = cfg.normalized_buckets()?;
+        let n_workers = cfg.workers.max(1);
+        let base = BaseWeights::load(cfg.artifacts_dir.join(&cfg.model))?;
+        let shared = Arc::new(Shared::new(base));
+        let merge_pool = MergePool::new(
+            cfg.merge_workers,
+            host_merge_fn(Arc::clone(&shared), cfg.merge_hook.clone()),
+        );
+        let wcfg = WorkerConfig {
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            model: cfg.model.clone(),
+            buckets,
+            max_wait: cfg.max_wait,
+            cache_budget_bytes: (cfg.cache_budget_bytes / n_workers).max(1),
+        };
+
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut joins = Vec::with_capacity(n_workers);
+        let mut readies = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+            let wcfg = wcfg.clone();
+            let shared = Arc::clone(&shared);
+            let self_tx = tx.clone();
+            let merge_tx = merge_pool.sender();
+            let join = std::thread::Builder::new()
+                .name(format!("lq-worker-{w}"))
+                .spawn(move || worker_main(w, wcfg, shared, rx, self_tx, merge_tx, ready_tx))
+                .context("spawning executor worker")?;
+            txs.push(tx);
+            joins.push(join);
+            readies.push(ready_rx);
+        }
+
+        let mut startup: anyhow::Result<()> = Ok(());
+        for (w, ready) in readies.into_iter().enumerate() {
+            let r = ready
+                .recv()
+                .with_context(|| format!("worker {w} died during startup"))
+                .and_then(|r| r);
+            if startup.is_ok() {
+                startup = r;
+            }
+        }
+        if let Err(e) = startup {
+            for tx in &txs {
+                let _ = tx.send(WorkerMsg::Shutdown);
+            }
+            drop(txs);
+            for j in joins {
+                let _ = j.join();
+            }
+            merge_pool.shutdown();
+            return Err(e);
+        }
+
+        let links = Arc::new(Links { workers: txs, shared });
+        let supervisor = std::thread::Builder::new()
+            .name("lq-supervisor".into())
+            .spawn(move || {
+                for j in joins {
+                    let _ = j.join();
+                }
+                // all worker-held merge senders are gone; release the pool
+                merge_pool.shutdown();
+            })
+            .context("spawning supervisor")?;
+        Ok((Self { links }, supervisor))
+    }
+
+    fn worker_for(&self, adapter: AdapterId) -> &mpsc::Sender<WorkerMsg> {
+        &self.links.workers[route(adapter, self.links.workers.len())]
     }
 
     /// Submit a request and return a receiver for its response.
@@ -106,7 +219,7 @@ impl Coordinator {
     ) -> mpsc::Receiver<anyhow::Result<GenResponse>> {
         let (tx, rx) = mpsc::channel();
         // send failure surfaces as a dropped responder → RecvError
-        let _ = self.tx.send(Msg::Gen(req, tx));
+        let _ = self.worker_for(req.adapter).send(WorkerMsg::Gen(req, tx));
         rx
     }
 
@@ -115,240 +228,71 @@ impl Coordinator {
         self.generate_async(req).recv().context("executor gone")?
     }
 
-    /// Register an adapter (quantized or FP16) for a task.
+    /// Warm an adapter's merged weights on its owning worker ahead of
+    /// traffic. The returned receiver resolves once the weights are
+    /// device-resident (drop it for fire-and-forget).
+    pub fn prefetch(&self, adapter: AdapterId) -> mpsc::Receiver<anyhow::Result<()>> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.worker_for(adapter).send(WorkerMsg::Prefetch(adapter, tx));
+        rx
+    }
+
+    /// Register an adapter (quantized or FP16) for a task. Immediate —
+    /// the registry is shared, not executor-owned.
     pub fn register_adapter(
         &self,
         adapter: StoredAdapter,
         task: impl Into<String>,
     ) -> anyhow::Result<AdapterId> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Register(Box::new(adapter), task.into(), tx))
-            .ok()
-            .context("executor gone")?;
-        rx.recv().context("executor gone")
+        let task = task.into();
+        Ok(self.links.shared.with_registry_mut(|r| r.register(adapter, task)))
     }
 
-    /// Remove an adapter.
+    /// Remove an adapter and invalidate its cached merged weights.
     pub fn remove_adapter(&self, id: AdapterId) -> anyhow::Result<bool> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Msg::Remove(id, tx)).ok().context("executor gone")?;
-        rx.recv().context("executor gone")
+        let existed = self.links.shared.with_registry_mut(|r| r.remove(id));
+        if existed {
+            let _ = self.worker_for(id).send(WorkerMsg::Invalidate(id));
+        }
+        Ok(existed)
     }
 
-    /// Snapshot (metrics, cache stats, registry size).
+    /// Run `f` over the shared registry (read-only snapshot access).
+    pub fn with_registry<R>(&self, f: impl FnOnce(&AdapterRegistry) -> R) -> R {
+        self.links.shared.with_registry(f)
+    }
+
+    /// Per-worker metrics snapshots (one round-trip per worker).
+    pub fn metrics_per_worker(&self) -> anyhow::Result<Vec<WorkerSnapshot>> {
+        let mut rxs = Vec::with_capacity(self.links.workers.len());
+        for tx in &self.links.workers {
+            let (stx, srx) = mpsc::channel();
+            tx.send(WorkerMsg::Metrics(stx)).ok().context("executor gone")?;
+            rxs.push(srx);
+        }
+        rxs.into_iter().map(|rx| rx.recv().context("executor gone")).collect()
+    }
+
+    /// Pool-wide snapshot (metrics, cache stats, registry size),
+    /// aggregated across workers.
     pub fn metrics(&self) -> anyhow::Result<(ServerMetrics, CacheStats, usize)> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Msg::Metrics(tx)).ok().context("executor gone")?;
-        rx.recv().context("executor gone")
+        let snaps = self.metrics_per_worker()?;
+        let mut metrics = ServerMetrics::new();
+        let mut cache = CacheStats::default();
+        for s in &snaps {
+            metrics.absorb(&s.metrics);
+            cache.hits += s.cache.hits;
+            cache.misses += s.cache.misses;
+            cache.evictions += s.cache.evictions;
+        }
+        let n = self.links.shared.with_registry(|r| r.len());
+        Ok((metrics, cache, n))
     }
 
-    /// Stop the executor loop (in-flight requests finish first).
+    /// Stop the pool (in-flight and parked requests finish first).
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Shutdown);
-    }
-}
-
-struct Executor {
-    engine: Engine,
-    base: BaseWeights,
-    prog: String,
-    bucket: usize,
-    registry: AdapterRegistry,
-    cache: LruCache<AdapterId, DeviceWeights>,
-    metrics: ServerMetrics,
-}
-
-fn executor_main(
-    cfg: CoordinatorConfig,
-    rx: mpsc::Receiver<Msg>,
-    ready: mpsc::Sender<anyhow::Result<()>>,
-) {
-    let mut exec = match Executor::new(&cfg) {
-        Ok(e) => {
-            let _ = ready.send(Ok(()));
-            e
+        for tx in &self.links.workers {
+            let _ = tx.send(WorkerMsg::Shutdown);
         }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    // payload carries the request plus its responder
-    let mut batcher: DynamicBatcher<(GenRequest, Responder)> =
-        DynamicBatcher::new(BatcherConfig { bucket: cfg.bucket, max_wait: cfg.max_wait });
-
-    loop {
-        let now = Instant::now();
-        let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Gen(req, resp)) => {
-                let adapter = req.adapter;
-                if exec.registry.get(adapter).is_none() {
-                    let _ = resp.send(Err(anyhow::anyhow!("unknown adapter {adapter}")));
-                } else {
-                    batcher.push(PendingRequest {
-                        adapter,
-                        enqueued: Instant::now(),
-                        payload: (req, resp),
-                    });
-                }
-            }
-            Ok(Msg::Register(adapter, task, tx)) => {
-                let _ = tx.send(exec.registry.register(*adapter, task));
-            }
-            Ok(Msg::Remove(id, tx)) => {
-                exec.cache.remove(&id);
-                let _ = tx.send(exec.registry.remove(id));
-            }
-            Ok(Msg::Metrics(tx)) => {
-                let _ = tx.send((exec.metrics.clone(), exec.cache.stats(), exec.registry.len()));
-            }
-            Ok(Msg::Shutdown) => {
-                // flush remaining batches before exiting
-                while let Some(batch) = batcher.pop_ready(Instant::now() + Duration::from_secs(3600))
-                {
-                    exec.run_batch(batch.adapter, batch.requests);
-                }
-                return;
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => return,
-        }
-        let now = Instant::now();
-        while let Some(batch) = batcher.pop_ready(now) {
-            exec.run_batch(batch.adapter, batch.requests);
-        }
-    }
-}
-
-impl Executor {
-    fn new(cfg: &CoordinatorConfig) -> anyhow::Result<Self> {
-        let base = BaseWeights::load(cfg.artifacts_dir.join(&cfg.model))?;
-        let mut engine = Engine::new(&cfg.artifacts_dir)?;
-        let n_params = base.cfg.param_names().len();
-        engine.load_model_fwd(&cfg.model, cfg.bucket, n_params)?;
-        Ok(Self {
-            engine,
-            prog: format!("{}/b{}", cfg.model, cfg.bucket),
-            bucket: cfg.bucket,
-            base,
-            registry: AdapterRegistry::new(),
-            cache: LruCache::new(cfg.cache_budget_bytes),
-            metrics: ServerMetrics::new(),
-        })
-    }
-
-    /// Dequantize + merge + upload on cache miss.
-    fn ensure_weights(&mut self, id: AdapterId) -> anyhow::Result<()> {
-        if self.cache.get(&id).is_some() {
-            return Ok(());
-        }
-        let t0 = Instant::now();
-        let entry = match self.registry.get(id) {
-            Some(e) => e,
-            None => bail!("adapter {id} vanished"),
-        };
-        let deltas = entry.adapter.deltas();
-        let merged = merge_adapter(&self.base, &deltas)?;
-        let dev = self.engine.upload_weights(&merged)?;
-        let bytes = dev.bytes();
-        self.cache.insert(id, dev, bytes);
-        if let Some(h) = self.metrics.merge_latency.as_mut() {
-            h.record(t0.elapsed());
-        }
-        Ok(())
-    }
-
-    fn run_batch(&mut self, adapter: AdapterId, requests: Vec<PendingRequest<(GenRequest, Responder)>>) {
-        if let Err(e) = self.ensure_weights(adapter) {
-            let msg = format!("{e:#}");
-            for r in requests {
-                let _ = r.payload.1.send(Err(anyhow::anyhow!("{msg}")));
-            }
-            return;
-        }
-        match self.decode_batch(adapter, &requests) {
-            Ok(outputs) => {
-                let now = Instant::now();
-                for (r, tokens) in requests.into_iter().zip(outputs) {
-                    let e2e = now.duration_since(r.enqueued);
-                    if let Some(h) = self.metrics.e2e_latency.as_mut() {
-                        h.record(e2e);
-                    }
-                    self.metrics.requests += 1;
-                    self.metrics.tokens_generated += tokens.len() as u64;
-                    let _ = r.payload.1.send(Ok(GenResponse { tokens, e2e }));
-                }
-                self.metrics.batches += 1;
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for r in requests {
-                    let _ = r.payload.1.send(Err(anyhow::anyhow!("{msg}")));
-                }
-            }
-        }
-    }
-
-    /// Lock-step batched greedy decode (same protocol as eval::decode).
-    fn decode_batch(
-        &mut self,
-        adapter: AdapterId,
-        requests: &[PendingRequest<(GenRequest, Responder)>],
-    ) -> anyhow::Result<Vec<Vec<i32>>> {
-        let t_len = self.base.cfg.seq_len;
-        let vocab = self.base.cfg.vocab;
-        let bsz = self.bucket;
-        let n = requests.len();
-        assert!(n <= bsz);
-        let mut seqs = vec![vec![TOKENS::PAD; t_len]; bsz];
-        let mut pos = vec![0usize; bsz];
-        let mut budget = vec![0usize; bsz];
-        for k in 0..bsz {
-            let req = &requests[k.min(n - 1)].payload.0;
-            let plen = req.prompt.len().min(t_len);
-            seqs[k][..plen].copy_from_slice(&req.prompt[..plen]);
-            pos[k] = plen;
-            budget[k] = req.max_new.min(t_len - plen);
-        }
-        let mut done = vec![false; bsz];
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); bsz];
-        let t_exec = Instant::now();
-        while !done.iter().all(|&d| d) {
-            let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
-            let weights = self.cache.peek(&adapter).expect("weights ensured");
-            let logits = self.engine.forward(&self.prog, &flat, &[bsz, t_len], weights)?;
-            for k in 0..bsz {
-                if done[k] {
-                    continue;
-                }
-                if generated[k].len() >= budget[k] || pos[k] >= t_len {
-                    done[k] = true;
-                    continue;
-                }
-                let base = (k * t_len + pos[k] - 1) * vocab;
-                let row = &logits[base..base + vocab];
-                let mut best = 0usize;
-                for v in 1..vocab {
-                    if row[v] > row[best] {
-                        best = v;
-                    }
-                }
-                let tok = best as i32;
-                seqs[k][pos[k]] = tok;
-                pos[k] += 1;
-                if tok == TOKENS::EOS {
-                    done[k] = true;
-                } else {
-                    generated[k].push(tok);
-                }
-            }
-        }
-        if let Some(h) = self.metrics.exec_latency.as_mut() {
-            h.record(t_exec.elapsed());
-        }
-        generated.truncate(n);
-        Ok(generated)
     }
 }

@@ -4,7 +4,8 @@
 //! ```text
 //! loraquant quantize --model tiny-llama-s --task modadd --bits 2 --rho 0.9 --out q.bin
 //! loraquant eval     --model tiny-llama-s --task modadd [--quantized q.bin] [--n 100]
-//! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12
+//! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12 \
+//!                    [--workers 4] [--merge-workers 2] [--buckets 1,8] [--prefetch]
 //! loraquant info     --model tiny-llama-s
 //! ```
 //!
@@ -126,8 +127,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cache_mb = args.usize_or("cache-mb", 64)?;
 
     let mut cfg = CoordinatorConfig::new(&dir, &model);
+    cfg.workers = args.usize_or("workers", 1)?;
+    cfg.merge_workers = args.usize_or("merge-workers", 2)?;
+    cfg.buckets = args.usize_list_or("buckets", &[1, 8])?;
     cfg.cache_budget_bytes = cache_mb << 20;
     cfg.max_wait = Duration::from_millis(args.usize_or("max-wait-ms", 10)? as u64);
+    let workers = cfg.workers;
     let (coord, join) = Coordinator::start(cfg)?;
 
     // Register n_adapters quantized clones of the trained task adapters.
@@ -143,7 +148,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         ids.push(coord.register_adapter(StoredAdapter::Quantized(q), task)?);
     }
-    println!("registered {} quantized adapters", ids.len());
+    println!("registered {} quantized adapters across {workers} worker(s)", ids.len());
+
+    if args.has_flag("prefetch") {
+        let t0 = Instant::now();
+        let waits: Vec<_> = ids.iter().map(|&id| coord.prefetch(id)).collect();
+        for rx in waits {
+            rx.recv().context("prefetch ack")??;
+        }
+        println!("prefetched {} adapters in {:?}", ids.len(), t0.elapsed());
+    }
 
     let wl = WorkloadConfig { rate, n_requests, ..Default::default() };
     let schedule = generate(&wl, &ids);
@@ -176,6 +190,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cache.evictions,
         reg
     );
+    if workers > 1 {
+        for s in coord.metrics_per_worker()? {
+            println!(
+                "  worker {}: requests={} batches={} cached={} ({} KB)",
+                s.worker,
+                s.metrics.requests,
+                s.metrics.batches,
+                s.cached_adapters,
+                s.cache_used_bytes / 1024,
+            );
+        }
+    }
     coord.shutdown();
     let _ = join.join();
     Ok(())

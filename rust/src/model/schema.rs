@@ -40,6 +40,29 @@ impl ModelConfig {
         })
     }
 
+    /// Write `<model_dir>/meta.bin` (inverse of [`ModelConfig::load`];
+    /// used by the synthetic-artifact writer in `testutil::synth`).
+    pub fn save(&self, model_dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        use crate::adapter::fmt::{save_tensorfile, Tensor};
+        let dir = model_dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut t = BTreeMap::new();
+        let mut put = |k: &str, v: usize| {
+            t.insert(k.to_string(), Tensor::i32(vec![1], vec![v as i32]));
+        };
+        put("d_model", self.d_model);
+        put("n_layers", self.n_layers);
+        put("n_heads", self.n_heads);
+        put("d_ff", self.d_ff);
+        put("vocab", self.vocab);
+        put("seq_len", self.seq_len);
+        put("lora_rank", self.lora_rank);
+        put("lora_alpha", self.lora_alpha);
+        put("act_silu", usize::from(self.act_silu));
+        save_tensorfile(dir.join("meta.bin"), &t)
+    }
+
     /// LoRA merge scaling `s = alpha / r`.
     pub fn lora_scaling(&self) -> f32 {
         self.lora_alpha as f32 / self.lora_rank as f32
@@ -170,5 +193,15 @@ mod tests {
     #[test]
     fn scaling() {
         assert_eq!(cfg().lora_scaling(), 2.0);
+    }
+
+    #[test]
+    fn meta_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lq_schema_meta_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        cfg().save(&dir).unwrap();
+        let back = ModelConfig::load(&dir).unwrap();
+        assert_eq!(back, cfg());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,29 @@
+//! Execution runtime behind the coordinator: one of two backends with an
+//! identical surface (`Engine`, `DeviceWeights`, `TokenBuffer`).
+//!
+//! * **`pjrt`** (feature `pjrt`) — loads AOT HLO-text artifacts and runs
+//!   them through the PJRT CPU client (the original three-layer path:
+//!   Pallas/JAX lowering at build time, XLA execution at serve time).
+//!   Requires the local `xla` bindings; see rust/Cargo.toml.
+//! * **`sim`** (default) — a pure-Rust reference engine that executes the
+//!   same tiny-transformer forward (mirroring python/compile/model.py)
+//!   directly on host f32 buffers. No artifacts beyond `meta.bin` +
+//!   weights are needed, so the full serving stack — registry, cache,
+//!   batcher, executor pool, merge pipeline — builds and tests
+//!   hermetically offline.
+//!
+//! Both backends are deliberately compute-bound in `Engine::forward` and
+//! cheap in `Engine::upload_weights`, which is the cost model the
+//! coordinator's off-hot-path merge pipeline is built around: host-side
+//! dequant+merge runs on merge workers, and only the upload happens on
+//! the executor thread.
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{DeviceWeights, Engine, Program};
+
+#[cfg(not(feature = "pjrt"))]
+mod sim;
+#[cfg(not(feature = "pjrt"))]
+pub use sim::{DeviceWeights, Engine, Program, TokenBuffer};

@@ -1,0 +1,410 @@
+//! Reference engine: the tiny-transformer forward executed directly on
+//! host f32 buffers (mirrors python/compile/model.py step for step —
+//! layernorm, multi-head causal attention, gelu/silu FFN, untied head).
+//!
+//! This backend exists so the serving stack is testable and benchable
+//! with no PJRT and no build-time python: `load_model_fwd` only needs
+//! `<artifacts>/<model>/meta.bin` for the hyper-parameters, and
+//! `upload_weights` keeps the merged weights as host tensors. Raw HLO
+//! programs (`load_program`) are a PJRT-only capability and return an
+//! error here.
+
+use crate::adapter::fmt::{Tensor, TensorData};
+use crate::model::ModelConfig;
+use crate::tensor::dot;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded forward "program": the model hyper-parameters plus the
+/// expected input arity (tokens + weights), keyed like the PJRT backend
+/// (`<model>/b<bucket>`).
+pub struct Program {
+    cfg: ModelConfig,
+    /// Number of inputs expected (tokens + weights).
+    pub arity: usize,
+}
+
+/// Reference engine: a set of loaded model configs.
+pub struct Engine {
+    programs: BTreeMap<String, Program>,
+    artifacts_dir: PathBuf,
+}
+
+/// "Device"-resident weights — host tensors in `param_names` order (the
+/// unit the coordinator's merged-weight cache holds).
+pub struct DeviceWeights {
+    pub tensors: Vec<Tensor>,
+    /// f32 count (for cache byte accounting).
+    pub elements: usize,
+}
+
+impl DeviceWeights {
+    /// Resident bytes (f32).
+    pub fn bytes(&self) -> usize {
+        self.elements * 4
+    }
+}
+
+/// An uploaded token batch (API parity with the PJRT backend's buffer).
+pub struct TokenBuffer {
+    tokens: Vec<i32>,
+    dims: Vec<usize>,
+}
+
+impl Engine {
+    /// Create an engine rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Ok(Self { programs: BTreeMap::new(), artifacts_dir: artifacts_dir.as_ref().into() })
+    }
+
+    /// The artifacts directory this engine loads from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Raw HLO programs require PJRT.
+    pub fn load_program(&mut self, name: &str, file: &str, _arity: usize) -> anyhow::Result<()> {
+        bail!(
+            "reference engine cannot execute HLO artifact {file} (program {name}); \
+             build with --features pjrt"
+        )
+    }
+
+    /// Load the batched-forward "program" of a model for one batch bucket.
+    /// Program key: `<model>/b<bucket>` (any batch size executes; the key
+    /// keeps parity with the PJRT backend's compiled buckets).
+    pub fn load_model_fwd(
+        &mut self,
+        model: &str,
+        bucket: usize,
+        n_params: usize,
+    ) -> anyhow::Result<()> {
+        let cfg = ModelConfig::load(self.artifacts_dir.join(model))
+            .with_context(|| format!("loading {model} hyper-parameters"))?;
+        let expected = cfg.param_names().len();
+        if n_params != expected {
+            bail!("model {model} has {expected} parameters, caller expected {n_params}");
+        }
+        self.programs.insert(format!("{model}/b{bucket}"), Program { cfg, arity: 1 + n_params });
+        Ok(())
+    }
+
+    pub fn has_program(&self, name: &str) -> bool {
+        self.programs.contains_key(name)
+    }
+
+    /// Keep a weight list (in `param_names` order) as host tensors.
+    pub fn upload_weights(&self, weights: &[Tensor]) -> anyhow::Result<DeviceWeights> {
+        let elements = weights
+            .iter()
+            .map(|t| match &t.data {
+                TensorData::F32(v) => v.len(),
+                _ => 0,
+            })
+            .sum();
+        Ok(DeviceWeights { tensors: weights.to_vec(), elements })
+    }
+
+    /// Upload an i32 token batch.
+    pub fn upload_tokens(&self, tokens: &[i32], dims: &[usize]) -> anyhow::Result<TokenBuffer> {
+        Ok(TokenBuffer { tokens: tokens.to_vec(), dims: dims.to_vec() })
+    }
+
+    /// Execute a forward: tokens `[bsz, t]` → flattened logits
+    /// `[bsz * t * vocab]`.
+    pub fn execute(
+        &self,
+        name: &str,
+        tokens: &TokenBuffer,
+        weights: &DeviceWeights,
+    ) -> anyhow::Result<Vec<f32>> {
+        let prog = self.programs.get(name).with_context(|| format!("program {name} not loaded"))?;
+        if 1 + weights.tensors.len() != prog.arity {
+            bail!(
+                "program {name} expects {} inputs, got {}",
+                prog.arity,
+                1 + weights.tensors.len()
+            );
+        }
+        if tokens.dims.len() != 2 {
+            bail!("token batch must be 2-D, got dims {:?}", tokens.dims);
+        }
+        ref_forward(&prog.cfg, &weights.tensors, &tokens.tokens, tokens.dims[0], tokens.dims[1])
+    }
+
+    /// Convenience: host-side tokens → logits.
+    pub fn forward(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        dims: &[usize],
+        weights: &DeviceWeights,
+    ) -> anyhow::Result<Vec<f32>> {
+        let tok = self.upload_tokens(tokens, dims)?;
+        self.execute(name, &tok, weights)
+    }
+}
+
+/// Named f32 views over the flat weight list (param_names order).
+struct Params<'a> {
+    by_name: BTreeMap<String, &'a Tensor>,
+}
+
+impl<'a> Params<'a> {
+    fn new(cfg: &ModelConfig, weights: &'a [Tensor]) -> anyhow::Result<Self> {
+        let names = cfg.param_names();
+        if names.len() != weights.len() {
+            bail!("weight list has {} tensors, schema has {}", weights.len(), names.len());
+        }
+        Ok(Self { by_name: names.into_iter().zip(weights).collect() })
+    }
+
+    fn get(&self, name: &str) -> anyhow::Result<&'a [f32]> {
+        self.by_name
+            .get(name)
+            .with_context(|| format!("missing parameter {name}"))?
+            .as_f32()
+            .with_context(|| format!("parameter {name} is not f32"))
+    }
+}
+
+/// `C[m,n] = A[m,k] @ B[k,n]`, row-major flat slices (i-k-j order, same
+/// kernel shape as tensor::ops::matmul).
+fn matmul_flat(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Row-wise layernorm with gain/bias (eps matches model.py).
+fn layernorm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
+    for i in 0..rows {
+        let row = &x[i * d..(i + 1) * d];
+        let orow = &mut out[i * d..(i + 1) * d];
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..d {
+            orow[j] = g[j] * (row[j] - mu) * inv + b[j];
+        }
+    }
+}
+
+/// jax.nn.gelu's default tanh approximation.
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// The reference forward (python/compile/model.py `_forward_impl`).
+fn ref_forward(
+    cfg: &ModelConfig,
+    weights: &[Tensor],
+    tokens: &[i32],
+    bsz: usize,
+    t: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let p = Params::new(cfg, weights)?;
+    let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+    let nh = cfg.n_heads;
+    if d % nh != 0 {
+        bail!("d_model {d} not divisible by n_heads {nh}");
+    }
+    let hd = d / nh;
+    if tokens.len() != bsz * t {
+        bail!("token batch {}, expected {}x{}", tokens.len(), bsz, t);
+    }
+    if t > cfg.seq_len {
+        bail!("sequence length {t} exceeds model seq_len {}", cfg.seq_len);
+    }
+
+    // x = embed[tokens] + pos[:t]
+    let embed = p.get("embed")?;
+    let pos = p.get("pos")?;
+    let rows = bsz * t;
+    let mut x = vec![0.0f32; rows * d];
+    for b in 0..bsz {
+        for i in 0..t {
+            let tok = tokens[b * t + i];
+            if tok < 0 || tok as usize >= cfg.vocab {
+                bail!("token {tok} out of vocab range 0..{}", cfg.vocab);
+            }
+            let e = &embed[tok as usize * d..(tok as usize + 1) * d];
+            let po = &pos[i * d..(i + 1) * d];
+            let row = &mut x[(b * t + i) * d..(b * t + i + 1) * d];
+            for j in 0..d {
+                row[j] = e[j] + po[j];
+            }
+        }
+    }
+
+    let att_scale = 1.0 / (hd as f32).sqrt();
+    let mut hx = vec![0.0f32; rows * d];
+    let mut q = vec![0.0f32; rows * d];
+    let mut k = vec![0.0f32; rows * d];
+    let mut vv = vec![0.0f32; rows * d];
+    let mut att_out = vec![0.0f32; rows * d];
+    let mut proj = vec![0.0f32; rows * d];
+    let mut h1 = vec![0.0f32; rows * f];
+    let mut h2 = vec![0.0f32; rows * d];
+    let mut scores = vec![0.0f32; t];
+
+    for l in 0..cfg.n_layers {
+        // attention block
+        let (g1, b1) = (p.get(&format!("l{l}.ln1.g"))?, p.get(&format!("l{l}.ln1.b"))?);
+        layernorm(&x, rows, d, g1, b1, &mut hx);
+        matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wq"))?, d, &mut q);
+        matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wk"))?, d, &mut k);
+        matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wv"))?, d, &mut vv);
+        att_out.fill(0.0);
+        for b in 0..bsz {
+            for h in 0..nh {
+                let off = h * hd;
+                for i in 0..t {
+                    let qrow = &q[(b * t + i) * d + off..(b * t + i) * d + off + hd];
+                    // causal scores, masked positions at -1e9 (as in the
+                    // jax model: mask *before* softmax over the full row)
+                    for (j, s) in scores.iter_mut().enumerate() {
+                        *s = if j > i {
+                            -1e9
+                        } else {
+                            let krow = &k[(b * t + j) * d + off..(b * t + j) * d + off + hd];
+                            dot(qrow, krow) * att_scale
+                        };
+                    }
+                    let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                    let mut denom = 0.0;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max).exp();
+                        denom += *s;
+                    }
+                    let orow =
+                        &mut att_out[(b * t + i) * d + off..(b * t + i) * d + off + hd];
+                    for (j, &w) in scores.iter().enumerate() {
+                        let w = w / denom;
+                        let vrow = &vv[(b * t + j) * d + off..(b * t + j) * d + off + hd];
+                        for u in 0..hd {
+                            orow[u] += w * vrow[u];
+                        }
+                    }
+                }
+            }
+        }
+        matmul_flat(&att_out, rows, d, p.get(&format!("l{l}.wo"))?, d, &mut proj);
+        for (xi, pi) in x.iter_mut().zip(&proj) {
+            *xi += pi;
+        }
+
+        // FFN block
+        let (g2, b2) = (p.get(&format!("l{l}.ln2.g"))?, p.get(&format!("l{l}.ln2.b"))?);
+        layernorm(&x, rows, d, g2, b2, &mut hx);
+        matmul_flat(&hx, rows, d, p.get(&format!("l{l}.w1"))?, f, &mut h1);
+        if cfg.act_silu {
+            for z in h1.iter_mut() {
+                *z = silu(*z);
+            }
+        } else {
+            for z in h1.iter_mut() {
+                *z = gelu(*z);
+            }
+        }
+        matmul_flat(&h1, rows, f, p.get(&format!("l{l}.w2"))?, d, &mut h2);
+        for (xi, hi) in x.iter_mut().zip(&h2) {
+            *xi += hi;
+        }
+    }
+
+    layernorm(&x, rows, d, p.get("lnf.g")?, p.get("lnf.b")?, &mut hx);
+    let mut logits = vec![0.0f32; rows * v];
+    matmul_flat(&hx, rows, d, p.get("head")?, v, &mut logits);
+    Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{merge_adapter, BaseWeights};
+    use crate::testutil::synth::{synth_model_config, write_synth_model};
+
+    fn temp_artifacts(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("lq_sim_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let dir = temp_artifacts("fwd");
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[4], 7).unwrap();
+        let base = BaseWeights::load(dir.join("synth")).unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        engine.load_model_fwd("synth", 4, base.cfg.param_names().len()).unwrap();
+        assert!(engine.has_program("synth/b4"));
+        let merged = merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap();
+        let w = engine.upload_weights(&merged).unwrap();
+        assert!(w.bytes() > 0);
+        let tokens = vec![1i32; 4 * cfg.seq_len];
+        let l1 = engine.forward("synth/b4", &tokens, &[4, cfg.seq_len], &w).unwrap();
+        let l2 = engine.forward("synth/b4", &tokens, &[4, cfg.seq_len], &w).unwrap();
+        assert_eq!(l1.len(), 4 * cfg.seq_len * cfg.vocab);
+        assert_eq!(l1, l2, "same inputs must give identical logits");
+        assert!(l1.iter().all(|x| x.is_finite()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn forward_depends_on_tokens_and_weights() {
+        let dir = temp_artifacts("sens");
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[1], 11).unwrap();
+        let base = BaseWeights::load(dir.join("synth")).unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        engine.load_model_fwd("synth", 1, base.cfg.param_names().len()).unwrap();
+        let merged = merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap();
+        let w = engine.upload_weights(&merged).unwrap();
+        let mut t1 = vec![1i32; cfg.seq_len];
+        let l1 = engine.forward("synth/b1", &t1, &[1, cfg.seq_len], &w).unwrap();
+        t1[1] = 5;
+        let l2 = engine.forward("synth/b1", &t1, &[1, cfg.seq_len], &w).unwrap();
+        assert_ne!(l1, l2, "different tokens must change logits");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let dir = temp_artifacts("bad");
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[1], 3).unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        assert!(engine.load_program("x", "x.hlo.txt", 2).is_err());
+        assert!(engine.load_model_fwd("synth", 1, 3).is_err(), "wrong n_params must fail");
+        engine
+            .load_model_fwd("synth", 1, cfg.param_names().len())
+            .unwrap();
+        let w = engine.upload_weights(&[]).unwrap();
+        let err = engine.forward("synth/b1", &[1], &[1, 1], &w).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -7,6 +7,8 @@
 
 mod prng;
 mod property;
+pub mod synth;
 
 pub use prng::Rng;
 pub use property::{check, check_with, Config};
+pub use synth::{synth_model_config, synth_quantized_adapter, write_synth_model};

@@ -1,0 +1,136 @@
+//! Synthetic model artifacts: a tiny, randomly-initialized base model (and
+//! matching quantized adapters) written in the real on-disk layout, so the
+//! serving stack — coordinator pool, merge pipeline, cache, batcher — can
+//! be exercised end-to-end without `make artifacts` or PJRT.
+//!
+//! The reference engine (`runtime::sim`) only needs `meta.bin` +
+//! `base.bin`; stub `.hlo.txt` markers are still written so presence
+//! checks shared with the PJRT path (e.g. `experiments::Settings`) pass.
+
+use super::Rng;
+use crate::adapter::fmt::{save_tensorfile, Tensor};
+use crate::coordinator::StoredAdapter;
+use crate::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
+use crate::model::ModelConfig;
+use anyhow::Context;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The default synthetic model: small enough that a forward is
+/// microseconds, shaped like the real tiny-llama family.
+pub fn synth_model_config() -> ModelConfig {
+    ModelConfig {
+        d_model: 32,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 64,
+        vocab: 64,
+        seq_len: 16,
+        lora_rank: 8,
+        lora_alpha: 16,
+        act_silu: false,
+    }
+}
+
+/// Write `<artifacts>/<model>/{meta,base}.bin` plus stub
+/// `<model>.fwd.b<bucket>.hlo.txt` markers for each bucket.
+///
+/// The base weights are scaled-normal initialized exactly like
+/// python/compile/model.py `init_params` (std 0.02, LN gains 1, biases 0),
+/// seeded for reproducibility.
+pub fn write_synth_model(
+    artifacts: &Path,
+    model: &str,
+    cfg: &ModelConfig,
+    buckets: &[usize],
+    seed: u64,
+) -> anyhow::Result<()> {
+    let dir = artifacts.join(model);
+    cfg.save(&dir)?;
+    let mut rng = Rng::new(seed);
+    let mut t = BTreeMap::new();
+    let (d, f, v, tl) = (cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len);
+    let normal = |dims: Vec<usize>, rng: &mut Rng| {
+        let n: usize = dims.iter().product();
+        Tensor::f32(dims, (0..n).map(|_| rng.normal() * 0.02).collect())
+    };
+    t.insert("embed".to_string(), normal(vec![v, d], &mut rng));
+    t.insert("pos".to_string(), normal(vec![tl, d], &mut rng));
+    for i in 0..cfg.n_layers {
+        t.insert(format!("l{i}.ln1.g"), Tensor::f32(vec![d], vec![1.0; d]));
+        t.insert(format!("l{i}.ln1.b"), Tensor::f32(vec![d], vec![0.0; d]));
+        for w in ["wq", "wk", "wv", "wo"] {
+            t.insert(format!("l{i}.{w}"), normal(vec![d, d], &mut rng));
+        }
+        t.insert(format!("l{i}.ln2.g"), Tensor::f32(vec![d], vec![1.0; d]));
+        t.insert(format!("l{i}.ln2.b"), Tensor::f32(vec![d], vec![0.0; d]));
+        t.insert(format!("l{i}.w1"), normal(vec![d, f], &mut rng));
+        t.insert(format!("l{i}.w2"), normal(vec![f, d], &mut rng));
+    }
+    t.insert("lnf.g".to_string(), Tensor::f32(vec![d], vec![1.0; d]));
+    t.insert("lnf.b".to_string(), Tensor::f32(vec![d], vec![0.0; d]));
+    t.insert("head".to_string(), normal(vec![d, v], &mut rng));
+    save_tensorfile(dir.join("base.bin"), &t)?;
+    for &b in buckets {
+        let marker = artifacts.join(format!("{model}.fwd.b{b}.hlo.txt"));
+        std::fs::write(&marker, "synthetic artifact marker (reference engine; no HLO)\n")
+            .with_context(|| format!("writing {}", marker.display()))?;
+    }
+    Ok(())
+}
+
+/// A LoRAQuant(2@0.9) adapter covering every LoRA site of `cfg`, built
+/// from a seeded decaying-spectrum factor pair per site. STE refinement
+/// is disabled so construction stays fast in tests and benches.
+pub fn synth_quantized_adapter(cfg: &ModelConfig, seed: u64) -> StoredAdapter {
+    let mut rng = Rng::new(seed);
+    let qcfg = LoraQuantConfig {
+        ste: None,
+        group: 16,
+        ..LoraQuantConfig::variant(2, 0.9)
+    };
+    let mut q = QuantizedLora::default();
+    for site in cfg.lora_site_names() {
+        let short = site.rsplit_once('.').map(|(_, s)| s).unwrap_or(site.as_str());
+        let (n_in, m_out) = cfg.site_shape(short).expect("known site");
+        let (b, a) = rng.lora_pair(m_out, n_in, cfg.lora_rank, 0.7);
+        q.sites.insert(site, quantize_site(&b, &a, &qcfg));
+    }
+    StoredAdapter::Quantized(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BaseWeights;
+
+    #[test]
+    fn synth_model_loads_as_base_weights() {
+        let dir = std::env::temp_dir().join(format!("lq_synth_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "m", &cfg, &[1, 8], 1).unwrap();
+        assert!(dir.join("m.fwd.b8.hlo.txt").exists());
+        let base = BaseWeights::load(dir.join("m")).unwrap();
+        assert_eq!(base.cfg, cfg);
+        assert!(base.param_count() > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn synth_adapter_covers_all_sites() {
+        let cfg = synth_model_config();
+        let ad = synth_quantized_adapter(&cfg, 5);
+        let StoredAdapter::Quantized(q) = &ad else {
+            panic!("expected quantized")
+        };
+        assert_eq!(q.sites.len(), cfg.lora_site_names().len());
+        assert!(ad.avg_bits() < 16.0);
+        // deltas must match every merged site's expected orientation
+        for (site, delta) in ad.deltas() {
+            let short = site.rsplit_once('.').unwrap().1;
+            let (n_in, m_out) = cfg.site_shape(short).unwrap();
+            assert_eq!(delta.shape(), (m_out, n_in), "{site}");
+        }
+    }
+}

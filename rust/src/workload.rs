@@ -53,6 +53,14 @@ pub fn generate(cfg: &WorkloadConfig, adapters: &[AdapterId]) -> Vec<Arrival> {
     out
 }
 
+/// Closed-loop variant: just the Zipf-popular adapter sequence, no
+/// arrival times. Saturation benches (and the multi-worker scaling
+/// scenario) submit these back-to-back to measure peak throughput
+/// instead of open-loop latency.
+pub fn zipf_ids(cfg: &WorkloadConfig, adapters: &[AdapterId]) -> Vec<AdapterId> {
+    generate(cfg, adapters).into_iter().map(|a| a.adapter).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +102,15 @@ mod tests {
         let b = generate(&cfg, &[0, 1]);
         assert_eq!(a.len(), b.len());
         assert!(a.iter().zip(&b).all(|(x, y)| x.at == y.at && x.adapter == y.adapter));
+    }
+
+    #[test]
+    fn closed_loop_ids_match_open_loop_mix() {
+        let cfg = WorkloadConfig { n_requests: 64, ..Default::default() };
+        let ids: Vec<AdapterId> = (0..8).collect();
+        let closed = zipf_ids(&cfg, &ids);
+        let open: Vec<AdapterId> = generate(&cfg, &ids).into_iter().map(|a| a.adapter).collect();
+        assert_eq!(closed, open, "same seed must yield the same adapter mix");
+        assert_eq!(closed.len(), 64);
     }
 }

@@ -7,7 +7,7 @@ use loraquant::loraquant::{
     quantize_site, reparameterize, select_h, split_at, HSelect, LoraQuantConfig,
 };
 use loraquant::quant::{
-    bin_dequant, bin_quant, pack_codes, rtn_dequant, rtn_quant, unpack_codes,
+    bin_dequant, bin_quant, pack_codes, rtn_dequant, rtn_quant, unpack_codes, Axis,
 };
 use loraquant::tensor::matmul;
 use loraquant::testutil::{check, check_with, Config, Rng};
@@ -99,6 +99,61 @@ fn prop_packing_roundtrips_all_widths() {
         let len = rng.below(200);
         let codes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
         assert_eq!(unpack_codes(&pack_codes(&codes, bits), bits, len), codes);
+    });
+}
+
+#[test]
+fn prop_packing_bit_exact_at_ultra_low_widths() {
+    // The serving path stores codes at 1/2/3 bits; packing must be an
+    // exact bijection there for every length, including lengths that
+    // leave a partial trailing byte and 3-bit codes straddling bytes.
+    check("1/2/3-bit pack/unpack bit-exactness", |rng| {
+        for bits in [1u32, 2, 3] {
+            let len = rng.below(513);
+            let codes: Vec<u8> =
+                (0..len).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack_codes(&codes, bits);
+            assert_eq!(packed.len(), (len * bits as usize).div_ceil(8), "bits={bits}");
+            assert_eq!(unpack_codes(&packed, bits, len), codes, "bits={bits} len={len}");
+        }
+    });
+}
+
+#[test]
+fn prop_rtn_group_error_bound_holds_on_both_axes() {
+    // RTN round-trip error must stay within one group scale no matter
+    // which axis the grouping runs along (paper App. B: B' is quantized
+    // column-wise by default, A' row-wise).
+    check("rtn per-group bound, row and col axes", |rng| {
+        let rows = 1 + rng.below(12);
+        let cols = [24, 32, 50, 64][rng.below(4)];
+        let std = rng.range_f32(0.2, 2.0);
+        let w = rng.matrix(rows, cols, std);
+        let bits = 1 + rng.below(4) as u32;
+        let group = [8, 16, 32][rng.below(3)];
+        for axis in [Axis::Row, Axis::Col] {
+            let oriented = axis.orient(&w);
+            let q = rtn_quant(&oriented, bits, group);
+            let back = axis.restore(rtn_dequant(&q));
+            assert_eq!(back.shape(), w.shape(), "{axis}");
+            let gpr = q.groups_per_row();
+            for i in 0..w.rows() {
+                for j in 0..w.cols() {
+                    // map the element to its (row, group) in quantization
+                    // orientation to find the bounding scale
+                    let (qi, qj) = match axis {
+                        Axis::Row => (i, j),
+                        Axis::Col => (j, i),
+                    };
+                    let s = q.scale[qi * gpr + qj / group].abs();
+                    let e = (w.at(i, j) - back.at(i, j)).abs();
+                    assert!(
+                        e <= s * 1.01 + 1e-6,
+                        "{axis} bits={bits} group={group} ({i},{j}): err {e} > scale {s}"
+                    );
+                }
+            }
+        }
     });
 }
 

@@ -5,13 +5,9 @@
 //! quantized sub-LoRA apply (artifacts/lora_apply.hlo.txt) matches the
 //! rust-side dequantized computation bit-for-bit-ish.
 
-use loraquant::adapter::fmt::Tensor;
 use loraquant::eval::{evaluate, EvalSet};
 use loraquant::model::{merge_adapter, BaseWeights};
-use loraquant::quant::{bin_dequant, bin_quant, rtn_dequant, rtn_quant};
 use loraquant::runtime::Engine;
-use loraquant::tensor::{matmul, matmul_a_bt, Matrix};
-use loraquant::testutil::Rng;
 use std::path::Path;
 
 const MODEL: &str = "tiny-llama-s";
@@ -70,9 +66,16 @@ fn eval_harness_scores_fp16_adapter_better_than_base() {
 
 /// Cross-layer contract: the Pallas kernel artifact (L1, lowered through
 /// L2's AOT path) computes the same fused quantized sub-LoRA apply as the
-/// rust quantizers (L3).
+/// rust quantizers (L3). Raw-HLO execution exists only on the PJRT
+/// backend, so this test is compiled out of the reference-engine build.
+#[cfg(feature = "pjrt")]
 #[test]
 fn pallas_kernel_artifact_matches_rust_dequant() {
+    use loraquant::adapter::fmt::Tensor;
+    use loraquant::quant::{bin_dequant, bin_quant, rtn_dequant, rtn_quant};
+    use loraquant::tensor::{matmul, matmul_a_bt, Matrix};
+    use loraquant::testutil::Rng;
+
     let path = Path::new("artifacts/lora_apply.hlo.txt");
     if !path.exists() {
         eprintln!("skipping: lora_apply artifact missing");

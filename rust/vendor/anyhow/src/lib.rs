@@ -1,0 +1,217 @@
+//! Vendored, offline subset of the `anyhow` error-handling API.
+//!
+//! The build environment has no crates.io access, so this crate
+//! re-implements exactly the surface `loraquant` uses — [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the [`anyhow!`] /
+//! [`bail!`] macros — with the same semantics:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`, capturing its source chain;
+//! * `.context(..)` / `.with_context(..)` push a new message onto the
+//!   chain (and lift `Option` into `Result`);
+//! * `{e}` displays the outermost message, `{e:#}` the whole chain
+//!   joined with `": "`, and `{e:?}` a multi-line report.
+//!
+//! Swapping the real crate back in is a one-line Cargo.toml change; no
+//! source edits are needed.
+
+use std::fmt;
+
+/// `Result` alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error type (the outermost message first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` under a new outermost message.
+    pub fn context(self, msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, msg) in self.chain().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(msg)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            f.write_str("\n\nCaused by:")?;
+            for msg in self.chain().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below
+// coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut top = Error::msg(&e);
+        // capture the std source chain as messages
+        let mut src = e.source();
+        let mut tail: &mut Error = &mut top;
+        while let Some(s) = src {
+            tail.source = Some(Box::new(Error::msg(s)));
+            tail = tail.source.as_deref_mut().unwrap();
+            src = s.source();
+        }
+        top
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message (lifts `Option::None` into an error).
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn std_source_chain_is_captured() {
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str("outer failed")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e: Error = Outer(io_err()).into();
+        assert_eq!(format!("{e:#}"), "outer failed: missing");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e: Result<()> = Err(Error::msg("root"));
+        let e = e.context("mid").unwrap_err().context("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top: mid: root");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_lifts() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("k={}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "k=7");
+        assert_eq!(Some(3u32).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("code {}", 42);
+        assert_eq!(e.to_string(), "code 42");
+        fn bails() -> Result<()> {
+            bail!("nope {n}", n = 1);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
