@@ -8,14 +8,24 @@
 //!    replayed at pool sizes 1/2/4; reports req/s and speedup vs one
 //!    worker (the off-hot-path merge pipeline + per-worker engines should
 //!    give ≥ 1.5× at 4 workers);
-//! 3. cold vs prefetched first-burst latency.
+//! 3. cold vs prefetched first-burst latency;
+//! 4. **heterogeneous-adapter batches** — 16 tenants hit round-robin
+//!    (adjacent requests never share an adapter: the worst case for
+//!    per-adapter batching, the best case for factor-form mixed batches)
+//!    under `merged` vs `factor` vs `auto`.
+//!
+//! Scenario 2 and 4 results are also written to `BENCH_serving.json` —
+//! one machine-readable snapshot per run (each PR's committed snapshot
+//! is one point of the perf trajectory).
 //!
 //! Runs against real `make artifacts` output when present; otherwise (on
 //! the reference engine) it synthesizes a model + adapters and runs the
 //! same scenarios hermetically.
 
 use loraquant::adapter::LoraAdapter;
-use loraquant::coordinator::{Coordinator, CoordinatorConfig, GenRequest, StoredAdapter};
+use loraquant::coordinator::{
+    Coordinator, CoordinatorConfig, GenRequest, MergeStrategy, StoredAdapter,
+};
 use loraquant::experiments::{lq, Settings};
 use loraquant::loraquant::{quantize_site, QuantizedLora};
 use loraquant::testutil::{synth_model_config, synth_quantized_adapter, write_synth_model};
@@ -114,6 +124,9 @@ fn main() -> anyhow::Result<()> {
         let _ = join.join();
     }
 
+    // machine-readable rows accumulated across scenarios
+    let mut json_rows: Vec<String> = Vec::new();
+
     // ---- scenario 2: multi-worker scaling on a saturating mixed load ----
     println!("\n# Multi-worker scaling — 16 tenants, 192 closed-loop requests");
     // rate only shapes (discarded) arrival times here; keep it huge so the
@@ -156,6 +169,11 @@ fn main() -> anyhow::Result<()> {
             m.mean_batch_size(),
             cache.hit_rate(),
         );
+        json_rows.push(format!(
+            r#"{{"scenario":"worker_scaling","workers":{workers},"requests":{},"ok":{ok},"req_per_s":{rps:.1},"speedup":{speedup:.2},"mean_batch":{:.2}}}"#,
+            mix.len(),
+            m.mean_batch_size(),
+        ));
         coord.shutdown();
         let _ = join.join();
     }
@@ -201,5 +219,64 @@ fn main() -> anyhow::Result<()> {
         coord.shutdown();
         let _ = join.join();
     }
+
+    // ---- scenario 4: heterogeneous-adapter batches, merged vs factor ----
+    println!("\n# Merge strategy — 16 tenants round-robin, 128 closed-loop requests");
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor, MergeStrategy::Auto] {
+        if cfg!(feature = "pjrt") && strategy != MergeStrategy::Merged {
+            println!("strategy={strategy:<6} | skipped (PJRT backend is merged-only)");
+            continue;
+        }
+        let mut cfg =
+            CoordinatorConfig::new(&artifacts, &model).with_merge_strategy(strategy);
+        cfg.max_wait = Duration::from_millis(2);
+        let (coord, join) = Coordinator::start(cfg)?;
+        let mut ids = Vec::new();
+        for i in 0..16 {
+            let (task, q) = &adapters[i % adapters.len()];
+            ids.push(coord.register_adapter(q.clone(), task.clone())?);
+        }
+        // round-robin: adjacent requests never share an adapter, so the
+        // merged path cannot amortize a batch across tenants while the
+        // factor path fills heterogeneous buckets
+        let start = Instant::now();
+        let rxs: Vec<_> = (0..128)
+            .map(|i| {
+                coord.generate_async(GenRequest {
+                    adapter: ids[i % ids.len()],
+                    prompt: vec![1, 5, 4, 7, 3],
+                    max_new: 3,
+                })
+            })
+            .collect();
+        let ok = rxs.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
+        let wall = start.elapsed();
+        let rps = ok as f64 / wall.as_secs_f64();
+        let (m, cache, _) = coord.metrics()?;
+        let p95_us =
+            m.e2e_latency.as_ref().map_or(0, |h| h.quantile(0.95).as_micros() as u64);
+        println!(
+            "strategy={strategy:<6} | {ok}/128 ok | {rps:7.1} req/s | p95={p95_us}µs | mean_batch={:.2} factor_batches={} merges(misses)={}",
+            m.mean_batch_size(),
+            m.factor_batches,
+            cache.misses,
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"hetero_batch","strategy":"{strategy}","adapters":16,"requests":128,"ok":{ok},"req_per_s":{rps:.1},"p95_us":{p95_us},"mean_batch":{:.2},"batches":{},"factor_batches":{},"cache_misses":{}}}"#,
+            m.mean_batch_size(),
+            m.batches,
+            m.factor_batches,
+            cache.misses,
+        ));
+        coord.shutdown();
+        let _ = join.join();
+    }
+
+    let json = format!(
+        "{{\"bench\":\"serving\",\"model\":\"{model}\",\"synthetic\":{synthetic},\"scenarios\":[{}]}}\n",
+        json_rows.join(",")
+    );
+    std::fs::write("BENCH_serving.json", &json)?;
+    println!("\nwrote BENCH_serving.json ({} scenario rows)", json_rows.len());
     Ok(())
 }

@@ -1,9 +1,15 @@
-//! Adapter-grouped dynamic batching.
+//! Dynamic batching, in one of two grouping modes.
 //!
-//! All requests in a batch must share one adapter (they execute against one
-//! merged weight set — the S-LoRA batching model restated for merged
-//! serving). A batch is released when it reaches the bucket size, or when
-//! its oldest request has waited `max_wait`; adapters are drained in
+//! * **Per-adapter** (`group_by_adapter: true`, the default): all requests
+//!   in a batch share one adapter — they execute against one merged
+//!   weight set (the S-LoRA batching model restated for merged serving).
+//! * **Mixed** (`group_by_adapter: false`): requests batch in arrival
+//!   order regardless of adapter — the factor-form execution path applies
+//!   each request's adapter on the activation path, so one forward serves
+//!   a heterogeneous multi-adapter batch.
+//!
+//! Either way a batch is released when it reaches the bucket size, or when
+//! its oldest request has waited `max_wait`; queues are drained in
 //! oldest-request-first order (no tenant starves).
 
 use crate::coordinator::registry::AdapterId;
@@ -18,11 +24,14 @@ pub struct BatcherConfig {
     /// Maximum time the oldest request may wait before a partial batch is
     /// released.
     pub max_wait: Duration,
+    /// `true` ⇒ per-adapter batches (merged serving); `false` ⇒ mixed
+    /// heterogeneous batches (factor-form serving).
+    pub group_by_adapter: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { bucket: 8, max_wait: Duration::from_millis(20) }
+        Self { bucket: 8, max_wait: Duration::from_millis(20), group_by_adapter: true }
     }
 }
 
@@ -34,10 +43,11 @@ pub struct PendingRequest<T> {
     pub payload: T,
 }
 
-/// A released batch.
+/// A released batch. `adapter` is `Some` in per-adapter mode (every
+/// request shares it) and `None` for a mixed heterogeneous batch.
 #[derive(Debug)]
 pub struct Batch<T> {
-    pub adapter: AdapterId,
+    pub adapter: Option<AdapterId>,
     pub requests: Vec<PendingRequest<T>>,
 }
 
@@ -46,7 +56,8 @@ pub struct Batch<T> {
 #[derive(Debug)]
 pub struct DynamicBatcher<T> {
     cfg: BatcherConfig,
-    queues: BTreeMap<AdapterId, VecDeque<PendingRequest<T>>>,
+    /// Per-adapter queues, or the single `None` queue in mixed mode.
+    queues: BTreeMap<Option<AdapterId>, VecDeque<PendingRequest<T>>>,
     pending: usize,
 }
 
@@ -57,7 +68,8 @@ impl<T> DynamicBatcher<T> {
 
     /// Enqueue a request.
     pub fn push(&mut self, req: PendingRequest<T>) {
-        self.queues.entry(req.adapter).or_default().push_back(req);
+        let key = self.cfg.group_by_adapter.then_some(req.adapter);
+        self.queues.entry(key).or_default().push_back(req);
         self.pending += 1;
     }
 
@@ -104,15 +116,15 @@ impl<T> DynamicBatcher<T> {
             .min()
     }
 
-    fn drain(&mut self, id: AdapterId) -> Batch<T> {
-        let q = self.queues.get_mut(&id).expect("drain of empty adapter queue");
+    fn drain(&mut self, key: Option<AdapterId>) -> Batch<T> {
+        let q = self.queues.get_mut(&key).expect("drain of empty adapter queue");
         let take = q.len().min(self.cfg.bucket);
         let requests: Vec<_> = q.drain(..take).collect();
         self.pending -= requests.len();
         if q.is_empty() {
-            self.queues.remove(&id);
+            self.queues.remove(&key);
         }
-        Batch { adapter: id, requests }
+        Batch { adapter: key, requests }
     }
 }
 
@@ -127,12 +139,12 @@ mod tests {
     #[test]
     fn releases_full_bucket_immediately() {
         let t0 = Instant::now();
-        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 3, max_wait: Duration::from_secs(9) });
+        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 3, max_wait: Duration::from_secs(9), ..Default::default() });
         for _ in 0..3 {
             b.push(req(7, t0));
         }
         let batch = b.pop_ready(t0).expect("full bucket must release");
-        assert_eq!(batch.adapter, 7);
+        assert_eq!(batch.adapter, Some(7));
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(b.pending(), 0);
     }
@@ -140,7 +152,7 @@ mod tests {
     #[test]
     fn partial_batch_waits_until_deadline() {
         let t0 = Instant::now();
-        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10) };
+        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10), ..Default::default() };
         let mut b = DynamicBatcher::new(cfg);
         b.push(req(1, t0));
         assert!(b.pop_ready(t0).is_none(), "fresh partial batch must wait");
@@ -152,14 +164,14 @@ mod tests {
     #[test]
     fn batches_never_mix_adapters() {
         let t0 = Instant::now();
-        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 2, max_wait: Duration::ZERO });
+        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 2, max_wait: Duration::ZERO, ..Default::default() });
         b.push(req(1, t0));
         b.push(req(2, t0));
         b.push(req(1, t0));
         let mut seen = Vec::new();
         while let Some(batch) = b.pop_ready(t0 + Duration::from_millis(1)) {
-            assert!(batch.requests.iter().all(|r| r.adapter == batch.adapter));
-            seen.push((batch.adapter, batch.requests.len()));
+            assert!(batch.requests.iter().all(|r| Some(r.adapter) == batch.adapter));
+            seen.push((batch.adapter.unwrap(), batch.requests.len()));
         }
         seen.sort_unstable();
         assert_eq!(seen, vec![(1, 2), (2, 1)]);
@@ -168,17 +180,17 @@ mod tests {
     #[test]
     fn oldest_head_served_first() {
         let t0 = Instant::now();
-        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 1, max_wait: Duration::ZERO });
+        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 1, max_wait: Duration::ZERO, ..Default::default() });
         b.push(req(5, t0 + Duration::from_millis(2)));
         b.push(req(3, t0)); // older head
         let batch = b.pop_ready(t0 + Duration::from_secs(1)).unwrap();
-        assert_eq!(batch.adapter, 3);
+        assert_eq!(batch.adapter, Some(3));
     }
 
     #[test]
     fn deadline_reflects_oldest() {
         let t0 = Instant::now();
-        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(20) };
+        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(20), ..Default::default() };
         let mut b = DynamicBatcher::new(cfg);
         assert!(b.next_deadline(t0).is_none());
         b.push(req(1, t0));
@@ -189,7 +201,7 @@ mod tests {
     #[test]
     fn drain_caps_at_bucket() {
         let t0 = Instant::now();
-        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 2, max_wait: Duration::ZERO });
+        let mut b = DynamicBatcher::new(BatcherConfig { bucket: 2, max_wait: Duration::ZERO, ..Default::default() });
         for _ in 0..5 {
             b.push(req(1, t0));
         }
@@ -205,22 +217,22 @@ mod tests {
         // adapter 9 is old but partial; adapter 2 is fresh but full — the
         // full bucket must win the pop.
         let t0 = Instant::now();
-        let cfg = BatcherConfig { bucket: 2, max_wait: Duration::from_millis(5) };
+        let cfg = BatcherConfig { bucket: 2, max_wait: Duration::from_millis(5), ..Default::default() };
         let mut b = DynamicBatcher::new(cfg);
         b.push(req(9, t0));
         b.push(req(2, t0 + Duration::from_millis(20)));
         b.push(req(2, t0 + Duration::from_millis(20)));
         let batch = b.pop_ready(t0 + Duration::from_millis(30)).unwrap();
-        assert_eq!(batch.adapter, 2, "full bucket outranks older partial");
+        assert_eq!(batch.adapter, Some(2), "full bucket outranks older partial");
         assert_eq!(batch.requests.len(), 2);
         let batch = b.pop_ready(t0 + Duration::from_millis(30)).unwrap();
-        assert_eq!(batch.adapter, 9);
+        assert_eq!(batch.adapter, Some(9));
     }
 
     #[test]
     fn max_wait_release_is_exact_at_the_deadline() {
         let t0 = Instant::now();
-        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(10) };
+        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(10), ..Default::default() };
         let mut b = DynamicBatcher::new(cfg);
         b.push(req(1, t0));
         assert!(b.pop_ready(t0 + Duration::from_millis(9)).is_none(), "before deadline");
@@ -236,21 +248,45 @@ mod tests {
         // three expired adapters, distinct head ages — pops must come back
         // oldest-head-first so no tenant starves behind a busier one.
         let t0 = Instant::now();
-        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(1) };
+        let cfg = BatcherConfig { bucket: 8, max_wait: Duration::from_millis(1), ..Default::default() };
         let mut b = DynamicBatcher::new(cfg);
         b.push(req(4, t0 + Duration::from_millis(2)));
         b.push(req(7, t0));
         b.push(req(5, t0 + Duration::from_millis(1)));
         let now = t0 + Duration::from_secs(1);
-        let order: Vec<AdapterId> = std::iter::from_fn(|| b.pop_ready(now).map(|x| x.adapter))
-            .collect();
-        assert_eq!(order, vec![7, 5, 4]);
+        let order: Vec<Option<AdapterId>> =
+            std::iter::from_fn(|| b.pop_ready(now).map(|x| x.adapter)).collect();
+        assert_eq!(order, vec![Some(7), Some(5), Some(4)]);
+    }
+
+    #[test]
+    fn mixed_mode_batches_across_adapters() {
+        let t0 = Instant::now();
+        let cfg = BatcherConfig {
+            bucket: 4,
+            max_wait: Duration::from_millis(10),
+            group_by_adapter: false,
+        };
+        let mut b = DynamicBatcher::new(cfg);
+        for adapter in [3, 1, 4, 1] {
+            b.push(req(adapter, t0));
+        }
+        let batch = b.pop_ready(t0).expect("full mixed bucket must release");
+        assert_eq!(batch.adapter, None, "mixed batches carry no single adapter");
+        assert_eq!(batch.requests.len(), 4);
+        let adapters: Vec<AdapterId> = batch.requests.iter().map(|r| r.adapter).collect();
+        assert_eq!(adapters, vec![3, 1, 4, 1], "arrival order preserved");
+        assert_eq!(b.pending(), 0);
+        // a partial mixed batch still honors max_wait
+        b.push(req(9, t0));
+        assert!(b.pop_ready(t0).is_none());
+        assert!(b.pop_ready(t0 + Duration::from_millis(10)).is_some());
     }
 
     #[test]
     fn next_deadline_none_when_empty() {
         let t0 = Instant::now();
-        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10) };
+        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10), ..Default::default() };
         let mut b = DynamicBatcher::new(cfg);
         assert!(b.next_deadline(t0).is_none(), "idle batcher has no deadline");
         b.push(req(1, t0));
@@ -263,7 +299,7 @@ mod tests {
     #[test]
     fn next_deadline_saturates_past_due() {
         let t0 = Instant::now();
-        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10) };
+        let cfg = BatcherConfig { bucket: 4, max_wait: Duration::from_millis(10), ..Default::default() };
         let mut b = DynamicBatcher::new(cfg);
         b.push(req(1, t0));
         // long past the deadline: the wait must clamp to zero, not wrap

@@ -81,6 +81,9 @@ pub struct ServerMetrics {
     pub merge_latency: Option<Histogram>,
     pub requests: u64,
     pub batches: u64,
+    /// Batches decoded on the factor-form path (unmerged base weights +
+    /// activation-path deltas); the remainder ran on merged weights.
+    pub factor_batches: u64,
     pub tokens_generated: u64,
 }
 
@@ -110,6 +113,7 @@ impl ServerMetrics {
         merge_hist(&mut self.merge_latency, &other.merge_latency);
         self.requests += other.requests;
         self.batches += other.batches;
+        self.factor_batches += other.factor_batches;
         self.tokens_generated += other.tokens_generated;
     }
 
@@ -126,9 +130,10 @@ impl ServerMetrics {
     pub fn summary(&self) -> String {
         let e2e = self.e2e_latency.as_ref().unwrap();
         format!(
-            "requests={} batches={} mean_batch={:.2} p50={:?} p95={:?} p99={:?} mean={:?}",
+            "requests={} batches={} (factor={}) mean_batch={:.2} p50={:?} p95={:?} p99={:?} mean={:?}",
             self.requests,
             self.batches,
+            self.factor_batches,
             self.mean_batch_size(),
             e2e.quantile(0.5),
             e2e.quantile(0.95),

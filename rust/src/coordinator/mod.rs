@@ -7,9 +7,13 @@
 //!   shared across the pool behind the [`Coordinator`] handle.
 //! * [`cache`] — byte-budgeted LRU of **merged, device-resident** weights,
 //!   one per worker: dequantize + merge happens once per adapter
-//!   activation, then requests hit device buffers.
-//! * [`batcher`] — adapter-grouped dynamic batching with a max-wait
-//!   deadline (S-LoRA-style: a batch shares one merged weight set).
+//!   activation, then requests hit device buffers. One of two execution
+//!   strategies ([`MergeStrategy`]): the **factor** path instead serves
+//!   adapters unmerged, applying packed factors on the activation path
+//!   and skipping the merge queue entirely (DESIGN.md §8).
+//! * [`batcher`] — dynamic batching with a max-wait deadline: grouped per
+//!   adapter for merged serving (S-LoRA-style: a batch shares one merged
+//!   weight set) or mixed across adapters for factor-form serving.
 //! * [`pool`] — the executor pool: N thread-confined engines with
 //!   rendezvous-hashed adapter affinity and multi-bucket decode.
 //! * [`merge_worker`] — the off-hot-path merge pipeline: cache-miss
@@ -35,4 +39,4 @@ pub use merge_worker::MergeHook;
 pub use metrics::{Histogram, ServerMetrics};
 pub use pool::{route, WorkerSnapshot};
 pub use registry::{AdapterId, AdapterRegistry, StoredAdapter};
-pub use server::{Coordinator, CoordinatorConfig, GenRequest, GenResponse};
+pub use server::{Coordinator, CoordinatorConfig, GenRequest, GenResponse, MergeStrategy};

@@ -16,15 +16,23 @@
 //! * **Multi-bucket decode** — each worker loads one compiled program per
 //!   configured bucket and decodes a batch on the smallest bucket that
 //!   fits it, instead of always padding to the largest.
+//! * **Execution strategies** — `Merged` is the classical path above;
+//!   `Factor` never merges at all (heterogeneous batches decode over
+//!   unmerged base weights with per-request factor-form deltas); `Auto`
+//!   serves cold adapters factor-form immediately while a background
+//!   merge warms the cache (DESIGN.md §8).
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
 use super::cache::{CacheStats, LruCache};
 use super::merge_worker::{MergeJob, Shared};
 use super::metrics::ServerMetrics;
-use super::registry::AdapterId;
-use super::server::{GenRequest, GenResponse, Responder};
+use super::registry::{AdapterId, StoredAdapter};
+use super::server::{GenRequest, GenResponse, MergeStrategy, Responder};
 use crate::adapter::fmt::Tensor;
+use crate::eval::decode::decode_lockstep;
 use crate::eval::tasks::TOKENS;
+use crate::loraquant::QFactors;
+use crate::model::merge::base_weight_list;
 use crate::runtime::{DeviceWeights, Engine};
 use anyhow::anyhow;
 use std::collections::HashMap;
@@ -62,6 +70,8 @@ pub(crate) struct WorkerConfig {
     pub max_wait: Duration,
     /// This worker's share of the merged-weight cache budget.
     pub cache_budget_bytes: usize,
+    /// Adapter execution strategy (merged / factor / auto).
+    pub strategy: MergeStrategy,
 }
 
 /// One worker's metrics snapshot.
@@ -167,6 +177,10 @@ struct Worker {
     inflight: HashMap<AdapterId, Inflight>,
     merge_tx: mpsc::Sender<MergeJob>,
     self_tx: mpsc::Sender<WorkerMsg>,
+    strategy: MergeStrategy,
+    /// Unmerged base weights, resident once per worker — the substrate the
+    /// factor-form path decodes over (None under `Merged`).
+    base_weights: Option<DeviceWeights>,
 }
 
 impl Worker {
@@ -185,6 +199,11 @@ impl Worker {
             progs.push((b, format!("{}/b{}", cfg.model, b)));
         }
         let max_bucket = *cfg.buckets.last().expect("buckets validated non-empty");
+        let base_weights = if cfg.strategy == MergeStrategy::Merged {
+            None
+        } else {
+            Some(engine.upload_weights(&base_weight_list(&shared.base)?)?)
+        };
         Ok(Self {
             idx,
             shared,
@@ -193,12 +212,17 @@ impl Worker {
             batcher: DynamicBatcher::new(BatcherConfig {
                 bucket: max_bucket,
                 max_wait: cfg.max_wait,
+                // pure factor serving mixes adapters in one batch; merged
+                // and auto keep per-adapter batches for the weight cache
+                group_by_adapter: cfg.strategy != MergeStrategy::Factor,
             }),
             cache: LruCache::new(cfg.cache_budget_bytes),
             metrics: ServerMetrics::new(),
             inflight: HashMap::new(),
             merge_tx,
             self_tx,
+            strategy: cfg.strategy,
+            base_weights,
         })
     }
 
@@ -219,8 +243,8 @@ impl Worker {
             let _ = resp.send(Err(anyhow!("unknown adapter {adapter}")));
             return;
         }
-        // An empty prompt has no logits row to decode from (and would
-        // underflow `pos - 1` in decode_batch, killing the worker).
+        // An empty prompt has no logits row to decode from (rejected
+        // again inside decode_lockstep, but failing early is cheaper).
         if req.prompt.is_empty() {
             let _ = resp.send(Err(anyhow!("empty prompt")));
             return;
@@ -241,6 +265,17 @@ impl Worker {
     }
 
     fn on_prefetch(&mut self, id: AdapterId, ack: mpsc::Sender<anyhow::Result<()>>) {
+        if self.strategy == MergeStrategy::Factor {
+            // nothing to warm: the factor path decodes over the shared
+            // base weights and never materializes per-adapter state
+            let result = if self.shared.with_registry(|r| r.get(id).is_none()) {
+                Err(anyhow!("unknown adapter {id}"))
+            } else {
+                Ok(())
+            };
+            let _ = ack.send(result);
+            return;
+        }
         if self.cache.touch(&id) {
             // already resident: refresh recency (the caller wants it
             // protected ahead of traffic) without counting a hit
@@ -261,7 +296,42 @@ impl Worker {
     }
 
     fn on_batch(&mut self, batch: Batch<Payload>) {
-        let id = batch.adapter;
+        match (self.strategy, batch.adapter) {
+            // pure factor serving: heterogeneous batch, no cache, no
+            // merge queue — straight to decode
+            (MergeStrategy::Factor, _) => self.run_batch_factor(batch.requests),
+            (MergeStrategy::Merged, Some(id)) => self.on_batch_merged(id, batch.requests),
+            (MergeStrategy::Auto, Some(id)) => {
+                // one counted lookup per batch, same as the merged path
+                if self.cache.get(&id).is_some() {
+                    self.run_batch_merged(id, batch.requests);
+                } else {
+                    // no cold-adapter cliff: serve this batch unmerged now
+                    // and let a background merge warm the cache for later
+                    if !self.inflight.contains_key(&id) {
+                        self.inflight.insert(
+                            id,
+                            Inflight {
+                                miss_counted: true,
+                                parked: Vec::new(),
+                                waiters: Vec::new(),
+                            },
+                        );
+                        self.submit_merge(id);
+                    }
+                    self.run_batch_factor(batch.requests);
+                }
+            }
+            (_, None) => {
+                // per-adapter batchers always tag their batches
+                for r in batch.requests {
+                    let _ = r.payload.1.send(Err(anyhow!("internal: untagged adapter batch")));
+                }
+            }
+        }
+    }
+
+    fn on_batch_merged(&mut self, id: AdapterId, requests: Vec<Queued>) {
         if let Some(fl) = self.inflight.get_mut(&id) {
             // merge already in flight — park behind it. The batch's cache
             // lookup is deferred to the drain, so on the error-free path
@@ -269,15 +339,15 @@ impl Worker {
             // (hits + misses == batches); failed merges abort their
             // parked batches before decode, so neither counter moves in
             // lock-step there.
-            fl.parked.push(batch.requests);
+            fl.parked.push(requests);
             return;
         }
         if self.cache.get(&id).is_some() {
-            self.run_batch(id, batch.requests);
+            self.run_batch_merged(id, requests);
         } else {
             self.inflight.insert(
                 id,
-                Inflight { miss_counted: true, parked: vec![batch.requests], waiters: Vec::new() },
+                Inflight { miss_counted: true, parked: vec![requests], waiters: Vec::new() },
             );
             self.submit_merge(id);
         }
@@ -328,7 +398,7 @@ impl Worker {
                     if i > 0 || !miss_counted {
                         let _ = self.cache.get(&id);
                     }
-                    self.run_batch(id, requests);
+                    self.run_batch_merged(id, requests);
                 }
             }
             Err(e) => {
@@ -353,8 +423,47 @@ impl Worker {
         (self.progs[i].0, i)
     }
 
-    fn run_batch(&mut self, adapter: AdapterId, requests: Vec<Queued>) {
-        match self.decode_batch(adapter, &requests) {
+    fn run_batch_merged(&mut self, adapter: AdapterId, requests: Vec<Queued>) {
+        let outcome = self.decode_merged(adapter, &requests);
+        self.finish_batch(requests, outcome, false);
+    }
+
+    /// Factor-form decode: resolve every request's adapter to a packed
+    /// factor view and serve the (possibly heterogeneous) batch over the
+    /// unmerged base weights. No cache, no merge queue.
+    fn run_batch_factor(&mut self, requests: Vec<Queued>) {
+        let arcs: Vec<Option<Arc<StoredAdapter>>> = self.shared.with_registry(|r| {
+            requests.iter().map(|q| r.get(q.adapter).map(|e| e.adapter.clone())).collect()
+        });
+        // adapters unregistered since enqueue fail their own requests only
+        let mut valid = Vec::with_capacity(requests.len());
+        let mut adapters = Vec::with_capacity(requests.len());
+        for (r, arc) in requests.into_iter().zip(arcs) {
+            match arc {
+                Some(a) => {
+                    valid.push(r);
+                    adapters.push(a);
+                }
+                None => {
+                    let _ = r.payload.1.send(Err(anyhow!("unknown adapter {}", r.adapter)));
+                }
+            }
+        }
+        if valid.is_empty() {
+            return;
+        }
+        let outcome = self.decode_factor(&valid, &adapters);
+        self.finish_batch(valid, outcome, true);
+    }
+
+    /// Respond + account for one decoded (or failed) batch.
+    fn finish_batch(
+        &mut self,
+        requests: Vec<Queued>,
+        outcome: anyhow::Result<Vec<Vec<i32>>>,
+        factor: bool,
+    ) {
+        match outcome {
             Ok(outputs) => {
                 let now = Instant::now();
                 for (r, tokens) in requests.into_iter().zip(outputs) {
@@ -367,6 +476,9 @@ impl Worker {
                     let _ = r.payload.1.send(Ok(GenResponse { tokens, e2e }));
                 }
                 self.metrics.batches += 1;
+                if factor {
+                    self.metrics.factor_batches += 1;
+                }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
@@ -377,71 +489,99 @@ impl Worker {
         }
     }
 
-    /// Lock-step batched greedy decode on the smallest fitting bucket
-    /// (same protocol as eval::decode).
-    fn decode_batch(
+    /// Seed decode lanes from a batch on the smallest fitting bucket.
+    /// Padding lanes replicate the last request (output discarded).
+    fn build_lanes(&self, requests: &[Queued]) -> Lanes {
+        let t_len = self.shared.base.cfg.seq_len;
+        let n = requests.len();
+        let (bsz, prog_idx) = self.pick_bucket(n);
+        assert!(n <= bsz, "batcher released more than the largest bucket");
+        let mut seqs = vec![vec![TOKENS::PAD; t_len]; bsz];
+        let mut pos = vec![0usize; bsz];
+        let mut budgets = vec![0usize; bsz];
+        for k in 0..bsz {
+            let req = &requests[k.min(n - 1)].payload.0;
+            let plen = req.prompt.len().min(t_len);
+            seqs[k][..plen].copy_from_slice(&req.prompt[..plen]);
+            pos[k] = plen;
+            budgets[k] = req.max_new.min(t_len - plen);
+        }
+        Lanes { seqs, pos, budgets, bsz, prog_idx }
+    }
+
+    /// Lock-step batched greedy decode over this adapter's cached merged
+    /// weights (shared protocol: [`decode_lockstep`]).
+    fn decode_merged(
         &mut self,
         adapter: AdapterId,
         requests: &[Queued],
     ) -> anyhow::Result<Vec<Vec<i32>>> {
         let t_len = self.shared.base.cfg.seq_len;
         let vocab = self.shared.base.cfg.vocab;
-        let n = requests.len();
-        let (bsz, prog_idx) = self.pick_bucket(n);
-        assert!(n <= bsz, "batcher released more than the largest bucket");
-        let mut seqs = vec![vec![TOKENS::PAD; t_len]; bsz];
-        let mut pos = vec![0usize; bsz];
-        let mut budget = vec![0usize; bsz];
-        for k in 0..bsz {
-            let req = &requests[k.min(n - 1)].payload.0;
-            let plen = req.prompt.len().min(t_len);
-            seqs[k][..plen].copy_from_slice(&req.prompt[..plen]);
-            pos[k] = plen;
-            budget[k] = req.max_new.min(t_len - plen);
-        }
-        let mut done = vec![false; bsz];
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); bsz];
+        let Lanes { mut seqs, mut pos, budgets, bsz, prog_idx } = self.build_lanes(requests);
         let t_exec = Instant::now();
-        while !done.iter().all(|&d| d) {
-            let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+        let mut generated = {
+            let engine = &self.engine;
             let weights = self
                 .cache
                 .peek(&adapter)
                 .ok_or_else(|| anyhow!("merged weights missing for adapter {adapter}"))?;
             let prog = self.progs[prog_idx].1.as_str();
-            let logits = self.engine.forward(prog, &flat, &[bsz, t_len], weights)?;
-            for k in 0..bsz {
-                if done[k] {
-                    continue;
-                }
-                if generated[k].len() >= budget[k] || pos[k] >= t_len {
-                    done[k] = true;
-                    continue;
-                }
-                let base = (k * t_len + pos[k] - 1) * vocab;
-                let row = &logits[base..base + vocab];
-                let mut best = 0usize;
-                for v in 1..vocab {
-                    if row[v] > row[best] {
-                        best = v;
-                    }
-                }
-                let tok = best as i32;
-                seqs[k][pos[k]] = tok;
-                pos[k] += 1;
-                if tok == TOKENS::EOS {
-                    done[k] = true;
-                } else {
-                    generated[k].push(tok);
-                }
-            }
+            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, |flat| {
+                engine.forward(prog, flat, &[bsz, t_len], weights)
+            })?
+        };
+        if let Some(h) = self.metrics.exec_latency.as_mut() {
+            h.record(t_exec.elapsed());
         }
+        generated.truncate(requests.len());
+        Ok(generated)
+    }
+
+    /// Lock-step batched greedy decode over the **unmerged** base weights,
+    /// applying each lane's adapter in factor form on the activation path
+    /// — per-request adapters, so the batch may mix tenants.
+    fn decode_factor(
+        &mut self,
+        requests: &[Queued],
+        adapters: &[Arc<StoredAdapter>],
+    ) -> anyhow::Result<Vec<Vec<i32>>> {
+        let t_len = self.shared.base.cfg.seq_len;
+        let vocab = self.shared.base.cfg.vocab;
+        let Lanes { mut seqs, mut pos, budgets, bsz, prog_idx } = self.build_lanes(requests);
+        let n = requests.len();
+        let factors: Vec<QFactors<'_>> = adapters.iter().map(|a| a.factors()).collect();
+        let lane_factors: Vec<Option<&QFactors<'_>>> =
+            (0..bsz).map(|k| Some(&factors[k.min(n - 1)])).collect();
+        let t_exec = Instant::now();
+        let mut generated = {
+            let engine = &self.engine;
+            let weights = self
+                .base_weights
+                .as_ref()
+                .ok_or_else(|| anyhow!("factor path requires resident base weights"))?;
+            let prog = self.progs[prog_idx].1.as_str();
+            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, |flat| {
+                engine.forward_with_adapters(prog, flat, &[bsz, t_len], weights, &lane_factors)
+            })?
+        };
         if let Some(h) = self.metrics.exec_latency.as_mut() {
             h.record(t_exec.elapsed());
         }
         generated.truncate(n);
         Ok(generated)
     }
+}
+
+/// Decode lanes seeded from one batch (see [`Worker::build_lanes`]).
+struct Lanes {
+    seqs: Vec<Vec<i32>>,
+    pos: Vec<usize>,
+    budgets: Vec<usize>,
+    /// Bucket size actually decoded (≥ batch size).
+    bsz: usize,
+    /// Index into `Worker::progs`.
+    prog_idx: usize,
 }
 
 #[cfg(test)]

@@ -2,8 +2,9 @@
 //! serves. LoRAQuant-compressed adapters stay packed until activated.
 
 use crate::adapter::LoraAdapter;
-use crate::loraquant::QuantizedLora;
+use crate::loraquant::{fp_factors, QFactors, QuantizedLora};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Registry key for one adapter (tenant/task).
 pub type AdapterId = u32;
@@ -34,19 +35,33 @@ impl StoredAdapter {
         }
     }
 
-    /// Per-site deltas `ΔW = B A` (dequantizing if packed).
+    /// Per-site deltas `ΔW = B A` (dequantizing if packed) — the merged
+    /// execution path's input.
     pub fn deltas(&self) -> BTreeMap<String, crate::tensor::Matrix> {
         match self {
             StoredAdapter::Fp16(a) => crate::model::merge::fp_deltas(a),
             StoredAdapter::Quantized(q) => crate::model::merge::quant_deltas(q),
         }
     }
+
+    /// Borrowed factor-form view — the unmerged execution path's input.
+    /// Nothing is dequantized or densified; quantized adapters stay
+    /// packed, FP adapters expose their dense factors directly.
+    pub fn factors(&self) -> QFactors<'_> {
+        match self {
+            StoredAdapter::Fp16(a) => fp_factors(a),
+            StoredAdapter::Quantized(q) => q.factors(),
+        }
+    }
 }
 
-/// Entry metadata kept alongside the adapter.
+/// Entry metadata kept alongside the adapter. The adapter itself is
+/// `Arc`-shared so executor workers can hold a batch's adapters across a
+/// factor-form decode without copying packed bytes or holding the
+/// registry lock.
 #[derive(Debug, Clone)]
 pub struct RegistryEntry {
-    pub adapter: StoredAdapter,
+    pub adapter: Arc<StoredAdapter>,
     /// Which eval task this adapter serves (used by examples/benches).
     pub task: String,
 }
@@ -67,7 +82,7 @@ impl AdapterRegistry {
     pub fn register(&mut self, adapter: StoredAdapter, task: impl Into<String>) -> AdapterId {
         let id = self.next_id;
         self.next_id += 1;
-        self.entries.insert(id, RegistryEntry { adapter, task: task.into() });
+        self.entries.insert(id, RegistryEntry { adapter: Arc::new(adapter), task: task.into() });
         id
     }
 

@@ -23,8 +23,51 @@ use super::registry::{AdapterId, AdapterRegistry, StoredAdapter};
 use crate::model::BaseWeights;
 use anyhow::{bail, Context};
 use std::path::PathBuf;
+use std::str::FromStr;
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
+
+/// How adapters execute (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MergeStrategy {
+    /// Dequantize + merge into dense weights on first use, cache the
+    /// merged set, batch per adapter (the classical path; the only
+    /// option under `--features pjrt`).
+    #[default]
+    Merged,
+    /// Never merge: serve every request over unmerged base weights with
+    /// the adapter applied in factor form on the activation path. Mixed
+    /// heterogeneous batches; zero merge-queue traffic; per-adapter
+    /// device cache unused.
+    Factor,
+    /// Serve cache misses in factor form immediately (no merge on the
+    /// request path) while a background merge warms the cache; once
+    /// merged weights land, later batches take the merged path.
+    Auto,
+}
+
+impl FromStr for MergeStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "merged" => Ok(Self::Merged),
+            "factor" => Ok(Self::Factor),
+            "auto" => Ok(Self::Auto),
+            other => bail!("unknown merge strategy '{other}' (try merged|factor|auto)"),
+        }
+    }
+}
+
+impl std::fmt::Display for MergeStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Merged => "merged",
+            Self::Factor => "factor",
+            Self::Auto => "auto",
+        })
+    }
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -44,6 +87,8 @@ pub struct CoordinatorConfig {
     pub cache_budget_bytes: usize,
     /// Merge pipeline threads (host-side dequant+merge on cache miss).
     pub merge_workers: usize,
+    /// Adapter execution strategy.
+    pub merge_strategy: MergeStrategy,
     /// Test/ops instrumentation called at the start of every merge.
     pub merge_hook: Option<MergeHook>,
 }
@@ -58,6 +103,7 @@ impl CoordinatorConfig {
             max_wait: Duration::from_millis(10),
             cache_budget_bytes: 64 << 20,
             merge_workers: 2,
+            merge_strategy: MergeStrategy::default(),
             merge_hook: None,
         }
     }
@@ -71,6 +117,12 @@ impl CoordinatorConfig {
     /// Builder sugar: set the compiled batch buckets.
     pub fn with_buckets(mut self, buckets: Vec<usize>) -> Self {
         self.buckets = buckets;
+        self
+    }
+
+    /// Builder sugar: set the adapter execution strategy.
+    pub fn with_merge_strategy(mut self, strategy: MergeStrategy) -> Self {
+        self.merge_strategy = strategy;
         self
     }
 
@@ -138,6 +190,13 @@ impl Coordinator {
     /// (handle, supervisor join-handle).
     pub fn start(cfg: CoordinatorConfig) -> anyhow::Result<(Self, std::thread::JoinHandle<()>)> {
         let buckets = cfg.normalized_buckets()?;
+        if cfg!(feature = "pjrt") && cfg.merge_strategy != MergeStrategy::Merged {
+            bail!(
+                "merge strategy '{}' needs activation-path adapter application, which the \
+                 AOT-compiled PJRT programs cannot do; use 'merged'",
+                cfg.merge_strategy
+            );
+        }
         let n_workers = cfg.workers.max(1);
         let base = BaseWeights::load(cfg.artifacts_dir.join(&cfg.model))?;
         let shared = Arc::new(Shared::new(base));
@@ -151,6 +210,7 @@ impl Coordinator {
             buckets,
             max_wait: cfg.max_wait,
             cache_budget_bytes: (cfg.cache_budget_bytes / n_workers).max(1),
+            strategy: cfg.merge_strategy,
         };
 
         let mut txs = Vec::with_capacity(n_workers);

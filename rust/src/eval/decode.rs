@@ -1,9 +1,22 @@
-//! Batched greedy decoding + scoring through the PJRT runtime.
+//! Batched greedy decoding + scoring.
+//!
+//! [`decode_lockstep`] is the **single** lock-step greedy-decode protocol
+//! shared by the evaluator here and the serving pool
+//! (`coordinator::pool`) — the two copies had drifted in budget/EOS
+//! semantics, so the protocol now lives in one place:
+//!
+//! * every step runs one full-sequence forward over the whole batch
+//!   (supplied by the caller as a closure, so merged-weight and
+//!   factor-form execution share the loop);
+//! * lane `k` generates until its budget is exhausted, the sequence is
+//!   full, or greedy argmax emits EOS — EOS is written into the sequence
+//!   but never returned as a generated token.
 
 use super::rouge::rouge_l;
 use super::tasks::{EvalSet, TOKENS};
 use crate::model::ModelConfig;
 use crate::runtime::{DeviceWeights, Engine};
+use anyhow::bail;
 
 /// Result of evaluating one adapter on one task.
 #[derive(Debug, Clone)]
@@ -16,14 +29,87 @@ pub struct EvalOutcome {
     pub exact: bool,
 }
 
+/// Lock-step batched greedy decode over pre-seeded lanes.
+///
+/// * `seqs[k]` — the padded working sequence of lane `k` (`seq_len` long,
+///   prompt already written at the front).
+/// * `pos[k]` — the next write position (= prompt length, ≥ 1).
+/// * `budgets[k]` — maximum new tokens (clamped to the sequence room).
+/// * `step` — one full-sequence forward: flat tokens → flat logits
+///   (`lanes · seq_len · vocab`).
+///
+/// Returns the generated tokens per lane, EOS excluded.
+pub fn decode_lockstep(
+    seq_len: usize,
+    vocab: usize,
+    seqs: &mut [Vec<i32>],
+    pos: &mut [usize],
+    budgets: &[usize],
+    mut step: impl FnMut(&[i32]) -> anyhow::Result<Vec<f32>>,
+) -> anyhow::Result<Vec<Vec<i32>>> {
+    let lanes = seqs.len();
+    if pos.len() != lanes || budgets.len() != lanes {
+        bail!("decode_lockstep: {} lanes vs {} pos / {} budgets", lanes, pos.len(), budgets.len());
+    }
+    for k in 0..lanes {
+        if seqs[k].len() != seq_len {
+            bail!("decode_lockstep: lane {k} sequence is {} long, not {seq_len}", seqs[k].len());
+        }
+        if pos[k] == 0 || pos[k] > seq_len {
+            bail!("decode_lockstep: lane {k} position {} out of range 1..={seq_len}", pos[k]);
+        }
+    }
+    let mut generated: Vec<Vec<i32>> = vec![Vec::new(); lanes];
+    // A lane is done once its (room-clamped) budget is spent.
+    let mut done: Vec<bool> = (0..lanes)
+        .map(|k| budgets[k].min(seq_len - pos[k]) == 0)
+        .collect();
+    while !done.iter().all(|&d| d) {
+        let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+        let logits = step(&flat)?;
+        if logits.len() != lanes * seq_len * vocab {
+            bail!(
+                "decode_lockstep: step returned {} logits, expected {}",
+                logits.len(),
+                lanes * seq_len * vocab
+            );
+        }
+        for k in 0..lanes {
+            if done[k] {
+                continue;
+            }
+            let base = (k * seq_len + pos[k] - 1) * vocab;
+            let row = &logits[base..base + vocab];
+            let mut best = 0usize;
+            for v in 1..vocab {
+                if row[v] > row[best] {
+                    best = v;
+                }
+            }
+            let tok = best as i32;
+            seqs[k][pos[k]] = tok;
+            pos[k] += 1;
+            if tok == TOKENS::EOS {
+                done[k] = true;
+            } else {
+                generated[k].push(tok);
+                if generated[k].len() >= budgets[k] || pos[k] >= seq_len {
+                    done[k] = true;
+                }
+            }
+        }
+    }
+    Ok(generated)
+}
+
 /// Greedy-decode every example and score it (paper §4.1 protocol: the model
 /// generates after SEP; EM for math/code analogs, ROUGE-L for the
 /// summarization analog).
 ///
 /// Decoding is batched through the `<model>/b<bucket>` program: examples are
 /// packed `bucket` at a time (the final batch padded by repeating its last
-/// example) and advanced in lock-step; each step is one full-sequence
-/// forward, with per-example write positions.
+/// example) and advanced via [`decode_lockstep`] with per-example budgets
+/// of `|reference|` tokens.
 pub fn evaluate(
     engine: &Engine,
     model: &str,
@@ -44,37 +130,14 @@ pub fn evaluate(
         // working copies of the padded prompts
         let mut seqs: Vec<Vec<i32>> = idx.iter().map(|&i| set.prompts[i].clone()).collect();
         let mut pos: Vec<usize> = idx.iter().map(|&i| set.plens[i]).collect();
-        // Generation protocol (matches train.py quick_eval): produce exactly
-        // |reference| tokens per example — EM then compares the full answer
-        // without conditioning on the model's EOS placement.
+        // Generation protocol (matches train.py quick_eval): up to
+        // |reference| tokens per example; generation past the model's own
+        // EOS never scored anyway, so the lane stops there.
         let budgets: Vec<usize> = idx.iter().map(|&i| set.refs[i].len()).collect();
-        let steps = budgets.iter().copied().max().unwrap_or(0);
-        let mut done = vec![false; bucket];
-        for _ in 0..steps {
-            if done.iter().all(|&d| d) {
-                break;
-            }
-            let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
-            let logits = engine.forward(&prog, &flat, &[bucket, t_len], weights)?;
-            for k in 0..bucket {
-                if done[k] || pos[k] >= t_len || pos[k] - set.plens[idx[k]] >= budgets[k] {
-                    done[k] = true;
-                    continue;
-                }
-                // logits row for (k, pos[k]-1)
-                let base = (k * t_len + pos[k] - 1) * vocab;
-                let row = &logits[base..base + vocab];
-                let mut best = 0usize;
-                for v in 1..vocab {
-                    if row[v] > row[best] {
-                        best = v;
-                    }
-                }
-                let tok = best as i32;
-                seqs[k][pos[k]] = tok;
-                pos[k] += 1;
-            }
-        }
+        let generated =
+            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, |flat| {
+                engine.forward(&prog, flat, &[bucket, t_len], weights)
+            })?;
         // score the real (non-padding) examples of this batch
         for (k, &i) in idx.iter().enumerate() {
             if i < start {
@@ -83,13 +146,10 @@ pub fn evaluate(
             if k > 0 && idx[k - 1] == i {
                 continue;
             }
-            let gen_full = &seqs[k][set.plens[i]..pos[k]];
-            // strip EOS and everything after
-            let gen: Vec<i32> = gen_full.iter().copied().take_while(|&t| t != TOKENS::EOS).collect();
             let score = if set.exact {
-                f64::from(gen == set.refs[i])
+                f64::from(generated[k] == set.refs[i])
             } else {
-                rouge_l(&gen, &set.refs[i])
+                rouge_l(&generated[k], &set.refs[i])
             };
             per_example.push(score);
         }
@@ -102,13 +162,107 @@ pub fn evaluate(
 
 #[cfg(test)]
 mod tests {
-    // evaluate() needs artifacts + a PJRT engine; covered by
-    // rust/tests/runtime_e2e.rs. Here we only test scoring helpers.
     use super::*;
+
+    /// A scripted "model": always emits `next` as the argmax token.
+    fn scripted_step(
+        lanes: usize,
+        seq_len: usize,
+        vocab: usize,
+        next: impl Fn(usize, usize) -> i32,
+    ) -> impl FnMut(&[i32]) -> anyhow::Result<Vec<f32>> {
+        let mut calls = 0usize;
+        move |_flat| {
+            let mut logits = vec![0.0f32; lanes * seq_len * vocab];
+            for k in 0..lanes {
+                for p in 0..seq_len {
+                    let tok = next(k, calls) as usize;
+                    logits[(k * seq_len + p) * vocab + tok] = 10.0;
+                }
+            }
+            calls += 1;
+            Ok(logits)
+        }
+    }
+
+    #[test]
+    fn budgets_and_eos_semantics() {
+        let (seq_len, vocab) = (8, 16);
+        // lane 0: emits 7 forever — stops at budget 3.
+        // lane 1: emits 5 then EOS — returns [5], EOS excluded.
+        let mut seqs = vec![vec![TOKENS::PAD; seq_len]; 2];
+        seqs[0][0] = TOKENS::BOS;
+        seqs[1][0] = TOKENS::BOS;
+        let mut pos = vec![1, 1];
+        let gen = decode_lockstep(
+            seq_len,
+            vocab,
+            &mut seqs,
+            &mut pos,
+            &[3, 5],
+            scripted_step(2, seq_len, vocab, |k, call| {
+                if k == 0 {
+                    7
+                } else if call == 0 {
+                    5
+                } else {
+                    TOKENS::EOS
+                }
+            }),
+        )
+        .unwrap();
+        assert_eq!(gen[0], vec![7, 7, 7]);
+        assert_eq!(gen[1], vec![5]);
+        assert_eq!(pos, vec![4, 3], "EOS is written into the sequence");
+        assert_eq!(seqs[1][2], TOKENS::EOS);
+    }
+
+    #[test]
+    fn budget_clamped_to_sequence_room() {
+        let (seq_len, vocab) = (4, 8);
+        let mut seqs = vec![vec![TOKENS::PAD; seq_len]];
+        seqs[0][..3].copy_from_slice(&[1, 5, 3]);
+        let mut pos = vec![3];
+        let gen = decode_lockstep(
+            seq_len,
+            vocab,
+            &mut seqs,
+            &mut pos,
+            &[100],
+            scripted_step(1, seq_len, vocab, |_, _| 6),
+        )
+        .unwrap();
+        assert_eq!(gen[0], vec![6], "only one slot of room");
+        assert_eq!(pos[0], seq_len);
+    }
+
+    #[test]
+    fn zero_budget_runs_no_forward() {
+        let (seq_len, vocab) = (4, 8);
+        let mut seqs = vec![vec![1, 0, 0, 0]];
+        let mut pos = vec![1];
+        let gen = decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[0], |_flat| {
+            panic!("no forward may run when every budget is zero")
+        })
+        .unwrap();
+        assert!(gen[0].is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_lanes() {
+        let (seq_len, vocab) = (4, 8);
+        let step = |_: &[i32]| -> anyhow::Result<Vec<f32>> { unreachable!() };
+        let mut seqs = vec![vec![1, 0, 0, 0]];
+        let mut pos = vec![0]; // pos 0 has no logits row to read
+        assert!(decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[1], step).is_err());
+        let mut short = vec![vec![1, 0]];
+        let mut pos = vec![1];
+        assert!(decode_lockstep(seq_len, vocab, &mut short, &mut pos, &[1], step).is_err());
+    }
 
     #[test]
     fn em_scoring_semantics() {
-        // the take_while(EOS) + equality path, replicated inline
+        // the EOS-stop + equality path, replicated inline
         let generated = vec![5, 6, TOKENS::EOS, 9];
         let cut: Vec<i32> = generated.iter().copied().take_while(|&t| t != TOKENS::EOS).collect();
         assert_eq!(cut, vec![5, 6]);

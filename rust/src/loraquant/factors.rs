@@ -1,0 +1,276 @@
+//! Factor-form views: apply a (quantized) adapter's delta on the
+//! activation path as two skinny GEMMs — `y += s · (x @ A′ᵀ) @ B′ᵀ` —
+//! without ever materializing the dense `ΔW = B′A′` (DESIGN.md §8).
+//!
+//! A [`QFactors`] borrows the packed sub-LoRA factors straight out of a
+//! [`QuantizedLora`] (or the dense factors of an FP adapter): nothing is
+//! dequantized up front. The streaming kernels in `tensor::ops` unpack
+//! one stored row at a time, so the working set per site is O(max(m, n))
+//! floats regardless of rank or bitwidth.
+
+use super::pipeline::{LowQuantized, QuantizedLora, QuantizedSite};
+use crate::adapter::LoraAdapter;
+use crate::quant::Axis;
+use crate::tensor::{matmul_qdequant_acc, matmul_qdequant_bt_acc, DequantRows, Matrix};
+use std::collections::BTreeMap;
+
+/// One stored factor plus how to contract activations against it.
+///
+/// `transposed == true` means the logical product needs `x @ deq(src)ᵀ`
+/// (the stored rows are the sub-LoRA components); `false` means
+/// `x @ deq(src)` (the stored rows are the model dimension).
+#[derive(Clone, Copy)]
+pub struct FactorView<'a> {
+    pub src: &'a dyn DequantRows,
+    pub transposed: bool,
+}
+
+impl<'a> FactorView<'a> {
+    /// Contraction (input) dimension.
+    pub fn in_dim(&self) -> usize {
+        if self.transposed {
+            self.src.src_cols()
+        } else {
+            self.src.src_rows()
+        }
+    }
+
+    /// Output dimension.
+    pub fn out_dim(&self) -> usize {
+        if self.transposed {
+            self.src.src_rows()
+        } else {
+            self.src.src_cols()
+        }
+    }
+
+    /// `out[rows × out_dim] += alpha · x[rows × in_dim] @ factor`.
+    pub fn contract_acc(&self, x: &[f32], rows: usize, alpha: f32, out: &mut [f32]) {
+        if self.transposed {
+            matmul_qdequant_bt_acc(x, rows, self.in_dim(), self.src, alpha, out);
+        } else {
+            matmul_qdequant_acc(x, rows, self.in_dim(), self.src, alpha, out);
+        }
+    }
+}
+
+/// One sub-LoRA `(B′ m×h, A′ h×n)` in stored (packed) form.
+pub struct FactorPair<'a> {
+    /// Applied first: `u = x @ A′ᵀ` (rows × h).
+    pub a: FactorView<'a>,
+    /// Applied second: `y += s · u @ B′ᵀ` (rows × m).
+    pub b: FactorView<'a>,
+}
+
+impl<'a> FactorPair<'a> {
+    /// Component count `h` of this sub-LoRA.
+    pub fn comps(&self) -> usize {
+        self.a.out_dim()
+    }
+
+    /// `y[rows×m] += scaling · x[rows×n] @ (B′A′)ᵀ` via the rank-h
+    /// bottleneck — 2·h·(m+n) MACs per activation row instead of m·n.
+    pub fn apply_acc(&self, x: &[f32], rows: usize, scaling: f32, y: &mut [f32]) {
+        let h = self.comps();
+        if h == 0 || rows == 0 {
+            return;
+        }
+        let mut u = vec![0.0f32; rows * h];
+        self.a.contract_acc(x, rows, 1.0, &mut u);
+        self.b.contract_acc(&u, rows, scaling, y);
+    }
+}
+
+/// All sub-LoRAs of one adapter site, in factor form.
+pub struct SiteFactors<'a> {
+    /// `ΔW` shape (paper orientation: m_out × n_in).
+    pub m: usize,
+    pub n: usize,
+    /// High- then low-precision pair (either may be absent).
+    pub pairs: Vec<FactorPair<'a>>,
+}
+
+impl<'a> SiteFactors<'a> {
+    /// `y[rows×m] += scaling · x[rows×n] @ ΔWᵀ` without densifying ΔW —
+    /// the serving-orientation (`x @ W`) delta application.
+    pub fn apply_delta_acc(&self, x: &[f32], rows: usize, scaling: f32, y: &mut [f32]) {
+        for p in &self.pairs {
+            p.apply_acc(x, rows, scaling, y);
+        }
+    }
+
+    /// Densify `ΔW` (m×n) *through the factor path* — test oracle glue;
+    /// production code never calls this.
+    pub fn materialize_delta(&self) -> Matrix {
+        let eye = Matrix::eye(self.n);
+        let mut y = Matrix::zeros(self.n, self.m);
+        let rows = self.n;
+        self.apply_delta_acc(eye.data(), rows, 1.0, y.data_mut());
+        y.transpose()
+    }
+}
+
+/// Factor-form view over a whole adapter: site name → [`SiteFactors`].
+pub struct QFactors<'a> {
+    pub sites: BTreeMap<String, SiteFactors<'a>>,
+}
+
+impl<'a> QFactors<'a> {
+    pub fn site(&self, name: &str) -> Option<&SiteFactors<'a>> {
+        self.sites.get(name)
+    }
+}
+
+/// `transposed` flag for a stored A′ factor quantized along `axis`.
+fn a_view(src: &dyn DequantRows, axis: Axis) -> FactorView<'_> {
+    // Row axis ⇒ stored as A′ (h×n, component-major); Col ⇒ stored as A′ᵀ.
+    FactorView { src, transposed: axis == Axis::Row }
+}
+
+/// `transposed` flag for a stored B′ factor quantized along `axis`.
+fn b_view(src: &dyn DequantRows, axis: Axis) -> FactorView<'_> {
+    // Col axis ⇒ stored as B′ᵀ (h×m) which is exactly what `u @ B′ᵀ`
+    // contracts against; Row ⇒ stored as B′ (m×h).
+    FactorView { src, transposed: axis == Axis::Row }
+}
+
+impl QuantizedSite {
+    /// Borrowed factor-form view of this site (no dequantization).
+    pub fn factors(&self) -> SiteFactors<'_> {
+        let mut pairs = Vec::with_capacity(2);
+        if let (Some(bh), Some(ah)) = (&self.bh, &self.ah) {
+            pairs.push(FactorPair {
+                a: a_view(ah, self.axis.a_axis),
+                b: b_view(bh, self.axis.b_axis),
+            });
+        }
+        if let (Some(bl), Some(al)) = (&self.bl, &self.al) {
+            pairs.push(FactorPair {
+                a: a_view(low_src(al), self.axis.a_axis),
+                b: b_view(low_src(bl), self.axis.b_axis),
+            });
+        }
+        SiteFactors { m: self.m, n: self.n, pairs }
+    }
+}
+
+fn low_src(q: &LowQuantized) -> &dyn DequantRows {
+    match q {
+        LowQuantized::Bin(b) => b,
+        LowQuantized::Rtn1(r) => r,
+    }
+}
+
+impl QuantizedLora {
+    /// Borrowed factor-form view of the whole adapter.
+    pub fn factors(&self) -> QFactors<'_> {
+        QFactors {
+            sites: self.sites.iter().map(|(s, q)| (s.clone(), q.factors())).collect(),
+        }
+    }
+}
+
+/// Factor-form view of an **uncompressed** FP adapter — the factor path
+/// serves FP16 and quantized tenants through one code path (dense
+/// matrices implement [`DequantRows`] trivially).
+pub fn fp_factors(adapter: &LoraAdapter) -> QFactors<'_> {
+    QFactors {
+        sites: adapter
+            .sites
+            .iter()
+            .map(|(site, (a, b))| {
+                let pair = FactorPair {
+                    a: FactorView { src: a, transposed: true }, // A is r×n
+                    b: FactorView { src: b, transposed: true }, // B is m×r
+                };
+                (site.clone(), SiteFactors { m: b.rows(), n: a.cols(), pairs: vec![pair] })
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loraquant::{quantize_site, HSelect, LoraQuantConfig, LowMode};
+    use crate::quant::QuantAxis;
+    use crate::tensor::{matmul, matmul_a_bt};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn factor_apply_matches_dense_delta_all_axes() {
+        let mut rng = Rng::new(81);
+        let (b, a) = rng.lora_pair(48, 40, 8, 0.7);
+        let x = rng.matrix(5, 40, 1.0);
+        for axis in QuantAxis::all() {
+            let cfg = LoraQuantConfig { axis, ste: None, group: 16, ..Default::default() };
+            let site = quantize_site(&b, &a, &cfg);
+            let delta = site.dequant_delta();
+            let oracle = matmul_a_bt(&x, &delta).scale(1.5);
+            let mut y = Matrix::zeros(5, 48);
+            site.factors().apply_delta_acc(x.data(), 5, 1.5, y.data_mut());
+            assert!(y.rel_err(&oracle) < 1e-5, "axis {axis}: {}", y.rel_err(&oracle));
+        }
+    }
+
+    #[test]
+    fn materialize_matches_dequant_delta() {
+        let mut rng = Rng::new(82);
+        let (b, a) = rng.lora_pair(32, 48, 8, 0.6);
+        for low_mode in [LowMode::Bin, LowMode::Rtn1, LowMode::Prune] {
+            let cfg = LoraQuantConfig {
+                low_mode,
+                hselect: HSelect::Ratio(0.6),
+                ste: None,
+                group: 16,
+                ..Default::default()
+            };
+            let site = quantize_site(&b, &a, &cfg);
+            let err = site.factors().materialize_delta().rel_err(&site.dequant_delta());
+            assert!(err < 1e-5, "{low_mode:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn fp_factors_apply_exact_lora_delta() {
+        let mut rng = Rng::new(83);
+        let (b, a) = rng.lora_pair(24, 32, 4, 0.8);
+        let mut adapter = LoraAdapter::default();
+        adapter.sites.insert("l0.wq".into(), (a.clone(), b.clone()));
+        let qf = fp_factors(&adapter);
+        let sf = qf.site("l0.wq").unwrap();
+        assert_eq!((sf.m, sf.n), (24, 32));
+        let x = rng.matrix(3, 32, 1.0);
+        let oracle = matmul_a_bt(&x, &matmul(&b, &a)).scale(2.0);
+        let mut y = Matrix::zeros(3, 24);
+        sf.apply_delta_acc(x.data(), 3, 2.0, y.data_mut());
+        assert!(y.rel_err(&oracle) < 1e-5);
+    }
+
+    #[test]
+    fn all_binary_and_pruned_edges() {
+        let mut rng = Rng::new(84);
+        let (b, a) = rng.lora_pair(32, 32, 8, 0.7);
+        // h == 0: only the low (binary) pair exists
+        let cfg = LoraQuantConfig {
+            hselect: HSelect::Static(0),
+            ste: None,
+            group: 16,
+            ..Default::default()
+        };
+        let site = quantize_site(&b, &a, &cfg);
+        assert_eq!(site.factors().pairs.len(), 1);
+        assert!(site.factors().materialize_delta().rel_err(&site.dequant_delta()) < 1e-5);
+        // prune with h == r: only the high pair exists
+        let cfg = LoraQuantConfig {
+            hselect: HSelect::Static(8),
+            low_mode: LowMode::Prune,
+            ste: None,
+            group: 16,
+            ..Default::default()
+        };
+        let site = quantize_site(&b, &a, &cfg);
+        assert_eq!(site.factors().pairs.len(), 1);
+        assert!(site.factors().materialize_delta().rel_err(&site.dequant_delta()) < 1e-5);
+    }
+}

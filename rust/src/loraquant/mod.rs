@@ -12,12 +12,17 @@
 //!    (§3.3, Alg. 2).
 //! 4. [`pipeline`] — quantize high sub-LoRA with k-bit RTN, low with 1-bit
 //!    sign binarization (§3.2); pack into a [`QuantizedLora`].
+//! 5. [`factors`] — factor-form serving views ([`QFactors`]): apply the
+//!    packed adapter on the activation path as two skinny GEMMs without
+//!    materializing `ΔW` (DESIGN.md §8).
 
+pub mod factors;
 pub mod hselect;
 pub mod pipeline;
 pub mod split;
 pub mod ste;
 
+pub use factors::{fp_factors, FactorPair, FactorView, QFactors, SiteFactors};
 pub use hselect::{baseline_indices, select_h, HSelect, SplitStrategy};
 pub use pipeline::{
     quantize_site, LoraQuantConfig, LowMode, LowQuantized, QuantizedLora, QuantizedSite,

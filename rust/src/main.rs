@@ -5,7 +5,8 @@
 //! loraquant quantize --model tiny-llama-s --task modadd --bits 2 --rho 0.9 --out q.bin
 //! loraquant eval     --model tiny-llama-s --task modadd [--quantized q.bin] [--n 100]
 //! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12 \
-//!                    [--workers 4] [--merge-workers 2] [--buckets 1,8] [--prefetch]
+//!                    [--workers 4] [--merge-workers 2] [--buckets 1,8] [--prefetch] \
+//!                    [--merge-strategy merged|factor|auto]
 //! loraquant info     --model tiny-llama-s
 //! ```
 //!
@@ -132,7 +133,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.buckets = args.usize_list_or("buckets", &[1, 8])?;
     cfg.cache_budget_bytes = cache_mb << 20;
     cfg.max_wait = Duration::from_millis(args.usize_or("max-wait-ms", 10)? as u64);
+    cfg.merge_strategy = args.str_or("merge-strategy", "merged").parse()?;
     let workers = cfg.workers;
+    let strategy = cfg.merge_strategy;
     let (coord, join) = Coordinator::start(cfg)?;
 
     // Register n_adapters quantized clones of the trained task adapters.
@@ -148,7 +151,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         ids.push(coord.register_adapter(StoredAdapter::Quantized(q), task)?);
     }
-    println!("registered {} quantized adapters across {workers} worker(s)", ids.len());
+    println!(
+        "registered {} quantized adapters across {workers} worker(s), strategy={strategy}",
+        ids.len()
+    );
 
     if args.has_flag("prefetch") {
         let t0 = Instant::now();

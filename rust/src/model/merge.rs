@@ -42,6 +42,13 @@ pub fn quant_deltas(q: &QuantizedLora) -> BTreeMap<String, Matrix> {
     q.sites.iter().map(|(site, qs)| (site.clone(), qs.dequant_delta())).collect()
 }
 
+/// The **unmerged** base weight list in `param_names` order — the
+/// substrate the factor-form execution path decodes over (adapters are
+/// applied on the activation path instead of being merged in).
+pub fn base_weight_list(base: &BaseWeights) -> anyhow::Result<Vec<Tensor>> {
+    merge_adapter(base, &BTreeMap::new())
+}
+
 /// Produce the merged flat weight list for one adapter, in `param_names`
 /// order, ready to feed the HLO executable. Non-LoRA tensors pass through.
 pub fn merge_adapter(

@@ -5,5 +5,5 @@
 pub mod merge;
 pub mod schema;
 
-pub use merge::{merge_adapter, merge_delta};
+pub use merge::{base_weight_list, merge_adapter, merge_delta};
 pub use schema::{BaseWeights, ModelConfig};

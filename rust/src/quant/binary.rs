@@ -1,8 +1,8 @@
 //! Sign binarization with L1-optimal group scales (paper §3.2, Eq. 8;
 //! Rastegari et al., 2016).
 
-use super::{pack_codes, unpack_codes, SCALE_BITS};
-use crate::tensor::Matrix;
+use super::{pack_codes, unpack_codes, unpack_codes_range, SCALE_BITS};
+use crate::tensor::{DequantRows, Matrix};
 
 /// A group-wise sign-binarized matrix (grouping along the last axis).
 #[derive(Debug, Clone)]
@@ -31,6 +31,35 @@ impl BinQuantized {
     /// In-memory packed size in bytes (sign bits + fp16 scales).
     pub fn packed_bytes(&self) -> usize {
         self.packed.len() + self.scale.len() * (SCALE_BITS as usize / 8)
+    }
+
+    /// Dequantize one stored row into `out` (`out.len() == cols`) without
+    /// touching any other row — the streaming-GEMM building block.
+    pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(i < self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        let bits = unpack_codes_range(&self.packed, 1, i * self.cols, self.cols);
+        let gpr = self.groups_per_row();
+        for g in 0..gpr {
+            let s = self.scale[i * gpr + g];
+            for j in g * self.group..((g + 1) * self.group).min(self.cols) {
+                out[j] = if bits[j] == 1 { s } else { -s };
+            }
+        }
+    }
+}
+
+impl DequantRows for BinQuantized {
+    fn src_rows(&self) -> usize {
+        self.rows
+    }
+
+    fn src_cols(&self) -> usize {
+        self.cols
+    }
+
+    fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        BinQuantized::dequant_row_into(self, i, out)
     }
 }
 
@@ -120,6 +149,19 @@ mod tests {
         let q = bin_quant(&w, 64);
         assert_eq!(q.groups_per_row(), 2);
         assert_eq!(bin_dequant(&q).shape(), (2, 70));
+    }
+
+    #[test]
+    fn row_dequant_matches_full_dequant() {
+        let mut rng = Rng::new(35);
+        let w = rng.matrix(4, 70, 1.0); // ragged: rows start mid-byte
+        let q = bin_quant(&w, 32);
+        let full = bin_dequant(&q);
+        let mut row = vec![0.0f32; q.cols];
+        for i in 0..q.rows {
+            q.dequant_row_into(i, &mut row);
+            assert_eq!(row.as_slice(), full.row(i), "row {i}");
+        }
     }
 
     #[test]

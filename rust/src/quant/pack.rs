@@ -34,9 +34,27 @@ pub fn unpack_codes(packed: &[u8], bits: u32, count: usize) -> Vec<u8> {
         4 => return unpack_parallel::<2>(packed, count, |b, j| (b >> (4 * j)) & 15),
         _ => {}
     }
+    unpack_scalar(packed, bits, 0, count)
+}
+
+/// Unpack `count` codes starting at code index `start` of the stream —
+/// the row-streaming entry point: callers address one packed row as
+/// `start = row * cols, count = cols` without unpacking what precedes it.
+pub fn unpack_codes_range(packed: &[u8], bits: u32, start: usize, count: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let first_bit = start * bits as usize;
+    if first_bit % 8 == 0 {
+        // byte-aligned: reuse the fast paths on the tail slice
+        return unpack_codes(&packed[first_bit / 8..], bits, count);
+    }
+    unpack_scalar(packed, bits, first_bit, count)
+}
+
+/// The generic bit-extraction loop, starting at an arbitrary bit offset.
+fn unpack_scalar(packed: &[u8], bits: u32, first_bit: usize, count: usize) -> Vec<u8> {
     let mask = if bits == 8 { 0xFF } else { (1u16 << bits) - 1 } as u16;
     let mut out = Vec::with_capacity(count);
-    let mut bitpos = 0usize;
+    let mut bitpos = first_bit;
     for _ in 0..count {
         let byte = bitpos / 8;
         let off = bitpos % 8;
@@ -101,6 +119,24 @@ mod tests {
         // bit j at position j%8, bit=1 <=> code 1
         let packed = pack_codes(&[1, 0, 0, 0, 0, 0, 0, 1], 1);
         assert_eq!(packed, vec![0b1000_0001]);
+    }
+
+    #[test]
+    fn range_unpack_matches_full_unpack() {
+        let mut rng = Rng::new(101);
+        for bits in 1..=8u32 {
+            let codes: Vec<u8> =
+                (0..97).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack_codes(&codes, bits);
+            for (start, count) in [(0usize, 97usize), (1, 10), (7, 13), (32, 65), (96, 1), (50, 0)]
+            {
+                assert_eq!(
+                    unpack_codes_range(&packed, bits, start, count),
+                    codes[start..start + count].to_vec(),
+                    "bits={bits} start={start} count={count}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Round-to-nearest group-wise quantization (paper §3.2, Eqs. 6–7).
 
-use super::{pack_codes, unpack_codes};
-use crate::tensor::Matrix;
+use super::{pack_codes, unpack_codes, unpack_codes_range};
+use crate::tensor::{DequantRows, Matrix};
 
 /// A group-wise RTN-quantized matrix (grouping along the last axis).
 #[derive(Debug, Clone)]
@@ -36,6 +36,36 @@ impl RtnQuantized {
     /// In-memory packed size in bytes (codes + fp16 scales + packed zeros).
     pub fn packed_bytes(&self) -> usize {
         self.packed.len() + self.scale.len() * 2 + (self.zero.len() * self.bits as usize).div_ceil(8)
+    }
+
+    /// Dequantize one stored row into `out` (`out.len() == cols`) without
+    /// touching any other row — the streaming-GEMM building block.
+    pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(i < self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        let codes = unpack_codes_range(&self.packed, self.bits, i * self.cols, self.cols);
+        let gpr = self.groups_per_row();
+        for g in 0..gpr {
+            let s = self.scale[i * gpr + g];
+            let z = self.zero[i * gpr + g];
+            for j in g * self.group..((g + 1) * self.group).min(self.cols) {
+                out[j] = s * (codes[j] as f32 - z);
+            }
+        }
+    }
+}
+
+impl DequantRows for RtnQuantized {
+    fn src_rows(&self) -> usize {
+        self.rows
+    }
+
+    fn src_cols(&self) -> usize {
+        self.cols
+    }
+
+    fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        RtnQuantized::dequant_row_into(self, i, out)
     }
 }
 
@@ -169,6 +199,21 @@ mod tests {
         assert_eq!(q.groups_per_row(), 2);
         let wd = rtn_dequant(&q);
         assert!(wd.rel_err(&w) < 0.1);
+    }
+
+    #[test]
+    fn row_dequant_matches_full_dequant() {
+        let mut rng = Rng::new(25);
+        let w = rng.matrix(5, 100, 1.0); // ragged final group at 3-bit rows
+        for bits in [1u32, 2, 3, 4, 8] {
+            let q = rtn_quant(&w, bits, 64);
+            let full = rtn_dequant(&q);
+            let mut row = vec![0.0f32; q.cols];
+            for i in 0..q.rows {
+                q.dequant_row_into(i, &mut row);
+                assert_eq!(row.as_slice(), full.row(i), "bits={bits} row {i}");
+            }
+        }
     }
 
     #[test]

@@ -17,6 +17,11 @@
 //! coordinator's off-hot-path merge pipeline is built around: host-side
 //! dequant+merge runs on merge workers, and only the upload happens on
 //! the executor thread.
+//!
+//! The reference engine additionally exposes `forward_with_adapters` —
+//! the factor-form execution path (DESIGN.md §8): per-batch-row adapter
+//! deltas applied on the activation path over unmerged base weights. The
+//! PJRT backend stubs it with an error (AOT programs bake their arity).
 
 #[cfg(feature = "pjrt")]
 mod pjrt;

@@ -153,6 +153,23 @@ impl Engine {
         self.execute(name, &tok, weights)
     }
 
+    /// Factor-form execution is a reference-engine capability: the AOT
+    /// HLO programs bake the weight arity in at lowering time and have no
+    /// activation-path adapter inputs. API parity only.
+    pub fn forward_with_adapters(
+        &self,
+        _name: &str,
+        _tokens: &[i32],
+        _dims: &[usize],
+        _weights: &DeviceWeights,
+        _adapters: &[Option<&crate::loraquant::QFactors<'_>>],
+    ) -> anyhow::Result<Vec<f32>> {
+        bail!(
+            "factor-form adapter application is not supported by the PJRT backend; \
+             use --merge-strategy merged (or build without --features pjrt)"
+        )
+    }
+
     /// Raw client access (tests / benches).
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client

@@ -10,6 +10,7 @@
 //! error here.
 
 use crate::adapter::fmt::{Tensor, TensorData};
+use crate::loraquant::QFactors;
 use crate::model::ModelConfig;
 use crate::tensor::dot;
 use anyhow::{bail, Context};
@@ -119,6 +120,21 @@ impl Engine {
         tokens: &TokenBuffer,
         weights: &DeviceWeights,
     ) -> anyhow::Result<Vec<f32>> {
+        self.execute_with_adapters(name, tokens, weights, &[])
+    }
+
+    /// Execute a forward over **unmerged base weights**, applying each
+    /// batch element's adapter delta in factor form on the activation
+    /// path (`y += s · (x @ A′ᵀ) @ B′ᵀ` per LoRA site). `adapters` is
+    /// per-batch-row (empty = no adapters anywhere), so one program
+    /// serves a heterogeneous multi-adapter batch.
+    pub fn execute_with_adapters(
+        &self,
+        name: &str,
+        tokens: &TokenBuffer,
+        weights: &DeviceWeights,
+        adapters: &[Option<&QFactors<'_>>],
+    ) -> anyhow::Result<Vec<f32>> {
         let prog = self.programs.get(name).with_context(|| format!("program {name} not loaded"))?;
         if 1 + weights.tensors.len() != prog.arity {
             bail!(
@@ -130,7 +146,24 @@ impl Engine {
         if tokens.dims.len() != 2 {
             bail!("token batch must be 2-D, got dims {:?}", tokens.dims);
         }
-        ref_forward(&prog.cfg, &weights.tensors, &tokens.tokens, tokens.dims[0], tokens.dims[1])
+        if !adapters.is_empty() {
+            if adapters.len() != tokens.dims[0] {
+                bail!(
+                    "adapter list has {} entries for a batch of {}",
+                    adapters.len(),
+                    tokens.dims[0]
+                );
+            }
+            validate_adapter_shapes(&prog.cfg, adapters)?;
+        }
+        ref_forward(
+            &prog.cfg,
+            &weights.tensors,
+            &tokens.tokens,
+            tokens.dims[0],
+            tokens.dims[1],
+            adapters,
+        )
     }
 
     /// Convenience: host-side tokens → logits.
@@ -143,6 +176,70 @@ impl Engine {
     ) -> anyhow::Result<Vec<f32>> {
         let tok = self.upload_tokens(tokens, dims)?;
         self.execute(name, &tok, weights)
+    }
+
+    /// Convenience: host-side tokens → logits with per-request factor-form
+    /// adapters over unmerged base weights.
+    pub fn forward_with_adapters(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        dims: &[usize],
+        weights: &DeviceWeights,
+        adapters: &[Option<&QFactors<'_>>],
+    ) -> anyhow::Result<Vec<f32>> {
+        let tok = self.upload_tokens(tokens, dims)?;
+        self.execute_with_adapters(name, &tok, weights, adapters)
+    }
+}
+
+/// Every adapter site must name a known LoRA site with the model's
+/// (m_out, n_in) — checked once up front so the apply loop can't panic
+/// mid-forward on a shape mismatch.
+fn validate_adapter_shapes(
+    cfg: &ModelConfig,
+    adapters: &[Option<&QFactors<'_>>],
+) -> anyhow::Result<()> {
+    for qf in adapters.iter().flatten() {
+        for (site, sf) in &qf.sites {
+            let short = site.rsplit_once('.').map_or(site.as_str(), |(_, s)| s);
+            let (n_in, m_out) = cfg
+                .site_shape(short)
+                .with_context(|| format!("adapter targets unknown site {site}"))?;
+            if (sf.m, sf.n) != (m_out, n_in) {
+                bail!(
+                    "adapter site {site}: ΔW is {}x{}, model expects {}x{}",
+                    sf.m,
+                    sf.n,
+                    m_out,
+                    n_in
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Accumulate every present adapter's factor-form delta for `site` into
+/// `y`: rows `b·t .. (b+1)·t` of `x` (rows×n) and `y` (rows×m) belong to
+/// batch element `b`; `(n, m)` is the site's (input, output) width.
+fn apply_adapter_site(
+    adapters: &[Option<&QFactors<'_>>],
+    site: &str,
+    x: &[f32],
+    t: usize,
+    (n, m): (usize, usize),
+    scaling: f32,
+    y: &mut [f32],
+) {
+    for (b, qf) in adapters.iter().enumerate() {
+        let Some(sf) = qf.and_then(|q| q.site(site)) else { continue };
+        sf.apply_delta_acc(
+            &x[b * t * n..(b + 1) * t * n],
+            t,
+            scaling,
+            &mut y[b * t * m..(b + 1) * t * m],
+        );
     }
 }
 
@@ -215,13 +312,15 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// The reference forward (python/compile/model.py `_forward_impl`).
+/// The reference forward (python/compile/model.py `_forward_impl`), with
+/// optional per-batch-row factor-form adapter deltas on every LoRA site.
 fn ref_forward(
     cfg: &ModelConfig,
     weights: &[Tensor],
     tokens: &[i32],
     bsz: usize,
     t: usize,
+    adapters: &[Option<&QFactors<'_>>],
 ) -> anyhow::Result<Vec<f32>> {
     let p = Params::new(cfg, weights)?;
     let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
@@ -257,6 +356,7 @@ fn ref_forward(
         }
     }
 
+    let lora_s = cfg.lora_scaling();
     let att_scale = 1.0 / (hd as f32).sqrt();
     let mut hx = vec![0.0f32; rows * d];
     let mut q = vec![0.0f32; rows * d];
@@ -273,8 +373,11 @@ fn ref_forward(
         let (g1, b1) = (p.get(&format!("l{l}.ln1.g"))?, p.get(&format!("l{l}.ln1.b"))?);
         layernorm(&x, rows, d, g1, b1, &mut hx);
         matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wq"))?, d, &mut q);
+        apply_adapter_site(adapters, &format!("l{l}.wq"), &hx, t, (d, d), lora_s, &mut q);
         matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wk"))?, d, &mut k);
+        apply_adapter_site(adapters, &format!("l{l}.wk"), &hx, t, (d, d), lora_s, &mut k);
         matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wv"))?, d, &mut vv);
+        apply_adapter_site(adapters, &format!("l{l}.wv"), &hx, t, (d, d), lora_s, &mut vv);
         att_out.fill(0.0);
         for b in 0..bsz {
             for h in 0..nh {
@@ -310,6 +413,7 @@ fn ref_forward(
             }
         }
         matmul_flat(&att_out, rows, d, p.get(&format!("l{l}.wo"))?, d, &mut proj);
+        apply_adapter_site(adapters, &format!("l{l}.wo"), &att_out, t, (d, d), lora_s, &mut proj);
         for (xi, pi) in x.iter_mut().zip(&proj) {
             *xi += pi;
         }
@@ -318,6 +422,7 @@ fn ref_forward(
         let (g2, b2) = (p.get(&format!("l{l}.ln2.g"))?, p.get(&format!("l{l}.ln2.b"))?);
         layernorm(&x, rows, d, g2, b2, &mut hx);
         matmul_flat(&hx, rows, d, p.get(&format!("l{l}.w1"))?, f, &mut h1);
+        apply_adapter_site(adapters, &format!("l{l}.w1"), &hx, t, (d, f), lora_s, &mut h1);
         if cfg.act_silu {
             for z in h1.iter_mut() {
                 *z = silu(*z);
@@ -328,6 +433,7 @@ fn ref_forward(
             }
         }
         matmul_flat(&h1, rows, f, p.get(&format!("l{l}.w2"))?, d, &mut h2);
+        apply_adapter_site(adapters, &format!("l{l}.w2"), &h1, t, (f, d), lora_s, &mut h2);
         for (xi, hi) in x.iter_mut().zip(&h2) {
             *xi += hi;
         }
@@ -343,7 +449,7 @@ fn ref_forward(
 mod tests {
     use super::*;
     use crate::model::{merge_adapter, BaseWeights};
-    use crate::testutil::synth::{synth_model_config, write_synth_model};
+    use crate::testutil::synth::{synth_model_config, synth_quantized_adapter, write_synth_model};
 
     fn temp_artifacts(tag: &str) -> PathBuf {
         let dir =
@@ -388,6 +494,88 @@ mod tests {
         t1[1] = 5;
         let l2 = engine.forward("synth/b1", &t1, &[1, cfg.seq_len], &w).unwrap();
         assert_ne!(l1, l2, "different tokens must change logits");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt();
+        let den: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        num / den.max(1e-12)
+    }
+
+    #[test]
+    fn factor_form_matches_merged_forward() {
+        let dir = temp_artifacts("factor");
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[2], 19).unwrap();
+        let base = BaseWeights::load(dir.join("synth")).unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        engine.load_model_fwd("synth", 2, base.cfg.param_names().len()).unwrap();
+        let stored = synth_quantized_adapter(&cfg, 33);
+        let w_merged = engine
+            .upload_weights(&merge_adapter(&base, &stored.deltas()).unwrap())
+            .unwrap();
+        let w_base = engine
+            .upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap())
+            .unwrap();
+        let t = cfg.seq_len;
+        let mut tokens = vec![1i32; 2 * t];
+        tokens[t] = 7; // distinct second row
+        let l_merged = engine.forward("synth/b2", &tokens, &[2, t], &w_merged).unwrap();
+        let qf = stored.factors();
+        let l_factor = engine
+            .forward_with_adapters("synth/b2", &tokens, &[2, t], &w_base, &[Some(&qf), Some(&qf)])
+            .unwrap();
+        // identical math up to f32 re-association: merged folds ΔW into W,
+        // factor-form adds s·(x@A′ᵀ)@B′ᵀ on the activations
+        assert!(rel_err(&l_factor, &l_merged) < 1e-4, "rel {}", rel_err(&l_factor, &l_merged));
+
+        // heterogeneous batch: row 0 unadapted, row 1 adapted — per-row
+        // outputs must be bitwise identical to the homogeneous runs
+        let l_base = engine.forward("synth/b2", &tokens, &[2, t], &w_base).unwrap();
+        let l_mixed = engine
+            .forward_with_adapters("synth/b2", &tokens, &[2, t], &w_base, &[None, Some(&qf)])
+            .unwrap();
+        let row = t * cfg.vocab;
+        assert_eq!(l_mixed[..row], l_base[..row], "unadapted row must be pure base");
+        assert_eq!(l_mixed[row..], l_factor[row..], "adapted row must match factor path");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn factor_form_rejects_bad_adapters() {
+        let dir = temp_artifacts("factorbad");
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[2], 23).unwrap();
+        let base = BaseWeights::load(dir.join("synth")).unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        engine.load_model_fwd("synth", 2, base.cfg.param_names().len()).unwrap();
+        let w_base = engine
+            .upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap())
+            .unwrap();
+        let stored = synth_quantized_adapter(&cfg, 5);
+        let qf = stored.factors();
+        let t = cfg.seq_len;
+        let tokens = vec![1i32; 2 * t];
+        // arity mismatch: one adapter entry for a batch of two
+        let err = engine
+            .forward_with_adapters("synth/b2", &tokens, &[2, t], &w_base, &[Some(&qf)])
+            .unwrap_err();
+        assert!(err.to_string().contains("adapter list"));
+        // shape mismatch: wrong model for this adapter
+        let bigger = ModelConfig { d_model: cfg.d_model * 2, ..cfg };
+        let wrong = synth_quantized_adapter(&bigger, 6);
+        let wrong_qf = wrong.factors();
+        let err = engine
+            .forward_with_adapters(
+                "synth/b2",
+                &tokens,
+                &[2, t],
+                &w_base,
+                &[Some(&wrong_qf), None],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("model expects"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -6,7 +6,10 @@
 
 mod ops;
 
-pub use ops::{matmul, matmul_at_b, matmul_a_bt, outer};
+pub use ops::{
+    matmul, matmul_a_bt, matmul_at_b, matmul_qdequant, matmul_qdequant_acc, matmul_qdequant_bt,
+    matmul_qdequant_bt_acc, outer, DequantRows,
+};
 
 /// Row-major dense f32 matrix.
 #[derive(Clone, PartialEq)]

@@ -1,6 +1,43 @@
 //! Matrix products. Row-major, cache-blocked enough for LoRA-sized work.
+//!
+//! Two families:
+//!
+//! * dense × dense ([`matmul`], [`matmul_at_b`], [`matmul_a_bt`], [`outer`]);
+//! * dense × **quantized** ([`matmul_qdequant_acc`],
+//!   [`matmul_qdequant_bt_acc`]) — skinny GEMMs whose right operand stays
+//!   packed: each stored row is unpacked + scaled once into an O(cols)
+//!   scratch buffer and streamed through the product, so the dense matrix
+//!   is never materialized. These are the factor-form serving kernels
+//!   (DESIGN.md §8); anything implementing [`DequantRows`] can be the
+//!   right operand.
 
 use super::{dot, Matrix};
+
+/// A matrix whose rows can be produced densely one at a time — the
+/// contract between the packed quantized formats in `quant/` (and plain
+/// [`Matrix`]) and the streaming GEMM kernels below.
+pub trait DequantRows {
+    /// Stored row count.
+    fn src_rows(&self) -> usize;
+    /// Stored column count.
+    fn src_cols(&self) -> usize;
+    /// Dequantize stored row `i` into `out` (`out.len() == src_cols()`).
+    fn dequant_row_into(&self, i: usize, out: &mut [f32]);
+}
+
+impl DequantRows for Matrix {
+    fn src_rows(&self) -> usize {
+        self.rows()
+    }
+
+    fn src_cols(&self) -> usize {
+        self.cols()
+    }
+
+    fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row(i));
+    }
+}
 
 /// `C = A @ B` (A: m×k, B: k×n).
 ///
@@ -11,12 +48,10 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let n = b.cols();
     let mut c = Matrix::zeros(m, n);
+    let cdata = c.data_mut();
     for i in 0..m {
         let arow = a.row(i);
-        // split borrows: write through raw row pointer of c
-        let crow = unsafe {
-            std::slice::from_raw_parts_mut(c.data_mut().as_mut_ptr().add(i * n), n)
-        };
+        let crow = &mut cdata[i * n..(i + 1) * n];
         for p in 0..k {
             let av = arow[p];
             if av == 0.0 {
@@ -37,6 +72,7 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
     let (k, m) = a.shape();
     let n = b.cols();
     let mut c = Matrix::zeros(m, n);
+    let cdata = c.data_mut();
     for p in 0..k {
         let arow = a.row(p);
         let brow = b.row(p);
@@ -45,9 +81,7 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
             if av == 0.0 {
                 continue;
             }
-            let crow = unsafe {
-                std::slice::from_raw_parts_mut(c.data_mut().as_mut_ptr().add(i * n), n)
-            };
+            let crow = &mut cdata[i * n..(i + 1) * n];
             for j in 0..n {
                 crow[j] += av * brow[j];
             }
@@ -82,6 +116,84 @@ pub fn outer(u: &[f32], v: &[f32]) -> Matrix {
         }
     }
     c
+}
+
+/// `out += alpha · X @ deq(Q)` on flat row-major buffers
+/// (X: rows×k, Q stored k×n, out: rows×n).
+///
+/// p-i-j loop order so each packed row of Q is dequantized exactly once
+/// per call into an O(n) scratch buffer, then streamed against column p
+/// of X — the full dense Q never exists.
+pub fn matmul_qdequant_acc(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    q: &dyn DequantRows,
+    alpha: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(q.src_rows(), k, "qdequant: Q has {} rows, X has {} cols", q.src_rows(), k);
+    let n = q.src_cols();
+    assert_eq!(x.len(), rows * k, "qdequant: X len {} != {}x{}", x.len(), rows, k);
+    assert_eq!(out.len(), rows * n, "qdequant: out len {} != {}x{}", out.len(), rows, n);
+    let mut qrow = vec![0.0f32; n];
+    for p in 0..k {
+        q.dequant_row_into(p, &mut qrow);
+        for i in 0..rows {
+            let av = alpha * x[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * qrow[j];
+            }
+        }
+    }
+}
+
+/// `out += alpha · X @ deq(Q)ᵀ` on flat row-major buffers
+/// (X: rows×k, Q stored n×k, out: rows×n).
+///
+/// Each packed row of Q is dequantized once, then dotted with every row
+/// of X (both contiguous), writing one output column.
+pub fn matmul_qdequant_bt_acc(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    q: &dyn DequantRows,
+    alpha: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(q.src_cols(), k, "qdequant_bt: Q has {} cols, X has {} cols", q.src_cols(), k);
+    let n = q.src_rows();
+    assert_eq!(x.len(), rows * k, "qdequant_bt: X len {} != {}x{}", x.len(), rows, k);
+    assert_eq!(out.len(), rows * n, "qdequant_bt: out len {} != {}x{}", out.len(), rows, n);
+    let mut qrow = vec![0.0f32; k];
+    for j in 0..n {
+        q.dequant_row_into(j, &mut qrow);
+        for i in 0..rows {
+            out[i * n + j] += alpha * dot(&x[i * k..(i + 1) * k], &qrow);
+        }
+    }
+}
+
+/// Matrix-shaped convenience over [`matmul_qdequant_acc`]:
+/// `X @ deq(Q)` (X: m×k, Q stored k×n).
+pub fn matmul_qdequant(x: &Matrix, q: &dyn DequantRows) -> Matrix {
+    let mut out = Matrix::zeros(x.rows(), q.src_cols());
+    let (rows, k) = x.shape();
+    matmul_qdequant_acc(x.data(), rows, k, q, 1.0, out.data_mut());
+    out
+}
+
+/// Matrix-shaped convenience over [`matmul_qdequant_bt_acc`]:
+/// `X @ deq(Q)ᵀ` (X: m×k, Q stored n×k).
+pub fn matmul_qdequant_bt(x: &Matrix, q: &dyn DequantRows) -> Matrix {
+    let mut out = Matrix::zeros(x.rows(), q.src_rows());
+    let (rows, k) = x.shape();
+    matmul_qdequant_bt_acc(x.data(), rows, k, q, 1.0, out.data_mut());
+    out
 }
 
 #[cfg(test)]
@@ -143,5 +255,39 @@ mod tests {
         let c = outer(&u, &v);
         assert_eq!(c.at(1, 2), 10.0);
         assert_eq!(c.shape(), (2, 3));
+    }
+
+    #[test]
+    fn qdequant_with_dense_rows_matches_matmul() {
+        // Matrix implements DequantRows, so the streaming kernel must
+        // reproduce the dense product exactly.
+        let x = rand_mat(5, 9, 7);
+        let q = rand_mat(9, 6, 8);
+        let c = matmul_qdequant(&x, &q);
+        assert!(c.rel_err(&matmul(&x, &q)) < 1e-6);
+    }
+
+    #[test]
+    fn qdequant_bt_with_dense_rows_matches_matmul() {
+        let x = rand_mat(4, 7, 9);
+        let q = rand_mat(5, 7, 10);
+        let c = matmul_qdequant_bt(&x, &q);
+        assert!(c.rel_err(&matmul(&x, &q.transpose())) < 1e-6);
+    }
+
+    #[test]
+    fn qdequant_acc_accumulates_with_alpha() {
+        let x = rand_mat(3, 4, 11);
+        let q = rand_mat(4, 5, 12);
+        let mut out = vec![1.0f32; 3 * 5];
+        matmul_qdequant_acc(x.data(), 3, 4, &q, 2.0, &mut out);
+        let expect = matmul(&x, &q);
+        for i in 0..3 {
+            for j in 0..5 {
+                let got = out[i * 5 + j];
+                let want = 1.0 + 2.0 * expect.at(i, j);
+                assert!((got - want).abs() < 1e-5, "({i},{j}): {got} vs {want}");
+            }
+        }
     }
 }

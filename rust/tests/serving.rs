@@ -148,13 +148,14 @@ fn quantized_and_fp16_agree_often() {
 #[cfg(not(feature = "pjrt"))]
 mod pool_tests {
     use super::*;
-    use loraquant::coordinator::MergeHook;
+    use loraquant::coordinator::{MergeHook, MergeStrategy};
     use loraquant::model::ModelConfig;
     use loraquant::testutil::{synth_model_config, synth_quantized_adapter, write_synth_model};
     use std::collections::HashMap;
     use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::mpsc;
-    use std::sync::Mutex;
+    use std::sync::{Arc, Mutex};
 
     const SYNTH: &str = "synth";
 
@@ -176,6 +177,169 @@ mod pool_tests {
 
     fn req(adapter: u32) -> GenRequest {
         GenRequest { adapter, prompt: vec![1, 5, 4, 7, 3], max_new: 2 }
+    }
+
+    /// Acceptance: under `--merge-strategy factor` a mixed-adapter batch
+    /// completes with **zero merge-queue entries** — no merge job ever
+    /// starts, the merged-weight cache never counts a lookup, and the
+    /// requests (4 tenants) decode together in fewer heterogeneous
+    /// batches than requests.
+    #[test]
+    fn factor_strategy_serves_mixed_batch_with_zero_merge_queue_entries() {
+        let (dir, mcfg) = synth_dir("factor");
+        let merges = Arc::new(AtomicUsize::new(0));
+        let counted = Arc::clone(&merges);
+        let mut cfg = pool_config(&dir, 1).with_merge_strategy(MergeStrategy::Factor);
+        // generous deadline: the batch must release on bucket-full (4),
+        // proving the heterogeneous requests share one forward
+        cfg.max_wait = Duration::from_millis(500);
+        cfg.merge_hook = Some(MergeHook::new(move |_| {
+            counted.fetch_add(1, Ordering::SeqCst);
+        }));
+        let (coord, join) = Coordinator::start(cfg).unwrap();
+        let mut ids = Vec::new();
+        for s in 0..4u64 {
+            ids.push(
+                coord
+                    .register_adapter(synth_quantized_adapter(&mcfg, 200 + s), format!("t{s}"))
+                    .unwrap(),
+            );
+        }
+        let rxs: Vec<_> = ids.iter().map(|&id| coord.generate_async(req(id))).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert!(resp.tokens.len() <= 2, "budget respected");
+        }
+        let (m, cache, _) = coord.metrics().unwrap();
+        assert_eq!(m.requests, 4);
+        assert_eq!(merges.load(Ordering::SeqCst), 0, "factor path must never merge");
+        assert_eq!((cache.hits, cache.misses), (0, 0), "merged-weight cache untouched");
+        assert_eq!(m.factor_batches, m.batches, "every batch decoded factor-form");
+        assert!(
+            m.batches < m.requests,
+            "4 tenants must share heterogeneous batches ({} batches)",
+            m.batches
+        );
+        // prefetch is a no-op success in factor mode (nothing to warm)...
+        coord.prefetch(ids[0]).recv().unwrap().unwrap();
+        // ...but still validates the adapter id
+        let err = coord.prefetch(999).recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("unknown adapter"));
+        assert_eq!(merges.load(Ordering::SeqCst), 0, "prefetch must not merge either");
+        coord.shutdown();
+        join.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The factor path and the merged path compute the same function up
+    /// to f32 re-association (ΔW folded into W vs applied on the
+    /// activations), so greedy decodes must agree token-for-token on
+    /// essentially every prompt; one divergence is tolerated in case a
+    /// prompt hits an argmax near-tie inside that rounding margin.
+    #[test]
+    fn factor_and_merged_strategies_agree() {
+        let (dir, mcfg) = synth_dir("factoreq");
+        let prompts: Vec<Vec<i32>> =
+            (0..6).map(|i| vec![1, 5 + i, 4, 7, 3]).collect();
+        let mut outputs: Vec<Vec<Vec<i32>>> = Vec::new();
+        for strategy in [MergeStrategy::Merged, MergeStrategy::Factor] {
+            let cfg = pool_config(&dir, 1).with_merge_strategy(strategy);
+            let (coord, join) = Coordinator::start(cfg).unwrap();
+            let id = coord.register_adapter(synth_quantized_adapter(&mcfg, 77), "t").unwrap();
+            let mut outs = Vec::new();
+            for p in &prompts {
+                let resp = coord
+                    .generate(GenRequest { adapter: id, prompt: p.clone(), max_new: 4 })
+                    .unwrap();
+                outs.push(resp.tokens);
+            }
+            outputs.push(outs);
+            coord.shutdown();
+            join.join().unwrap();
+        }
+        let agree = outputs[0].iter().zip(&outputs[1]).filter(|(a, b)| a == b).count();
+        assert!(
+            agree + 1 >= prompts.len(),
+            "merged vs factor decode divergence: {agree}/{} prompts agree ({:?} vs {:?})",
+            prompts.len(),
+            outputs[0],
+            outputs[1]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Auto: a cold adapter is served factor-form immediately — its first
+    /// response arrives while the background merge is still gated — and
+    /// once the merge lands, later batches take the merged path.
+    #[test]
+    fn auto_strategy_removes_cold_merge_cliff() {
+        let (dir, mcfg) = synth_dir("auto");
+        let (entered_tx, entered_rx) = mpsc::channel::<()>();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Mutex::new(gate_rx);
+        let merges = Arc::new(AtomicUsize::new(0));
+        let counted = Arc::clone(&merges);
+        let mut cfg = pool_config(&dir, 1).with_merge_strategy(MergeStrategy::Auto);
+        cfg.merge_hook = Some(MergeHook::new(move |_| {
+            counted.fetch_add(1, Ordering::SeqCst);
+            let _ = entered_tx.send(());
+            let _ = gate_rx.lock().unwrap().recv_timeout(Duration::from_secs(10));
+        }));
+        let (coord, join) = Coordinator::start(cfg).unwrap();
+        let id = coord.register_adapter(synth_quantized_adapter(&mcfg, 91), "t").unwrap();
+        let rx_cold = coord.generate_async(req(id));
+        // wait until the background merge is definitely gated...
+        entered_rx.recv_timeout(Duration::from_secs(5)).expect("background merge starts");
+        // ...then the cold request must still be answered (factor-form)
+        let resp = rx_cold
+            .recv_timeout(Duration::from_secs(5))
+            .expect("cold adapter must be served factor-form, not parked behind its merge")
+            .unwrap();
+        assert!(resp.tokens.len() <= 2);
+        assert_eq!(merges.load(Ordering::SeqCst), 1, "background merge was kicked off");
+        gate_tx.send(()).unwrap();
+        // wait for the merged weights to land in the cache
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let snaps = coord.metrics_per_worker().unwrap();
+            if snaps.iter().any(|s| s.cached_adapters == 1) {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "merge never landed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        coord.generate(req(id)).unwrap();
+        let (m, cache, _) = coord.metrics().unwrap();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.factor_batches, 1, "only the cold batch ran factor-form");
+        assert!(cache.hits >= 1, "warm batch must hit the merged cache");
+        assert_eq!(cache.hits + cache.misses, m.batches);
+        assert_eq!(merges.load(Ordering::SeqCst), 1, "exactly one merge per adapter");
+        coord.shutdown();
+        join.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// FP16 adapters ride the factor path too (dense factors, same code).
+    #[test]
+    fn factor_strategy_serves_fp16_adapters() {
+        let (dir, mcfg) = synth_dir("factorfp");
+        let cfg = pool_config(&dir, 1).with_merge_strategy(MergeStrategy::Factor);
+        let (coord, join) = Coordinator::start(cfg).unwrap();
+        // a dense FP adapter covering one site, built from the synth shapes
+        let mut rng = loraquant::testutil::Rng::new(7);
+        let mut fp = loraquant::adapter::LoraAdapter::default();
+        let (n_in, m_out) = mcfg.site_shape("wq").unwrap();
+        let (b, a) = rng.lora_pair(m_out, n_in, mcfg.lora_rank, 0.7);
+        fp.sites.insert("l0.wq".into(), (a, b));
+        let id = coord.register_adapter(StoredAdapter::Fp16(fp), "fp").unwrap();
+        let resp = coord.generate(req(id)).unwrap();
+        assert!(resp.tokens.len() <= 2);
+        let (m, _, _) = coord.metrics().unwrap();
+        assert_eq!((m.requests, m.factor_batches), (1, 1));
+        coord.shutdown();
+        join.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
