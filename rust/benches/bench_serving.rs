@@ -1,223 +1,176 @@
 //! Serving benchmark (P1 in DESIGN.md §5): end-to-end multi-LoRA serving
-//! through the coordinator.
+//! through the coordinator. Every scenario is a thin driver over a
+//! [`ScenarioSpec`] replayed by `scenario::run_scenario` — the exact code
+//! path the deterministic test suite exercises (DESIGN.md §9).
 //!
 //! Scenarios:
-//! 1. open-loop Zipf workload — latency percentiles, batching efficacy,
-//!    cache behaviour under eviction pressure;
-//! 2. **multi-worker scaling** — a saturating mixed-adapter workload
-//!    replayed at pool sizes 1/2/4; reports req/s and speedup vs one
-//!    worker (the off-hot-path merge pipeline + per-worker engines should
-//!    give ≥ 1.5× at 4 workers);
-//! 3. cold vs prefetched first-burst latency;
+//! 1. open-loop Zipf workload under **virtual time** — latency
+//!    percentiles, batching efficacy, cache behaviour under eviction
+//!    pressure, with seconds of simulated trace replayed in milliseconds;
+//! 2. **multi-worker scaling** (real time) — a saturating mixed-adapter
+//!    workload replayed at pool sizes 1/2/4; reports req/s and speedup
+//!    vs one worker;
+//! 3. cold vs prefetched first-burst latency (real time);
 //! 4. **heterogeneous-adapter batches** — 16 tenants hit round-robin
-//!    (adjacent requests never share an adapter: the worst case for
-//!    per-adapter batching, the best case for factor-form mixed batches)
-//!    under `merged` vs `factor` vs `auto`.
+//!    (adjacent requests never share an adapter) under `merged` vs
+//!    `factor` vs `auto` (real time for req/s comparability).
 //!
-//! Scenario 2 and 4 results are also written to `BENCH_serving.json` —
-//! one machine-readable snapshot per run (each PR's committed snapshot
-//! is one point of the perf trajectory).
+//! Scenario 1, 2 and 4 results are written to `BENCH_serving.json` — one
+//! machine-readable snapshot per run (each PR's committed snapshot is one
+//! point of the perf trajectory).
 //!
 //! Runs against real `make artifacts` output when present; otherwise (on
 //! the reference engine) it synthesizes a model + adapters and runs the
 //! same scenarios hermetically.
 
-use loraquant::adapter::LoraAdapter;
-use loraquant::coordinator::{
-    Coordinator, CoordinatorConfig, GenRequest, MergeStrategy, StoredAdapter,
-};
-use loraquant::experiments::{lq, Settings};
-use loraquant::loraquant::{quantize_site, QuantizedLora};
-use loraquant::testutil::{synth_model_config, synth_quantized_adapter, write_synth_model};
-use loraquant::workload::{generate, zipf_ids, WorkloadConfig};
-use std::path::PathBuf;
-use std::time::{Duration, Instant};
+use loraquant::coordinator::MergeStrategy;
+use loraquant::experiments::Settings;
+use loraquant::scenario::{run_scenario, ClockMode, ScenarioEnv, ScenarioSpec};
+use loraquant::workload::WorkloadConfig;
+use std::time::Duration;
 
-/// (artifacts dir, model name, pre-built adapters) — real when available,
-/// synthetic otherwise.
-fn setup() -> anyhow::Result<Option<(PathBuf, String, Vec<(String, StoredAdapter)>)>> {
+/// Scenario environment — real artifacts when available, synthetic
+/// otherwise.
+fn setup() -> anyhow::Result<Option<ScenarioEnv>> {
     let settings = Settings::from_env();
     if let Some(model) = settings.models.first().cloned() {
-        let tasks = ["modadd", "modchain", "transform", "keyword"];
-        let qcfg = lq(2, 0.9);
-        let mut adapters = Vec::new();
-        for task in tasks {
-            let lora =
-                LoraAdapter::load(settings.artifacts.join(&model).join(format!("{task}.lora.bin")))?;
-            let mut q = QuantizedLora::default();
-            for (site, (a, b)) in &lora.sites {
-                q.sites.insert(site.clone(), quantize_site(b, a, &qcfg));
-            }
-            adapters.push((task.to_string(), StoredAdapter::Quantized(q)));
-        }
-        return Ok(Some((settings.artifacts, model, adapters)));
+        return Ok(Some(ScenarioEnv::from_artifacts(settings.artifacts, model)?));
     }
     if cfg!(feature = "pjrt") {
         eprintln!("bench_serving: no artifacts — run `make artifacts`");
         return Ok(None);
     }
-    // reference engine: synthesize a model + adapters
-    let dir = std::env::temp_dir().join(format!("lq_bench_serving_{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
-    let mcfg = synth_model_config();
-    write_synth_model(&dir, "synth", &mcfg, &[1, 8], 17)?;
-    let adapters = (0..4)
-        .map(|i| (format!("task{i}"), synth_quantized_adapter(&mcfg, 100 + i)))
-        .collect();
     eprintln!("bench_serving: no artifacts — using a synthetic model on the reference engine");
-    Ok(Some((dir, "synth".to_string(), adapters)))
+    Ok(Some(ScenarioEnv::synth("bench", 4)?))
+}
+
+/// req/s over the trace span (first submit → last completion).
+fn rps(ok: usize, span: Duration) -> f64 {
+    ok as f64 / span.as_secs_f64().max(1e-9)
 }
 
 fn main() -> anyhow::Result<()> {
-    let Some((artifacts, model, adapters)) = setup()? else {
+    let Some(env) = setup()? else {
         return Ok(());
     };
+    let model = env.model.clone();
+    let synthetic = model == "synth";
 
     // The "tight" cache row must actually evict: the synthetic model's
     // merged weights are ~50 KB vs several MB for the real one, so scale
     // the budget unit down when running on synthetic adapters.
-    let synthetic = model == "synth";
     let cache_unit: usize = if synthetic { 1 << 14 } else { 1 << 20 };
     if synthetic {
         println!("(synthetic model: cache budgets are in 16 KB units, not MB)");
     }
 
-    println!("# Serving — Zipf multi-LoRA workload through the coordinator ({model})");
-    for (n_adapters, cache_mb, rate) in
-        [(4usize, 256usize, 100.0f64), (16, 256, 100.0), (16, 4, 100.0), (16, 256, 400.0)]
-    {
-        let mut cfg = CoordinatorConfig::new(&artifacts, &model);
-        cfg.cache_budget_bytes = cache_mb * cache_unit;
-        cfg.max_wait = Duration::from_millis(5);
-        let (coord, join) = Coordinator::start(cfg)?;
-        let mut ids = Vec::new();
-        for i in 0..n_adapters {
-            let (task, q) = &adapters[i % adapters.len()];
-            ids.push(coord.register_adapter(q.clone(), task.clone())?);
-        }
-        let wl = WorkloadConfig { rate, n_requests: 128, zipf_alpha: 1.1, seed: 11 };
-        let schedule = generate(&wl, &ids);
-        let start = Instant::now();
-        let mut rxs = Vec::new();
-        for arr in &schedule {
-            let el = start.elapsed();
-            if arr.at > el {
-                std::thread::sleep(arr.at - el);
-            }
-            rxs.push(coord.generate_async(GenRequest {
-                adapter: arr.adapter,
-                prompt: vec![1, 5, 4, 7, 3],
-                max_new: 3,
-            }));
-        }
-        let ok = rxs.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
-        let wall = start.elapsed();
-        let (m, cache, _) = coord.metrics()?;
-        println!(
-            "adapters={n_adapters:<3} cache={cache_mb:>4}MB rate={rate:>5.0}/s | {ok}/128 ok, {:.1} req/s | {} | hit_rate={:.2} evictions={}",
-            ok as f64 / wall.as_secs_f64(),
-            m.summary(),
-            cache.hit_rate(),
-            cache.evictions,
-        );
-        coord.shutdown();
-        let _ = join.join();
-    }
-
     // machine-readable rows accumulated across scenarios
     let mut json_rows: Vec<String> = Vec::new();
 
-    // ---- scenario 2: multi-worker scaling on a saturating mixed load ----
-    println!("\n# Multi-worker scaling — 16 tenants, 192 closed-loop requests");
-    // rate only shapes (discarded) arrival times here; keep it huge so the
-    // closed-loop mix is effectively instantaneous
-    let wl = WorkloadConfig { rate: 1e9, n_requests: 192, zipf_alpha: 0.6, seed: 23 };
-    let mut base_rps = None;
-    for workers in [1usize, 2, 4] {
-        let mut cfg = CoordinatorConfig::new(&artifacts, &model).with_workers(workers);
-        cfg.max_wait = Duration::from_millis(2);
-        let (coord, join) = Coordinator::start(cfg)?;
-        let mut ids = Vec::new();
-        for i in 0..16 {
-            let (task, q) = &adapters[i % adapters.len()];
-            ids.push(coord.register_adapter(q.clone(), task.clone())?);
-        }
-        let mix = zipf_ids(&wl, &ids);
-        let start = Instant::now();
-        let rxs: Vec<_> = mix
-            .iter()
-            .map(|&adapter| {
-                coord.generate_async(GenRequest {
-                    adapter,
-                    prompt: vec![1, 5, 4, 7, 3],
-                    max_new: 3,
-                })
-            })
-            .collect();
-        let ok = rxs.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
-        let wall = start.elapsed();
-        let rps = ok as f64 / wall.as_secs_f64();
-        let speedup = base_rps.map_or(1.0, |b: f64| rps / b);
-        if base_rps.is_none() {
-            base_rps = Some(rps);
-        }
-        let (m, cache, _) = coord.metrics()?;
+    // ---- scenario 1: open-loop Zipf, virtual time -----------------------
+    println!("# Serving — Zipf multi-LoRA workload through the coordinator ({model}, virtual time)");
+    for (n_adapters, cache_mb, rate) in
+        [(4usize, 256usize, 100.0f64), (16, 256, 100.0), (16, 4, 100.0), (16, 256, 400.0)]
+    {
+        let spec = ScenarioSpec {
+            name: format!("open_loop/a{n_adapters}/c{cache_mb}/r{rate}"),
+            mode: ClockMode::Virtual,
+            n_adapters,
+            cache_budget_bytes: cache_mb * cache_unit,
+            max_wait: Duration::from_millis(5),
+            workload: WorkloadConfig { rate, zipf_alpha: 1.1, n_requests: 128, seed: 11 },
+            max_new: 3,
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
         println!(
-            "workers={workers} | {ok}/{} ok in {wall:.2?} | {rps:7.1} req/s | {:.2}x vs 1 worker | mean_batch={:.2} hit_rate={:.2}",
-            mix.len(),
-            speedup,
-            m.mean_batch_size(),
-            cache.hit_rate(),
+            "adapters={n_adapters:<3} cache={cache_mb:>4}MB rate={rate:>5.0}/s | {}/{} ok | p50={:?} p95={:?} mean_batch={:.2} | hit_rate={:.2} evictions={} | wall {:?}",
+            s.ok,
+            s.requests,
+            s.latency.quantile(0.5),
+            s.latency.quantile(0.95),
+            s.mean_batch,
+            s.cache.hit_rate(),
+            s.cache.evictions,
+            s.real_wall,
         );
         json_rows.push(format!(
-            r#"{{"scenario":"worker_scaling","workers":{workers},"requests":{},"ok":{ok},"req_per_s":{rps:.1},"speedup":{speedup:.2},"mean_batch":{:.2}}}"#,
-            mix.len(),
-            m.mean_batch_size(),
+            r#"{{"scenario":"open_loop_virtual","adapters":{n_adapters},"cache_units":{cache_mb},"rate":{rate},"requests":{},"ok":{},"p50_us":{},"p95_us":{},"mean_batch":{:.2},"evictions":{},"wall_ms":{}}}"#,
+            s.requests,
+            s.ok,
+            s.latency.quantile(0.5).as_micros(),
+            s.latency.quantile(0.95).as_micros(),
+            s.mean_batch,
+            s.cache.evictions,
+            s.real_wall.as_millis(),
         ));
-        coord.shutdown();
-        let _ = join.join();
+    }
+
+    // ---- scenario 2: multi-worker scaling on a saturating mixed load ----
+    println!("\n# Multi-worker scaling — 16 tenants, 192 closed-loop requests");
+    let mut base_rps = None;
+    for workers in [1usize, 2, 4] {
+        let spec = ScenarioSpec {
+            name: format!("worker_scaling/w{workers}"),
+            mode: ClockMode::RealTime,
+            workers,
+            merge_workers: 2,
+            n_adapters: 16,
+            max_wait: Duration::from_millis(2),
+            // rate only shapes (near-zero) arrival gaps: effectively
+            // closed-loop submission, peak-throughput measurement
+            workload: WorkloadConfig { rate: 1e9, zipf_alpha: 0.6, n_requests: 192, seed: 23 },
+            max_new: 3,
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        let r = rps(s.ok, s.trace_span);
+        let speedup = base_rps.map_or(1.0, |b: f64| r / b);
+        if base_rps.is_none() {
+            base_rps = Some(r);
+        }
+        println!(
+            "workers={workers} | {}/{} ok in {:?} | {r:7.1} req/s | {speedup:.2}x vs 1 worker | mean_batch={:.2} hit_rate={:.2}",
+            s.ok,
+            s.requests,
+            s.trace_span,
+            s.mean_batch,
+            s.cache.hit_rate(),
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"worker_scaling","workers":{workers},"requests":{},"ok":{},"req_per_s":{r:.1},"speedup":{speedup:.2},"mean_batch":{:.2}}}"#,
+            s.requests,
+            s.ok,
+            s.mean_batch,
+        ));
     }
 
     // ---- scenario 3: cold start vs prefetch -----------------------------
     println!("\n# Prefetch — time to first response over 8 cold tenants");
     for prefetch in [false, true] {
-        let mut cfg = CoordinatorConfig::new(&artifacts, &model).with_workers(2);
-        cfg.max_wait = Duration::from_millis(2);
-        let (coord, join) = Coordinator::start(cfg)?;
-        let mut ids = Vec::new();
-        for i in 0..8 {
-            let (task, q) = &adapters[i % adapters.len()];
-            ids.push(coord.register_adapter(q.clone(), task.clone())?);
-        }
-        if prefetch {
-            let waits: Vec<_> = ids.iter().map(|&id| coord.prefetch(id)).collect();
-            for rx in waits {
-                let _ = rx.recv();
-            }
-        }
-        let start = Instant::now();
-        let rxs: Vec<_> = ids
-            .iter()
-            .map(|&adapter| {
-                coord.generate_async(GenRequest {
-                    adapter,
-                    prompt: vec![1, 5, 4, 7, 3],
-                    max_new: 2,
-                })
-            })
-            .collect();
-        for rx in rxs {
-            let _ = rx.recv();
-        }
-        let wall = start.elapsed();
-        let (m, cache, _) = coord.metrics()?;
-        let p95 = m.e2e_latency.as_ref().map(|h| h.quantile(0.95));
+        let spec = ScenarioSpec {
+            name: format!("prefetch/{prefetch}"),
+            mode: ClockMode::RealTime,
+            workers: 2,
+            merge_workers: 2,
+            n_adapters: 8,
+            max_wait: Duration::from_millis(2),
+            workload: WorkloadConfig { rate: 1e9, zipf_alpha: 0.0, n_requests: 8, seed: 5 },
+            round_robin: true, // every tenant exactly once
+            max_new: 2,
+            prefetch,
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
         println!(
-            "prefetch={prefetch:<5} | burst served in {wall:.2?} | p95={p95:?} | misses_on_path={}",
-            cache.misses,
+            "prefetch={prefetch:<5} | burst served in {:?} | p95={:?} | misses_on_path={}",
+            s.trace_span,
+            s.latency.quantile(0.95),
+            s.cache.misses,
         );
-        coord.shutdown();
-        let _ = join.join();
     }
 
     // ---- scenario 4: heterogeneous-adapter batches, merged vs factor ----
@@ -227,49 +180,42 @@ fn main() -> anyhow::Result<()> {
             println!("strategy={strategy:<6} | skipped (PJRT backend is merged-only)");
             continue;
         }
-        let mut cfg =
-            CoordinatorConfig::new(&artifacts, &model).with_merge_strategy(strategy);
-        cfg.max_wait = Duration::from_millis(2);
-        let (coord, join) = Coordinator::start(cfg)?;
-        let mut ids = Vec::new();
-        for i in 0..16 {
-            let (task, q) = &adapters[i % adapters.len()];
-            ids.push(coord.register_adapter(q.clone(), task.clone())?);
-        }
-        // round-robin: adjacent requests never share an adapter, so the
-        // merged path cannot amortize a batch across tenants while the
-        // factor path fills heterogeneous buckets
-        let start = Instant::now();
-        let rxs: Vec<_> = (0..128)
-            .map(|i| {
-                coord.generate_async(GenRequest {
-                    adapter: ids[i % ids.len()],
-                    prompt: vec![1, 5, 4, 7, 3],
-                    max_new: 3,
-                })
-            })
-            .collect();
-        let ok = rxs.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
-        let wall = start.elapsed();
-        let rps = ok as f64 / wall.as_secs_f64();
-        let (m, cache, _) = coord.metrics()?;
-        let p95_us =
-            m.e2e_latency.as_ref().map_or(0, |h| h.quantile(0.95).as_micros() as u64);
+        let spec = ScenarioSpec {
+            name: format!("hetero_batch/{strategy}"),
+            mode: ClockMode::RealTime,
+            strategy,
+            merge_workers: 2,
+            n_adapters: 16,
+            max_wait: Duration::from_millis(2),
+            workload: WorkloadConfig { rate: 1e9, zipf_alpha: 0.0, n_requests: 128, seed: 31 },
+            // round-robin: adjacent requests never share an adapter, so
+            // the merged path cannot amortize a batch across tenants
+            // while the factor path fills heterogeneous buckets
+            round_robin: true,
+            max_new: 3,
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        let r = rps(s.ok, s.trace_span);
+        let p95_us = s.latency.quantile(0.95).as_micros() as u64;
         println!(
-            "strategy={strategy:<6} | {ok}/128 ok | {rps:7.1} req/s | p95={p95_us}µs | mean_batch={:.2} factor_batches={} merges(misses)={}",
-            m.mean_batch_size(),
-            m.factor_batches,
-            cache.misses,
+            "strategy={strategy:<6} | {}/{} ok | {r:7.1} req/s | p95={p95_us}µs | mean_batch={:.2} factor_batches={} merges(misses)={}",
+            s.ok,
+            s.requests,
+            s.mean_batch,
+            s.factor_batches,
+            s.cache.misses,
         );
         json_rows.push(format!(
-            r#"{{"scenario":"hetero_batch","strategy":"{strategy}","adapters":16,"requests":128,"ok":{ok},"req_per_s":{rps:.1},"p95_us":{p95_us},"mean_batch":{:.2},"batches":{},"factor_batches":{},"cache_misses":{}}}"#,
-            m.mean_batch_size(),
-            m.batches,
-            m.factor_batches,
-            cache.misses,
+            r#"{{"scenario":"hetero_batch","strategy":"{strategy}","adapters":16,"requests":{},"ok":{},"req_per_s":{r:.1},"p95_us":{p95_us},"mean_batch":{:.2},"batches":{},"factor_batches":{},"cache_misses":{}}}"#,
+            s.requests,
+            s.ok,
+            s.mean_batch,
+            s.batches,
+            s.factor_batches,
+            s.cache.misses,
         ));
-        coord.shutdown();
-        let _ = join.join();
     }
 
     let json = format!(

@@ -1,0 +1,290 @@
+//! Time as a dependency: a [`Clock`] is either the real monotonic clock
+//! or a shared **virtual clock** that only moves when a driver advances
+//! it.
+//!
+//! Every timing-dependent behavior of the serving stack — batch max-wait
+//! deadlines, cold-miss parking, auto-strategy merge races, latency
+//! metrics — reads time through a `Clock` handle instead of calling
+//! `Instant::now()` directly. Under [`Clock::real`] nothing changes; under
+//! a [`VirtualClock`] the entire coordinator runs in simulated time, so a
+//! scenario driver (see [`crate::scenario`]) can replay a multi-second
+//! workload trace in microseconds of wall clock and get **deterministic**
+//! timestamps: the clock only moves at driver-controlled barriers, so
+//! every event lands at an exactly reproducible virtual instant.
+//!
+//! The virtual clock also plays the role of a discrete-event timer wheel:
+//! threads (e.g. a fault-injected slow merge) block in
+//! [`VirtualClock::sleep_until`], which registers the wake deadline where
+//! the driver can see it ([`VirtualClock::sleepers`]) and include it in
+//! its next-event computation. Advancing the clock wakes every sleeper
+//! whose deadline has been reached.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A time source: the real monotonic clock, or a shared virtual clock.
+///
+/// Cloning is cheap; clones of a virtual clock share the same timeline.
+#[derive(Clone)]
+pub struct Clock {
+    inner: Inner,
+}
+
+#[derive(Clone)]
+enum Inner {
+    Real,
+    Virtual(Arc<VirtualClock>),
+}
+
+impl Clock {
+    /// The real monotonic clock (production default).
+    pub fn real() -> Self {
+        Self { inner: Inner::Real }
+    }
+
+    /// A handle onto a shared virtual clock.
+    pub fn virtual_from(vc: &Arc<VirtualClock>) -> Self {
+        Self { inner: Inner::Virtual(Arc::clone(vc)) }
+    }
+
+    /// Current instant on this clock's timeline.
+    pub fn now(&self) -> Instant {
+        match &self.inner {
+            Inner::Real => Instant::now(),
+            Inner::Virtual(vc) => vc.now(),
+        }
+    }
+
+    /// Whether this is a virtual clock (event loops use this to pick a
+    /// real-time poll interval instead of trusting virtual deadlines).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self.inner, Inner::Virtual(_))
+    }
+
+    /// Block the calling thread until `deadline`. On the real clock this
+    /// is a plain sleep; on a virtual clock the thread parks until a
+    /// driver advances time past the deadline (registering itself as a
+    /// sleeper the driver can observe).
+    pub fn sleep_until(&self, deadline: Instant) {
+        match &self.inner {
+            Inner::Real => {
+                let now = Instant::now();
+                if deadline > now {
+                    std::thread::sleep(deadline - now);
+                }
+            }
+            Inner::Virtual(vc) => vc.sleep_until(deadline),
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::real()
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            Inner::Real => f.write_str("Clock::Real"),
+            Inner::Virtual(vc) => write!(f, "Clock::Virtual(t={:?})", vc.elapsed()),
+        }
+    }
+}
+
+/// Mutable state behind the virtual clock's mutex.
+struct VcState {
+    /// Nanoseconds since the clock's origin.
+    now_ns: u64,
+    /// Registered sleeper deadlines (absolute ns → count of threads).
+    sleepers: BTreeMap<u64, usize>,
+}
+
+/// A driver-advanced timeline shared by every [`Clock`] handle cloned
+/// from it. Time never moves on its own.
+pub struct VirtualClock {
+    /// Fixed real anchor: virtual instant = `origin + now_ns`.
+    origin: Instant,
+    state: Mutex<VcState>,
+    wake: Condvar,
+}
+
+impl VirtualClock {
+    /// A fresh timeline at t = 0.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            origin: Instant::now(),
+            state: Mutex::new(VcState { now_ns: 0, sleepers: BTreeMap::new() }),
+            wake: Condvar::new(),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, VcState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Current virtual instant.
+    pub fn now(&self) -> Instant {
+        self.origin + Duration::from_nanos(self.lock().now_ns)
+    }
+
+    /// Virtual time elapsed since the origin.
+    pub fn elapsed(&self) -> Duration {
+        Duration::from_nanos(self.lock().now_ns)
+    }
+
+    /// Convert an instant on this timeline to an offset from the origin.
+    /// Instants predating the origin clamp to zero.
+    pub fn offset_of(&self, t: Instant) -> Duration {
+        t.saturating_duration_since(self.origin)
+    }
+
+    /// Advance the timeline by `d`, waking any sleeper whose deadline has
+    /// been reached.
+    pub fn advance(&self, d: Duration) {
+        let mut s = self.lock();
+        s.now_ns = s.now_ns.saturating_add(d.as_nanos() as u64);
+        drop(s);
+        self.wake.notify_all();
+    }
+
+    /// Advance the timeline to the absolute offset `t` (no-op if already
+    /// past it — the clock never goes backwards).
+    pub fn advance_to(&self, t: Duration) {
+        let mut s = self.lock();
+        s.now_ns = s.now_ns.max(t.as_nanos() as u64);
+        drop(s);
+        self.wake.notify_all();
+    }
+
+    /// Block until the timeline reaches `deadline`, registering the
+    /// deadline so a driver can see it via [`Self::sleepers`]. Returns
+    /// immediately if the deadline has already passed.
+    pub fn sleep_until(&self, deadline: Instant) {
+        let target_ns = deadline.saturating_duration_since(self.origin).as_nanos() as u64;
+        let mut s = self.lock();
+        if s.now_ns >= target_ns {
+            return;
+        }
+        *s.sleepers.entry(target_ns).or_insert(0) += 1;
+        while s.now_ns < target_ns {
+            s = self.wake.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        match s.sleepers.get_mut(&target_ns) {
+            Some(c) if *c > 1 => *c -= 1,
+            _ => {
+                s.sleepers.remove(&target_ns);
+            }
+        }
+    }
+
+    /// (number of sleeping threads, earliest wake offset): the driver's
+    /// view of time-blocked work. A thread between deciding to sleep and
+    /// registering its deadline is still invisible here, so drivers poll
+    /// until counts stabilize against their own bookkeeping.
+    pub fn sleepers(&self) -> (usize, Option<Duration>) {
+        let s = self.lock();
+        let count = s.sleepers.values().sum();
+        let earliest = s.sleepers.keys().next().map(|&ns| Duration::from_nanos(ns));
+        (count, earliest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_is_monotonic() {
+        let c = Clock::real();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert!(!c.is_virtual());
+    }
+
+    #[test]
+    fn virtual_clock_only_moves_when_advanced() {
+        let vc = VirtualClock::new();
+        let c = Clock::virtual_from(&vc);
+        assert!(c.is_virtual());
+        let t0 = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(c.now(), t0, "virtual time must not follow real time");
+        vc.advance(Duration::from_millis(250));
+        assert_eq!(c.now() - t0, Duration::from_millis(250));
+        assert_eq!(vc.elapsed(), Duration::from_millis(250));
+    }
+
+    #[test]
+    fn advance_to_is_monotone() {
+        let vc = VirtualClock::new();
+        vc.advance_to(Duration::from_millis(10));
+        vc.advance_to(Duration::from_millis(5)); // must not rewind
+        assert_eq!(vc.elapsed(), Duration::from_millis(10));
+        vc.advance_to(Duration::from_millis(30));
+        assert_eq!(vc.elapsed(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn clones_share_one_timeline() {
+        let vc = VirtualClock::new();
+        let a = Clock::virtual_from(&vc);
+        let b = a.clone();
+        vc.advance(Duration::from_secs(1));
+        assert_eq!(a.now(), b.now());
+    }
+
+    #[test]
+    fn sleeper_blocks_until_advanced_and_is_observable() {
+        let vc = VirtualClock::new();
+        let c = Clock::virtual_from(&vc);
+        let deadline = c.now() + Duration::from_millis(100);
+        let vc2 = Arc::clone(&vc);
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let done2 = Arc::clone(&done);
+        let j = std::thread::spawn(move || {
+            Clock::virtual_from(&vc2).sleep_until(deadline);
+            done2.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+        // wait (real time) until the sleeper registers
+        let t0 = Instant::now();
+        loop {
+            let (n, earliest) = vc.sleepers();
+            if n == 1 {
+                assert_eq!(earliest, Some(Duration::from_millis(100)));
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "sleeper never registered");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        assert!(!done.load(std::sync::atomic::Ordering::SeqCst));
+        // an advance short of the deadline must not wake it
+        vc.advance(Duration::from_millis(50));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(!done.load(std::sync::atomic::Ordering::SeqCst));
+        vc.advance(Duration::from_millis(50));
+        j.join().unwrap();
+        assert!(done.load(std::sync::atomic::Ordering::SeqCst));
+        assert_eq!(vc.sleepers().0, 0, "woken sleeper must deregister");
+    }
+
+    #[test]
+    fn sleep_until_past_deadline_returns_immediately() {
+        let vc = VirtualClock::new();
+        vc.advance(Duration::from_secs(1));
+        let c = Clock::virtual_from(&vc);
+        c.sleep_until(c.now()); // must not block
+        assert_eq!(vc.sleepers().0, 0);
+    }
+
+    #[test]
+    fn offset_roundtrip() {
+        let vc = VirtualClock::new();
+        vc.advance(Duration::from_micros(1234));
+        let t = vc.now();
+        assert_eq!(vc.offset_of(t), Duration::from_micros(1234));
+    }
+}

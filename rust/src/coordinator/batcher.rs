@@ -82,6 +82,20 @@ impl<T> DynamicBatcher<T> {
     /// 1. any adapter with ≥ bucket requests (oldest such first), else
     /// 2. the adapter whose oldest request exceeded `max_wait`.
     pub fn pop_ready(&mut self, now: Instant) -> Option<Batch<T>> {
+        self.pop(Some(now))
+    }
+
+    /// Pop the next batch regardless of deadline (oldest head first) —
+    /// the shutdown drain, where partial batches release immediately
+    /// instead of waiting out `max_wait`.
+    pub fn pop_flush(&mut self) -> Option<Batch<T>> {
+        self.pop(None)
+    }
+
+    /// `deadline_at` is the release clock: `Some(now)` applies the
+    /// max-wait policy at that instant, `None` means no deadline — every
+    /// queue is considered expired (flush).
+    fn pop(&mut self, deadline_at: Option<Instant>) -> Option<Batch<T>> {
         // full batches first, choosing the adapter with the oldest head
         let full = self
             .queues
@@ -96,7 +110,10 @@ impl<T> DynamicBatcher<T> {
             .queues
             .iter()
             .filter(|(_, q)| {
-                q.front().is_some_and(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+                q.front().is_some_and(|r| match deadline_at {
+                    Some(now) => now.duration_since(r.enqueued) >= self.cfg.max_wait,
+                    None => true,
+                })
             })
             .min_by_key(|(_, q)| q.front().map(|r| r.enqueued).unwrap())
             .map(|(&id, _)| id);
@@ -281,6 +298,24 @@ mod tests {
         b.push(req(9, t0));
         assert!(b.pop_ready(t0).is_none());
         assert!(b.pop_ready(t0 + Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn pop_flush_releases_partial_batches_immediately() {
+        // shutdown drain: fresh partial batches release without waiting
+        // out max_wait, oldest head first, full buckets still first.
+        let t0 = Instant::now();
+        let cfg = BatcherConfig { bucket: 2, max_wait: Duration::from_secs(3600), ..Default::default() };
+        let mut b = DynamicBatcher::new(cfg);
+        b.push(req(5, t0 + Duration::from_millis(1)));
+        b.push(req(3, t0)); // older partial head
+        b.push(req(7, t0 + Duration::from_millis(2)));
+        b.push(req(7, t0 + Duration::from_millis(2))); // full bucket
+        assert!(b.pop_ready(t0 + Duration::from_millis(3)).map(|x| x.adapter) == Some(Some(7)));
+        let order: Vec<Option<AdapterId>> =
+            std::iter::from_fn(|| b.pop_flush().map(|x| x.adapter)).collect();
+        assert_eq!(order, vec![Some(3), Some(5)], "flush drains oldest head first");
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

@@ -16,11 +16,13 @@
 
 use super::registry::{AdapterId, AdapterRegistry};
 use crate::adapter::fmt::Tensor;
+use crate::clock::Clock;
 use crate::model::{merge_adapter, BaseWeights};
 use anyhow::anyhow;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// State shared between the coordinator handle, the executor workers, and
 /// the merge pool: the frozen base model plus the adapter registry.
@@ -100,21 +102,70 @@ pub(crate) fn host_merge_fn(shared: Arc<Shared>, hook: Option<MergeHook>) -> Mer
     })
 }
 
+/// Merge-pipeline concurrency counters, shared between the pool threads
+/// and the coordinator handle. `inflight` counts merges from dequeue
+/// until the done-callback has fired (so an "inflight" merge's completion
+/// message is guaranteed to be in its worker's channel once the count
+/// drops); `peak_overlap` is the high-water mark of concurrent merges —
+/// the observable behind "two adapters' misses merge in parallel".
+#[derive(Debug, Default)]
+pub struct MergeStats {
+    inflight: AtomicUsize,
+    peak_overlap: AtomicUsize,
+    started: AtomicU64,
+    completed: AtomicU64,
+}
+
+/// A point-in-time copy of [`MergeStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MergeStatsSnapshot {
+    pub inflight: usize,
+    pub peak_overlap: usize,
+    pub started: u64,
+    pub completed: u64,
+}
+
+impl MergeStats {
+    fn enter(&self) {
+        let now = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.started.fetch_add(1, Ordering::SeqCst);
+        self.peak_overlap.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn exit(&self) {
+        self.completed.fetch_add(1, Ordering::SeqCst);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn snapshot(&self) -> MergeStatsSnapshot {
+        MergeStatsSnapshot {
+            inflight: self.inflight.load(Ordering::SeqCst),
+            peak_overlap: self.peak_overlap.load(Ordering::SeqCst),
+            started: self.started.load(Ordering::SeqCst),
+            completed: self.completed.load(Ordering::SeqCst),
+        }
+    }
+}
+
 /// A fixed pool of merge-worker threads draining one shared job queue.
 pub(crate) struct MergePool {
     tx: Option<mpsc::Sender<MergeJob>>,
     joins: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<MergeStats>,
 }
 
 impl MergePool {
-    pub(crate) fn new(n_workers: usize, merge_fn: MergeFn) -> Self {
+    pub(crate) fn new(n_workers: usize, merge_fn: MergeFn, clock: Clock) -> Self {
         let n = n_workers.max(1);
         let (tx, rx) = mpsc::channel::<MergeJob>();
         let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(MergeStats::default());
         let mut joins = Vec::with_capacity(n);
         for i in 0..n {
             let rx = Arc::clone(&rx);
             let merge_fn = Arc::clone(&merge_fn);
+            let clock = clock.clone();
+            let stats = Arc::clone(&stats);
             let join = std::thread::Builder::new()
                 .name(format!("lq-merge-{i}"))
                 .spawn(move || loop {
@@ -125,9 +176,16 @@ impl MergePool {
                     };
                     match job {
                         Ok(job) => {
-                            let t0 = Instant::now();
+                            stats.enter();
+                            // clock-based host time: under a virtual
+                            // clock an unfaulted merge is instantaneous
+                            // (real host work doesn't advance simulated
+                            // time) while an injected slow merge shows
+                            // its scripted virtual delay.
+                            let t0 = clock.now();
                             let result = merge_fn(job.adapter);
-                            (job.done)(result, t0.elapsed());
+                            (job.done)(result, clock.now().duration_since(t0));
+                            stats.exit();
                         }
                         Err(_) => return, // all senders gone
                     }
@@ -135,7 +193,12 @@ impl MergePool {
                 .expect("spawning merge worker");
             joins.push(join);
         }
-        Self { tx: Some(tx), joins }
+        Self { tx: Some(tx), joins, stats }
+    }
+
+    /// Shared concurrency counters (held by the coordinator handle).
+    pub(crate) fn stats(&self) -> Arc<MergeStats> {
+        Arc::clone(&self.stats)
     }
 
     /// A submit handle for an executor worker.
@@ -165,7 +228,7 @@ mod tests {
 
     #[test]
     fn jobs_complete_and_report_duration() {
-        let pool = MergePool::new(2, Arc::new(|_id| noop_weights()));
+        let pool = MergePool::new(2, Arc::new(|_id| noop_weights()), Clock::real());
         let (tx, rx) = channel();
         for id in 0..8u32 {
             let tx = tx.clone();
@@ -187,7 +250,7 @@ mod tests {
 
     #[test]
     fn errors_propagate_to_done() {
-        let pool = MergePool::new(1, Arc::new(|id| Err(anyhow!("no adapter {id}"))));
+        let pool = MergePool::new(1, Arc::new(|id| Err(anyhow!("no adapter {id}"))), Clock::real());
         let (tx, rx) = channel();
         pool.sender()
             .send(MergeJob {
@@ -222,7 +285,7 @@ mod tests {
             gate.recv_timeout(Duration::from_secs(10)).expect("gate released");
             noop_weights()
         });
-        let pool = MergePool::new(2, merge_fn);
+        let pool = MergePool::new(2, merge_fn, Clock::real());
         let (done_tx, done_rx) = channel();
         for id in [0u32, 1] {
             let done_tx = done_tx.clone();
@@ -245,6 +308,18 @@ mod tests {
         for _ in 0..2 {
             let (_, ok) = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert!(ok);
+        }
+        // `exit()` runs just after the done callback fires; poll briefly
+        // rather than racing it.
+        let t0 = std::time::Instant::now();
+        loop {
+            let stats = pool.stats().snapshot();
+            if stats == MergeStatsSnapshot { inflight: 0, peak_overlap: 2, started: 2, completed: 2 }
+            {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "stats never settled: {stats:?}");
+            std::thread::yield_now();
         }
         pool.shutdown();
     }

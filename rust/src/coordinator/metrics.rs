@@ -143,9 +143,82 @@ impl ServerMetrics {
     }
 }
 
+/// Exact order statistics over a set of latency samples — the scenario
+/// simulator's per-adapter summary unit. Unlike [`Histogram`] (log-scale
+/// buckets, built for cheap streaming aggregation), this sorts the raw
+/// samples, so golden-trace assertions get exact, reproducible
+/// percentiles instead of bucket upper edges.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    /// Sorted samples, microseconds.
+    sorted_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn from_samples(samples: &[Duration]) -> Self {
+        let mut sorted_us: Vec<u64> = samples.iter().map(|d| d.as_micros() as u64).collect();
+        sorted_us.sort_unstable();
+        Self { sorted_us }
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted_us.len()
+    }
+
+    /// Exact quantile (nearest-rank: smallest sample with cumulative
+    /// frequency ≥ q). Zero on an empty set.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.sorted_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let n = self.sorted_us.len();
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        Duration::from_micros(self.sorted_us[rank - 1])
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.sorted_us.last().copied().unwrap_or(0))
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.sorted_us.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sorted_us.iter().sum::<u64>() / self.sorted_us.len() as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn latency_stats_exact_percentiles() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = LatencyStats::from_samples(&samples);
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.quantile(0.5), Duration::from_micros(50));
+        assert_eq!(s.quantile(0.95), Duration::from_micros(95));
+        assert_eq!(s.quantile(1.0), Duration::from_micros(100));
+        assert_eq!(s.quantile(0.0), Duration::from_micros(1), "rank clamps to the first sample");
+        assert_eq!(s.max(), Duration::from_micros(100));
+        assert_eq!(s.mean(), Duration::from_micros(50)); // 5050/100 truncated
+    }
+
+    #[test]
+    fn latency_stats_empty_and_unsorted_input() {
+        let s = LatencyStats::from_samples(&[]);
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.99), Duration::ZERO);
+        assert_eq!(s.mean(), Duration::ZERO);
+        let s = LatencyStats::from_samples(&[
+            Duration::from_micros(30),
+            Duration::from_micros(10),
+            Duration::from_micros(20),
+        ]);
+        assert_eq!(s.quantile(0.5), Duration::from_micros(20));
+        assert_eq!(s.max(), Duration::from_micros(30));
+    }
 
     #[test]
     fn histogram_quantiles_ordered() {

@@ -34,9 +34,9 @@ pub mod registry;
 pub mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
-pub use cache::LruCache;
-pub use merge_worker::MergeHook;
-pub use metrics::{Histogram, ServerMetrics};
+pub use cache::{CacheStats, LruCache};
+pub use merge_worker::{MergeHook, MergeStatsSnapshot};
+pub use metrics::{Histogram, LatencyStats, ServerMetrics};
 pub use pool::{route, WorkerSnapshot};
 pub use registry::{AdapterId, AdapterRegistry, StoredAdapter};
 pub use server::{Coordinator, CoordinatorConfig, GenRequest, GenResponse, MergeStrategy};

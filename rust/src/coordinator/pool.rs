@@ -29,6 +29,7 @@ use super::metrics::ServerMetrics;
 use super::registry::{AdapterId, StoredAdapter};
 use super::server::{GenRequest, GenResponse, MergeStrategy, Responder};
 use crate::adapter::fmt::Tensor;
+use crate::clock::Clock;
 use crate::eval::decode::decode_lockstep;
 use crate::eval::tasks::TOKENS;
 use crate::loraquant::QFactors;
@@ -38,7 +39,7 @@ use anyhow::anyhow;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// 64-bit finalizer (murmur3-style) for rendezvous scores.
 fn mix64(mut z: u64) -> u64 {
@@ -72,9 +73,15 @@ pub(crate) struct WorkerConfig {
     pub cache_budget_bytes: usize,
     /// Adapter execution strategy (merged / factor / auto).
     pub strategy: MergeStrategy,
+    /// Time source: real in production, virtual under the scenario
+    /// simulator (see `crate::clock`).
+    pub clock: Clock,
 }
 
-/// One worker's metrics snapshot.
+/// One worker's metrics snapshot. Taken **after** the worker's release
+/// pass, so at the instant of the snapshot no queued batch was releasable
+/// at the worker's current clock — a metrics round-trip therefore doubles
+/// as a quiescence barrier for the scenario simulator.
 #[derive(Debug, Clone)]
 pub struct WorkerSnapshot {
     pub worker: usize,
@@ -83,6 +90,13 @@ pub struct WorkerSnapshot {
     pub cache_used_bytes: usize,
     pub cached_adapters: usize,
     pub queued_requests: usize,
+    /// Time until the oldest queued request's max-wait deadline (`None`
+    /// when the batcher is idle; strictly positive after a release pass).
+    pub next_release_in: Option<Duration>,
+    /// Adapters with a merge in flight on this worker.
+    pub inflight_merges: usize,
+    /// Requests parked in batches behind in-flight merges.
+    pub parked_requests: usize,
 }
 
 type Payload = (GenRequest, Responder);
@@ -130,17 +144,26 @@ pub(crate) fn worker_main(
     };
     let mut draining = false;
     loop {
-        let now = Instant::now();
-        let timeout = w.batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+        // Under a virtual clock batcher deadlines are simulated durations
+        // — meaningless as real-time waits. The driver's barrier messages
+        // wake the loop after every clock advance, so a fixed real poll
+        // interval is only a liveness backstop there.
+        let timeout = if w.clock.is_virtual() {
+            Duration::from_millis(50)
+        } else {
+            w.batcher.next_deadline(w.clock.now()).unwrap_or(Duration::from_millis(50))
+        };
+        // A metrics reply is deferred until after the release pass so the
+        // snapshot (queue depth, next deadline, parked work) reflects a
+        // fully-drained state — the round-trip is the simulator's barrier.
+        let mut metrics_reply = None;
         match rx.recv_timeout(timeout) {
             Ok(WorkerMsg::Gen(req, resp)) => w.on_gen(req, resp),
             Ok(WorkerMsg::Prefetch(id, ack)) => w.on_prefetch(id, ack),
             Ok(WorkerMsg::Invalidate(id)) => {
                 w.cache.remove(&id);
             }
-            Ok(WorkerMsg::Metrics(tx)) => {
-                let _ = tx.send(w.snapshot());
-            }
+            Ok(WorkerMsg::Metrics(tx)) => metrics_reply = Some(tx),
             Ok(WorkerMsg::Merged { adapter, result, host_time }) => {
                 w.on_merged(adapter, result, host_time);
             }
@@ -149,15 +172,21 @@ pub(crate) fn worker_main(
             // Unreachable while the worker holds self_tx, but harmless.
             Err(mpsc::RecvTimeoutError::Disconnected) => draining = true,
         }
-        // When draining, release partial batches immediately instead of
-        // waiting out their deadline.
-        let release_at = if draining {
-            Instant::now() + Duration::from_secs(3600)
-        } else {
-            Instant::now()
-        };
-        while let Some(batch) = w.batcher.pop_ready(release_at) {
-            w.on_batch(batch);
+        loop {
+            // When draining, release partial batches immediately instead
+            // of waiting out their deadline.
+            let batch = if draining {
+                w.batcher.pop_flush()
+            } else {
+                w.batcher.pop_ready(w.clock.now())
+            };
+            match batch {
+                Some(batch) => w.on_batch(batch),
+                None => break,
+            }
+        }
+        if let Some(tx) = metrics_reply {
+            let _ = tx.send(w.snapshot());
         }
         if draining && w.batcher.pending() == 0 && w.inflight.is_empty() {
             return;
@@ -178,6 +207,7 @@ struct Worker {
     merge_tx: mpsc::Sender<MergeJob>,
     self_tx: mpsc::Sender<WorkerMsg>,
     strategy: MergeStrategy,
+    clock: Clock,
     /// Unmerged base weights, resident once per worker — the substrate the
     /// factor-form path decodes over (None under `Merged`).
     base_weights: Option<DeviceWeights>,
@@ -222,6 +252,7 @@ impl Worker {
             merge_tx,
             self_tx,
             strategy: cfg.strategy,
+            clock: cfg.clock,
             base_weights,
         })
     }
@@ -234,6 +265,13 @@ impl Worker {
             cache_used_bytes: self.cache.used_bytes(),
             cached_adapters: self.cache.len(),
             queued_requests: self.batcher.pending(),
+            next_release_in: self.batcher.next_deadline(self.clock.now()),
+            inflight_merges: self.inflight.len(),
+            parked_requests: self
+                .inflight
+                .values()
+                .map(|fl| fl.parked.iter().map(Vec::len).sum::<usize>())
+                .sum(),
         }
     }
 
@@ -259,7 +297,7 @@ impl Worker {
         }
         self.batcher.push(PendingRequest {
             adapter,
-            enqueued: Instant::now(),
+            enqueued: self.clock.now(),
             payload: (req, resp),
         });
     }
@@ -377,9 +415,9 @@ impl Worker {
             if self.shared.with_registry(|r| r.get(id).is_none()) {
                 return Err(anyhow!("adapter {id} removed during merge"));
             }
-            let t0 = Instant::now();
+            let t0 = self.clock.now();
             let dev = self.engine.upload_weights(&merged)?;
-            Ok((dev, host_time + t0.elapsed()))
+            Ok((dev, host_time + self.clock.now().duration_since(t0)))
         });
         match uploaded {
             Ok((dev, total)) => {
@@ -465,7 +503,7 @@ impl Worker {
     ) {
         match outcome {
             Ok(outputs) => {
-                let now = Instant::now();
+                let now = self.clock.now();
                 for (r, tokens) in requests.into_iter().zip(outputs) {
                     let e2e = now.duration_since(r.enqueued);
                     if let Some(h) = self.metrics.e2e_latency.as_mut() {
@@ -519,7 +557,7 @@ impl Worker {
         let t_len = self.shared.base.cfg.seq_len;
         let vocab = self.shared.base.cfg.vocab;
         let Lanes { mut seqs, mut pos, budgets, bsz, prog_idx } = self.build_lanes(requests);
-        let t_exec = Instant::now();
+        let t_exec = self.clock.now();
         let mut generated = {
             let engine = &self.engine;
             let weights = self
@@ -531,8 +569,9 @@ impl Worker {
                 engine.forward(prog, flat, &[bsz, t_len], weights)
             })?
         };
+        let exec = self.clock.now().duration_since(t_exec);
         if let Some(h) = self.metrics.exec_latency.as_mut() {
-            h.record(t_exec.elapsed());
+            h.record(exec);
         }
         generated.truncate(requests.len());
         Ok(generated)
@@ -553,7 +592,7 @@ impl Worker {
         let factors: Vec<QFactors<'_>> = adapters.iter().map(|a| a.factors()).collect();
         let lane_factors: Vec<Option<&QFactors<'_>>> =
             (0..bsz).map(|k| Some(&factors[k.min(n - 1)])).collect();
-        let t_exec = Instant::now();
+        let t_exec = self.clock.now();
         let mut generated = {
             let engine = &self.engine;
             let weights = self
@@ -565,8 +604,9 @@ impl Worker {
                 engine.forward_with_adapters(prog, flat, &[bsz, t_len], weights, &lane_factors)
             })?
         };
+        let exec = self.clock.now().duration_since(t_exec);
         if let Some(h) = self.metrics.exec_latency.as_mut() {
-            h.record(t_exec.elapsed());
+            h.record(exec);
         }
         generated.truncate(n);
         Ok(generated)

@@ -16,10 +16,11 @@
 //! traffic through the same merge pipeline.
 
 use super::cache::CacheStats;
-use super::merge_worker::{host_merge_fn, MergeHook, MergePool, Shared};
+use super::merge_worker::{host_merge_fn, MergeHook, MergePool, MergeStats, MergeStatsSnapshot, Shared};
 use super::metrics::ServerMetrics;
 use super::pool::{route, worker_main, WorkerConfig, WorkerMsg, WorkerSnapshot};
 use super::registry::{AdapterId, AdapterRegistry, StoredAdapter};
+use crate::clock::Clock;
 use crate::model::BaseWeights;
 use anyhow::{bail, Context};
 use std::path::PathBuf;
@@ -91,6 +92,10 @@ pub struct CoordinatorConfig {
     pub merge_strategy: MergeStrategy,
     /// Test/ops instrumentation called at the start of every merge.
     pub merge_hook: Option<MergeHook>,
+    /// Time source for every deadline, latency and park decision in the
+    /// pool. Real by default; the scenario simulator injects a virtual
+    /// clock here to replay traces deterministically (DESIGN.md §9).
+    pub clock: Clock,
 }
 
 impl CoordinatorConfig {
@@ -105,6 +110,7 @@ impl CoordinatorConfig {
             merge_workers: 2,
             merge_strategy: MergeStrategy::default(),
             merge_hook: None,
+            clock: Clock::real(),
         }
     }
 
@@ -123,6 +129,13 @@ impl CoordinatorConfig {
     /// Builder sugar: set the adapter execution strategy.
     pub fn with_merge_strategy(mut self, strategy: MergeStrategy) -> Self {
         self.merge_strategy = strategy;
+        self
+    }
+
+    /// Builder sugar: set the time source (virtual clocks make the whole
+    /// pool run in simulated time).
+    pub fn with_clock(mut self, clock: Clock) -> Self {
+        self.clock = clock;
         self
     }
 
@@ -167,6 +180,7 @@ pub(crate) type Responder = mpsc::Sender<anyhow::Result<GenResponse>>;
 struct Links {
     workers: Vec<mpsc::Sender<WorkerMsg>>,
     shared: Arc<Shared>,
+    merge_stats: Arc<MergeStats>,
 }
 
 impl Drop for Links {
@@ -203,7 +217,9 @@ impl Coordinator {
         let merge_pool = MergePool::new(
             cfg.merge_workers,
             host_merge_fn(Arc::clone(&shared), cfg.merge_hook.clone()),
+            cfg.clock.clone(),
         );
+        let merge_stats = merge_pool.stats();
         let wcfg = WorkerConfig {
             artifacts_dir: cfg.artifacts_dir.clone(),
             model: cfg.model.clone(),
@@ -211,6 +227,7 @@ impl Coordinator {
             max_wait: cfg.max_wait,
             cache_budget_bytes: (cfg.cache_budget_bytes / n_workers).max(1),
             strategy: cfg.merge_strategy,
+            clock: cfg.clock.clone(),
         };
 
         let mut txs = Vec::with_capacity(n_workers);
@@ -254,7 +271,7 @@ impl Coordinator {
             return Err(e);
         }
 
-        let links = Arc::new(Links { workers: txs, shared });
+        let links = Arc::new(Links { workers: txs, shared, merge_stats });
         let supervisor = std::thread::Builder::new()
             .name("lq-supervisor".into())
             .spawn(move || {
@@ -320,6 +337,12 @@ impl Coordinator {
     /// Run `f` over the shared registry (read-only snapshot access).
     pub fn with_registry<R>(&self, f: impl FnOnce(&AdapterRegistry) -> R) -> R {
         self.links.shared.with_registry(f)
+    }
+
+    /// Merge-pipeline concurrency counters (in-flight, peak overlap,
+    /// started/completed totals).
+    pub fn merge_stats(&self) -> MergeStatsSnapshot {
+        self.links.merge_stats.snapshot()
     }
 
     /// Per-worker metrics snapshots (one round-trip per worker).

@@ -67,4 +67,64 @@ mod tests {
         assert_eq!(rouge_l(&[], &[1]), 0.0);
         assert_eq!(rouge_l(&[1], &[]), 0.0);
     }
+
+    #[test]
+    fn lcs_is_symmetric_and_bounded() {
+        let cases: [(&[i32], &[i32]); 4] = [
+            (&[1, 2, 3, 4], &[2, 4, 1]),
+            (&[5, 5, 5], &[5, 5]),
+            (&[1, 3, 5, 7, 9], &[9, 7, 5, 3, 1]),
+            (&[6], &[1, 2, 6, 3]),
+        ];
+        for (a, b) in cases {
+            let l = lcs_len(a, b);
+            assert_eq!(l, lcs_len(b, a), "LCS must be symmetric");
+            assert!(l <= a.len().min(b.len()), "LCS can never exceed the shorter input");
+        }
+        // reversal of a strictly increasing sequence shares exactly one
+        // element as a subsequence
+        assert_eq!(lcs_len(&[1, 3, 5, 7, 9], &[9, 7, 5, 3, 1]), 1);
+    }
+
+    #[test]
+    fn lcs_finds_non_contiguous_subsequences() {
+        // the classic: LCS("ABCBDAB", "BDCABA") = 4 ("BCAB")
+        let a = [1, 2, 3, 2, 4, 1, 2];
+        let b = [2, 4, 3, 1, 2, 1];
+        assert_eq!(lcs_len(&a, &b), 4);
+    }
+
+    #[test]
+    fn rouge_is_symmetric_and_in_unit_interval() {
+        // β = 1: precision and recall swap roles under argument swap, so
+        // the F-measure is symmetric.
+        let cases: [(&[i32], &[i32]); 3] =
+            [(&[1, 2, 3], &[1, 3]), (&[4, 4, 4], &[4]), (&[1, 2], &[3, 1, 2, 4])];
+        for (a, b) in cases {
+            let f = rouge_l(a, b);
+            assert!((0.0..=1.0).contains(&f), "F1 {f} out of range");
+            assert!((f - rouge_l(b, a)).abs() < 1e-12, "F1 must be symmetric");
+        }
+    }
+
+    #[test]
+    fn rouge_rewards_longer_overlap() {
+        // against reference [1,2,3,4]: growing the matching prefix of the
+        // candidate must never lower the score
+        let reference = [1, 2, 3, 4];
+        let mut prev = 0.0;
+        for k in 1..=4 {
+            let f = rouge_l(&reference[..k], &reference);
+            assert!(f >= prev, "score must grow with overlap: {f} < {prev} at k={k}");
+            prev = f;
+        }
+        assert_eq!(prev, 1.0);
+    }
+
+    #[test]
+    fn rouge_known_value_precision_recall() {
+        // candidate [1,2,9,9]: LCS=2, p=0.5, r=2/3 → F1 = 4/7
+        let f = rouge_l(&[1, 2, 9, 9], &[1, 2, 3]);
+        assert!((f - 4.0 / 7.0).abs() < 1e-12, "got {f}");
+    }
 }

@@ -99,4 +99,70 @@ mod tests {
         assert_eq!(es.truncated(1).len(), 1);
         std::fs::remove_file(tmp).ok();
     }
+
+    #[test]
+    fn token_contract_matches_python_layout() {
+        // The token id layout is a cross-layer contract with
+        // python/compile/tasks.py — pin it.
+        assert_eq!((TOKENS::PAD, TOKENS::BOS, TOKENS::EOS, TOKENS::SEP, TOKENS::MARK), (0, 1, 2, 3, 4));
+        assert_eq!(TOKENS::DIGIT0, 5);
+        assert_eq!(TOKENS::LETTER0, 15, "10 digits after DIGIT0");
+        assert_eq!(TOKENS::OP0, 31, "16 letters after LETTER0");
+        // every named range fits the vocabulary
+        assert!(TOKENS::OP0 + 4 < TOKENS::VOCAB as i32);
+        assert_eq!(TOKENS::VOCAB, 64);
+        assert_eq!(TOKENS::SEQ_LEN, 32);
+        assert_eq!(TASKS.len(), 4);
+    }
+
+    #[test]
+    fn rouge_metric_flag_and_empty_reference() {
+        // exact = 0 ⇒ ROUGE-L scoring; a zero-length reference row must
+        // load as an empty answer, not a slice panic.
+        let mut t = BTreeMap::new();
+        t.insert("prompts".into(), Tensor::i32(vec![1, 4], vec![1, 5, 3, 0]));
+        t.insert("plens".into(), Tensor::i32(vec![1], vec![3]));
+        t.insert("refs".into(), Tensor::i32(vec![1, 4], vec![7, 8, 0, 0]));
+        t.insert("rlens".into(), Tensor::i32(vec![1], vec![0]));
+        t.insert("exact".into(), Tensor::i32(vec![1], vec![0]));
+        let tmp = std::env::temp_dir().join("lq_eval_test_rouge.bin");
+        save_tensorfile(&tmp, &t).unwrap();
+        let es = EvalSet::load(&tmp).unwrap();
+        assert!(!es.exact);
+        assert!(es.refs[0].is_empty());
+        assert!(!es.is_empty());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn truncation_clamps_and_preserves_alignment() {
+        let mut t = BTreeMap::new();
+        t.insert("prompts".into(), Tensor::i32(vec![3, 4], vec![1, 5, 3, 0, 1, 6, 3, 0, 1, 7, 3, 0]));
+        t.insert("plens".into(), Tensor::i32(vec![3], vec![3, 3, 3]));
+        t.insert("refs".into(), Tensor::i32(vec![3, 2], vec![7, 0, 8, 9, 6, 0]));
+        t.insert("rlens".into(), Tensor::i32(vec![3], vec![1, 2, 1]));
+        t.insert("exact".into(), Tensor::i32(vec![1], vec![1]));
+        let tmp = std::env::temp_dir().join("lq_eval_test_trunc.bin");
+        save_tensorfile(&tmp, &t).unwrap();
+        let es = EvalSet::load(&tmp).unwrap();
+        // truncation past the end clamps to the full set
+        assert_eq!(es.truncated(99).len(), 3);
+        let cut = es.truncated(2);
+        assert_eq!(cut.len(), 2);
+        assert_eq!(cut.prompts[1], vec![1, 6, 3, 0]);
+        assert_eq!(cut.refs[1], vec![8, 9], "prompt/ref alignment preserved");
+        assert_eq!(cut.plens, vec![3, 3]);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn missing_prompts_key_is_a_clean_error() {
+        let mut t = BTreeMap::new();
+        t.insert("plens".into(), Tensor::i32(vec![1], vec![1]));
+        let tmp = std::env::temp_dir().join("lq_eval_test_bad.bin");
+        save_tensorfile(&tmp, &t).unwrap();
+        let err = EvalSet::load(&tmp).unwrap_err();
+        assert!(err.to_string().contains("prompts"), "got: {err}");
+        std::fs::remove_file(tmp).ok();
+    }
 }

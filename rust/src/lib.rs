@@ -30,6 +30,7 @@ pub mod adapter;
 pub mod baselines;
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
@@ -39,6 +40,7 @@ pub mod loraquant;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod scenario;
 pub mod tensor;
 pub mod testutil;
 pub mod workload;

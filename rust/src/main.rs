@@ -7,15 +7,25 @@
 //! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12 \
 //!                    [--workers 4] [--merge-workers 2] [--buckets 1,8] [--prefetch] \
 //!                    [--merge-strategy merged|factor|auto]
+//! loraquant serve-sim --requests 200 --rate 200 --adapters 4 --merge-strategy all \
+//!                    [--workers 4] [--zipf 1.1] [--seed 7] [--slow-merge-ms 50] \
+//!                    [--churn] [--prefetch] [--log] [--golden PATH] [--model NAME]
 //! loraquant info     --model tiny-llama-s
 //! ```
 //!
-//! Everything here runs without python (`make artifacts` must have run).
+//! `serve-sim` replays a scenario spec through the coordinator under a
+//! **virtual clock** (DESIGN.md §9): seconds of simulated trace run in
+//! milliseconds of wall clock with a deterministic event log. Without
+//! `--model` it synthesizes a hermetic model, so it needs no artifacts.
+//!
+//! Everything else runs without python (`make artifacts` must have run).
 
 use anyhow::{bail, Context};
 use loraquant::adapter::{store, LoraAdapter};
 use loraquant::cli::Args;
-use loraquant::coordinator::{Coordinator, CoordinatorConfig, GenRequest, StoredAdapter};
+use loraquant::coordinator::{
+    Coordinator, CoordinatorConfig, GenRequest, MergeStrategy, StoredAdapter,
+};
 use loraquant::eval::{evaluate, EvalSet};
 use loraquant::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
 use loraquant::model::{merge_adapter, BaseWeights};
@@ -36,11 +46,14 @@ fn run() -> anyhow::Result<()> {
         Some("quantize") => cmd_quantize(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("serve-sim") => cmd_serve_sim(&args),
         Some("info") => cmd_info(&args),
-        Some(other) => bail!("unknown subcommand '{other}' (try quantize|eval|serve|info)"),
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (try quantize|eval|serve|serve-sim|info)")
+        }
         None => {
             eprintln!(
-                "usage: loraquant <quantize|eval|serve|info> [--artifacts DIR] [--model NAME] ..."
+                "usage: loraquant <quantize|eval|serve|serve-sim|info> [--artifacts DIR] [--model NAME] ..."
             );
             Ok(())
         }
@@ -210,6 +223,92 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     coord.shutdown();
     let _ = join.join();
+    Ok(())
+}
+
+/// Replay a deterministic serving scenario under virtual time.
+fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
+    use loraquant::scenario::{
+        run_scenario, ChurnAction, ClockMode, FaultPlan, ScenarioEnv, ScenarioSpec, SlowMerge,
+    };
+
+    if cfg!(feature = "pjrt") && args.opt("model").is_none() {
+        bail!("serve-sim needs --model under --features pjrt (the synthetic fallback model \
+               has no HLO artifacts)");
+    }
+    let n_requests = args.usize_or("requests", 200)?;
+    let n_adapters = args.usize_or("adapters", 4)?;
+    let rate = args.f32_or("rate", 200.0)? as f64;
+    let zipf = args.f32_or("zipf", 1.1)? as f64;
+    let seed = args.usize_or("seed", 7)? as u64;
+
+    // Environment: trained adapters when --model is given, hermetic
+    // synthetic model otherwise.
+    let env = match args.opt("model") {
+        Some(model) => ScenarioEnv::from_artifacts(artifacts_dir(args), model)?,
+        None => ScenarioEnv::synth("cli", 4)?,
+    };
+
+    let mut faults = FaultPlan::default();
+    if let Some(ms) = args.opt("slow-merge-ms") {
+        let delay = Duration::from_millis(ms.parse().context("--slow-merge-ms: bad integer")?);
+        let adapter = args
+            .opt("slow-merge-adapter")
+            .map(|v| v.parse().context("--slow-merge-adapter: bad id"))
+            .transpose()?;
+        faults.slow_merge = Some(SlowMerge { adapter, delay });
+    }
+    if args.has_flag("churn") {
+        // a scripted mid-trace outage + arrival: remove tenant 0 a third
+        // of the way in, register a fresh tenant two thirds of the way in
+        let span = Duration::from_secs_f64(n_requests as f64 / rate.max(1e-9));
+        faults.churn = vec![
+            ChurnAction::Remove { at: span / 3, target: 0 },
+            ChurnAction::Register { at: span * 2 / 3, pool_index: 0 },
+        ];
+    }
+
+    let strategies: Vec<MergeStrategy> = match args.str_or("merge-strategy", "all").as_str() {
+        "all" => {
+            if cfg!(feature = "pjrt") {
+                vec![MergeStrategy::Merged]
+            } else {
+                vec![MergeStrategy::Merged, MergeStrategy::Factor, MergeStrategy::Auto]
+            }
+        }
+        s => vec![s.parse()?],
+    };
+
+    for strategy in strategies {
+        let spec = ScenarioSpec {
+            name: format!("serve-sim/{strategy}"),
+            mode: ClockMode::Virtual,
+            strategy,
+            workers: args.usize_or("workers", 1)?,
+            merge_workers: args.usize_or("merge-workers", 1)?,
+            buckets: args.usize_list_or("buckets", &[1, 8])?,
+            max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 5)? as u64),
+            cache_budget_bytes: args.usize_or("cache-kb", 64 << 10)? << 10,
+            n_adapters,
+            workload: WorkloadConfig { rate, zipf_alpha: zipf, n_requests, seed },
+            round_robin: args.has_flag("round-robin"),
+            prompt_seed: seed ^ 0x5eed,
+            max_new: args.usize_or("max-new", 2)?,
+            prefetch: args.has_flag("prefetch"),
+            faults: faults.clone(),
+        };
+        let run = run_scenario(&spec, &env)?;
+        print!("{}", run.summary.render());
+        if args.has_flag("log") {
+            print!("{}", run.log());
+        }
+        if let Some(path) = args.opt("golden") {
+            let file = format!("{path}.{strategy}.log");
+            std::fs::write(&file, run.log())?;
+            println!("wrote {file} ({} events)", run.events.len());
+        }
+        println!();
+    }
     Ok(())
 }
 

@@ -1,0 +1,163 @@
+//! The scenario event log: timestamped, canonically ordered, rendered as
+//! stable text lines — the unit golden-trace tests compare.
+
+use crate::coordinator::AdapterId;
+use std::time::Duration;
+
+/// One thing that happened during a scenario, at a scenario-clock offset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub t: Duration,
+    pub kind: EventKind,
+}
+
+/// Event payloads. Request indices are positions in the arrival trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// Adapter registered (at setup or via churn).
+    Register { adapter: AdapterId },
+    /// Adapter removed via churn.
+    Remove { adapter: AdapterId },
+    /// A merge began on a merge-pool thread (before any scripted delay).
+    MergeBegin { adapter: AdapterId },
+    /// Prefetch acknowledged for an adapter.
+    Prefetch { adapter: AdapterId, ok: bool },
+    /// Request submitted to the coordinator.
+    Submit { req: usize, adapter: AdapterId },
+    /// Request completed; `t` is the completion offset (submit + e2e).
+    Complete { req: usize, adapter: AdapterId, e2e: Duration, tokens: Vec<i32> },
+    /// Request failed (e.g. its adapter was churned away).
+    Fail { req: usize, adapter: AdapterId, error: String },
+}
+
+impl EventKind {
+    /// Rank for canonical ordering of same-instant events: registry
+    /// mutations before merges before submissions before completions.
+    fn rank(&self) -> u8 {
+        match self {
+            EventKind::Register { .. } => 0,
+            EventKind::Remove { .. } => 1,
+            EventKind::MergeBegin { .. } => 2,
+            EventKind::Prefetch { .. } => 3,
+            EventKind::Submit { .. } => 4,
+            EventKind::Complete { .. } => 5,
+            EventKind::Fail { .. } => 6,
+        }
+    }
+
+    fn adapter(&self) -> AdapterId {
+        match self {
+            EventKind::Register { adapter }
+            | EventKind::Remove { adapter }
+            | EventKind::MergeBegin { adapter }
+            | EventKind::Prefetch { adapter, .. }
+            | EventKind::Submit { adapter, .. }
+            | EventKind::Complete { adapter, .. }
+            | EventKind::Fail { adapter, .. } => *adapter,
+        }
+    }
+
+    fn req(&self) -> usize {
+        match self {
+            EventKind::Submit { req, .. }
+            | EventKind::Complete { req, .. }
+            | EventKind::Fail { req, .. } => *req,
+            _ => 0,
+        }
+    }
+}
+
+/// Canonical order: (time, kind rank, adapter, request index). Events
+/// recorded concurrently (e.g. merge hooks on pool threads) land in a
+/// reproducible order regardless of real-time interleaving.
+pub fn sort_canonical(events: &mut [Event]) {
+    events.sort_by_key(|e| (e.t, e.kind.rank(), e.kind.adapter(), e.kind.req()));
+}
+
+impl std::fmt::Display for Event {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let t_us = self.t.as_micros();
+        match &self.kind {
+            EventKind::Register { adapter } => write!(f, "{t_us:>10} register adapter={adapter}"),
+            EventKind::Remove { adapter } => write!(f, "{t_us:>10} remove   adapter={adapter}"),
+            EventKind::MergeBegin { adapter } => {
+                write!(f, "{t_us:>10} merge    adapter={adapter}")
+            }
+            EventKind::Prefetch { adapter, ok } => {
+                write!(f, "{t_us:>10} prefetch adapter={adapter} ok={ok}")
+            }
+            EventKind::Submit { req, adapter } => {
+                write!(f, "{t_us:>10} submit   req={req} adapter={adapter}")
+            }
+            EventKind::Complete { req, adapter, e2e, tokens } => {
+                let toks: Vec<String> = tokens.iter().map(i32::to_string).collect();
+                write!(
+                    f,
+                    "{t_us:>10} complete req={req} adapter={adapter} e2e_us={} tokens=[{}]",
+                    e2e.as_micros(),
+                    toks.join(",")
+                )
+            }
+            EventKind::Fail { req, adapter, error } => {
+                write!(f, "{t_us:>10} fail     req={req} adapter={adapter} error={error}")
+            }
+        }
+    }
+}
+
+/// Render a sorted event slice as one line per event.
+pub fn render(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_sort_is_total_and_stable_under_shuffle() {
+        let ms = Duration::from_millis;
+        let mut a = vec![
+            Event { t: ms(2), kind: EventKind::Submit { req: 1, adapter: 3 } },
+            Event { t: ms(1), kind: EventKind::MergeBegin { adapter: 2 } },
+            Event { t: ms(1), kind: EventKind::Register { adapter: 5 } },
+            Event { t: ms(1), kind: EventKind::MergeBegin { adapter: 1 } },
+            Event { t: ms(2), kind: EventKind::Submit { req: 0, adapter: 3 } },
+        ];
+        let mut b = a.clone();
+        b.reverse();
+        sort_canonical(&mut a);
+        sort_canonical(&mut b);
+        assert_eq!(a, b, "sort must not depend on input order");
+        assert_eq!(a[0].kind, EventKind::Register { adapter: 5 }, "registry first at t=1");
+        assert_eq!(a[1].kind, EventKind::MergeBegin { adapter: 1 }, "merges by adapter id");
+        assert_eq!(a[3].kind, EventKind::Submit { req: 0, adapter: 3 }, "submits by req index");
+    }
+
+    #[test]
+    fn rendering_is_line_per_event_and_stable() {
+        let events = vec![
+            Event { t: Duration::from_micros(1500), kind: EventKind::Submit { req: 0, adapter: 1 } },
+            Event {
+                t: Duration::from_micros(2500),
+                kind: EventKind::Complete {
+                    req: 0,
+                    adapter: 1,
+                    e2e: Duration::from_micros(1000),
+                    tokens: vec![5, 9],
+                },
+            },
+        ];
+        let s = render(&events);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("submit   req=0 adapter=1"));
+        assert!(lines[1].contains("e2e_us=1000 tokens=[5,9]"));
+        assert_eq!(render(&events), s, "rendering must be pure");
+    }
+}

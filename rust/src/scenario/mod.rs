@@ -1,0 +1,59 @@
+//! Deterministic serving scenarios: replay a multi-tenant workload trace
+//! through the full [`Coordinator`](crate::coordinator::Coordinator)
+//! under a **virtual clock**, with scripted faults, and get back a
+//! canonical event log + summary suitable for golden-trace assertions.
+//!
+//! The paper's deployment setting (§1/App. D — one frozen base model,
+//! many resident adapters) lives or dies on scheduling behavior: batch
+//! max-wait deadlines, cold-miss parking, the auto strategy's merge
+//! races. Those used to be testable only with real sleeps. Here the
+//! whole pipeline runs in simulated time:
+//!
+//! * [`spec`] — what to run: adapters × workload trace × execution
+//!   strategy × fault schedule ([`ScenarioSpec`], [`FaultPlan`]).
+//! * [`events`] — what happened: a timestamped, canonically-ordered
+//!   event log ([`Event`]) rendered as stable text lines.
+//! * [`sim`] — the driver: a discrete-event loop that advances a
+//!   [`VirtualClock`](crate::clock::VirtualClock) from event to event
+//!   (arrival, batch deadline, fault action, scripted merge wake),
+//!   quiescing the pool between advances so every timestamp is exactly
+//!   reproducible. The same driver also runs specs against the real
+//!   clock ([`ClockMode::RealTime`]) for throughput benches, so benches
+//!   and tests execute the same code path.
+//!
+//! ## Determinism contract
+//!
+//! Under [`ClockMode::Virtual`], two runs of the same spec produce
+//! byte-identical event logs, and per-request **token output** is
+//! additionally identical across worker-pool sizes (results, not
+//! schedule: the reference engine's forward is per-lane independent, so
+//! batch composition cannot change any request's tokens). One caveat:
+//! with `merge_workers > 1` *and* a cache small enough to thrash, the
+//! real-time completion order of concurrent merges can pick different
+//! LRU eviction victims — golden-trace specs that thrash the cache
+//! should pin `merge_workers: 1` (scripted-fault overlap is still
+//! observable through [`MergeStatsSnapshot`](crate::coordinator::MergeStatsSnapshot)).
+//!
+//! ## Fault injection points
+//!
+//! * **Slow merge** ([`SlowMerge`]) — the merge hook parks the merge
+//!   thread on the virtual clock for a scripted delay, modelling a
+//!   multi-second dequant+merge. Under `merged` the affected batches
+//!   park for the full delay; under `auto` they are served factor-form
+//!   with zero added virtual latency.
+//! * **Registry churn** ([`ChurnAction`]) — adapters registered/removed
+//!   mid-trace at scripted virtual times (arrivals for a removed tenant
+//!   fail fast; in-flight merges abort safely).
+//! * **Cache-budget thrash** — a spec-level `cache_budget_bytes` small
+//!   enough that resident adapters evict each other; decode correctness
+//!   must be unaffected (an adapter is never evicted mid-decode).
+//!
+//! See rust/DESIGN.md §9.
+
+pub mod events;
+pub mod sim;
+pub mod spec;
+
+pub use events::{Event, EventKind};
+pub use sim::{run_scenario, ScenarioRun, ScenarioSummary};
+pub use spec::{ChurnAction, ClockMode, FaultPlan, ScenarioEnv, ScenarioSpec, SlowMerge};

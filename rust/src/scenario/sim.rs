@@ -1,0 +1,609 @@
+//! The scenario driver: a discrete-event loop over the real coordinator.
+//!
+//! Under [`ClockMode::Virtual`] the driver owns the only way time moves.
+//! Its invariant: **the clock only advances while the pool is quiescent**
+//! — every request is either completed, queued behind a strictly-future
+//! batch deadline, or parked behind a merge that is itself parked on the
+//! virtual clock (a scripted slow merge). Quiescence is observed through
+//! the metrics barrier (a worker snapshot is taken *after* its release
+//! pass), the merge-pipeline counters, and the virtual clock's sleeper
+//! registry. Between quiescent points the driver advances the clock to
+//! the earliest next event — arrival, batch deadline, churn action, or
+//! scripted merge wake — so every timestamp in the event log is exact
+//! and reproducible.
+//!
+//! Real work (decode, ungated merges) takes **zero virtual time**: the
+//! clock does not move while it runs. Simulated latencies therefore
+//! isolate exactly the scheduling behavior — batching deadlines, parking,
+//! fault delays — which is what the golden traces pin.
+
+use super::events::{render, sort_canonical, Event, EventKind};
+use super::spec::{ChurnAction, ClockMode, ScenarioEnv, ScenarioSpec, SlowMerge};
+use crate::clock::{Clock, VirtualClock};
+use crate::coordinator::{
+    AdapterId, CacheStats, Coordinator, CoordinatorConfig, GenRequest, GenResponse, LatencyStats,
+    MergeHook, MergeStatsSnapshot, MergeStrategy, WorkerSnapshot,
+};
+use crate::eval::tasks::TOKENS;
+use crate::testutil::Rng;
+use crate::workload::{generate, Arrival};
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long (real time) the driver will wait for background progress
+/// (merges, thread wakeups) before declaring the scenario stalled.
+const STALL_TIMEOUT: Duration = Duration::from_secs(30);
+/// Real-time poll interval while waiting for background progress.
+const POLL: Duration = Duration::from_micros(200);
+
+type GenRx = mpsc::Receiver<anyhow::Result<GenResponse>>;
+type AckRx = mpsc::Receiver<anyhow::Result<()>>;
+
+/// Everything a scenario run produced.
+pub struct ScenarioRun {
+    /// Canonically-ordered event log.
+    pub events: Vec<Event>,
+    /// Per-request generated tokens (`None` = the request failed).
+    pub tokens: Vec<Option<Vec<i32>>>,
+    pub summary: ScenarioSummary,
+}
+
+impl ScenarioRun {
+    /// The golden-trace artifact: one stable text line per event.
+    pub fn log(&self) -> String {
+        render(&self.events)
+    }
+}
+
+/// Aggregate results of one scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioSummary {
+    pub name: String,
+    pub strategy: MergeStrategy,
+    pub workers: usize,
+    pub requests: usize,
+    pub ok: usize,
+    pub failed: usize,
+    /// Scenario-clock offset of the last completion.
+    pub makespan: Duration,
+    /// First submission → last completion (the throughput denominator:
+    /// excludes pool startup and registration).
+    pub trace_span: Duration,
+    /// End-to-end latency order statistics over completed requests.
+    pub latency: LatencyStats,
+    /// Per-adapter latency order statistics (registry id order).
+    pub per_adapter: Vec<(AdapterId, LatencyStats)>,
+    pub batches: u64,
+    pub factor_batches: u64,
+    pub mean_batch: f64,
+    pub tokens_generated: u64,
+    pub cache: CacheStats,
+    pub merges: MergeStatsSnapshot,
+    /// Real wall-clock time the whole run took (the virtual-clock payoff:
+    /// seconds of simulated trace in milliseconds of wall).
+    pub real_wall: Duration,
+}
+
+impl ScenarioSummary {
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "scenario {} | strategy={} workers={} | {}/{} ok ({} failed)\n\
+             makespan={:?} p50={:?} p95={:?} max={:?}\n\
+             batches={} (factor={}) mean_batch={:.2} tokens={}\n\
+             cache: hits={} misses={} evictions={} | merges: started={} peak_overlap={}\n\
+             real wall: {:?}\n",
+            self.name,
+            self.strategy,
+            self.workers,
+            self.ok,
+            self.requests,
+            self.failed,
+            self.makespan,
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.95),
+            self.latency.max(),
+            self.batches,
+            self.factor_batches,
+            self.mean_batch,
+            self.tokens_generated,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.evictions,
+            self.merges.started,
+            self.merges.peak_overlap,
+            self.real_wall,
+        );
+        for (id, stats) in &self.per_adapter {
+            out.push_str(&format!(
+                "  adapter {id}: n={} p50={:?} p95={:?} max={:?}\n",
+                stats.count(),
+                stats.quantile(0.5),
+                stats.quantile(0.95),
+                stats.max(),
+            ));
+        }
+        out
+    }
+}
+
+/// Replay `spec` through a full coordinator in `env`. See the module
+/// docs for the determinism contract.
+pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<ScenarioRun> {
+    let wall0 = Instant::now();
+    let vc = match spec.mode {
+        ClockMode::Virtual => Some(VirtualClock::new()),
+        ClockMode::RealTime => None,
+    };
+    let clock = vc.as_ref().map_or_else(Clock::real, Clock::virtual_from);
+    let origin = clock.now();
+    let events: Arc<Mutex<Vec<Event>>> = Arc::new(Mutex::new(Vec::new()));
+
+    // The merge hook records merge starts and applies the scripted slow
+    // merge by parking the merge thread on the scenario clock.
+    let hook = {
+        let events = Arc::clone(&events);
+        let clock = clock.clone();
+        let slow: Option<SlowMerge> = spec.faults.slow_merge;
+        MergeHook::new(move |id| {
+            let now = clock.now();
+            events
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(Event { t: now.duration_since(origin), kind: EventKind::MergeBegin { adapter: id } });
+            if let Some(sm) = slow {
+                if sm.adapter.is_none_or(|a| a == id) {
+                    clock.sleep_until(now + sm.delay);
+                }
+            }
+        })
+    };
+
+    let mut cfg = CoordinatorConfig::new(&env.artifacts, &env.model)
+        .with_workers(spec.workers)
+        .with_buckets(spec.buckets.clone())
+        .with_merge_strategy(spec.strategy)
+        .with_clock(clock.clone());
+    cfg.max_wait = spec.max_wait;
+    cfg.cache_budget_bytes = spec.cache_budget_bytes;
+    cfg.merge_workers = spec.merge_workers;
+    cfg.merge_hook = Some(hook);
+    let (coord, join) = Coordinator::start(cfg).context("starting scenario coordinator")?;
+
+    let mut driver = Driver {
+        spec,
+        env,
+        coord: &coord,
+        vc,
+        clock,
+        origin,
+        events,
+        ids: Vec::new(),
+        schedule: Vec::new(),
+        prompts: Vec::new(),
+        submit_offset: Vec::new(),
+        outstanding: Vec::new(),
+        tokens: Vec::new(),
+        e2e: Vec::new(),
+        submitted: 0,
+        completed: 0,
+        failed: 0,
+    };
+    let result = driver.run();
+    // Wake any merge thread still parked on the virtual clock (possible
+    // when bailing out mid-fault) so the pool can drain, then shut down.
+    if let Some(vc) = &driver.vc {
+        vc.advance(Duration::from_secs(1 << 20));
+    }
+    coord.shutdown();
+    drop(driver);
+    let run = result?;
+    let _ = join.join();
+
+    let mut run = run;
+    run.summary.real_wall = wall0.elapsed();
+    Ok(run)
+}
+
+struct Driver<'a> {
+    spec: &'a ScenarioSpec,
+    env: &'a ScenarioEnv,
+    coord: &'a Coordinator,
+    vc: Option<Arc<VirtualClock>>,
+    clock: Clock,
+    origin: Instant,
+    events: Arc<Mutex<Vec<Event>>>,
+    /// Initially-registered adapter ids (churn targets index into this).
+    ids: Vec<AdapterId>,
+    schedule: Vec<Arrival>,
+    prompts: Vec<Vec<i32>>,
+    /// Scenario-clock offset each request was submitted at.
+    submit_offset: Vec<Duration>,
+    outstanding: Vec<(usize, GenRx)>,
+    tokens: Vec<Option<Vec<i32>>>,
+    /// Completed requests' (adapter, e2e) for the summary.
+    e2e: Vec<(AdapterId, Duration)>,
+    submitted: usize,
+    completed: usize,
+    failed: usize,
+}
+
+impl Driver<'_> {
+    fn offset(&self) -> Duration {
+        self.clock.now().duration_since(self.origin)
+    }
+
+    fn push_event(&self, t: Duration, kind: EventKind) {
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).push(Event { t, kind });
+    }
+
+    fn run(&mut self) -> anyhow::Result<ScenarioRun> {
+        // ---- setup: register the tenant fleet ---------------------------
+        for i in 0..self.spec.n_adapters.max(1) {
+            let (task, ad) = &self.env.adapters[i % self.env.adapters.len()];
+            let id = self.coord.register_adapter(ad.clone(), task.clone())?;
+            self.push_event(self.offset(), EventKind::Register { adapter: id });
+            self.ids.push(id);
+        }
+        self.schedule = generate(&self.spec.workload, &self.ids);
+        if self.spec.round_robin {
+            for (i, arr) in self.schedule.iter_mut().enumerate() {
+                arr.adapter = self.ids[i % self.ids.len()];
+            }
+        }
+        let n = self.schedule.len();
+        let mut prng = Rng::new(self.spec.prompt_seed);
+        self.prompts = (0..n)
+            .map(|_| {
+                let d1 = TOKENS::DIGIT0 + prng.below(10) as i32;
+                let d2 = TOKENS::DIGIT0 + prng.below(10) as i32;
+                vec![TOKENS::BOS, d1, TOKENS::MARK, d2, TOKENS::SEP]
+            })
+            .collect();
+        self.submit_offset = vec![Duration::ZERO; n];
+        self.tokens = vec![None; n];
+
+        if self.spec.prefetch {
+            self.prefetch_all()?;
+        }
+        match self.spec.mode {
+            ClockMode::Virtual => self.replay_virtual()?,
+            ClockMode::RealTime => self.replay_real()?,
+        }
+        self.finish()
+    }
+
+    /// Whether the merge pipeline can make no further progress at the
+    /// current virtual time. `worker_inflight` is the worker-side count
+    /// (submit → `Merged` ingested); `mstats.inflight` the pool-side
+    /// count (dequeue → done-callback fired). Settled means every
+    /// dequeued merge is parked on the clock, and any job still *queued*
+    /// (worker-side > pool-side) is blocked because every merge thread
+    /// is occupied by a sleeper — a queued job with a free thread, or a
+    /// completion awaiting ingest, is real-time progress: keep polling.
+    fn merges_settled(
+        &self,
+        worker_inflight: usize,
+        sleepers: usize,
+        mstats: &MergeStatsSnapshot,
+    ) -> bool {
+        let pool_threads = self.spec.merge_workers.max(1);
+        let undequeued = worker_inflight.saturating_sub(mstats.inflight);
+        mstats.inflight == sleepers
+            && (undequeued == 0 || mstats.inflight >= pool_threads)
+            && worker_inflight >= mstats.inflight
+    }
+
+    // ---- prefetch ------------------------------------------------------
+
+    fn prefetch_all(&mut self) -> anyhow::Result<()> {
+        let mut pending: Vec<(AdapterId, AckRx)> =
+            self.ids.iter().map(|&id| (id, self.coord.prefetch(id))).collect();
+        let t0 = Instant::now();
+        while !pending.is_empty() {
+            pending.retain(|(id, rx)| match rx.try_recv() {
+                Ok(res) => {
+                    self.push_event(
+                        self.offset(),
+                        EventKind::Prefetch { adapter: *id, ok: res.is_ok() },
+                    );
+                    false
+                }
+                Err(mpsc::TryRecvError::Empty) => true,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.push_event(self.offset(), EventKind::Prefetch { adapter: *id, ok: false });
+                    false
+                }
+            });
+            if pending.is_empty() {
+                break;
+            }
+            if let Some(vc) = self.vc.as_ref().map(Arc::clone) {
+                // A scripted slow merge can gate prefetch too: when the
+                // merge pipeline is settled with threads parked on the
+                // clock, advance to the earliest wake; otherwise real
+                // host work is still running — poll.
+                let snaps = self.coord.metrics_per_worker()?;
+                let inflight: usize = snaps.iter().map(|s| s.inflight_merges).sum();
+                let (sleepers, earliest) = vc.sleepers();
+                let mstats = self.coord.merge_stats();
+                if sleepers > 0 && self.merges_settled(inflight, sleepers, &mstats) {
+                    if let Some(t) = earliest {
+                        vc.advance_to(t);
+                    }
+                } else {
+                    std::thread::sleep(POLL);
+                }
+            } else {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            if t0.elapsed() > STALL_TIMEOUT {
+                bail!("prefetch stalled: {} adapters never acked", pending.len());
+            }
+        }
+        Ok(())
+    }
+
+    // ---- virtual-time replay (discrete-event loop) ---------------------
+
+    fn replay_virtual(&mut self) -> anyhow::Result<()> {
+        let vc = Arc::clone(self.vc.as_ref().expect("virtual replay needs a virtual clock"));
+        let churn = self.spec.sorted_churn();
+        let (mut next_arrival, mut next_churn) = (0usize, 0usize);
+        loop {
+            let snaps = self.quiesce(&vc)?;
+            // Earliest next event: arrival, churn action, batch deadline,
+            // or scripted merge wake.
+            let now_off = vc.elapsed();
+            let mut cand: Option<Duration> = None;
+            let mut consider = |t: Duration| {
+                cand = Some(cand.map_or(t, |c: Duration| c.min(t)));
+            };
+            if next_arrival < self.schedule.len() {
+                consider(self.schedule[next_arrival].at);
+            }
+            if next_churn < churn.len() {
+                consider(churn[next_churn].at());
+            }
+            for s in &snaps {
+                if let Some(d) = s.next_release_in {
+                    consider(now_off + d);
+                }
+            }
+            let (sleepers, earliest) = vc.sleepers();
+            if sleepers > 0 {
+                if let Some(t) = earliest {
+                    consider(t);
+                }
+            }
+            let Some(t) = cand else {
+                if self.outstanding.is_empty() {
+                    return Ok(());
+                }
+                bail!(
+                    "scenario stalled at t={now_off:?}: {} requests outstanding with no \
+                     future event",
+                    self.outstanding.len()
+                );
+            };
+            vc.advance_to(t.max(now_off));
+            // Same-instant ordering: force every worker's release pass at
+            // the new time before churn or arrivals at that instant, so a
+            // deadline tying an arrival releases deterministically first.
+            let _ = self.coord.metrics_per_worker()?;
+            while next_churn < churn.len() && churn[next_churn].at() <= vc.elapsed() {
+                self.apply_churn(&churn[next_churn])?;
+                next_churn += 1;
+            }
+            while next_arrival < self.schedule.len()
+                && self.schedule[next_arrival].at <= vc.elapsed()
+            {
+                self.submit(next_arrival);
+                next_arrival += 1;
+            }
+        }
+    }
+
+    /// Poll metrics barriers until the pool can make no further progress
+    /// at the current virtual time. Each barrier wakes every worker,
+    /// forces its release pass, and snapshots post-release state; the
+    /// merge counters and the clock's sleeper registry distinguish "merge
+    /// still running on real time" (keep polling) from "merge parked on
+    /// the virtual clock" (quiescent, time-blocked).
+    fn quiesce(&mut self, vc: &VirtualClock) -> anyhow::Result<Vec<WorkerSnapshot>> {
+        let t0 = Instant::now();
+        loop {
+            let snaps = self.coord.metrics_per_worker()?;
+            self.drain_responses();
+            let queued: usize = snaps.iter().map(|s| s.queued_requests).sum();
+            let parked: usize = snaps.iter().map(|s| s.parked_requests).sum();
+            let inflight: usize = snaps.iter().map(|s| s.inflight_merges).sum();
+            let (sleepers, _) = vc.sleepers();
+            let mstats = self.coord.merge_stats();
+            let accounted = self.completed + queued + parked == self.submitted;
+            let merges_settled = self.merges_settled(inflight, sleepers, &mstats);
+            if accounted && merges_settled {
+                return Ok(snaps);
+            }
+            if t0.elapsed() > STALL_TIMEOUT {
+                bail!(
+                    "quiesce stalled: submitted={} completed={} queued={queued} \
+                     parked={parked} inflight={inflight} sleepers={sleepers} \
+                     pool_inflight={}",
+                    self.submitted,
+                    self.completed,
+                    mstats.inflight,
+                );
+            }
+            std::thread::sleep(POLL);
+        }
+    }
+
+    // ---- real-time replay ----------------------------------------------
+
+    fn replay_real(&mut self) -> anyhow::Result<()> {
+        let churn = self.spec.sorted_churn();
+        let (mut next_arrival, mut next_churn) = (0usize, 0usize);
+        let t_start = self.clock.now();
+        while next_arrival < self.schedule.len() || next_churn < churn.len() {
+            let t_a = self.schedule.get(next_arrival).map(|a| a.at);
+            let t_c = churn.get(next_churn).map(ChurnAction::at);
+            let due = match (t_a, t_c) {
+                (Some(a), Some(c)) => a.min(c),
+                (Some(a), None) => a,
+                (None, Some(c)) => c,
+                (None, None) => break,
+            };
+            let elapsed = self.clock.now().duration_since(t_start);
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+            if t_c.is_some_and(|c| c <= due) {
+                self.apply_churn(&churn[next_churn])?;
+                next_churn += 1;
+            } else {
+                self.submit(next_arrival);
+                next_arrival += 1;
+            }
+        }
+        // Collect every outstanding response (blocking).
+        let pending = std::mem::take(&mut self.outstanding);
+        for (idx, rx) in pending {
+            match rx.recv_timeout(STALL_TIMEOUT) {
+                Ok(res) => self.record_response(idx, res),
+                Err(_) => {
+                    self.record_response(idx, Err(anyhow::anyhow!("response timed out")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- shared mechanics ----------------------------------------------
+
+    fn submit(&mut self, idx: usize) {
+        let adapter = self.schedule[idx].adapter;
+        let off = self.offset();
+        self.submit_offset[idx] = off;
+        self.push_event(off, EventKind::Submit { req: idx, adapter });
+        let rx = self.coord.generate_async(GenRequest {
+            adapter,
+            prompt: self.prompts[idx].clone(),
+            max_new: self.spec.max_new,
+        });
+        self.outstanding.push((idx, rx));
+        self.submitted += 1;
+    }
+
+    fn apply_churn(&mut self, action: &ChurnAction) -> anyhow::Result<()> {
+        match *action {
+            ChurnAction::Register { pool_index, .. } => {
+                let (task, ad) = &self.env.adapters[pool_index % self.env.adapters.len()];
+                let id = self.coord.register_adapter(ad.clone(), task.clone())?;
+                self.push_event(self.offset(), EventKind::Register { adapter: id });
+            }
+            ChurnAction::Remove { target, .. } => {
+                let id = self.ids[target % self.ids.len()];
+                let _ = self.coord.remove_adapter(id)?;
+                self.push_event(self.offset(), EventKind::Remove { adapter: id });
+            }
+        }
+        Ok(())
+    }
+
+    fn drain_responses(&mut self) {
+        let mut still = Vec::with_capacity(self.outstanding.len());
+        for (idx, rx) in std::mem::take(&mut self.outstanding) {
+            match rx.try_recv() {
+                Ok(res) => self.record_response(idx, res),
+                Err(mpsc::TryRecvError::Empty) => still.push((idx, rx)),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.record_response(idx, Err(anyhow::anyhow!("responder dropped")));
+                }
+            }
+        }
+        self.outstanding = still;
+    }
+
+    fn record_response(&mut self, idx: usize, res: anyhow::Result<GenResponse>) {
+        let adapter = self.schedule[idx].adapter;
+        match res {
+            Ok(resp) => {
+                // Completion instant = submission + worker-measured e2e:
+                // exact under the virtual clock, consistent in real time.
+                let t = self.submit_offset[idx] + resp.e2e;
+                self.push_event(
+                    t,
+                    EventKind::Complete {
+                        req: idx,
+                        adapter,
+                        e2e: resp.e2e,
+                        tokens: resp.tokens.clone(),
+                    },
+                );
+                self.e2e.push((adapter, resp.e2e));
+                self.tokens[idx] = Some(resp.tokens);
+            }
+            Err(e) => {
+                self.push_event(
+                    self.offset(),
+                    EventKind::Fail { req: idx, adapter, error: format!("{e:#}") },
+                );
+                self.failed += 1;
+            }
+        }
+        self.completed += 1;
+    }
+
+    fn finish(&mut self) -> anyhow::Result<ScenarioRun> {
+        let (m, cache, _) = self.coord.metrics()?;
+        let merges = self.coord.merge_stats();
+        let mut events = {
+            let mut guard = self.events.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *guard)
+        };
+        sort_canonical(&mut events);
+        let makespan = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Complete { .. }))
+            .map(|e| e.t)
+            .max()
+            .unwrap_or(Duration::ZERO);
+        let first_submit = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Submit { .. }))
+            .map(|e| e.t)
+            .min()
+            .unwrap_or(Duration::ZERO);
+        let all: Vec<Duration> = self.e2e.iter().map(|&(_, d)| d).collect();
+        let mut by_adapter: BTreeMap<AdapterId, Vec<Duration>> = BTreeMap::new();
+        for &(id, d) in &self.e2e {
+            by_adapter.entry(id).or_default().push(d);
+        }
+        let summary = ScenarioSummary {
+            name: self.spec.name.clone(),
+            strategy: self.spec.strategy,
+            workers: self.spec.workers.max(1),
+            requests: self.schedule.len(),
+            ok: self.e2e.len(),
+            failed: self.failed,
+            makespan,
+            trace_span: makespan.saturating_sub(first_submit),
+            latency: LatencyStats::from_samples(&all),
+            per_adapter: by_adapter
+                .into_iter()
+                .map(|(id, ds)| (id, LatencyStats::from_samples(&ds)))
+                .collect(),
+            batches: m.batches,
+            factor_batches: m.factor_batches,
+            mean_batch: m.mean_batch_size(),
+            tokens_generated: m.tokens_generated,
+            cache,
+            merges,
+            real_wall: Duration::ZERO, // stamped by run_scenario
+        };
+        Ok(ScenarioRun { events, tokens: std::mem::take(&mut self.tokens), summary })
+    }
+}

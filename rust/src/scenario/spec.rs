@@ -1,0 +1,276 @@
+//! Scenario specification: adapters × workload × strategy × faults.
+
+use crate::adapter::LoraAdapter;
+use crate::coordinator::{AdapterId, MergeStrategy, StoredAdapter};
+use crate::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
+use crate::testutil::{synth_model_config, synth_quantized_adapter, write_synth_model};
+use crate::workload::WorkloadConfig;
+use anyhow::Context;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Which timeline the scenario runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClockMode {
+    /// Deterministic discrete-event simulation on a virtual clock: a
+    /// multi-second trace replays in milliseconds of wall clock and the
+    /// event log is byte-reproducible.
+    #[default]
+    Virtual,
+    /// Real clock, real sleeps: for throughput/speedup numbers where
+    /// actual execution time is the measurement.
+    RealTime,
+}
+
+/// A scripted slow merge: every merge for `adapter` (or every merge at
+/// all when `None`) blocks for `delay` on the scenario clock before the
+/// real dequant+merge runs.
+#[derive(Debug, Clone, Copy)]
+pub struct SlowMerge {
+    pub adapter: Option<AdapterId>,
+    pub delay: Duration,
+}
+
+/// A scripted registry mutation at a virtual offset from trace start.
+#[derive(Debug, Clone, Copy)]
+pub enum ChurnAction {
+    /// Register one more adapter (cloned from the environment pool by
+    /// index) at time `at`.
+    Register { at: Duration, pool_index: usize },
+    /// Remove the `target`-th initially-registered adapter at time `at`
+    /// (its remaining arrivals fail fast — the scripted outage).
+    Remove { at: Duration, target: usize },
+}
+
+impl ChurnAction {
+    pub fn at(&self) -> Duration {
+        match *self {
+            ChurnAction::Register { at, .. } | ChurnAction::Remove { at, .. } => at,
+        }
+    }
+}
+
+/// The fault schedule riding on a scenario.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub slow_merge: Option<SlowMerge>,
+    /// Registry churn, applied in `at` order.
+    pub churn: Vec<ChurnAction>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.slow_merge.is_none() && self.churn.is_empty()
+    }
+}
+
+/// A complete scenario: pool shape, tenant count, workload trace,
+/// execution strategy and fault schedule. `Default` is a small 4-tenant
+/// Zipf trace on one worker under the virtual clock.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub mode: ClockMode,
+    pub strategy: MergeStrategy,
+    pub workers: usize,
+    pub merge_workers: usize,
+    pub buckets: Vec<usize>,
+    pub max_wait: Duration,
+    pub cache_budget_bytes: usize,
+    /// Tenants registered before the trace starts (cycling the
+    /// environment's adapter pool).
+    pub n_adapters: usize,
+    /// Arrival trace (Poisson rate × Zipf popularity × request count).
+    pub workload: WorkloadConfig,
+    /// Override the Zipf adapter mix with strict round-robin (adjacent
+    /// arrivals never share an adapter — the worst case for per-adapter
+    /// batching, the best case for factor-form mixed batches). Arrival
+    /// *times* still come from `workload`.
+    pub round_robin: bool,
+    /// Seed for per-request prompt variation.
+    pub prompt_seed: u64,
+    /// Max new tokens per request.
+    pub max_new: usize,
+    /// Warm every adapter's merged weights before the trace.
+    pub prefetch: bool,
+    pub faults: FaultPlan,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            mode: ClockMode::Virtual,
+            strategy: MergeStrategy::Merged,
+            workers: 1,
+            merge_workers: 1,
+            // the buckets aot.py actually exports, so specs run unchanged
+            // against real PJRT artifacts
+            buckets: vec![1, 8],
+            max_wait: Duration::from_millis(5),
+            cache_budget_bytes: 64 << 20,
+            n_adapters: 4,
+            workload: WorkloadConfig { rate: 200.0, zipf_alpha: 1.1, n_requests: 64, seed: 7 },
+            round_robin: false,
+            prompt_seed: 11,
+            max_new: 2,
+            prefetch: false,
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Builder sugar.
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    pub fn with_strategy(mut self, strategy: MergeStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: ClockMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Churn actions sorted by time (the driver consumes them in order).
+    pub(crate) fn sorted_churn(&self) -> Vec<ChurnAction> {
+        let mut churn = self.faults.churn.clone();
+        churn.sort_by_key(ChurnAction::at);
+        churn
+    }
+}
+
+/// Where a scenario runs: an artifacts directory, a model name, and a
+/// pool of pre-built adapters to register (cycled when the spec asks for
+/// more tenants than the pool holds). Built either from real
+/// `make artifacts` output or synthesized hermetically.
+pub struct ScenarioEnv {
+    pub artifacts: PathBuf,
+    pub model: String,
+    pub adapters: Vec<(String, StoredAdapter)>,
+    /// Temp dir owned by this env (removed on drop).
+    cleanup: Option<PathBuf>,
+}
+
+impl ScenarioEnv {
+    /// Wrap existing artifacts + adapters (nothing owned).
+    pub fn new(
+        artifacts: impl Into<PathBuf>,
+        model: impl Into<String>,
+        adapters: Vec<(String, StoredAdapter)>,
+    ) -> Self {
+        Self { artifacts: artifacts.into(), model: model.into(), adapters, cleanup: None }
+    }
+
+    /// Build the standard adapter pool from trained `make artifacts`
+    /// output: one LoRAQuant(2@0.9) adapter per task. Shared by the
+    /// `serve-sim` CLI and `bench_serving` so every entry point serves
+    /// the same adapters.
+    pub fn from_artifacts(
+        artifacts: impl Into<PathBuf>,
+        model: impl Into<String>,
+    ) -> anyhow::Result<Self> {
+        let artifacts = artifacts.into();
+        let model = model.into();
+        let qcfg = LoraQuantConfig::variant(2, 0.9);
+        let mut adapters = Vec::new();
+        for task in crate::eval::tasks::TASKS {
+            let lora =
+                LoraAdapter::load(artifacts.join(&model).join(format!("{task}.lora.bin")))
+                    .with_context(|| format!("loading trained adapter for task {task}"))?;
+            let mut q = QuantizedLora::default();
+            for (site, (a, b)) in &lora.sites {
+                q.sites.insert(site.clone(), quantize_site(b, a, &qcfg));
+            }
+            adapters.push((task.to_string(), StoredAdapter::Quantized(q)));
+        }
+        Ok(Self { artifacts, model, adapters, cleanup: None })
+    }
+
+    /// Synthesize a tiny model + `n_adapters` quantized adapters in a
+    /// fresh temp directory (reference engine only). The directory is
+    /// removed when the env drops.
+    pub fn synth(tag: &str, n_adapters: usize) -> anyhow::Result<Self> {
+        // (tag, pid, counter): two live envs sharing a tag in one process
+        // must not clobber each other's model files
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("lq_scenario_{tag}_{}_{seq}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[1, 4, 8], 17)
+            .context("writing synthetic scenario model")?;
+        let adapters = (0..n_adapters.max(1))
+            .map(|i| (format!("task{i}"), synth_quantized_adapter(&cfg, 100 + i as u64)))
+            .collect();
+        Ok(Self {
+            artifacts: dir.clone(),
+            model: "synth".into(),
+            adapters,
+            cleanup: Some(dir),
+        })
+    }
+}
+
+impl Drop for ScenarioEnv {
+    fn drop(&mut self) {
+        if let Some(dir) = &self.cleanup {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_virtual_and_small() {
+        let s = ScenarioSpec::default();
+        assert_eq!(s.mode, ClockMode::Virtual);
+        assert!(s.n_adapters >= 1);
+        assert!(s.workload.n_requests > 0);
+        assert!(s.faults.is_empty());
+    }
+
+    #[test]
+    fn churn_sorts_by_time() {
+        let spec = ScenarioSpec {
+            faults: FaultPlan {
+                slow_merge: None,
+                churn: vec![
+                    ChurnAction::Remove { at: Duration::from_millis(30), target: 0 },
+                    ChurnAction::Register { at: Duration::from_millis(10), pool_index: 1 },
+                ],
+            },
+            ..Default::default()
+        };
+        let sorted = spec.sorted_churn();
+        assert_eq!(sorted[0].at(), Duration::from_millis(10));
+        assert_eq!(sorted[1].at(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn synth_env_builds_and_cleans_up() {
+        let dir;
+        {
+            let env = ScenarioEnv::synth("spec_unit", 3).unwrap();
+            dir = env.artifacts.clone();
+            assert!(dir.join("synth").join("base.bin").exists());
+            assert_eq!(env.adapters.len(), 3);
+        }
+        assert!(!dir.exists(), "env must remove its temp dir on drop");
+    }
+}

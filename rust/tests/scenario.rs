@@ -1,0 +1,265 @@
+//! Deterministic scenario-harness tests (DESIGN.md §9).
+//!
+//! Everything here runs the **full coordinator** — pool, batcher, merge
+//! pipeline, cache — under a virtual clock, so every assertion is about
+//! simulated time and scripted faults. No assertion depends on real
+//! `Instant` arithmetic or `thread::sleep`; the only wall-clock check is
+//! the acceptance bound that the whole virtual replay is fast.
+//!
+//! Reference engine only: the synthetic scenario environment has no HLO
+//! artifacts for the PJRT backend.
+#![cfg(not(feature = "pjrt"))]
+
+use loraquant::coordinator::MergeStrategy;
+use loraquant::scenario::{
+    run_scenario, ChurnAction, ClockMode, EventKind, FaultPlan, ScenarioEnv, ScenarioSpec,
+    SlowMerge,
+};
+use loraquant::workload::WorkloadConfig;
+use std::time::{Duration, Instant};
+
+/// The acceptance trace: 4 tenants, Zipf-skewed arrivals, ≥ 200 requests.
+fn acceptance_spec(strategy: MergeStrategy) -> ScenarioSpec {
+    ScenarioSpec {
+        name: format!("acceptance/{strategy}"),
+        strategy,
+        workload: WorkloadConfig { rate: 400.0, zipf_alpha: 1.1, n_requests: 220, seed: 7 },
+        ..Default::default()
+    }
+}
+
+/// Acceptance: a full 4-tenant Zipf trace replays through all three
+/// strategies under virtual time, fast, with byte-identical event logs
+/// across two consecutive runs.
+#[test]
+fn golden_trace_identical_across_runs_and_fast() {
+    let env = ScenarioEnv::synth("golden", 4).unwrap();
+    let wall0 = Instant::now();
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor, MergeStrategy::Auto] {
+        let spec = acceptance_spec(strategy);
+        let a = run_scenario(&spec, &env).unwrap();
+        let b = run_scenario(&spec, &env).unwrap();
+        assert_eq!(a.summary.requests, 220);
+        assert_eq!(a.summary.ok, 220, "{strategy}: every request must complete");
+        assert!(!a.log().is_empty());
+        assert_eq!(a.log(), b.log(), "{strategy}: golden event log must be reproducible");
+        assert_eq!(a.tokens, b.tokens, "{strategy}: token outputs must be reproducible");
+        // structural sanity: one submit and one completion per request
+        let submits = a.events.iter().filter(|e| matches!(e.kind, EventKind::Submit { .. })).count();
+        let completes =
+            a.events.iter().filter(|e| matches!(e.kind, EventKind::Complete { .. })).count();
+        assert_eq!((submits, completes), (220, 220));
+    }
+    // ≥ 200 requests × 3 strategies × 2 runs of a multi-hundred-ms trace,
+    // replayed in well under 5 s of wall clock.
+    assert!(
+        wall0.elapsed() < Duration::from_secs(5),
+        "virtual replay too slow: {:?}",
+        wall0.elapsed()
+    );
+}
+
+/// Determinism of *results*, not schedule: per-request token output is
+/// identical across pool sizes (routing and batch composition change,
+/// but the reference forward is per-lane independent).
+#[test]
+fn token_outputs_identical_across_worker_counts() {
+    let env = ScenarioEnv::synth("workers", 4).unwrap();
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor] {
+        let one = run_scenario(&acceptance_spec(strategy).with_workers(1), &env).unwrap();
+        let four = run_scenario(&acceptance_spec(strategy).with_workers(4), &env).unwrap();
+        assert_eq!(one.summary.ok, 220);
+        assert_eq!(four.summary.ok, 220);
+        assert_eq!(
+            one.tokens, four.tokens,
+            "{strategy}: per-request tokens must not depend on pool size"
+        );
+    }
+}
+
+/// With no faults, virtual end-to-end latency is pure scheduling delay:
+/// decode and (ungated) merges take zero virtual time, so no request can
+/// ever wait longer than the batcher's max-wait deadline.
+#[test]
+fn unfaulted_latency_is_bounded_by_max_wait() {
+    let env = ScenarioEnv::synth("latbound", 4).unwrap();
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor, MergeStrategy::Auto] {
+        for workers in [1usize, 3] {
+            let spec = acceptance_spec(strategy).with_workers(workers);
+            let run = run_scenario(&spec, &env).unwrap();
+            assert_eq!(run.summary.ok, run.summary.requests);
+            assert!(
+                run.summary.latency.max() <= spec.max_wait,
+                "{strategy}/w{workers}: max e2e {:?} exceeds max_wait {:?}",
+                run.summary.latency.max(),
+                spec.max_wait
+            );
+        }
+    }
+}
+
+/// Fault injection: under a scripted 50 ms slow merge, `merged` parks the
+/// cold batches for the full delay while `auto` serves them factor-form
+/// with **zero added virtual latency**.
+#[test]
+fn slow_merge_parks_merged_but_not_auto() {
+    let env = ScenarioEnv::synth("slowmerge", 2).unwrap();
+    let delay = Duration::from_millis(50);
+    let spec = |strategy| ScenarioSpec {
+        name: format!("slow/{strategy}"),
+        strategy,
+        n_adapters: 1,
+        round_robin: true,
+        // bucket 4 = the request count: the batch releases on bucket-full
+        // at the 4th (near-instant) arrival, not at the max-wait deadline
+        buckets: vec![1, 4],
+        workload: WorkloadConfig { rate: 1e9, zipf_alpha: 0.0, n_requests: 4, seed: 3 },
+        faults: FaultPlan { slow_merge: Some(SlowMerge { adapter: None, delay }), churn: vec![] },
+        ..Default::default()
+    };
+
+    let merged = run_scenario(&spec(MergeStrategy::Merged), &env).unwrap();
+    assert_eq!(merged.summary.ok, 4);
+    assert!(
+        merged.summary.latency.quantile(0.0) >= delay,
+        "merged: cold batch must park for the scripted merge ({:?})",
+        merged.summary.latency.quantile(0.0)
+    );
+    assert_eq!(merged.summary.merges.started, 1, "one merge for the one adapter");
+
+    let auto = run_scenario(&spec(MergeStrategy::Auto), &env).unwrap();
+    assert_eq!(auto.summary.ok, 4);
+    assert!(
+        auto.summary.latency.max() < Duration::from_millis(1),
+        "auto: cold requests must be served factor-form instantly, got {:?}",
+        auto.summary.latency.max()
+    );
+    assert!(auto.summary.factor_batches >= 1, "cold batch decoded factor-form");
+    assert_eq!(auto.summary.merges.started, 1, "background merge still warmed the cache");
+    // the background merge began while requests were already being
+    // answered: its MergeBegin is in the log at the batch-release instant
+    assert!(auto.events.iter().any(|e| matches!(e.kind, EventKind::MergeBegin { .. })));
+    // both fault runs are themselves golden
+    let merged2 = run_scenario(&spec(MergeStrategy::Merged), &env).unwrap();
+    assert_eq!(merged.log(), merged2.log(), "fault-injected trace must be reproducible");
+}
+
+/// Cache-budget thrash + registry churn: with a budget that holds ~one
+/// merged adapter, eight tenants evict each other constantly and fresh
+/// tenants register mid-trace — yet no request ever fails: an adapter is
+/// never evicted mid-decode, and every miss re-merges.
+#[test]
+fn cache_thrash_with_churn_never_breaks_decode() {
+    let env = ScenarioEnv::synth("thrash", 8).unwrap();
+    let spec = ScenarioSpec {
+        name: "thrash".into(),
+        strategy: MergeStrategy::Merged,
+        n_adapters: 8,
+        // ~one synthetic merged weight set (≈ 50 KB): constant eviction
+        cache_budget_bytes: 64 << 10,
+        workload: WorkloadConfig { rate: 400.0, zipf_alpha: 0.3, n_requests: 200, seed: 29 },
+        faults: FaultPlan {
+            slow_merge: None,
+            churn: vec![
+                ChurnAction::Register { at: Duration::from_millis(100), pool_index: 1 },
+                ChurnAction::Register { at: Duration::from_millis(250), pool_index: 2 },
+            ],
+        },
+        ..Default::default()
+    };
+    let a = run_scenario(&spec, &env).unwrap();
+    assert_eq!(a.summary.ok, 200, "thrash must never fail a request: {} failed", a.summary.failed);
+    assert!(a.summary.cache.evictions > 0, "budget was supposed to thrash");
+    assert!(a.summary.merges.started as usize > 8, "evicted adapters must re-merge on return");
+    let registers =
+        a.events.iter().filter(|e| matches!(e.kind, EventKind::Register { .. })).count();
+    assert_eq!(registers, 10, "8 initial + 2 churned-in");
+    // thrash + churn is still golden (merge_workers = 1 pins LRU order)
+    let b = run_scenario(&spec, &env).unwrap();
+    assert_eq!(a.log(), b.log(), "thrash trace must be reproducible");
+}
+
+/// Removing a tenant mid-trace fails its remaining arrivals fast, is
+/// visible in the event log, and leaves every other tenant unharmed.
+#[test]
+fn mid_trace_remove_fails_fast_and_spares_other_tenants() {
+    let env = ScenarioEnv::synth("remove", 4).unwrap();
+    let spec = ScenarioSpec {
+        name: "remove".into(),
+        n_adapters: 4,
+        round_robin: true, // every tenant keeps arriving all trace long
+        workload: WorkloadConfig { rate: 200.0, zipf_alpha: 0.0, n_requests: 120, seed: 13 },
+        faults: FaultPlan {
+            slow_merge: None,
+            churn: vec![ChurnAction::Remove { at: Duration::from_millis(150), target: 0 }],
+        },
+        ..Default::default()
+    };
+    let run = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.summary.ok + run.summary.failed, 120, "every request accounted for");
+    assert!(run.summary.failed > 0, "the removed tenant's arrivals must fail");
+    assert!(run.events.iter().any(|e| matches!(e.kind, EventKind::Remove { adapter: 0 })));
+    // all failures name the removed adapter (rejected at submit, or
+    // already queued/merging when the registry entry vanished)
+    for e in &run.events {
+        if let EventKind::Fail { adapter, error, .. } = &e.kind {
+            assert_eq!(*adapter, 0, "only the removed tenant may fail");
+            assert!(error.contains("adapter 0"), "unexpected failure: {error}");
+        }
+    }
+    let per_tenant_ok: Vec<usize> = (0..4)
+        .map(|id| {
+            run.events
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Complete { adapter, .. } if adapter == id))
+                .count()
+        })
+        .collect();
+    assert_eq!(per_tenant_ok[1], 30, "tenant 1 sees all 30 of its arrivals");
+    assert_eq!(per_tenant_ok[2], 30);
+    assert_eq!(per_tenant_ok[3], 30);
+    // reproducible including the scripted outage
+    let again = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.log(), again.log());
+}
+
+/// Prefetch under virtual time: warmed adapters never miss on the
+/// request path, and the acks appear in the event log.
+#[test]
+fn virtual_prefetch_eliminates_request_path_misses() {
+    let env = ScenarioEnv::synth("vprefetch", 4).unwrap();
+    let spec = ScenarioSpec {
+        name: "vprefetch".into(),
+        n_adapters: 4,
+        prefetch: true,
+        workload: WorkloadConfig { rate: 400.0, zipf_alpha: 1.1, n_requests: 64, seed: 17 },
+        ..Default::default()
+    };
+    let run = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.summary.ok, 64);
+    assert_eq!(run.summary.cache.misses, 0, "prefetched adapters must not miss");
+    let acks = run
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Prefetch { ok: true, .. }))
+        .count();
+    assert_eq!(acks, 4);
+}
+
+/// The real-time mode drives the same spec type through the same code
+/// path (the bench entry point) — smoke-check it end to end.
+#[test]
+fn real_time_mode_smoke() {
+    let env = ScenarioEnv::synth("realtime", 4).unwrap();
+    let spec = ScenarioSpec {
+        name: "realtime".into(),
+        mode: ClockMode::RealTime,
+        n_adapters: 4,
+        workload: WorkloadConfig { rate: 1e9, zipf_alpha: 0.0, n_requests: 16, seed: 19 },
+        ..Default::default()
+    };
+    let run = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.summary.ok, 16);
+    assert!(run.summary.trace_span <= run.summary.makespan);
+    assert!(run.tokens.iter().all(Option::is_some));
+}
