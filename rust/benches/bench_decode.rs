@@ -1,0 +1,147 @@
+//! Decode benchmark (DESIGN.md §10): the KV-cache payoff, measured.
+//!
+//! Three questions, one JSON snapshot (`BENCH_decode.json`, uploaded as
+//! a CI artifact next to `BENCH_serving.json`):
+//!
+//! 1. **Per-step decode cost vs sequence length** — incremental
+//!    (`prefill` + `decode_step`) against the full-recompute oracle.
+//!    The incremental path should stay roughly flat in `T` (its per-step
+//!    work is O(L·T·d) with the attention term tiny next to the fixed
+//!    projections), while the oracle's full forward grows ~linearly in
+//!    `T` per step (O(L·T·d²) projections, O(L·T²·d) attention).
+//! 2. The same comparison on the **factor path** (2-bit adapter applied
+//!    on the activation row each step) — the per-step adapter overhead
+//!    rides on a single token row, so it must not change the scaling.
+//! 3. **Threaded prefill** — prompt-pass latency at 1/2/4 compute
+//!    threads (row-partitioned matmuls; identical logits at any count).
+//!
+//! Reference engine only: the synthetic model has no HLO artifacts.
+
+use loraquant::model::{merge_adapter, BaseWeights, ModelConfig};
+use loraquant::runtime::Engine;
+use loraquant::testutil::{synth_quantized_adapter, write_synth_model};
+use std::time::{Duration, Instant};
+
+/// Bigger than the unit-test model so the T-scaling is visible, small
+/// enough that the whole bench is seconds.
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 128,
+        vocab: 64,
+        seq_len: 96,
+        lora_rank: 8,
+        lora_alpha: 16,
+        act_silu: false,
+    }
+}
+
+fn prompt(len: usize) -> Vec<Vec<i32>> {
+    vec![(0..len as i32).map(|i| i % 9 + 1).collect()]
+}
+
+fn mean_us(total: Duration, n: usize) -> f64 {
+    total.as_secs_f64() * 1e6 / n.max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    if cfg!(feature = "pjrt") {
+        eprintln!("bench_decode: reference engine only (PJRT programs take full sequences)");
+        return Ok(());
+    }
+    let dir = std::env::temp_dir().join(format!("lq_bench_decode_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = bench_config();
+    write_synth_model(&dir, "bench", &cfg, &[1], 7)?;
+    let base = BaseWeights::load(dir.join("bench"))?;
+    let mut engine = Engine::new(&dir)?;
+    engine.load_model_fwd("bench", 1, base.cfg.param_names().len())?;
+    let w = engine.upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new())?)?;
+    let stored = synth_quantized_adapter(&cfg, 21);
+    let qf = stored.factors();
+
+    const STEPS: usize = 6;
+    const FULL_REPS: usize = 5;
+    let lens = [8usize, 16, 32, 64, 88];
+    let mut rows: Vec<String> = Vec::new();
+
+    println!("# Incremental decode vs full recompute (d=64, L=2, seq_len=96, bsz=1)");
+    println!(
+        "{:>5} {:>16} {:>16} {:>16} {:>9}",
+        "seq", "inc_step_us", "inc+adapter_us", "full_step_us", "speedup"
+    );
+    for &len in &lens {
+        let seqs = prompt(len);
+        let lane_lens = [len];
+
+        // incremental, merged weights: prefill once, then timed steps
+        let (mut state, _) = engine.prefill("bench/b1", &seqs, &lane_lens, &w, &[])?;
+        let _ = engine.decode_step(&mut state, &w, &[], &[5])?; // warm scratch
+        let t0 = Instant::now();
+        for _ in 0..STEPS {
+            let _ = engine.decode_step(&mut state, &w, &[], &[5])?;
+        }
+        let inc_us = mean_us(t0.elapsed(), STEPS);
+
+        // incremental, factor path (2-bit adapter on the activation row)
+        let adapters = [Some(&qf)];
+        let (mut fstate, _) = engine.prefill("bench/b1", &seqs, &lane_lens, &w, &adapters)?;
+        let _ = engine.decode_step(&mut fstate, &w, &adapters, &[5])?;
+        let t0 = Instant::now();
+        for _ in 0..STEPS {
+            let _ = engine.decode_step(&mut fstate, &w, &adapters, &[5])?;
+        }
+        let inc_factor_us = mean_us(t0.elapsed(), STEPS);
+
+        // full recompute: one old-style decode step at trace length `len`
+        let flat: Vec<i32> = seqs[0].clone();
+        let _ = engine.forward("bench/b1", &flat, &[1, len], &w)?; // warm
+        let t0 = Instant::now();
+        for _ in 0..FULL_REPS {
+            let _ = engine.forward("bench/b1", &flat, &[1, len], &w)?;
+        }
+        let full_us = mean_us(t0.elapsed(), FULL_REPS);
+
+        let speedup = full_us / inc_us.max(1e-9);
+        println!(
+            "{len:>5} {inc_us:>16.1} {inc_factor_us:>16.1} {full_us:>16.1} {speedup:>8.1}x"
+        );
+        rows.push(format!(
+            r#"{{"mode":"incremental","seq":{len},"per_step_us":{inc_us:.1}}}"#
+        ));
+        rows.push(format!(
+            r#"{{"mode":"incremental_factor","seq":{len},"per_step_us":{inc_factor_us:.1}}}"#,
+        ));
+        rows.push(format!(r#"{{"mode":"full","seq":{len},"per_step_us":{full_us:.1}}}"#));
+    }
+
+    println!("\n# Threaded prefill (prompt length 88)");
+    let seqs = prompt(88);
+    let lane_lens = [88usize];
+    for threads in [1usize, 2, 4] {
+        engine.set_compute_threads(threads);
+        let _ = engine.prefill("bench/b1", &seqs, &lane_lens, &w, &[])?; // warm
+        let t0 = Instant::now();
+        const PRE_REPS: usize = 5;
+        for _ in 0..PRE_REPS {
+            let _ = engine.prefill("bench/b1", &seqs, &lane_lens, &w, &[])?;
+        }
+        let us = mean_us(t0.elapsed(), PRE_REPS);
+        println!("threads={threads} prefill_us={us:.1}");
+        rows.push(format!(
+            r#"{{"mode":"prefill_threads","threads":{threads},"seq":88,"prefill_us":{us:.1}}}"#
+        ));
+    }
+    engine.set_compute_threads(1);
+
+    let json = format!(
+        "{{\"bench\":\"decode\",\"steps_per_point\":{STEPS},\"rows\":[{}]}}\n",
+        rows.join(",")
+    );
+    std::fs::write("BENCH_decode.json", &json)?;
+    println!("\nwrote BENCH_decode.json ({} rows)", rows.len());
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

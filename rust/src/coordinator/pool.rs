@@ -30,7 +30,7 @@ use super::registry::{AdapterId, StoredAdapter};
 use super::server::{GenRequest, GenResponse, MergeStrategy, Responder};
 use crate::adapter::fmt::Tensor;
 use crate::clock::Clock;
-use crate::eval::decode::decode_lockstep;
+use crate::eval::decode::{decode_lockstep, EngineStepper};
 use crate::eval::tasks::TOKENS;
 use crate::loraquant::QFactors;
 use crate::model::merge::base_weight_list;
@@ -73,6 +73,9 @@ pub(crate) struct WorkerConfig {
     pub cache_budget_bytes: usize,
     /// Adapter execution strategy (merged / factor / auto).
     pub strategy: MergeStrategy,
+    /// Engine worker threads for prefill matmuls (1 = serial; thread
+    /// count never changes logits, see `runtime::sim`).
+    pub compute_threads: usize,
     /// Time source: real in production, virtual under the scenario
     /// simulator (see `crate::clock`).
     pub clock: Clock,
@@ -223,6 +226,7 @@ impl Worker {
     ) -> anyhow::Result<Self> {
         let n_params = shared.base.cfg.param_names().len();
         let mut engine = Engine::new(&cfg.artifacts_dir)?;
+        engine.set_compute_threads(cfg.compute_threads.max(1));
         let mut progs = Vec::with_capacity(cfg.buckets.len());
         for &b in &cfg.buckets {
             engine.load_model_fwd(&cfg.model, b, n_params)?;
@@ -528,7 +532,10 @@ impl Worker {
     }
 
     /// Seed decode lanes from a batch on the smallest fitting bucket.
-    /// Padding lanes replicate the last request (output discarded).
+    /// Padding lanes replicate the last request's prompt with a **zero
+    /// budget**: they are prefilled (the bucket shape is fixed) but the
+    /// decode loop retires them before the first step, so padding costs
+    /// no per-token work.
     fn build_lanes(&self, requests: &[Queued]) -> Lanes {
         let t_len = self.shared.base.cfg.seq_len;
         let n = requests.len();
@@ -542,13 +549,15 @@ impl Worker {
             let plen = req.prompt.len().min(t_len);
             seqs[k][..plen].copy_from_slice(&req.prompt[..plen]);
             pos[k] = plen;
-            budgets[k] = req.max_new.min(t_len - plen);
+            budgets[k] = if k < n { req.max_new.min(t_len - plen) } else { 0 };
         }
         Lanes { seqs, pos, budgets, bsz, prog_idx }
     }
 
     /// Lock-step batched greedy decode over this adapter's cached merged
-    /// weights (shared protocol: [`decode_lockstep`]).
+    /// weights (shared protocol: [`decode_lockstep`] over an incremental
+    /// [`EngineStepper`] — prefill once, then O(T·d) per step per lane,
+    /// with EOS-finished lanes retired).
     fn decode_merged(
         &mut self,
         adapter: AdapterId,
@@ -556,7 +565,7 @@ impl Worker {
     ) -> anyhow::Result<Vec<Vec<i32>>> {
         let t_len = self.shared.base.cfg.seq_len;
         let vocab = self.shared.base.cfg.vocab;
-        let Lanes { mut seqs, mut pos, budgets, bsz, prog_idx } = self.build_lanes(requests);
+        let Lanes { mut seqs, mut pos, budgets, bsz: _, prog_idx } = self.build_lanes(requests);
         let t_exec = self.clock.now();
         let mut generated = {
             let engine = &self.engine;
@@ -565,9 +574,8 @@ impl Worker {
                 .peek(&adapter)
                 .ok_or_else(|| anyhow!("merged weights missing for adapter {adapter}"))?;
             let prog = self.progs[prog_idx].1.as_str();
-            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, |flat| {
-                engine.forward(prog, flat, &[bsz, t_len], weights)
-            })?
+            let mut stepper = EngineStepper::new(engine, prog, weights, &[]);
+            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, &mut stepper)?
         };
         let exec = self.clock.now().duration_since(t_exec);
         if let Some(h) = self.metrics.exec_latency.as_mut() {
@@ -579,7 +587,9 @@ impl Worker {
 
     /// Lock-step batched greedy decode over the **unmerged** base weights,
     /// applying each lane's adapter in factor form on the activation path
-    /// — per-request adapters, so the batch may mix tenants.
+    /// — per-request adapters, so the batch may mix tenants. Same
+    /// incremental stepper as the merged path: the per-step factor delta
+    /// touches only each active lane's single activation row.
     fn decode_factor(
         &mut self,
         requests: &[Queued],
@@ -600,9 +610,8 @@ impl Worker {
                 .as_ref()
                 .ok_or_else(|| anyhow!("factor path requires resident base weights"))?;
             let prog = self.progs[prog_idx].1.as_str();
-            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, |flat| {
-                engine.forward_with_adapters(prog, flat, &[bsz, t_len], weights, &lane_factors)
-            })?
+            let mut stepper = EngineStepper::new(engine, prog, weights, &lane_factors);
+            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, &mut stepper)?
         };
         let exec = self.clock.now().duration_since(t_exec);
         if let Some(h) = self.metrics.exec_latency.as_mut() {

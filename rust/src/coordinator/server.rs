@@ -88,6 +88,11 @@ pub struct CoordinatorConfig {
     pub cache_budget_bytes: usize,
     /// Merge pipeline threads (host-side dequant+merge on cache miss).
     pub merge_workers: usize,
+    /// Per-engine worker threads for prefill/full-forward matmuls
+    /// (reference engine; row-partitioned, bit-identical results at any
+    /// count). Default 1: fully serial, so virtual-clock scenario traces
+    /// stay byte-identical to the single-threaded schedule.
+    pub compute_threads: usize,
     /// Adapter execution strategy.
     pub merge_strategy: MergeStrategy,
     /// Test/ops instrumentation called at the start of every merge.
@@ -108,6 +113,7 @@ impl CoordinatorConfig {
             max_wait: Duration::from_millis(10),
             cache_budget_bytes: 64 << 20,
             merge_workers: 2,
+            compute_threads: 1,
             merge_strategy: MergeStrategy::default(),
             merge_hook: None,
             clock: Clock::real(),
@@ -129,6 +135,12 @@ impl CoordinatorConfig {
     /// Builder sugar: set the adapter execution strategy.
     pub fn with_merge_strategy(mut self, strategy: MergeStrategy) -> Self {
         self.merge_strategy = strategy;
+        self
+    }
+
+    /// Builder sugar: set the per-engine prefill worker-thread count.
+    pub fn with_compute_threads(mut self, threads: usize) -> Self {
+        self.compute_threads = threads;
         self
     }
 
@@ -227,6 +239,7 @@ impl Coordinator {
             max_wait: cfg.max_wait,
             cache_budget_bytes: (cfg.cache_budget_bytes / n_workers).max(1),
             strategy: cfg.merge_strategy,
+            compute_threads: cfg.compute_threads.max(1),
             clock: cfg.clock.clone(),
         };
 

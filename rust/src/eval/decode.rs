@@ -2,21 +2,29 @@
 //!
 //! [`decode_lockstep`] is the **single** lock-step greedy-decode protocol
 //! shared by the evaluator here and the serving pool
-//! (`coordinator::pool`) — the two copies had drifted in budget/EOS
-//! semantics, so the protocol now lives in one place:
+//! (`coordinator::pool`). Since DESIGN.md §10 it drives a stateful
+//! [`DecodeStep`] instead of a full-sequence closure:
 //!
-//! * every step runs one full-sequence forward over the whole batch
-//!   (supplied by the caller as a closure, so merged-weight and
-//!   factor-form execution share the loop);
+//! * the first iteration calls [`DecodeStep::prefill`] once over the
+//!   seeded prompts; every later iteration calls [`DecodeStep::step`]
+//!   with just the newest token per lane, so a KV-cached stepper pays
+//!   O(L·T·d) per generated token instead of O(L·T²·d);
 //! * lane `k` generates until its budget is exhausted, the sequence is
 //!   full, or greedy argmax emits EOS — EOS is written into the sequence
-//!   but never returned as a generated token.
+//!   but never returned as a generated token. A lane that finishes is
+//!   handed to the stepper as inactive, which retires it: finished lanes
+//!   stop costing work;
+//! * [`EngineStepper`] is the production stepper (incremental on the
+//!   reference engine, full recompute on PJRT); [`FullRecompute`] wraps
+//!   the old full-sequence closure shape and is kept as the oracle the
+//!   incremental path is property-tested against.
 
 use super::rouge::rouge_l;
 use super::tasks::{EvalSet, TOKENS};
+use crate::loraquant::QFactors;
 use crate::model::ModelConfig;
-use crate::runtime::{DeviceWeights, Engine};
-use anyhow::bail;
+use crate::runtime::{DecodeState, DeviceWeights, Engine};
+use anyhow::{bail, Context};
 
 /// Result of evaluating one adapter on one task.
 #[derive(Debug, Clone)]
@@ -29,14 +37,148 @@ pub struct EvalOutcome {
     pub exact: bool,
 }
 
+/// One decode "model" driven by [`decode_lockstep`]: a stateful
+/// prefill-then-step protocol. Both methods return the batch's
+/// **next-token logits**, `lanes × vocab` flat (row `k` = logits after
+/// lane `k`'s newest token), borrowed from the stepper's own storage.
+pub trait DecodeStep {
+    /// Consume the seeded prompts: lane `k` holds `pos[k]` tokens at the
+    /// front of `seqs[k]`. Called exactly once, before any step.
+    fn prefill(&mut self, seqs: &[Vec<i32>], pos: &[usize]) -> anyhow::Result<&[f32]>;
+
+    /// Consume the newest token of every still-`active` lane
+    /// (`seqs[k][pos[k] - 1]`). Rows of inactive lanes are unspecified,
+    /// and an inactive lane must stop costing compute.
+    fn step(&mut self, seqs: &[Vec<i32>], pos: &[usize], active: &[bool])
+        -> anyhow::Result<&[f32]>;
+}
+
+/// The O(L·T²·d)-per-token **oracle**: re-runs a full-sequence forward
+/// (the supplied closure, `flat tokens → lanes · seq_len · vocab` logits)
+/// at every step and extracts each lane's row. This was the only decode
+/// path before KV caching; it remains the reference the incremental
+/// stepper is property-tested against, and the protocol shim for
+/// scripted step closures in tests.
+pub struct FullRecompute<F> {
+    seq_len: usize,
+    vocab: usize,
+    forward: F,
+    out: Vec<f32>,
+}
+
+impl<F: FnMut(&[i32]) -> anyhow::Result<Vec<f32>>> FullRecompute<F> {
+    pub fn new(seq_len: usize, vocab: usize, forward: F) -> Self {
+        Self { seq_len, vocab, forward, out: Vec::new() }
+    }
+
+    fn recompute(&mut self, seqs: &[Vec<i32>], pos: &[usize]) -> anyhow::Result<&[f32]> {
+        let lanes = seqs.len();
+        let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+        let logits = (self.forward)(&flat)?;
+        if logits.len() != lanes * self.seq_len * self.vocab {
+            bail!(
+                "decode_lockstep: step returned {} logits, expected {}",
+                logits.len(),
+                lanes * self.seq_len * self.vocab
+            );
+        }
+        self.out.clear();
+        self.out.resize(lanes * self.vocab, 0.0);
+        for k in 0..lanes {
+            let src = (k * self.seq_len + pos[k] - 1) * self.vocab;
+            self.out[k * self.vocab..(k + 1) * self.vocab]
+                .copy_from_slice(&logits[src..src + self.vocab]);
+        }
+        Ok(&self.out)
+    }
+}
+
+impl<F: FnMut(&[i32]) -> anyhow::Result<Vec<f32>>> DecodeStep for FullRecompute<F> {
+    fn prefill(&mut self, seqs: &[Vec<i32>], pos: &[usize]) -> anyhow::Result<&[f32]> {
+        self.recompute(seqs, pos)
+    }
+
+    fn step(
+        &mut self,
+        seqs: &[Vec<i32>],
+        pos: &[usize],
+        _active: &[bool],
+    ) -> anyhow::Result<&[f32]> {
+        self.recompute(seqs, pos)
+    }
+}
+
+/// The production stepper: drives `Engine::prefill` / `Engine::decode_step`
+/// over a runtime engine. On the reference backend that is the KV-cached
+/// incremental path — prefill runs one batched forward over the prompts,
+/// each step costs O(L·T·d) per active lane, and lanes the decode loop
+/// deactivates are retired so they stop costing work. `adapters` is
+/// per-lane factor-form (empty for merged weights).
+pub struct EngineStepper<'a> {
+    engine: &'a Engine,
+    prog: &'a str,
+    weights: &'a DeviceWeights,
+    adapters: &'a [Option<&'a QFactors<'a>>],
+    state: Option<DecodeState>,
+    /// Prefill logits (owned: `Engine::prefill` hands them over).
+    first: Vec<f32>,
+    /// Reusable per-lane newest-token buffer.
+    last: Vec<i32>,
+}
+
+impl<'a> EngineStepper<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        prog: &'a str,
+        weights: &'a DeviceWeights,
+        adapters: &'a [Option<&'a QFactors<'a>>],
+    ) -> Self {
+        Self { engine, prog, weights, adapters, state: None, first: Vec::new(), last: Vec::new() }
+    }
+
+    /// Resident KV bytes of the live session (None before prefill).
+    pub fn kv_bytes(&self) -> Option<usize> {
+        self.state.as_ref().map(DecodeState::kv_bytes)
+    }
+}
+
+impl DecodeStep for EngineStepper<'_> {
+    fn prefill(&mut self, seqs: &[Vec<i32>], pos: &[usize]) -> anyhow::Result<&[f32]> {
+        let (state, logits) =
+            self.engine.prefill(self.prog, seqs, pos, self.weights, self.adapters)?;
+        self.state = Some(state);
+        self.first = logits;
+        Ok(&self.first)
+    }
+
+    fn step(
+        &mut self,
+        seqs: &[Vec<i32>],
+        pos: &[usize],
+        active: &[bool],
+    ) -> anyhow::Result<&[f32]> {
+        self.last.clear();
+        for k in 0..seqs.len() {
+            self.last.push(seqs[k][pos[k] - 1]);
+        }
+        let state = self.state.as_mut().context("decode step before prefill")?;
+        for (k, &a) in active.iter().enumerate() {
+            if !a && !state.is_retired(k) {
+                state.retire(k);
+            }
+        }
+        self.engine.decode_step(state, self.weights, self.adapters, &self.last)
+    }
+}
+
 /// Lock-step batched greedy decode over pre-seeded lanes.
 ///
 /// * `seqs[k]` — the padded working sequence of lane `k` (`seq_len` long,
 ///   prompt already written at the front).
 /// * `pos[k]` — the next write position (= prompt length, ≥ 1).
 /// * `budgets[k]` — maximum new tokens (clamped to the sequence room).
-/// * `step` — one full-sequence forward: flat tokens → flat logits
-///   (`lanes · seq_len · vocab`).
+/// * `stepper` — the decode model ([`DecodeStep`]): prefilled once over
+///   the prompts, then stepped one token at a time.
 ///
 /// Returns the generated tokens per lane, EOS excluded.
 pub fn decode_lockstep(
@@ -45,7 +187,7 @@ pub fn decode_lockstep(
     seqs: &mut [Vec<i32>],
     pos: &mut [usize],
     budgets: &[usize],
-    mut step: impl FnMut(&[i32]) -> anyhow::Result<Vec<f32>>,
+    stepper: &mut dyn DecodeStep,
 ) -> anyhow::Result<Vec<Vec<i32>>> {
     let lanes = seqs.len();
     if pos.len() != lanes || budgets.len() != lanes {
@@ -60,26 +202,32 @@ pub fn decode_lockstep(
         }
     }
     let mut generated: Vec<Vec<i32>> = vec![Vec::new(); lanes];
-    // A lane is done once its (room-clamped) budget is spent.
-    let mut done: Vec<bool> = (0..lanes)
-        .map(|k| budgets[k].min(seq_len - pos[k]) == 0)
-        .collect();
-    while !done.iter().all(|&d| d) {
-        let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
-        let logits = step(&flat)?;
-        if logits.len() != lanes * seq_len * vocab {
+    // A lane is active until its (room-clamped) budget is spent.
+    let mut active: Vec<bool> =
+        (0..lanes).map(|k| budgets[k].min(seq_len - pos[k]) > 0).collect();
+    if !active.iter().any(|&a| a) {
+        return Ok(generated); // no forward may run when every budget is zero
+    }
+    let mut first = true;
+    while active.iter().any(|&a| a) {
+        let logits = if first {
+            first = false;
+            stepper.prefill(seqs, pos)?
+        } else {
+            stepper.step(seqs, pos, &active)?
+        };
+        if logits.len() != lanes * vocab {
             bail!(
-                "decode_lockstep: step returned {} logits, expected {}",
+                "decode_lockstep: stepper returned {} logits, expected {}",
                 logits.len(),
-                lanes * seq_len * vocab
+                lanes * vocab
             );
         }
         for k in 0..lanes {
-            if done[k] {
+            if !active[k] {
                 continue;
             }
-            let base = (k * seq_len + pos[k] - 1) * vocab;
-            let row = &logits[base..base + vocab];
+            let row = &logits[k * vocab..(k + 1) * vocab];
             let mut best = 0usize;
             for v in 1..vocab {
                 if row[v] > row[best] {
@@ -90,11 +238,11 @@ pub fn decode_lockstep(
             seqs[k][pos[k]] = tok;
             pos[k] += 1;
             if tok == TOKENS::EOS {
-                done[k] = true;
+                active[k] = false;
             } else {
                 generated[k].push(tok);
                 if generated[k].len() >= budgets[k] || pos[k] >= seq_len {
-                    done[k] = true;
+                    active[k] = false;
                 }
             }
         }
@@ -108,8 +256,8 @@ pub fn decode_lockstep(
 ///
 /// Decoding is batched through the `<model>/b<bucket>` program: examples are
 /// packed `bucket` at a time (the final batch padded by repeating its last
-/// example) and advanced via [`decode_lockstep`] with per-example budgets
-/// of `|reference|` tokens.
+/// example) and advanced via [`decode_lockstep`] over an incremental
+/// [`EngineStepper`], with per-example budgets of `|reference|` tokens.
 pub fn evaluate(
     engine: &Engine,
     model: &str,
@@ -131,13 +279,18 @@ pub fn evaluate(
         let mut seqs: Vec<Vec<i32>> = idx.iter().map(|&i| set.prompts[i].clone()).collect();
         let mut pos: Vec<usize> = idx.iter().map(|&i| set.plens[i]).collect();
         // Generation protocol (matches train.py quick_eval): up to
-        // |reference| tokens per example; generation past the model's own
-        // EOS never scored anyway, so the lane stops there.
-        let budgets: Vec<usize> = idx.iter().map(|&i| set.refs[i].len()).collect();
+        // |reference| tokens per example. Padded duplicate lanes (the
+        // repeats of the final example — the lanes the scoring loop
+        // below skips) get budget 0, so the stepper retires them before
+        // the first step instead of decoding tokens that are discarded.
+        let budgets: Vec<usize> = idx
+            .iter()
+            .enumerate()
+            .map(|(k, &i)| if k > 0 && idx[k - 1] == i { 0 } else { set.refs[i].len() })
+            .collect();
+        let mut stepper = EngineStepper::new(engine, &prog, weights, &[]);
         let generated =
-            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, |flat| {
-                engine.forward(&prog, flat, &[bucket, t_len], weights)
-            })?;
+            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, &mut stepper)?;
         // score the real (non-padding) examples of this batch
         for (k, &i) in idx.iter().enumerate() {
             if i < start {
@@ -164,15 +317,16 @@ pub fn evaluate(
 mod tests {
     use super::*;
 
-    /// A scripted "model": always emits `next` as the argmax token.
+    /// A scripted "model": always emits `next` as the argmax token
+    /// (old full-sequence closure shape, shimmed through the oracle).
     fn scripted_step(
         lanes: usize,
         seq_len: usize,
         vocab: usize,
         next: impl Fn(usize, usize) -> i32,
-    ) -> impl FnMut(&[i32]) -> anyhow::Result<Vec<f32>> {
+    ) -> FullRecompute<impl FnMut(&[i32]) -> anyhow::Result<Vec<f32>>> {
         let mut calls = 0usize;
-        move |_flat| {
+        FullRecompute::new(seq_len, vocab, move |_flat| {
             let mut logits = vec![0.0f32; lanes * seq_len * vocab];
             for k in 0..lanes {
                 for p in 0..seq_len {
@@ -182,7 +336,7 @@ mod tests {
             }
             calls += 1;
             Ok(logits)
-        }
+        })
     }
 
     #[test]
@@ -194,23 +348,17 @@ mod tests {
         seqs[0][0] = TOKENS::BOS;
         seqs[1][0] = TOKENS::BOS;
         let mut pos = vec![1, 1];
-        let gen = decode_lockstep(
-            seq_len,
-            vocab,
-            &mut seqs,
-            &mut pos,
-            &[3, 5],
-            scripted_step(2, seq_len, vocab, |k, call| {
-                if k == 0 {
-                    7
-                } else if call == 0 {
-                    5
-                } else {
-                    TOKENS::EOS
-                }
-            }),
-        )
-        .unwrap();
+        let mut stepper = scripted_step(2, seq_len, vocab, |k, call| {
+            if k == 0 {
+                7
+            } else if call == 0 {
+                5
+            } else {
+                TOKENS::EOS
+            }
+        });
+        let gen =
+            decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[3, 5], &mut stepper).unwrap();
         assert_eq!(gen[0], vec![7, 7, 7]);
         assert_eq!(gen[1], vec![5]);
         assert_eq!(pos, vec![4, 3], "EOS is written into the sequence");
@@ -223,15 +371,9 @@ mod tests {
         let mut seqs = vec![vec![TOKENS::PAD; seq_len]];
         seqs[0][..3].copy_from_slice(&[1, 5, 3]);
         let mut pos = vec![3];
-        let gen = decode_lockstep(
-            seq_len,
-            vocab,
-            &mut seqs,
-            &mut pos,
-            &[100],
-            scripted_step(1, seq_len, vocab, |_, _| 6),
-        )
-        .unwrap();
+        let mut stepper = scripted_step(1, seq_len, vocab, |_, _| 6);
+        let gen =
+            decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[100], &mut stepper).unwrap();
         assert_eq!(gen[0], vec![6], "only one slot of room");
         assert_eq!(pos[0], seq_len);
     }
@@ -241,10 +383,11 @@ mod tests {
         let (seq_len, vocab) = (4, 8);
         let mut seqs = vec![vec![1, 0, 0, 0]];
         let mut pos = vec![1];
-        let gen = decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[0], |_flat| {
+        let mut stepper = FullRecompute::new(seq_len, vocab, |_flat: &[i32]| {
             panic!("no forward may run when every budget is zero")
-        })
-        .unwrap();
+        });
+        let gen =
+            decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[0], &mut stepper).unwrap();
         assert!(gen[0].is_empty());
     }
 
@@ -252,12 +395,85 @@ mod tests {
     fn rejects_malformed_lanes() {
         let (seq_len, vocab) = (4, 8);
         let step = |_: &[i32]| -> anyhow::Result<Vec<f32>> { unreachable!() };
+        let mut stepper = FullRecompute::new(seq_len, vocab, step);
         let mut seqs = vec![vec![1, 0, 0, 0]];
         let mut pos = vec![0]; // pos 0 has no logits row to read
-        assert!(decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[1], step).is_err());
+        assert!(
+            decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[1], &mut stepper).is_err()
+        );
         let mut short = vec![vec![1, 0]];
         let mut pos = vec![1];
-        assert!(decode_lockstep(seq_len, vocab, &mut short, &mut pos, &[1], step).is_err());
+        assert!(
+            decode_lockstep(seq_len, vocab, &mut short, &mut pos, &[1], &mut stepper).is_err()
+        );
+    }
+
+    /// A stepper that records the protocol it is driven with: prefill
+    /// exactly once, then steps whose `active` flags drop lanes the
+    /// moment they finish (the retirement contract).
+    struct Recording {
+        vocab: usize,
+        emit: Vec<Vec<i32>>, // per call, per lane
+        calls: usize,
+        active_log: Vec<Vec<bool>>,
+        out: Vec<f32>,
+    }
+
+    impl DecodeStep for Recording {
+        fn prefill(&mut self, seqs: &[Vec<i32>], _pos: &[usize]) -> anyhow::Result<&[f32]> {
+            assert_eq!(self.calls, 0, "prefill must be the first and only first call");
+            self.fill(seqs.len())
+        }
+
+        fn step(
+            &mut self,
+            seqs: &[Vec<i32>],
+            _pos: &[usize],
+            active: &[bool],
+        ) -> anyhow::Result<&[f32]> {
+            assert!(self.calls > 0, "step before prefill");
+            self.active_log.push(active.to_vec());
+            self.fill(seqs.len())
+        }
+    }
+
+    impl Recording {
+        fn fill(&mut self, lanes: usize) -> anyhow::Result<&[f32]> {
+            let emit = &self.emit[self.calls.min(self.emit.len() - 1)];
+            self.out.clear();
+            self.out.resize(lanes * self.vocab, 0.0);
+            for k in 0..lanes {
+                self.out[k * self.vocab + emit[k] as usize] = 1.0;
+            }
+            self.calls += 1;
+            Ok(&self.out)
+        }
+    }
+
+    #[test]
+    fn finished_lanes_are_deactivated_for_the_stepper() {
+        let (seq_len, vocab) = (8, 16);
+        // lane 0 emits EOS on the 2nd forward; lane 1 runs 4 tokens
+        let mut stepper = Recording {
+            vocab,
+            emit: vec![vec![7, 9], vec![TOKENS::EOS, 9], vec![5, 9]],
+            calls: 0,
+            active_log: Vec::new(),
+            out: Vec::new(),
+        };
+        let mut seqs = vec![vec![TOKENS::PAD; seq_len]; 2];
+        seqs[0][0] = TOKENS::BOS;
+        seqs[1][0] = TOKENS::BOS;
+        let mut pos = vec![1, 1];
+        let gen =
+            decode_lockstep(seq_len, vocab, &mut seqs, &mut pos, &[4, 4], &mut stepper).unwrap();
+        assert_eq!(gen[0], vec![7], "EOS on the second forward ends lane 0");
+        assert_eq!(gen[1], vec![9, 9, 9, 9]);
+        // steps 1.. : lane 0 goes inactive right after its EOS
+        assert_eq!(stepper.active_log[0], vec![true, true]);
+        for log in &stepper.active_log[1..] {
+            assert_eq!(log, &vec![false, true], "finished lane must be handed over inactive");
+        }
     }
 
     #[test]

@@ -6,6 +6,8 @@ pub mod decode;
 pub mod rouge;
 pub mod tasks;
 
-pub use decode::{decode_lockstep, evaluate, EvalOutcome};
+pub use decode::{
+    decode_lockstep, evaluate, DecodeStep, EngineStepper, EvalOutcome, FullRecompute,
+};
 pub use rouge::rouge_l;
 pub use tasks::{EvalSet, TOKENS};

@@ -11,8 +11,21 @@
 use super::pipeline::{LowQuantized, QuantizedLora, QuantizedSite};
 use crate::adapter::LoraAdapter;
 use crate::quant::Axis;
-use crate::tensor::{matmul_qdequant_acc, matmul_qdequant_bt_acc, DequantRows, Matrix};
+use crate::tensor::{
+    matmul_qdequant_acc_into, matmul_qdequant_bt_acc_into, DequantRows, Matrix,
+};
 use std::collections::BTreeMap;
+
+/// Reusable scratch for factor-form applies: the rank-h bottleneck
+/// activations (`u = x @ A′ᵀ`) and the single dequant row the streaming
+/// kernels unpack into. A warm scratch makes every apply in the decode
+/// hot loop allocation-free (DESIGN.md §10); `Default::default()` is a
+/// valid cold scratch.
+#[derive(Default)]
+pub struct FactorScratch {
+    u: Vec<f32>,
+    qrow: Vec<f32>,
+}
 
 /// One stored factor plus how to contract activations against it.
 ///
@@ -44,13 +57,26 @@ impl<'a> FactorView<'a> {
         }
     }
 
+    /// `out[rows × out_dim] += alpha · x[rows × in_dim] @ factor`, dequant
+    /// row supplied by the caller.
+    pub fn contract_acc_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        alpha: f32,
+        out: &mut [f32],
+        qrow: &mut Vec<f32>,
+    ) {
+        if self.transposed {
+            matmul_qdequant_bt_acc_into(x, rows, self.in_dim(), self.src, alpha, out, qrow);
+        } else {
+            matmul_qdequant_acc_into(x, rows, self.in_dim(), self.src, alpha, out, qrow);
+        }
+    }
+
     /// `out[rows × out_dim] += alpha · x[rows × in_dim] @ factor`.
     pub fn contract_acc(&self, x: &[f32], rows: usize, alpha: f32, out: &mut [f32]) {
-        if self.transposed {
-            matmul_qdequant_bt_acc(x, rows, self.in_dim(), self.src, alpha, out);
-        } else {
-            matmul_qdequant_acc(x, rows, self.in_dim(), self.src, alpha, out);
-        }
+        self.contract_acc_into(x, rows, alpha, out, &mut Vec::new());
     }
 }
 
@@ -69,15 +95,30 @@ impl<'a> FactorPair<'a> {
     }
 
     /// `y[rows×m] += scaling · x[rows×n] @ (B′A′)ᵀ` via the rank-h
-    /// bottleneck — 2·h·(m+n) MACs per activation row instead of m·n.
-    pub fn apply_acc(&self, x: &[f32], rows: usize, scaling: f32, y: &mut [f32]) {
+    /// bottleneck — 2·h·(m+n) MACs per activation row instead of m·n —
+    /// with every intermediate taken from `fs` (allocation-free when the
+    /// scratch is warm).
+    pub fn apply_acc_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        scaling: f32,
+        y: &mut [f32],
+        fs: &mut FactorScratch,
+    ) {
         let h = self.comps();
         if h == 0 || rows == 0 {
             return;
         }
-        let mut u = vec![0.0f32; rows * h];
-        self.a.contract_acc(x, rows, 1.0, &mut u);
-        self.b.contract_acc(&u, rows, scaling, y);
+        fs.u.clear();
+        fs.u.resize(rows * h, 0.0);
+        self.a.contract_acc_into(x, rows, 1.0, &mut fs.u, &mut fs.qrow);
+        self.b.contract_acc_into(&fs.u, rows, scaling, y, &mut fs.qrow);
+    }
+
+    /// [`FactorPair::apply_acc_into`] with a one-shot scratch.
+    pub fn apply_acc(&self, x: &[f32], rows: usize, scaling: f32, y: &mut [f32]) {
+        self.apply_acc_into(x, rows, scaling, y, &mut FactorScratch::default());
     }
 }
 
@@ -92,11 +133,24 @@ pub struct SiteFactors<'a> {
 
 impl<'a> SiteFactors<'a> {
     /// `y[rows×m] += scaling · x[rows×n] @ ΔWᵀ` without densifying ΔW —
-    /// the serving-orientation (`x @ W`) delta application.
-    pub fn apply_delta_acc(&self, x: &[f32], rows: usize, scaling: f32, y: &mut [f32]) {
+    /// the serving-orientation (`x @ W`) delta application, scratch
+    /// supplied by the caller (the decode hot-loop entry point).
+    pub fn apply_delta_acc_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        scaling: f32,
+        y: &mut [f32],
+        fs: &mut FactorScratch,
+    ) {
         for p in &self.pairs {
-            p.apply_acc(x, rows, scaling, y);
+            p.apply_acc_into(x, rows, scaling, y, fs);
         }
+    }
+
+    /// [`SiteFactors::apply_delta_acc_into`] with a one-shot scratch.
+    pub fn apply_delta_acc(&self, x: &[f32], rows: usize, scaling: f32, y: &mut [f32]) {
+        self.apply_delta_acc_into(x, rows, scaling, y, &mut FactorScratch::default());
     }
 
     /// Densify `ΔW` (m×n) *through the factor path* — test oracle glue;
@@ -245,6 +299,34 @@ mod tests {
         let mut y = Matrix::zeros(3, 24);
         sf.apply_delta_acc(x.data(), 3, 2.0, y.data_mut());
         assert!(y.rel_err(&oracle) < 1e-5);
+    }
+
+    #[test]
+    fn warm_scratch_apply_matches_one_shot() {
+        let mut rng = Rng::new(85);
+        let (b, a) = rng.lora_pair(40, 32, 8, 0.7);
+        let cfg = LoraQuantConfig { ste: None, group: 16, ..Default::default() };
+        let site = quantize_site(&b, &a, &cfg);
+        let sf = site.factors();
+        let mut fs = FactorScratch::default();
+        // first apply warms the scratch; later applies must not change
+        // results vs the one-shot, nor reallocate the warm buffers
+        let (mut u_cap, mut q_cap) = (0, 0);
+        for pass in 0..3 {
+            let x = rng.matrix(4, 32, 1.0);
+            let mut y_once = Matrix::zeros(4, 40);
+            sf.apply_delta_acc(x.data(), 4, 1.5, y_once.data_mut());
+            let mut y_warm = Matrix::zeros(4, 40);
+            sf.apply_delta_acc_into(x.data(), 4, 1.5, y_warm.data_mut(), &mut fs);
+            assert_eq!(y_warm.data(), y_once.data(), "pass {pass}");
+            if pass == 0 {
+                (u_cap, q_cap) = (fs.u.capacity(), fs.qrow.capacity());
+                assert!(u_cap > 0 && q_cap > 0, "first apply must warm the scratch");
+            } else {
+                assert_eq!(fs.u.capacity(), u_cap, "warm u must not reallocate");
+                assert_eq!(fs.qrow.capacity(), q_cap, "warm qrow must not reallocate");
+            }
+        }
     }
 
     #[test]

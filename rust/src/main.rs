@@ -5,11 +5,13 @@
 //! loraquant quantize --model tiny-llama-s --task modadd --bits 2 --rho 0.9 --out q.bin
 //! loraquant eval     --model tiny-llama-s --task modadd [--quantized q.bin] [--n 100]
 //! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12 \
-//!                    [--workers 4] [--merge-workers 2] [--buckets 1,8] [--prefetch] \
+//!                    [--workers 4] [--merge-workers 2] [--compute-threads 2] \
+//!                    [--buckets 1,8] [--prefetch] \
 //!                    [--merge-strategy merged|factor|auto]
 //! loraquant serve-sim --requests 200 --rate 200 --adapters 4 --merge-strategy all \
-//!                    [--workers 4] [--zipf 1.1] [--seed 7] [--slow-merge-ms 50] \
-//!                    [--churn] [--prefetch] [--log] [--golden PATH] [--model NAME]
+//!                    [--workers 4] [--compute-threads 2] [--zipf 1.1] [--seed 7] \
+//!                    [--slow-merge-ms 50] [--churn] [--prefetch] [--log] \
+//!                    [--golden PATH] [--model NAME]
 //! loraquant info     --model tiny-llama-s
 //! ```
 //!
@@ -143,6 +145,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut cfg = CoordinatorConfig::new(&dir, &model);
     cfg.workers = args.usize_or("workers", 1)?;
     cfg.merge_workers = args.usize_or("merge-workers", 2)?;
+    cfg.compute_threads = args.usize_or("compute-threads", 1)?;
     cfg.buckets = args.usize_list_or("buckets", &[1, 8])?;
     cfg.cache_budget_bytes = cache_mb << 20;
     cfg.max_wait = Duration::from_millis(args.usize_or("max-wait-ms", 10)? as u64);
@@ -286,6 +289,7 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             strategy,
             workers: args.usize_or("workers", 1)?,
             merge_workers: args.usize_or("merge-workers", 1)?,
+            compute_threads: args.usize_or("compute-threads", 1)?,
             buckets: args.usize_list_or("buckets", &[1, 8])?,
             max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 5)? as u64),
             cache_budget_bytes: args.usize_or("cache-kb", 64 << 10)? << 10,

@@ -1,0 +1,246 @@
+//! KV cache + decode-session state for the reference engine's
+//! incremental decode path (DESIGN.md §10).
+//!
+//! [`KvCache`] stores the per-layer key/value activations of a fixed lane
+//! set: layer-major, then lane, then position, with the
+//! `n_heads × head_dim` split fused into the model width `d` (head `h`
+//! occupies columns `h·hd .. (h+1)·hd`, exactly the full-forward layout,
+//! so attention reads the cache with the same slicing as the batched
+//! path). A lane's entry at position `t` is written exactly when the
+//! token at `t` is consumed — by the batched prefill or by a later
+//! `decode_step` — and read by every subsequent causal attention over
+//! that lane. Padding columns a batched prefill writes past a short
+//! lane's prompt are overwritten by the lane's own steps before any
+//! attention can read them, so they never influence logits.
+//!
+//! [`DecodeState`] owns lane lifecycle on top of the cache: per-lane
+//! consumed-token counts, EOS retirement (a retired lane stops costing
+//! any compute), and the reusable [`Scratch`] arena that makes
+//! steady-state decode allocation-free.
+
+use super::sim::ParamIndex;
+use crate::loraquant::FactorScratch;
+use crate::model::ModelConfig;
+
+/// Per-layer K/V buffers for `bsz` lanes of up to `cap` positions each.
+pub struct KvCache {
+    bsz: usize,
+    cap: usize,
+    d: usize,
+    /// `[n_layers][bsz][cap][d]`, row-major.
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub(crate) fn new(n_layers: usize, bsz: usize, cap: usize, d: usize) -> Self {
+        let len = n_layers * bsz * cap * d;
+        Self { bsz, cap, d, k: vec![0.0; len], v: vec![0.0; len] }
+    }
+
+    /// Positions per lane (the model's `seq_len` for serving sessions).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Resident bytes (both K and V, f32).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    #[inline]
+    fn lane_base(&self, layer: usize, lane: usize) -> usize {
+        (layer * self.bsz + lane) * self.cap * self.d
+    }
+
+    /// Lane `lane`'s cached keys in `layer`: `cap × d`, position-major.
+    #[inline]
+    pub(crate) fn k_lane(&self, layer: usize, lane: usize) -> &[f32] {
+        let base = self.lane_base(layer, lane);
+        &self.k[base..base + self.cap * self.d]
+    }
+
+    /// Lane `lane`'s cached values in `layer`.
+    #[inline]
+    pub(crate) fn v_lane(&self, layer: usize, lane: usize) -> &[f32] {
+        let base = self.lane_base(layer, lane);
+        &self.v[base..base + self.cap * self.d]
+    }
+
+    /// Publish the K/V rows of one consumed token.
+    #[inline]
+    pub(crate) fn write(
+        &mut self,
+        layer: usize,
+        lane: usize,
+        t: usize,
+        krow: &[f32],
+        vrow: &[f32],
+    ) {
+        debug_assert!(t < self.cap);
+        let at = self.lane_base(layer, lane) + t * self.d;
+        self.k[at..at + self.d].copy_from_slice(krow);
+        self.v[at..at + self.d].copy_from_slice(vrow);
+    }
+}
+
+/// Reusable forward buffers, resized per pass (shrinking keeps capacity,
+/// and a decode step is never larger than its prefill, so steady-state
+/// decode performs zero allocations).
+#[derive(Default)]
+pub(crate) struct Scratch {
+    /// Residual stream rows (`rows × d`), pre-filled with embed + pos.
+    pub x: Vec<f32>,
+    /// Layernorm output (`rows × d`).
+    pub hx: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub att: Vec<f32>,
+    pub proj: Vec<f32>,
+    /// FFN hidden (`rows × d_ff`).
+    pub h1: Vec<f32>,
+    pub h2: Vec<f32>,
+    /// One attention row's scores (`seq_len`).
+    pub scores: Vec<f32>,
+    /// Head output (`rows × vocab`).
+    pub logits: Vec<f32>,
+    /// Factor-form adapter scratch (bottleneck rows + dequant row).
+    pub factor: FactorScratch,
+}
+
+impl Scratch {
+    /// Size every buffer for an `rows`-row pass.
+    pub(crate) fn ensure(&mut self, rows: usize, cfg: &ModelConfig) {
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        self.x.resize(rows * d, 0.0);
+        self.hx.resize(rows * d, 0.0);
+        self.q.resize(rows * d, 0.0);
+        self.k.resize(rows * d, 0.0);
+        self.v.resize(rows * d, 0.0);
+        self.att.resize(rows * d, 0.0);
+        self.proj.resize(rows * d, 0.0);
+        self.h1.resize(rows * f, 0.0);
+        self.h2.resize(rows * d, 0.0);
+        self.scores.resize(cfg.seq_len.max(1), 0.0);
+        self.logits.resize(rows * v, 0.0);
+    }
+}
+
+/// A live incremental-decode session over one batch: the KV cache, each
+/// lane's consumed-token count, retirement flags, and the scratch arena.
+/// Created by `Engine::prefill`, advanced by `Engine::decode_step`.
+pub struct DecodeState {
+    /// Program key this session was prefilled under (diagnostics).
+    pub(crate) prog: String,
+    pub(crate) cfg: ModelConfig,
+    /// Expected input arity (tokens + weights), revalidated per step.
+    pub(crate) arity: usize,
+    /// Positional parameter indices + site names, resolved at prefill so
+    /// steps never format or look up names.
+    pub(crate) idx: ParamIndex,
+    pub(crate) kv: KvCache,
+    /// Tokens consumed per lane == the lane's next cache write position.
+    pub(crate) lens: Vec<usize>,
+    pub(crate) retired: Vec<bool>,
+    /// Step row map `(lane, position)` — rebuilt in place every step.
+    pub(crate) map: Vec<(usize, usize)>,
+    /// Per-lane step logits (`lanes × vocab`; retired rows zero).
+    pub(crate) out: Vec<f32>,
+    pub(crate) scratch: Scratch,
+}
+
+impl DecodeState {
+    pub(crate) fn new(
+        prog: &str,
+        cfg: ModelConfig,
+        arity: usize,
+        lens: Vec<usize>,
+        idx: ParamIndex,
+    ) -> Self {
+        let bsz = lens.len();
+        Self {
+            prog: prog.to_string(),
+            cfg,
+            arity,
+            idx,
+            kv: KvCache::new(cfg.n_layers, bsz, cfg.seq_len, cfg.d_model),
+            retired: vec![false; bsz],
+            map: Vec::with_capacity(bsz),
+            out: vec![0.0; bsz * cfg.vocab],
+            scratch: Scratch::default(),
+            lens,
+        }
+    }
+
+    /// Program key this session decodes through.
+    pub fn program(&self) -> &str {
+        &self.prog
+    }
+
+    /// Lane count (the batch bucket this session was prefilled at).
+    pub fn lanes(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Tokens consumed by lane `lane` so far.
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.lens[lane]
+    }
+
+    pub fn is_retired(&self, lane: usize) -> bool {
+        self.retired[lane]
+    }
+
+    /// Permanently drop `lane` from every subsequent step: its rows are
+    /// no longer embedded, projected or attended, and its logits row is
+    /// zero. Used for EOS/budget-exhausted lanes so finished requests
+    /// stop costing work.
+    pub fn retire(&mut self, lane: usize) {
+        self.retired[lane] = true;
+    }
+
+    /// Lanes still stepping.
+    pub fn active_lanes(&self) -> usize {
+        self.retired.iter().filter(|&&r| !r).count()
+    }
+
+    /// Resident KV bytes of this session.
+    pub fn kv_bytes(&self) -> usize {
+        self.kv.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_layout_roundtrip() {
+        let mut kv = KvCache::new(2, 3, 4, 6);
+        assert_eq!(kv.capacity(), 4);
+        assert_eq!(kv.bytes(), 2 * 2 * 3 * 4 * 6 * 4);
+        let krow: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let vrow: Vec<f32> = (0..6).map(|i| 10.0 + i as f32).collect();
+        kv.write(1, 2, 3, &krow, &vrow);
+        assert_eq!(&kv.k_lane(1, 2)[3 * 6..4 * 6], krow.as_slice());
+        assert_eq!(&kv.v_lane(1, 2)[3 * 6..4 * 6], vrow.as_slice());
+        // other lanes/layers untouched
+        assert!(kv.k_lane(0, 2).iter().all(|&x| x == 0.0));
+        assert!(kv.k_lane(1, 1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn retirement_bookkeeping() {
+        let cfg = crate::testutil::synth_model_config();
+        let mut st = DecodeState::new("m/b2", cfg, 1, vec![3, 5], ParamIndex::new(&cfg));
+        assert_eq!(st.lanes(), 2);
+        assert_eq!(st.active_lanes(), 2);
+        assert_eq!(st.lane_len(1), 5);
+        st.retire(0);
+        assert!(st.is_retired(0));
+        assert!(!st.is_retired(1));
+        assert_eq!(st.active_lanes(), 1);
+        assert!(st.kv_bytes() > 0);
+    }
+}

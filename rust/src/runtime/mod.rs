@@ -22,13 +22,24 @@
 //! the factor-form execution path (DESIGN.md §8): per-batch-row adapter
 //! deltas applied on the activation path over unmerged base weights. The
 //! PJRT backend stubs it with an error (AOT programs bake their arity).
+//!
+//! Both backends expose the stateful incremental-decode surface
+//! (`prefill` → `decode_step` over a [`DecodeState`], DESIGN.md §10).
+//! On the reference engine it is the real KV-cached O(T)-per-step path
+//! ([`kv`]); the PJRT backend satisfies the same contract by full
+//! recompute (AOT HLO programs take whole padded sequences), so the
+//! serving pool and evaluator drive one protocol everywhere.
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
 #[cfg(feature = "pjrt")]
-pub use pjrt::{DeviceWeights, Engine, Program};
+pub use pjrt::{DecodeState, DeviceWeights, Engine, Program};
 
 #[cfg(not(feature = "pjrt"))]
+pub mod kv;
+#[cfg(not(feature = "pjrt"))]
 mod sim;
+#[cfg(not(feature = "pjrt"))]
+pub use kv::{DecodeState, KvCache};
 #[cfg(not(feature = "pjrt"))]
 pub use sim::{DeviceWeights, Engine, Program, TokenBuffer};

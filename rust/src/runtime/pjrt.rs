@@ -32,6 +32,66 @@ pub struct Engine {
     artifacts_dir: PathBuf,
 }
 
+/// Incremental-decode session state, API parity with the reference
+/// engine's KV-cached `DecodeState` (`runtime::kv`). The AOT HLO
+/// programs take whole padded sequences, so each `decode_step` here is a
+/// full recompute — same protocol, original cost; XLA owns any caching.
+/// (`eval::decode::FullRecompute` implements the same recompute shape
+/// one layer up; it is not reused here because `runtime` must not
+/// depend on `eval` — keep the two row-extraction paths in sync.)
+pub struct DecodeState {
+    prog: String,
+    /// Expected input arity (tokens + weights), revalidated per step
+    /// **before** any lane state mutates.
+    arity: usize,
+    /// Owned padded working sequences (`bsz` lanes × `t` positions).
+    seqs: Vec<Vec<i32>>,
+    t: usize,
+    /// Tokens consumed per lane.
+    lens: Vec<usize>,
+    retired: Vec<bool>,
+    /// Per-lane step logits (`lanes × vocab`; retired rows zero).
+    out: Vec<f32>,
+    vocab: usize,
+}
+
+impl DecodeState {
+    /// Program key this session decodes through.
+    pub fn program(&self) -> &str {
+        &self.prog
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Tokens consumed by lane `lane` so far.
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.lens[lane]
+    }
+
+    pub fn is_retired(&self, lane: usize) -> bool {
+        self.retired[lane]
+    }
+
+    /// Drop `lane` from subsequent steps (its logits row reads zero).
+    /// The full-sequence forward still computes every lane, so on this
+    /// backend retirement only affects bookkeeping.
+    pub fn retire(&mut self, lane: usize) {
+        self.retired[lane] = true;
+    }
+
+    /// Lanes still stepping.
+    pub fn active_lanes(&self) -> usize {
+        self.retired.iter().filter(|&&r| !r).count()
+    }
+
+    /// No KV cache on this backend.
+    pub fn kv_bytes(&self) -> usize {
+        0
+    }
+}
+
 /// Device-resident weights for one adapter (outputs of
 /// [`Engine::upload_weights`]) — the unit the coordinator's merged-weight
 /// cache holds.
@@ -170,8 +230,158 @@ impl Engine {
         )
     }
 
+    /// Host-side compute threading is a reference-engine knob; XLA owns
+    /// its own thread pool here. Accepted for API parity.
+    pub fn set_compute_threads(&mut self, _threads: usize) {}
+
+    /// See [`Engine::set_compute_threads`].
+    pub fn compute_threads(&self) -> usize {
+        1
+    }
+
+    /// Start an incremental-decode session (API parity with the
+    /// reference engine's KV-cached `prefill`): lane `k` holds `lens[k]`
+    /// tokens at the front of `seqs[k]`, all lanes padded to one length.
+    /// Returns the session plus `lanes × vocab` next-token logits.
+    pub fn prefill(
+        &self,
+        name: &str,
+        seqs: &[Vec<i32>],
+        lens: &[usize],
+        weights: &DeviceWeights,
+        adapters: &[Option<&crate::loraquant::QFactors<'_>>],
+    ) -> anyhow::Result<(DecodeState, Vec<f32>)> {
+        if !adapters.is_empty() && adapters.iter().any(Option::is_some) {
+            bail!(
+                "factor-form adapter application is not supported by the PJRT backend; \
+                 use --merge-strategy merged (or build without --features pjrt)"
+            );
+        }
+        let arity = self
+            .programs
+            .get(name)
+            .with_context(|| format!("program {name} not loaded"))?
+            .arity;
+        if 1 + weights.buffers.len() != arity {
+            bail!("program {name} expects {arity} inputs, got {}", 1 + weights.buffers.len());
+        }
+        let bsz = seqs.len();
+        if bsz == 0 {
+            bail!("prefill: empty lane set");
+        }
+        if lens.len() != bsz {
+            bail!("prefill: {bsz} lanes vs {} lens", lens.len());
+        }
+        let t = seqs[0].len();
+        for (k, (&len, seq)) in lens.iter().zip(seqs).enumerate() {
+            if seq.len() != t {
+                bail!("prefill: lane {k} is {} long, lane 0 is {t}", seq.len());
+            }
+            if len == 0 || len > t {
+                bail!("prefill: lane {k} length {len} out of range 1..={t}");
+            }
+        }
+        let mut state = DecodeState {
+            prog: name.to_string(),
+            arity,
+            seqs: seqs.to_vec(),
+            t,
+            lens: lens.to_vec(),
+            retired: vec![false; bsz],
+            out: Vec::new(),
+            vocab: 0,
+        };
+        let logits = state.recompute(self, weights)?.to_vec();
+        Ok((state, logits))
+    }
+
+    /// Advance a session by one token per still-active lane: `last[k]` is
+    /// consumed at position `state.lane_len(k)`. Full recompute on this
+    /// backend; retired rows read zero.
+    pub fn decode_step<'s>(
+        &self,
+        state: &'s mut DecodeState,
+        weights: &DeviceWeights,
+        adapters: &[Option<&crate::loraquant::QFactors<'_>>],
+        last: &[i32],
+    ) -> anyhow::Result<&'s [f32]> {
+        if !adapters.is_empty() && adapters.iter().any(Option::is_some) {
+            bail!(
+                "factor-form adapter application is not supported by the PJRT backend; \
+                 use --merge-strategy merged (or build without --features pjrt)"
+            );
+        }
+        let bsz = state.lanes();
+        if last.len() != bsz {
+            bail!("decode_step: {} tokens for {bsz} lanes", last.len());
+        }
+        if 1 + weights.buffers.len() != state.arity {
+            bail!(
+                "program {} expects {} inputs, got {}",
+                state.prog,
+                state.arity,
+                1 + weights.buffers.len()
+            );
+        }
+        // validate every active lane before mutating any (same contract
+        // as the reference engine: errors surface before state changes)
+        for k in 0..bsz {
+            if state.retired[k] {
+                continue;
+            }
+            if state.lens[k] >= state.t {
+                bail!(
+                    "decode_step: lane {k} is full ({} tokens, capacity {})",
+                    state.lens[k],
+                    state.t
+                );
+            }
+            // vocab is known after the prefill recompute; match the
+            // reference engine's token-range contract rather than
+            // feeding the HLO gather an out-of-range index
+            if state.vocab > 0 && (last[k] < 0 || last[k] as usize >= state.vocab) {
+                bail!("token {} out of vocab range 0..{}", last[k], state.vocab);
+            }
+        }
+        for k in 0..bsz {
+            if state.retired[k] {
+                continue;
+            }
+            let at = state.lens[k];
+            state.seqs[k][at] = last[k];
+            state.lens[k] += 1;
+        }
+        state.recompute(self, weights)
+    }
+
     /// Raw client access (tests / benches).
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
+    }
+}
+
+impl DecodeState {
+    /// Full-sequence forward + per-lane row extraction into `self.out`.
+    fn recompute(&mut self, engine: &Engine, weights: &DeviceWeights) -> anyhow::Result<&[f32]> {
+        let bsz = self.lanes();
+        let flat: Vec<i32> = self.seqs.iter().flatten().copied().collect();
+        let logits = engine.forward(&self.prog, &flat, &[bsz, self.t], weights)?;
+        if self.vocab == 0 {
+            if logits.len() % (bsz * self.t) != 0 {
+                bail!("forward returned {} logits for a {bsz}x{} batch", logits.len(), self.t);
+            }
+            self.vocab = logits.len() / (bsz * self.t);
+        }
+        let vo = self.vocab;
+        self.out.clear();
+        self.out.resize(bsz * vo, 0.0);
+        for k in 0..bsz {
+            if self.retired[k] {
+                continue;
+            }
+            let src = (k * self.t + self.lens[k] - 1) * vo;
+            self.out[k * vo..(k + 1) * vo].copy_from_slice(&logits[src..src + vo]);
+        }
+        Ok(&self.out)
     }
 }

@@ -8,11 +8,32 @@
 //! `upload_weights` keeps the merged weights as host tensors. Raw HLO
 //! programs (`load_program`) are a PJRT-only capability and return an
 //! error here.
+//!
+//! Two execution shapes share one layer core ([`forward_core`],
+//! DESIGN.md §10):
+//!
+//! * **full forward** (`execute` / `execute_with_adapters`) — every
+//!   (lane, position) row of a padded batch in one pass. O(L·T²·d) per
+//!   call; kept as the decode *oracle* the incremental path is
+//!   property-tested against.
+//! * **incremental decode** (`prefill` → `decode_step`) — prefill runs
+//!   one batched pass over the prompts, writing per-layer K/V into a
+//!   [`KvCache`]; each step then embeds one token per still-active lane
+//!   and attends against the cache: O(L·T·d) per generated token instead
+//!   of O(L·T²·d). Retired lanes cost nothing, and the session's
+//!   [`DecodeState`] scratch arena makes steady-state steps
+//!   allocation-free.
+//!
+//! Prefill projections are row-partitioned across
+//! `Engine::set_compute_threads` scoped workers
+//! ([`matmul_flat_threaded`]); per-row accumulation order is unchanged,
+//! so logits are bit-identical at every thread count.
 
+use super::kv::{DecodeState, KvCache, Scratch};
 use crate::adapter::fmt::{Tensor, TensorData};
-use crate::loraquant::QFactors;
+use crate::loraquant::{FactorScratch, QFactors};
 use crate::model::ModelConfig;
-use crate::tensor::dot;
+use crate::tensor::{dot, matmul_flat_threaded};
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -30,6 +51,9 @@ pub struct Program {
 pub struct Engine {
     programs: BTreeMap<String, Program>,
     artifacts_dir: PathBuf,
+    /// Worker threads for row-partitioned prefill/full-forward matmuls
+    /// (1 = fully serial; results are identical either way).
+    compute_threads: usize,
 }
 
 /// "Device"-resident weights — host tensors in `param_names` order (the
@@ -56,12 +80,29 @@ pub struct TokenBuffer {
 impl Engine {
     /// Create an engine rooted at an artifacts directory.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
-        Ok(Self { programs: BTreeMap::new(), artifacts_dir: artifacts_dir.as_ref().into() })
+        Ok(Self {
+            programs: BTreeMap::new(),
+            artifacts_dir: artifacts_dir.as_ref().into(),
+            compute_threads: 1,
+        })
     }
 
     /// The artifacts directory this engine loads from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts_dir
+    }
+
+    /// Row-partition prefill/full-forward matmuls across `threads` scoped
+    /// workers (clamped to ≥ 1). Thread count never changes results —
+    /// each output row accumulates in the same order — so 1 (the default)
+    /// only pins the serial schedule.
+    pub fn set_compute_threads(&mut self, threads: usize) {
+        self.compute_threads = threads.max(1);
+    }
+
+    /// Current prefill worker count.
+    pub fn compute_threads(&self) -> usize {
+        self.compute_threads
     }
 
     /// Raw HLO programs require PJRT.
@@ -163,6 +204,7 @@ impl Engine {
             tokens.dims[0],
             tokens.dims[1],
             adapters,
+            self.compute_threads,
         )
     }
 
@@ -190,6 +232,200 @@ impl Engine {
     ) -> anyhow::Result<Vec<f32>> {
         let tok = self.upload_tokens(tokens, dims)?;
         self.execute_with_adapters(name, &tok, weights, adapters)
+    }
+
+    /// Start an incremental-decode session: one batched forward over the
+    /// prompts (lane `k` holds `lens[k]` tokens at the front of
+    /// `seqs[k]`), writing every position's K/V into the session's cache.
+    ///
+    /// Returns the session state plus the batch's next-token logits
+    /// (`lanes × vocab`; row `k` is the logits row after
+    /// `seqs[k][lens[k]-1]`, exactly the row the full forward would put
+    /// at position `lens[k]-1`). `adapters` is per-lane, as in
+    /// [`Engine::execute_with_adapters`], and applies to both the prefill
+    /// and every later [`Engine::decode_step`] of this session.
+    pub fn prefill(
+        &self,
+        name: &str,
+        seqs: &[Vec<i32>],
+        lens: &[usize],
+        weights: &DeviceWeights,
+        adapters: &[Option<&QFactors<'_>>],
+    ) -> anyhow::Result<(DecodeState, Vec<f32>)> {
+        let prog = self.programs.get(name).with_context(|| format!("program {name} not loaded"))?;
+        if 1 + weights.tensors.len() != prog.arity {
+            bail!(
+                "program {name} expects {} inputs, got {}",
+                prog.arity,
+                1 + weights.tensors.len()
+            );
+        }
+        let cfg = prog.cfg;
+        let bsz = seqs.len();
+        if bsz == 0 {
+            bail!("prefill: empty lane set");
+        }
+        if lens.len() != bsz {
+            bail!("prefill: {bsz} lanes vs {} lens", lens.len());
+        }
+        for (k, (&len, seq)) in lens.iter().zip(seqs).enumerate() {
+            if len == 0 || len > cfg.seq_len {
+                bail!("prefill: lane {k} length {len} out of range 1..={}", cfg.seq_len);
+            }
+            if seq.len() < len {
+                bail!("prefill: lane {k} holds {} tokens, needs {len}", seq.len());
+            }
+        }
+        if !adapters.is_empty() {
+            if adapters.len() != bsz {
+                bail!("adapter list has {} entries for a batch of {bsz}", adapters.len());
+            }
+            validate_adapter_shapes(&cfg, adapters)?;
+        }
+        let t = lens.iter().copied().max().unwrap_or(1);
+        // name/position resolution happens once here; every later step
+        // reuses the session's index and allocates nothing for lookups
+        let mut state =
+            DecodeState::new(name, cfg, prog.arity, lens.to_vec(), ParamIndex::new(&cfg));
+        state.idx.validate(&weights.tensors)?;
+        state.scratch.ensure(bsz * t, &cfg);
+        // Embed the prompt region. Positions at or past a short lane's
+        // length embed PAD (0); their K/V columns are overwritten by the
+        // lane's own decode steps before anything can attend to them.
+        let embed = pget(&weights.tensors, state.idx.embed)?;
+        let pos = pget(&weights.tensors, state.idx.pos)?;
+        let d = cfg.d_model;
+        for b in 0..bsz {
+            for i in 0..t {
+                let tok = if i < lens[b] { seqs[b][i] } else { 0 };
+                if tok < 0 || tok as usize >= cfg.vocab {
+                    bail!("token {tok} out of vocab range 0..{}", cfg.vocab);
+                }
+                embed_row(
+                    embed,
+                    pos,
+                    tok as usize,
+                    i,
+                    d,
+                    &mut state.scratch.x[(b * t + i) * d..(b * t + i + 1) * d],
+                );
+            }
+        }
+        forward_core(
+            &cfg,
+            &weights.tensors,
+            &state.idx,
+            &Rows::Full { bsz, t },
+            adapters,
+            &mut state.kv,
+            &mut state.scratch,
+            self.compute_threads,
+        )?;
+        let vo = cfg.vocab;
+        let mut out = vec![0.0f32; bsz * vo];
+        for b in 0..bsz {
+            let src = (b * t + lens[b] - 1) * vo;
+            out[b * vo..(b + 1) * vo].copy_from_slice(&state.scratch.logits[src..src + vo]);
+        }
+        Ok((state, out))
+    }
+
+    /// Advance an incremental-decode session by one token: `last[k]` is
+    /// the newest token of lane `k` (consumed at position
+    /// `state.lane_len(k)`; ignored for retired lanes). Returns the
+    /// per-lane next-token logits (`lanes × vocab`, retired rows zero),
+    /// borrowed from the session's scratch — O(layers · seq · d) per
+    /// active lane and allocation-free once the session is warm.
+    pub fn decode_step<'s>(
+        &self,
+        state: &'s mut DecodeState,
+        weights: &DeviceWeights,
+        adapters: &[Option<&QFactors<'_>>],
+        last: &[i32],
+    ) -> anyhow::Result<&'s [f32]> {
+        let cfg = state.cfg;
+        if 1 + weights.tensors.len() != state.arity {
+            bail!(
+                "program {} expects {} inputs, got {}",
+                state.prog,
+                state.arity,
+                1 + weights.tensors.len()
+            );
+        }
+        let bsz = state.lanes();
+        if last.len() != bsz {
+            bail!("decode_step: {} tokens for {bsz} lanes", last.len());
+        }
+        if !adapters.is_empty() {
+            if adapters.len() != bsz {
+                bail!("adapter list has {} entries for a batch of {bsz}", adapters.len());
+            }
+            // a handful of integer compares per step — keeps the
+            // "no panic mid-forward" shape guarantee even if a caller
+            // swaps adapters between steps
+            validate_adapter_shapes(&cfg, adapters)?;
+        }
+        state.map.clear();
+        for b in 0..bsz {
+            if state.retired[b] {
+                continue;
+            }
+            let pos = state.lens[b];
+            if pos >= state.kv.capacity() {
+                bail!(
+                    "decode_step: lane {b} is full ({pos} tokens, kv capacity {})",
+                    state.kv.capacity()
+                );
+            }
+            let tok = last[b];
+            if tok < 0 || tok as usize >= cfg.vocab {
+                bail!("token {tok} out of vocab range 0..{}", cfg.vocab);
+            }
+            state.map.push((b, pos));
+        }
+        let vo = cfg.vocab;
+        state.out.resize(bsz * vo, 0.0);
+        state.out.fill(0.0);
+        let n = state.map.len();
+        if n == 0 {
+            // every lane retired: nothing to compute
+            return Ok(&state.out);
+        }
+        state.idx.validate(&weights.tensors)?;
+        state.scratch.ensure(n, &cfg);
+        let embed = pget(&weights.tensors, state.idx.embed)?;
+        let pos_tab = pget(&weights.tensors, state.idx.pos)?;
+        let d = cfg.d_model;
+        for (r, &(b, pos)) in state.map.iter().enumerate() {
+            embed_row(
+                embed,
+                pos_tab,
+                last[b] as usize,
+                pos,
+                d,
+                &mut state.scratch.x[r * d..(r + 1) * d],
+            );
+        }
+        forward_core(
+            &cfg,
+            &weights.tensors,
+            &state.idx,
+            &Rows::Step { map: &state.map },
+            adapters,
+            &mut state.kv,
+            &mut state.scratch,
+            // step rows are tiny (≤ lanes); threading them costs more
+            // than it saves — prefill is the threaded pass
+            1,
+        )?;
+        for (r, &(b, _)) in state.map.iter().enumerate() {
+            state.out[b * vo..(b + 1) * vo]
+                .copy_from_slice(&state.scratch.logits[r * vo..(r + 1) * vo]);
+        }
+        for &(b, _) in &state.map {
+            state.lens[b] += 1;
+        }
+        Ok(&state.out)
     }
 }
 
@@ -220,71 +456,98 @@ fn validate_adapter_shapes(
     Ok(())
 }
 
-/// Accumulate every present adapter's factor-form delta for `site` into
-/// `y`: rows `b·t .. (b+1)·t` of `x` (rows×n) and `y` (rows×m) belong to
-/// batch element `b`; `(n, m)` is the site's (input, output) width.
-fn apply_adapter_site(
-    adapters: &[Option<&QFactors<'_>>],
-    site: &str,
-    x: &[f32],
-    t: usize,
-    (n, m): (usize, usize),
-    scaling: f32,
-    y: &mut [f32],
-) {
-    for (b, qf) in adapters.iter().enumerate() {
-        let Some(sf) = qf.and_then(|q| q.site(site)) else { continue };
-        sf.apply_delta_acc(
-            &x[b * t * n..(b + 1) * t * n],
-            t,
-            scaling,
-            &mut y[b * t * m..(b + 1) * t * m],
-        );
-    }
+/// Positional indices into the flat weight list (param_names order) plus
+/// the pre-rendered per-layer LoRA site names — resolved **once per
+/// session** (or per one-shot forward), so the per-step hot loop performs
+/// no name formatting, no map building, and no string allocation at all.
+/// The weight list is positional by contract (`upload_weights` keeps
+/// caller order, callers pass `param_names` order), exactly the contract
+/// the old name map relied on when zipping names with tensors.
+pub(crate) struct ParamIndex {
+    n_params: usize,
+    embed: usize,
+    pos: usize,
+    lnf_g: usize,
+    lnf_b: usize,
+    head: usize,
+    /// Per layer: [ln1.g, ln1.b, wq, wk, wv, wo, ln2.g, ln2.b, w1, w2].
+    layers: Vec<[usize; 10]>,
+    /// Per layer, the adapter-site name strings, kernel order:
+    /// [wq, wk, wv, wo, w1, w2].
+    sites: Vec<[String; 6]>,
 }
 
-/// Named f32 views over the flat weight list (param_names order).
-struct Params<'a> {
-    by_name: BTreeMap<String, &'a Tensor>,
-}
-
-impl<'a> Params<'a> {
-    fn new(cfg: &ModelConfig, weights: &'a [Tensor]) -> anyhow::Result<Self> {
+impl ParamIndex {
+    pub(crate) fn new(cfg: &ModelConfig) -> Self {
         let names = cfg.param_names();
-        if names.len() != weights.len() {
-            bail!("weight list has {} tensors, schema has {}", weights.len(), names.len());
+        let by_name: BTreeMap<&str, usize> =
+            names.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+        // every looked-up name comes from the same schema that produced
+        // `names`, so resolution cannot fail
+        let find = |n: &str| *by_name.get(n).expect("schema name");
+        let sites: Vec<[String; 6]> = (0..cfg.n_layers)
+            .map(|l| {
+                [
+                    format!("l{l}.wq"),
+                    format!("l{l}.wk"),
+                    format!("l{l}.wv"),
+                    format!("l{l}.wo"),
+                    format!("l{l}.w1"),
+                    format!("l{l}.w2"),
+                ]
+            })
+            .collect();
+        let layers = (0..cfg.n_layers)
+            .map(|l| {
+                let s = &sites[l];
+                [
+                    find(&format!("l{l}.ln1.g")),
+                    find(&format!("l{l}.ln1.b")),
+                    find(&s[0]),
+                    find(&s[1]),
+                    find(&s[2]),
+                    find(&s[3]),
+                    find(&format!("l{l}.ln2.g")),
+                    find(&format!("l{l}.ln2.b")),
+                    find(&s[4]),
+                    find(&s[5]),
+                ]
+            })
+            .collect();
+        Self {
+            n_params: names.len(),
+            embed: find("embed"),
+            pos: find("pos"),
+            lnf_g: find("lnf.g"),
+            lnf_b: find("lnf.b"),
+            head: find("head"),
+            layers,
+            sites,
         }
-        Ok(Self { by_name: names.into_iter().zip(weights).collect() })
     }
 
-    fn get(&self, name: &str) -> anyhow::Result<&'a [f32]> {
-        self.by_name
-            .get(name)
-            .with_context(|| format!("missing parameter {name}"))?
-            .as_f32()
-            .with_context(|| format!("parameter {name} is not f32"))
+    /// The weight list must carry one tensor per schema parameter.
+    fn validate(&self, weights: &[Tensor]) -> anyhow::Result<()> {
+        if weights.len() != self.n_params {
+            bail!("weight list has {} tensors, schema has {}", weights.len(), self.n_params);
+        }
+        Ok(())
     }
 }
 
-/// `C[m,n] = A[m,k] @ B[k,n]`, row-major flat slices (i-k-j order, same
-/// kernel shape as tensor::ops::matmul).
-fn matmul_flat(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
+/// Parameter `i` of the weight list as an f32 slice.
+#[inline]
+fn pget(weights: &[Tensor], i: usize) -> anyhow::Result<&[f32]> {
+    weights[i].as_f32().with_context(|| format!("parameter #{i} is not f32"))
+}
+
+/// `x_row = embed[tok] + pos[at]`.
+#[inline]
+fn embed_row(embed: &[f32], pos: &[f32], tok: usize, at: usize, d: usize, row: &mut [f32]) {
+    let e = &embed[tok * d..(tok + 1) * d];
+    let po = &pos[at * d..(at + 1) * d];
+    for j in 0..d {
+        row[j] = e[j] + po[j];
     }
 }
 
@@ -312,117 +575,171 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// The reference forward (python/compile/model.py `_forward_impl`), with
-/// optional per-batch-row factor-form adapter deltas on every LoRA site.
-fn ref_forward(
+/// The row → (lane, position) mapping of one pass through
+/// [`forward_core`].
+enum Rows<'a> {
+    /// `bsz` lanes × `t` contiguous positions starting at 0, row-major
+    /// (full forward and prefill).
+    Full { bsz: usize, t: usize },
+    /// One row per still-active lane (incremental decode).
+    Step { map: &'a [(usize, usize)] },
+}
+
+impl Rows<'_> {
+    #[inline]
+    fn n_rows(&self) -> usize {
+        match *self {
+            Rows::Full { bsz, t } => bsz * t,
+            Rows::Step { map } => map.len(),
+        }
+    }
+
+    #[inline]
+    fn lane_pos(&self, r: usize) -> (usize, usize) {
+        match *self {
+            Rows::Full { t, .. } => (r / t, r % t),
+            Rows::Step { map } => map[r],
+        }
+    }
+}
+
+/// Accumulate every present adapter's factor-form delta for `site` into
+/// `y`. In `Full` mode lane `b` owns rows `b·t .. (b+1)·t`; in `Step`
+/// mode each row is its own lane. `(n, m)` is the site's
+/// (input, output) width.
+#[allow(clippy::too_many_arguments)] // one GEMM epilogue, not an API
+fn apply_adapters(
+    rows: &Rows<'_>,
+    adapters: &[Option<&QFactors<'_>>],
+    site: &str,
+    x: &[f32],
+    (n, m): (usize, usize),
+    scaling: f32,
+    y: &mut [f32],
+    fs: &mut FactorScratch,
+) {
+    if adapters.is_empty() {
+        return;
+    }
+    match *rows {
+        Rows::Full { bsz, t } => {
+            for b in 0..bsz {
+                let Some(sf) = adapters[b].and_then(|q| q.site(site)) else { continue };
+                sf.apply_delta_acc_into(
+                    &x[b * t * n..(b + 1) * t * n],
+                    t,
+                    scaling,
+                    &mut y[b * t * m..(b + 1) * t * m],
+                    fs,
+                );
+            }
+        }
+        Rows::Step { map } => {
+            for (r, &(b, _)) in map.iter().enumerate() {
+                let Some(sf) = adapters[b].and_then(|q| q.site(site)) else { continue };
+                sf.apply_delta_acc_into(
+                    &x[r * n..(r + 1) * n],
+                    1,
+                    scaling,
+                    &mut y[r * m..(r + 1) * m],
+                    fs,
+                );
+            }
+        }
+    }
+}
+
+/// The shared layer core (python/compile/model.py `_forward_impl`): runs
+/// every transformer layer plus the head over the rows described by
+/// `rows`, with optional per-lane factor-form adapter deltas on every
+/// LoRA site. `sc.x` must hold the embedded input rows; K/V of each row
+/// is published to `kv` before attention, and attention *reads the
+/// cache*, so a step row attends across everything its lane has consumed.
+/// `weights` is the positional parameter list addressed through `idx`
+/// (resolved once per session). Leaves `rows × vocab` logits in
+/// `sc.logits`.
+#[allow(clippy::too_many_arguments)] // the engine's one inner loop, not an API
+fn forward_core(
     cfg: &ModelConfig,
     weights: &[Tensor],
-    tokens: &[i32],
-    bsz: usize,
-    t: usize,
+    idx: &ParamIndex,
+    rows: &Rows<'_>,
     adapters: &[Option<&QFactors<'_>>],
-) -> anyhow::Result<Vec<f32>> {
-    let p = Params::new(cfg, weights)?;
-    let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+    kv: &mut KvCache,
+    sc: &mut Scratch,
+    threads: usize,
+) -> anyhow::Result<()> {
+    let (d, f, vo) = (cfg.d_model, cfg.d_ff, cfg.vocab);
     let nh = cfg.n_heads;
     if d % nh != 0 {
         bail!("d_model {d} not divisible by n_heads {nh}");
     }
     let hd = d / nh;
-    if tokens.len() != bsz * t {
-        bail!("token batch {}, expected {}x{}", tokens.len(), bsz, t);
-    }
-    if t > cfg.seq_len {
-        bail!("sequence length {t} exceeds model seq_len {}", cfg.seq_len);
-    }
-
-    // x = embed[tokens] + pos[:t]
-    let embed = p.get("embed")?;
-    let pos = p.get("pos")?;
-    let rows = bsz * t;
-    let mut x = vec![0.0f32; rows * d];
-    for b in 0..bsz {
-        for i in 0..t {
-            let tok = tokens[b * t + i];
-            if tok < 0 || tok as usize >= cfg.vocab {
-                bail!("token {tok} out of vocab range 0..{}", cfg.vocab);
-            }
-            let e = &embed[tok as usize * d..(tok as usize + 1) * d];
-            let po = &pos[i * d..(i + 1) * d];
-            let row = &mut x[(b * t + i) * d..(b * t + i + 1) * d];
-            for j in 0..d {
-                row[j] = e[j] + po[j];
-            }
-        }
-    }
-
+    let n = rows.n_rows();
     let lora_s = cfg.lora_scaling();
     let att_scale = 1.0 / (hd as f32).sqrt();
-    let mut hx = vec![0.0f32; rows * d];
-    let mut q = vec![0.0f32; rows * d];
-    let mut k = vec![0.0f32; rows * d];
-    let mut vv = vec![0.0f32; rows * d];
-    let mut att_out = vec![0.0f32; rows * d];
-    let mut proj = vec![0.0f32; rows * d];
-    let mut h1 = vec![0.0f32; rows * f];
-    let mut h2 = vec![0.0f32; rows * d];
-    let mut scores = vec![0.0f32; t];
+    let Scratch { x, hx, q, k, v, att, proj, h1, h2, scores, logits, factor } = sc;
 
     for l in 0..cfg.n_layers {
+        let li = &idx.layers[l];
+        let site = &idx.sites[l];
         // attention block
-        let (g1, b1) = (p.get(&format!("l{l}.ln1.g"))?, p.get(&format!("l{l}.ln1.b"))?);
-        layernorm(&x, rows, d, g1, b1, &mut hx);
-        matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wq"))?, d, &mut q);
-        apply_adapter_site(adapters, &format!("l{l}.wq"), &hx, t, (d, d), lora_s, &mut q);
-        matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wk"))?, d, &mut k);
-        apply_adapter_site(adapters, &format!("l{l}.wk"), &hx, t, (d, d), lora_s, &mut k);
-        matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wv"))?, d, &mut vv);
-        apply_adapter_site(adapters, &format!("l{l}.wv"), &hx, t, (d, d), lora_s, &mut vv);
-        att_out.fill(0.0);
-        for b in 0..bsz {
+        let (g1, b1) = (pget(weights, li[0])?, pget(weights, li[1])?);
+        layernorm(x, n, d, g1, b1, hx);
+        matmul_flat_threaded(hx, n, d, pget(weights, li[2])?, d, q, threads);
+        apply_adapters(rows, adapters, &site[0], hx, (d, d), lora_s, q, factor);
+        matmul_flat_threaded(hx, n, d, pget(weights, li[3])?, d, k, threads);
+        apply_adapters(rows, adapters, &site[1], hx, (d, d), lora_s, k, factor);
+        matmul_flat_threaded(hx, n, d, pget(weights, li[4])?, d, v, threads);
+        apply_adapters(rows, adapters, &site[2], hx, (d, d), lora_s, v, factor);
+        // publish this pass's K/V columns, then attend reading the cache
+        for r in 0..n {
+            let (b, pos) = rows.lane_pos(r);
+            kv.write(l, b, pos, &k[r * d..(r + 1) * d], &v[r * d..(r + 1) * d]);
+        }
+        att.fill(0.0);
+        for r in 0..n {
+            let (b, pos) = rows.lane_pos(r);
+            let klane = kv.k_lane(l, b);
+            let vlane = kv.v_lane(l, b);
             for h in 0..nh {
                 let off = h * hd;
-                for i in 0..t {
-                    let qrow = &q[(b * t + i) * d + off..(b * t + i) * d + off + hd];
-                    // causal scores, masked positions at -1e9 (as in the
-                    // jax model: mask *before* softmax over the full row)
-                    for (j, s) in scores.iter_mut().enumerate() {
-                        *s = if j > i {
-                            -1e9
-                        } else {
-                            let krow = &k[(b * t + j) * d + off..(b * t + j) * d + off + hd];
-                            dot(qrow, krow) * att_scale
-                        };
-                    }
-                    let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
-                    let mut denom = 0.0;
-                    for s in scores.iter_mut() {
-                        *s = (*s - max).exp();
-                        denom += *s;
-                    }
-                    let orow =
-                        &mut att_out[(b * t + i) * d + off..(b * t + i) * d + off + hd];
-                    for (j, &w) in scores.iter().enumerate() {
-                        let w = w / denom;
-                        let vrow = &vv[(b * t + j) * d + off..(b * t + j) * d + off + hd];
-                        for u in 0..hd {
-                            orow[u] += w * vrow[u];
-                        }
+                let qrow = &q[r * d + off..r * d + off + hd];
+                // causal window: this row's lane has exactly pos + 1
+                // cached positions (its own K/V was just published).
+                // Masked-future terms of the full-row softmax exp to 0.0
+                // exactly, so restricting to the window is bit-identical.
+                let win = &mut scores[..pos + 1];
+                for (j, s) in win.iter_mut().enumerate() {
+                    *s = dot(qrow, &klane[j * d + off..j * d + off + hd]) * att_scale;
+                }
+                let max = win.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                let mut denom = 0.0;
+                for s in win.iter_mut() {
+                    *s = (*s - max).exp();
+                    denom += *s;
+                }
+                let orow = &mut att[r * d + off..r * d + off + hd];
+                for (j, &w) in win.iter().enumerate() {
+                    let w = w / denom;
+                    let vrow = &vlane[j * d + off..j * d + off + hd];
+                    for u in 0..hd {
+                        orow[u] += w * vrow[u];
                     }
                 }
             }
         }
-        matmul_flat(&att_out, rows, d, p.get(&format!("l{l}.wo"))?, d, &mut proj);
-        apply_adapter_site(adapters, &format!("l{l}.wo"), &att_out, t, (d, d), lora_s, &mut proj);
-        for (xi, pi) in x.iter_mut().zip(&proj) {
+        matmul_flat_threaded(att, n, d, pget(weights, li[5])?, d, proj, threads);
+        apply_adapters(rows, adapters, &site[3], att, (d, d), lora_s, proj, factor);
+        for (xi, pi) in x.iter_mut().zip(proj.iter()) {
             *xi += pi;
         }
 
         // FFN block
-        let (g2, b2) = (p.get(&format!("l{l}.ln2.g"))?, p.get(&format!("l{l}.ln2.b"))?);
-        layernorm(&x, rows, d, g2, b2, &mut hx);
-        matmul_flat(&hx, rows, d, p.get(&format!("l{l}.w1"))?, f, &mut h1);
-        apply_adapter_site(adapters, &format!("l{l}.w1"), &hx, t, (d, f), lora_s, &mut h1);
+        let (g2, b2) = (pget(weights, li[6])?, pget(weights, li[7])?);
+        layernorm(x, n, d, g2, b2, hx);
+        matmul_flat_threaded(hx, n, d, pget(weights, li[8])?, f, h1, threads);
+        apply_adapters(rows, adapters, &site[4], hx, (d, f), lora_s, h1, factor);
         if cfg.act_silu {
             for z in h1.iter_mut() {
                 *z = silu(*z);
@@ -432,17 +749,57 @@ fn ref_forward(
                 *z = gelu(*z);
             }
         }
-        matmul_flat(&h1, rows, f, p.get(&format!("l{l}.w2"))?, d, &mut h2);
-        apply_adapter_site(adapters, &format!("l{l}.w2"), &h1, t, (f, d), lora_s, &mut h2);
-        for (xi, hi) in x.iter_mut().zip(&h2) {
+        matmul_flat_threaded(h1, n, f, pget(weights, li[9])?, d, h2, threads);
+        apply_adapters(rows, adapters, &site[5], h1, (f, d), lora_s, h2, factor);
+        for (xi, hi) in x.iter_mut().zip(h2.iter()) {
             *xi += hi;
         }
     }
 
-    layernorm(&x, rows, d, p.get("lnf.g")?, p.get("lnf.b")?, &mut hx);
-    let mut logits = vec![0.0f32; rows * v];
-    matmul_flat(&hx, rows, d, p.get("head")?, v, &mut logits);
-    Ok(logits)
+    layernorm(x, n, d, pget(weights, idx.lnf_g)?, pget(weights, idx.lnf_b)?, hx);
+    matmul_flat_threaded(hx, n, d, pget(weights, idx.head)?, vo, logits, threads);
+    Ok(())
+}
+
+/// The full-recompute forward (the decode oracle): every (lane, position)
+/// row of a padded `[bsz, t]` batch through the shared core, returning
+/// `bsz · t · vocab` logits.
+fn ref_forward(
+    cfg: &ModelConfig,
+    weights: &[Tensor],
+    tokens: &[i32],
+    bsz: usize,
+    t: usize,
+    adapters: &[Option<&QFactors<'_>>],
+    threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let idx = ParamIndex::new(cfg);
+    idx.validate(weights)?;
+    if tokens.len() != bsz * t {
+        bail!("token batch {}, expected {}x{}", tokens.len(), bsz, t);
+    }
+    if t > cfg.seq_len {
+        bail!("sequence length {t} exceeds model seq_len {}", cfg.seq_len);
+    }
+    let d = cfg.d_model;
+    let embed = pget(weights, idx.embed)?;
+    let pos = pget(weights, idx.pos)?;
+    let mut sc = Scratch::default();
+    sc.ensure(bsz * t, cfg);
+    for r in 0..bsz * t {
+        let tok = tokens[r];
+        if tok < 0 || tok as usize >= cfg.vocab {
+            bail!("token {tok} out of vocab range 0..{}", cfg.vocab);
+        }
+        embed_row(embed, pos, tok as usize, r % t, d, &mut sc.x[r * d..(r + 1) * d]);
+    }
+    // The oracle path allocates per call by design (it always did — the
+    // pre-KV forward built ~10 per-call buffers); the K/V cache here is
+    // just two more of the same size, routing attention through the one
+    // shared core. Steady-state decode never takes this path.
+    let mut kv = KvCache::new(cfg.n_layers, bsz, t.max(1), d);
+    forward_core(cfg, weights, &idx, &Rows::Full { bsz, t }, adapters, &mut kv, &mut sc, threads)?;
+    Ok(sc.logits)
 }
 
 #[cfg(test)]
@@ -450,6 +807,226 @@ mod tests {
     use super::*;
     use crate::model::{merge_adapter, BaseWeights};
     use crate::testutil::synth::{synth_model_config, synth_quantized_adapter, write_synth_model};
+
+    /// The **pre-PR-4 forward, verbatim** (masked full-row softmax, no KV
+    /// cache, per-call buffers): an oracle *independent of `forward_core`*
+    /// so a numerical drift in the shared kernel cannot hide by agreeing
+    /// with itself. Copied from git history (`0527b7e`), not refactored.
+    mod legacy {
+        use super::super::{gelu, layernorm, silu, validate_adapter_shapes};
+        use crate::adapter::fmt::Tensor;
+        use crate::loraquant::QFactors;
+        use crate::model::ModelConfig;
+        use crate::tensor::dot;
+        use anyhow::{bail, Context};
+        use std::collections::BTreeMap;
+
+        struct Params<'a> {
+            by_name: BTreeMap<String, &'a Tensor>,
+        }
+
+        impl<'a> Params<'a> {
+            fn new(cfg: &ModelConfig, weights: &'a [Tensor]) -> anyhow::Result<Self> {
+                let names = cfg.param_names();
+                if names.len() != weights.len() {
+                    bail!("weight list has {} tensors, schema has {}", weights.len(), names.len());
+                }
+                Ok(Self { by_name: names.into_iter().zip(weights).collect() })
+            }
+
+            fn get(&self, name: &str) -> anyhow::Result<&'a [f32]> {
+                self.by_name
+                    .get(name)
+                    .with_context(|| format!("missing parameter {name}"))?
+                    .as_f32()
+                    .with_context(|| format!("parameter {name} is not f32"))
+            }
+        }
+
+        fn matmul_flat(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+            c.fill(0.0);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (p, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+
+        fn apply_adapter_site(
+            adapters: &[Option<&QFactors<'_>>],
+            site: &str,
+            x: &[f32],
+            t: usize,
+            (n, m): (usize, usize),
+            scaling: f32,
+            y: &mut [f32],
+        ) {
+            for (b, qf) in adapters.iter().enumerate() {
+                let Some(sf) = qf.and_then(|q| q.site(site)) else { continue };
+                sf.apply_delta_acc(
+                    &x[b * t * n..(b + 1) * t * n],
+                    t,
+                    scaling,
+                    &mut y[b * t * m..(b + 1) * t * m],
+                );
+            }
+        }
+
+        pub(super) fn ref_forward(
+            cfg: &ModelConfig,
+            weights: &[Tensor],
+            tokens: &[i32],
+            bsz: usize,
+            t: usize,
+            adapters: &[Option<&QFactors<'_>>],
+        ) -> anyhow::Result<Vec<f32>> {
+            if !adapters.is_empty() {
+                validate_adapter_shapes(cfg, adapters)?;
+            }
+            let p = Params::new(cfg, weights)?;
+            let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+            let nh = cfg.n_heads;
+            if d % nh != 0 {
+                bail!("d_model {d} not divisible by n_heads {nh}");
+            }
+            let hd = d / nh;
+            if tokens.len() != bsz * t {
+                bail!("token batch {}, expected {}x{}", tokens.len(), bsz, t);
+            }
+            if t > cfg.seq_len {
+                bail!("sequence length {t} exceeds model seq_len {}", cfg.seq_len);
+            }
+
+            // x = embed[tokens] + pos[:t]
+            let embed = p.get("embed")?;
+            let pos = p.get("pos")?;
+            let rows = bsz * t;
+            let mut x = vec![0.0f32; rows * d];
+            for b in 0..bsz {
+                for i in 0..t {
+                    let tok = tokens[b * t + i];
+                    if tok < 0 || tok as usize >= cfg.vocab {
+                        bail!("token {tok} out of vocab range 0..{}", cfg.vocab);
+                    }
+                    let e = &embed[tok as usize * d..(tok as usize + 1) * d];
+                    let po = &pos[i * d..(i + 1) * d];
+                    let row = &mut x[(b * t + i) * d..(b * t + i + 1) * d];
+                    for j in 0..d {
+                        row[j] = e[j] + po[j];
+                    }
+                }
+            }
+
+            let lora_s = cfg.lora_scaling();
+            let att_scale = 1.0 / (hd as f32).sqrt();
+            let mut hx = vec![0.0f32; rows * d];
+            let mut q = vec![0.0f32; rows * d];
+            let mut k = vec![0.0f32; rows * d];
+            let mut vv = vec![0.0f32; rows * d];
+            let mut att_out = vec![0.0f32; rows * d];
+            let mut proj = vec![0.0f32; rows * d];
+            let mut h1 = vec![0.0f32; rows * f];
+            let mut h2 = vec![0.0f32; rows * d];
+            let mut scores = vec![0.0f32; t];
+
+            for l in 0..cfg.n_layers {
+                // attention block
+                let (g1, b1) =
+                    (p.get(&format!("l{l}.ln1.g"))?, p.get(&format!("l{l}.ln1.b"))?);
+                layernorm(&x, rows, d, g1, b1, &mut hx);
+                matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wq"))?, d, &mut q);
+                apply_adapter_site(adapters, &format!("l{l}.wq"), &hx, t, (d, d), lora_s, &mut q);
+                matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wk"))?, d, &mut k);
+                apply_adapter_site(adapters, &format!("l{l}.wk"), &hx, t, (d, d), lora_s, &mut k);
+                matmul_flat(&hx, rows, d, p.get(&format!("l{l}.wv"))?, d, &mut vv);
+                apply_adapter_site(adapters, &format!("l{l}.wv"), &hx, t, (d, d), lora_s, &mut vv);
+                att_out.fill(0.0);
+                for b in 0..bsz {
+                    for h in 0..nh {
+                        let off = h * hd;
+                        for i in 0..t {
+                            let qrow = &q[(b * t + i) * d + off..(b * t + i) * d + off + hd];
+                            // causal scores, masked positions at -1e9 (as in
+                            // the jax model: mask *before* softmax over the
+                            // full row)
+                            for (j, s) in scores.iter_mut().enumerate() {
+                                *s = if j > i {
+                                    -1e9
+                                } else {
+                                    let krow =
+                                        &k[(b * t + j) * d + off..(b * t + j) * d + off + hd];
+                                    dot(qrow, krow) * att_scale
+                                };
+                            }
+                            let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                            let mut denom = 0.0;
+                            for s in scores.iter_mut() {
+                                *s = (*s - max).exp();
+                                denom += *s;
+                            }
+                            let orow =
+                                &mut att_out[(b * t + i) * d + off..(b * t + i) * d + off + hd];
+                            for (j, &w) in scores.iter().enumerate() {
+                                let w = w / denom;
+                                let vrow =
+                                    &vv[(b * t + j) * d + off..(b * t + j) * d + off + hd];
+                                for u in 0..hd {
+                                    orow[u] += w * vrow[u];
+                                }
+                            }
+                        }
+                    }
+                }
+                matmul_flat(&att_out, rows, d, p.get(&format!("l{l}.wo"))?, d, &mut proj);
+                apply_adapter_site(
+                    adapters,
+                    &format!("l{l}.wo"),
+                    &att_out,
+                    t,
+                    (d, d),
+                    lora_s,
+                    &mut proj,
+                );
+                for (xi, pi) in x.iter_mut().zip(&proj) {
+                    *xi += pi;
+                }
+
+                // FFN block
+                let (g2, b2) =
+                    (p.get(&format!("l{l}.ln2.g"))?, p.get(&format!("l{l}.ln2.b"))?);
+                layernorm(&x, rows, d, g2, b2, &mut hx);
+                matmul_flat(&hx, rows, d, p.get(&format!("l{l}.w1"))?, f, &mut h1);
+                apply_adapter_site(adapters, &format!("l{l}.w1"), &hx, t, (d, f), lora_s, &mut h1);
+                if cfg.act_silu {
+                    for z in h1.iter_mut() {
+                        *z = silu(*z);
+                    }
+                } else {
+                    for z in h1.iter_mut() {
+                        *z = gelu(*z);
+                    }
+                }
+                matmul_flat(&h1, rows, f, p.get(&format!("l{l}.w2"))?, d, &mut h2);
+                apply_adapter_site(adapters, &format!("l{l}.w2"), &h1, t, (f, d), lora_s, &mut h2);
+                for (xi, hi) in x.iter_mut().zip(&h2) {
+                    *xi += hi;
+                }
+            }
+
+            layernorm(&x, rows, d, p.get("lnf.g")?, p.get("lnf.b")?, &mut hx);
+            let mut logits = vec![0.0f32; rows * v];
+            matmul_flat(&hx, rows, d, p.get("head")?, v, &mut logits);
+            Ok(logits)
+        }
+    }
 
     fn temp_artifacts(tag: &str) -> PathBuf {
         let dir =
@@ -593,6 +1170,211 @@ mod tests {
         let w = engine.upload_weights(&[]).unwrap();
         let err = engine.forward("synth/b1", &[1], &[1, 1], &w).unwrap_err();
         assert!(err.to_string().contains("expects"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Build the standard incremental-vs-oracle fixture: engine, merged
+    /// base weights, quantized adapter.
+    fn kv_fixture(tag: &str) -> (PathBuf, ModelConfig, Engine, DeviceWeights, DeviceWeights) {
+        let dir = temp_artifacts(tag);
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[4], 77).unwrap();
+        let base = BaseWeights::load(dir.join("synth")).unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        engine.load_model_fwd("synth", 4, base.cfg.param_names().len()).unwrap();
+        let stored = synth_quantized_adapter(&cfg, 51);
+        let w_merged = engine
+            .upload_weights(&merge_adapter(&base, &stored.deltas()).unwrap())
+            .unwrap();
+        let w_base = engine
+            .upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap())
+            .unwrap();
+        (dir, cfg, engine, w_merged, w_base)
+    }
+
+    /// The refactor gate: the shared-core forward (KV-cache reads,
+    /// windowed softmax) must be **bit-identical** to the verbatim
+    /// pre-PR-4 implementation — base weights, merged adapter, and the
+    /// per-row factor path, over varied token patterns. This is the
+    /// independent oracle: it shares no kernel code with `forward_core`.
+    #[test]
+    fn shared_core_bit_identical_to_legacy_forward() {
+        let (dir, cfg, engine, w_merged, w_base) = kv_fixture("kvlegacy");
+        let t = cfg.seq_len;
+        let mut tokens = vec![0i32; 3 * t];
+        for (i, tok) in tokens.iter_mut().enumerate() {
+            *tok = ((i * 7 + i / t) % cfg.vocab) as i32;
+        }
+        for w in [&w_merged, &w_base] {
+            let new = engine.forward("synth/b4", &tokens, &[3, t], w).unwrap();
+            let old =
+                legacy::ref_forward(&cfg, &w.tensors, &tokens, 3, t, &[]).unwrap();
+            assert_eq!(new, old, "base/merged forward must match the pre-KV oracle bitwise");
+        }
+        let stored = synth_quantized_adapter(&cfg, 51);
+        let qf = stored.factors();
+        let adapters = [None, Some(&qf), Some(&qf)];
+        let new = engine
+            .forward_with_adapters("synth/b4", &tokens, &[3, t], &w_base, &adapters)
+            .unwrap();
+        let old =
+            legacy::ref_forward(&cfg, &w_base.tensors, &tokens, 3, t, &adapters).unwrap();
+        assert_eq!(new, old, "factor-path forward must match the pre-KV oracle bitwise");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefill_rows_match_full_forward_exactly() {
+        let (dir, cfg, engine, w, _) = kv_fixture("kvpre");
+        let t = cfg.seq_len;
+        let vo = cfg.vocab;
+        // ragged prompts, padded full-length lanes (PAD = 0)
+        let lens = [3usize, 7, 1];
+        let mut seqs: Vec<Vec<i32>> = vec![vec![0; t]; 3];
+        for (k, s) in seqs.iter_mut().enumerate() {
+            for i in 0..lens[k] {
+                s[i] = 1 + ((k * 7 + i * 3) % (cfg.vocab - 1)) as i32;
+            }
+        }
+        let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+        let full = engine.forward("synth/b4", &flat, &[3, t], &w).unwrap();
+        let (state, logits) = engine.prefill("synth/b4", &seqs, &lens, &w, &[]).unwrap();
+        assert_eq!(state.lanes(), 3);
+        assert_eq!(logits.len(), 3 * vo);
+        for (k, &len) in lens.iter().enumerate() {
+            assert_eq!(state.lane_len(k), len);
+            let want = &full[(k * t + len - 1) * vo..(k * t + len) * vo];
+            assert_eq!(&logits[k * vo..(k + 1) * vo], want, "lane {k} prefill row");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Greedy-extend `steps` tokens two ways — full recompute vs
+    /// prefill + decode_step — asserting bit-identical logits rows at
+    /// every step. Covers merged (no adapters) and factor paths.
+    fn assert_incremental_matches_full(
+        engine: &Engine,
+        cfg: &ModelConfig,
+        w: &DeviceWeights,
+        adapters: &[Option<&QFactors<'_>>],
+        steps: usize,
+    ) {
+        let t = cfg.seq_len;
+        let vo = cfg.vocab;
+        let lens = [2usize, 5];
+        let mut seqs: Vec<Vec<i32>> = vec![vec![0; t]; 2];
+        for (k, s) in seqs.iter_mut().enumerate() {
+            for i in 0..lens[k] {
+                s[i] = 1 + ((k * 5 + i) % (cfg.vocab - 1)) as i32;
+            }
+        }
+        let mut pos = lens;
+        let (mut state, logits) =
+            engine.prefill("synth/b4", &seqs, &lens, w, adapters).unwrap();
+        let mut step_logits = logits;
+        for step in 0..steps {
+            // pick each lane's next token from the incremental logits...
+            let mut last = vec![0i32; 2];
+            for k in 0..2 {
+                let row = &step_logits[k * vo..(k + 1) * vo];
+                let best =
+                    (0..vo).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap();
+                seqs[k][pos[k]] = best as i32;
+                last[k] = best as i32;
+                pos[k] += 1;
+            }
+            // ...and check the oracle agrees on the *next* logits row
+            let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+            let full = engine
+                .forward_with_adapters("synth/b4", &flat, &[2, t], w, adapters)
+                .unwrap();
+            step_logits =
+                engine.decode_step(&mut state, w, adapters, &last).unwrap().to_vec();
+            for k in 0..2 {
+                let want = &full[(k * t + pos[k] - 1) * vo..(k * t + pos[k]) * vo];
+                assert_eq!(
+                    &step_logits[k * vo..(k + 1) * vo],
+                    want,
+                    "step {step} lane {k}: incremental must be bit-identical to the oracle"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_bit_identical_to_full_recompute() {
+        let (dir, cfg, engine, w_merged, w_base) = kv_fixture("kvstep");
+        assert_incremental_matches_full(&engine, &cfg, &w_merged, &[], 6);
+        let stored = synth_quantized_adapter(&cfg, 51);
+        let qf = stored.factors();
+        assert_incremental_matches_full(&engine, &cfg, &w_base, &[Some(&qf), Some(&qf)], 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn threaded_prefill_is_bit_identical() {
+        let (dir, cfg, mut engine, w, _) = kv_fixture("kvthreads");
+        let lens = [cfg.seq_len - 2, 4];
+        let seqs: Vec<Vec<i32>> =
+            (0..2).map(|k| (0..cfg.seq_len as i32).map(|i| (i + k) % 9 + 1).collect()).collect();
+        let (_, serial) = engine.prefill("synth/b4", &seqs, &lens, &w, &[]).unwrap();
+        for threads in [2usize, 4] {
+            engine.set_compute_threads(threads);
+            assert_eq!(engine.compute_threads(), threads);
+            let (_, par) = engine.prefill("synth/b4", &seqs, &lens, &w, &[]).unwrap();
+            assert_eq!(par, serial, "threads={threads} must not change logits");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retired_lanes_stop_costing_and_zero_their_rows() {
+        let (dir, cfg, engine, w, _) = kv_fixture("kvretire");
+        let vo = cfg.vocab;
+        let seqs: Vec<Vec<i32>> = vec![vec![1; cfg.seq_len]; 3];
+        let lens = [2usize, 2, 2];
+        let (mut state, _) = engine.prefill("synth/b4", &seqs, &lens, &w, &[]).unwrap();
+        state.retire(1);
+        assert_eq!(state.active_lanes(), 2);
+        let logits = engine.decode_step(&mut state, &w, &[], &[3, 3, 3]).unwrap().to_vec();
+        assert!(logits[vo..2 * vo].iter().all(|&x| x == 0.0), "retired row must be zero");
+        assert!(logits[..vo].iter().any(|&x| x != 0.0));
+        assert_eq!(state.lane_len(0), 3, "active lane advanced");
+        assert_eq!(state.lane_len(1), 2, "retired lane frozen");
+        // all lanes retired: a step computes nothing and returns zeros
+        state.retire(0);
+        state.retire(2);
+        let logits = engine.decode_step(&mut state, &w, &[], &[3, 3, 3]).unwrap();
+        assert!(logits.iter().all(|&x| x == 0.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn decode_step_errors_at_capacity_and_on_bad_input() {
+        let (dir, cfg, engine, w, _) = kv_fixture("kvcap");
+        let seqs: Vec<Vec<i32>> = vec![vec![1; cfg.seq_len]];
+        // prefill the whole window: the next step has no cache column left
+        let lens = [cfg.seq_len];
+        let (mut state, _) = engine.prefill("synth/b4", &seqs, &lens, &w, &[]).unwrap();
+        let err = engine.decode_step(&mut state, &w, &[], &[1]).unwrap_err();
+        assert!(err.to_string().contains("capacity"), "{err}");
+        // lane arity and token range
+        let (mut state, _) = engine.prefill("synth/b4", &seqs, &[2], &w, &[]).unwrap();
+        assert!(engine.decode_step(&mut state, &w, &[], &[1, 1]).is_err());
+        assert!(engine.decode_step(&mut state, &w, &[], &[-1]).is_err());
+        assert!(engine
+            .decode_step(&mut state, &w, &[], &[cfg.vocab as i32])
+            .is_err());
+        // prefill validation
+        assert!(engine.prefill("synth/b4", &[], &[], &w, &[]).is_err(), "empty lane set");
+        assert!(
+            engine.prefill("synth/b4", &seqs, &[0], &w, &[]).is_err(),
+            "zero-length lane"
+        );
+        assert!(
+            engine.prefill("synth/b4", &seqs, &[cfg.seq_len + 1], &w, &[]).is_err(),
+            "overlong lane"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

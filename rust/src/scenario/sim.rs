@@ -169,6 +169,7 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
     cfg.max_wait = spec.max_wait;
     cfg.cache_budget_bytes = spec.cache_budget_bytes;
     cfg.merge_workers = spec.merge_workers;
+    cfg.compute_threads = spec.compute_threads;
     cfg.merge_hook = Some(hook);
     let (coord, join) = Coordinator::start(cfg).context("starting scenario coordinator")?;
 

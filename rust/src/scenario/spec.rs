@@ -75,6 +75,10 @@ pub struct ScenarioSpec {
     pub strategy: MergeStrategy,
     pub workers: usize,
     pub merge_workers: usize,
+    /// Per-engine prefill worker threads (1 = serial). Thread count never
+    /// changes logits, so golden traces hold at any value; the default 1
+    /// additionally pins the serial execution schedule.
+    pub compute_threads: usize,
     pub buckets: Vec<usize>,
     pub max_wait: Duration,
     pub cache_budget_bytes: usize,
@@ -105,6 +109,7 @@ impl Default for ScenarioSpec {
             strategy: MergeStrategy::Merged,
             workers: 1,
             merge_workers: 1,
+            compute_threads: 1,
             // the buckets aot.py actually exports, so specs run unchanged
             // against real PJRT artifacts
             buckets: vec![1, 8],

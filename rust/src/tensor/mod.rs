@@ -7,8 +7,9 @@
 mod ops;
 
 pub use ops::{
-    matmul, matmul_a_bt, matmul_at_b, matmul_qdequant, matmul_qdequant_acc, matmul_qdequant_bt,
-    matmul_qdequant_bt_acc, outer, DequantRows,
+    matmul, matmul_a_bt, matmul_at_b, matmul_flat, matmul_flat_threaded, matmul_qdequant,
+    matmul_qdequant_acc, matmul_qdequant_acc_into, matmul_qdequant_bt, matmul_qdequant_bt_acc,
+    matmul_qdequant_bt_acc_into, outer, DequantRows,
 };
 
 /// Row-major dense f32 matrix.

@@ -1,15 +1,22 @@
 //! Matrix products. Row-major, cache-blocked enough for LoRA-sized work.
 //!
-//! Two families:
+//! Three families:
 //!
 //! * dense × dense ([`matmul`], [`matmul_at_b`], [`matmul_a_bt`], [`outer`]);
+//! * dense × dense on **flat slices** ([`matmul_flat`],
+//!   [`matmul_flat_threaded`]) — the reference engine's hot projection
+//!   kernel, with an output-row-partitioned `std::thread::scope` variant
+//!   for batched prefill. Each output row accumulates in the same order
+//!   regardless of thread count, so the threaded product is bit-identical
+//!   to the serial one;
 //! * dense × **quantized** ([`matmul_qdequant_acc`],
 //!   [`matmul_qdequant_bt_acc`]) — skinny GEMMs whose right operand stays
 //!   packed: each stored row is unpacked + scaled once into an O(cols)
 //!   scratch buffer and streamed through the product, so the dense matrix
 //!   is never materialized. These are the factor-form serving kernels
 //!   (DESIGN.md §8); anything implementing [`DequantRows`] can be the
-//!   right operand.
+//!   right operand. The `_into` variants take the scratch row from the
+//!   caller, so steady-state decode allocates nothing (DESIGN.md §10).
 
 use super::{dot, Matrix};
 
@@ -106,6 +113,69 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
+/// The serial row kernel shared by [`matmul_flat`] and every partition of
+/// [`matmul_flat_threaded`]: `c[rows×n] += a[rows×k] @ b[k×n]` (callers
+/// zero `c` first).
+fn matmul_flat_rows(a: &[f32], rows: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `C[m,n] = A[m,k] @ B[k,n]` on flat row-major slices (i-k-j order, the
+/// same kernel shape as [`matmul`]).
+pub fn matmul_flat(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    matmul_flat_rows(a, m, k, b, n, c);
+}
+
+/// [`matmul_flat`] with the output rows partitioned across `threads`
+/// scoped worker threads (no thread pool, no dependencies — workers live
+/// for one product). Every output row runs the identical serial
+/// accumulation, so the result is **bit-identical** for every thread
+/// count; `threads <= 1` is exactly the serial kernel.
+pub fn matmul_flat_threaded(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+    threads: usize,
+) {
+    let threads = threads.max(1).min(m.max(1));
+    if threads <= 1 || n == 0 {
+        return matmul_flat(a, m, k, b, n, c);
+    }
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let chunk = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, cs) in c.chunks_mut(chunk * n).enumerate() {
+            let rows = cs.len() / n;
+            let asub = &a[ci * chunk * k..(ci * chunk + rows) * k];
+            s.spawn(move || {
+                cs.fill(0.0);
+                matmul_flat_rows(asub, rows, k, b, n, cs);
+            });
+        }
+    });
+}
+
 /// Outer product `u vᵀ` as an m×n matrix.
 pub fn outer(u: &[f32], v: &[f32]) -> Matrix {
     let mut c = Matrix::zeros(u.len(), v.len());
@@ -119,26 +189,30 @@ pub fn outer(u: &[f32], v: &[f32]) -> Matrix {
 }
 
 /// `out += alpha · X @ deq(Q)` on flat row-major buffers
-/// (X: rows×k, Q stored k×n, out: rows×n).
+/// (X: rows×k, Q stored k×n, out: rows×n), with the O(n) dequant row
+/// supplied by the caller (resized in place, so a warm buffer makes the
+/// kernel allocation-free).
 ///
 /// p-i-j loop order so each packed row of Q is dequantized exactly once
-/// per call into an O(n) scratch buffer, then streamed against column p
-/// of X — the full dense Q never exists.
-pub fn matmul_qdequant_acc(
+/// per call, then streamed against column p of X — the full dense Q never
+/// exists.
+pub fn matmul_qdequant_acc_into(
     x: &[f32],
     rows: usize,
     k: usize,
     q: &dyn DequantRows,
     alpha: f32,
     out: &mut [f32],
+    qrow: &mut Vec<f32>,
 ) {
     assert_eq!(q.src_rows(), k, "qdequant: Q has {} rows, X has {} cols", q.src_rows(), k);
     let n = q.src_cols();
     assert_eq!(x.len(), rows * k, "qdequant: X len {} != {}x{}", x.len(), rows, k);
     assert_eq!(out.len(), rows * n, "qdequant: out len {} != {}x{}", out.len(), rows, n);
-    let mut qrow = vec![0.0f32; n];
+    qrow.resize(n, 0.0);
+    let qrow = &mut qrow[..n];
     for p in 0..k {
-        q.dequant_row_into(p, &mut qrow);
+        q.dequant_row_into(p, qrow);
         for i in 0..rows {
             let av = alpha * x[i * k + p];
             if av == 0.0 {
@@ -152,11 +226,49 @@ pub fn matmul_qdequant_acc(
     }
 }
 
+/// [`matmul_qdequant_acc_into`] with a one-shot scratch row.
+pub fn matmul_qdequant_acc(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    q: &dyn DequantRows,
+    alpha: f32,
+    out: &mut [f32],
+) {
+    let mut qrow = Vec::new();
+    matmul_qdequant_acc_into(x, rows, k, q, alpha, out, &mut qrow);
+}
+
 /// `out += alpha · X @ deq(Q)ᵀ` on flat row-major buffers
-/// (X: rows×k, Q stored n×k, out: rows×n).
+/// (X: rows×k, Q stored n×k, out: rows×n), dequant row supplied by the
+/// caller.
 ///
 /// Each packed row of Q is dequantized once, then dotted with every row
 /// of X (both contiguous), writing one output column.
+pub fn matmul_qdequant_bt_acc_into(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    q: &dyn DequantRows,
+    alpha: f32,
+    out: &mut [f32],
+    qrow: &mut Vec<f32>,
+) {
+    assert_eq!(q.src_cols(), k, "qdequant_bt: Q has {} cols, X has {} cols", q.src_cols(), k);
+    let n = q.src_rows();
+    assert_eq!(x.len(), rows * k, "qdequant_bt: X len {} != {}x{}", x.len(), rows, k);
+    assert_eq!(out.len(), rows * n, "qdequant_bt: out len {} != {}x{}", out.len(), rows, n);
+    qrow.resize(k, 0.0);
+    let qrow = &mut qrow[..k];
+    for j in 0..n {
+        q.dequant_row_into(j, qrow);
+        for i in 0..rows {
+            out[i * n + j] += alpha * dot(&x[i * k..(i + 1) * k], qrow);
+        }
+    }
+}
+
+/// [`matmul_qdequant_bt_acc_into`] with a one-shot scratch row.
 pub fn matmul_qdequant_bt_acc(
     x: &[f32],
     rows: usize,
@@ -165,17 +277,8 @@ pub fn matmul_qdequant_bt_acc(
     alpha: f32,
     out: &mut [f32],
 ) {
-    assert_eq!(q.src_cols(), k, "qdequant_bt: Q has {} cols, X has {} cols", q.src_cols(), k);
-    let n = q.src_rows();
-    assert_eq!(x.len(), rows * k, "qdequant_bt: X len {} != {}x{}", x.len(), rows, k);
-    assert_eq!(out.len(), rows * n, "qdequant_bt: out len {} != {}x{}", out.len(), rows, n);
-    let mut qrow = vec![0.0f32; k];
-    for j in 0..n {
-        q.dequant_row_into(j, &mut qrow);
-        for i in 0..rows {
-            out[i * n + j] += alpha * dot(&x[i * k..(i + 1) * k], &qrow);
-        }
-    }
+    let mut qrow = Vec::new();
+    matmul_qdequant_bt_acc_into(x, rows, k, q, alpha, out, &mut qrow);
 }
 
 /// Matrix-shaped convenience over [`matmul_qdequant_acc`]:
@@ -273,6 +376,49 @@ mod tests {
         let q = rand_mat(5, 7, 10);
         let c = matmul_qdequant_bt(&x, &q);
         assert!(c.rel_err(&matmul(&x, &q.transpose())) < 1e-6);
+    }
+
+    #[test]
+    fn flat_matmul_matches_matrix_kernel() {
+        let a = rand_mat(9, 7, 21);
+        let b = rand_mat(7, 5, 22);
+        let mut c = vec![f32::NAN; 9 * 5];
+        matmul_flat(a.data(), 9, 7, b.data(), 5, &mut c);
+        assert_eq!(c, matmul(&a, &b).into_vec(), "flat kernel must match Matrix matmul exactly");
+    }
+
+    #[test]
+    fn threaded_flat_matmul_bit_identical_for_every_thread_count() {
+        // ragged row counts so chunking hits partial final partitions
+        for m in [1usize, 2, 5, 8, 13] {
+            let a = rand_mat(m, 11, 31 + m as u64);
+            let b = rand_mat(11, 6, 32);
+            let mut serial = vec![0.0f32; m * 6];
+            matmul_flat(a.data(), m, 11, b.data(), 6, &mut serial);
+            for threads in [1usize, 2, 3, 4, 16] {
+                let mut par = vec![f32::NAN; m * 6];
+                matmul_flat_threaded(a.data(), m, 11, b.data(), 6, &mut par, threads);
+                assert_eq!(par, serial, "m={m} threads={threads} must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn qdequant_into_reuses_caller_scratch() {
+        let x = rand_mat(4, 6, 41);
+        let q = rand_mat(6, 9, 42);
+        let qt = rand_mat(9, 6, 43);
+        let mut scratch = Vec::new();
+        let mut out = vec![0.0f32; 4 * 9];
+        matmul_qdequant_acc_into(x.data(), 4, 6, &q, 1.0, &mut out, &mut scratch);
+        assert_eq!(out, matmul_qdequant(&x, &q).into_vec());
+        assert_eq!(scratch.len(), 9, "scratch holds one dequant row");
+        let cap = scratch.capacity();
+        // the bt kernel resizes the same buffer down and reuses it
+        let mut out_bt = vec![0.0f32; 4 * 9];
+        matmul_qdequant_bt_acc_into(x.data(), 4, 6, &qt, 1.0, &mut out_bt, &mut scratch);
+        assert_eq!(out_bt, matmul_qdequant_bt(&x, &qt).into_vec());
+        assert_eq!(scratch.capacity(), cap, "warm scratch must not reallocate");
     }
 
     #[test]

@@ -59,6 +59,71 @@ fn golden_trace_identical_across_runs_and_fast() {
     );
 }
 
+/// Checked-in golden files (ROADMAP scenario-harness follow-up (a)):
+/// each acceptance spec's event log must match
+/// `tests/golden/acceptance_<strategy>.log` byte for byte — catching
+/// drift against history, not just run-vs-run.
+///
+/// * `LQ_BLESS=1` (re)writes the files; commit the result.
+/// * A missing file is reported loudly but does not fail, so a fresh
+///   checkout (or a platform whose libm rounds `exp`/`tanh` differently
+///   — see tests/golden/README.md) stays green until blessed. CI
+///   blesses absent files first and then verifies, and uploads the logs
+///   as an artifact.
+#[test]
+fn golden_trace_files_match_checked_in_logs() {
+    let golden_dir =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden");
+    let env = ScenarioEnv::synth("goldenfiles", 4).unwrap();
+    let bless = std::env::var_os("LQ_BLESS").is_some();
+    let mut missing = Vec::new();
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor, MergeStrategy::Auto] {
+        let run = run_scenario(&acceptance_spec(strategy), &env).unwrap();
+        assert_eq!(run.summary.ok, 220, "{strategy}: acceptance trace must fully complete");
+        let path = golden_dir.join(format!("acceptance_{strategy}.log"));
+        if bless {
+            std::fs::create_dir_all(&golden_dir).unwrap();
+            std::fs::write(&path, run.log()).unwrap();
+            eprintln!("blessed {} ({} events)", path.display(), run.events.len());
+            continue;
+        }
+        match std::fs::read_to_string(&path) {
+            Ok(want) => assert_eq!(
+                run.log(),
+                want,
+                "{strategy}: trace drifted from the checked-in golden {} — \
+                 if the change is intentional, re-bless with LQ_BLESS=1 and commit",
+                path.display()
+            ),
+            Err(_) => missing.push(path),
+        }
+    }
+    for path in &missing {
+        eprintln!(
+            "golden trace {} not checked in — run `LQ_BLESS=1 cargo test --release \
+             --test scenario golden_trace_files` and commit it",
+            path.display()
+        );
+    }
+}
+
+/// The compute-threads determinism contract (DESIGN.md §10): prefill
+/// threading is a wall-clock knob only. Under the virtual clock decode
+/// takes zero simulated time and thread count never changes logits, so
+/// the whole event log — not just the tokens — is byte-identical at any
+/// `compute_threads`.
+#[test]
+fn compute_threads_do_not_change_golden_traces() {
+    let env = ScenarioEnv::synth("cthreads", 4).unwrap();
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor] {
+        let serial = run_scenario(&acceptance_spec(strategy), &env).unwrap();
+        let threaded = ScenarioSpec { compute_threads: 4, ..acceptance_spec(strategy) };
+        let b = run_scenario(&threaded, &env).unwrap();
+        assert_eq!(serial.log(), b.log(), "{strategy}: trace must not depend on threads");
+        assert_eq!(serial.tokens, b.tokens, "{strategy}: tokens must not depend on threads");
+    }
+}
+
 /// Determinism of *results*, not schedule: per-request token output is
 /// identical across pool sizes (routing and batch composition change,
 /// but the reference forward is per-lane independent).
