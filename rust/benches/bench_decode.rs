@@ -14,11 +14,18 @@
 //!    rides on a single token row, so it must not change the scaling.
 //! 3. **Threaded prefill** — prompt-pass latency at 1/2/4 compute
 //!    threads (row-partitioned matmuls; identical logits at any count).
+//!    Since DESIGN.md §11 the threads row measures the **persistent
+//!    compute pool** (`scheduler::workers::ComputePool`, two condvar
+//!    handshakes per kernel), not the old per-call `thread::scope`
+//!    spawns whose ~6L+1 barriers per prefill set the §10 crossover —
+//!    re-run this bench to refresh the crossover claim.
 //!
 //! Reference engine only: the synthetic model has no HLO artifacts.
 
 use loraquant::model::{merge_adapter, BaseWeights, ModelConfig};
 use loraquant::runtime::Engine;
+use loraquant::scheduler::ComputePool;
+use loraquant::tensor::{matmul_flat, matmul_flat_threaded};
 use loraquant::testutil::{synth_quantized_adapter, write_synth_model};
 use std::time::{Duration, Instant};
 
@@ -117,7 +124,7 @@ fn main() -> anyhow::Result<()> {
         rows.push(format!(r#"{{"mode":"full","seq":{len},"per_step_us":{full_us:.1}}}"#));
     }
 
-    println!("\n# Threaded prefill (prompt length 88)");
+    println!("\n# Threaded prefill over the persistent compute pool (prompt length 88)");
     let seqs = prompt(88);
     let lane_lens = [88usize];
     for threads in [1usize, 2, 4] {
@@ -129,12 +136,50 @@ fn main() -> anyhow::Result<()> {
             let _ = engine.prefill("bench/b1", &seqs, &lane_lens, &w, &[])?;
         }
         let us = mean_us(t0.elapsed(), PRE_REPS);
-        println!("threads={threads} prefill_us={us:.1}");
+        println!("threads={threads} prefill_us={us:.1} (persistent pool)");
         rows.push(format!(
-            r#"{{"mode":"prefill_threads","threads":{threads},"seq":88,"prefill_us":{us:.1}}}"#
+            r#"{{"mode":"prefill_threads_pool","threads":{threads},"seq":88,"prefill_us":{us:.1}}}"#
         ));
     }
     engine.set_compute_threads(1);
+
+    // Kernel-level baseline: the persistent pool vs the legacy per-call
+    // `thread::scope` spawns on the prefill projection shape (88 rows ×
+    // d 64 @ 64×64) — the §10→§11 crossover claim, measured directly.
+    println!("\n# Kernel: persistent pool vs scoped-spawn matmul (88x64 @ 64x64)");
+    let (m, k, n) = (88usize, 64usize, 64usize);
+    let a: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| (i % 11) as f32 * 0.1 - 0.5).collect();
+    let mut c = vec![0.0f32; m * n];
+    const MM_REPS: usize = 400;
+    let t0 = Instant::now();
+    for _ in 0..MM_REPS {
+        matmul_flat(&a, m, k, &b, n, &mut c);
+    }
+    let serial_us = mean_us(t0.elapsed(), MM_REPS);
+    println!("threads=1 serial_us={serial_us:.2}");
+    rows.push(format!(r#"{{"mode":"kernel_serial","threads":1,"matmul_us":{serial_us:.2}}}"#));
+    for threads in [2usize, 4] {
+        let pool = ComputePool::new(threads);
+        pool.matmul_flat(&a, m, k, &b, n, &mut c); // warm the workers
+        let t0 = Instant::now();
+        for _ in 0..MM_REPS {
+            pool.matmul_flat(&a, m, k, &b, n, &mut c);
+        }
+        let pool_us = mean_us(t0.elapsed(), MM_REPS);
+        let t0 = Instant::now();
+        for _ in 0..MM_REPS {
+            matmul_flat_threaded(&a, m, k, &b, n, &mut c, threads);
+        }
+        let scoped_us = mean_us(t0.elapsed(), MM_REPS);
+        println!(
+            "threads={threads} pool_us={pool_us:.2} scoped_spawn_us={scoped_us:.2} ({:.1}x)",
+            scoped_us / pool_us.max(1e-9)
+        );
+        rows.push(format!(
+            r#"{{"mode":"kernel_pool_vs_scoped","threads":{threads},"pool_us":{pool_us:.2},"scoped_us":{scoped_us:.2}}}"#
+        ));
+    }
 
     let json = format!(
         "{{\"bench\":\"decode\",\"steps_per_point\":{STEPS},\"rows\":[{}]}}\n",

@@ -1,0 +1,258 @@
+//! Continuous-batching scheduler benchmark (DESIGN.md §11): the two
+//! headline numbers, measured engine-level so nothing but the decode
+//! protocol differs.
+//!
+//! 1. **Steady-state tokens/sec** at mixed sequence lengths — one
+//!    saturating Zipf-tenant queue of requests with cycling budgets and
+//!    prompt lengths, decoded (a) continuously (freed lanes re-admitted
+//!    mid-flight from the fair admission queue) and (b) lock-step
+//!    (arrival-order batches of `LANES`, each batch running until its
+//!    slowest lane drains).
+//! 2. **Time-to-first-token** under that saturating trace — p50/p99 of
+//!    (enqueue → first token). Continuous admits a request the moment a
+//!    lane frees; lock-step holds it until its whole batch is done (a
+//!    batch's outputs become visible at batch completion).
+//!
+//! Both paths run at 1/2/4 compute threads over the persistent pool, so
+//! the rows double as the pool's scaling measurement (the scoped-spawn
+//! predecessor is gone from the engine; `bench_decode`'s
+//! `kernel_pool_vs_scoped` rows bench the pool against it directly).
+//!
+//! Writes `BENCH_scheduler.json` next to the other CI snapshots.
+//! Reference engine only.
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    eprintln!("bench_scheduler: reference engine only (PJRT decodes lock-step)");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() -> anyhow::Result<()> {
+    bench::run()
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod bench {
+    use loraquant::clock::Clock;
+    use loraquant::eval::{decode_lockstep, EngineStepper, TOKENS};
+    use loraquant::model::{merge_adapter, BaseWeights, ModelConfig};
+    use loraquant::runtime::Engine;
+    use loraquant::scheduler::{
+        run_continuous, AdmissionQueue, ContinuousConfig, LaneRequest, SessionStepper,
+    };
+    use loraquant::testutil::{synth_quantized_adapter, write_synth_model, Rng};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    const LANES: usize = 8;
+    const REQUESTS: usize = 64;
+
+    /// Same shape as bench_decode: big enough that per-step work dominates,
+    /// small enough that the whole bench is seconds.
+    fn bench_config() -> ModelConfig {
+        ModelConfig {
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 128,
+            vocab: 64,
+            seq_len: 96,
+            lora_rank: 8,
+            lora_alpha: 16,
+            act_silu: false,
+        }
+    }
+
+    struct Req {
+        prompt: Vec<i32>,
+        budget: usize,
+        tenant: u32,
+    }
+
+    /// Mixed-length saturating workload: prompt lengths 4..=35, budgets
+    /// 1..=24, Zipf-ish tenant mix.
+    fn workload(cfg: &ModelConfig) -> Vec<Req> {
+        let mut rng = Rng::new(97);
+        (0..REQUESTS)
+            .map(|i| {
+                let plen = 4 + (i * 7 + 3) % 32;
+                let prompt: Vec<i32> =
+                    (0..plen).map(|_| 1 + rng.below(cfg.vocab - 1) as i32).collect();
+                Req { prompt, budget: 1 + (i * 5 + 2) % 24, tenant: (rng.below(4)) as u32 }
+            })
+            .collect()
+    }
+
+    fn quantiles(mut v: Vec<Duration>) -> (Duration, Duration) {
+        v.sort_unstable();
+        let q = |p: f64| v[(((p * v.len() as f64).ceil() as usize).max(1) - 1).min(v.len() - 1)];
+        (q(0.5), q(0.99))
+    }
+
+    pub fn run() -> anyhow::Result<()> {
+        let dir = std::env::temp_dir().join(format!("lq_bench_sched_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = bench_config();
+        write_synth_model(&dir, "bench", &cfg, &[LANES], 7)?;
+        let base = BaseWeights::load(dir.join("bench"))?;
+        let mut engine = Engine::new(&dir)?;
+        engine.load_model_fwd("bench", LANES, base.cfg.param_names().len())?;
+        let w = engine.upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new())?)?;
+        let stored = Arc::new(synth_quantized_adapter(&cfg, 21));
+        let reqs = workload(&cfg);
+        let clock = Clock::real();
+        let prog = format!("bench/b{LANES}");
+        let mut rows: Vec<String> = Vec::new();
+
+        println!(
+            "# Continuous vs lock-step scheduler (d=64, L=2, seq_len=96, lanes={LANES}, {} requests, mixed lengths)",
+            reqs.len()
+        );
+        println!(
+            "{:>7} {:>12} {:>10} {:>10} {:>12} {:>12} {:>9} {:>9}",
+            "threads", "mode", "tok/s", "steps", "ttft_p50", "ttft_p99", "tokens", "wall_ms"
+        );
+
+        for threads in [1usize, 2, 4] {
+            engine.set_compute_threads(threads);
+
+            // ---- continuous: one session, fair admission, lane reuse ----
+            let mut queue = AdmissionQueue::new();
+            let t0 = Instant::now();
+            for (i, r) in reqs.iter().enumerate() {
+                queue.push(LaneRequest {
+                    id: i as u64,
+                    tenant: r.tenant,
+                    prompt: r.prompt.clone(),
+                    budget: r.budget,
+                    adapter: None,
+                    enqueued: t0,
+                });
+            }
+            let mut slot = None;
+            let mut stepper = SessionStepper::new(&engine, &prog, &w, &mut slot);
+            let ccfg = ContinuousConfig { lanes: LANES, seq_len: cfg.seq_len, vocab: cfg.vocab };
+            let mut ttfts = Vec::with_capacity(reqs.len());
+            let mut tokens = 0u64;
+            let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
+                ttfts.push(fin.ttft);
+                tokens += fin.tokens.len() as u64;
+            })?;
+            let wall = t0.elapsed();
+            drop(stepper);
+            let (p50, p99) = quantiles(ttfts);
+            let tps = tokens as f64 / wall.as_secs_f64();
+            println!(
+                "{threads:>7} {:>12} {tps:>10.0} {:>10} {:>12.1?} {:>12.1?} {tokens:>9} {:>9.1}",
+                "continuous",
+                stats.decode_steps,
+                p50,
+                p99,
+                wall.as_secs_f64() * 1e3
+            );
+            rows.push(format!(
+                r#"{{"mode":"continuous","threads":{threads},"tok_per_s":{tps:.0},"decode_steps":{},"admits":{},"ttft_p50_us":{},"ttft_p99_us":{},"tokens":{tokens}}}"#,
+                stats.decode_steps,
+                stats.admits,
+                p50.as_micros(),
+                p99.as_micros(),
+            ));
+
+            // ---- lock-step: arrival-order batches of LANES ----
+            let t0 = Instant::now();
+            let mut ttfts = Vec::with_capacity(reqs.len());
+            let mut tokens = 0u64;
+            let mut steps = 0u64;
+            for chunk in reqs.chunks(LANES) {
+                let n = chunk.len();
+                let mut seqs = vec![vec![TOKENS::PAD; cfg.seq_len]; n];
+                let mut pos = vec![0usize; n];
+                let mut budgets = vec![0usize; n];
+                for (k, r) in chunk.iter().enumerate() {
+                    seqs[k][..r.prompt.len()].copy_from_slice(&r.prompt);
+                    pos[k] = r.prompt.len();
+                    budgets[k] = r.budget;
+                }
+                let mut stepper = EngineStepper::new(&engine, &prog, &w, &[]);
+                let generated = decode_lockstep(
+                    cfg.seq_len,
+                    cfg.vocab,
+                    &mut seqs,
+                    &mut pos,
+                    &budgets,
+                    &mut stepper,
+                )?;
+                steps += stepper.steps();
+                // lock-step visibility: a request's tokens (including its
+                // first) arrive when its whole batch completes
+                let done = t0.elapsed();
+                for g in generated {
+                    ttfts.push(done);
+                    tokens += g.len() as u64;
+                }
+            }
+            let wall = t0.elapsed();
+            let (p50, p99) = quantiles(ttfts);
+            let tps = tokens as f64 / wall.as_secs_f64();
+            println!(
+                "{threads:>7} {:>12} {tps:>10.0} {steps:>10} {:>12.1?} {:>12.1?} {tokens:>9} {:>9.1}",
+                "lockstep",
+                p50,
+                p99,
+                wall.as_secs_f64() * 1e3
+            );
+            rows.push(format!(
+                r#"{{"mode":"lockstep","threads":{threads},"tok_per_s":{tps:.0},"decode_steps":{steps},"ttft_p50_us":{},"ttft_p99_us":{},"tokens":{tokens}}}"#,
+                p50.as_micros(),
+                p99.as_micros(),
+            ));
+        }
+        engine.set_compute_threads(1);
+
+        // ---- factor-path spot check: heterogeneous continuous session ----
+        println!("\n# Factor-path continuous session (per-lane 2-bit adapters)");
+        let w_base = engine
+            .upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new())?)?;
+        let mut queue = AdmissionQueue::new();
+        let t0 = Instant::now();
+        for (i, r) in reqs.iter().take(24).enumerate() {
+            let src: Arc<dyn loraquant::loraquant::FactorSource> = Arc::clone(&stored);
+            queue.push(LaneRequest {
+                id: i as u64,
+                tenant: r.tenant,
+                prompt: r.prompt.clone(),
+                budget: r.budget,
+                adapter: Some(src),
+                enqueued: t0,
+            });
+        }
+        let mut slot = None;
+        let mut stepper = SessionStepper::new(&engine, &prog, &w_base, &mut slot);
+        let ccfg = ContinuousConfig { lanes: LANES, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let mut tokens = 0u64;
+        let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
+            tokens += fin.tokens.len() as u64;
+        })?;
+        let wall = t0.elapsed();
+        drop(stepper);
+        let tps = tokens as f64 / wall.as_secs_f64();
+        println!(
+            "factor continuous: {tps:.0} tok/s over {} steps / {} admits ({tokens} tokens, {:.1} ms)",
+            stats.decode_steps,
+            stats.admits,
+            wall.as_secs_f64() * 1e3
+        );
+        rows.push(format!(
+            r#"{{"mode":"continuous_factor","threads":1,"tok_per_s":{tps:.0},"decode_steps":{},"admits":{},"tokens":{tokens}}}"#,
+            stats.decode_steps,
+            stats.admits,
+        ));
+
+        let json =
+            format!("{{\"bench\":\"scheduler\",\"lanes\":{LANES},\"rows\":[{}]}}\n", rows.join(","));
+        std::fs::write("BENCH_scheduler.json", &json)?;
+        println!("\nwrote BENCH_scheduler.json ({} rows)", rows.len());
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    }
+}

@@ -79,12 +79,22 @@ pub struct ServerMetrics {
     pub e2e_latency: Option<Histogram>,
     pub exec_latency: Option<Histogram>,
     pub merge_latency: Option<Histogram>,
+    /// Submission → first generated token, per request (continuous
+    /// scheduler; admission wait + prefill).
+    pub ttft_latency: Option<Histogram>,
     pub requests: u64,
+    /// Decode groups (continuous scheduler: one group may span several
+    /// released batches whose requests share one session).
     pub batches: u64,
     /// Batches decoded on the factor-form path (unmerged base weights +
     /// activation-path deltas); the remainder ran on merged weights.
     pub factor_batches: u64,
     pub tokens_generated: u64,
+    /// Step forward passes (the virtual decode-step count; DESIGN.md §11
+    /// — the continuous-vs-lockstep acceptance observable).
+    pub decode_steps: u64,
+    /// Prefill/admission forward passes.
+    pub prefill_passes: u64,
 }
 
 impl ServerMetrics {
@@ -93,6 +103,7 @@ impl ServerMetrics {
             e2e_latency: Some(Histogram::new()),
             exec_latency: Some(Histogram::new()),
             merge_latency: Some(Histogram::new()),
+            ttft_latency: Some(Histogram::new()),
             ..Default::default()
         }
     }
@@ -111,10 +122,13 @@ impl ServerMetrics {
         merge_hist(&mut self.e2e_latency, &other.e2e_latency);
         merge_hist(&mut self.exec_latency, &other.exec_latency);
         merge_hist(&mut self.merge_latency, &other.merge_latency);
+        merge_hist(&mut self.ttft_latency, &other.ttft_latency);
         self.requests += other.requests;
         self.batches += other.batches;
         self.factor_batches += other.factor_batches;
         self.tokens_generated += other.tokens_generated;
+        self.decode_steps += other.decode_steps;
+        self.prefill_passes += other.prefill_passes;
     }
 
     /// Mean batch occupancy.
@@ -130,11 +144,12 @@ impl ServerMetrics {
     pub fn summary(&self) -> String {
         let e2e = self.e2e_latency.as_ref().unwrap();
         format!(
-            "requests={} batches={} (factor={}) mean_batch={:.2} p50={:?} p95={:?} p99={:?} mean={:?}",
+            "requests={} batches={} (factor={}) mean_batch={:.2} steps={} p50={:?} p95={:?} p99={:?} mean={:?}",
             self.requests,
             self.batches,
             self.factor_batches,
             self.mean_batch_size(),
+            self.decode_steps,
             e2e.quantile(0.5),
             e2e.quantile(0.95),
             e2e.quantile(0.99),

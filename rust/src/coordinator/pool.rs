@@ -21,6 +21,21 @@
 //!   unmerged base weights with per-request factor-form deltas); `Auto`
 //!   serves cold adapters factor-form immediately while a background
 //!   merge warms the cache (DESIGN.md §8).
+//! * **Continuous batching** (DESIGN.md §11, default on the reference
+//!   engine) — a drain collects every releasable batch, groups them by
+//!   weight context (one heterogeneous group for factor serving, one
+//!   per adapter for merged), and runs each group through the
+//!   `scheduler` engine loop over a **persistent per-worker session**:
+//!   lanes freed by short requests are re-admitted mid-flight, so a
+//!   group of several batches costs far fewer decode steps than
+//!   lock-stepping each batch. Post-merge drains feed *all* parked
+//!   batches of an adapter into one group.
+//! * **Deterministic merge ingest** — under a **virtual clock** each
+//!   worker ingests `Merged` results in submission order (a completed
+//!   merge holds until every earlier-submitted one lands), so
+//!   cache-insert order — and therefore LRU eviction under thrash — is
+//!   reproducible even with `merge_workers > 1`. Real-time serving
+//!   ingests on arrival: no cross-adapter head-of-line blocking.
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
 use super::cache::{CacheStats, LruCache};
@@ -32,11 +47,19 @@ use crate::adapter::fmt::Tensor;
 use crate::clock::Clock;
 use crate::eval::decode::{decode_lockstep, EngineStepper};
 use crate::eval::tasks::TOKENS;
+#[cfg(not(feature = "pjrt"))]
+use crate::loraquant::FactorSource;
 use crate::loraquant::QFactors;
 use crate::model::merge::base_weight_list;
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::DecodeState;
 use crate::runtime::{DeviceWeights, Engine};
+#[cfg(not(feature = "pjrt"))]
+use crate::scheduler::engine_loop::{run_continuous, ContinuousConfig, SessionStepper};
+#[cfg(not(feature = "pjrt"))]
+use crate::scheduler::queue::{AdmissionQueue, LaneRequest};
 use anyhow::anyhow;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -76,6 +99,9 @@ pub(crate) struct WorkerConfig {
     /// Engine worker threads for prefill matmuls (1 = serial; thread
     /// count never changes logits, see `runtime::sim`).
     pub compute_threads: usize,
+    /// Continuous-batching decode (false = per-batch lock-step; always
+    /// false under `--features pjrt`).
+    pub continuous: bool,
     /// Time source: real in production, virtual under the scenario
     /// simulator (see `crate::clock`).
     pub clock: Clock,
@@ -100,6 +126,9 @@ pub struct WorkerSnapshot {
     pub inflight_merges: usize,
     /// Requests parked in batches behind in-flight merges.
     pub parked_requests: usize,
+    /// Merge completions held by the ingest sequencer (completed, but
+    /// waiting for an earlier-submitted merge to land first).
+    pub held_merges: usize,
 }
 
 type Payload = (GenRequest, Responder);
@@ -111,8 +140,22 @@ pub(crate) enum WorkerMsg {
     Prefetch(AdapterId, mpsc::Sender<anyhow::Result<()>>),
     Invalidate(AdapterId),
     Metrics(mpsc::Sender<WorkerSnapshot>),
-    Merged { adapter: AdapterId, result: anyhow::Result<Vec<Tensor>>, host_time: Duration },
+    Merged {
+        /// Submission sequence number (the ingest sequencer applies
+        /// completions in submission order).
+        seq: u64,
+        adapter: AdapterId,
+        result: anyhow::Result<Vec<Tensor>>,
+        host_time: Duration,
+    },
     Shutdown,
+}
+
+/// A completed merge waiting in the ingest sequencer.
+struct HeldMerge {
+    adapter: AdapterId,
+    result: anyhow::Result<Vec<Tensor>>,
+    host_time: Duration,
 }
 
 /// A merge in flight for one adapter on this worker.
@@ -167,8 +210,8 @@ pub(crate) fn worker_main(
                 w.cache.remove(&id);
             }
             Ok(WorkerMsg::Metrics(tx)) => metrics_reply = Some(tx),
-            Ok(WorkerMsg::Merged { adapter, result, host_time }) => {
-                w.on_merged(adapter, result, host_time);
+            Ok(WorkerMsg::Merged { seq, adapter, result, host_time }) => {
+                w.ingest_merged(seq, adapter, result, host_time);
             }
             Ok(WorkerMsg::Shutdown) => draining = true,
             Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -176,17 +219,27 @@ pub(crate) fn worker_main(
             Err(mpsc::RecvTimeoutError::Disconnected) => draining = true,
         }
         loop {
-            // When draining, release partial batches immediately instead
-            // of waiting out their deadline.
-            let batch = if draining {
-                w.batcher.pop_flush()
-            } else {
-                w.batcher.pop_ready(w.clock.now())
-            };
-            match batch {
-                Some(batch) => w.on_batch(batch),
-                None => break,
+            // Collect every currently-releasable batch, then decode them
+            // together: the continuous scheduler merges co-releasable
+            // batches into shared sessions. When draining, partial
+            // batches release immediately instead of waiting out their
+            // deadline.
+            let mut batches = Vec::new();
+            loop {
+                let batch = if draining {
+                    w.batcher.pop_flush()
+                } else {
+                    w.batcher.pop_ready(w.clock.now())
+                };
+                match batch {
+                    Some(batch) => batches.push(batch),
+                    None => break,
+                }
             }
+            if batches.is_empty() {
+                break;
+            }
+            w.on_batches(batches);
         }
         if let Some(tx) = metrics_reply {
             let _ = tx.send(w.snapshot());
@@ -210,10 +263,26 @@ struct Worker {
     merge_tx: mpsc::Sender<MergeJob>,
     self_tx: mpsc::Sender<WorkerMsg>,
     strategy: MergeStrategy,
+    /// Continuous-batching decode (always false under pjrt).
+    #[cfg_attr(feature = "pjrt", allow(dead_code))]
+    continuous: bool,
     clock: Clock,
     /// Unmerged base weights, resident once per worker — the substrate the
     /// factor-form path decodes over (None under `Merged`).
     base_weights: Option<DeviceWeights>,
+    /// Next merge submission sequence number.
+    merge_seq: u64,
+    /// Next sequence number the ingest sequencer will apply.
+    next_ingest: u64,
+    /// Completed merges waiting on an earlier-submitted one.
+    held: BTreeMap<u64, HeldMerge>,
+    /// The persistent continuous-batching session (lazily created; its
+    /// KV cache and scratch arena are reused across every decode group).
+    #[cfg(not(feature = "pjrt"))]
+    session: Option<DecodeState>,
+    /// Persistent per-tenant fairness state for lane admission.
+    #[cfg(not(feature = "pjrt"))]
+    admission: AdmissionQueue,
 }
 
 impl Worker {
@@ -256,8 +325,16 @@ impl Worker {
             merge_tx,
             self_tx,
             strategy: cfg.strategy,
+            continuous: cfg.continuous,
             clock: cfg.clock,
             base_weights,
+            merge_seq: 0,
+            next_ingest: 0,
+            held: BTreeMap::new(),
+            #[cfg(not(feature = "pjrt"))]
+            session: None,
+            #[cfg(not(feature = "pjrt"))]
+            admission: AdmissionQueue::new(),
         })
     }
 
@@ -276,6 +353,7 @@ impl Worker {
                 .values()
                 .map(|fl| fl.parked.iter().map(Vec::len).sum::<usize>())
                 .sum(),
+            held_merges: self.held.len(),
         }
     }
 
@@ -337,6 +415,122 @@ impl Worker {
         self.submit_merge(id);
     }
 
+    /// One drain's releasable batches, decoded together. The continuous
+    /// scheduler groups them by weight context and runs each group
+    /// through a shared session; the lock-step fallback (and PJRT)
+    /// decodes each batch separately as before.
+    fn on_batches(&mut self, batches: Vec<Batch<Payload>>) {
+        #[cfg(not(feature = "pjrt"))]
+        if self.continuous {
+            self.on_batches_continuous(batches);
+            return;
+        }
+        for batch in batches {
+            self.on_batch(batch);
+        }
+    }
+
+    /// Group co-releasable batches by weight context, preserving the
+    /// legacy metric contract: one counted cache lookup per merged/auto
+    /// decode group (parked drains count theirs at miss time), and
+    /// `batches` counts groups.
+    #[cfg(not(feature = "pjrt"))]
+    fn on_batches_continuous(&mut self, batches: Vec<Batch<Payload>>) {
+        enum Group {
+            /// Heterogeneous factor-form group (mixed tenants).
+            Factor(Vec<Queued>),
+            /// One adapter's merged-weight group (may span batches).
+            Merged(AdapterId, Vec<Queued>),
+        }
+        let mut groups: Vec<Group> = Vec::new();
+        for batch in batches {
+            match (self.strategy, batch.adapter) {
+                (MergeStrategy::Factor, _) => {
+                    // pure factor serving: every batch of the drain joins
+                    // one heterogeneous session
+                    match groups.iter_mut().find_map(|g| match g {
+                        Group::Factor(reqs) => Some(reqs),
+                        Group::Merged(..) => None,
+                    }) {
+                        Some(reqs) => reqs.extend(batch.requests),
+                        None => groups.push(Group::Factor(batch.requests)),
+                    }
+                }
+                (MergeStrategy::Merged, Some(id)) => {
+                    if let Some(fl) = self.inflight.get_mut(&id) {
+                        // merge already in flight — park behind it; the
+                        // post-merge drain feeds every parked batch into
+                        // one group
+                        fl.parked.push(batch.requests);
+                        continue;
+                    }
+                    if let Some(reqs) = groups.iter_mut().find_map(|g| match g {
+                        Group::Merged(gid, reqs) if *gid == id => Some(reqs),
+                        _ => None,
+                    }) {
+                        reqs.extend(batch.requests);
+                        continue;
+                    }
+                    if self.cache.get(&id).is_some() {
+                        groups.push(Group::Merged(id, batch.requests));
+                    } else {
+                        self.inflight.insert(
+                            id,
+                            Inflight {
+                                miss_counted: true,
+                                parked: vec![batch.requests],
+                                waiters: Vec::new(),
+                            },
+                        );
+                        self.submit_merge(id);
+                    }
+                }
+                (MergeStrategy::Auto, Some(id)) => {
+                    if let Some(reqs) = groups.iter_mut().find_map(|g| match g {
+                        Group::Merged(gid, reqs) if *gid == id => Some(reqs),
+                        _ => None,
+                    }) {
+                        reqs.extend(batch.requests);
+                        continue;
+                    }
+                    if self.cache.get(&id).is_some() {
+                        groups.push(Group::Merged(id, batch.requests));
+                    } else {
+                        // no cold cliff: factor-form now, background merge
+                        // warms the cache. Each cold batch keeps its own
+                        // group so the counted miss above stays 1:1 with
+                        // decode groups.
+                        if !self.inflight.contains_key(&id) {
+                            self.inflight.insert(
+                                id,
+                                Inflight {
+                                    miss_counted: true,
+                                    parked: Vec::new(),
+                                    waiters: Vec::new(),
+                                },
+                            );
+                            self.submit_merge(id);
+                        }
+                        groups.push(Group::Factor(batch.requests));
+                    }
+                }
+                (_, None) => {
+                    // per-adapter batchers always tag their batches
+                    for r in batch.requests {
+                        let _ =
+                            r.payload.1.send(Err(anyhow!("internal: untagged adapter batch")));
+                    }
+                }
+            }
+        }
+        for group in groups {
+            match group {
+                Group::Factor(requests) => self.run_group_factor(requests),
+                Group::Merged(id, requests) => self.run_group_merged(id, requests),
+            }
+        }
+    }
+
     fn on_batch(&mut self, batch: Batch<Payload>) {
         match (self.strategy, batch.adapter) {
             // pure factor serving: heterogeneous batch, no cache, no
@@ -396,15 +590,48 @@ impl Worker {
     }
 
     fn submit_merge(&mut self, id: AdapterId) {
+        let seq = self.merge_seq;
+        self.merge_seq += 1;
         let tx = self.self_tx.clone();
         let job = MergeJob {
             adapter: id,
             done: Box::new(move |result, host_time| {
-                let _ = tx.send(WorkerMsg::Merged { adapter: id, result, host_time });
+                let _ = tx.send(WorkerMsg::Merged { seq, adapter: id, result, host_time });
             }),
         };
         if self.merge_tx.send(job).is_err() {
-            self.on_merged(id, Err(anyhow!("merge pool unavailable")), Duration::ZERO);
+            self.ingest_merged(seq, id, Err(anyhow!("merge pool unavailable")), Duration::ZERO);
+        }
+    }
+
+    /// The merge completion sequencer (virtual clock only): apply
+    /// completions in submission order. A merge that finishes before an
+    /// earlier-submitted one is held (visible as
+    /// `WorkerSnapshot::held_merges`) until its predecessors land, so
+    /// cache-insert order — and LRU eviction under thrash — is a pure
+    /// function of the deterministic submission order even with several
+    /// merge threads racing. That is what makes `merge_workers > 1`
+    /// traces byte-reproducible (DESIGN.md §11).
+    ///
+    /// In **real time** completions apply on arrival instead: strict
+    /// sequencing would park a fast adapter's batches behind another
+    /// adapter's slow merge (cross-adapter head-of-line blocking), and
+    /// production has no byte-identical-trace contract to pay for.
+    fn ingest_merged(
+        &mut self,
+        seq: u64,
+        adapter: AdapterId,
+        result: anyhow::Result<Vec<Tensor>>,
+        host_time: Duration,
+    ) {
+        if !self.clock.is_virtual() {
+            self.on_merged(adapter, result, host_time);
+            return;
+        }
+        self.held.insert(seq, HeldMerge { adapter, result, host_time });
+        while let Some(h) = self.held.remove(&self.next_ingest) {
+            self.next_ingest += 1;
+            self.on_merged(h.adapter, h.result, h.host_time);
         }
     }
 
@@ -433,15 +660,7 @@ impl Worker {
                 for ack in fl.waiters {
                     let _ = ack.send(Ok(()));
                 }
-                let miss_counted = fl.miss_counted;
-                for (i, requests) in fl.parked.into_iter().enumerate() {
-                    // exactly one counted lookup per batch: the initiator's
-                    // miss was counted when the merge was triggered
-                    if i > 0 || !miss_counted {
-                        let _ = self.cache.get(&id);
-                    }
-                    self.run_batch_merged(id, requests);
-                }
+                self.drain_parked(id, fl.miss_counted, fl.parked);
             }
             Err(e) => {
                 let msg = format!("{e:#}");
@@ -454,6 +673,37 @@ impl Worker {
                     }
                 }
             }
+        }
+    }
+
+    /// Decode the batches that parked behind a completed merge. The
+    /// continuous scheduler feeds them all into **one** session — this is
+    /// the drain where freed lanes pay off hardest: every batch that
+    /// piled up behind the merge shares one group, so short requests
+    /// finish and hand their lanes to the next batch's requests instead
+    /// of lock-stepping batch by batch.
+    fn drain_parked(&mut self, id: AdapterId, miss_counted: bool, parked: Vec<Vec<Queued>>) {
+        #[cfg(not(feature = "pjrt"))]
+        if self.continuous {
+            let all: Vec<Queued> = parked.into_iter().flatten().collect();
+            if all.is_empty() {
+                return;
+            }
+            // one counted lookup per decode group: the initiator's miss
+            // (if any) was counted when the merge was triggered
+            if !miss_counted {
+                let _ = self.cache.get(&id);
+            }
+            self.run_group_merged(id, all);
+            return;
+        }
+        for (i, requests) in parked.into_iter().enumerate() {
+            // exactly one counted lookup per batch: the initiator's
+            // miss was counted when the merge was triggered
+            if i > 0 || !miss_counted {
+                let _ = self.cache.get(&id);
+            }
+            self.run_batch_merged(id, requests);
         }
     }
 
@@ -531,6 +781,170 @@ impl Worker {
         }
     }
 
+    /// Decode one merged-weight group through the continuous scheduler:
+    /// every request of the group (possibly several released batches of
+    /// one adapter) flows through the worker's persistent session, with
+    /// freed lanes re-admitted mid-flight.
+    #[cfg(not(feature = "pjrt"))]
+    fn run_group_merged(&mut self, adapter: AdapterId, requests: Vec<Queued>) {
+        let outcome = self.decode_group(Some(adapter), &requests, &[]);
+        self.finish_group(requests, outcome, false);
+    }
+
+    /// Decode one heterogeneous factor-form group: per-request adapters
+    /// resolved from the registry (a vanished adapter fails only its own
+    /// requests), then one continuous session over the base weights.
+    #[cfg(not(feature = "pjrt"))]
+    fn run_group_factor(&mut self, requests: Vec<Queued>) {
+        let arcs: Vec<Option<Arc<StoredAdapter>>> = self.shared.with_registry(|r| {
+            requests.iter().map(|q| r.get(q.adapter).map(|e| e.adapter.clone())).collect()
+        });
+        let mut valid = Vec::with_capacity(requests.len());
+        let mut adapters = Vec::with_capacity(requests.len());
+        for (r, arc) in requests.into_iter().zip(arcs) {
+            match arc {
+                Some(a) => {
+                    valid.push(r);
+                    adapters.push(a);
+                }
+                None => {
+                    let _ = r.payload.1.send(Err(anyhow!("unknown adapter {}", r.adapter)));
+                }
+            }
+        }
+        if valid.is_empty() {
+            return;
+        }
+        let outcome = self.decode_group(None, &valid, &adapters);
+        self.finish_group(valid, outcome, true);
+    }
+
+    /// Run one decode group through `scheduler::run_continuous` over the
+    /// worker's persistent session. `merged` selects the weight context:
+    /// `Some(id)` decodes on that adapter's cached merged weights with no
+    /// per-lane adapters; `None` decodes on the resident base weights
+    /// with `adapters[i]` bound to request `i`'s lanes.
+    #[cfg(not(feature = "pjrt"))]
+    fn decode_group(
+        &mut self,
+        merged: Option<AdapterId>,
+        requests: &[Queued],
+        adapters: &[Arc<StoredAdapter>],
+    ) -> anyhow::Result<Vec<Option<Vec<i32>>>> {
+        let cfg = &self.shared.base.cfg;
+        let (t_len, vocab) = (cfg.seq_len, cfg.vocab);
+        let (lanes, prog) = {
+            let (bucket, key) = self.progs.last().expect("buckets validated non-empty");
+            (*bucket, key.as_str())
+        };
+        // resolve weights before touching the admission queue, so an
+        // error here leaves no orphaned queue entries
+        let weights = match merged {
+            Some(id) => self
+                .cache
+                .peek(&id)
+                .ok_or_else(|| anyhow!("merged weights missing for adapter {id}"))?,
+            None => self
+                .base_weights
+                .as_ref()
+                .ok_or_else(|| anyhow!("factor path requires resident base weights"))?,
+        };
+        for (i, q) in requests.iter().enumerate() {
+            let req = &q.payload.0;
+            self.admission.push(LaneRequest {
+                id: i as u64,
+                tenant: q.adapter,
+                prompt: req.prompt.clone(),
+                budget: req.max_new,
+                adapter: adapters.get(i).map(|a| {
+                    let src: Arc<dyn FactorSource> = Arc::clone(a);
+                    src
+                }),
+                enqueued: q.enqueued,
+            });
+        }
+        let mut outputs: Vec<Option<Vec<i32>>> = vec![None; requests.len()];
+        let mut ttfts: Vec<Duration> = Vec::with_capacity(requests.len());
+        let ccfg = ContinuousConfig { lanes, seq_len: t_len, vocab };
+        let t_exec = self.clock.now();
+        let run = {
+            let mut stepper = SessionStepper::new(&self.engine, prog, weights, &mut self.session);
+            run_continuous(&mut stepper, &ccfg, &mut self.admission, &self.clock, |fin| {
+                ttfts.push(fin.ttft);
+                outputs[fin.id as usize] = Some(fin.tokens);
+            })
+        };
+        match run {
+            Ok(stats) => {
+                let exec = self.clock.now().duration_since(t_exec);
+                if let Some(h) = self.metrics.exec_latency.as_mut() {
+                    h.record(exec);
+                }
+                if let Some(h) = self.metrics.ttft_latency.as_mut() {
+                    for t in ttfts {
+                        h.record(t);
+                    }
+                }
+                self.metrics.decode_steps += stats.decode_steps;
+                self.metrics.prefill_passes += stats.admits;
+                Ok(outputs)
+            }
+            Err(e) => {
+                // a failed session leaves not-yet-admitted requests in
+                // the queue; drain them so the error answers everyone and
+                // the next group starts clean
+                let _ = self.admission.drain_pending();
+                Err(e)
+            }
+        }
+    }
+
+    /// Respond + account for one decoded (or failed) continuous group.
+    #[cfg(not(feature = "pjrt"))]
+    fn finish_group(
+        &mut self,
+        requests: Vec<Queued>,
+        outcome: anyhow::Result<Vec<Option<Vec<i32>>>>,
+        factor: bool,
+    ) {
+        match outcome {
+            Ok(outputs) => {
+                let now = self.clock.now();
+                for (r, tokens) in requests.into_iter().zip(outputs) {
+                    match tokens {
+                        Some(tokens) => {
+                            let e2e = now.duration_since(r.enqueued);
+                            if let Some(h) = self.metrics.e2e_latency.as_mut() {
+                                h.record(e2e);
+                            }
+                            self.metrics.requests += 1;
+                            self.metrics.tokens_generated += tokens.len() as u64;
+                            let _ = r.payload.1.send(Ok(GenResponse { tokens, e2e }));
+                        }
+                        None => {
+                            // unreachable: run_continuous completes every
+                            // admitted request or errors the whole group
+                            let _ = r
+                                .payload
+                                .1
+                                .send(Err(anyhow!("internal: request missed by scheduler")));
+                        }
+                    }
+                }
+                self.metrics.batches += 1;
+                if factor {
+                    self.metrics.factor_batches += 1;
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in requests {
+                    let _ = r.payload.1.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
     /// Seed decode lanes from a batch on the smallest fitting bucket.
     /// Padding lanes replicate the last request's prompt with a **zero
     /// budget**: they are prefilled (the bucket shape is fixed) but the
@@ -567,7 +981,7 @@ impl Worker {
         let vocab = self.shared.base.cfg.vocab;
         let Lanes { mut seqs, mut pos, budgets, bsz: _, prog_idx } = self.build_lanes(requests);
         let t_exec = self.clock.now();
-        let mut generated = {
+        let (mut generated, fwd) = {
             let engine = &self.engine;
             let weights = self
                 .cache
@@ -575,12 +989,15 @@ impl Worker {
                 .ok_or_else(|| anyhow!("merged weights missing for adapter {adapter}"))?;
             let prog = self.progs[prog_idx].1.as_str();
             let mut stepper = EngineStepper::new(engine, prog, weights, &[]);
-            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, &mut stepper)?
+            let g = decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, &mut stepper)?;
+            (g, (stepper.prefills(), stepper.steps()))
         };
         let exec = self.clock.now().duration_since(t_exec);
         if let Some(h) = self.metrics.exec_latency.as_mut() {
             h.record(exec);
         }
+        self.metrics.prefill_passes += fwd.0;
+        self.metrics.decode_steps += fwd.1;
         generated.truncate(requests.len());
         Ok(generated)
     }
@@ -603,7 +1020,7 @@ impl Worker {
         let lane_factors: Vec<Option<&QFactors<'_>>> =
             (0..bsz).map(|k| Some(&factors[k.min(n - 1)])).collect();
         let t_exec = self.clock.now();
-        let mut generated = {
+        let (mut generated, fwd) = {
             let engine = &self.engine;
             let weights = self
                 .base_weights
@@ -611,12 +1028,15 @@ impl Worker {
                 .ok_or_else(|| anyhow!("factor path requires resident base weights"))?;
             let prog = self.progs[prog_idx].1.as_str();
             let mut stepper = EngineStepper::new(engine, prog, weights, &lane_factors);
-            decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, &mut stepper)?
+            let g = decode_lockstep(t_len, vocab, &mut seqs, &mut pos, &budgets, &mut stepper)?;
+            (g, (stepper.prefills(), stepper.steps()))
         };
         let exec = self.clock.now().duration_since(t_exec);
         if let Some(h) = self.metrics.exec_latency.as_mut() {
             h.record(exec);
         }
+        self.metrics.prefill_passes += fwd.0;
+        self.metrics.decode_steps += fwd.1;
         generated.truncate(n);
         Ok(generated)
     }

@@ -55,6 +55,15 @@ impl StoredAdapter {
     }
 }
 
+/// Type-erased handle for the continuous-batching scheduler: a lane can
+/// hold `Arc<dyn FactorSource>` without the engine layer knowing about
+/// registry types.
+impl crate::loraquant::FactorSource for StoredAdapter {
+    fn factors(&self) -> QFactors<'_> {
+        StoredAdapter::factors(self)
+    }
+}
+
 /// Entry metadata kept alongside the adapter. The adapter itself is
 /// `Arc`-shared so executor workers can hold a batch's adapters across a
 /// factor-form decode without copying packed bytes or holding the

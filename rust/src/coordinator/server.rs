@@ -95,6 +95,13 @@ pub struct CoordinatorConfig {
     pub compute_threads: usize,
     /// Adapter execution strategy.
     pub merge_strategy: MergeStrategy,
+    /// Continuous-batching decode (DESIGN.md §11): workers drive released
+    /// batches through a persistent scheduler session — finished lanes
+    /// are reused mid-flight instead of waiting out the slowest lane.
+    /// `false` falls back to per-batch lock-step (the pre-§11 protocol;
+    /// the only mode under `--features pjrt`). Token outputs are
+    /// identical either way.
+    pub continuous: bool,
     /// Test/ops instrumentation called at the start of every merge.
     pub merge_hook: Option<MergeHook>,
     /// Time source for every deadline, latency and park decision in the
@@ -115,6 +122,7 @@ impl CoordinatorConfig {
             merge_workers: 2,
             compute_threads: 1,
             merge_strategy: MergeStrategy::default(),
+            continuous: true,
             merge_hook: None,
             clock: Clock::real(),
         }
@@ -141,6 +149,13 @@ impl CoordinatorConfig {
     /// Builder sugar: set the per-engine prefill worker-thread count.
     pub fn with_compute_threads(mut self, threads: usize) -> Self {
         self.compute_threads = threads;
+        self
+    }
+
+    /// Builder sugar: toggle the continuous-batching scheduler (`false`
+    /// = per-batch lock-step decode).
+    pub fn with_continuous(mut self, continuous: bool) -> Self {
+        self.continuous = continuous;
         self
     }
 
@@ -240,6 +255,9 @@ impl Coordinator {
             cache_budget_bytes: (cfg.cache_budget_bytes / n_workers).max(1),
             strategy: cfg.merge_strategy,
             compute_threads: cfg.compute_threads.max(1),
+            // PJRT programs bake full-sequence shapes: no warm-session
+            // admission, so its workers always decode lock-step
+            continuous: cfg.continuous && cfg!(not(feature = "pjrt")),
             clock: cfg.clock.clone(),
         };
 

@@ -21,10 +21,11 @@
 
 use super::rouge::rouge_l;
 use super::tasks::{EvalSet, TOKENS};
-use crate::loraquant::QFactors;
+use crate::loraquant::{FactorSource, QFactors};
 use crate::model::ModelConfig;
 use crate::runtime::{DecodeState, DeviceWeights, Engine};
 use anyhow::{bail, Context};
+use std::sync::Arc;
 
 /// Result of evaluating one adapter on one task.
 #[derive(Debug, Clone)]
@@ -37,20 +38,59 @@ pub struct EvalOutcome {
     pub exact: bool,
 }
 
-/// One decode "model" driven by [`decode_lockstep`]: a stateful
-/// prefill-then-step protocol. Both methods return the batch's
-/// **next-token logits**, `lanes × vocab` flat (row `k` = logits after
-/// lane `k`'s newest token), borrowed from the stepper's own storage.
+/// One decode "model" driven by [`decode_lockstep`] (and by the
+/// continuous-batching loop in `scheduler::engine_loop`): a stateful
+/// prefill-then-step protocol. Logits-returning methods hand back the
+/// batch's **next-token logits**, `lanes × vocab` flat (row `k` = logits
+/// after lane `k`'s newest token), borrowed from the stepper's own
+/// storage.
+///
+/// The `begin`/`admit`/`retire` hooks are the continuous-batching
+/// extension (DESIGN.md §11): a scheduler opens an *empty* session,
+/// admits prompts into freed lanes mid-flight, and retires lanes the
+/// moment they finish. Lock-step-only steppers (the [`FullRecompute`]
+/// oracle, scripted test steppers) keep the bailing defaults.
 pub trait DecodeStep {
     /// Consume the seeded prompts: lane `k` holds `pos[k]` tokens at the
     /// front of `seqs[k]`. Called exactly once, before any step.
     fn prefill(&mut self, seqs: &[Vec<i32>], pos: &[usize]) -> anyhow::Result<&[f32]>;
 
     /// Consume the newest token of every still-`active` lane
-    /// (`seqs[k][pos[k] - 1]`). Rows of inactive lanes are unspecified,
-    /// and an inactive lane must stop costing compute.
+    /// (`seqs[k][pos[k] - 1]`; lanes with `pos == 0` have never been
+    /// admitted and are skipped). Rows of inactive lanes are
+    /// unspecified, and an inactive lane must stop costing compute.
     fn step(&mut self, seqs: &[Vec<i32>], pos: &[usize], active: &[bool])
         -> anyhow::Result<&[f32]>;
+
+    /// Open an **empty** continuous session of `lanes` retired lanes (no
+    /// forward runs). Lanes come live through [`DecodeStep::admit`].
+    fn begin(&mut self, lanes: usize) -> anyhow::Result<()> {
+        let _ = lanes;
+        bail!("this stepper does not support continuous decode")
+    }
+
+    /// Admit fresh prompts into currently-retired lanes mid-flight: lane
+    /// `lanes[i]` holds `pos[lanes[i]]` prompt tokens at the front of
+    /// `seqs[lanes[i]]`, and `adapters[i]` is the factor-form adapter to
+    /// bind to that lane for its whole occupancy (`None` = the session
+    /// weights already carry it). Returns the session-wide logits buffer
+    /// with each admitted lane's next-token row filled.
+    fn admit(
+        &mut self,
+        seqs: &[Vec<i32>],
+        pos: &[usize],
+        lanes: &[usize],
+        adapters: &[Option<Arc<dyn FactorSource>>],
+    ) -> anyhow::Result<&[f32]> {
+        let _ = (seqs, pos, lanes, adapters);
+        bail!("this stepper does not support continuous admission")
+    }
+
+    /// A lane the decode loop finished (EOS / budget / sequence full):
+    /// free its slot so a later [`DecodeStep::admit`] can reuse it.
+    fn retire(&mut self, lane: usize) {
+        let _ = lane;
+    }
 }
 
 /// The O(L·T²·d)-per-token **oracle**: re-runs a full-sequence forward
@@ -124,6 +164,10 @@ pub struct EngineStepper<'a> {
     first: Vec<f32>,
     /// Reusable per-lane newest-token buffer.
     last: Vec<i32>,
+    /// Forward-pass counters: prefill/admit passes and step passes (the
+    /// "virtual decode-step count" the scheduler benchmarks compare).
+    prefills: u64,
+    steps: u64,
 }
 
 impl<'a> EngineStepper<'a> {
@@ -133,12 +177,32 @@ impl<'a> EngineStepper<'a> {
         weights: &'a DeviceWeights,
         adapters: &'a [Option<&'a QFactors<'a>>],
     ) -> Self {
-        Self { engine, prog, weights, adapters, state: None, first: Vec::new(), last: Vec::new() }
+        Self {
+            engine,
+            prog,
+            weights,
+            adapters,
+            state: None,
+            first: Vec::new(),
+            last: Vec::new(),
+            prefills: 0,
+            steps: 0,
+        }
     }
 
     /// Resident KV bytes of the live session (None before prefill).
     pub fn kv_bytes(&self) -> Option<usize> {
         self.state.as_ref().map(DecodeState::kv_bytes)
+    }
+
+    /// Prefill/admit forward passes run so far.
+    pub fn prefills(&self) -> u64 {
+        self.prefills
+    }
+
+    /// Step forward passes run so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
     }
 }
 
@@ -148,6 +212,7 @@ impl DecodeStep for EngineStepper<'_> {
             self.engine.prefill(self.prog, seqs, pos, self.weights, self.adapters)?;
         self.state = Some(state);
         self.first = logits;
+        self.prefills += 1;
         Ok(&self.first)
     }
 
@@ -159,7 +224,9 @@ impl DecodeStep for EngineStepper<'_> {
     ) -> anyhow::Result<&[f32]> {
         self.last.clear();
         for k in 0..seqs.len() {
-            self.last.push(seqs[k][pos[k] - 1]);
+            // a lane with pos == 0 was never admitted (continuous
+            // sessions); it is retired, so its token is never consumed
+            self.last.push(if pos[k] == 0 { 0 } else { seqs[k][pos[k] - 1] });
         }
         let state = self.state.as_mut().context("decode step before prefill")?;
         for (k, &a) in active.iter().enumerate() {
@@ -167,8 +234,76 @@ impl DecodeStep for EngineStepper<'_> {
                 state.retire(k);
             }
         }
+        self.steps += 1;
         self.engine.decode_step(state, self.weights, self.adapters, &self.last)
     }
+
+    /// Continuous-batching hooks (reference engine only: PJRT's AOT
+    /// programs bake full-sequence shapes and keep the bailing defaults).
+    #[cfg(not(feature = "pjrt"))]
+    fn begin(&mut self, lanes: usize) -> anyhow::Result<()> {
+        self.state = Some(self.engine.new_session(self.prog, lanes, self.weights)?);
+        Ok(())
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn admit(
+        &mut self,
+        seqs: &[Vec<i32>],
+        pos: &[usize],
+        lanes: &[usize],
+        adapters: &[Option<Arc<dyn FactorSource>>],
+    ) -> anyhow::Result<&[f32]> {
+        if adapters.iter().any(Option::is_some) {
+            bail!(
+                "EngineStepper binds adapters at construction; per-lane admission \
+                 adapters need the scheduler's SessionStepper"
+            );
+        }
+        let state = self.state.as_mut().context("admit before begin")?;
+        let prompts: Vec<&[i32]> = lanes.iter().map(|&l| &seqs[l][..pos[l]]).collect();
+        self.prefills += 1;
+        self.engine.admit(state, lanes, &prompts, self.weights, self.adapters)
+    }
+
+    fn retire(&mut self, lane: usize) {
+        if let Some(state) = self.state.as_mut() {
+            if !state.is_retired(lane) {
+                state.retire(lane);
+            }
+        }
+    }
+}
+
+/// The **single** greedy consume rule, shared by [`decode_lockstep`] and
+/// the continuous scheduler's loop (`scheduler::engine_loop`) so the two
+/// decode paths cannot drift: lowest-index argmax wins ties, the token
+/// is written into the sequence (EOS included), EOS is never pushed to
+/// `generated`, and the lane finishes on EOS, on reaching `budget`
+/// generated tokens, or on filling the sequence. Returns `true` when the
+/// lane is finished.
+pub fn consume_greedy(
+    row: &[f32],
+    seq: &mut [i32],
+    pos: &mut usize,
+    generated: &mut Vec<i32>,
+    budget: usize,
+    seq_len: usize,
+) -> bool {
+    let mut best = 0usize;
+    for v in 1..row.len() {
+        if row[v] > row[best] {
+            best = v;
+        }
+    }
+    let tok = best as i32;
+    seq[*pos] = tok;
+    *pos += 1;
+    if tok == TOKENS::EOS {
+        return true;
+    }
+    generated.push(tok);
+    generated.len() >= budget || *pos >= seq_len
 }
 
 /// Lock-step batched greedy decode over pre-seeded lanes.
@@ -228,22 +363,16 @@ pub fn decode_lockstep(
                 continue;
             }
             let row = &logits[k * vocab..(k + 1) * vocab];
-            let mut best = 0usize;
-            for v in 1..vocab {
-                if row[v] > row[best] {
-                    best = v;
-                }
-            }
-            let tok = best as i32;
-            seqs[k][pos[k]] = tok;
-            pos[k] += 1;
-            if tok == TOKENS::EOS {
+            let done = consume_greedy(
+                row,
+                &mut seqs[k],
+                &mut pos[k],
+                &mut generated[k],
+                budgets[k],
+                seq_len,
+            );
+            if done {
                 active[k] = false;
-            } else {
-                generated[k].push(tok);
-                if generated[k].len() >= budgets[k] || pos[k] >= seq_len {
-                    active[k] = false;
-                }
             }
         }
     }
@@ -474,6 +603,59 @@ mod tests {
         for log in &stepper.active_log[1..] {
             assert_eq!(log, &vec![false, true], "finished lane must be handed over inactive");
         }
+    }
+
+    /// The continuous hooks on the production stepper: begin opens an
+    /// empty session, admit brings lanes live (bit-identical to a fresh
+    /// prefill), retire frees them for reuse; the lock-step oracle keeps
+    /// the bailing defaults.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn engine_stepper_continuous_hooks_reuse_freed_lanes() {
+        use crate::model::{merge_adapter, BaseWeights};
+        use crate::testutil::synth::{synth_model_config, write_synth_model};
+
+        let dir = std::env::temp_dir()
+            .join(format!("lq_decode_hooks_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[2], 55).unwrap();
+        let base = BaseWeights::load(dir.join("synth")).unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        engine.load_model_fwd("synth", 2, base.cfg.param_names().len()).unwrap();
+        let w = engine
+            .upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap())
+            .unwrap();
+        let vocab = cfg.vocab;
+
+        // fresh-prefill oracle row for the prompt
+        let prompt = [3i32, 1, 4];
+        let mut oseqs = vec![vec![TOKENS::PAD; cfg.seq_len]];
+        oseqs[0][..3].copy_from_slice(&prompt);
+        let mut oracle = EngineStepper::new(&engine, "synth/b2", &w, &[]);
+        let want = oracle.prefill(&oseqs, &[3]).unwrap().to_vec();
+        assert_eq!(oracle.prefills(), 1);
+
+        // continuous: begin empty, admit into lane 1, retire, re-admit
+        let mut stepper = EngineStepper::new(&engine, "synth/b2", &w, &[]);
+        stepper.begin(2).unwrap();
+        let mut seqs = vec![vec![TOKENS::PAD; cfg.seq_len]; 2];
+        seqs[1][..3].copy_from_slice(&prompt);
+        let pos = vec![0usize, 3];
+        let out = stepper.admit(&seqs, &pos, &[1], &[None]).unwrap().to_vec();
+        assert_eq!(&out[vocab..2 * vocab], &want[..vocab], "admit row == fresh prefill row");
+        assert!(out[..vocab].iter().all(|&x| x == 0.0), "un-admitted lane row stays zero");
+        stepper.retire(1);
+        let out2 = stepper.admit(&seqs, &pos, &[1], &[None]).unwrap().to_vec();
+        assert_eq!(out2, out, "a freed lane re-admits bit-identically");
+        assert_eq!(stepper.prefills(), 2);
+        assert_eq!(stepper.steps(), 0);
+
+        // the oracle stepper family keeps the bailing defaults
+        let mut full = FullRecompute::new(cfg.seq_len, vocab, |_: &[i32]| Ok(vec![]));
+        assert!(full.begin(2).is_err());
+        assert!(full.admit(&seqs, &pos, &[1], &[None]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -7,7 +7,8 @@ pub mod rouge;
 pub mod tasks;
 
 pub use decode::{
-    decode_lockstep, evaluate, DecodeStep, EngineStepper, EvalOutcome, FullRecompute,
+    consume_greedy, decode_lockstep, evaluate, DecodeStep, EngineStepper, EvalOutcome,
+    FullRecompute,
 };
 pub use rouge::rouge_l;
 pub use tasks::{EvalSet, TOKENS};

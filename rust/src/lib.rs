@@ -41,6 +41,7 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod scenario;
+pub mod scheduler;
 pub mod tensor;
 pub mod testutil;
 pub mod workload;

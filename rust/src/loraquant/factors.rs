@@ -175,6 +175,22 @@ impl<'a> QFactors<'a> {
     }
 }
 
+/// Anything that can expose a factor-form view of itself. This is the
+/// type-erased handle the continuous-batching scheduler binds to a lane
+/// at admission (DESIGN.md §11): engine-level code can hold adapters
+/// (`Arc<dyn FactorSource>`) without depending on the serving layer's
+/// concrete registry types. Implemented by `QuantizedLora` here and by
+/// the coordinator's `StoredAdapter`.
+pub trait FactorSource: Send + Sync {
+    fn factors(&self) -> QFactors<'_>;
+}
+
+impl FactorSource for QuantizedLora {
+    fn factors(&self) -> QFactors<'_> {
+        QuantizedLora::factors(self)
+    }
+}
+
 /// `transposed` flag for a stored A′ factor quantized along `axis`.
 fn a_view(src: &dyn DequantRows, axis: Axis) -> FactorView<'_> {
     // Row axis ⇒ stored as A′ (h×n, component-major); Col ⇒ stored as A′ᵀ.

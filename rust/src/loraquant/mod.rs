@@ -22,7 +22,9 @@ pub mod pipeline;
 pub mod split;
 pub mod ste;
 
-pub use factors::{fp_factors, FactorPair, FactorScratch, FactorView, QFactors, SiteFactors};
+pub use factors::{
+    fp_factors, FactorPair, FactorScratch, FactorSource, FactorView, QFactors, SiteFactors,
+};
 pub use hselect::{baseline_indices, select_h, HSelect, SplitStrategy};
 pub use pipeline::{
     quantize_site, LoraQuantConfig, LowMode, LowQuantized, QuantizedLora, QuantizedSite,

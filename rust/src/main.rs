@@ -6,12 +6,16 @@
 //! loraquant eval     --model tiny-llama-s --task modadd [--quantized q.bin] [--n 100]
 //! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12 \
 //!                    [--workers 4] [--merge-workers 2] [--compute-threads 2] \
-//!                    [--buckets 1,8] [--prefetch] \
+//!                    [--buckets 1,8] [--prefetch] [--lockstep] \
 //!                    [--merge-strategy merged|factor|auto]
 //! loraquant serve-sim --requests 200 --rate 200 --adapters 4 --merge-strategy all \
 //!                    [--workers 4] [--compute-threads 2] [--zipf 1.1] [--seed 7] \
 //!                    [--slow-merge-ms 50] [--churn] [--prefetch] [--log] \
-//!                    [--golden PATH] [--model NAME]
+//!                    [--lockstep] [--golden PATH] [--model NAME]
+//!
+//! `--lockstep` disables the continuous-batching scheduler (DESIGN.md
+//! §11) and decodes batch by batch — the comparison baseline for the
+//! scheduler's decode-step and TTFT numbers.
 //! loraquant info     --model tiny-llama-s
 //! ```
 //!
@@ -150,6 +154,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.cache_budget_bytes = cache_mb << 20;
     cfg.max_wait = Duration::from_millis(args.usize_or("max-wait-ms", 10)? as u64);
     cfg.merge_strategy = args.str_or("merge-strategy", "merged").parse()?;
+    cfg.continuous = !args.has_flag("lockstep");
     let workers = cfg.workers;
     let strategy = cfg.merge_strategy;
     let (coord, join) = Coordinator::start(cfg)?;
@@ -290,6 +295,7 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             workers: args.usize_or("workers", 1)?,
             merge_workers: args.usize_or("merge-workers", 1)?,
             compute_threads: args.usize_or("compute-threads", 1)?,
+            continuous: !args.has_flag("lockstep"),
             buckets: args.usize_list_or("buckets", &[1, 8])?,
             max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 5)? as u64),
             cache_budget_bytes: args.usize_or("cache-kb", 64 << 10)? << 10,
@@ -298,6 +304,7 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             round_robin: args.has_flag("round-robin"),
             prompt_seed: seed ^ 0x5eed,
             max_new: args.usize_or("max-new", 2)?,
+            max_new_spread: args.usize_or("max-new-spread", 0)?,
             prefetch: args.has_flag("prefetch"),
             faults: faults.clone(),
         };

@@ -101,7 +101,8 @@ pub(crate) struct Scratch {
     /// FFN hidden (`rows × d_ff`).
     pub h1: Vec<f32>,
     pub h2: Vec<f32>,
-    /// One attention row's scores (`seq_len`).
+    /// Attention score windows, one `seq_len` slot per compute-pool
+    /// partition (slot 0 is the serial path's window).
     pub scores: Vec<f32>,
     /// Head output (`rows × vocab`).
     pub logits: Vec<f32>,
@@ -110,8 +111,10 @@ pub(crate) struct Scratch {
 }
 
 impl Scratch {
-    /// Size every buffer for an `rows`-row pass.
-    pub(crate) fn ensure(&mut self, rows: usize, cfg: &ModelConfig) {
+    /// Size every buffer for an `rows`-row pass whose attention may be
+    /// partitioned `slots` ways (each partition gets its own score
+    /// window; `slots = 1` is the serial layout).
+    pub(crate) fn ensure(&mut self, rows: usize, cfg: &ModelConfig, slots: usize) {
         let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
         self.x.resize(rows * d, 0.0);
         self.hx.resize(rows * d, 0.0);
@@ -122,7 +125,7 @@ impl Scratch {
         self.proj.resize(rows * d, 0.0);
         self.h1.resize(rows * f, 0.0);
         self.h2.resize(rows * d, 0.0);
-        self.scores.resize(cfg.seq_len.max(1), 0.0);
+        self.scores.resize(slots.max(1) * cfg.seq_len.max(1), 0.0);
         self.logits.resize(rows * v, 0.0);
     }
 }
@@ -205,6 +208,17 @@ impl DecodeState {
         self.retired.iter().filter(|&&r| !r).count()
     }
 
+    /// Return every lane to the retired-empty state, keeping the KV and
+    /// scratch allocations warm — the continuous scheduler reuses one
+    /// session across successive decode groups (possibly under different
+    /// weight sets; stale cache columns are never read because a lane's
+    /// attention window only covers positions it wrote itself).
+    pub fn reset(&mut self) {
+        self.retired.iter_mut().for_each(|r| *r = true);
+        self.lens.iter_mut().for_each(|l| *l = 0);
+        self.out.fill(0.0);
+    }
+
     /// Resident KV bytes of this session.
     pub fn kv_bytes(&self) -> usize {
         self.kv.bytes()
@@ -242,5 +256,18 @@ mod tests {
         assert!(!st.is_retired(1));
         assert_eq!(st.active_lanes(), 1);
         assert!(st.kv_bytes() > 0);
+    }
+
+    #[test]
+    fn reset_retires_and_empties_every_lane() {
+        let cfg = crate::testutil::synth_model_config();
+        let mut st = DecodeState::new("m/b2", cfg, 1, vec![3, 5], ParamIndex::new(&cfg));
+        st.out.resize(2 * cfg.vocab, 1.0);
+        st.reset();
+        assert_eq!(st.active_lanes(), 0);
+        assert_eq!((st.lane_len(0), st.lane_len(1)), (0, 0));
+        assert!(st.is_retired(0) && st.is_retired(1));
+        assert!(st.out.iter().all(|&x| x == 0.0));
+        assert!(st.kv_bytes() > 0, "reset keeps the cache allocation");
     }
 }

@@ -24,16 +24,27 @@
 //!   [`DecodeState`] scratch arena makes steady-state steps
 //!   allocation-free.
 //!
-//! Prefill projections are row-partitioned across
-//! `Engine::set_compute_threads` scoped workers
-//! ([`matmul_flat_threaded`]); per-row accumulation order is unchanged,
-//! so logits are bit-identical at every thread count.
+//! Projections, the attention inner loop, and decode-step matmuls are
+//! row-partitioned across a **persistent per-engine compute pool**
+//! (`Engine::set_compute_threads` →
+//! [`crate::scheduler::workers::ComputePool`], DESIGN.md §11); per-row
+//! accumulation order is unchanged, so logits are bit-identical at every
+//! thread count.
+//!
+//! Beyond the one-shot `prefill` → `decode_step` session shape, the
+//! engine supports **continuous batching** (DESIGN.md §11):
+//! [`Engine::new_session`] opens an empty session (every lane retired,
+//! no forward), and [`Engine::admit`] prefills fresh prompts into
+//! retired lanes of a *warm* session mid-flight — the scheduler retires
+//! finished lanes and admits queued requests into the freed slots
+//! between steps instead of tearing the session down per batch.
 
 use super::kv::{DecodeState, KvCache, Scratch};
 use crate::adapter::fmt::{Tensor, TensorData};
 use crate::loraquant::{FactorScratch, QFactors};
 use crate::model::ModelConfig;
-use crate::tensor::{dot, matmul_flat_threaded};
+use crate::scheduler::workers::{ComputePool, SendPtr};
+use crate::tensor::{dot, matmul_flat};
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -51,9 +62,9 @@ pub struct Program {
 pub struct Engine {
     programs: BTreeMap<String, Program>,
     artifacts_dir: PathBuf,
-    /// Worker threads for row-partitioned prefill/full-forward matmuls
-    /// (1 = fully serial; results are identical either way).
-    compute_threads: usize,
+    /// Persistent compute pool for row-partitioned kernels (None = fully
+    /// serial; results are identical either way).
+    pool: Option<ComputePool>,
 }
 
 /// "Device"-resident weights — host tensors in `param_names` order (the
@@ -83,7 +94,7 @@ impl Engine {
         Ok(Self {
             programs: BTreeMap::new(),
             artifacts_dir: artifacts_dir.as_ref().into(),
-            compute_threads: 1,
+            pool: None,
         })
     }
 
@@ -92,17 +103,25 @@ impl Engine {
         &self.artifacts_dir
     }
 
-    /// Row-partition prefill/full-forward matmuls across `threads` scoped
-    /// workers (clamped to ≥ 1). Thread count never changes results —
-    /// each output row accumulates in the same order — so 1 (the default)
-    /// only pins the serial schedule.
+    /// Row-partition the engine's kernels — prefill/full-forward matmuls,
+    /// the attention inner loop, and decode-step matmuls — across a
+    /// **persistent** `threads`-wide compute pool (clamped to ≥ 1; 1
+    /// drops the pool and runs fully serial). Workers live as long as the
+    /// engine, so a partitioned kernel call costs two condvar handshakes
+    /// instead of a round of thread spawns. Thread count never changes
+    /// results — each output row accumulates in the same order — so 1
+    /// (the default) only pins the serial schedule.
     pub fn set_compute_threads(&mut self, threads: usize) {
-        self.compute_threads = threads.max(1);
+        let threads = threads.max(1);
+        if threads == self.compute_threads() {
+            return;
+        }
+        self.pool = (threads > 1).then(|| ComputePool::new(threads));
     }
 
-    /// Current prefill worker count.
+    /// Current compute-pool width (1 = serial).
     pub fn compute_threads(&self) -> usize {
-        self.compute_threads
+        self.pool.as_ref().map_or(1, ComputePool::threads)
     }
 
     /// Raw HLO programs require PJRT.
@@ -204,7 +223,7 @@ impl Engine {
             tokens.dims[0],
             tokens.dims[1],
             adapters,
-            self.compute_threads,
+            self.pool.as_ref(),
         )
     }
 
@@ -288,7 +307,7 @@ impl Engine {
         let mut state =
             DecodeState::new(name, cfg, prog.arity, lens.to_vec(), ParamIndex::new(&cfg));
         state.idx.validate(&weights.tensors)?;
-        state.scratch.ensure(bsz * t, &cfg);
+        state.scratch.ensure(bsz * t, &cfg, self.compute_threads());
         // Embed the prompt region. Positions at or past a short lane's
         // length embed PAD (0); their K/V columns are overwritten by the
         // lane's own decode steps before anything can attend to them.
@@ -319,7 +338,7 @@ impl Engine {
             adapters,
             &mut state.kv,
             &mut state.scratch,
-            self.compute_threads,
+            self.pool.as_ref(),
         )?;
         let vo = cfg.vocab;
         let mut out = vec![0.0f32; bsz * vo];
@@ -392,7 +411,7 @@ impl Engine {
             return Ok(&state.out);
         }
         state.idx.validate(&weights.tensors)?;
-        state.scratch.ensure(n, &cfg);
+        state.scratch.ensure(n, &cfg, self.compute_threads());
         let embed = pget(&weights.tensors, state.idx.embed)?;
         let pos_tab = pget(&weights.tensors, state.idx.pos)?;
         let d = cfg.d_model;
@@ -414,9 +433,10 @@ impl Engine {
             adapters,
             &mut state.kv,
             &mut state.scratch,
-            // step rows are tiny (≤ lanes); threading them costs more
-            // than it saves — prefill is the threaded pass
-            1,
+            // the persistent pool makes partitioned steps affordable
+            // (two handshakes, no spawns); the pool clamps its width to
+            // the row count, so a one-lane step stays fully serial
+            self.pool.as_ref(),
         )?;
         for (r, &(b, _)) in state.map.iter().enumerate() {
             state.out[b * vo..(b + 1) * vo]
@@ -424,6 +444,153 @@ impl Engine {
         }
         for &(b, _) in &state.map {
             state.lens[b] += 1;
+        }
+        Ok(&state.out)
+    }
+
+    /// Open an **empty** continuous-batching session: `lanes` lanes, all
+    /// retired with zero consumed tokens, no forward run. Lanes come live
+    /// through [`Engine::admit`]; the session's KV/scratch allocations
+    /// persist across [`DecodeState::reset`], so one long-lived session
+    /// can serve many decode groups (DESIGN.md §11).
+    pub fn new_session(
+        &self,
+        name: &str,
+        lanes: usize,
+        weights: &DeviceWeights,
+    ) -> anyhow::Result<DecodeState> {
+        let prog = self.programs.get(name).with_context(|| format!("program {name} not loaded"))?;
+        if 1 + weights.tensors.len() != prog.arity {
+            bail!(
+                "program {name} expects {} inputs, got {}",
+                prog.arity,
+                1 + weights.tensors.len()
+            );
+        }
+        if lanes == 0 {
+            bail!("new_session: zero lanes");
+        }
+        let cfg = prog.cfg;
+        let mut state =
+            DecodeState::new(name, cfg, prog.arity, vec![0; lanes], ParamIndex::new(&cfg));
+        state.idx.validate(&weights.tensors)?;
+        state.reset();
+        Ok(state)
+    }
+
+    /// Admit fresh prompts into **retired** lanes of a live session
+    /// (continuous batching): lane `lanes[i]` restarts with
+    /// `prompts[i]`, running one forward over every admitted prompt row —
+    /// publishing K/V exactly like a batched prefill — and leaving each
+    /// admitted lane's next-token logits in the session-wide output
+    /// buffer (`lanes × vocab`; non-admitted rows zero). Bit-identical to
+    /// prefilling the same prompt in a fresh session: every row-wise
+    /// kernel is per-lane independent and a lane's attention window only
+    /// covers positions it wrote itself, so a previous occupant's stale
+    /// cache columns are unreachable.
+    ///
+    /// `adapters` is per-lane over the **whole** session (empty = none),
+    /// exactly as in [`Engine::decode_step`].
+    pub fn admit<'s>(
+        &self,
+        state: &'s mut DecodeState,
+        lanes: &[usize],
+        prompts: &[&[i32]],
+        weights: &DeviceWeights,
+        adapters: &[Option<&QFactors<'_>>],
+    ) -> anyhow::Result<&'s [f32]> {
+        let cfg = state.cfg;
+        if 1 + weights.tensors.len() != state.arity {
+            bail!(
+                "program {} expects {} inputs, got {}",
+                state.prog,
+                state.arity,
+                1 + weights.tensors.len()
+            );
+        }
+        let bsz = state.lanes();
+        if lanes.len() != prompts.len() {
+            bail!("admit: {} lanes for {} prompts", lanes.len(), prompts.len());
+        }
+        if !adapters.is_empty() {
+            if adapters.len() != bsz {
+                bail!("adapter list has {} entries for a session of {bsz}", adapters.len());
+            }
+            validate_adapter_shapes(&cfg, adapters)?;
+        }
+        // validate everything before any state mutation
+        let cap = state.kv.capacity();
+        for (i, (&l, prompt)) in lanes.iter().zip(prompts).enumerate() {
+            if l >= bsz {
+                bail!("admit: lane {l} out of range 0..{bsz}");
+            }
+            if !state.retired[l] {
+                bail!("admit: lane {l} is still live");
+            }
+            if lanes[..i].contains(&l) {
+                bail!("admit: lane {l} admitted twice in one call");
+            }
+            if prompt.is_empty() || prompt.len() > cap {
+                bail!("admit: lane {l} prompt length {} out of range 1..={cap}", prompt.len());
+            }
+            for &tok in prompt.iter() {
+                if tok < 0 || tok as usize >= cfg.vocab {
+                    bail!("token {tok} out of vocab range 0..{}", cfg.vocab);
+                }
+            }
+        }
+        let vo = cfg.vocab;
+        state.out.resize(bsz * vo, 0.0);
+        state.out.fill(0.0);
+        state.map.clear();
+        for (&l, prompt) in lanes.iter().zip(prompts) {
+            for p in 0..prompt.len() {
+                state.map.push((l, p));
+            }
+        }
+        let n = state.map.len();
+        if n == 0 {
+            return Ok(&state.out); // nothing admitted
+        }
+        state.idx.validate(&weights.tensors)?;
+        state.scratch.ensure(n, &cfg, self.compute_threads());
+        let embed = pget(&weights.tensors, state.idx.embed)?;
+        let pos_tab = pget(&weights.tensors, state.idx.pos)?;
+        let d = cfg.d_model;
+        let mut r = 0;
+        for prompt in prompts {
+            for (p, &tok) in prompt.iter().enumerate() {
+                embed_row(
+                    embed,
+                    pos_tab,
+                    tok as usize,
+                    p,
+                    d,
+                    &mut state.scratch.x[r * d..(r + 1) * d],
+                );
+                r += 1;
+            }
+        }
+        forward_core(
+            &cfg,
+            &weights.tensors,
+            &state.idx,
+            &Rows::Step { map: &state.map },
+            adapters,
+            &mut state.kv,
+            &mut state.scratch,
+            self.pool.as_ref(),
+        )?;
+        // each admitted lane's next-token logits = its last prompt row
+        let mut r = 0;
+        for (&l, prompt) in lanes.iter().zip(prompts) {
+            r += prompt.len();
+            state.out[l * vo..(l + 1) * vo]
+                .copy_from_slice(&state.scratch.logits[(r - 1) * vo..r * vo]);
+        }
+        for (&l, prompt) in lanes.iter().zip(prompts) {
+            state.retired[l] = false;
+            state.lens[l] = prompt.len();
         }
         Ok(&state.out)
     }
@@ -649,6 +816,79 @@ fn apply_adapters(
     }
 }
 
+/// One partitioned (or serial) matmul: the pool variant is bit-identical
+/// to the serial kernel (whole output rows, same accumulation order).
+#[inline]
+fn mm(
+    pool: Option<&ComputePool>,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+) {
+    match pool {
+        Some(p) => p.matmul_flat(a, m, k, b, n, c),
+        None => matmul_flat(a, m, k, b, n, c),
+    }
+}
+
+/// The attention inner loop over global rows `lo..hi` of one pass: each
+/// row's causal windowed softmax against its lane's cache. `att` holds
+/// exactly the `(hi - lo) × d` output rows of this partition; `scores`
+/// is this partition's private score window (≥ the largest window). One
+/// partition per compute-pool task — row content is partition-invariant,
+/// so threading never changes a bit.
+#[allow(clippy::too_many_arguments)] // the engine's inner loop, not an API
+fn attention_rows(
+    rows: &Rows<'_>,
+    lo: usize,
+    hi: usize,
+    q: &[f32],
+    kv: &KvCache,
+    layer: usize,
+    nh: usize,
+    hd: usize,
+    att_scale: f32,
+    att: &mut [f32],
+    scores: &mut [f32],
+) {
+    let d = nh * hd;
+    att.fill(0.0);
+    for r in lo..hi {
+        let (b, pos) = rows.lane_pos(r);
+        let klane = kv.k_lane(layer, b);
+        let vlane = kv.v_lane(layer, b);
+        for h in 0..nh {
+            let off = h * hd;
+            let qrow = &q[r * d + off..r * d + off + hd];
+            // causal window: this row's lane has exactly pos + 1
+            // cached positions (its own K/V was just published).
+            // Masked-future terms of the full-row softmax exp to 0.0
+            // exactly, so restricting to the window is bit-identical.
+            let win = &mut scores[..pos + 1];
+            for (j, s) in win.iter_mut().enumerate() {
+                *s = dot(qrow, &klane[j * d + off..j * d + off + hd]) * att_scale;
+            }
+            let max = win.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+            let mut denom = 0.0;
+            for s in win.iter_mut() {
+                *s = (*s - max).exp();
+                denom += *s;
+            }
+            let orow = &mut att[(r - lo) * d + off..(r - lo) * d + off + hd];
+            for (j, &w) in win.iter().enumerate() {
+                let w = w / denom;
+                let vrow = &vlane[j * d + off..j * d + off + hd];
+                for u in 0..hd {
+                    orow[u] += w * vrow[u];
+                }
+            }
+        }
+    }
+}
+
 /// The shared layer core (python/compile/model.py `_forward_impl`): runs
 /// every transformer layer plus the head over the rows described by
 /// `rows`, with optional per-lane factor-form adapter deltas on every
@@ -657,7 +897,8 @@ fn apply_adapters(
 /// cache*, so a step row attends across everything its lane has consumed.
 /// `weights` is the positional parameter list addressed through `idx`
 /// (resolved once per session). Leaves `rows × vocab` logits in
-/// `sc.logits`.
+/// `sc.logits`. When `pool` is set, projections and the attention rows
+/// are partitioned across it (bit-identical at any width).
 #[allow(clippy::too_many_arguments)] // the engine's one inner loop, not an API
 fn forward_core(
     cfg: &ModelConfig,
@@ -667,7 +908,7 @@ fn forward_core(
     adapters: &[Option<&QFactors<'_>>],
     kv: &mut KvCache,
     sc: &mut Scratch,
-    threads: usize,
+    pool: Option<&ComputePool>,
 ) -> anyhow::Result<()> {
     let (d, f, vo) = (cfg.d_model, cfg.d_ff, cfg.vocab);
     let nh = cfg.n_heads;
@@ -678,6 +919,9 @@ fn forward_core(
     let n = rows.n_rows();
     let lora_s = cfg.lora_scaling();
     let att_scale = 1.0 / (hd as f32).sqrt();
+    // per-partition score-window stride (Scratch::ensure sized one slot
+    // per pool thread)
+    let sstride = cfg.seq_len.max(1);
     let Scratch { x, hx, q, k, v, att, proj, h1, h2, scores, logits, factor } = sc;
 
     for l in 0..cfg.n_layers {
@@ -686,50 +930,46 @@ fn forward_core(
         // attention block
         let (g1, b1) = (pget(weights, li[0])?, pget(weights, li[1])?);
         layernorm(x, n, d, g1, b1, hx);
-        matmul_flat_threaded(hx, n, d, pget(weights, li[2])?, d, q, threads);
+        mm(pool, hx, n, d, pget(weights, li[2])?, d, q);
         apply_adapters(rows, adapters, &site[0], hx, (d, d), lora_s, q, factor);
-        matmul_flat_threaded(hx, n, d, pget(weights, li[3])?, d, k, threads);
+        mm(pool, hx, n, d, pget(weights, li[3])?, d, k);
         apply_adapters(rows, adapters, &site[1], hx, (d, d), lora_s, k, factor);
-        matmul_flat_threaded(hx, n, d, pget(weights, li[4])?, d, v, threads);
+        mm(pool, hx, n, d, pget(weights, li[4])?, d, v);
         apply_adapters(rows, adapters, &site[2], hx, (d, d), lora_s, v, factor);
         // publish this pass's K/V columns, then attend reading the cache
         for r in 0..n {
             let (b, pos) = rows.lane_pos(r);
             kv.write(l, b, pos, &k[r * d..(r + 1) * d], &v[r * d..(r + 1) * d]);
         }
-        att.fill(0.0);
-        for r in 0..n {
-            let (b, pos) = rows.lane_pos(r);
-            let klane = kv.k_lane(l, b);
-            let vlane = kv.v_lane(l, b);
-            for h in 0..nh {
-                let off = h * hd;
-                let qrow = &q[r * d + off..r * d + off + hd];
-                // causal window: this row's lane has exactly pos + 1
-                // cached positions (its own K/V was just published).
-                // Masked-future terms of the full-row softmax exp to 0.0
-                // exactly, so restricting to the window is bit-identical.
-                let win = &mut scores[..pos + 1];
-                for (j, s) in win.iter_mut().enumerate() {
-                    *s = dot(qrow, &klane[j * d + off..j * d + off + hd]) * att_scale;
-                }
-                let max = win.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
-                let mut denom = 0.0;
-                for s in win.iter_mut() {
-                    *s = (*s - max).exp();
-                    denom += *s;
-                }
-                let orow = &mut att[r * d + off..r * d + off + hd];
-                for (j, &w) in win.iter().enumerate() {
-                    let w = w / denom;
-                    let vrow = &vlane[j * d + off..j * d + off + hd];
-                    for u in 0..hd {
-                        orow[u] += w * vrow[u];
-                    }
-                }
+        match pool {
+            Some(p) if p.threads() > 1 && n > 1 => {
+                let t = p.threads().min(n);
+                let chunk = n.div_ceil(t);
+                let tasks = n.div_ceil(chunk);
+                let att_ptr = SendPtr(att.as_mut_ptr());
+                let sc_ptr = SendPtr(scores.as_mut_ptr());
+                let kv_ro: &KvCache = kv;
+                let q_ro: &[f32] = q;
+                p.run(tasks, &|i| {
+                    let lo = i * chunk;
+                    let hi = (lo + chunk).min(n);
+                    // Safety: tasks cover disjoint row ranges of `att`
+                    // and disjoint score slots; the run barrier bounds
+                    // every borrow.
+                    let att_c = unsafe {
+                        std::slice::from_raw_parts_mut(att_ptr.0.add(lo * d), (hi - lo) * d)
+                    };
+                    let sc_c = unsafe {
+                        std::slice::from_raw_parts_mut(sc_ptr.0.add(i * sstride), sstride)
+                    };
+                    attention_rows(rows, lo, hi, q_ro, kv_ro, l, nh, hd, att_scale, att_c, sc_c);
+                });
+            }
+            _ => {
+                attention_rows(rows, 0, n, q, kv, l, nh, hd, att_scale, att, &mut scores[..sstride])
             }
         }
-        matmul_flat_threaded(att, n, d, pget(weights, li[5])?, d, proj, threads);
+        mm(pool, att, n, d, pget(weights, li[5])?, d, proj);
         apply_adapters(rows, adapters, &site[3], att, (d, d), lora_s, proj, factor);
         for (xi, pi) in x.iter_mut().zip(proj.iter()) {
             *xi += pi;
@@ -738,7 +978,7 @@ fn forward_core(
         // FFN block
         let (g2, b2) = (pget(weights, li[6])?, pget(weights, li[7])?);
         layernorm(x, n, d, g2, b2, hx);
-        matmul_flat_threaded(hx, n, d, pget(weights, li[8])?, f, h1, threads);
+        mm(pool, hx, n, d, pget(weights, li[8])?, f, h1);
         apply_adapters(rows, adapters, &site[4], hx, (d, f), lora_s, h1, factor);
         if cfg.act_silu {
             for z in h1.iter_mut() {
@@ -749,7 +989,7 @@ fn forward_core(
                 *z = gelu(*z);
             }
         }
-        matmul_flat_threaded(h1, n, f, pget(weights, li[9])?, d, h2, threads);
+        mm(pool, h1, n, f, pget(weights, li[9])?, d, h2);
         apply_adapters(rows, adapters, &site[5], h1, (f, d), lora_s, h2, factor);
         for (xi, hi) in x.iter_mut().zip(h2.iter()) {
             *xi += hi;
@@ -757,7 +997,7 @@ fn forward_core(
     }
 
     layernorm(x, n, d, pget(weights, idx.lnf_g)?, pget(weights, idx.lnf_b)?, hx);
-    matmul_flat_threaded(hx, n, d, pget(weights, idx.head)?, vo, logits, threads);
+    mm(pool, hx, n, d, pget(weights, idx.head)?, vo, logits);
     Ok(())
 }
 
@@ -771,7 +1011,7 @@ fn ref_forward(
     bsz: usize,
     t: usize,
     adapters: &[Option<&QFactors<'_>>],
-    threads: usize,
+    pool: Option<&ComputePool>,
 ) -> anyhow::Result<Vec<f32>> {
     let idx = ParamIndex::new(cfg);
     idx.validate(weights)?;
@@ -785,7 +1025,7 @@ fn ref_forward(
     let embed = pget(weights, idx.embed)?;
     let pos = pget(weights, idx.pos)?;
     let mut sc = Scratch::default();
-    sc.ensure(bsz * t, cfg);
+    sc.ensure(bsz * t, cfg, pool.map_or(1, ComputePool::threads));
     for r in 0..bsz * t {
         let tok = tokens[r];
         if tok < 0 || tok as usize >= cfg.vocab {
@@ -798,7 +1038,7 @@ fn ref_forward(
     // just two more of the same size, routing attention through the one
     // shared core. Steady-state decode never takes this path.
     let mut kv = KvCache::new(cfg.n_layers, bsz, t.max(1), d);
-    forward_core(cfg, weights, &idx, &Rows::Full { bsz, t }, adapters, &mut kv, &mut sc, threads)?;
+    forward_core(cfg, weights, &idx, &Rows::Full { bsz, t }, adapters, &mut kv, &mut sc, pool)?;
     Ok(sc.logits)
 }
 
@@ -1346,6 +1586,176 @@ mod tests {
         state.retire(2);
         let logits = engine.decode_step(&mut state, &w, &[], &[3, 3, 3]).unwrap();
         assert!(logits.iter().all(|&x| x == 0.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Continuous-batching surface: admitting a prompt into a retired
+    /// lane of a warm session must be **bit-identical** to prefilling the
+    /// same prompt in a fresh session — including when the lane carries a
+    /// previous occupant's stale KV columns.
+    #[test]
+    fn admit_into_warm_session_matches_fresh_prefill() {
+        let (dir, cfg, engine, w, _) = kv_fixture("kvadmit");
+        let vo = cfg.vocab;
+        let p0: Vec<i32> = (0..5).map(|i| 1 + (i * 3) % 9).collect();
+        let p1: Vec<i32> = (0..3).map(|i| 2 + (i * 5) % 7).collect();
+        let p2: Vec<i32> = (0..7).map(|i| 1 + (i * 2) % 11).collect();
+
+        // fresh-prefill oracle rows
+        let seqs = |p: &[i32]| {
+            let mut s = vec![0i32; cfg.seq_len];
+            s[..p.len()].copy_from_slice(p);
+            vec![s]
+        };
+        let (_, solo0) = engine.prefill("synth/b4", &seqs(&p0), &[p0.len()], &w, &[]).unwrap();
+        let (_, solo1) = engine.prefill("synth/b4", &seqs(&p1), &[p1.len()], &w, &[]).unwrap();
+        let (_, solo2) = engine.prefill("synth/b4", &seqs(&p2), &[p2.len()], &w, &[]).unwrap();
+
+        // empty session → admit lanes 0 and 2 in one pass
+        let mut state = engine.new_session("synth/b4", 3, &w).unwrap();
+        assert_eq!(state.active_lanes(), 0);
+        let out = engine
+            .admit(&mut state, &[0, 2], &[p0.as_slice(), p1.as_slice()], &w, &[])
+            .unwrap()
+            .to_vec();
+        assert_eq!(&out[..vo], &solo0[..], "lane 0 admit row == fresh prefill row");
+        assert_eq!(&out[2 * vo..3 * vo], &solo1[..], "lane 2 admit row == fresh prefill row");
+        assert!(out[vo..2 * vo].iter().all(|&x| x == 0.0), "un-admitted lane stays zero");
+        assert_eq!(state.active_lanes(), 2);
+        assert_eq!((state.lane_len(0), state.lane_len(2)), (p0.len(), p1.len()));
+
+        // retire lane 0, re-admit a different prompt into the same slot:
+        // the stale cache columns of p0 must be unreachable
+        state.retire(0);
+        let out = engine.admit(&mut state, &[0], &[p2.as_slice()], &w, &[]).unwrap().to_vec();
+        assert_eq!(&out[..vo], &solo2[..], "reused lane must match a fresh prefill bitwise");
+        assert_eq!(state.lane_len(0), p2.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Mid-flight admission must not perturb surviving lanes: a lane
+    /// stepped while its neighbors churn produces the same logits as the
+    /// same lane decoded alone (per-lane independence, bitwise).
+    #[test]
+    fn mid_flight_admission_leaves_survivors_bit_identical() {
+        let (dir, cfg, engine, w, _) = kv_fixture("kvmidflight");
+        let vo = cfg.vocab;
+        let p0: Vec<i32> = vec![3, 1, 4, 1, 5];
+        let p1: Vec<i32> = vec![2, 7];
+        let p2: Vec<i32> = vec![6, 2, 8];
+
+        // solo run of lane-0's decode: prefill then 3 greedy steps
+        let mut solo_seq = vec![0i32; cfg.seq_len];
+        solo_seq[..p0.len()].copy_from_slice(&p0);
+        let (mut solo_state, mut solo_logits) =
+            engine.prefill("synth/b4", &[solo_seq.clone()], &[p0.len()], &w, &[]).unwrap();
+        let mut solo_rows = Vec::new();
+        let mut solo_pos = p0.len();
+        for _ in 0..3 {
+            let row = &solo_logits[..vo];
+            let best = (0..vo).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap();
+            solo_seq[solo_pos] = best as i32;
+            solo_pos += 1;
+            solo_logits =
+                engine.decode_step(&mut solo_state, &w, &[], &[best as i32]).unwrap().to_vec();
+            solo_rows.push(solo_logits[..vo].to_vec());
+        }
+
+        // churned run: same lane 0, while lane 1 is retired and re-admitted
+        let mut state = engine.new_session("synth/b4", 2, &w).unwrap();
+        let first = engine
+            .admit(&mut state, &[0, 1], &[p0.as_slice(), p1.as_slice()], &w, &[])
+            .unwrap()
+            .to_vec();
+        let mut pos0 = p0.len();
+        let mut seq0 = vec![0i32; cfg.seq_len];
+        seq0[..p0.len()].copy_from_slice(&p0);
+        let mut cur = first;
+        for (step, solo_row) in solo_rows.iter().enumerate() {
+            let row = &cur[..vo];
+            let best = (0..vo).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap();
+            seq0[pos0] = best as i32;
+            pos0 += 1;
+            if step == 1 {
+                // churn the neighbor mid-flight
+                state.retire(1);
+                engine.admit(&mut state, &[1], &[p2.as_slice()], &w, &[]).unwrap();
+            }
+            cur = engine.decode_step(&mut state, &w, &[], &[best as i32, 1]).unwrap().to_vec();
+            assert_eq!(&cur[..vo], &solo_row[..], "step {step}: survivor must be unperturbed");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn admit_validates_inputs_before_mutating() {
+        let (dir, cfg, engine, w, _) = kv_fixture("kvadmitbad");
+        let mut state = engine.new_session("synth/b4", 2, &w).unwrap();
+        let good: Vec<i32> = vec![1, 2];
+        // lane out of range / duplicate lane / prompt arity
+        assert!(engine.admit(&mut state, &[5], &[good.as_slice()], &w, &[]).is_err());
+        assert!(engine
+            .admit(&mut state, &[0, 0], &[good.as_slice(), good.as_slice()], &w, &[])
+            .is_err());
+        assert!(engine.admit(&mut state, &[0, 1], &[good.as_slice()], &w, &[]).is_err());
+        // empty / overlong prompt, bad token
+        let long = vec![1i32; cfg.seq_len + 1];
+        let empty: Vec<i32> = Vec::new();
+        assert!(engine.admit(&mut state, &[0], &[empty.as_slice()], &w, &[]).is_err());
+        assert!(engine.admit(&mut state, &[0], &[long.as_slice()], &w, &[]).is_err());
+        let bad = vec![-1i32];
+        assert!(engine.admit(&mut state, &[0], &[bad.as_slice()], &w, &[]).is_err());
+        // nothing mutated: both lanes still empty and retired
+        assert_eq!(state.active_lanes(), 0);
+        assert_eq!((state.lane_len(0), state.lane_len(1)), (0, 0));
+        // a live lane rejects re-admission
+        engine.admit(&mut state, &[0], &[good.as_slice()], &w, &[]).unwrap();
+        let err = engine.admit(&mut state, &[0], &[good.as_slice()], &w, &[]).unwrap_err();
+        assert!(err.to_string().contains("still live"), "{err}");
+        // zero-lane session is rejected at creation
+        assert!(engine.new_session("synth/b4", 0, &w).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The persistent-pool determinism contract (DESIGN.md §11): prefill,
+    /// admit, and decode-step logits are bit-identical at 1/2/4 compute
+    /// threads — the pool partitions whole rows, never the math.
+    #[test]
+    fn persistent_pool_bit_identical_across_thread_counts() {
+        let (dir, cfg, mut engine, w, w_base) = kv_fixture("kvpool");
+        let vo = cfg.vocab;
+        let stored = synth_quantized_adapter(&cfg, 51);
+        let qf = stored.factors();
+        let p0: Vec<i32> = (0..6).map(|i| 1 + (i * 3) % 9).collect();
+        let p1: Vec<i32> = (0..4).map(|i| 2 + i).collect();
+
+        let run = |engine: &Engine| {
+            // factor-path session: admit two lanes, then three steps
+            let adapters = [Some(&qf), Some(&qf)];
+            let mut state = engine.new_session("synth/b4", 2, &w_base).unwrap();
+            let mut trace =
+                engine
+                    .admit(&mut state, &[0, 1], &[p0.as_slice(), p1.as_slice()], &w_base, &adapters)
+                    .unwrap()
+                    .to_vec();
+            for tok in [3i32, 5, 7] {
+                let step =
+                    engine.decode_step(&mut state, &w_base, &adapters, &[tok, tok]).unwrap();
+                trace.extend_from_slice(step);
+            }
+            // merged full forward too (covers ref_forward's pool path)
+            let flat = vec![1i32; 2 * cfg.seq_len];
+            trace.extend(engine.forward("synth/b4", &flat, &[2, cfg.seq_len], &w).unwrap());
+            trace
+        };
+        engine.set_compute_threads(1);
+        let serial = run(&engine);
+        assert_eq!(serial.len() % vo, 0);
+        for threads in [2usize, 4] {
+            engine.set_compute_threads(threads);
+            assert_eq!(engine.compute_threads(), threads);
+            assert_eq!(run(&engine), serial, "threads={threads} must not change any bit");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

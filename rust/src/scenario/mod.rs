@@ -27,12 +27,14 @@
 //! byte-identical event logs, and per-request **token output** is
 //! additionally identical across worker-pool sizes (results, not
 //! schedule: the reference engine's forward is per-lane independent, so
-//! batch composition cannot change any request's tokens). One caveat:
-//! with `merge_workers > 1` *and* a cache small enough to thrash, the
-//! real-time completion order of concurrent merges can pick different
-//! LRU eviction victims — golden-trace specs that thrash the cache
-//! should pin `merge_workers: 1` (scripted-fault overlap is still
-//! observable through [`MergeStatsSnapshot`](crate::coordinator::MergeStatsSnapshot)).
+//! batch composition cannot change any request's tokens). This holds at
+//! any `merge_workers` count: virtual-clock workers ingest merge
+//! completions through a **submission-order sequencer** (DESIGN.md
+//! §11), so concurrent merges racing on the pool threads cannot change
+//! cache-insert order — and therefore cannot change LRU eviction under
+//! thrash. (Real-time serving ingests on arrival instead; scripted-fault
+//! overlap is still observable through
+//! [`MergeStatsSnapshot`](crate::coordinator::MergeStatsSnapshot).)
 //!
 //! ## Fault injection points
 //!

@@ -79,6 +79,11 @@ pub struct ScenarioSummary {
     pub factor_batches: u64,
     pub mean_batch: f64,
     pub tokens_generated: u64,
+    /// Step forward passes across the pool — the virtual decode-step
+    /// count the continuous-vs-lockstep acceptance compares.
+    pub decode_steps: u64,
+    /// Prefill/admission forward passes across the pool.
+    pub prefill_passes: u64,
     pub cache: CacheStats,
     pub merges: MergeStatsSnapshot,
     /// Real wall-clock time the whole run took (the virtual-clock payoff:
@@ -92,7 +97,7 @@ impl ScenarioSummary {
         let mut out = format!(
             "scenario {} | strategy={} workers={} | {}/{} ok ({} failed)\n\
              makespan={:?} p50={:?} p95={:?} max={:?}\n\
-             batches={} (factor={}) mean_batch={:.2} tokens={}\n\
+             batches={} (factor={}) mean_batch={:.2} tokens={} steps={} prefills={}\n\
              cache: hits={} misses={} evictions={} | merges: started={} peak_overlap={}\n\
              real wall: {:?}\n",
             self.name,
@@ -109,6 +114,8 @@ impl ScenarioSummary {
             self.factor_batches,
             self.mean_batch,
             self.tokens_generated,
+            self.decode_steps,
+            self.prefill_passes,
             self.cache.hits,
             self.cache.misses,
             self.cache.evictions,
@@ -165,6 +172,7 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
         .with_workers(spec.workers)
         .with_buckets(spec.buckets.clone())
         .with_merge_strategy(spec.strategy)
+        .with_continuous(spec.continuous)
         .with_clock(clock.clone());
     cfg.max_wait = spec.max_wait;
     cfg.cache_budget_bytes = spec.cache_budget_bytes;
@@ -278,23 +286,27 @@ impl Driver<'_> {
 
     /// Whether the merge pipeline can make no further progress at the
     /// current virtual time. `worker_inflight` is the worker-side count
-    /// (submit → `Merged` ingested); `mstats.inflight` the pool-side
-    /// count (dequeue → done-callback fired). Settled means every
-    /// dequeued merge is parked on the clock, and any job still *queued*
-    /// (worker-side > pool-side) is blocked because every merge thread
-    /// is occupied by a sleeper — a queued job with a free thread, or a
-    /// completion awaiting ingest, is real-time progress: keep polling.
+    /// (submit → `Merged` ingested); `held` the completions the ingest
+    /// sequencer is deliberately holding for an earlier-submitted merge
+    /// (those are time-blocked, not in-progress); `mstats.inflight` the
+    /// pool-side count (dequeue → done-callback fired). Settled means
+    /// every dequeued merge is parked on the clock, and any job still
+    /// *queued* (worker-side, minus held, > pool-side) is blocked because
+    /// every merge thread is occupied by a sleeper — a queued job with a
+    /// free thread, or a completion awaiting ingest, is real-time
+    /// progress: keep polling.
     fn merges_settled(
         &self,
         worker_inflight: usize,
+        held: usize,
         sleepers: usize,
         mstats: &MergeStatsSnapshot,
     ) -> bool {
         let pool_threads = self.spec.merge_workers.max(1);
-        let undequeued = worker_inflight.saturating_sub(mstats.inflight);
+        let undequeued = worker_inflight.saturating_sub(mstats.inflight + held);
         mstats.inflight == sleepers
             && (undequeued == 0 || mstats.inflight >= pool_threads)
-            && worker_inflight >= mstats.inflight
+            && worker_inflight >= mstats.inflight + held
     }
 
     // ---- prefetch ------------------------------------------------------
@@ -328,9 +340,10 @@ impl Driver<'_> {
                 // host work is still running — poll.
                 let snaps = self.coord.metrics_per_worker()?;
                 let inflight: usize = snaps.iter().map(|s| s.inflight_merges).sum();
+                let held: usize = snaps.iter().map(|s| s.held_merges).sum();
                 let (sleepers, earliest) = vc.sleepers();
                 let mstats = self.coord.merge_stats();
-                if sleepers > 0 && self.merges_settled(inflight, sleepers, &mstats) {
+                if sleepers > 0 && self.merges_settled(inflight, held, sleepers, &mstats) {
                     if let Some(t) = earliest {
                         vc.advance_to(t);
                     }
@@ -421,10 +434,11 @@ impl Driver<'_> {
             let queued: usize = snaps.iter().map(|s| s.queued_requests).sum();
             let parked: usize = snaps.iter().map(|s| s.parked_requests).sum();
             let inflight: usize = snaps.iter().map(|s| s.inflight_merges).sum();
+            let held: usize = snaps.iter().map(|s| s.held_merges).sum();
             let (sleepers, _) = vc.sleepers();
             let mstats = self.coord.merge_stats();
             let accounted = self.completed + queued + parked == self.submitted;
-            let merges_settled = self.merges_settled(inflight, sleepers, &mstats);
+            let merges_settled = self.merges_settled(inflight, held, sleepers, &mstats);
             if accounted && merges_settled {
                 return Ok(snaps);
             }
@@ -489,10 +503,15 @@ impl Driver<'_> {
         let off = self.offset();
         self.submit_offset[idx] = off;
         self.push_event(off, EventKind::Submit { req: idx, adapter });
+        let max_new = if self.spec.max_new_spread > 0 {
+            1 + (3 * idx + 1) % self.spec.max_new_spread
+        } else {
+            self.spec.max_new
+        };
         let rx = self.coord.generate_async(GenRequest {
             adapter,
             prompt: self.prompts[idx].clone(),
-            max_new: self.spec.max_new,
+            max_new,
         });
         self.outstanding.push((idx, rx));
         self.submitted += 1;
@@ -601,6 +620,8 @@ impl Driver<'_> {
             factor_batches: m.factor_batches,
             mean_batch: m.mean_batch_size(),
             tokens_generated: m.tokens_generated,
+            decode_steps: m.decode_steps,
+            prefill_passes: m.prefill_passes,
             cache,
             merges,
             real_wall: Duration::ZERO, // stamped by run_scenario

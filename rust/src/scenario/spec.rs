@@ -79,6 +79,11 @@ pub struct ScenarioSpec {
     /// changes logits, so golden traces hold at any value; the default 1
     /// additionally pins the serial execution schedule.
     pub compute_threads: usize,
+    /// Continuous-batching decode (DESIGN.md §11; the default). `false`
+    /// pins the per-batch lock-step path — token outputs are identical,
+    /// only the decode-step count and TTFT change, which is exactly what
+    /// the continuous-vs-lockstep acceptance scenario compares.
+    pub continuous: bool,
     pub buckets: Vec<usize>,
     pub max_wait: Duration,
     pub cache_budget_bytes: usize,
@@ -96,6 +101,12 @@ pub struct ScenarioSpec {
     pub prompt_seed: u64,
     /// Max new tokens per request.
     pub max_new: usize,
+    /// When > 0, override `max_new` with a deterministic mixed-length
+    /// pattern: request `i` gets `1 + (3i + 1) mod spread` new-token
+    /// budget (a full residue cycle for spread coprime with 3). Mixed
+    /// lengths are what make continuous batching pay: short lanes free
+    /// up mid-flight while long lanes keep decoding.
+    pub max_new_spread: usize,
     /// Warm every adapter's merged weights before the trace.
     pub prefetch: bool,
     pub faults: FaultPlan,
@@ -110,6 +121,7 @@ impl Default for ScenarioSpec {
             workers: 1,
             merge_workers: 1,
             compute_threads: 1,
+            continuous: true,
             // the buckets aot.py actually exports, so specs run unchanged
             // against real PJRT artifacts
             buckets: vec![1, 8],
@@ -120,6 +132,7 @@ impl Default for ScenarioSpec {
             round_robin: false,
             prompt_seed: 11,
             max_new: 2,
+            max_new_spread: 0,
             prefetch: false,
             faults: FaultPlan::default(),
         }

@@ -1,0 +1,547 @@
+//! The continuous-batching step loop (DESIGN.md §11).
+//!
+//! [`run_continuous`] owns the retire → admit → step cycle over one
+//! decode session:
+//!
+//! 1. **retire** — lanes that hit EOS, their budget, or the end of the
+//!    sequence are retired the moment the finishing token is consumed
+//!    (inside the consume step below), freeing their slot immediately;
+//! 2. **admit** — every free lane is offered to the [`AdmissionQueue`],
+//!    which picks requests in token-budget-fair order; all admissions of
+//!    one cycle share a single prefill-shaped forward over their prompt
+//!    rows ([`DecodeStep::admit`]), and each admitted lane's first token
+//!    comes straight out of that pass;
+//! 3. **step** — one incremental forward over every live lane
+//!    ([`DecodeStep::step`]); the step pass only runs once the queue is
+//!    drained or every lane is occupied, so each step carries the
+//!    maximum occupancy available.
+//!
+//! Unlike the lock-step protocol (`eval::decode::decode_lockstep`),
+//! a finished lane never waits for the slowest lane of its batch: its
+//! slot is reused mid-flight. Token outputs are identical either way —
+//! every row-wise kernel in the engine is per-lane independent, so a
+//! lane's logits do not depend on who its neighbors are (pinned by
+//! `prop_continuous_matches_lockstep_oracle`).
+//!
+//! [`SessionStepper`] is the production [`DecodeStep`]: it drives
+//! `Engine::new_session` / `Engine::admit` / `Engine::decode_step` over
+//! a **persistent** session slot owned by the caller (the pool worker),
+//! so the KV cache and scratch arena are allocated once per worker and
+//! reused across every decode group, and it re-binds per-lane
+//! factor-form adapters at admission — one heterogeneous session serves
+//! many tenants over the shared base weights.
+
+use super::queue::{AdmissionQueue, LaneRequest};
+use crate::clock::Clock;
+use crate::coordinator::registry::AdapterId;
+use crate::eval::decode::{consume_greedy, DecodeStep};
+use crate::eval::tasks::TOKENS;
+use crate::loraquant::{FactorSource, QFactors};
+use crate::runtime::{DecodeState, DeviceWeights, Engine};
+use anyhow::{bail, Context};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Session shape for one continuous run.
+#[derive(Debug, Clone, Copy)]
+pub struct ContinuousConfig {
+    /// Concurrent decode lanes (the worker's largest compiled bucket).
+    pub lanes: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+/// One request's outcome.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    /// The id the caller stamped on the [`LaneRequest`].
+    pub id: u64,
+    pub tenant: AdapterId,
+    /// Generated tokens, EOS excluded (identical to the lock-step path).
+    pub tokens: Vec<i32>,
+    /// Enqueue → first consumed token (admission wait + prefill; zero
+    /// virtual time under the scenario clock).
+    pub ttft: Duration,
+}
+
+/// Counters of one [`run_continuous`] call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoopStats {
+    /// Step forward passes — the "virtual decode-step count" the
+    /// continuous-vs-lockstep acceptance compares.
+    pub decode_steps: u64,
+    /// Admission forward passes (mid-flight prefills).
+    pub admits: u64,
+    /// Requests completed.
+    pub finished: u64,
+    /// Tokens generated (EOS excluded).
+    pub tokens: u64,
+    /// High-water mark of concurrently occupied lanes.
+    pub peak_lanes: usize,
+}
+
+/// A lane's occupant.
+struct LaneState {
+    id: u64,
+    tenant: AdapterId,
+    budget: usize,
+    generated: Vec<i32>,
+    enqueued: Instant,
+    ttft: Option<Duration>,
+}
+
+/// Consume one next-token logits row for `lane` through the **shared**
+/// greedy rule ([`consume_greedy`] — the same function `decode_lockstep`
+/// runs, so the two paths cannot drift), charge the tenant, and finish
+/// the lane on EOS / budget / sequence-full. Finishing retires the lane
+/// with the stepper and emits the result.
+#[allow(clippy::too_many_arguments)] // the loop's one consume point, not an API
+fn consume_row(
+    lane: usize,
+    row: &[f32],
+    seqs: &mut [Vec<i32>],
+    pos: &mut [usize],
+    occ: &mut [Option<LaneState>],
+    queue: &mut AdmissionQueue,
+    stepper: &mut dyn DecodeStep,
+    clock: &Clock,
+    seq_len: usize,
+    stats: &mut LoopStats,
+    on_done: &mut dyn FnMut(FinishedRequest),
+) {
+    let Some(ls) = occ[lane].as_mut() else { return };
+    let done = consume_greedy(
+        row,
+        &mut seqs[lane],
+        &mut pos[lane],
+        &mut ls.generated,
+        ls.budget,
+        seq_len,
+    );
+    queue.charge(ls.tenant, 1);
+    if ls.ttft.is_none() {
+        ls.ttft = Some(clock.now().duration_since(ls.enqueued));
+    }
+    if done {
+        let ls = occ[lane].take().expect("lane occupied");
+        stepper.retire(lane);
+        queue.release(ls.tenant);
+        stats.finished += 1;
+        stats.tokens += ls.generated.len() as u64;
+        on_done(FinishedRequest {
+            id: ls.id,
+            tenant: ls.tenant,
+            tokens: ls.generated,
+            ttft: ls.ttft.unwrap_or_default(),
+        });
+    }
+}
+
+/// Drive `stepper` until `queue` and every lane drain. See the module
+/// docs for the cycle; `on_done` fires once per request, in completion
+/// order. Requests whose room-clamped budget is zero complete instantly
+/// without touching a lane (the lock-step zero-budget rule).
+pub fn run_continuous(
+    stepper: &mut dyn DecodeStep,
+    cfg: &ContinuousConfig,
+    queue: &mut AdmissionQueue,
+    clock: &Clock,
+    mut on_done: impl FnMut(FinishedRequest),
+) -> anyhow::Result<LoopStats> {
+    let lanes = cfg.lanes.max(1);
+    stepper.begin(lanes)?;
+    let mut seqs = vec![vec![TOKENS::PAD; cfg.seq_len]; lanes];
+    let mut pos = vec![0usize; lanes];
+    let mut occ: Vec<Option<LaneState>> = (0..lanes).map(|_| None).collect();
+    let mut stats = LoopStats::default();
+    // reused logits copy: `consume_row` needs the stepper mutably (to
+    // retire), so the borrowed logits are staged here — one allocation
+    // for the whole run
+    let mut out: Vec<f32> = Vec::new();
+    loop {
+        // ---- admit into free lanes, fairness order ----
+        let mut admitted: Vec<usize> = Vec::new();
+        let mut bound: Vec<Option<Arc<dyn FactorSource>>> = Vec::new();
+        'fill: for l in 0..lanes {
+            if occ[l].is_some() {
+                continue;
+            }
+            let (req, budget) = loop {
+                let Some(r) = queue.pop_next() else { break 'fill };
+                if r.prompt.is_empty() || r.prompt.len() >= cfg.seq_len {
+                    bail!(
+                        "run_continuous: inadmissible prompt length {} (seq_len {})",
+                        r.prompt.len(),
+                        cfg.seq_len
+                    );
+                }
+                let budget = r.budget.min(cfg.seq_len - r.prompt.len());
+                if budget == 0 {
+                    // zero budget: completes instantly, no lane, no forward
+                    queue.release(r.tenant);
+                    stats.finished += 1;
+                    on_done(FinishedRequest {
+                        id: r.id,
+                        tenant: r.tenant,
+                        tokens: Vec::new(),
+                        ttft: clock.now().duration_since(r.enqueued),
+                    });
+                    continue;
+                }
+                break (r, budget);
+            };
+            seqs[l].fill(TOKENS::PAD);
+            seqs[l][..req.prompt.len()].copy_from_slice(&req.prompt);
+            pos[l] = req.prompt.len();
+            occ[l] = Some(LaneState {
+                id: req.id,
+                tenant: req.tenant,
+                budget,
+                generated: Vec::new(),
+                enqueued: req.enqueued,
+                ttft: None,
+            });
+            admitted.push(l);
+            bound.push(req.adapter);
+        }
+        if !admitted.is_empty() {
+            let logits = stepper.admit(&seqs, &pos, &admitted, &bound)?;
+            if logits.len() != lanes * cfg.vocab {
+                bail!(
+                    "run_continuous: admit returned {} logits, expected {}",
+                    logits.len(),
+                    lanes * cfg.vocab
+                );
+            }
+            out.clear();
+            out.extend_from_slice(logits);
+            stats.admits += 1;
+            for &l in &admitted {
+                consume_row(
+                    l,
+                    &out[l * cfg.vocab..(l + 1) * cfg.vocab],
+                    &mut seqs,
+                    &mut pos,
+                    &mut occ,
+                    queue,
+                    stepper,
+                    clock,
+                    cfg.seq_len,
+                    &mut stats,
+                    &mut on_done,
+                );
+            }
+        }
+        stats.peak_lanes = stats.peak_lanes.max(occ.iter().filter(|o| o.is_some()).count());
+
+        let active: Vec<bool> = occ.iter().map(Option::is_some).collect();
+        if !active.iter().any(|&a| a) {
+            if queue.is_empty() {
+                break;
+            }
+            continue; // everything finished at admission; admit more
+        }
+        // a lane freed during admission-consume: top occupancy back up
+        // before paying a step
+        if active.iter().any(|&a| !a) && !queue.is_empty() {
+            continue;
+        }
+        // ---- step every live lane ----
+        let logits = stepper.step(&seqs, &pos, &active)?;
+        if logits.len() != lanes * cfg.vocab {
+            bail!(
+                "run_continuous: step returned {} logits, expected {}",
+                logits.len(),
+                lanes * cfg.vocab
+            );
+        }
+        out.clear();
+        out.extend_from_slice(logits);
+        stats.decode_steps += 1;
+        for (l, &a) in active.iter().enumerate() {
+            if !a {
+                continue;
+            }
+            consume_row(
+                l,
+                &out[l * cfg.vocab..(l + 1) * cfg.vocab],
+                &mut seqs,
+                &mut pos,
+                &mut occ,
+                queue,
+                stepper,
+                clock,
+                cfg.seq_len,
+                &mut stats,
+                &mut on_done,
+            );
+        }
+    }
+    Ok(stats)
+}
+
+/// The production continuous stepper: a heterogeneous multi-tenant
+/// session over one engine + weight set, with per-lane factor-form
+/// adapters re-bound at admission. The [`DecodeState`] lives in a
+/// caller-owned slot, so its KV cache and scratch arena persist across
+/// sessions (one allocation per worker, not per batch).
+///
+/// Known cost (factor path only): the engine takes borrowed
+/// `QFactors` views, and a view borrowing an `Arc` this stepper owns
+/// cannot be cached across calls in safe Rust (self-reference), so
+/// steps with at least one bound adapter rebuild the per-lane views
+/// each call — per-step site-map construction the lock-step factor
+/// path paid once per batch. Merged-weight sessions (`bound == 0`)
+/// skip all of it. Lifting this (e.g. per-lane bindings owned by
+/// `DecodeState`, or a `FactorSource::site` surface) is a ROADMAP
+/// item.
+pub struct SessionStepper<'a> {
+    engine: &'a Engine,
+    prog: &'a str,
+    weights: &'a DeviceWeights,
+    slot: &'a mut Option<DecodeState>,
+    /// Per-lane adapter bindings (None = the weights already carry it).
+    lane_adapters: Vec<Option<Arc<dyn FactorSource>>>,
+    /// Lanes with a bound adapter (0 ⇒ skip all factor plumbing).
+    bound: usize,
+    /// Reusable newest-token buffer.
+    last: Vec<i32>,
+}
+
+impl<'a> SessionStepper<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        prog: &'a str,
+        weights: &'a DeviceWeights,
+        slot: &'a mut Option<DecodeState>,
+    ) -> Self {
+        Self { engine, prog, weights, slot, lane_adapters: Vec::new(), bound: 0, last: Vec::new() }
+    }
+
+    /// Resident KV bytes of the live session.
+    pub fn kv_bytes(&self) -> Option<usize> {
+        self.slot.as_ref().map(DecodeState::kv_bytes)
+    }
+}
+
+impl DecodeStep for SessionStepper<'_> {
+    fn prefill(&mut self, _seqs: &[Vec<i32>], _pos: &[usize]) -> anyhow::Result<&[f32]> {
+        bail!("continuous sessions begin empty — drive begin/admit, not prefill")
+    }
+
+    fn begin(&mut self, lanes: usize) -> anyhow::Result<()> {
+        match self.slot.as_mut() {
+            // warm slot of the right shape: keep the allocations, drop
+            // the previous group's lane state
+            Some(state) if state.lanes() == lanes && state.program() == self.prog => {
+                state.reset();
+            }
+            _ => *self.slot = Some(self.engine.new_session(self.prog, lanes, self.weights)?),
+        }
+        self.lane_adapters = vec![None; lanes];
+        self.bound = 0;
+        Ok(())
+    }
+
+    fn admit(
+        &mut self,
+        seqs: &[Vec<i32>],
+        pos: &[usize],
+        lanes: &[usize],
+        adapters: &[Option<Arc<dyn FactorSource>>],
+    ) -> anyhow::Result<&[f32]> {
+        if adapters.len() != lanes.len() {
+            bail!("admit: {} adapters for {} lanes", adapters.len(), lanes.len());
+        }
+        for (&l, ad) in lanes.iter().zip(adapters) {
+            match (&self.lane_adapters[l], ad) {
+                (None, Some(_)) => self.bound += 1,
+                (Some(_), None) => self.bound -= 1,
+                _ => {}
+            }
+            self.lane_adapters[l] = ad.clone();
+        }
+        let state = self.slot.as_mut().context("admit before begin")?;
+        let prompts: Vec<&[i32]> = lanes.iter().map(|&l| &seqs[l][..pos[l]]).collect();
+        if self.bound == 0 {
+            self.engine.admit(state, lanes, &prompts, self.weights, &[])
+        } else {
+            let factors: Vec<Option<QFactors<'_>>> =
+                self.lane_adapters.iter().map(|o| o.as_ref().map(|a| a.factors())).collect();
+            let refs: Vec<Option<&QFactors<'_>>> = factors.iter().map(Option::as_ref).collect();
+            self.engine.admit(state, lanes, &prompts, self.weights, &refs)
+        }
+    }
+
+    fn step(
+        &mut self,
+        seqs: &[Vec<i32>],
+        pos: &[usize],
+        active: &[bool],
+    ) -> anyhow::Result<&[f32]> {
+        let state = self.slot.as_mut().context("step before begin")?;
+        self.last.clear();
+        for k in 0..seqs.len() {
+            self.last.push(if pos[k] == 0 { 0 } else { seqs[k][pos[k] - 1] });
+        }
+        for (k, &a) in active.iter().enumerate() {
+            if !a && !state.is_retired(k) {
+                state.retire(k);
+            }
+        }
+        if self.bound == 0 {
+            self.engine.decode_step(state, self.weights, &[], &self.last)
+        } else {
+            let factors: Vec<Option<QFactors<'_>>> =
+                self.lane_adapters.iter().map(|o| o.as_ref().map(|a| a.factors())).collect();
+            let refs: Vec<Option<&QFactors<'_>>> = factors.iter().map(Option::as_ref).collect();
+            self.engine.decode_step(state, self.weights, &refs, &self.last)
+        }
+    }
+
+    fn retire(&mut self, lane: usize) {
+        if let Some(state) = self.slot.as_mut() {
+            if !state.is_retired(lane) {
+                state.retire(lane);
+            }
+        }
+        if lane < self.lane_adapters.len() && self.lane_adapters[lane].take().is_some() {
+            self.bound -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::decode::{decode_lockstep, EngineStepper};
+    use crate::model::{merge_adapter, BaseWeights, ModelConfig};
+    use crate::testutil::synth::{synth_model_config, write_synth_model};
+    use std::path::PathBuf;
+
+    fn fixture(tag: &str) -> (PathBuf, ModelConfig, Engine, DeviceWeights) {
+        let dir = std::env::temp_dir().join(format!("lq_loop_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = synth_model_config();
+        write_synth_model(&dir, "synth", &cfg, &[4], 91).unwrap();
+        let base = BaseWeights::load(dir.join("synth")).unwrap();
+        let mut engine = Engine::new(&dir).unwrap();
+        engine.load_model_fwd("synth", 4, base.cfg.param_names().len()).unwrap();
+        let w = engine
+            .upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap())
+            .unwrap();
+        (dir, cfg, engine, w)
+    }
+
+    fn req(id: u64, tenant: AdapterId, prompt: Vec<i32>, budget: usize) -> LaneRequest {
+        LaneRequest { id, tenant, prompt, budget, adapter: None, enqueued: Instant::now() }
+    }
+
+    /// Lock-step oracle for one request alone (per-lane independence
+    /// makes this the exact expected output for any lane composition).
+    fn solo(engine: &Engine, cfg: &ModelConfig, w: &DeviceWeights, prompt: &[i32], budget: usize)
+        -> Vec<i32> {
+        let mut seqs = vec![vec![TOKENS::PAD; cfg.seq_len]];
+        seqs[0][..prompt.len()].copy_from_slice(prompt);
+        let mut pos = vec![prompt.len()];
+        let mut stepper = EngineStepper::new(engine, "synth/b4", w, &[]);
+        decode_lockstep(cfg.seq_len, cfg.vocab, &mut seqs, &mut pos, &[budget], &mut stepper)
+            .unwrap()
+            .remove(0)
+    }
+
+    #[test]
+    fn continuous_tokens_match_solo_lockstep_and_lanes_are_reused() {
+        let (dir, cfg, engine, w) = fixture("oracle");
+        let clock = Clock::real();
+        let prompts: Vec<Vec<i32>> =
+            (0..5).map(|i| vec![1 + i as i32, 4, 2 + i as i32]).collect();
+        let budgets = [4usize, 1, 3, 2, 5];
+        let mut queue = AdmissionQueue::new();
+        for (i, p) in prompts.iter().enumerate() {
+            queue.push(req(i as u64, 0, p.clone(), budgets[i]));
+        }
+        let mut slot = None;
+        let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
+        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let mut got: Vec<Option<Vec<i32>>> = vec![None; prompts.len()];
+        let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
+            got[fin.id as usize] = Some(fin.tokens);
+        })
+        .unwrap();
+        assert_eq!(stats.finished, 5);
+        // peak is sampled post-consume, so instant finishers (budget 1 /
+        // early EOS) can keep it below the lane count — bound it instead
+        assert!((1..=2).contains(&stats.peak_lanes), "peak {}", stats.peak_lanes);
+        assert!(stats.admits >= 3, "5 requests through 2 lanes need ≥ 3 admit waves");
+        for (i, p) in prompts.iter().enumerate() {
+            let want = solo(&engine, &cfg, &w, p, budgets[i]);
+            assert_eq!(got[i].as_deref(), Some(&want[..]), "request {i}");
+        }
+        assert!(slot.is_some(), "the session slot survives for the next group");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn session_slot_is_reused_across_groups() {
+        let (dir, cfg, engine, w) = fixture("reuse");
+        let clock = Clock::real();
+        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let mut slot = None;
+        for group in 0..3u64 {
+            let mut queue = AdmissionQueue::new();
+            queue.push(req(group, 0, vec![1, 2, 3], 2));
+            let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
+            let mut done = 0;
+            run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |_| done += 1).unwrap();
+            assert_eq!(done, 1, "group {group}");
+        }
+        // three groups, one session allocation: tokens of every group
+        // match the solo oracle (checked above); here we pin slot reuse
+        assert!(slot.is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_budget_requests_finish_without_a_lane() {
+        let (dir, cfg, engine, w) = fixture("zero");
+        let clock = Clock::real();
+        let mut queue = AdmissionQueue::new();
+        queue.push(req(0, 0, vec![1, 2], 0));
+        // a full-prompt request has zero room — also completes instantly
+        queue.push(req(1, 0, vec![1; cfg.seq_len - 1], 0));
+        let mut slot = None;
+        let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
+        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let mut done = Vec::new();
+        let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
+            done.push((fin.id, fin.tokens.clone()));
+        })
+        .unwrap();
+        assert_eq!(stats.finished, 2);
+        assert_eq!((stats.admits, stats.decode_steps), (0, 0), "no forward may run");
+        assert!(done.iter().all(|(_, t)| t.is_empty()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scarce_lanes_interleave_tenants_fairly() {
+        let (dir, cfg, engine, w) = fixture("fair");
+        let clock = Clock::real();
+        let mut queue = AdmissionQueue::new();
+        // tenants 1 and 2, three requests each, all queued up front
+        for i in 0..3u64 {
+            queue.push(req(i, 1, vec![1, 2], 1));
+            queue.push(req(10 + i, 2, vec![1, 3], 1));
+        }
+        let mut slot = None;
+        let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
+        let ccfg = ContinuousConfig { lanes: 1, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let mut order = Vec::new();
+        run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| order.push(fin.tenant))
+            .unwrap();
+        assert_eq!(order, vec![1, 2, 1, 2, 1, 2], "token charges must alternate the tenants");
+        assert!(queue.spent(1) >= 3 && queue.spent(2) >= 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

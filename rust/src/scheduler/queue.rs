@@ -1,0 +1,317 @@
+//! Admission queue for the continuous-batching scheduler: per-tenant
+//! FIFOs drained under **token-budget fair scheduling** (DESIGN.md §11).
+//!
+//! Every decode-step row a tenant consumes is charged to its lifetime
+//! `spent` counter; when a lane frees, the next admission comes from the
+//! tenant with the **least spent tokens** (ties broken by oldest queued
+//! request, then tenant id — fully deterministic). A tenant that goes
+//! idle banks no credit: on re-arrival its counter is floored to the
+//! queue's **watermark** — the fairness frontier, advanced at every
+//! admission (to the granted tenant's spent) and at every lane release
+//! (to the minimum spent over tenants still queued or in service; to
+//! the releaser's own spent when it was the last one) — so a returning
+//! or brand-new tenant competes from the frontier instead of
+//! monopolizing every freed lane. Because the floor consults only the
+//! monotone watermark, it does not depend on the order a group's
+//! requests are pushed in.
+//!
+//! Admission is **preemption-free**: once a request holds a lane it runs
+//! to completion; fairness only decides who gets each freed slot.
+
+use crate::coordinator::registry::AdapterId;
+use crate::loraquant::FactorSource;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One request waiting for (or holding) a decode lane.
+pub struct LaneRequest {
+    /// Caller-side handle (e.g. index into the submitting group).
+    pub id: u64,
+    pub tenant: AdapterId,
+    /// Unpadded prompt tokens (non-empty, shorter than `seq_len`).
+    pub prompt: Vec<i32>,
+    /// Max new tokens (clamped to sequence room at admission).
+    pub budget: usize,
+    /// Factor-form adapter bound to this request's lane for its whole
+    /// occupancy (`None` = the session's weights already carry it).
+    pub adapter: Option<Arc<dyn FactorSource>>,
+    /// Submission instant (TTFT accounting; scenario clock or real).
+    pub enqueued: Instant,
+}
+
+impl std::fmt::Debug for LaneRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LaneRequest")
+            .field("id", &self.id)
+            .field("tenant", &self.tenant)
+            .field("prompt_len", &self.prompt.len())
+            .field("budget", &self.budget)
+            .field("adapter", &self.adapter.is_some())
+            .finish()
+    }
+}
+
+/// The fair admission queue. Plain data, driven by the engine loop —
+/// fully unit-testable without an engine.
+#[derive(Default)]
+pub struct AdmissionQueue {
+    /// Per-tenant FIFO of `(arrival_seq, request)`.
+    queues: BTreeMap<AdapterId, VecDeque<(u64, LaneRequest)>>,
+    /// Lifetime decode-token charge per tenant (the fairness currency).
+    spent: BTreeMap<AdapterId, u64>,
+    /// Monotone fairness-frontier watermark (see module docs).
+    /// Newly-arriving tenants floor to it; it survives fully-drained
+    /// queues and is independent of intra-group push order.
+    watermark: u64,
+    /// Lanes currently held per tenant (popped, not yet released).
+    in_service: BTreeMap<AdapterId, usize>,
+    /// Monotone arrival stamp for FIFO tie-breaks across tenants.
+    arrivals: u64,
+    pending: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a request. A tenant whose queue was empty re-enters at the
+    /// admission watermark / active spending floor (see module docs).
+    pub fn push(&mut self, req: LaneRequest) {
+        let tenant = req.tenant;
+        if self.queues.get(&tenant).is_none_or(VecDeque::is_empty) {
+            let entry = self.spent.entry(tenant).or_insert(0);
+            *entry = (*entry).max(self.watermark);
+        }
+        let seq = self.arrivals;
+        self.arrivals += 1;
+        self.queues.entry(tenant).or_default().push_back((seq, req));
+        self.pending += 1;
+    }
+
+    /// Queued (not yet admitted) requests.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending == 0
+    }
+
+    /// Tokens charged to `tenant` so far.
+    pub fn spent(&self, tenant: AdapterId) -> u64 {
+        self.spent.get(&tenant).copied().unwrap_or(0)
+    }
+
+    /// Charge `tokens` decode-step rows to `tenant`.
+    pub fn charge(&mut self, tenant: AdapterId, tokens: u64) {
+        *self.spent.entry(tenant).or_insert(0) += tokens;
+    }
+
+    /// Pop the next admission: the head request of the least-spent tenant
+    /// (ties: oldest head arrival, then tenant id). Deterministic for a
+    /// given push/charge history. Advances the watermark to the granted
+    /// tenant's spent level and marks a lane in service for it (pair
+    /// every pop with a [`AdmissionQueue::release`] when the request
+    /// finishes).
+    pub fn pop_next(&mut self) -> Option<LaneRequest> {
+        let tenant = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|(id, q)| {
+                let head_seq = q.front().map(|(s, _)| *s).unwrap_or(u64::MAX);
+                (self.spent.get(id).copied().unwrap_or(0), head_seq, **id)
+            })
+            .map(|(&id, _)| id)?;
+        self.watermark = self.watermark.max(self.spent.get(&tenant).copied().unwrap_or(0));
+        *self.in_service.entry(tenant).or_insert(0) += 1;
+        let q = self.queues.get_mut(&tenant).expect("selected tenant has a queue");
+        let (_, req) = q.pop_front().expect("selected tenant queue non-empty");
+        if q.is_empty() {
+            self.queues.remove(&tenant);
+        }
+        self.pending -= 1;
+        Some(req)
+    }
+
+    /// A popped request finished (or was abandoned): release its lane.
+    /// Advances the watermark to the new fairness frontier — the minimum
+    /// spent over tenants still queued or in service, or the releaser's
+    /// own spent when it was the last active tenant — so a later
+    /// arrival's floor reflects everything consumed so far.
+    pub fn release(&mut self, tenant: AdapterId) {
+        if let Some(n) = self.in_service.get_mut(&tenant) {
+            *n -= 1;
+            if *n == 0 {
+                self.in_service.remove(&tenant);
+            }
+        }
+        let frontier = self
+            .in_service
+            .keys()
+            .chain(self.queues.iter().filter(|(_, q)| !q.is_empty()).map(|(id, _)| id))
+            .map(|id| self.spent.get(id).copied().unwrap_or(0))
+            .min()
+            .unwrap_or_else(|| self.spent.get(&tenant).copied().unwrap_or(0));
+        self.watermark = self.watermark.max(frontier);
+    }
+
+    /// Drain everything still queued (error recovery: a failed session
+    /// must answer its not-yet-admitted requests too). Fairness counters
+    /// survive; in-service bookkeeping resets (the session is gone).
+    pub fn drain_pending(&mut self) -> Vec<LaneRequest> {
+        let mut out = Vec::with_capacity(self.pending);
+        while let Some(req) = self.pop_next() {
+            out.push(req);
+        }
+        self.in_service.clear();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tenant: AdapterId) -> LaneRequest {
+        LaneRequest {
+            id,
+            tenant,
+            prompt: vec![1, 2, 3],
+            budget: 4,
+            adapter: None,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_within_a_tenant() {
+        let mut q = AdmissionQueue::new();
+        for i in 0..4 {
+            q.push(req(i, 7));
+        }
+        assert_eq!(q.pending(), 4);
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop_next().map(|r| r.id)).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn least_spent_tenant_admits_first() {
+        let mut q = AdmissionQueue::new();
+        q.push(req(0, 1));
+        q.push(req(1, 2));
+        q.charge(1, 100);
+        // tenant 2 has spent nothing — it must win the freed lane
+        assert_eq!(q.pop_next().unwrap().tenant, 2);
+        assert_eq!(q.pop_next().unwrap().tenant, 1);
+    }
+
+    #[test]
+    fn arrival_order_breaks_spending_ties() {
+        let mut q = AdmissionQueue::new();
+        q.push(req(0, 9)); // same spent (0), older arrival
+        q.push(req(1, 3));
+        assert_eq!(q.pop_next().unwrap().tenant, 9, "oldest head wins the tie");
+        assert_eq!(q.pop_next().unwrap().tenant, 3);
+    }
+
+    #[test]
+    fn charges_interleave_admissions_fairly() {
+        // two tenants, four requests each; charging the admitted tenant
+        // makes pops alternate instead of draining one tenant first
+        let mut q = AdmissionQueue::new();
+        for i in 0..4 {
+            q.push(req(i, 1));
+            q.push(req(10 + i, 2));
+        }
+        let mut order = Vec::new();
+        while let Some(r) = q.pop_next() {
+            order.push(r.tenant);
+            q.charge(r.tenant, 5);
+        }
+        assert_eq!(order, vec![1, 2, 1, 2, 1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn idle_tenant_banks_no_credit() {
+        let mut q = AdmissionQueue::new();
+        // tenant 1 works (spends), tenant 2 idles the whole time
+        q.push(req(0, 1));
+        let r = q.pop_next().unwrap();
+        q.charge(r.tenant, 50);
+        q.release(r.tenant); // last active tenant: watermark → 50
+        // both arrive again: tenant 2's counter floors to the watermark
+        // (50), so it does not sweep every freed lane
+        q.push(req(1, 1));
+        q.push(req(2, 2));
+        assert_eq!(q.spent(2), 50, "arriving tenant enters at the watermark");
+        // tie at 50 → arrival order decides
+        assert_eq!(q.pop_next().unwrap().tenant, 1);
+    }
+
+    #[test]
+    fn newcomer_floors_to_the_watermark_regardless_of_push_order() {
+        // Group 1: tenant 1 works alone, consuming 20 tokens over two
+        // requests; releasing the last lane advances the watermark to its
+        // full spend. Group 2 then pushes a brand-new tenant either side
+        // of tenant 1's next request — the newcomer's floor must be the
+        // watermark (20) in BOTH orders; with the old min-over-queued
+        // floor it entered at 0 when pushed first and the heavy spender's
+        // level when pushed second.
+        let run = |new_tenant_first: bool| {
+            let mut q = AdmissionQueue::new();
+            q.push(req(0, 1));
+            q.push(req(1, 1));
+            for _ in 0..2 {
+                let r = q.pop_next().unwrap();
+                q.charge(r.tenant, 10);
+                q.release(r.tenant);
+            }
+            // group 2: tenants 1 (spent 20) and 9 (new)
+            if new_tenant_first {
+                q.push(req(2, 9));
+                q.push(req(3, 1));
+            } else {
+                q.push(req(3, 1));
+                q.push(req(2, 9));
+            }
+            q.spent(9)
+        };
+        assert_eq!(run(true), 20, "newcomer pushed first floors to the watermark");
+        assert_eq!(run(false), 20, "newcomer pushed second floors identically");
+    }
+
+    #[test]
+    fn drain_pending_empties_in_fair_order() {
+        let mut q = AdmissionQueue::new();
+        q.push(req(0, 4));
+        q.push(req(1, 2));
+        q.charge(4, 9);
+        let drained = q.drain_pending();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].tenant, 2);
+        assert!(q.is_empty());
+        assert_eq!(q.spent(4), 9, "fairness counters survive a drain");
+    }
+
+    #[test]
+    fn pop_on_empty_is_none_and_deterministic_iteration() {
+        let mut q = AdmissionQueue::new();
+        assert!(q.pop_next().is_none());
+        // determinism smoke: same push/charge history → same pop order
+        let run = |charges: &[(AdapterId, u64)]| {
+            let mut q = AdmissionQueue::new();
+            for i in 0..6 {
+                q.push(req(i, (i % 3) as AdapterId));
+            }
+            for &(t, c) in charges {
+                q.charge(t, c);
+            }
+            std::iter::from_fn(|| q.pop_next().map(|r| (r.tenant, r.id))).collect::<Vec<_>>()
+        };
+        assert_eq!(run(&[(0, 3), (1, 1)]), run(&[(0, 3), (1, 1)]));
+    }
+}

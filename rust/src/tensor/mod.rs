@@ -6,6 +6,7 @@
 
 mod ops;
 
+pub(crate) use ops::matmul_flat_rows;
 pub use ops::{
     matmul, matmul_a_bt, matmul_at_b, matmul_flat, matmul_flat_threaded, matmul_qdequant,
     matmul_qdequant_acc, matmul_qdequant_acc_into, matmul_qdequant_bt, matmul_qdequant_bt_acc,

@@ -113,10 +113,18 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// The serial row kernel shared by [`matmul_flat`] and every partition of
-/// [`matmul_flat_threaded`]: `c[rows×n] += a[rows×k] @ b[k×n]` (callers
-/// zero `c` first).
-fn matmul_flat_rows(a: &[f32], rows: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+/// The serial row kernel shared by [`matmul_flat`], every partition of
+/// [`matmul_flat_threaded`], and the persistent compute pool's
+/// partitions (`scheduler::workers::ComputePool::matmul_flat`):
+/// `c[rows×n] += a[rows×k] @ b[k×n]` (callers zero `c` first).
+pub(crate) fn matmul_flat_rows(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+) {
     for i in 0..rows {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
@@ -147,6 +155,12 @@ pub fn matmul_flat(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [
 /// for one product). Every output row runs the identical serial
 /// accumulation, so the result is **bit-identical** for every thread
 /// count; `threads <= 1` is exactly the serial kernel.
+///
+/// This is the legacy per-call-spawn variant: the engine's hot paths now
+/// go through the persistent `scheduler::workers::ComputePool` (same
+/// partitioning, same bits, no spawn/join per product — DESIGN.md §11);
+/// this one remains for one-shot callers and as the scoped-spawn
+/// baseline `bench_decode`'s kernel row measures the pool against.
 pub fn matmul_flat_threaded(
     a: &[f32],
     m: usize,

@@ -308,6 +308,144 @@ fn prop_incremental_decode_matches_full_recompute_oracle() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The PR-5 tentpole equivalence: the continuous-batching scheduler
+/// (`scheduler::run_continuous` over a `SessionStepper` — staggered
+/// admissions into freed lanes of one warm session) must be
+/// **token-identical** to the per-batch lock-step path for every
+/// request, across lane counts 1/2/3, ragged prompts, random budgets
+/// (including zero), 1/2/3-bit adapters, merged and factor paths, and
+/// multi-tenant fair admission. The oracle decodes each request alone
+/// through `decode_lockstep` — per-lane independence of the engine makes
+/// that the exact expected output for any lane composition.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn prop_continuous_matches_lockstep_oracle() {
+    use loraquant::eval::{decode_lockstep, EngineStepper, TOKENS};
+    use loraquant::loraquant::{FactorSource, QFactors, QuantizedLora};
+    use loraquant::model::merge::quant_deltas;
+    use loraquant::model::{merge_adapter, BaseWeights};
+    use loraquant::runtime::{DeviceWeights, Engine};
+    use loraquant::scheduler::{
+        run_continuous, AdmissionQueue, ContinuousConfig, LaneRequest, SessionStepper,
+    };
+    use loraquant::testutil::{synth_model_config, write_synth_model};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let dir = std::env::temp_dir().join(format!("lq_prop_sched_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = synth_model_config();
+    write_synth_model(&dir, "synth", &cfg, &[4], 7321).unwrap();
+    let base = BaseWeights::load(dir.join("synth")).unwrap();
+    let mut engine = Engine::new(&dir).unwrap();
+    engine.load_model_fwd("synth", 4, base.cfg.param_names().len()).unwrap();
+    let engine = engine;
+    let w_base = engine
+        .upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap())
+        .unwrap();
+    let (t_len, vocab) = (cfg.seq_len, cfg.vocab);
+    let clock = loraquant::clock::Clock::real();
+
+    check_with(Config { cases: 10, seed: 816 }, "continuous == lockstep", |rng| {
+        // a pool of quantized adapters at 1/2/3 bits (tenant i uses
+        // adapter i % pool)
+        let n_adapters = 1 + rng.below(3);
+        let stored: Vec<Arc<QuantizedLora>> = (0..n_adapters)
+            .map(|_| {
+                let bits = 1 + rng.below(3) as u32;
+                let qcfg = LoraQuantConfig {
+                    ste: None,
+                    group: 16,
+                    ..LoraQuantConfig::variant(bits, 0.9)
+                };
+                let mut q = QuantizedLora::default();
+                for site in cfg.lora_site_names() {
+                    let short = site.rsplit_once('.').unwrap().1;
+                    let (n_in, m_out) = cfg.site_shape(short).unwrap();
+                    let (b, a) = rng.lora_pair(m_out, n_in, cfg.lora_rank, 0.7);
+                    q.sites.insert(site, quantize_site(&b, &a, &qcfg));
+                }
+                Arc::new(q)
+            })
+            .collect();
+        // merged weights for the merged-path variant (single tenant 0)
+        let w_merged = engine
+            .upload_weights(&merge_adapter(&base, &quant_deltas(&stored[0])).unwrap())
+            .unwrap();
+
+        // staggered request mix: ragged prompts, random budgets (0 ok)
+        let n_reqs = 1 + rng.below(7);
+        let prompts: Vec<Vec<i32>> = (0..n_reqs)
+            .map(|_| {
+                let plen = 1 + rng.below(6);
+                (0..plen).map(|_| 1 + rng.below(vocab - 1) as i32).collect()
+            })
+            .collect();
+        let budgets: Vec<usize> = (0..n_reqs).map(|_| rng.below(8)).collect();
+        let lanes = [1usize, 2, 3][rng.below(3)];
+
+        for factor in [false, true] {
+            let w: &DeviceWeights = if factor { &w_base } else { &w_merged };
+            let mut queue = AdmissionQueue::new();
+            for i in 0..n_reqs {
+                queue.push(LaneRequest {
+                    id: i as u64,
+                    tenant: (i % n_adapters) as u32,
+                    prompt: prompts[i].clone(),
+                    budget: budgets[i],
+                    adapter: factor.then(|| {
+                        let src: Arc<dyn FactorSource> = Arc::clone(&stored[i % n_adapters]);
+                        src
+                    }),
+                    enqueued: Instant::now(),
+                });
+            }
+            let mut slot = None;
+            let mut stepper = SessionStepper::new(&engine, "synth/b4", w, &mut slot);
+            let ccfg = ContinuousConfig { lanes, seq_len: t_len, vocab };
+            let mut got: Vec<Option<Vec<i32>>> = vec![None; n_reqs];
+            let stats =
+                run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
+                    got[fin.id as usize] = Some(fin.tokens);
+                })
+                .unwrap();
+            assert_eq!(stats.finished as usize, n_reqs, "factor={factor}");
+            assert!(stats.peak_lanes <= lanes);
+
+            // oracle: each request decoded alone, lock-step
+            for i in 0..n_reqs {
+                let qf: QFactors;
+                let adapters: Vec<Option<&QFactors>> = if factor {
+                    qf = stored[i % n_adapters].factors();
+                    vec![Some(&qf)]
+                } else {
+                    Vec::new()
+                };
+                let mut seqs = vec![vec![TOKENS::PAD; t_len]];
+                seqs[0][..prompts[i].len()].copy_from_slice(&prompts[i]);
+                let mut pos = vec![prompts[i].len()];
+                let mut oracle = EngineStepper::new(&engine, "synth/b4", w, &adapters);
+                let want = decode_lockstep(
+                    t_len,
+                    vocab,
+                    &mut seqs,
+                    &mut pos,
+                    &[budgets[i]],
+                    &mut oracle,
+                )
+                .unwrap()
+                .remove(0);
+                assert_eq!(
+                    got[i].as_deref(),
+                    Some(&want[..]),
+                    "factor={factor} lanes={lanes} request {i}: continuous vs lock-step"
+                );
+            }
+        }
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn prop_avg_bits_between_low_and_high() {
     // Mixed precision must land between pure-1-bit and pure-k-bit costs.

@@ -311,6 +311,95 @@ fn virtual_prefetch_eliminates_request_path_misses() {
     assert_eq!(acks, 4);
 }
 
+/// The continuous-batching acceptance (DESIGN.md §11): on a
+/// staggered-arrival, mixed-length trace whose batches pile up behind a
+/// scripted slow merge, the post-merge drain feeds every parked batch
+/// into one scheduler session — freed lanes are reused mid-flight — so
+/// the continuous run spends **strictly fewer virtual decode steps**
+/// than the lock-step run while producing token-identical outputs.
+#[test]
+fn continuous_batching_reduces_decode_steps_on_staggered_mixed_lengths() {
+    let env = ScenarioEnv::synth("contsteps", 1).unwrap();
+    let spec = |continuous: bool| ScenarioSpec {
+        name: format!("contsteps/{}", if continuous { "continuous" } else { "lockstep" }),
+        strategy: MergeStrategy::Merged,
+        continuous,
+        n_adapters: 1,
+        // 12 staggered arrivals land while the adapter's merge is parked
+        // for 50 ms: a full bucket of 8 plus a deadline-released 4 park
+        // behind it and drain together at the merge wake
+        buckets: vec![1, 8],
+        workload: WorkloadConfig { rate: 4000.0, zipf_alpha: 0.0, n_requests: 12, seed: 41 },
+        // mixed budgets 1..=8: short lanes free mid-flight
+        max_new_spread: 8,
+        faults: FaultPlan {
+            slow_merge: Some(SlowMerge { adapter: None, delay: Duration::from_millis(50) }),
+            churn: vec![],
+        },
+        ..Default::default()
+    };
+    let cont = run_scenario(&spec(true), &env).unwrap();
+    let lock = run_scenario(&spec(false), &env).unwrap();
+    assert_eq!(cont.summary.ok, 12);
+    assert_eq!(lock.summary.ok, 12);
+    assert_eq!(
+        cont.tokens, lock.tokens,
+        "continuous batching must not change a single token"
+    );
+    assert!(cont.summary.decode_steps > 0);
+    assert!(
+        cont.summary.decode_steps < lock.summary.decode_steps,
+        "freed lanes must be reused: continuous {} steps vs lock-step {}",
+        cont.summary.decode_steps,
+        lock.summary.decode_steps
+    );
+    // the parked batches drained as one group instead of one per batch
+    assert!(cont.summary.batches < lock.summary.batches);
+    // both runs are themselves golden
+    let cont2 = run_scenario(&spec(true), &env).unwrap();
+    assert_eq!(cont.log(), cont2.log(), "continuous trace must be reproducible");
+    let lock2 = run_scenario(&spec(false), &env).unwrap();
+    assert_eq!(lock.log(), lock2.log(), "lock-step trace must be reproducible");
+}
+
+/// Run-to-run byte identity across the full determinism matrix
+/// (acceptance): compute_threads ∈ {1, 4} × merge_workers ∈ {1, 2} on a
+/// merge-heavy thrash trace. `merge_workers: 2` is the case the ingest
+/// sequencer exists for — merge completions race on two threads, but
+/// each worker applies them in submission order, so LRU eviction (and
+/// therefore every later hit/miss/merge) replays identically.
+#[test]
+fn golden_traces_hold_across_compute_threads_and_merge_workers() {
+    let env = ScenarioEnv::synth("detmatrix", 6).unwrap();
+    for (compute_threads, merge_workers) in [(1usize, 1usize), (4, 1), (1, 2), (4, 2)] {
+        let spec = ScenarioSpec {
+            name: format!("detmatrix/t{compute_threads}/m{merge_workers}"),
+            strategy: MergeStrategy::Merged,
+            compute_threads,
+            merge_workers,
+            n_adapters: 6,
+            // ~one merged set: constant eviction → constant re-merges →
+            // maximal sensitivity to merge-ingest order
+            cache_budget_bytes: 64 << 10,
+            workload: WorkloadConfig { rate: 400.0, zipf_alpha: 0.3, n_requests: 120, seed: 59 },
+            ..Default::default()
+        };
+        let a = run_scenario(&spec, &env).unwrap();
+        let b = run_scenario(&spec, &env).unwrap();
+        assert_eq!(a.summary.ok, 120, "t{compute_threads}/m{merge_workers}");
+        assert!(
+            a.summary.merges.started > 6,
+            "t{compute_threads}/m{merge_workers}: trace must exercise re-merges"
+        );
+        assert_eq!(
+            a.log(),
+            b.log(),
+            "t{compute_threads}/m{merge_workers}: event log must be byte-identical run-to-run"
+        );
+        assert_eq!(a.tokens, b.tokens, "t{compute_threads}/m{merge_workers}");
+    }
+}
+
 /// The real-time mode drives the same spec type through the same code
 /// path (the bench entry point) — smoke-check it end to end.
 #[test]
