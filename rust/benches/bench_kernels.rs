@@ -1,0 +1,168 @@
+//! Kernel microbenchmark (DESIGN.md §12): GFLOP/s of the cache-blocked
+//! SIMD-friendly GEMMs against the retained scalar oracles
+//! (`tensor::scalar`), per bitwidth.
+//!
+//! Three tables, one JSON snapshot (`BENCH_kernels.json`, uploaded as a
+//! CI artifact next to `BENCH_decode.json`):
+//!
+//! 1. **Dense `matmul_flat`** — scalar oracle vs the 4×8-blocked kernel
+//!    vs the persistent compute pool at 2/4 threads, on the prefill
+//!    projection shape and a larger cache-pressure shape.
+//! 2. **Quantized `matmul_qdequant_acc_into`** (X @ deq(Q)) — scalar
+//!    oracle vs the LUT-unpacking blocked kernel at 1/2/3/8-bit RTN and
+//!    1-bit sign (BinQuantized).
+//! 3. **Quantized `matmul_qdequant_bt_acc_into`** (X @ deq(Q)ᵀ) — same
+//!    bitwidth sweep over the dot-family kernel.
+//!
+//! Every timed pair is first checked bit-identical (the PR-6 determinism
+//! contract): a speedup that changes bits is a bug, not a win. FLOP
+//! counts are the algebraic 2·m·k·n of the GEMM; the dequant work rides
+//! inside the quantized kernels' timings, so their GFLOP/s is "effective
+//! dense throughput", directly comparable across bitwidths.
+
+use loraquant::quant::{bin_quant, rtn_quant};
+use loraquant::scheduler::ComputePool;
+use loraquant::tensor::{
+    matmul_flat, matmul_qdequant_acc_into, matmul_qdequant_bt_acc_into, scalar, DequantRows,
+};
+use loraquant::testutil::Rng;
+use std::time::Instant;
+
+/// Pick a rep count so each measurement runs ~80ms, then report the mean
+/// per-call time in microseconds.
+fn time_us(mut f: impl FnMut()) -> f64 {
+    f(); // warm caches / pool workers
+    let t0 = Instant::now();
+    f();
+    let probe = t0.elapsed().as_secs_f64();
+    let reps = ((0.08 / probe.max(1e-7)) as usize).clamp(3, 20_000);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / reps as f64
+}
+
+fn gflops(m: usize, k: usize, n: usize, us: f64) -> f64 {
+    (2 * m * k * n) as f64 / (us * 1e3).max(1e-9)
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: bit mismatch at {i}: {g:e} vs {w:e}");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(606);
+    let mut rows: Vec<String> = Vec::new();
+
+    // -- 1. dense ----------------------------------------------------------
+    println!("# Dense matmul_flat: scalar oracle vs blocked vs pool (GFLOP/s)");
+    println!("{:>12} {:>10} {:>12} {:>10}", "shape", "variant", "us", "gflops");
+    for (m, k, n) in [(88usize, 64usize, 64usize), (32, 256, 256)] {
+        let a = rng.matrix(m, k, 1.0).into_vec();
+        let b = rng.matrix(k, n, 1.0).into_vec();
+        let mut want = vec![0.0f32; m * n];
+        scalar::matmul_flat(&a, m, k, &b, n, &mut want);
+        let mut c = vec![0.0f32; m * n];
+
+        let mut emit = |variant: &str, us: f64| {
+            let gf = gflops(m, k, n, us);
+            println!("{:>12} {variant:>10} {us:>12.2} {gf:>10.2}", format!("{m}x{k}x{n}"));
+            rows.push(format!(
+                r#"{{"kernel":"dense","shape":"{m}x{k}x{n}","variant":"{variant}","us":{us:.2},"gflops":{gf:.3}}}"#
+            ));
+        };
+
+        let us = time_us(|| scalar::matmul_flat(&a, m, k, &b, n, &mut c));
+        assert_bits_eq(&c, &want, "dense scalar");
+        emit("scalar", us);
+
+        let us = time_us(|| matmul_flat(&a, m, k, &b, n, &mut c));
+        assert_bits_eq(&c, &want, "dense blocked");
+        emit("blocked", us);
+
+        for threads in [2usize, 4] {
+            let pool = ComputePool::new(threads);
+            let us = time_us(|| pool.matmul_flat(&a, m, k, &b, n, &mut c));
+            assert_bits_eq(&c, &want, "dense pool");
+            emit(&format!("pool{threads}"), us);
+        }
+    }
+
+    // -- 2/3. quantized ----------------------------------------------------
+    // Decode-ish shape: a few activation rows against a big packed matrix,
+    // where the LUT unpack + axpy/dot blocking is the whole story.
+    let (rows_x, k, n) = (8usize, 256usize, 256usize);
+    let x = rng.matrix(rows_x, k, 1.0).into_vec();
+    let group = 16usize;
+
+    // (label, Q stored k×n for acc, Q stored n×k for bt)
+    let mut quants: Vec<(String, Box<dyn DequantRows>, Box<dyn DequantRows>)> = Vec::new();
+    for bits in [1u32, 2, 3, 8] {
+        quants.push((
+            format!("rtn{bits}"),
+            Box::new(rtn_quant(&rng.matrix(k, n, 1.0), bits, group)) as Box<dyn DequantRows>,
+            Box::new(rtn_quant(&rng.matrix(n, k, 1.0), bits, group)) as Box<dyn DequantRows>,
+        ));
+    }
+    quants.push((
+        "bin1".to_string(),
+        Box::new(bin_quant(&rng.matrix(k, n, 1.0), group)) as Box<dyn DequantRows>,
+        Box::new(bin_quant(&rng.matrix(n, k, 1.0), group)) as Box<dyn DequantRows>,
+    ));
+
+    for (family, dir) in [("qdequant_acc", "acc"), ("qdequant_bt", "bt")] {
+        println!("\n# {family} ({rows_x}x{k} @ {k}x{n}): scalar oracle vs LUT-blocked");
+        println!("{:>8} {:>10} {:>12} {:>10} {:>9}", "bits", "variant", "us", "gflops", "speedup");
+        for (label, q_acc, q_bt) in &quants {
+            let q: &dyn DequantRows = if dir == "acc" { q_acc.as_ref() } else { q_bt.as_ref() };
+            let mut want = vec![0.0f32; rows_x * n];
+            let mut got = vec![0.0f32; rows_x * n];
+            let mut qrow: Vec<f32> = Vec::new();
+
+            let scalar_us = if dir == "acc" {
+                want.fill(0.0);
+                scalar::matmul_qdequant_acc(&x, rows_x, k, q, 1.0, &mut want);
+                time_us(|| {
+                    got.fill(0.0);
+                    scalar::matmul_qdequant_acc(&x, rows_x, k, q, 1.0, &mut got);
+                })
+            } else {
+                want.fill(0.0);
+                scalar::matmul_qdequant_bt_acc(&x, rows_x, k, q, 1.0, &mut want);
+                time_us(|| {
+                    got.fill(0.0);
+                    scalar::matmul_qdequant_bt_acc(&x, rows_x, k, q, 1.0, &mut got);
+                })
+            };
+            let blocked_us = if dir == "acc" {
+                time_us(|| {
+                    got.fill(0.0);
+                    matmul_qdequant_acc_into(&x, rows_x, k, q, 1.0, &mut got, &mut qrow);
+                })
+            } else {
+                time_us(|| {
+                    got.fill(0.0);
+                    matmul_qdequant_bt_acc_into(&x, rows_x, k, q, 1.0, &mut got, &mut qrow);
+                })
+            };
+            assert_bits_eq(&got, &want, &format!("{family} {label}"));
+
+            for (variant, us) in [("scalar", scalar_us), ("blocked", blocked_us)] {
+                let gf = gflops(rows_x, k, n, us);
+                let speedup = scalar_us / us.max(1e-9);
+                println!("{label:>8} {variant:>10} {us:>12.2} {gf:>10.2} {speedup:>8.2}x");
+                rows.push(format!(
+                    r#"{{"kernel":"{family}","bits":"{label}","shape":"{rows_x}x{k}x{n}","variant":"{variant}","us":{us:.2},"gflops":{gf:.3}}}"#
+                ));
+            }
+        }
+    }
+
+    let json = format!("{{\"bench\":\"kernels\",\"rows\":[{}]}}\n", rows.join(","));
+    std::fs::write("BENCH_kernels.json", &json)?;
+    println!("\nwrote BENCH_kernels.json ({} rows)", rows.len());
+    Ok(())
+}

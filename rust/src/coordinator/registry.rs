@@ -62,6 +62,17 @@ impl crate::loraquant::FactorSource for StoredAdapter {
     fn factors(&self) -> QFactors<'_> {
         StoredAdapter::factors(self)
     }
+
+    /// Direct per-site lookup — the decode hot path asks the bound source
+    /// per (layer, site) instead of materializing the whole map.
+    fn site(&self, name: &str) -> Option<crate::loraquant::SiteFactors<'_>> {
+        match self {
+            StoredAdapter::Fp16(a) => {
+                a.sites.get(name).map(|(a, b)| crate::loraquant::fp_site_factors(a, b))
+            }
+            StoredAdapter::Quantized(q) => q.sites.get(name).map(|s| s.factors()),
+        }
+    }
 }
 
 /// Entry metadata kept alongside the adapter. The adapter itself is

@@ -183,11 +183,25 @@ impl<'a> QFactors<'a> {
 /// the coordinator's `StoredAdapter`.
 pub trait FactorSource: Send + Sync {
     fn factors(&self) -> QFactors<'_>;
+
+    /// Resolve one site's factor view directly — the per-step hot-path
+    /// surface: a `DecodeState`-bound source is asked per (layer, site)
+    /// instead of rebuilding the whole `QFactors` map (site-name `String`
+    /// clones and a `BTreeMap`) every forward. The default is correct but
+    /// cold (it builds the map and moves one entry out); implementors
+    /// should override with a direct lookup.
+    fn site(&self, name: &str) -> Option<SiteFactors<'_>> {
+        self.factors().sites.remove(name)
+    }
 }
 
 impl FactorSource for QuantizedLora {
     fn factors(&self) -> QFactors<'_> {
         QuantizedLora::factors(self)
+    }
+
+    fn site(&self, name: &str) -> Option<SiteFactors<'_>> {
+        self.sites.get(name).map(QuantizedSite::factors)
     }
 }
 
@@ -240,6 +254,17 @@ impl QuantizedLora {
     }
 }
 
+/// Factor-form view of one **uncompressed** FP site `(A r×n, B m×r)` —
+/// the single-site building block behind [`fp_factors`] and the
+/// registry's per-site [`FactorSource::site`] lookups.
+pub fn fp_site_factors<'a>(a: &'a Matrix, b: &'a Matrix) -> SiteFactors<'a> {
+    let pair = FactorPair {
+        a: FactorView { src: a, transposed: true }, // A is r×n
+        b: FactorView { src: b, transposed: true }, // B is m×r
+    };
+    SiteFactors { m: b.rows(), n: a.cols(), pairs: vec![pair] }
+}
+
 /// Factor-form view of an **uncompressed** FP adapter — the factor path
 /// serves FP16 and quantized tenants through one code path (dense
 /// matrices implement [`DequantRows`] trivially).
@@ -248,13 +273,7 @@ pub fn fp_factors(adapter: &LoraAdapter) -> QFactors<'_> {
         sites: adapter
             .sites
             .iter()
-            .map(|(site, (a, b))| {
-                let pair = FactorPair {
-                    a: FactorView { src: a, transposed: true }, // A is r×n
-                    b: FactorView { src: b, transposed: true }, // B is m×r
-                };
-                (site.clone(), SiteFactors { m: b.rows(), n: a.cols(), pairs: vec![pair] })
-            })
+            .map(|(site, (a, b))| (site.clone(), fp_site_factors(a, b)))
             .collect(),
     }
 }

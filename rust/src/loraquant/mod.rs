@@ -23,7 +23,8 @@ pub mod split;
 pub mod ste;
 
 pub use factors::{
-    fp_factors, FactorPair, FactorScratch, FactorSource, FactorView, QFactors, SiteFactors,
+    fp_factors, fp_site_factors, FactorPair, FactorScratch, FactorSource, FactorView, QFactors,
+    SiteFactors,
 };
 pub use hselect::{baseline_indices, select_h, HSelect, SplitStrategy};
 pub use pipeline::{

@@ -1,7 +1,7 @@
 //! Sign binarization with L1-optimal group scales (paper §3.2, Eq. 8;
 //! Rastegari et al., 2016).
 
-use super::{pack_codes, unpack_codes, unpack_codes_range, SCALE_BITS};
+use super::{pack_codes, unpack_codes, unpack_codes_f32_into, SCALE_BITS};
 use crate::tensor::{DequantRows, Matrix};
 
 /// A group-wise sign-binarized matrix (grouping along the last axis).
@@ -35,15 +35,19 @@ impl BinQuantized {
 
     /// Dequantize one stored row into `out` (`out.len() == cols`) without
     /// touching any other row — the streaming-GEMM building block.
+    /// Allocation-free: sign bits decode straight into `out` as f32 via
+    /// the LUT group unpacker, then the branchless `S * (2c - 1)` maps
+    /// code 1 → exactly `S` and code 0 → exactly `-S` (multiplying by
+    /// ±1.0 is exact), bit-identical to the branching form.
     pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
         debug_assert!(i < self.rows);
         debug_assert_eq!(out.len(), self.cols);
-        let bits = unpack_codes_range(&self.packed, 1, i * self.cols, self.cols);
+        unpack_codes_f32_into(&self.packed, 1, i * self.cols, out);
         let gpr = self.groups_per_row();
         for g in 0..gpr {
             let s = self.scale[i * gpr + g];
-            for j in g * self.group..((g + 1) * self.group).min(self.cols) {
-                out[j] = if bits[j] == 1 { s } else { -s };
+            for v in &mut out[g * self.group..((g + 1) * self.group).min(self.cols)] {
+                *v = s * (2.0 * *v - 1.0);
             }
         }
     }

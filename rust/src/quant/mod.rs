@@ -23,7 +23,9 @@ mod rtn;
 
 pub use axis::{Axis, QuantAxis};
 pub use binary::{bin_dequant, bin_quant, BinQuantized};
-pub use pack::{pack_codes, unpack_codes, unpack_codes_range};
+pub use pack::{
+    pack_codes, unpack_codes, unpack_codes_f32_into, unpack_codes_into, unpack_codes_range,
+};
 pub use rtn::{rtn_dequant, rtn_quant, RtnQuantized};
 
 /// Bits of an fp16 scale / zero-point, for Eq. 10 accounting.

@@ -26,66 +26,139 @@ pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u8> {
 
 /// Unpack `count` codes of `bits` bits each.
 pub fn unpack_codes(packed: &[u8], bits: u32, count: usize) -> Vec<u8> {
-    assert!((1..=8).contains(&bits));
-    // byte-parallel fast paths for the widths the hot path uses
-    match bits {
-        1 => return unpack_parallel::<8>(packed, count, |b, j| (b >> j) & 1),
-        2 => return unpack_parallel::<4>(packed, count, |b, j| (b >> (2 * j)) & 3),
-        4 => return unpack_parallel::<2>(packed, count, |b, j| (b >> (4 * j)) & 15),
-        _ => {}
-    }
-    unpack_scalar(packed, bits, 0, count)
+    unpack_codes_range(packed, bits, 0, count)
 }
 
 /// Unpack `count` codes starting at code index `start` of the stream —
 /// the row-streaming entry point: callers address one packed row as
 /// `start = row * cols, count = cols` without unpacking what precedes it.
 pub fn unpack_codes_range(packed: &[u8], bits: u32, start: usize, count: usize) -> Vec<u8> {
-    assert!((1..=8).contains(&bits));
-    let first_bit = start * bits as usize;
-    if first_bit % 8 == 0 {
-        // byte-aligned: reuse the fast paths on the tail slice
-        return unpack_codes(&packed[first_bit / 8..], bits, count);
-    }
-    unpack_scalar(packed, bits, first_bit, count)
-}
-
-/// The generic bit-extraction loop, starting at an arbitrary bit offset.
-fn unpack_scalar(packed: &[u8], bits: u32, first_bit: usize, count: usize) -> Vec<u8> {
-    let mask = if bits == 8 { 0xFF } else { (1u16 << bits) - 1 } as u16;
-    let mut out = Vec::with_capacity(count);
-    let mut bitpos = first_bit;
-    for _ in 0..count {
-        let byte = bitpos / 8;
-        let off = bitpos % 8;
-        let mut v = (packed[byte] >> off) as u16;
-        if off + bits as usize > 8 {
-            v |= (packed[byte + 1] as u16) << (8 - off);
-        }
-        out.push((v & mask) as u8);
-        bitpos += bits as usize;
-    }
-    out
-}
-
-/// Unpack LANES codes per byte with a per-lane extractor (autovectorizes).
-#[inline]
-fn unpack_parallel<const LANES: usize>(
-    packed: &[u8],
-    count: usize,
-    lane: impl Fn(u8, usize) -> u8,
-) -> Vec<u8> {
     let mut out = vec![0u8; count];
-    let full = count / LANES;
-    for (i, &b) in packed.iter().take(full).enumerate() {
-        for j in 0..LANES {
-            out[i * LANES + j] = lane(b, j);
-        }
-    }
-    for k in full * LANES..count {
-        out[k] = lane(packed[k / LANES], k % LANES);
-    }
+    unpack_codes_into(packed, bits, start, &mut out);
     out
+}
+
+// Byte-indexed decode tables, built at compile time: table[b] is the
+// codes a whole byte `b` expands to at that width (8/4/2 codes for
+// 1/2/4-bit). One 256-entry load replaces per-code shift/mask chains and
+// feeds the group unpacker a fixed-size store the compiler vectorizes.
+static LUT1: [[u8; 8]; 256] = build_lut::<8>(1);
+static LUT2: [[u8; 4]; 256] = build_lut::<4>(2);
+static LUT4: [[u8; 2]; 256] = build_lut::<2>(4);
+
+const fn build_lut<const N: usize>(bits: u32) -> [[u8; N]; 256] {
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut t = [[0u8; N]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut j = 0usize;
+        while j < N {
+            t[b][j] = ((b >> (j as u32 * bits)) as u8) & mask;
+            j += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+/// The LUT-based group unpacker: decode `out.len()` codes starting at
+/// code index `start` into `out`, allocation-free.
+///
+/// Layout guarantee exploited: for bits ∈ {1, 2, 4, 8} a code boundary
+/// falls on a byte boundary every 8/bits codes; for bits = 3 every 8
+/// codes span exactly 3 bytes. So the body decodes a scalar prefix until
+/// the stream is byte-aligned, then whole bytes through [`LUT1`]/
+/// [`LUT2`]/[`LUT4`] (or 3-byte → 8-code groups for 3-bit, a plain copy
+/// for 8-bit), then a scalar tail. Widths 5/6/7 stay scalar — no stored
+/// format uses them.
+pub fn unpack_codes_into(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+    assert!((1..=8).contains(&bits));
+    let count = out.len();
+    let bits_us = bits as usize;
+    // scalar prefix: decode until the bit cursor is byte-aligned
+    let mut done = 0usize;
+    while done < count && (start + done) * bits_us % 8 != 0 {
+        out[done] = unpack_one(packed, bits, start + done);
+        done += 1;
+    }
+    let mut byte = (start + done) * bits_us / 8;
+    match bits {
+        1 | 2 | 4 => {
+            let per = 8 / bits_us;
+            while count - done >= per {
+                let group = &mut out[done..done + per];
+                match bits {
+                    1 => group.copy_from_slice(&LUT1[packed[byte] as usize]),
+                    2 => group.copy_from_slice(&LUT2[packed[byte] as usize]),
+                    _ => group.copy_from_slice(&LUT4[packed[byte] as usize]),
+                }
+                byte += 1;
+                done += per;
+            }
+        }
+        3 => {
+            // 8 codes per 3 bytes: one u32 window, eight fixed shifts
+            while count - done >= 8 {
+                let w = packed[byte] as u32
+                    | (packed[byte + 1] as u32) << 8
+                    | (packed[byte + 2] as u32) << 16;
+                let group = &mut out[done..done + 8];
+                group[0] = (w & 7) as u8;
+                group[1] = ((w >> 3) & 7) as u8;
+                group[2] = ((w >> 6) & 7) as u8;
+                group[3] = ((w >> 9) & 7) as u8;
+                group[4] = ((w >> 12) & 7) as u8;
+                group[5] = ((w >> 15) & 7) as u8;
+                group[6] = ((w >> 18) & 7) as u8;
+                group[7] = ((w >> 21) & 7) as u8;
+                byte += 3;
+                done += 8;
+            }
+        }
+        8 => {
+            out[done..count].copy_from_slice(&packed[byte..byte + (count - done)]);
+            done = count;
+        }
+        _ => {}
+    }
+    // scalar tail (and the whole body for widths 5/6/7)
+    while done < count {
+        out[done] = unpack_one(packed, bits, start + done);
+        done += 1;
+    }
+}
+
+/// Decode `out.len()` codes starting at code index `start` directly as
+/// f32 values — the dequant kernels' first pass. Codes stream through a
+/// small stack tile, so the call is allocation-free; tile size is a
+/// multiple of 8 codes so chunk boundaries preserve byte alignment for
+/// every bitwidth.
+pub fn unpack_codes_f32_into(packed: &[u8], bits: u32, start: usize, out: &mut [f32]) {
+    const TILE: usize = 64;
+    let mut tile = [0u8; TILE];
+    let mut done = 0usize;
+    while done < out.len() {
+        let take = (out.len() - done).min(TILE);
+        unpack_codes_into(packed, bits, start + done, &mut tile[..take]);
+        for (o, &c) in out[done..done + take].iter_mut().zip(&tile[..take]) {
+            *o = c as f32;
+        }
+        done += take;
+    }
+}
+
+/// Extract the single code at index `idx` (the scalar prefix/tail path).
+#[inline]
+fn unpack_one(packed: &[u8], bits: u32, idx: usize) -> u8 {
+    let mask = if bits == 8 { 0xFF } else { (1u16 << bits) - 1 };
+    let bitpos = idx * bits as usize;
+    let byte = bitpos / 8;
+    let off = bitpos % 8;
+    let mut v = (packed[byte] >> off) as u16;
+    if off + bits as usize > 8 {
+        v |= (packed[byte + 1] as u16) << (8 - off);
+    }
+    (v & mask) as u8
 }
 
 #[cfg(test)]
@@ -145,5 +218,50 @@ mod tests {
         let packed = pack_codes(&codes, 3);
         assert_eq!(unpack_codes(&packed, 3, 5), codes);
         assert_eq!(packed.len(), 2);
+    }
+
+    /// Exhaustive cross-check of the LUT group unpacker against the
+    /// single-code scalar extractor, sweeping every alignment the scalar
+    /// prefix can see (all starts 0..17, ragged counts).
+    #[test]
+    fn lut_unpacker_matches_scalar_at_every_offset() {
+        let mut rng = Rng::new(202);
+        for bits in 1..=8u32 {
+            let codes: Vec<u8> =
+                (0..131).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack_codes(&codes, bits);
+            for start in 0..17usize {
+                for count in [0usize, 1, 3, 7, 8, 9, 24, 63, 64, 65, 100] {
+                    if start + count > codes.len() {
+                        continue;
+                    }
+                    let mut out = vec![0xAAu8; count];
+                    unpack_codes_into(&packed, bits, start, &mut out);
+                    assert_eq!(
+                        out,
+                        &codes[start..start + count],
+                        "bits={bits} start={start} count={count}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_unpack_matches_u8_unpack_across_tile_boundaries() {
+        let mut rng = Rng::new(203);
+        for bits in [1u32, 2, 3, 4, 8] {
+            let codes: Vec<u8> =
+                (0..200).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack_codes(&codes, bits);
+            // counts straddling the 64-code stack tile, at odd starts
+            for (start, count) in [(0usize, 200usize), (5, 130), (7, 64), (3, 65), (11, 127)] {
+                let mut out = vec![f32::NAN; count];
+                unpack_codes_f32_into(&packed, bits, start, &mut out);
+                let want: Vec<f32> =
+                    codes[start..start + count].iter().map(|&c| c as f32).collect();
+                assert_eq!(out, want, "bits={bits} start={start} count={count}");
+            }
+        }
     }
 }

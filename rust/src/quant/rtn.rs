@@ -1,6 +1,6 @@
 //! Round-to-nearest group-wise quantization (paper §3.2, Eqs. 6–7).
 
-use super::{pack_codes, unpack_codes, unpack_codes_range};
+use super::{pack_codes, unpack_codes, unpack_codes_f32_into};
 use crate::tensor::{DequantRows, Matrix};
 
 /// A group-wise RTN-quantized matrix (grouping along the last axis).
@@ -40,16 +40,20 @@ impl RtnQuantized {
 
     /// Dequantize one stored row into `out` (`out.len() == cols`) without
     /// touching any other row — the streaming-GEMM building block.
+    /// Allocation-free: codes decode straight into `out` as f32 via the
+    /// LUT group unpacker, then the per-group affine `S * (q - Z)` runs
+    /// as a second vectorizable pass in place. Since `u8 → f32` is exact,
+    /// the result is bit-identical to dequantizing from a codes buffer.
     pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
         debug_assert!(i < self.rows);
         debug_assert_eq!(out.len(), self.cols);
-        let codes = unpack_codes_range(&self.packed, self.bits, i * self.cols, self.cols);
+        unpack_codes_f32_into(&self.packed, self.bits, i * self.cols, out);
         let gpr = self.groups_per_row();
         for g in 0..gpr {
             let s = self.scale[i * gpr + g];
             let z = self.zero[i * gpr + g];
-            for j in g * self.group..((g + 1) * self.group).min(self.cols) {
-                out[j] = s * (codes[j] as f32 - z);
+            for v in &mut out[g * self.group..((g + 1) * self.group).min(self.cols)] {
+                *v = s * (*v - z);
             }
         }
     }

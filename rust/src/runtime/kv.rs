@@ -19,8 +19,9 @@
 //! steady-state decode allocation-free.
 
 use super::sim::ParamIndex;
-use crate::loraquant::FactorScratch;
+use crate::loraquant::{FactorScratch, FactorSource};
 use crate::model::ModelConfig;
+use std::sync::Arc;
 
 /// Per-layer K/V buffers for `bsz` lanes of up to `cap` positions each.
 pub struct KvCache {
@@ -151,6 +152,13 @@ pub struct DecodeState {
     /// Per-lane step logits (`lanes × vocab`; retired rows zero).
     pub(crate) out: Vec<f32>,
     pub(crate) scratch: Scratch,
+    /// Per-lane adapter bindings ([`DecodeState::bind_adapter`]). When a
+    /// step passes no explicit adapter views, `forward_core` resolves
+    /// sites from these sources directly — no per-step `QFactors`
+    /// rebuild (DESIGN.md §11 "known cost", retired).
+    pub(crate) sources: Vec<Option<Arc<dyn FactorSource>>>,
+    /// How many `sources` entries are `Some` (cheap is-any-bound check).
+    pub(crate) bound_sources: usize,
 }
 
 impl DecodeState {
@@ -172,6 +180,8 @@ impl DecodeState {
             map: Vec::with_capacity(bsz),
             out: vec![0.0; bsz * cfg.vocab],
             scratch: Scratch::default(),
+            sources: vec![None; bsz],
+            bound_sources: 0,
             lens,
         }
     }
@@ -217,6 +227,42 @@ impl DecodeState {
         self.retired.iter_mut().for_each(|r| *r = true);
         self.lens.iter_mut().for_each(|l| *l = 0);
         self.out.fill(0.0);
+        self.sources.iter_mut().for_each(|s| *s = None);
+        self.bound_sources = 0;
+    }
+
+    /// Bind (or clear, with `None`) lane `lane`'s adapter for every
+    /// subsequent admission/step of this session. Shapes are validated
+    /// **here**, once per binding, so per-step adapter resolution is an
+    /// unchecked site lookup. Steps that pass explicit adapter views
+    /// override the bindings for that call.
+    pub fn bind_adapter(
+        &mut self,
+        lane: usize,
+        src: Option<Arc<dyn FactorSource>>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            lane < self.sources.len(),
+            "lane {lane} out of range for {}-lane session",
+            self.sources.len()
+        );
+        if let Some(s) = &src {
+            let qf = s.factors();
+            super::sim::validate_adapter_shapes(&self.cfg, &[Some(&qf)])?;
+        }
+        if self.sources[lane].is_some() {
+            self.bound_sources -= 1;
+        }
+        if src.is_some() {
+            self.bound_sources += 1;
+        }
+        self.sources[lane] = src;
+        Ok(())
+    }
+
+    /// Whether any lane currently has a bound adapter source.
+    pub fn has_bound_adapters(&self) -> bool {
+        self.bound_sources > 0
     }
 
     /// Resident KV bytes of this session.

@@ -41,13 +41,14 @@
 
 use super::kv::{DecodeState, KvCache, Scratch};
 use crate::adapter::fmt::{Tensor, TensorData};
-use crate::loraquant::{FactorScratch, QFactors};
+use crate::loraquant::{FactorScratch, FactorSource, QFactors, SiteFactors};
 use crate::model::ModelConfig;
 use crate::scheduler::workers::{ComputePool, SendPtr};
-use crate::tensor::{dot, matmul_flat};
+use crate::tensor::{dot, matmul_flat, simd};
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// A loaded forward "program": the model hyper-parameters plus the
 /// expected input arity (tokens + weights), keyed like the PJRT backend
@@ -335,7 +336,7 @@ impl Engine {
             &weights.tensors,
             &state.idx,
             &Rows::Full { bsz, t },
-            adapters,
+            &views(adapters),
             &mut state.kv,
             &mut state.scratch,
             self.pool.as_ref(),
@@ -355,6 +356,11 @@ impl Engine {
     /// per-lane next-token logits (`lanes × vocab`, retired rows zero),
     /// borrowed from the session's scratch — O(layers · seq · d) per
     /// active lane and allocation-free once the session is warm.
+    ///
+    /// Adapter precedence: a non-empty `adapters` slice (explicit
+    /// per-lane views, re-validated here) wins; otherwise lanes bound via
+    /// [`DecodeState::bind_adapter`] apply — validated at bind time, so
+    /// the step itself does only site lookups.
     pub fn decode_step<'s>(
         &self,
         state: &'s mut DecodeState,
@@ -430,7 +436,7 @@ impl Engine {
             &weights.tensors,
             &state.idx,
             &Rows::Step { map: &state.map },
-            adapters,
+            &step_adapters(&state.sources, state.bound_sources, adapters),
             &mut state.kv,
             &mut state.scratch,
             // the persistent pool makes partitioned steps affordable
@@ -489,8 +495,9 @@ impl Engine {
     /// covers positions it wrote itself, so a previous occupant's stale
     /// cache columns are unreachable.
     ///
-    /// `adapters` is per-lane over the **whole** session (empty = none),
-    /// exactly as in [`Engine::decode_step`].
+    /// `adapters` is per-lane over the **whole** session, exactly as in
+    /// [`Engine::decode_step`] — and with the same precedence: empty
+    /// falls back to sources bound via [`DecodeState::bind_adapter`].
     pub fn admit<'s>(
         &self,
         state: &'s mut DecodeState,
@@ -576,7 +583,7 @@ impl Engine {
             &weights.tensors,
             &state.idx,
             &Rows::Step { map: &state.map },
-            adapters,
+            &step_adapters(&state.sources, state.bound_sources, adapters),
             &mut state.kv,
             &mut state.scratch,
             self.pool.as_ref(),
@@ -598,8 +605,10 @@ impl Engine {
 
 /// Every adapter site must name a known LoRA site with the model's
 /// (m_out, n_in) — checked once up front so the apply loop can't panic
-/// mid-forward on a shape mismatch.
-fn validate_adapter_shapes(
+/// mid-forward on a shape mismatch. Also invoked by
+/// [`DecodeState::bind_adapter`] so bound sources are validated once at
+/// bind time, not per step.
+pub(crate) fn validate_adapter_shapes(
     cfg: &ModelConfig,
     adapters: &[Option<&QFactors<'_>>],
 ) -> anyhow::Result<()> {
@@ -770,6 +779,74 @@ impl Rows<'_> {
     }
 }
 
+/// The per-lane adapter inputs of one pass through [`forward_core`]:
+/// either explicit borrowed [`QFactors`] views (the per-call surface) or
+/// the session's bound `Arc<dyn FactorSource>` handles resolved per site
+/// on demand — the continuous-batching hot path, which never rebuilds a
+/// per-lane `QFactors` map per step ([`DecodeState::bind_adapter`]).
+pub(crate) enum PassAdapters<'a> {
+    None,
+    /// Explicit per-lane factor views (one per batch lane; `None` = base).
+    Views(&'a [Option<&'a QFactors<'a>>]),
+    /// Session-owned per-lane sources, asked per (layer, site) directly.
+    Sources(&'a [Option<Arc<dyn FactorSource>>]),
+}
+
+impl PassAdapters<'_> {
+    #[inline]
+    fn is_none(&self) -> bool {
+        matches!(self, PassAdapters::None)
+    }
+
+    /// Run `apply` on lane `b`'s factors for `site`, if the lane has an
+    /// adapter exposing that site.
+    #[inline]
+    fn with_site(&self, b: usize, site: &str, apply: impl FnOnce(&SiteFactors<'_>)) {
+        match self {
+            PassAdapters::None => {}
+            PassAdapters::Views(v) => {
+                if let Some(sf) = v[b].and_then(|q| q.site(site)) {
+                    apply(sf);
+                }
+            }
+            PassAdapters::Sources(s) => {
+                if let Some(sf) = s[b].as_ref().and_then(|src| src.site(site)) {
+                    apply(&sf);
+                }
+            }
+        }
+    }
+}
+
+/// Wrap an explicit per-call adapter slice (empty = none anywhere).
+#[inline]
+fn views<'a>(adapters: &'a [Option<&'a QFactors<'a>>]) -> PassAdapters<'a> {
+    if adapters.is_empty() {
+        PassAdapters::None
+    } else {
+        PassAdapters::Views(adapters)
+    }
+}
+
+/// Adapter inputs for a step/admit: explicit views win, otherwise the
+/// session's bound sources, otherwise none. Takes the `DecodeState`
+/// fields rather than the state so callers keep disjoint borrows of
+/// `state.kv`/`state.scratch` for `forward_core`.
+#[inline]
+fn step_adapters<'a>(
+    sources: &'a [Option<Arc<dyn FactorSource>>],
+    bound: usize,
+    adapters: &'a [Option<&'a QFactors<'a>>],
+) -> PassAdapters<'a> {
+    if !adapters.is_empty() {
+        PassAdapters::Views(adapters)
+    } else if bound > 0 {
+        PassAdapters::Sources(sources)
+    } else {
+        PassAdapters::None
+    }
+}
+
 /// Accumulate every present adapter's factor-form delta for `site` into
 /// `y`. In `Full` mode lane `b` owns rows `b·t .. (b+1)·t`; in `Step`
 /// mode each row is its own lane. `(n, m)` is the site's
@@ -777,7 +854,7 @@ impl Rows<'_> {
 #[allow(clippy::too_many_arguments)] // one GEMM epilogue, not an API
 fn apply_adapters(
     rows: &Rows<'_>,
-    adapters: &[Option<&QFactors<'_>>],
+    adapters: &PassAdapters<'_>,
     site: &str,
     x: &[f32],
     (n, m): (usize, usize),
@@ -785,32 +862,34 @@ fn apply_adapters(
     y: &mut [f32],
     fs: &mut FactorScratch,
 ) {
-    if adapters.is_empty() {
+    if adapters.is_none() {
         return;
     }
     match *rows {
         Rows::Full { bsz, t } => {
             for b in 0..bsz {
-                let Some(sf) = adapters[b].and_then(|q| q.site(site)) else { continue };
-                sf.apply_delta_acc_into(
-                    &x[b * t * n..(b + 1) * t * n],
-                    t,
-                    scaling,
-                    &mut y[b * t * m..(b + 1) * t * m],
-                    fs,
-                );
+                adapters.with_site(b, site, |sf| {
+                    sf.apply_delta_acc_into(
+                        &x[b * t * n..(b + 1) * t * n],
+                        t,
+                        scaling,
+                        &mut y[b * t * m..(b + 1) * t * m],
+                        fs,
+                    );
+                });
             }
         }
         Rows::Step { map } => {
             for (r, &(b, _)) in map.iter().enumerate() {
-                let Some(sf) = adapters[b].and_then(|q| q.site(site)) else { continue };
-                sf.apply_delta_acc_into(
-                    &x[r * n..(r + 1) * n],
-                    1,
-                    scaling,
-                    &mut y[r * m..(r + 1) * m],
-                    fs,
-                );
+                adapters.with_site(b, site, |sf| {
+                    sf.apply_delta_acc_into(
+                        &x[r * n..(r + 1) * n],
+                        1,
+                        scaling,
+                        &mut y[r * m..(r + 1) * m],
+                        fs,
+                    );
+                });
             }
         }
     }
@@ -877,13 +956,13 @@ fn attention_rows(
                 *s = (*s - max).exp();
                 denom += *s;
             }
+            // weighted V accumulation: simd::axpy adds element-wise in
+            // the same order as the scalar loop, so lane-blocking the
+            // head dim never changes a bit
             let orow = &mut att[(r - lo) * d + off..(r - lo) * d + off + hd];
             for (j, &w) in win.iter().enumerate() {
                 let w = w / denom;
-                let vrow = &vlane[j * d + off..j * d + off + hd];
-                for u in 0..hd {
-                    orow[u] += w * vrow[u];
-                }
+                simd::axpy(orow, w, &vlane[j * d + off..j * d + off + hd]);
             }
         }
     }
@@ -905,7 +984,7 @@ fn forward_core(
     weights: &[Tensor],
     idx: &ParamIndex,
     rows: &Rows<'_>,
-    adapters: &[Option<&QFactors<'_>>],
+    adapters: &PassAdapters<'_>,
     kv: &mut KvCache,
     sc: &mut Scratch,
     pool: Option<&ComputePool>,
@@ -1038,7 +1117,7 @@ fn ref_forward(
     // just two more of the same size, routing attention through the one
     // shared core. Steady-state decode never takes this path.
     let mut kv = KvCache::new(cfg.n_layers, bsz, t.max(1), d);
-    forward_core(cfg, weights, &idx, &Rows::Full { bsz, t }, adapters, &mut kv, &mut sc, pool)?;
+    forward_core(cfg, weights, &idx, &Rows::Full { bsz, t }, &views(adapters), &mut kv, &mut sc, pool)?;
     Ok(sc.logits)
 }
 
@@ -1088,10 +1167,13 @@ mod tests {
             for i in 0..m {
                 let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut c[i * n..(i + 1) * n];
+                // One deliberate deviation from the historical copy: the
+                // `av == 0.0 => continue` sparsity skip was removed, the
+                // same acknowledged IEEE hazard fix applied to
+                // `tensor::ops` (0·NaN/0·∞ must propagate, −0.0 terms
+                // must participate in the sum). Both sides of the
+                // bit-identity gate accumulate every term.
                 for (p, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
-                    }
                     let brow = &b[p * n..(p + 1) * n];
                     for j in 0..n {
                         crow[j] += av * brow[j];
@@ -1684,6 +1766,60 @@ mod tests {
             cur = engine.decode_step(&mut state, &w, &[], &[best as i32, 1]).unwrap().to_vec();
             assert_eq!(&cur[..vo], &solo_row[..], "step {step}: survivor must be unperturbed");
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The factor-source binding surface: lanes bound once via
+    /// [`DecodeState::bind_adapter`] must admit and decode
+    /// **bit-identically** to the same lanes driven with explicit
+    /// per-call `QFactors` views, bindings must clear on reset, and bad
+    /// bindings must be rejected at bind time (never mid-step).
+    #[test]
+    fn bound_sources_bit_identical_to_explicit_views() {
+        let (dir, cfg, engine, _w_merged, w_base) = kv_fixture("kvbind");
+        let stored = synth_quantized_adapter(&cfg, 51);
+        let p0: Vec<i32> = (0..5).map(|i| 1 + (i * 3) % 9).collect();
+        let p1: Vec<i32> = (0..3).map(|i| 2 + (i * 5) % 7).collect();
+
+        // explicit-views reference run: lane 0 adapted, lane 1 base
+        let qf = stored.factors();
+        let adapters = [Some(&qf), None];
+        let mut s_view = engine.new_session("synth/b4", 2, &w_base).unwrap();
+        let mut want = engine
+            .admit(&mut s_view, &[0, 1], &[p0.as_slice(), p1.as_slice()], &w_base, &adapters)
+            .unwrap()
+            .to_vec();
+        for tok in [3i32, 5, 7] {
+            want.extend_from_slice(
+                engine.decode_step(&mut s_view, &w_base, &adapters, &[tok, tok]).unwrap(),
+            );
+        }
+
+        // bound-sources run: bind lane 0 once, never pass views again
+        let src: Arc<dyn FactorSource> = Arc::new(stored.clone());
+        let mut s_bind = engine.new_session("synth/b4", 2, &w_base).unwrap();
+        s_bind.bind_adapter(0, Some(src)).unwrap();
+        assert!(s_bind.has_bound_adapters());
+        let mut got = engine
+            .admit(&mut s_bind, &[0, 1], &[p0.as_slice(), p1.as_slice()], &w_base, &[])
+            .unwrap()
+            .to_vec();
+        for tok in [3i32, 5, 7] {
+            got.extend_from_slice(
+                engine.decode_step(&mut s_bind, &w_base, &[], &[tok, tok]).unwrap(),
+            );
+        }
+        assert_eq!(got, want, "bound sources must match explicit views bitwise");
+
+        // reset clears bindings
+        s_bind.reset();
+        assert!(!s_bind.has_bound_adapters());
+        // shape mismatches and bad lanes fail at bind time
+        let bigger = ModelConfig { d_model: cfg.d_model * 2, ..cfg };
+        let wrong: Arc<dyn FactorSource> = Arc::new(synth_quantized_adapter(&bigger, 6));
+        assert!(s_bind.bind_adapter(0, Some(wrong)).is_err(), "bad shapes must fail at bind");
+        assert!(s_bind.bind_adapter(9, None).is_err(), "lane out of range");
+        assert!(!s_bind.has_bound_adapters());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -36,7 +36,7 @@ use crate::clock::Clock;
 use crate::coordinator::registry::AdapterId;
 use crate::eval::decode::{consume_greedy, DecodeStep};
 use crate::eval::tasks::TOKENS;
-use crate::loraquant::{FactorSource, QFactors};
+use crate::loraquant::FactorSource;
 use crate::runtime::{DecodeState, DeviceWeights, Engine};
 use anyhow::{bail, Context};
 use std::sync::Arc;
@@ -282,28 +282,22 @@ pub fn run_continuous(
 
 /// The production continuous stepper: a heterogeneous multi-tenant
 /// session over one engine + weight set, with per-lane factor-form
-/// adapters re-bound at admission. The [`DecodeState`] lives in a
-/// caller-owned slot, so its KV cache and scratch arena persist across
-/// sessions (one allocation per worker, not per batch).
+/// adapters bound **into the session** at admission. The [`DecodeState`]
+/// lives in a caller-owned slot, so its KV cache and scratch arena
+/// persist across sessions (one allocation per worker, not per batch).
 ///
-/// Known cost (factor path only): the engine takes borrowed
-/// `QFactors` views, and a view borrowing an `Arc` this stepper owns
-/// cannot be cached across calls in safe Rust (self-reference), so
-/// steps with at least one bound adapter rebuild the per-lane views
-/// each call — per-step site-map construction the lock-step factor
-/// path paid once per batch. Merged-weight sessions (`bound == 0`)
-/// skip all of it. Lifting this (e.g. per-lane bindings owned by
-/// `DecodeState`, or a `FactorSource::site` surface) is a ROADMAP
-/// item.
+/// Adapter plumbing: each admitted lane's `Arc<dyn FactorSource>` is
+/// handed to [`DecodeState::bind_adapter`] once (shape-validated at bind
+/// time); every subsequent step resolves sites straight from the bound
+/// sources via `FactorSource::site`. This retires the factor path's old
+/// known cost — a borrowed `QFactors` view over an `Arc` this stepper
+/// owned couldn't be cached across calls in safe Rust, so steps with any
+/// bound adapter used to rebuild every lane's site map per call.
 pub struct SessionStepper<'a> {
     engine: &'a Engine,
     prog: &'a str,
     weights: &'a DeviceWeights,
     slot: &'a mut Option<DecodeState>,
-    /// Per-lane adapter bindings (None = the weights already carry it).
-    lane_adapters: Vec<Option<Arc<dyn FactorSource>>>,
-    /// Lanes with a bound adapter (0 ⇒ skip all factor plumbing).
-    bound: usize,
     /// Reusable newest-token buffer.
     last: Vec<i32>,
 }
@@ -315,7 +309,7 @@ impl<'a> SessionStepper<'a> {
         weights: &'a DeviceWeights,
         slot: &'a mut Option<DecodeState>,
     ) -> Self {
-        Self { engine, prog, weights, slot, lane_adapters: Vec::new(), bound: 0, last: Vec::new() }
+        Self { engine, prog, weights, slot, last: Vec::new() }
     }
 
     /// Resident KV bytes of the live session.
@@ -332,14 +326,13 @@ impl DecodeStep for SessionStepper<'_> {
     fn begin(&mut self, lanes: usize) -> anyhow::Result<()> {
         match self.slot.as_mut() {
             // warm slot of the right shape: keep the allocations, drop
-            // the previous group's lane state
+            // the previous group's lane state (reset also unbinds every
+            // lane's adapter source)
             Some(state) if state.lanes() == lanes && state.program() == self.prog => {
                 state.reset();
             }
             _ => *self.slot = Some(self.engine.new_session(self.prog, lanes, self.weights)?),
         }
-        self.lane_adapters = vec![None; lanes];
-        self.bound = 0;
         Ok(())
     }
 
@@ -353,24 +346,13 @@ impl DecodeStep for SessionStepper<'_> {
         if adapters.len() != lanes.len() {
             bail!("admit: {} adapters for {} lanes", adapters.len(), lanes.len());
         }
-        for (&l, ad) in lanes.iter().zip(adapters) {
-            match (&self.lane_adapters[l], ad) {
-                (None, Some(_)) => self.bound += 1,
-                (Some(_), None) => self.bound -= 1,
-                _ => {}
-            }
-            self.lane_adapters[l] = ad.clone();
-        }
         let state = self.slot.as_mut().context("admit before begin")?;
-        let prompts: Vec<&[i32]> = lanes.iter().map(|&l| &seqs[l][..pos[l]]).collect();
-        if self.bound == 0 {
-            self.engine.admit(state, lanes, &prompts, self.weights, &[])
-        } else {
-            let factors: Vec<Option<QFactors<'_>>> =
-                self.lane_adapters.iter().map(|o| o.as_ref().map(|a| a.factors())).collect();
-            let refs: Vec<Option<&QFactors<'_>>> = factors.iter().map(Option::as_ref).collect();
-            self.engine.admit(state, lanes, &prompts, self.weights, &refs)
+        // bind once per admission; steps resolve sites from the sources
+        for (&l, ad) in lanes.iter().zip(adapters) {
+            state.bind_adapter(l, ad.clone())?;
         }
+        let prompts: Vec<&[i32]> = lanes.iter().map(|&l| &seqs[l][..pos[l]]).collect();
+        self.engine.admit(state, lanes, &prompts, self.weights, &[])
     }
 
     fn step(
@@ -389,14 +371,7 @@ impl DecodeStep for SessionStepper<'_> {
                 state.retire(k);
             }
         }
-        if self.bound == 0 {
-            self.engine.decode_step(state, self.weights, &[], &self.last)
-        } else {
-            let factors: Vec<Option<QFactors<'_>>> =
-                self.lane_adapters.iter().map(|o| o.as_ref().map(|a| a.factors())).collect();
-            let refs: Vec<Option<&QFactors<'_>>> = factors.iter().map(Option::as_ref).collect();
-            self.engine.decode_step(state, self.weights, &refs, &self.last)
-        }
+        self.engine.decode_step(state, self.weights, &[], &self.last)
     }
 
     fn retire(&mut self, lane: usize) {
@@ -404,9 +379,10 @@ impl DecodeStep for SessionStepper<'_> {
             if !state.is_retired(lane) {
                 state.retire(lane);
             }
-        }
-        if lane < self.lane_adapters.len() && self.lane_adapters[lane].take().is_some() {
-            self.bound -= 1;
+            if lane < state.lanes() {
+                // in-range unbind with `None` cannot fail
+                let _ = state.bind_adapter(lane, None);
+            }
         }
     }
 }

@@ -316,6 +316,36 @@ mod tests {
         }
     }
 
+    /// Strict-IEEE contract under partitioning: with NaN, ±∞ and −0.0
+    /// planted in the inputs, the pool kernel must agree **bitwise**
+    /// with the scalar oracle at every thread count — no sparsity skip
+    /// may swallow a `0 · NaN`, and signed zeros must survive.
+    #[test]
+    fn pool_matmul_propagates_hazards_bit_identically() {
+        let (m, k, n) = (5usize, 9usize, 7usize);
+        let mut a = rand_vec(m * k, 77);
+        let mut b = rand_vec(k * n, 78);
+        a[0] = 0.0; // meets b's NaN column: 0·NaN must stay NaN
+        a[k + 1] = -0.0;
+        a[2 * k + 2] = f32::INFINITY;
+        b[n + 3] = f32::NAN;
+        b[2 * n + 4] = f32::NEG_INFINITY;
+        let mut oracle = vec![0.0f32; m * n];
+        crate::tensor::scalar::matmul_flat(&a, m, k, &b, n, &mut oracle);
+        assert!(oracle.iter().any(|v| v.is_nan()), "fixture must exercise NaN rows");
+        for threads in [1usize, 2, 4] {
+            let pool = ComputePool::new(threads);
+            let mut par = vec![0.0f32; m * n];
+            pool.matmul_flat(&a, m, k, &b, n, &mut par);
+            for (i, (p, o)) in par.iter().zip(&oracle).enumerate() {
+                assert!(
+                    p.to_bits() == o.to_bits() || (p.is_nan() && o.is_nan()),
+                    "threads={threads} elem {i}: {p:?} vs {o:?}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn pool_matmul_reuse_stays_identical() {
         // the same pool over different shapes in sequence — no stale-job

@@ -5,8 +5,10 @@
 //! with cache-friendly kernels is all we need — no BLAS available offline.
 
 mod ops;
+pub mod simd;
 
 pub(crate) use ops::matmul_flat_rows;
+pub use ops::scalar;
 pub use ops::{
     matmul, matmul_a_bt, matmul_at_b, matmul_flat, matmul_flat_threaded, matmul_qdequant,
     matmul_qdequant_acc, matmul_qdequant_acc_into, matmul_qdequant_bt, matmul_qdequant_bt_acc,
@@ -219,25 +221,13 @@ impl Matrix {
     }
 }
 
-/// Dot product of two slices.
+/// Dot product of two slices — the canonical 8-lane split-accumulator
+/// order ([`simd::dot8`]). Attention scores, `matmul_a_bt`, and the
+/// `qdequant_bt` kernel all reduce in exactly this order; changing it
+/// changes bits everywhere (see DESIGN.md §10 on the PR-6 re-bless).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-lane unrolled accumulation; the compiler autovectorizes this form.
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for k in 0..chunks {
-        let i = 4 * k;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in 4 * chunks..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dot8(a, b)
 }
 
 /// Euclidean norm of a slice.
@@ -311,5 +301,12 @@ mod tests {
         let b: Vec<f32> = (0..37).map(|i| (36 - i) as f32 * 0.2).collect();
         let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dot_is_the_canonical_scalar_order_bitwise() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..37).map(|i| (36 - i) as f32 * 0.2).collect();
+        assert_eq!(dot(&a, &b).to_bits(), scalar::dot(&a, &b).to_bits());
     }
 }

@@ -17,8 +17,22 @@
 //!   (DESIGN.md §8); anything implementing [`DequantRows`] can be the
 //!   right operand. The `_into` variants take the scratch row from the
 //!   caller, so steady-state decode allocates nothing (DESIGN.md §10).
+//!
+//! # Semantics: strict IEEE accumulation, no sparsity shortcuts
+//!
+//! Every kernel issues the full `c + a·b` for every operand pair — there
+//! is **no** `a == 0.0` skip-branch anywhere. Skipping zero scalars turns
+//! `0·NaN` and `0·∞` into silent zeros and flips the sign of `-0.0` sums,
+//! so a skipping scalar kernel and a non-skipping SIMD kernel disagree
+//! bitwise on exactly the inputs that matter for debugging. (Activations
+//! *do* produce exact zeros: saturated `gelu` returns `0.0`, `silu`
+//! returns `-0.0` for large negative inputs.) A sparsity fast path may
+//! only return if `bench_kernels` proves it wins *and* it preserves these
+//! bits. Reduction orders are fixed per family — see `tensor/simd.rs` —
+//! and the [`scalar`] module keeps naive implementations of the same
+//! orders as oracles for property tests and as `bench_kernels` baselines.
 
-use super::{dot, Matrix};
+use super::{dot, simd, Matrix};
 
 /// A matrix whose rows can be produced densely one at a time — the
 /// contract between the packed quantized formats in `quant/` (and plain
@@ -48,32 +62,22 @@ impl DequantRows for Matrix {
 
 /// `C = A @ B` (A: m×k, B: k×n).
 ///
-/// i-k-j loop order: the inner j-loop streams one row of B and one row of C,
-/// which autovectorizes and stays in L1 for LoRA-factor shapes.
+/// Same blocked kernel as [`matmul_flat`] (i-k-j order, 4×8 register
+/// tiles): Matrix data is already flat row-major, so the two entry points
+/// are bit-identical by construction.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul {:?} x {:?}", a.shape(), b.shape());
     let (m, k) = a.shape();
     let n = b.cols();
     let mut c = Matrix::zeros(m, n);
-    let cdata = c.data_mut();
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = &mut cdata[i * n..(i + 1) * n];
-        for p in 0..k {
-            let av = arow[p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = b.row(p);
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
+    matmul_flat_rows(a.data(), m, k, b.data(), n, c.data_mut());
     c
 }
 
 /// `C = Aᵀ @ B` (A: k×m, B: k×n) without materializing the transpose.
+///
+/// p-i-j order; per output element the accumulation runs over ascending
+/// `p`, the axpy-family canonical order.
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b {:?} x {:?}", a.shape(), b.shape());
     let (k, m) = a.shape();
@@ -84,14 +88,7 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
         let arow = a.row(p);
         let brow = b.row(p);
         for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut cdata[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
+            simd::axpy(&mut cdata[i * n..(i + 1) * n], arow[i], brow);
         }
     }
     c
@@ -113,10 +110,16 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// The serial row kernel shared by [`matmul_flat`], every partition of
-/// [`matmul_flat_threaded`], and the persistent compute pool's
-/// partitions (`scheduler::workers::ComputePool::matmul_flat`):
+/// The serial row kernel shared by [`matmul`], [`matmul_flat`], every
+/// partition of [`matmul_flat_threaded`], and the persistent compute
+/// pool's partitions (`scheduler::workers::ComputePool::matmul_flat`):
 /// `c[rows×n] += a[rows×k] @ b[k×n]` (callers zero `c` first).
+///
+/// Blocking: 4 `p` steps register-blocked per [`simd::axpy4`] panel, 8
+/// output columns per lane group. Per output element the adds still land
+/// one at a time in ascending `p`, so the blocked kernel is bit-identical
+/// to [`scalar::matmul_flat_rows`] — and, because the blocking is
+/// per-row, identical at every thread partitioning.
 pub(crate) fn matmul_flat_rows(
     a: &[f32],
     rows: usize,
@@ -125,17 +128,25 @@ pub(crate) fn matmul_flat_rows(
     n: usize,
     c: &mut [f32],
 ) {
+    let kb = k / 4 * 4;
     for i in 0..rows {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
+        let mut p = 0;
+        while p < kb {
+            simd::axpy4(
+                crow,
+                [arow[p], arow[p + 1], arow[p + 2], arow[p + 3]],
+                &b[p * n..(p + 1) * n],
+                &b[(p + 1) * n..(p + 2) * n],
+                &b[(p + 2) * n..(p + 3) * n],
+                &b[(p + 3) * n..(p + 4) * n],
+            );
+            p += 4;
+        }
+        while p < k {
+            simd::axpy(crow, arow[p], &b[p * n..(p + 1) * n]);
+            p += 1;
         }
     }
 }
@@ -228,14 +239,7 @@ pub fn matmul_qdequant_acc_into(
     for p in 0..k {
         q.dequant_row_into(p, qrow);
         for i in 0..rows {
-            let av = alpha * x[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += av * qrow[j];
-            }
+            simd::axpy(&mut out[i * n..(i + 1) * n], alpha * x[i * k + p], qrow);
         }
     }
 }
@@ -311,6 +315,96 @@ pub fn matmul_qdequant_bt(x: &Matrix, q: &dyn DequantRows) -> Matrix {
     let (rows, k) = x.shape();
     matmul_qdequant_bt_acc(x.data(), rows, k, q, 1.0, out.data_mut());
     out
+}
+
+/// Naive single-element-at-a-time implementations of the **same**
+/// canonical reduction orders as the blocked kernels above. These are the
+/// oracles the property tests pin the blocked kernels against bit for
+/// bit, and the baselines `bench_kernels` measures speedups over. They
+/// must stay unblocked and unoptimized — their value is being obviously
+/// correct, not fast.
+pub mod scalar {
+    use super::DequantRows;
+
+    /// Canonical dot order written naively: `acc[i % 8] += a[i]*b[i]`,
+    /// fixed pairwise combine, sequential tail (`tensor::simd::dot8`).
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        let lanes = super::simd::LANES;
+        let full = a.len() / lanes * lanes;
+        let mut acc = [0.0f32; 8];
+        for i in 0..full {
+            acc[i % lanes] += a[i] * b[i];
+        }
+        let mut s =
+            ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in full..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// Axpy-family oracle: i-p-j triple loop, one add per element in
+    /// ascending `p`, no skip-branches. `c += a @ b`.
+    pub fn matmul_flat_rows(a: &[f32], rows: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+        for i in 0..rows {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+    }
+
+    /// `c = a @ b` on flat slices, oracle form.
+    pub fn matmul_flat(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+        c.fill(0.0);
+        matmul_flat_rows(a, m, k, b, n, c);
+    }
+
+    /// Oracle for [`super::matmul_qdequant_acc_into`]: p-i-j, one dequant
+    /// per stored row, naive inner loop.
+    pub fn matmul_qdequant_acc(
+        x: &[f32],
+        rows: usize,
+        k: usize,
+        q: &dyn DequantRows,
+        alpha: f32,
+        out: &mut [f32],
+    ) {
+        let n = q.src_cols();
+        let mut qrow = vec![0.0f32; n];
+        for p in 0..k {
+            q.dequant_row_into(p, &mut qrow);
+            for i in 0..rows {
+                let av = alpha * x[i * k + p];
+                for j in 0..n {
+                    out[i * n + j] += av * qrow[j];
+                }
+            }
+        }
+    }
+
+    /// Oracle for [`super::matmul_qdequant_bt_acc_into`]: per stored row
+    /// one dequant, then the canonical naive dot against every x row.
+    pub fn matmul_qdequant_bt_acc(
+        x: &[f32],
+        rows: usize,
+        k: usize,
+        q: &dyn DequantRows,
+        alpha: f32,
+        out: &mut [f32],
+    ) {
+        let n = q.src_rows();
+        let mut qrow = vec![0.0f32; k];
+        for j in 0..n {
+            q.dequant_row_into(j, &mut qrow);
+            for i in 0..rows {
+                out[i * n + j] += alpha * dot(&x[i * k..(i + 1) * k], qrow.as_slice());
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -433,6 +527,108 @@ mod tests {
         matmul_qdequant_bt_acc_into(x.data(), 4, 6, &qt, 1.0, &mut out_bt, &mut scratch);
         assert_eq!(out_bt, matmul_qdequant_bt(&x, &qt).into_vec());
         assert_eq!(scratch.capacity(), cap, "warm scratch must not reallocate");
+    }
+
+    /// Seeds a matrix, then plants exact zeros, -0.0, NaN, and inf — the
+    /// operands the removed skip-branch used to mishandle.
+    fn hazard_mat(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut m = rand_mat(r, c, seed);
+        let n = m.len();
+        let d = m.data_mut();
+        d[0] = 0.0;
+        d[n / 2] = -0.0;
+        if n > 3 {
+            d[1] = f32::NAN;
+            d[n - 1] = f32::INFINITY;
+        }
+        m
+    }
+
+    /// Bitwise equality that treats any-NaN == any-NaN (assert_eq on f32
+    /// fails on NaN even when both sides are NaN).
+    fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: len");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let ok = g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan());
+            assert!(ok, "{ctx}: [{i}] {g:?} ({:#x}) vs {w:?} ({:#x})", g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_bit_identical_to_scalar_oracle() {
+        // k and n not multiples of the blocking widths (4 and 8), plus
+        // hazard operands (0.0 / -0.0 / NaN / inf).
+        for (m, k, n) in [(1usize, 1usize, 1usize), (3, 5, 7), (4, 9, 11), (7, 12, 16), (2, 13, 3)]
+        {
+            let a = hazard_mat(m, k, 61 + n as u64);
+            let b = hazard_mat(k, n, 62 + m as u64);
+            let mut blocked = vec![f32::NAN; m * n];
+            matmul_flat(a.data(), m, k, b.data(), n, &mut blocked);
+            let mut oracle = vec![f32::NAN; m * n];
+            scalar::matmul_flat(a.data(), m, k, b.data(), n, &mut oracle);
+            assert_bits_eq(&blocked, &oracle, &format!("{m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn at_b_bit_identical_to_oracle_order() {
+        let a = hazard_mat(9, 6, 63);
+        let b = hazard_mat(9, 5, 64);
+        let c = matmul_at_b(&a, &b);
+        // same canonical order: transpose then run the flat oracle
+        let at = a.transpose();
+        let mut oracle = vec![0.0f32; 6 * 5];
+        scalar::matmul_flat(at.data(), 6, 9, b.data(), 5, &mut oracle);
+        assert_bits_eq(c.data(), &oracle, "at_b");
+    }
+
+    #[test]
+    fn a_bt_uses_canonical_dot() {
+        let a = hazard_mat(5, 13, 65);
+        let b = hazard_mat(4, 13, 66);
+        let c = matmul_a_bt(&a, &b);
+        for i in 0..5 {
+            for j in 0..4 {
+                let want = scalar::dot(a.row(i), b.row(j));
+                let got = c.at(i, j);
+                assert!(
+                    got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                    "({i},{j}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_times_nan_propagates_through_matmul() {
+        // a has an exact 0.0 facing a NaN in b: the product row must be
+        // NaN, not silently zero (the old skip-branch bug).
+        let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Matrix::from_vec(2, 2, vec![f32::NAN, 2.0, 3.0, 4.0]);
+        let c = matmul(&a, &b);
+        assert!(c.at(0, 0).is_nan(), "0 * NaN must propagate");
+        let at = matmul_at_b(&a.transpose(), &b);
+        assert!(at.at(0, 0).is_nan(), "at_b: 0 * NaN must propagate");
+    }
+
+    #[test]
+    fn qdequant_kernels_bit_identical_to_scalar_oracles() {
+        for (rows, k, n) in [(1usize, 3usize, 5usize), (4, 6, 9), (5, 11, 13)] {
+            let x = hazard_mat(rows, k, 71);
+            let q = hazard_mat(k, n, 72);
+            let qt = hazard_mat(n, k, 73);
+            let mut got = vec![0.1f32; rows * n];
+            let mut want = got.clone();
+            let mut scratch = Vec::new();
+            matmul_qdequant_acc_into(x.data(), rows, k, &q, 1.7, &mut got, &mut scratch);
+            scalar::matmul_qdequant_acc(x.data(), rows, k, &q, 1.7, &mut want);
+            assert_bits_eq(&got, &want, &format!("qdequant {rows}x{k}x{n}"));
+            let mut got_bt = vec![-0.2f32; rows * n];
+            let mut want_bt = got_bt.clone();
+            matmul_qdequant_bt_acc_into(x.data(), rows, k, &qt, 0.3, &mut got_bt, &mut scratch);
+            scalar::matmul_qdequant_bt_acc(x.data(), rows, k, &qt, 0.3, &mut want_bt);
+            assert_bits_eq(&got_bt, &want_bt, &format!("qdequant_bt {rows}x{k}x{n}"));
+        }
     }
 
     #[test]

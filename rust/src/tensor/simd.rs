@@ -1,0 +1,212 @@
+//! Dependency-free f32x8 helpers: manual 8-wide unrolls the compiler can
+//! lower to SIMD (like the vendored `anyhow`, this pulls in nothing).
+//!
+//! # Canonical reduction orders
+//!
+//! Every kernel in `tensor/ops.rs` (and the attention loops in
+//! `runtime/sim.rs`) reduces in one of exactly two orders, both fixed
+//! here so that blocking, unrolling, and thread count can never change a
+//! single output bit:
+//!
+//! * **axpy family** (`c[j] += a_p * b_p[j]`, accumulated over `p`): each
+//!   output element is one sequential chain of adds in ascending `p`.
+//!   [`axpy`] unrolls the `j` loop 8-wide — `j` lanes are independent, so
+//!   unrolling them changes nothing — and [`axpy4`] register-blocks four
+//!   `p` steps while still issuing one add per element per step, in `p`
+//!   order. Both are therefore bit-identical to the naive two-loop form.
+//! * **dot family** ([`dot8`]): 8 split accumulators with `lane = i % 8`,
+//!   combined by the fixed pairwise tree
+//!   `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`, then tail elements
+//!   (`i >= 8*(len/8)`) added sequentially. This *is* the definition of
+//!   the dot product here — the scalar oracle
+//!   (`tensor::scalar::dot`) implements the same order naively.
+//!
+//! Products are written `c + a * b` (separate mul + add, never a fused
+//! FMA): rustc without fast-math keeps that exact, so results are
+//! reproducible across platforms regardless of FMA hardware.
+
+/// Lane width all kernels block against.
+pub const LANES: usize = 8;
+
+/// Canonical dot product: 8 split accumulators (`lane = i % 8`), fixed
+/// pairwise combine, sequential tail. See the module docs.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let full = a.len() / LANES * LANES;
+    let mut acc = [0.0f32; LANES];
+    let (ah, at) = a.split_at(full);
+    let (bh, bt) = b.split_at(full);
+    for (av, bv) in ah.chunks_exact(LANES).zip(bh.chunks_exact(LANES)) {
+        acc[0] += av[0] * bv[0];
+        acc[1] += av[1] * bv[1];
+        acc[2] += av[2] * bv[2];
+        acc[3] += av[3] * bv[3];
+        acc[4] += av[4] * bv[4];
+        acc[5] += av[5] * bv[5];
+        acc[6] += av[6] * bv[6];
+        acc[7] += av[7] * bv[7];
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (av, bv) in at.iter().zip(bt) {
+        s += av * bv;
+    }
+    s
+}
+
+/// `c[j] += av * b[j]`, 8-wide unrolled. One add per element, so the
+/// per-element reduction order is whatever order the caller issues its
+/// `axpy` calls in — bit-identical to the naive `for j` loop.
+#[inline]
+pub fn axpy(c: &mut [f32], av: f32, b: &[f32]) {
+    debug_assert_eq!(c.len(), b.len());
+    let full = c.len() / LANES * LANES;
+    let (ch, ct) = c.split_at_mut(full);
+    let (bh, bt) = b.split_at(full);
+    for (cv, bv) in ch.chunks_exact_mut(LANES).zip(bh.chunks_exact(LANES)) {
+        cv[0] += av * bv[0];
+        cv[1] += av * bv[1];
+        cv[2] += av * bv[2];
+        cv[3] += av * bv[3];
+        cv[4] += av * bv[4];
+        cv[5] += av * bv[5];
+        cv[6] += av * bv[6];
+        cv[7] += av * bv[7];
+    }
+    for (cv, bv) in ct.iter_mut().zip(bt) {
+        *cv += av * bv;
+    }
+}
+
+/// Register-blocked 4-step panel: bit-identical to
+/// `axpy(c, a[0], b0); axpy(c, a[1], b1); axpy(c, a[2], b2);
+/// axpy(c, a[3], b3)` — per output element the four adds land
+/// sequentially in `p` order — but blocked 8 columns at a time so the
+/// output tile stays in registers across all four steps.
+#[inline]
+pub fn axpy4(c: &mut [f32], a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+    let n = c.len();
+    debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+    let full = n / LANES * LANES;
+    let mut o = 0;
+    while o < full {
+        let ct = &mut c[o..o + LANES];
+        let (t0, t1, t2, t3) =
+            (&b0[o..o + LANES], &b1[o..o + LANES], &b2[o..o + LANES], &b3[o..o + LANES]);
+        let mut j = 0;
+        while j < LANES {
+            let mut v = ct[j];
+            v += a[0] * t0[j];
+            v += a[1] * t1[j];
+            v += a[2] * t2[j];
+            v += a[3] * t3[j];
+            ct[j] = v;
+            j += 1;
+        }
+        o += LANES;
+    }
+    while o < n {
+        let mut v = c[o];
+        v += a[0] * b0[o];
+        v += a[1] * b1[o];
+        v += a[2] * b2[o];
+        v += a[3] * b3[o];
+        c[o] = v;
+        o += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s as f64 / u64::MAX as f64) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    /// The canonical order written naively — this is the oracle the
+    /// unrolled body must match bit for bit.
+    fn dot_naive_canonical(a: &[f32], b: &[f32]) -> f32 {
+        let full = a.len() / LANES * LANES;
+        let mut acc = [0.0f32; LANES];
+        for i in 0..full {
+            acc[i % LANES] += a[i] * b[i];
+        }
+        let mut s =
+            ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in full..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[test]
+    fn dot8_matches_canonical_order_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 64, 100] {
+            let a = seq(n, 3 + n as u64);
+            let b = seq(n, 5 + n as u64);
+            assert_eq!(
+                dot8(&a, &b).to_bits(),
+                dot_naive_canonical(&a, &b).to_bits(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot8_propagates_nan() {
+        let mut a = seq(20, 7);
+        let b = seq(20, 9);
+        a[13] = f32::NAN;
+        assert!(dot8(&a, &b).is_nan());
+    }
+
+    #[test]
+    fn axpy_matches_naive_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 23, 64, 81] {
+            let b = seq(n, 11 + n as u64);
+            let mut c = seq(n, 13 + n as u64);
+            let mut naive = c.clone();
+            axpy(&mut c, 0.37, &b);
+            for j in 0..n {
+                naive[j] += 0.37 * b[j];
+            }
+            assert_eq!(c, naive, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy4_is_four_sequential_axpys() {
+        for n in [1usize, 5, 8, 13, 40] {
+            let rows: Vec<Vec<f32>> = (0..4).map(|p| seq(n, 17 + p as u64)).collect();
+            let a = [0.9f32, -0.4, 0.05, 2.5];
+            let mut blocked = seq(n, 23);
+            let mut serial = blocked.clone();
+            axpy4(&mut blocked, a, &rows[0], &rows[1], &rows[2], &rows[3]);
+            for p in 0..4 {
+                axpy(&mut serial, a[p], &rows[p]);
+            }
+            assert_eq!(blocked, serial, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_does_not_skip_zero_scalars() {
+        // 0 * NaN must poison the output — the old kernels' `av == 0.0`
+        // skip-branch silently dropped this.
+        let b = vec![f32::NAN, 1.0, f32::INFINITY];
+        let mut c = vec![1.0f32, 2.0, 3.0];
+        axpy(&mut c, 0.0, &b);
+        assert!(c[0].is_nan());
+        assert!(c[2].is_nan()); // 0 * inf = NaN
+        assert_eq!(c[1], 2.0);
+    }
+}

@@ -541,3 +541,156 @@ fn prop_rouge_l_bounds_and_identity() {
         assert!((f - rouge_l(&b, &a)).abs() < 1e-12);
     });
 }
+
+// ---------------------------------------------------------------------------
+// PR-6 kernel determinism contract: the blocked/SIMD kernels must be
+// bit-identical to the naive scalar oracles in `tensor::scalar`, for any
+// shape (k/n not multiples of the 8-wide lane or 4-row p-block) and for
+// any operand bits — including NaN, ±inf and -0.0, which the old
+// skip-branch kernels silently swallowed.
+// ---------------------------------------------------------------------------
+
+/// Bitwise slice equality, NaN-tolerant: any NaN payload matches any
+/// other (the op sequences are identical, but we don't pin payloads).
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan()),
+            "{what}: bit mismatch at {i}: {g:e} ({:#010x}) vs {w:e} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// Mostly-normal values salted with the IEEE hazard set.
+fn hazard_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| match rng.below(16) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::NAN,
+            3 => f32::INFINITY,
+            4 => f32::NEG_INFINITY,
+            _ => rng.normal(),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_blocked_gemm_bit_identical_to_scalar_oracle() {
+    use loraquant::tensor::{matmul_flat, scalar};
+    check("blocked matmul_flat == scalar oracle (bitwise)", |rng| {
+        let m = rng.range(1, 9);
+        let k = rng.range(1, 30);
+        let n = rng.range(1, 30);
+        let a = hazard_vec(rng, m * k);
+        let b = hazard_vec(rng, k * n);
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        matmul_flat(&a, m, k, &b, n, &mut got);
+        scalar::matmul_flat(&a, m, k, &b, n, &mut want);
+        assert_bits_eq(&got, &want, &format!("matmul_flat {m}x{k}x{n}"));
+    });
+}
+
+#[test]
+fn prop_dot_bit_identical_to_canonical_scalar_order() {
+    use loraquant::tensor::{dot, scalar};
+    check("simd dot8 == canonical scalar order (bitwise)", |rng| {
+        let len = rng.range(1, 67);
+        let a = hazard_vec(rng, len);
+        let b = hazard_vec(rng, len);
+        let got = dot(&a, &b);
+        let want = scalar::dot(&a, &b);
+        assert!(
+            got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+            "dot len {len}: {got:e} vs {want:e}"
+        );
+    });
+}
+
+#[test]
+fn prop_qdequant_gemms_bit_identical_across_bitwidths() {
+    use loraquant::tensor::{matmul_qdequant_acc, matmul_qdequant_bt_acc, scalar};
+    check_with(Config { cases: 32, seed: 6006 }, "qdequant acc/bt == scalar oracle", |rng| {
+        let rows = rng.range(1, 6);
+        let k = rng.range(1, 20);
+        // Odd n so 3-bit packed rows straddle byte boundaries.
+        let n = 2 * rng.below(10) + 1;
+        let group = [3, 8, 16][rng.below(3)];
+        let x = hazard_vec(rng, rows * k);
+        let alpha = rng.range_f32(-2.0, 2.0);
+        for bits in [1u32, 2, 3, 8] {
+            let q = rtn_quant(&rng.matrix(k, n, 1.0), bits, group);
+            let mut got = vec![0.5f32; rows * n]; // non-zero init: acc semantics
+            let mut want = got.clone();
+            matmul_qdequant_acc(&x, rows, k, &q, alpha, &mut got);
+            scalar::matmul_qdequant_acc(&x, rows, k, &q, alpha, &mut want);
+            assert_bits_eq(&got, &want, &format!("qdequant_acc bits={bits}"));
+
+            let qt = rtn_quant(&rng.matrix(n, k, 1.0), bits, group);
+            let mut got = vec![-0.5f32; rows * n];
+            let mut want = got.clone();
+            matmul_qdequant_bt_acc(&x, rows, k, &qt, alpha, &mut got);
+            scalar::matmul_qdequant_bt_acc(&x, rows, k, &qt, alpha, &mut want);
+            assert_bits_eq(&got, &want, &format!("qdequant_bt_acc bits={bits}"));
+        }
+        // The sign quantizer drives the same kernels through BinQuantized.
+        let qb = bin_quant(&rng.matrix(k, n, 1.0), group);
+        let mut got = vec![0.0f32; rows * n];
+        let mut want = got.clone();
+        matmul_qdequant_acc(&x, rows, k, &qb, alpha, &mut got);
+        scalar::matmul_qdequant_acc(&x, rows, k, &qb, alpha, &mut want);
+        assert_bits_eq(&got, &want, "qdequant_acc binary");
+
+        let qbt = bin_quant(&rng.matrix(n, k, 1.0), group);
+        let mut got = vec![0.0f32; rows * n];
+        let mut want = got.clone();
+        matmul_qdequant_bt_acc(&x, rows, k, &qbt, alpha, &mut got);
+        scalar::matmul_qdequant_bt_acc(&x, rows, k, &qbt, alpha, &mut want);
+        assert_bits_eq(&got, &want, "qdequant_bt_acc binary");
+    });
+}
+
+#[test]
+fn prop_lut_unpack_range_matches_full_unpack_at_any_offset() {
+    use loraquant::quant::unpack_codes_range;
+    check("LUT range unpack == full-unpack slice at odd starts", |rng| {
+        let bits = rng.range(1, 9) as u32;
+        let total = rng.range(1, 80);
+        let codes: Vec<u8> = (0..total).map(|_| rng.below(1usize << bits) as u8).collect();
+        let packed = pack_codes(&codes, bits);
+        let full = unpack_codes(&packed, bits, total);
+        assert_eq!(full, codes, "full roundtrip bits={bits} total={total}");
+        // Arbitrary (start, count) windows exercise the scalar prefix,
+        // the LUT-group body, and the scalar tail — including 3-bit
+        // groups that straddle byte boundaries at odd starts.
+        let start = rng.below(total);
+        let count = rng.below(total - start + 1);
+        let part = unpack_codes_range(&packed, bits, start, count);
+        assert_eq!(part, &full[start..start + count], "bits={bits} start={start} count={count}");
+    });
+}
+
+#[test]
+fn prop_pool_matmul_bit_identical_at_every_thread_count() {
+    use loraquant::scheduler::ComputePool;
+    use loraquant::tensor::scalar;
+    check_with(Config { cases: 16, seed: 909 }, "pool matmul == scalar at 1/2/4 threads", |rng| {
+        let m = rng.range(1, 10);
+        let k = rng.range(1, 24);
+        let n = rng.range(1, 24);
+        let a = hazard_vec(rng, m * k);
+        let b = hazard_vec(rng, k * n);
+        let mut want = vec![0.0f32; m * n];
+        scalar::matmul_flat(&a, m, k, &b, n, &mut want);
+        for t in [1usize, 2, 4] {
+            let pool = ComputePool::new(t);
+            let mut got = vec![0.0f32; m * n];
+            pool.matmul_flat(&a, m, k, &b, n, &mut got);
+            assert_bits_eq(&got, &want, &format!("pool threads={t} {m}x{k}x{n}"));
+        }
+    });
+}
