@@ -13,9 +13,15 @@
 //!    lane frees; lock-step holds it until its whole batch is done (a
 //!    batch's outputs become visible at batch completion).
 //!
-//! Both paths run at 1/2/4 compute threads over the persistent pool, so
-//! the rows double as the pool's scaling measurement (the scoped-spawn
-//! predecessor is gone from the engine; `bench_decode`'s
+//! 3. **Ragged load** (DESIGN.md §13) — one 4096-token prompt plus a
+//!    dozen short requests through 2 lanes, chunked prefill vs
+//!    monolithic admission at 1/2/4 threads: short-request TTFT p50/p99
+//!    collapses when the long prompt streams in 128-row chunks instead
+//!    of monopolizing the session for one huge admission pass.
+//!
+//! All paths run at 1/2/4 compute threads over the work-stealing
+//! executor, so the rows double as its scaling measurement (the
+//! scoped-spawn predecessor is gone from the engine; `bench_decode`'s
 //! `kernel_pool_vs_scoped` rows bench the pool against it directly).
 //!
 //! Writes `BENCH_scheduler.json` next to the other CI snapshots.
@@ -46,6 +52,10 @@ mod bench {
 
     const LANES: usize = 8;
     const REQUESTS: usize = 64;
+    /// Ragged-load section: long-prompt length, prefill chunk, short count.
+    const RAGGED_LONG: usize = 4096;
+    const RAGGED_CHUNK: usize = 128;
+    const RAGGED_SHORTS: usize = 12;
 
     /// Same shape as bench_decode: big enough that per-step work dominates,
     /// small enough that the whole bench is seconds.
@@ -131,7 +141,7 @@ mod bench {
             }
             let mut slot = None;
             let mut stepper = SessionStepper::new(&engine, &prog, &w, &mut slot);
-            let ccfg = ContinuousConfig { lanes: LANES, seq_len: cfg.seq_len, vocab: cfg.vocab };
+            let ccfg = ContinuousConfig { lanes: LANES, seq_len: cfg.seq_len, vocab: cfg.vocab, prefill_chunk: 0 };
             let mut ttfts = Vec::with_capacity(reqs.len());
             let mut tokens = 0u64;
             let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
@@ -228,7 +238,7 @@ mod bench {
         }
         let mut slot = None;
         let mut stepper = SessionStepper::new(&engine, &prog, &w_base, &mut slot);
-        let ccfg = ContinuousConfig { lanes: LANES, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let ccfg = ContinuousConfig { lanes: LANES, seq_len: cfg.seq_len, vocab: cfg.vocab, prefill_chunk: 0 };
         let mut tokens = 0u64;
         let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
             tokens += fin.tokens.len() as u64;
@@ -247,6 +257,90 @@ mod bench {
             stats.decode_steps,
             stats.admits,
         ));
+
+        // ---- ragged load: one 4k prompt + 12 short requests ----
+        // The chunked-prefill headline (DESIGN.md §13): with monolithic
+        // admission every short request's first token waits out the full
+        // 4096-row prefill; with chunking the long prompt streams in
+        // RAGGED_CHUNK-row slices and the shorts admit and decode in
+        // between. Short-request TTFT p50/p99 is the measurement.
+        let rcfg = ModelConfig { seq_len: RAGGED_LONG + 64, ..bench_config() };
+        write_synth_model(&dir, "ragged", &rcfg, &[2], 31)?;
+        let rbase = BaseWeights::load(dir.join("ragged"))?;
+        engine.load_model_fwd("ragged", 2, rbase.cfg.param_names().len())?;
+        let rw = engine
+            .upload_weights(&merge_adapter(&rbase, &std::collections::BTreeMap::new())?)?;
+        let mut rng = Rng::new(113);
+        let long_prompt: Vec<i32> =
+            (0..RAGGED_LONG).map(|_| 1 + rng.below(rcfg.vocab - 1) as i32).collect();
+        let shorts: Vec<Vec<i32>> = (0..RAGGED_SHORTS)
+            .map(|s| (0..4 + s % 5).map(|_| 1 + rng.below(rcfg.vocab - 1) as i32).collect())
+            .collect();
+        println!(
+            "\n# Ragged load: one {RAGGED_LONG}-token prompt + {RAGGED_SHORTS} short requests \
+             (2 lanes, chunk={RAGGED_CHUNK} vs monolithic)"
+        );
+        println!(
+            "{:>7} {:>12} {:>10} {:>14} {:>14} {:>9}",
+            "threads", "mode", "tok/s", "short_p50", "short_p99", "wall_ms"
+        );
+        for threads in [1usize, 2, 4] {
+            engine.set_compute_threads(threads);
+            for chunk in [0usize, RAGGED_CHUNK] {
+                let mut queue = AdmissionQueue::new();
+                let t0 = Instant::now();
+                queue.push(LaneRequest {
+                    id: 0,
+                    tenant: 0,
+                    prompt: long_prompt.clone(),
+                    budget: 4,
+                    adapter: None,
+                    enqueued: t0,
+                });
+                for (s, p) in shorts.iter().enumerate() {
+                    queue.push(LaneRequest {
+                        id: 1 + s as u64,
+                        tenant: 1 + s as u32,
+                        prompt: p.clone(),
+                        budget: 3,
+                        adapter: None,
+                        enqueued: t0,
+                    });
+                }
+                let mut slot = None;
+                let mut stepper = SessionStepper::new(&engine, "ragged/b2", &rw, &mut slot);
+                let ccfg = ContinuousConfig {
+                    lanes: 2,
+                    seq_len: rcfg.seq_len,
+                    vocab: rcfg.vocab,
+                    prefill_chunk: chunk,
+                };
+                let mut short_ttfts = Vec::with_capacity(RAGGED_SHORTS);
+                let mut tokens = 0u64;
+                run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
+                    if fin.id > 0 {
+                        short_ttfts.push(fin.ttft);
+                    }
+                    tokens += fin.tokens.len() as u64;
+                })?;
+                let wall = t0.elapsed();
+                drop(stepper);
+                let (p50, p99) = quantiles(short_ttfts);
+                let tps = tokens as f64 / wall.as_secs_f64();
+                let mode = if chunk == 0 { "ragged_mono" } else { "ragged_chunked" };
+                println!(
+                    "{threads:>7} {mode:>12} {tps:>10.0} {:>14.1?} {:>14.1?} {:>9.1}",
+                    p50,
+                    p99,
+                    wall.as_secs_f64() * 1e3
+                );
+                rows.push(format!(
+                    r#"{{"mode":"{mode}","threads":{threads},"chunk":{chunk},"tok_per_s":{tps:.0},"short_ttft_p50_us":{},"short_ttft_p99_us":{},"tokens":{tokens}}}"#,
+                    p50.as_micros(),
+                    p99.as_micros(),
+                ));
+            }
+        }
 
         let json =
             format!("{{\"bench\":\"scheduler\",\"lanes\":{LANES},\"rows\":[{}]}}\n", rows.join(","));

@@ -102,6 +102,10 @@ pub(crate) struct WorkerConfig {
     /// Continuous-batching decode (false = per-batch lock-step; always
     /// false under `--features pjrt`).
     pub continuous: bool,
+    /// Prompt-chunk size for incremental prefill inside continuous
+    /// decode groups (0 = monolithic admission; see
+    /// `scheduler::ContinuousConfig::prefill_chunk`).
+    pub prefill_chunk: usize,
     /// Time source: real in production, virtual under the scenario
     /// simulator (see `crate::clock`).
     pub clock: Clock,
@@ -266,6 +270,9 @@ struct Worker {
     /// Continuous-batching decode (always false under pjrt).
     #[cfg_attr(feature = "pjrt", allow(dead_code))]
     continuous: bool,
+    /// Prompt-chunk size for incremental prefill (0 = monolithic).
+    #[cfg_attr(feature = "pjrt", allow(dead_code))]
+    prefill_chunk: usize,
     clock: Clock,
     /// Unmerged base weights, resident once per worker — the substrate the
     /// factor-form path decodes over (None under `Merged`).
@@ -326,6 +333,7 @@ impl Worker {
             self_tx,
             strategy: cfg.strategy,
             continuous: cfg.continuous,
+            prefill_chunk: cfg.prefill_chunk,
             clock: cfg.clock,
             base_weights,
             merge_seq: 0,
@@ -437,8 +445,14 @@ impl Worker {
     #[cfg(not(feature = "pjrt"))]
     fn on_batches_continuous(&mut self, batches: Vec<Batch<Payload>>) {
         enum Group {
-            /// Heterogeneous factor-form group (mixed tenants).
-            Factor(Vec<Queued>),
+            /// Heterogeneous factor-form group (mixed tenants). The `u64`
+            /// is how many metric batches the group represents: factor-form
+            /// lanes are disjoint, so cold auto batches coalesce into one
+            /// decode session instead of running back to back (no idle
+            /// lanes between them), but each still counted its own cache
+            /// miss — `finish_group` books `counted` batches to keep
+            /// `hits + misses == batches` intact.
+            Factor(Vec<Queued>, u64),
             /// One adapter's merged-weight group (may span batches).
             Merged(AdapterId, Vec<Queued>),
         }
@@ -447,13 +461,14 @@ impl Worker {
             match (self.strategy, batch.adapter) {
                 (MergeStrategy::Factor, _) => {
                     // pure factor serving: every batch of the drain joins
-                    // one heterogeneous session
+                    // one heterogeneous session, counted as one batch per
+                    // drain (no cache lookups on this path)
                     match groups.iter_mut().find_map(|g| match g {
-                        Group::Factor(reqs) => Some(reqs),
+                        Group::Factor(reqs, _) => Some(reqs),
                         Group::Merged(..) => None,
                     }) {
                         Some(reqs) => reqs.extend(batch.requests),
-                        None => groups.push(Group::Factor(batch.requests)),
+                        None => groups.push(Group::Factor(batch.requests, 1)),
                     }
                 }
                 (MergeStrategy::Merged, Some(id)) => {
@@ -497,9 +512,11 @@ impl Worker {
                         groups.push(Group::Merged(id, batch.requests));
                     } else {
                         // no cold cliff: factor-form now, background merge
-                        // warms the cache. Each cold batch keeps its own
-                        // group so the counted miss above stays 1:1 with
-                        // decode groups.
+                        // warms the cache. Factor lanes are disjoint, so
+                        // every cold batch of the drain shares one decode
+                        // session (no idle workers between back-to-back
+                        // groups); the group's counter remembers how many
+                        // counted misses it absorbed.
                         if !self.inflight.contains_key(&id) {
                             self.inflight.insert(
                                 id,
@@ -511,7 +528,16 @@ impl Worker {
                             );
                             self.submit_merge(id);
                         }
-                        groups.push(Group::Factor(batch.requests));
+                        match groups.iter_mut().find_map(|g| match g {
+                            Group::Factor(reqs, counted) => Some((reqs, counted)),
+                            Group::Merged(..) => None,
+                        }) {
+                            Some((reqs, counted)) => {
+                                reqs.extend(batch.requests);
+                                *counted += 1;
+                            }
+                            None => groups.push(Group::Factor(batch.requests, 1)),
+                        }
                     }
                 }
                 (_, None) => {
@@ -525,7 +551,7 @@ impl Worker {
         }
         for group in groups {
             match group {
-                Group::Factor(requests) => self.run_group_factor(requests),
+                Group::Factor(requests, counted) => self.run_group_factor(requests, counted),
                 Group::Merged(id, requests) => self.run_group_merged(id, requests),
             }
         }
@@ -788,14 +814,16 @@ impl Worker {
     #[cfg(not(feature = "pjrt"))]
     fn run_group_merged(&mut self, adapter: AdapterId, requests: Vec<Queued>) {
         let outcome = self.decode_group(Some(adapter), &requests, &[]);
-        self.finish_group(requests, outcome, false);
+        self.finish_group(requests, outcome, false, 1);
     }
 
     /// Decode one heterogeneous factor-form group: per-request adapters
     /// resolved from the registry (a vanished adapter fails only its own
     /// requests), then one continuous session over the base weights.
+    /// `counted` is how many metric batches the group absorbed (see
+    /// `on_batches_continuous`).
     #[cfg(not(feature = "pjrt"))]
-    fn run_group_factor(&mut self, requests: Vec<Queued>) {
+    fn run_group_factor(&mut self, requests: Vec<Queued>, counted: u64) {
         let arcs: Vec<Option<Arc<StoredAdapter>>> = self.shared.with_registry(|r| {
             requests.iter().map(|q| r.get(q.adapter).map(|e| e.adapter.clone())).collect()
         });
@@ -816,7 +844,7 @@ impl Worker {
             return;
         }
         let outcome = self.decode_group(None, &valid, &adapters);
-        self.finish_group(valid, outcome, true);
+        self.finish_group(valid, outcome, true, counted);
     }
 
     /// Run one decode group through `scheduler::run_continuous` over the
@@ -865,7 +893,8 @@ impl Worker {
         }
         let mut outputs: Vec<Option<Vec<i32>>> = vec![None; requests.len()];
         let mut ttfts: Vec<Duration> = Vec::with_capacity(requests.len());
-        let ccfg = ContinuousConfig { lanes, seq_len: t_len, vocab };
+        let ccfg =
+            ContinuousConfig { lanes, seq_len: t_len, vocab, prefill_chunk: self.prefill_chunk };
         let t_exec = self.clock.now();
         let run = {
             let mut stepper = SessionStepper::new(&self.engine, prog, weights, &mut self.session);
@@ -900,12 +929,16 @@ impl Worker {
     }
 
     /// Respond + account for one decoded (or failed) continuous group.
+    /// `counted` is how many metric batches the group represents — 1 for
+    /// merged groups, possibly more for factor groups that coalesced
+    /// several counted cache misses into one session.
     #[cfg(not(feature = "pjrt"))]
     fn finish_group(
         &mut self,
         requests: Vec<Queued>,
         outcome: anyhow::Result<Vec<Option<Vec<i32>>>>,
         factor: bool,
+        counted: u64,
     ) {
         match outcome {
             Ok(outputs) => {
@@ -931,9 +964,9 @@ impl Worker {
                         }
                     }
                 }
-                self.metrics.batches += 1;
+                self.metrics.batches += counted;
                 if factor {
-                    self.metrics.factor_batches += 1;
+                    self.metrics.factor_batches += counted;
                 }
             }
             Err(e) => {

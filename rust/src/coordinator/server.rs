@@ -102,6 +102,13 @@ pub struct CoordinatorConfig {
     /// the only mode under `--features pjrt`). Token outputs are
     /// identical either way.
     pub continuous: bool,
+    /// Prompt-chunk size for incremental prefill inside continuous
+    /// decode groups (DESIGN.md §13): long prompts prefill `prefill_chunk`
+    /// tokens at a time, letting the scheduler retire/admit/step other
+    /// lanes between chunks. `0` (the default) keeps monolithic one-pass
+    /// admission — the lock-step-equivalent oracle path. Token outputs
+    /// are bit-identical at every chunk size.
+    pub prefill_chunk: usize,
     /// Test/ops instrumentation called at the start of every merge.
     pub merge_hook: Option<MergeHook>,
     /// Time source for every deadline, latency and park decision in the
@@ -123,6 +130,7 @@ impl CoordinatorConfig {
             compute_threads: 1,
             merge_strategy: MergeStrategy::default(),
             continuous: true,
+            prefill_chunk: 0,
             merge_hook: None,
             clock: Clock::real(),
         }
@@ -156,6 +164,13 @@ impl CoordinatorConfig {
     /// = per-batch lock-step decode).
     pub fn with_continuous(mut self, continuous: bool) -> Self {
         self.continuous = continuous;
+        self
+    }
+
+    /// Builder sugar: set the prompt-chunk size for incremental prefill
+    /// (`0` = monolithic admission).
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.prefill_chunk = chunk;
         self
     }
 
@@ -258,6 +273,7 @@ impl Coordinator {
             // PJRT programs bake full-sequence shapes: no warm-session
             // admission, so its workers always decode lock-step
             continuous: cfg.continuous && cfg!(not(feature = "pjrt")),
+            prefill_chunk: cfg.prefill_chunk,
             clock: cfg.clock.clone(),
         };
 

@@ -86,6 +86,29 @@ pub trait DecodeStep {
         bail!("this stepper does not support continuous admission")
     }
 
+    /// Admit one **chunk** of a long prompt into a retired lane — the
+    /// incremental form of [`DecodeStep::admit`] (DESIGN.md §13). The
+    /// prompt occupying lane `lane` is `seqs[lane][..]`'s prompt prefix;
+    /// this call consumes its tokens at positions `start .. start + len`.
+    /// `adapter` is bound at the first chunk (`start == 0`) for the
+    /// lane's whole occupancy. Returns the session-wide logits buffer;
+    /// the lane's row is filled only by the `last` chunk, which also
+    /// brings the lane live for stepping. Between its first and last
+    /// chunks the lane must be treated as neither free nor steppable.
+    #[allow(clippy::too_many_arguments)]
+    fn admit_chunk(
+        &mut self,
+        seqs: &[Vec<i32>],
+        lane: usize,
+        start: usize,
+        len: usize,
+        last: bool,
+        adapter: Option<Arc<dyn FactorSource>>,
+    ) -> anyhow::Result<&[f32]> {
+        let _ = (seqs, lane, start, len, last, adapter);
+        bail!("this stepper does not support chunked prefill")
+    }
+
     /// A lane the decode loop finished (EOS / budget / sequence full):
     /// free its slot so a later [`DecodeStep::admit`] can reuse it.
     fn retire(&mut self, lane: usize) {

@@ -7,15 +7,19 @@
 //! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12 \
 //!                    [--workers 4] [--merge-workers 2] [--compute-threads 2] \
 //!                    [--buckets 1,8] [--prefetch] [--lockstep] \
-//!                    [--merge-strategy merged|factor|auto]
+//!                    [--prefill-chunk N] [--merge-strategy merged|factor|auto]
 //! loraquant serve-sim --requests 200 --rate 200 --adapters 4 --merge-strategy all \
 //!                    [--workers 4] [--compute-threads 2] [--zipf 1.1] [--seed 7] \
 //!                    [--slow-merge-ms 50] [--churn] [--prefetch] [--log] \
-//!                    [--lockstep] [--golden PATH] [--model NAME]
+//!                    [--lockstep] [--prefill-chunk N] [--golden PATH] [--model NAME]
 //!
 //! `--lockstep` disables the continuous-batching scheduler (DESIGN.md
 //! §11) and decodes batch by batch — the comparison baseline for the
-//! scheduler's decode-step and TTFT numbers.
+//! scheduler's decode-step and TTFT numbers. `--prefill-chunk N` splits
+//! long-prompt prefill into N-token chunks inside the continuous
+//! scheduler (DESIGN.md §13) so short requests are not blocked behind a
+//! long prompt; 0 (the default) keeps monolithic admission. Tokens are
+//! bit-identical at every chunk size.
 //! loraquant info     --model tiny-llama-s
 //! ```
 //!
@@ -155,6 +159,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.max_wait = Duration::from_millis(args.usize_or("max-wait-ms", 10)? as u64);
     cfg.merge_strategy = args.str_or("merge-strategy", "merged").parse()?;
     cfg.continuous = !args.has_flag("lockstep");
+    cfg.prefill_chunk = args.usize_or("prefill-chunk", 0)?;
     let workers = cfg.workers;
     let strategy = cfg.merge_strategy;
     let (coord, join) = Coordinator::start(cfg)?;
@@ -296,6 +301,7 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             merge_workers: args.usize_or("merge-workers", 1)?,
             compute_threads: args.usize_or("compute-threads", 1)?,
             continuous: !args.has_flag("lockstep"),
+            prefill_chunk: args.usize_or("prefill-chunk", 0)?,
             buckets: args.usize_list_or("buckets", &[1, 8])?,
             max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 5)? as u64),
             cache_budget_bytes: args.usize_or("cache-kb", 64 << 10)? << 10,

@@ -49,6 +49,17 @@ impl KvCache {
         (self.k.len() + self.v.len()) * 4
     }
 
+    /// The full key buffer (`[n_layers][bsz][cap][d]`, row-major) — for
+    /// bit-exact equivalence tests (chunked vs monolithic prefill).
+    pub fn keys(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// The full value buffer, same layout as [`KvCache::keys`].
+    pub fn values(&self) -> &[f32] {
+        &self.v
+    }
+
     #[inline]
     fn lane_base(&self, layer: usize, lane: usize) -> usize {
         (layer * self.bsz + lane) * self.cap * self.d
@@ -147,6 +158,12 @@ pub struct DecodeState {
     /// Tokens consumed per lane == the lane's next cache write position.
     pub(crate) lens: Vec<usize>,
     pub(crate) retired: Vec<bool>,
+    /// Lanes mid-way through a chunked prefill
+    /// ([`crate::runtime::Engine::prefill_chunk`]): the prompt prefix up
+    /// to `lens[lane]` is cached but the lane has produced no logits yet,
+    /// so it must not be stepped or re-admitted until its final chunk
+    /// lands.
+    pub(crate) prefilling: Vec<bool>,
     /// Step row map `(lane, position)` — rebuilt in place every step.
     pub(crate) map: Vec<(usize, usize)>,
     /// Per-lane step logits (`lanes × vocab`; retired rows zero).
@@ -177,6 +194,7 @@ impl DecodeState {
             idx,
             kv: KvCache::new(cfg.n_layers, bsz, cfg.seq_len, cfg.d_model),
             retired: vec![false; bsz],
+            prefilling: vec![false; bsz],
             map: Vec::with_capacity(bsz),
             out: vec![0.0; bsz * cfg.vocab],
             scratch: Scratch::default(),
@@ -205,6 +223,23 @@ impl DecodeState {
         self.retired[lane]
     }
 
+    /// Whether `lane` is mid-way through a chunked prefill (prefix
+    /// cached, no logits yet — not steppable until the final chunk).
+    pub fn is_prefilling(&self, lane: usize) -> bool {
+        self.prefilling[lane]
+    }
+
+    /// The lane's last produced logits row (`vocab` wide; zeros for a
+    /// retired or still-prefilling lane). For equivalence tests.
+    pub fn lane_logits(&self, lane: usize) -> &[f32] {
+        &self.out[lane * self.cfg.vocab..(lane + 1) * self.cfg.vocab]
+    }
+
+    /// The session's KV cache — for bit-exact equivalence tests.
+    pub fn kv_cache(&self) -> &KvCache {
+        &self.kv
+    }
+
     /// Permanently drop `lane` from every subsequent step: its rows are
     /// no longer embedded, projected or attended, and its logits row is
     /// zero. Used for EOS/budget-exhausted lanes so finished requests
@@ -225,6 +260,7 @@ impl DecodeState {
     /// attention window only covers positions it wrote itself).
     pub fn reset(&mut self) {
         self.retired.iter_mut().for_each(|r| *r = true);
+        self.prefilling.iter_mut().for_each(|p| *p = false);
         self.lens.iter_mut().for_each(|l| *l = 0);
         self.out.fill(0.0);
         self.sources.iter_mut().for_each(|s| *s = None);
@@ -309,7 +345,9 @@ mod tests {
         let cfg = crate::testutil::synth_model_config();
         let mut st = DecodeState::new("m/b2", cfg, 1, vec![3, 5], ParamIndex::new(&cfg));
         st.out.resize(2 * cfg.vocab, 1.0);
+        st.prefilling[1] = true;
         st.reset();
+        assert!(!st.is_prefilling(1), "reset clears in-flight chunked prefills");
         assert_eq!(st.active_lanes(), 0);
         assert_eq!((st.lane_len(0), st.lane_len(1)), (0, 0));
         assert!(st.is_retired(0) && st.is_retired(1));

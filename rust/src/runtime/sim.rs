@@ -534,6 +534,9 @@ impl Engine {
             if !state.retired[l] {
                 bail!("admit: lane {l} is still live");
             }
+            if state.prefilling[l] {
+                bail!("admit: lane {l} has a chunked prefill in flight");
+            }
             if lanes[..i].contains(&l) {
                 bail!("admit: lane {l} admitted twice in one call");
             }
@@ -598,6 +601,142 @@ impl Engine {
         for (&l, prompt) in lanes.iter().zip(prompts) {
             state.retired[l] = false;
             state.lens[l] = prompt.len();
+        }
+        Ok(&state.out)
+    }
+
+    /// Prefill one **chunk** of a prompt into lane `lane` — the
+    /// incremental form of [`Engine::admit`] that lets the continuous
+    /// scheduler interleave decode steps of other lanes while a long
+    /// prompt streams into the cache (DESIGN.md §13).
+    ///
+    /// `chunk` holds the prompt tokens at absolute positions
+    /// `start .. start + chunk.len()`. The first chunk (`start == 0`)
+    /// claims a retired lane and marks it *prefilling*: the lane is
+    /// excluded from steps and admissions until its `last` chunk lands.
+    /// Continuation chunks must arrive in order (`start` equals the
+    /// lane's consumed-token count). The `last` chunk leaves the lane's
+    /// next-token logits in the session output buffer (row `lane`;
+    /// earlier chunks leave it zero) and brings the lane live, exactly
+    /// where a monolithic admission would.
+    ///
+    /// Bit-identity with the monolithic path, at any chunk size and
+    /// thread count: every non-attention kernel is row-local, and the
+    /// attention row at position `p` reads only lane `lane`'s cached
+    /// K/V columns `0..=p` — values published either by this very pass
+    /// (positions inside the chunk) or by earlier chunks, and identical
+    /// either way because each cache row is written exactly once, by the
+    /// same row-local projection over the same inputs. Chunking therefore
+    /// changes *when* rows are computed, never *what* any row reads.
+    ///
+    /// `adapters` follows [`Engine::decode_step`] precedence (explicit
+    /// per-lane views over the whole session, else bound sources). The
+    /// caller must pass the same adapter for every chunk of one prompt —
+    /// bindings via [`DecodeState::bind_adapter`] make that automatic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_chunk<'s>(
+        &self,
+        state: &'s mut DecodeState,
+        lane: usize,
+        chunk: &[i32],
+        start: usize,
+        last: bool,
+        weights: &DeviceWeights,
+        adapters: &[Option<&QFactors<'_>>],
+    ) -> anyhow::Result<&'s [f32]> {
+        let cfg = state.cfg;
+        if 1 + weights.tensors.len() != state.arity {
+            bail!(
+                "program {} expects {} inputs, got {}",
+                state.prog,
+                state.arity,
+                1 + weights.tensors.len()
+            );
+        }
+        let bsz = state.lanes();
+        if lane >= bsz {
+            bail!("prefill_chunk: lane {lane} out of range 0..{bsz}");
+        }
+        if !adapters.is_empty() {
+            if adapters.len() != bsz {
+                bail!("adapter list has {} entries for a session of {bsz}", adapters.len());
+            }
+            validate_adapter_shapes(&cfg, adapters)?;
+        }
+        let cap = state.kv.capacity();
+        if chunk.is_empty() || start + chunk.len() > cap {
+            bail!(
+                "prefill_chunk: lane {lane} rows {start}..{} out of range 1..={cap}",
+                start + chunk.len()
+            );
+        }
+        if start == 0 {
+            if !state.retired[lane] {
+                bail!("prefill_chunk: lane {lane} is still live");
+            }
+            if state.prefilling[lane] {
+                bail!("prefill_chunk: lane {lane} already has a chunked prefill in flight");
+            }
+        } else {
+            if !state.prefilling[lane] {
+                bail!("prefill_chunk: lane {lane} has no chunked prefill in flight");
+            }
+            if start != state.lens[lane] {
+                bail!(
+                    "prefill_chunk: lane {lane} chunk starts at {start}, expected {}",
+                    state.lens[lane]
+                );
+            }
+        }
+        for &tok in chunk.iter() {
+            if tok < 0 || tok as usize >= cfg.vocab {
+                bail!("token {tok} out of vocab range 0..{}", cfg.vocab);
+            }
+        }
+        state.idx.validate(&weights.tensors)?;
+        let vo = cfg.vocab;
+        state.out.resize(bsz * vo, 0.0);
+        state.out[lane * vo..(lane + 1) * vo].fill(0.0);
+        state.map.clear();
+        for p in start..start + chunk.len() {
+            state.map.push((lane, p));
+        }
+        let n = state.map.len();
+        state.scratch.ensure(n, &cfg, self.compute_threads());
+        let embed = pget(&weights.tensors, state.idx.embed)?;
+        let pos_tab = pget(&weights.tensors, state.idx.pos)?;
+        let d = cfg.d_model;
+        for (i, &tok) in chunk.iter().enumerate() {
+            embed_row(
+                embed,
+                pos_tab,
+                tok as usize,
+                start + i,
+                d,
+                &mut state.scratch.x[i * d..(i + 1) * d],
+            );
+        }
+        if start == 0 {
+            state.lens[lane] = 0;
+            state.prefilling[lane] = true;
+        }
+        forward_core(
+            &cfg,
+            &weights.tensors,
+            &state.idx,
+            &Rows::Step { map: &state.map },
+            &step_adapters(&state.sources, state.bound_sources, adapters),
+            &mut state.kv,
+            &mut state.scratch,
+            self.pool.as_ref(),
+        )?;
+        state.lens[lane] = start + n;
+        if last {
+            // the lane's next-token logits = its final prompt row
+            state.out[lane * vo..(lane + 1) * vo]
+                .copy_from_slice(&state.scratch.logits[(n - 1) * vo..n * vo]);
+            state.prefilling[lane] = false;
+            state.retired[lane] = false;
         }
         Ok(&state.out)
     }

@@ -173,6 +173,7 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
         .with_buckets(spec.buckets.clone())
         .with_merge_strategy(spec.strategy)
         .with_continuous(spec.continuous)
+        .with_prefill_chunk(spec.prefill_chunk)
         .with_clock(clock.clone());
     cfg.max_wait = spec.max_wait;
     cfg.cache_budget_bytes = spec.cache_budget_bytes;

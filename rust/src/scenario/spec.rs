@@ -84,6 +84,11 @@ pub struct ScenarioSpec {
     /// only the decode-step count and TTFT change, which is exactly what
     /// the continuous-vs-lockstep acceptance scenario compares.
     pub continuous: bool,
+    /// Prompt-chunk size for incremental prefill inside continuous decode
+    /// groups (DESIGN.md §13). `0` (the default) pins monolithic one-pass
+    /// admission; any value > 0 produces bit-identical tokens while
+    /// letting short requests start decoding under a long prompt.
+    pub prefill_chunk: usize,
     pub buckets: Vec<usize>,
     pub max_wait: Duration,
     pub cache_budget_bytes: usize,
@@ -122,6 +127,7 @@ impl Default for ScenarioSpec {
             merge_workers: 1,
             compute_threads: 1,
             continuous: true,
+            prefill_chunk: 0,
             // the buckets aot.py actually exports, so specs run unchanged
             // against real PJRT artifacts
             buckets: vec![1, 8],

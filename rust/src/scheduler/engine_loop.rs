@@ -1,7 +1,7 @@
-//! The continuous-batching step loop (DESIGN.md §11).
+//! The continuous-batching step loop (DESIGN.md §11, §13).
 //!
-//! [`run_continuous`] owns the retire → admit → step cycle over one
-//! decode session:
+//! [`run_continuous`] owns the retire → admit → chunk → step cycle over
+//! one decode session:
 //!
 //! 1. **retire** — lanes that hit EOS, their budget, or the end of the
 //!    sequence are retired the moment the finishing token is consumed
@@ -10,11 +10,19 @@
 //!    which picks requests in token-budget-fair order; all admissions of
 //!    one cycle share a single prefill-shaped forward over their prompt
 //!    rows ([`DecodeStep::admit`]), and each admitted lane's first token
-//!    comes straight out of that pass;
+//!    comes straight out of that pass. With a non-zero
+//!    [`ContinuousConfig::prefill_chunk`], a prompt longer than the
+//!    chunk size claims its lane but **streams in chunked**: each cycle
+//!    advances every chunking lane by one fixed-size prompt slice
+//!    ([`DecodeStep::admit_chunk`]) instead of paying the whole prefill
+//!    up front, so short requests keep admitting and stepping while a
+//!    long prompt trickles into the cache — the S-LoRA-style unification
+//!    of prefill and decode into one schedulable work stream;
 //! 3. **step** — one incremental forward over every live lane
-//!    ([`DecodeStep::step`]); the step pass only runs once the queue is
-//!    drained or every lane is occupied, so each step carries the
-//!    maximum occupancy available.
+//!    ([`DecodeStep::step`]); mid-chunk lanes are excluded (they have no
+//!    next token yet). The step pass only runs once the queue is drained
+//!    or every lane is occupied, so each step carries the maximum
+//!    occupancy available.
 //!
 //! Unlike the lock-step protocol (`eval::decode::decode_lockstep`),
 //! a finished lane never waits for the slowest lane of its batch: its
@@ -49,6 +57,13 @@ pub struct ContinuousConfig {
     pub lanes: usize,
     pub seq_len: usize,
     pub vocab: usize,
+    /// Prompt-chunk size for incremental prefill. `0` = monolithic
+    /// admission (the oracle path, byte-identical to the pre-chunking
+    /// loop); otherwise prompts longer than this stream in
+    /// `prefill_chunk`-token slices, one slice per loop cycle, while the
+    /// other lanes keep admitting and stepping. Token outputs are
+    /// bit-identical at every chunk size (DESIGN.md §13).
+    pub prefill_chunk: usize,
 }
 
 /// One request's outcome.
@@ -62,6 +77,12 @@ pub struct FinishedRequest {
     /// Enqueue → first consumed token (admission wait + prefill; zero
     /// virtual time under the scenario clock).
     pub ttft: Duration,
+    /// [`LoopStats::work_rows`] at the moment the first token was
+    /// consumed — a deterministic, clock-independent TTFT proxy (forward
+    /// rows the session computed before this request produced output).
+    /// Under the virtual clock compute is zero-time, so this is what the
+    /// chunked-prefill TTFT assertions compare.
+    pub first_token_work: u64,
 }
 
 /// Counters of one [`run_continuous`] call.
@@ -78,6 +99,10 @@ pub struct LoopStats {
     pub tokens: u64,
     /// High-water mark of concurrently occupied lanes.
     pub peak_lanes: usize,
+    /// Cumulative forward rows (prompt rows of every admission pass or
+    /// prefill chunk + one row per active lane per step) — the loop's
+    /// deterministic work clock; see [`FinishedRequest::first_token_work`].
+    pub work_rows: u64,
 }
 
 /// A lane's occupant.
@@ -88,6 +113,16 @@ struct LaneState {
     generated: Vec<i32>,
     enqueued: Instant,
     ttft: Option<Duration>,
+    /// `work_rows` when the first token was consumed.
+    first_token_work: Option<u64>,
+}
+
+/// In-flight chunked prefill of a lane's prompt.
+struct Chunking {
+    /// Next prompt position to feed (previous chunks cover `0..next`).
+    next: usize,
+    /// Adapter handed to the stepper with the first chunk, then taken.
+    adapter: Option<Arc<dyn FactorSource>>,
 }
 
 /// Consume one next-token logits row for `lane` through the **shared**
@@ -121,6 +156,7 @@ fn consume_row(
     queue.charge(ls.tenant, 1);
     if ls.ttft.is_none() {
         ls.ttft = Some(clock.now().duration_since(ls.enqueued));
+        ls.first_token_work = Some(stats.work_rows);
     }
     if done {
         let ls = occ[lane].take().expect("lane occupied");
@@ -133,6 +169,7 @@ fn consume_row(
             tenant: ls.tenant,
             tokens: ls.generated,
             ttft: ls.ttft.unwrap_or_default(),
+            first_token_work: ls.first_token_work.unwrap_or_default(),
         });
     }
 }
@@ -153,6 +190,7 @@ pub fn run_continuous(
     let mut seqs = vec![vec![TOKENS::PAD; cfg.seq_len]; lanes];
     let mut pos = vec![0usize; lanes];
     let mut occ: Vec<Option<LaneState>> = (0..lanes).map(|_| None).collect();
+    let mut chunking: Vec<Option<Chunking>> = (0..lanes).map(|_| None).collect();
     let mut stats = LoopStats::default();
     // reused logits copy: `consume_row` needs the stepper mutably (to
     // retire), so the borrowed logits are staged here — one allocation
@@ -185,6 +223,7 @@ pub fn run_continuous(
                         tenant: r.tenant,
                         tokens: Vec::new(),
                         ttft: clock.now().duration_since(r.enqueued),
+                        first_token_work: stats.work_rows,
                     });
                     continue;
                 }
@@ -200,9 +239,16 @@ pub fn run_continuous(
                 generated: Vec::new(),
                 enqueued: req.enqueued,
                 ttft: None,
+                first_token_work: None,
             });
-            admitted.push(l);
-            bound.push(req.adapter);
+            if cfg.prefill_chunk > 0 && req.prompt.len() > cfg.prefill_chunk {
+                // long prompt: claim the lane now, stream the prefill in
+                // `prefill_chunk`-row slices across the coming cycles
+                chunking[l] = Some(Chunking { next: 0, adapter: req.adapter });
+            } else {
+                admitted.push(l);
+                bound.push(req.adapter);
+            }
         }
         if !admitted.is_empty() {
             let logits = stepper.admit(&seqs, &pos, &admitted, &bound)?;
@@ -216,6 +262,7 @@ pub fn run_continuous(
             out.clear();
             out.extend_from_slice(logits);
             stats.admits += 1;
+            stats.work_rows += admitted.iter().map(|&l| pos[l] as u64).sum::<u64>();
             for &l in &admitted {
                 consume_row(
                     l,
@@ -232,18 +279,63 @@ pub fn run_continuous(
                 );
             }
         }
+        // ---- advance chunked prefills: one slice per lane per cycle ----
+        for l in 0..lanes {
+            let Some(ch) = chunking[l].as_mut() else { continue };
+            let plen = pos[l]; // full prompt length (no tokens consumed yet)
+            let start = ch.next;
+            let len = cfg.prefill_chunk.min(plen - start);
+            let last = start + len == plen;
+            let adapter = if start == 0 { ch.adapter.take() } else { None };
+            let logits = stepper.admit_chunk(&seqs, l, start, len, last, adapter)?;
+            if logits.len() != lanes * cfg.vocab {
+                bail!(
+                    "run_continuous: admit_chunk returned {} logits, expected {}",
+                    logits.len(),
+                    lanes * cfg.vocab
+                );
+            }
+            stats.admits += 1; // each chunk is one admission forward pass
+            stats.work_rows += len as u64;
+            if last {
+                out.clear();
+                out.extend_from_slice(logits);
+                chunking[l] = None;
+                consume_row(
+                    l,
+                    &out[l * cfg.vocab..(l + 1) * cfg.vocab],
+                    &mut seqs,
+                    &mut pos,
+                    &mut occ,
+                    queue,
+                    stepper,
+                    clock,
+                    cfg.seq_len,
+                    &mut stats,
+                    &mut on_done,
+                );
+            } else {
+                ch.next = start + len;
+            }
+        }
         stats.peak_lanes = stats.peak_lanes.max(occ.iter().filter(|o| o.is_some()).count());
 
-        let active: Vec<bool> = occ.iter().map(Option::is_some).collect();
-        if !active.iter().any(|&a| a) {
+        // steppable = occupied and not mid-chunk (a chunking lane has no
+        // next token yet)
+        let active: Vec<bool> =
+            occ.iter().enumerate().map(|(l, o)| o.is_some() && chunking[l].is_none()).collect();
+        if occ.iter().all(Option::is_none) {
             if queue.is_empty() {
                 break;
             }
             continue; // everything finished at admission; admit more
         }
+        if !active.iter().any(|&a| a) {
+            continue; // only mid-chunk lanes live: keep their slices coming
+        }
         // a lane freed during admission-consume: top occupancy back up
         // before paying a step
-        if active.iter().any(|&a| !a) && !queue.is_empty() {
+        if occ.iter().any(Option::is_none) && !queue.is_empty() {
             continue;
         }
         // ---- step every live lane ----
@@ -258,6 +350,7 @@ pub fn run_continuous(
         out.clear();
         out.extend_from_slice(logits);
         stats.decode_steps += 1;
+        stats.work_rows += active.iter().filter(|&&a| a).count() as u64;
         for (l, &a) in active.iter().enumerate() {
             if !a {
                 continue;
@@ -355,6 +448,24 @@ impl DecodeStep for SessionStepper<'_> {
         self.engine.admit(state, lanes, &prompts, self.weights, &[])
     }
 
+    fn admit_chunk(
+        &mut self,
+        seqs: &[Vec<i32>],
+        lane: usize,
+        start: usize,
+        len: usize,
+        last: bool,
+        adapter: Option<Arc<dyn FactorSource>>,
+    ) -> anyhow::Result<&[f32]> {
+        let state = self.slot.as_mut().context("admit_chunk before begin")?;
+        if start == 0 {
+            // bind (or clear a stale binding) once, at the first chunk
+            state.bind_adapter(lane, adapter)?;
+        }
+        let chunk = &seqs[lane][start..start + len];
+        self.engine.prefill_chunk(state, lane, chunk, start, last, self.weights, &[])
+    }
+
     fn step(
         &mut self,
         seqs: &[Vec<i32>],
@@ -439,7 +550,7 @@ mod tests {
         }
         let mut slot = None;
         let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
-        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab, prefill_chunk: 0 };
         let mut got: Vec<Option<Vec<i32>>> = vec![None; prompts.len()];
         let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
             got[fin.id as usize] = Some(fin.tokens);
@@ -462,7 +573,7 @@ mod tests {
     fn session_slot_is_reused_across_groups() {
         let (dir, cfg, engine, w) = fixture("reuse");
         let clock = Clock::real();
-        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab, prefill_chunk: 0 };
         let mut slot = None;
         for group in 0..3u64 {
             let mut queue = AdmissionQueue::new();
@@ -488,7 +599,7 @@ mod tests {
         queue.push(req(1, 0, vec![1; cfg.seq_len - 1], 0));
         let mut slot = None;
         let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
-        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let ccfg = ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab, prefill_chunk: 0 };
         let mut done = Vec::new();
         let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
             done.push((fin.id, fin.tokens.clone()));
@@ -512,12 +623,72 @@ mod tests {
         }
         let mut slot = None;
         let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
-        let ccfg = ContinuousConfig { lanes: 1, seq_len: cfg.seq_len, vocab: cfg.vocab };
+        let ccfg = ContinuousConfig { lanes: 1, seq_len: cfg.seq_len, vocab: cfg.vocab, prefill_chunk: 0 };
         let mut order = Vec::new();
         run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| order.push(fin.tenant))
             .unwrap();
         assert_eq!(order, vec![1, 2, 1, 2, 1, 2], "token charges must alternate the tenants");
         assert!(queue.spent(1) >= 3 && queue.spent(2) >= 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// One run of the mixed long + short workload at a given chunk size,
+    /// returning `(tokens, first_token_work)` per request id plus stats.
+    fn ragged_run(
+        engine: &Engine,
+        cfg: &ModelConfig,
+        w: &DeviceWeights,
+        chunk: usize,
+    ) -> (Vec<(Vec<i32>, u64)>, LoopStats) {
+        let clock = Clock::real();
+        let mut queue = AdmissionQueue::new();
+        // a long prompt first, then short requests stuck behind it
+        queue.push(req(0, 0, vec![1, 2, 3, 4, 5, 6, 7, 8, 1, 2], 3));
+        queue.push(req(1, 1, vec![2, 4, 6], 2));
+        queue.push(req(2, 2, vec![3, 5], 2));
+        queue.push(req(3, 3, vec![4, 1, 2], 2));
+        let mut slot = None;
+        let mut stepper = SessionStepper::new(engine, "synth/b4", w, &mut slot);
+        let ccfg = ContinuousConfig {
+            lanes: 2,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            prefill_chunk: chunk,
+        };
+        let mut got = vec![(Vec::new(), 0u64); 4];
+        let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
+            got[fin.id as usize] = (fin.tokens, fin.first_token_work);
+        })
+        .unwrap();
+        assert_eq!(stats.finished, 4, "chunk={chunk}");
+        (got, stats)
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_and_unblocks_short_requests() {
+        let (dir, cfg, engine, w) = fixture("chunked");
+        let (mono, mono_stats) = ragged_run(&engine, &cfg, &w, 0);
+        for chunk in [1usize, 2, 3, 64] {
+            let (got, stats) = ragged_run(&engine, &cfg, &w, chunk);
+            for id in 0..4 {
+                assert_eq!(got[id].0, mono[id].0, "chunk={chunk} request {id}: tokens");
+            }
+            // every generated token costs exactly one forward row on both
+            // paths (prompt rows + one step row per later token), so the
+            // total work clock is invariant under chunking
+            assert_eq!(stats.work_rows, mono_stats.work_rows, "chunk={chunk}");
+            if chunk < 10 {
+                // the short request behind the long prompt sees first
+                // output after strictly less computed work: it admits and
+                // decodes while the long prompt is still chunking in
+                assert!(
+                    got[1].1 < mono[1].1,
+                    "chunk={chunk}: short-request TTFT work {} must beat monolithic {}",
+                    got[1].1,
+                    mono[1].1
+                );
+            }
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

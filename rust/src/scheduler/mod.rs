@@ -2,22 +2,28 @@
 //!
 //! Three pieces, layered bottom-up:
 //!
-//! * [`workers`] — the **persistent per-engine compute pool**: long-lived
-//!   row-partition workers replacing `matmul_flat_threaded`'s per-call
-//!   `thread::scope` (~6L+1 spawn/join barriers per prefill). The engine
-//!   threads projections, the attention inner loop, and decode-step
-//!   matmuls through it; results are bit-identical at any width.
+//! * [`workers`] — the **work-stealing task executor** (DESIGN.md §13):
+//!   long-lived workers with per-worker deques plus a global injector
+//!   queue, replacing `matmul_flat_threaded`'s per-call `thread::scope`
+//!   (~6L+1 spawn/join barriers per prefill). The engine threads
+//!   projections, the attention inner loop, and decode-step matmuls
+//!   through it; tasks own disjoint output rows, so steal order never
+//!   changes any reduction order and results are bit-identical at any
+//!   width.
 //! * [`queue`] — the **admission queue**: per-tenant FIFOs drained under
 //!   token-budget fair scheduling (least-spent tenant wins each freed
 //!   lane; preemption-free slot reuse).
 //! * [`engine_loop`] — the **step loop**: retire finished lanes, admit
 //!   queued requests into the freed slots ([`crate::runtime::Engine`]'s
-//!   `new_session`/`admit` surface prefills into a *warm* session), step
-//!   the survivors. One long-lived `DecodeState` per pool worker serves
-//!   every decode group, so a short request never waits for the slowest
-//!   lane of a lock-step batch. Reference engine only — PJRT's AOT
-//!   programs bake full-sequence shapes, so the pool keeps the lock-step
-//!   path there.
+//!   `new_session`/`admit` surface prefills into a *warm* session),
+//!   advance chunked prefills (`prefill_chunk` > 0 splits long prompts
+//!   into fixed-size chunk tasks interleaved with decode steps, §13),
+//!   step the survivors. One long-lived `DecodeState` per pool worker
+//!   serves every decode group, so a short request never waits for the
+//!   slowest lane of a lock-step batch — or for a long prompt's
+//!   monolithic prefill. Reference engine only — PJRT's AOT programs
+//!   bake full-sequence shapes, so the pool keeps the lock-step path
+//!   there.
 
 pub mod queue;
 pub mod workers;

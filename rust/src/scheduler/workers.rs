@@ -1,4 +1,5 @@
-//! The persistent per-engine compute pool (DESIGN.md §11).
+//! The persistent per-engine compute pool — a work-stealing task
+//! executor (DESIGN.md §11, §13).
 //!
 //! `tensor::ops::matmul_flat_threaded` partitions output rows across a
 //! fresh `std::thread::scope` on **every call** — ~6L+1 spawn/join
@@ -10,15 +11,27 @@
 //! counts, called once per generated token) can afford to be partitioned
 //! too.
 //!
+//! Task distribution is work-stealing (the databend `PipelineExecutor`
+//! shape): a [`ComputePool::run`] call seeds every task index into a
+//! **global injector queue**; each thread keeps a **local deque**, pops
+//! work from its own front, refills in batches from the injector, and
+//! when both run dry **steals one task from the back of a sibling's
+//! deque** before parking. Under ragged per-task costs (heterogeneous
+//! factor groups, chunked prefill slices next to one-row decode tasks)
+//! a thread that finishes early drains the stragglers' backlogs instead
+//! of idling at the barrier.
+//!
 //! Determinism contract: the pool never changes results. Every task of a
 //! [`ComputePool::run`] call computes a fixed, disjoint output partition
 //! with the identical serial kernel, so which worker claims which task —
-//! the only scheduling freedom — cannot affect a single output bit.
-//! `threads = 1` (or a single task) degenerates to a plain serial call
-//! on the caller's thread.
+//! the only scheduling freedom steal order adds — cannot affect a single
+//! output bit. `threads = 1` (or a single task) degenerates to a plain
+//! serial call on the caller's thread.
 
 use crate::tensor::{matmul_flat, matmul_flat_rows};
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// A broadcast job: a lifetime-erased pointer to the caller's task
@@ -38,8 +51,6 @@ unsafe impl Send for Job {}
 #[derive(Default)]
 struct PoolState {
     job: Option<Job>,
-    /// Next unclaimed task index of the current job.
-    next: usize,
     /// Tasks claimed but not yet completed, plus tasks never claimed.
     remaining: usize,
     /// A task panicked (re-raised on the calling thread).
@@ -53,11 +64,63 @@ struct PoolShared {
     work: Condvar,
     /// Wakes the caller when the last task completes.
     done: Condvar,
+    /// Tasks sitting in some queue (injector or a local deque), not yet
+    /// claimed for execution. The park gate: a worker only blocks on
+    /// `work` after observing `unclaimed == 0` **under the state mutex**,
+    /// and `run` publishes the 0 → `tasks` transition under the same
+    /// mutex, so a wakeup can never be missed. During a job the counter
+    /// only decreases (one `fetch_sub` per claim), so it can transiently
+    /// read positive while a batch refill is in flight between queue
+    /// locks — scanners treat that as "work exists somewhere" and rescan
+    /// after a yield instead of parking.
+    unclaimed: AtomicUsize,
+    /// Global injector: `run` seeds all task indices here.
+    injector: Mutex<VecDeque<usize>>,
+    /// Per-thread local deques; slot 0 belongs to the calling thread,
+    /// slots `1..threads` to the spawned workers. Owners pop from the
+    /// front, thieves steal from the back.
+    locals: Vec<Mutex<VecDeque<usize>>>,
 }
 
 fn lock(shared: &PoolShared) -> MutexGuard<'_, PoolState> {
     // poisoning is handled explicitly via `panicked`
     shared.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn lockq(q: &Mutex<VecDeque<usize>>) -> MutexGuard<'_, VecDeque<usize>> {
+    q.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Claim one task for thread `me`: own deque front, else a batch refill
+/// from the injector (first task returned, the rest parked in `me`'s
+/// local for siblings to steal), else one task stolen from the back of
+/// a sibling's deque, scanned in a fixed ring order from `me`.
+/// Decrements `unclaimed` exactly once per returned task.
+fn try_claim(shared: &PoolShared, me: usize) -> Option<usize> {
+    if let Some(t) = lockq(&shared.locals[me]).pop_front() {
+        shared.unclaimed.fetch_sub(1, Ordering::AcqRel);
+        return Some(t);
+    }
+    let batch: Vec<usize> = {
+        let mut inj = lockq(&shared.injector);
+        let take = (inj.len() / shared.locals.len()).clamp(1, 16).min(inj.len());
+        inj.drain(..take).collect()
+    };
+    if let Some((&first, rest)) = batch.split_first() {
+        if !rest.is_empty() {
+            lockq(&shared.locals[me]).extend(rest.iter().copied());
+        }
+        shared.unclaimed.fetch_sub(1, Ordering::AcqRel);
+        return Some(first);
+    }
+    let n = shared.locals.len();
+    for off in 1..n {
+        if let Some(t) = lockq(&shared.locals[(me + off) % n]).pop_back() {
+            shared.unclaimed.fetch_sub(1, Ordering::AcqRel);
+            return Some(t);
+        }
+    }
+    None
 }
 
 /// A persistent pool of `threads - 1` compute workers plus the calling
@@ -79,13 +142,16 @@ impl ComputePool {
             state: Mutex::new(PoolState::default()),
             work: Condvar::new(),
             done: Condvar::new(),
+            unclaimed: AtomicUsize::new(0),
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
         });
         let joins = (1..threads)
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("lq-compute-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawning compute worker")
             })
             .collect();
@@ -98,10 +164,11 @@ impl ComputePool {
     }
 
     /// Run `f(0) .. f(tasks - 1)` across the pool, returning when all
-    /// have completed. Tasks are claimed dynamically (the caller claims
-    /// too), so `f` must produce the same output for task `i` no matter
-    /// which thread runs it — true by construction for the disjoint
-    /// output partitions this pool exists for.
+    /// have completed. Tasks are claimed dynamically through the
+    /// injector/steal queues (the caller claims too), so `f` must
+    /// produce the same output for task `i` no matter which thread runs
+    /// it — true by construction for the disjoint output partitions this
+    /// pool exists for.
     pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         if tasks <= 1 || self.threads <= 1 {
             for t in 0..tasks {
@@ -118,24 +185,20 @@ impl ComputePool {
             let mut st = lock(&self.shared);
             debug_assert!(st.job.is_none(), "ComputePool::run is not reentrant");
             st.job = Some(Job { f: erased, tasks });
-            st.next = 0;
             st.remaining = tasks;
             st.panicked = false;
-            self.shared.work.notify_all();
+            // Publish the park-gate count under the state mutex *before*
+            // seeding the injector: a worker that scans between runs must
+            // never find a queued task whose count isn't visible yet
+            // (claiming it would underflow `unclaimed`). The converse
+            // window — count visible, injector still empty — only makes
+            // scanners yield and rescan.
+            self.shared.unclaimed.store(tasks, Ordering::Release);
         }
+        lockq(&self.shared.injector).extend(0..tasks);
+        self.shared.work.notify_all();
         // The caller participates in its own job instead of just waiting.
-        loop {
-            let task = {
-                let mut st = lock(&self.shared);
-                match &st.job {
-                    Some(job) if st.next < job.tasks => {
-                        let t = st.next;
-                        st.next += 1;
-                        t
-                    }
-                    _ => break,
-                }
-            };
+        while let Some(task) = try_claim(&self.shared, 0) {
             let ok = catch_unwind(AssertUnwindSafe(|| f(task))).is_ok();
             finish_task(&self.shared, ok);
         }
@@ -189,22 +252,31 @@ impl Drop for ComputePool {
     }
 }
 
-fn worker_loop(shared: &PoolShared) {
+fn worker_loop(shared: &PoolShared, me: usize) {
     loop {
-        let (f, task) = {
-            let mut st = lock(shared);
-            loop {
-                if st.shutdown {
-                    return;
-                }
-                if let Some(job) = &st.job {
-                    if st.next < job.tasks {
-                        let t = st.next;
-                        st.next += 1;
-                        break (job.f, t);
-                    }
-                }
-                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+        let (f, task) = loop {
+            if let Some(t) = try_claim(shared, me) {
+                // A claimed task implies `remaining > 0`, and the job
+                // cell is only cleared when `remaining` hits zero — so
+                // the job is still published.
+                let st = lock(shared);
+                let job = st.job.as_ref().expect("claimed a task with no job published");
+                break (job.f, t);
+            }
+            let st = lock(shared);
+            if st.shutdown {
+                return;
+            }
+            if shared.unclaimed.load(Ordering::Acquire) == 0 {
+                // Park. The publisher stores `unclaimed` under this mutex
+                // before notifying, so the wakeup cannot be missed.
+                let _unused = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            } else {
+                // Work exists but wasn't visible (a batch refill is in
+                // flight between queue locks, or a sibling claimed the
+                // last visible task first) — rescan shortly.
+                drop(st);
+                std::thread::yield_now();
             }
         };
         // Safety: see `Job` — the publishing `run` call keeps the closure
@@ -260,7 +332,8 @@ mod tests {
 
     #[test]
     fn pool_is_reusable_across_many_calls() {
-        // the amortization claim: one pool, many cheap dispatches
+        // the amortization claim: one pool, many cheap dispatches — and
+        // no stale queue entries may leak between jobs
         let pool = ComputePool::new(3);
         let total = AtomicUsize::new(0);
         for _ in 0..200 {
@@ -269,6 +342,46 @@ mod tests {
             });
         }
         assert_eq!(total.load(Ordering::SeqCst), 200 * 6);
+    }
+
+    #[test]
+    fn steal_loop_completes_ragged_task_costs_exactly_once() {
+        // One task is ~1000x heavier than the rest: the thread stuck on
+        // it must have its local backlog stolen by the others, and every
+        // task still runs exactly once.
+        let pool = ComputePool::new(4);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        let sink = AtomicUsize::new(0);
+        pool.run(64, &|i| {
+            if i == 0 {
+                let mut acc = 0usize;
+                for j in 0..200_000 {
+                    acc = acc.wrapping_add(j);
+                }
+                sink.fetch_add(acc, Ordering::Relaxed);
+            }
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller_and_pool_survives() {
+        let pool = ComputePool::new(3);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                assert!(i != 5, "induced task failure");
+            });
+        }));
+        assert!(res.is_err(), "the task panic must re-raise on the caller");
+        // the barrier drained every task, so the pool stays usable
+        let hits = AtomicUsize::new(0);
+        pool.run(6, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 6);
     }
 
     #[test]

@@ -384,7 +384,7 @@ fn prop_continuous_matches_lockstep_oracle() {
         let budgets: Vec<usize> = (0..n_reqs).map(|_| rng.below(8)).collect();
         let lanes = [1usize, 2, 3][rng.below(3)];
 
-        for factor in [false, true] {
+        for (factor, chunk) in [(false, 0usize), (false, 2), (true, 0), (true, 2)] {
             let w: &DeviceWeights = if factor { &w_base } else { &w_merged };
             let mut queue = AdmissionQueue::new();
             for i in 0..n_reqs {
@@ -402,14 +402,15 @@ fn prop_continuous_matches_lockstep_oracle() {
             }
             let mut slot = None;
             let mut stepper = SessionStepper::new(&engine, "synth/b4", w, &mut slot);
-            let ccfg = ContinuousConfig { lanes, seq_len: t_len, vocab };
+            let ccfg =
+                ContinuousConfig { lanes, seq_len: t_len, vocab, prefill_chunk: chunk };
             let mut got: Vec<Option<Vec<i32>>> = vec![None; n_reqs];
             let stats =
                 run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
                     got[fin.id as usize] = Some(fin.tokens);
                 })
                 .unwrap();
-            assert_eq!(stats.finished as usize, n_reqs, "factor={factor}");
+            assert_eq!(stats.finished as usize, n_reqs, "factor={factor} chunk={chunk}");
             assert!(stats.peak_lanes <= lanes);
 
             // oracle: each request decoded alone, lock-step
@@ -438,11 +439,110 @@ fn prop_continuous_matches_lockstep_oracle() {
                 assert_eq!(
                     got[i].as_deref(),
                     Some(&want[..]),
-                    "factor={factor} lanes={lanes} request {i}: continuous vs lock-step"
+                    "factor={factor} chunk={chunk} lanes={lanes} request {i}: \
+                     continuous vs lock-step"
                 );
             }
         }
     });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The PR-7 tentpole equivalence: chunked prefill
+/// (`Engine::prefill_chunk`) must leave a **bit-identical**
+/// `DecodeState` — full KV buffers, consumed lengths, next-token
+/// logits — to the monolithic admission (`Engine::admit`) of the same
+/// prompt, across chunk sizes {1, 32, 128, >prompt} × compute threads
+/// {1, 2, 4} × merged/factor paths × 1/2/3-bit adapters. Every
+/// non-attention kernel is row-local and an attention row reads only
+/// its own lane's earlier cache columns, so chunking changes *when*
+/// rows are computed, never *what* any row reads (DESIGN.md §13).
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn prop_chunked_prefill_matches_monolithic_prefill() {
+    use loraquant::loraquant::{FactorSource, QuantizedLora};
+    use loraquant::model::merge::quant_deltas;
+    use loraquant::model::{merge_adapter, BaseWeights};
+    use loraquant::runtime::Engine;
+    use loraquant::testutil::{synth_model_config, write_synth_model};
+    use std::sync::Arc;
+
+    let dir = std::env::temp_dir().join(format!("lq_prop_chunk_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // a longer sequence than the default synth shape, so the 32- and
+    // 128-token chunk sizes are genuine mid-prompt slices
+    let mut cfg = synth_model_config();
+    cfg.seq_len = 160;
+    write_synth_model(&dir, "synth", &cfg, &[2], 4177).unwrap();
+    let base = BaseWeights::load(dir.join("synth")).unwrap();
+    let mut engine = Engine::new(&dir).unwrap();
+    engine.load_model_fwd("synth", 2, base.cfg.param_names().len()).unwrap();
+    let w_base = engine
+        .upload_weights(&merge_adapter(&base, &std::collections::BTreeMap::new()).unwrap())
+        .unwrap();
+
+    let mut rng = Rng::new(90210);
+    let prompt: Vec<i32> = (0..150).map(|_| 1 + rng.below(cfg.vocab - 1) as i32).collect();
+    let lane = 1usize; // a non-zero lane so lane-offset bugs cannot hide
+
+    for bits in [1u32, 2, 3] {
+        let qcfg =
+            LoraQuantConfig { ste: None, group: 16, ..LoraQuantConfig::variant(bits, 0.9) };
+        let mut q = QuantizedLora::default();
+        for site in cfg.lora_site_names() {
+            let short = site.rsplit_once('.').unwrap().1;
+            let (n_in, m_out) = cfg.site_shape(short).unwrap();
+            let (b, a) = rng.lora_pair(m_out, n_in, cfg.lora_rank, 0.7);
+            q.sites.insert(site, quantize_site(&b, &a, &qcfg));
+        }
+        let stored = Arc::new(q);
+        let w_merged = engine
+            .upload_weights(&merge_adapter(&base, &quant_deltas(&stored)).unwrap())
+            .unwrap();
+        for factor in [false, true] {
+            let w = if factor { &w_base } else { &w_merged };
+            // the monolithic oracle, single-threaded
+            engine.set_compute_threads(1);
+            let mut oracle = engine.new_session("synth/b2", 2, w).unwrap();
+            if factor {
+                let src: Arc<dyn FactorSource> = Arc::clone(&stored) as _;
+                oracle.bind_adapter(lane, Some(src)).unwrap();
+            }
+            engine.admit(&mut oracle, &[lane], &[&prompt], w, &[]).unwrap();
+            let bits_of = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            let want_k = bits_of(oracle.kv_cache().keys());
+            let want_v = bits_of(oracle.kv_cache().values());
+            let want_lens = [oracle.lane_len(0), oracle.lane_len(1)];
+            let want_logits = bits_of(oracle.lane_logits(lane));
+
+            for threads in [1usize, 2, 4] {
+                engine.set_compute_threads(threads);
+                for chunk in [1usize, 32, 128, 256] {
+                    let tag = format!("bits={bits} factor={factor} threads={threads} chunk={chunk}");
+                    let mut st = engine.new_session("synth/b2", 2, w).unwrap();
+                    if factor {
+                        let src: Arc<dyn FactorSource> = Arc::clone(&stored) as _;
+                        st.bind_adapter(lane, Some(src)).unwrap();
+                    }
+                    let mut start = 0usize;
+                    while start < prompt.len() {
+                        let end = (start + chunk).min(prompt.len());
+                        let last = end == prompt.len();
+                        engine
+                            .prefill_chunk(&mut st, lane, &prompt[start..end], start, last, w, &[])
+                            .unwrap();
+                        assert_eq!(st.is_prefilling(lane), !last, "{tag} at {start}");
+                        assert_eq!(st.is_retired(lane), !last, "{tag} at {start}");
+                        start = end;
+                    }
+                    assert_eq!(bits_of(st.kv_cache().keys()), want_k, "{tag}: K cache");
+                    assert_eq!(bits_of(st.kv_cache().values()), want_v, "{tag}: V cache");
+                    assert_eq!([st.lane_len(0), st.lane_len(1)], want_lens, "{tag}: lens");
+                    assert_eq!(bits_of(st.lane_logits(lane)), want_logits, "{tag}: logits");
+                }
+            }
+        }
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -124,6 +124,31 @@ fn compute_threads_do_not_change_golden_traces() {
     }
 }
 
+/// Chunked prefill (DESIGN.md §13) through the full coordinator: with
+/// `prefill_chunk` > 0 every prompt longer than the chunk streams into
+/// its decode group incrementally, yet token outputs stay identical to
+/// monolithic admission and the chunked trace is itself deterministic —
+/// across runs and across compute-thread counts.
+#[test]
+fn chunked_prefill_keeps_tokens_identical_and_traces_deterministic() {
+    let env = ScenarioEnv::synth("chunkspec", 4).unwrap();
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor] {
+        let mono = run_scenario(&acceptance_spec(strategy), &env).unwrap();
+        // chunk 2 forces the chunked path on every multi-token prompt
+        let chunked = |threads| ScenarioSpec {
+            prefill_chunk: 2,
+            compute_threads: threads,
+            ..acceptance_spec(strategy)
+        };
+        let a = run_scenario(&chunked(1), &env).unwrap();
+        assert_eq!(a.summary.ok, 220, "{strategy}: chunked trace must fully complete");
+        assert_eq!(a.tokens, mono.tokens, "{strategy}: chunking must not change tokens");
+        let b = run_scenario(&chunked(4), &env).unwrap();
+        assert_eq!(a.log(), b.log(), "{strategy}: chunked trace must not depend on threads");
+        assert_eq!(a.tokens, b.tokens, "{strategy}: chunked tokens must not depend on threads");
+    }
+}
+
 /// Determinism of *results*, not schedule: per-request token output is
 /// identical across pool sizes (routing and batch composition change,
 /// but the reference forward is per-lane independent).
