@@ -1,0 +1,159 @@
+//! Tiered adapter-store benchmark (DESIGN.md §14): the ISSUE-8
+//! acceptance workload — a 10 000-tenant Zipf fleet served through a
+//! factor cache holding ≤5% of the fleet's packed bytes, every adapter
+//! spilled to the disk tier at registration. All rows replay
+//! [`ScenarioSpec`]s through `scenario::run_scenario` under the virtual
+//! clock — the exact code path the tiering test suite pins — so seconds
+//! of simulated trace replay in milliseconds of wall time and every
+//! number is reproducible.
+//!
+//! Rows:
+//! 1. **10k-tenant headline** — tiered (5% factor cache) vs fully
+//!    resident, same trace: zero decode failures, p99 latency, cache hit
+//!    rate, disk-load count;
+//! 2. **factor-cache budget sweep** — 1% / 5% / 25% of fleet bytes:
+//!    hit rate and disk traffic vs RAM budget;
+//! 3. **scripted disk latency × predictive prefetch** — every tier load
+//!    parks 2 ms on the virtual clock; the arrival predictor warms
+//!    factors ahead of the next expected request, trading extra disk
+//!    loads for fewer request-path stalls.
+//!
+//! Results land in `BENCH_tiering.json` (one machine-readable snapshot
+//! per run; each PR's committed snapshot is one point of the perf
+//! trajectory). Reference engine only: the tiering path needs factor
+//! serving, which the PJRT backend does not implement.
+
+use loraquant::coordinator::MergeStrategy;
+use loraquant::scenario::{run_scenario, ClockMode, DiskLatency, FaultPlan, ScenarioEnv, ScenarioSpec};
+use loraquant::workload::WorkloadConfig;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    if cfg!(feature = "pjrt") {
+        eprintln!("bench_tiering: skipped — the PJRT backend is merged-only; tiering needs factor serving");
+        return Ok(());
+    }
+    let env = ScenarioEnv::synth("tierbench", 8)?;
+    let unit = env.adapters[0].1.bytes();
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // Every row shares the factor strategy: the tier pages packed factors
+    // (merged strategy would page them too, but only once per merge).
+    let tiered = |name: String, tenants: usize, cache_frac_pct: usize, n_requests: usize| ScenarioSpec {
+        name,
+        mode: ClockMode::Virtual,
+        strategy: MergeStrategy::Factor,
+        n_adapters: tenants,
+        tiered: true,
+        factor_cache_bytes: (unit * tenants * cache_frac_pct / 100).max(unit),
+        max_wait: Duration::from_millis(5),
+        workload: WorkloadConfig { rate: 2000.0, zipf_alpha: 1.1, n_requests, seed: 17 },
+        max_new: 3,
+        ..Default::default()
+    };
+
+    // ---- row 1: 10k tenants, 5% cache, vs fully resident -----------------
+    println!("# Tiering — 10k-tenant Zipf fleet through a 5% factor cache (virtual time)");
+    for resident in [false, true] {
+        let mut spec = tiered(format!("tiered_10k/resident={resident}"), 10_000, 5, 1000);
+        spec.tiered = !resident;
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        assert_eq!(s.failed, 0, "acceptance: zero decode failures at 10k tenants");
+        println!(
+            "{} | {}/{} ok failed={} | p50={:?} p99={:?} | spilled={} disk_loads={} fc_hit_rate={:.3} evictions={} | wall {:?}",
+            if resident { "resident  " } else { "tiered  5%" },
+            s.ok,
+            s.requests,
+            s.failed,
+            s.latency.quantile(0.5),
+            s.latency.quantile(0.99),
+            s.spilled,
+            s.disk_loads,
+            s.factor_cache.hit_rate(),
+            s.factor_cache.evictions,
+            s.real_wall,
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"headline_10k","resident":{resident},"tenants":10000,"requests":{},"ok":{},"failed":{},"p50_us":{},"p99_us":{},"spilled":{},"disk_loads":{},"fc_hits":{},"fc_misses":{},"fc_evictions":{},"wall_ms":{}}}"#,
+            s.requests,
+            s.ok,
+            s.failed,
+            s.latency.quantile(0.5).as_micros(),
+            s.latency.quantile(0.99).as_micros(),
+            s.spilled,
+            s.disk_loads,
+            s.factor_cache.hits,
+            s.factor_cache.misses,
+            s.factor_cache.evictions,
+            s.real_wall.as_millis(),
+        ));
+    }
+
+    // ---- row 2: factor-cache budget sweep --------------------------------
+    println!("\n# Factor-cache budget sweep — 10k tenants, cache at 1% / 5% / 25% of fleet bytes");
+    for pct in [1usize, 5, 25] {
+        let spec = tiered(format!("cache_sweep/p{pct}"), 10_000, pct, 600);
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        println!(
+            "cache={pct:>2}% | {}/{} ok | p99={:?} | disk_loads={} fc_hit_rate={:.3} evictions={}",
+            s.ok,
+            s.requests,
+            s.latency.quantile(0.99),
+            s.disk_loads,
+            s.factor_cache.hit_rate(),
+            s.factor_cache.evictions,
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"cache_sweep","cache_pct":{pct},"requests":{},"ok":{},"p99_us":{},"disk_loads":{},"fc_hits":{},"fc_misses":{},"fc_evictions":{}}}"#,
+            s.requests,
+            s.ok,
+            s.latency.quantile(0.99).as_micros(),
+            s.disk_loads,
+            s.factor_cache.hits,
+            s.factor_cache.misses,
+            s.factor_cache.evictions,
+        ));
+    }
+
+    // ---- row 3: scripted disk latency × predictive prefetch --------------
+    println!("\n# Scripted disk latency (2ms/load) — predictor warms factors ahead of arrivals");
+    for predictive in [false, true] {
+        let mut spec = tiered(format!("disk_fault/pred={predictive}"), 2000, 5, 600);
+        spec.predictive_prefetch = predictive;
+        spec.faults = FaultPlan {
+            disk_latency: Some(DiskLatency { adapter: None, delay: Duration::from_millis(2) }),
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        println!(
+            "predictive={predictive:<5} | {}/{} ok | p50={:?} p99={:?} | disk_loads={} fc_hit_rate={:.3}",
+            s.ok,
+            s.requests,
+            s.latency.quantile(0.5),
+            s.latency.quantile(0.99),
+            s.disk_loads,
+            s.factor_cache.hit_rate(),
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"disk_fault","predictive":{predictive},"delay_ms":2,"requests":{},"ok":{},"p50_us":{},"p99_us":{},"disk_loads":{},"fc_hits":{},"fc_misses":{}}}"#,
+            s.requests,
+            s.ok,
+            s.latency.quantile(0.5).as_micros(),
+            s.latency.quantile(0.99).as_micros(),
+            s.disk_loads,
+            s.factor_cache.hits,
+            s.factor_cache.misses,
+        ));
+    }
+
+    let json = format!(
+        "{{\"bench\":\"tiering\",\"model\":\"synth\",\"synthetic\":true,\"scenarios\":[{}]}}\n",
+        json_rows.join(",")
+    );
+    std::fs::write("BENCH_tiering.json", &json)?;
+    println!("\nwrote BENCH_tiering.json ({} scenario rows)", json_rows.len());
+    Ok(())
+}

@@ -36,14 +36,24 @@ fn axis_from(c: i32) -> anyhow::Result<Axis> {
 }
 
 /// Encode one quantized adapter into tensorfile entries.
-pub fn encode(lora: &QuantizedLora) -> BTreeMap<String, Tensor> {
+///
+/// The container stores a single `low_mode` per site, so `bl`/`al` must
+/// be symmetric (both present or both absent) and homogeneous (same
+/// variant). Anything else would silently round-trip into a different
+/// adapter — bail instead of corrupting.
+pub fn encode(lora: &QuantizedLora) -> anyhow::Result<BTreeMap<String, Tensor>> {
     let mut out = BTreeMap::new();
     for (site, q) in &lora.sites {
         let low_mode = match (&q.bl, &q.al) {
             (None, None) => 0,
-            (Some(LowQuantized::Bin(_)), _) => 1,
-            (Some(LowQuantized::Rtn1(_)), _) => 2,
-            _ => 0,
+            (Some(LowQuantized::Bin(_)), Some(LowQuantized::Bin(_))) => 1,
+            (Some(LowQuantized::Rtn1(_)), Some(LowQuantized::Rtn1(_))) => 2,
+            (Some(_), Some(_)) => {
+                bail!("{site}: heterogeneous low parts (bl/al quantized with different modes) cannot be encoded")
+            }
+            (None, Some(_)) | (Some(_), None) => {
+                bail!("{site}: asymmetric low parts (exactly one of bl/al present) cannot be encoded")
+            }
         };
         let meta = vec![
             q.m as i32,
@@ -75,7 +85,7 @@ pub fn encode(lora: &QuantizedLora) -> BTreeMap<String, Tensor> {
             put_low(&mut out, site, "al", x);
         }
     }
-    out
+    Ok(out)
 }
 
 fn low_group(q: &QuantizedSite) -> Option<usize> {
@@ -110,33 +120,62 @@ fn put_low(out: &mut BTreeMap<String, Tensor>, site: &str, part: &str, q: &LowQu
     }
 }
 
+/// Look up `<site>.<part>.<leaf>`, returning `Err` (not a panic) when a
+/// truncated or partial tensorfile lacks it — a disk tier makes missing
+/// keys a reachable state, not a programming error.
+fn field<'a>(
+    t: &'a BTreeMap<String, Tensor>,
+    site: &str,
+    part: &str,
+    leaf: &str,
+) -> anyhow::Result<&'a Tensor> {
+    t.get(&format!("{site}.{part}.{leaf}"))
+        .with_context(|| format!("{site}.{part}.{leaf} missing"))
+}
+
+/// Fetch and validate a part's `[rows, cols, bits, group]` shape record.
+fn part_shape(
+    t: &BTreeMap<String, Tensor>,
+    site: &str,
+    part: &str,
+) -> anyhow::Result<[i32; 4]> {
+    let shape = field(t, site, part, "shape")?.as_i32()?;
+    let &[rows, cols, bits, group] = shape else {
+        bail!("{site}.{part}.shape: expected 4 entries, got {}", shape.len());
+    };
+    if rows < 0 || cols < 0 || group < 0 {
+        bail!("{site}.{part}.shape: negative dimension [{rows}, {cols}, {bits}, {group}]");
+    }
+    Ok([rows, cols, bits, group])
+}
+
 fn get_rtn(t: &BTreeMap<String, Tensor>, site: &str, part: &str) -> anyhow::Result<RtnQuantized> {
-    let shape = t
-        .get(&format!("{site}.{part}.shape"))
-        .with_context(|| format!("{site}.{part}.shape missing"))?
-        .as_i32()?;
+    let [rows, cols, bits, group] = part_shape(t, site, part)?;
+    if !(1..=8).contains(&bits) {
+        bail!("{site}.{part}: rtn bits {bits} outside 1..=8");
+    }
     Ok(RtnQuantized {
-        rows: shape[0] as usize,
-        cols: shape[1] as usize,
-        bits: shape[2] as u32,
-        group: shape[3] as usize,
-        packed: t[&format!("{site}.{part}.packed")].as_u8()?.to_vec(),
-        scale: t[&format!("{site}.{part}.scale")].as_f32()?.to_vec(),
-        zero: t[&format!("{site}.{part}.zero")].as_f32()?.to_vec(),
+        rows: rows as usize,
+        cols: cols as usize,
+        bits: bits as u32,
+        group: group as usize,
+        packed: field(t, site, part, "packed")?.as_u8()?.to_vec(),
+        scale: field(t, site, part, "scale")?.as_f32()?.to_vec(),
+        zero: field(t, site, part, "zero")?.as_f32()?.to_vec(),
     })
 }
 
 fn get_bin(t: &BTreeMap<String, Tensor>, site: &str, part: &str) -> anyhow::Result<BinQuantized> {
-    let shape = t
-        .get(&format!("{site}.{part}.shape"))
-        .with_context(|| format!("{site}.{part}.shape missing"))?
-        .as_i32()?;
+    let [rows, cols, bits, group] = part_shape(t, site, part)?;
+    if bits != 1 {
+        bail!("{site}.{part}: sign-binarized part must have bits == 1, got {bits}");
+    }
     Ok(BinQuantized {
-        rows: shape[0] as usize,
-        cols: shape[1] as usize,
-        group: shape[3] as usize,
-        packed: t[&format!("{site}.{part}.packed")].as_u8()?.to_vec(),
-        scale: t[&format!("{site}.{part}.scale")].as_f32()?.to_vec(),
+        rows: rows as usize,
+        cols: cols as usize,
+        group: group as usize,
+        packed: field(t, site, part, "packed")?.as_u8()?.to_vec(),
+        scale: field(t, site, part, "scale")?.as_f32()?.to_vec(),
     })
 }
 
@@ -175,7 +214,7 @@ pub fn decode(tensors: &BTreeMap<String, Tensor>) -> anyhow::Result<QuantizedLor
 
 /// Save a quantized adapter to disk.
 pub fn save(path: impl AsRef<Path>, lora: &QuantizedLora) -> anyhow::Result<()> {
-    save_tensorfile(path, &encode(lora))
+    save_tensorfile(path, &encode(lora)?)
 }
 
 /// Load a quantized adapter from disk.
@@ -186,8 +225,13 @@ pub fn load(path: impl AsRef<Path>) -> anyhow::Result<QuantizedLora> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::loraquant::{quantize_site, LoraQuantConfig, LowMode};
+    use crate::loraquant::{quantize_site, HSelect, LoraQuantConfig, LowMode};
     use crate::testutil::Rng;
+
+    /// `h = 2 < r = 4`: both sub-LoRAs always present, STE off for speed.
+    fn low_cfg(low_mode: LowMode) -> LoraQuantConfig {
+        LoraQuantConfig { hselect: HSelect::Static(2), ste: None, low_mode, ..Default::default() }
+    }
 
     #[test]
     fn roundtrip_preserves_delta_and_bits() {
@@ -199,7 +243,7 @@ mod tests {
             "l0.w1".into(),
             quantize_site(&b, &a, &LoraQuantConfig { low_mode: LowMode::Prune, ..Default::default() }),
         );
-        let enc = encode(&lora);
+        let enc = encode(&lora).unwrap();
         let dec = decode(&enc).unwrap();
         assert_eq!(dec.sites.len(), 2);
         assert_eq!(dec.storage_bits(), lora.storage_bits());
@@ -208,6 +252,75 @@ mod tests {
             let d1 = dec.sites[site].dequant_delta();
             assert!(d0.sub(&d1).fro_norm() < 1e-6, "{site}");
         }
+    }
+
+    /// Regression (ISSUE 8): `bl: Bin` + `al: Rtn1` used to encode
+    /// `low_mode = 1` from `bl` alone, so decode re-read the Rtn1 codes
+    /// as sign bits and dropped the `zero` tensor — silent corruption.
+    #[test]
+    fn encode_rejects_heterogeneous_low_parts() {
+        let mut rng = Rng::new(83);
+        let (b, a) = rng.lora_pair(32, 24, 4, 0.7);
+        let bin = quantize_site(&b, &a, &low_cfg(LowMode::Bin));
+        let rtn = quantize_site(&b, &a, &low_cfg(LowMode::Rtn1));
+        let mut site = bin.clone();
+        site.al = rtn.al.clone();
+        assert!(matches!(site.bl, Some(LowQuantized::Bin(_))), "setup needs a Bin bl");
+        assert!(matches!(site.al, Some(LowQuantized::Rtn1(_))), "setup needs an Rtn1 al");
+        let mut lora = QuantizedLora::default();
+        lora.sites.insert("l0.wq".into(), site);
+        let err = encode(&lora).unwrap_err().to_string();
+        assert!(err.contains("heterogeneous"), "unexpected error: {err}");
+    }
+
+    /// Regression (ISSUE 8): `bl: None` + `al: Some` used to encode
+    /// `low_mode = 0`, silently dropping `al` from the file.
+    #[test]
+    fn encode_rejects_asymmetric_low_parts() {
+        let mut rng = Rng::new(84);
+        let (b, a) = rng.lora_pair(32, 24, 4, 0.7);
+        let mut site = quantize_site(&b, &a, &low_cfg(LowMode::Bin));
+        assert!(site.al.is_some(), "setup needs a low part");
+        site.bl = None;
+        let mut lora = QuantizedLora::default();
+        lora.sites.insert("l0.wq".into(), site);
+        let err = encode(&lora).unwrap_err().to_string();
+        assert!(err.contains("asymmetric"), "unexpected error: {err}");
+    }
+
+    /// Regression (ISSUE 8): a truncated tensorfile (missing `.packed`)
+    /// must decode to `Err`, not panic via direct map indexing.
+    #[test]
+    fn truncated_file_decodes_to_err_not_panic() {
+        let mut rng = Rng::new(85);
+        let (b, a) = rng.lora_pair(32, 24, 4, 0.7);
+        let mut lora = QuantizedLora::default();
+        lora.sites.insert("l0.wq".into(), quantize_site(&b, &a, &low_cfg(LowMode::Bin)));
+        let full = encode(&lora).unwrap();
+        for leaf in ["packed", "scale", "zero"] {
+            let mut t = full.clone();
+            assert!(t.remove(&format!("l0.wq.bh.{leaf}")).is_some());
+            let err = decode(&t).unwrap_err().to_string();
+            assert!(err.contains(&format!("l0.wq.bh.{leaf} missing")), "{leaf}: {err}");
+        }
+    }
+
+    /// A bin part whose shape record claims a multi-bit width is
+    /// corrupt: `get_bin` must reject it instead of misreading codes.
+    #[test]
+    fn bin_shape_with_wrong_bits_is_rejected() {
+        let mut rng = Rng::new(86);
+        let (b, a) = rng.lora_pair(32, 24, 4, 0.7);
+        let mut lora = QuantizedLora::default();
+        lora.sites.insert("l0.wq".into(), quantize_site(&b, &a, &low_cfg(LowMode::Bin)));
+        let mut t = encode(&lora).unwrap();
+        let shape = t["l0.wq.bl.shape"].as_i32().unwrap().to_vec();
+        t.insert(
+            "l0.wq.bl.shape".into(),
+            Tensor::i32(vec![4], vec![shape[0], shape[1], 2, shape[3]]),
+        );
+        let err = decode(&t).unwrap_err().to_string();
+        assert!(err.contains("bits == 1"), "unexpected error: {err}");
     }
 
     #[test]

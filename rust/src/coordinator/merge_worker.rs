@@ -14,7 +14,8 @@
 //! shared base), while tests inject gated functions to prove concurrency
 //! deterministically.
 
-use super::registry::{AdapterId, AdapterRegistry};
+use super::registry::{AdapterId, AdapterRegistry, StoredAdapter};
+use super::tier::AdapterTier;
 use crate::adapter::fmt::Tensor;
 use crate::clock::Clock;
 use crate::model::{merge_adapter, BaseWeights};
@@ -29,11 +30,41 @@ use std::time::Duration;
 pub(crate) struct Shared {
     pub base: BaseWeights,
     pub registry: RwLock<AdapterRegistry>,
+    /// The disk tier, when adapter tiering is enabled.
+    pub tier: Option<AdapterTier>,
 }
 
 impl Shared {
-    pub(crate) fn new(base: BaseWeights) -> Self {
-        Self { base, registry: RwLock::new(AdapterRegistry::new()) }
+    pub(crate) fn new(base: BaseWeights, tier: Option<AdapterTier>) -> Self {
+        Self { base, registry: RwLock::new(AdapterRegistry::new()), tier }
+    }
+
+    /// Resolve an adapter's packed factors wherever they live: resident
+    /// registry arc (cheap clone) or a disk-tier read. Callers must be
+    /// on a merge-pool thread — the tier may park on the clock for a
+    /// scripted disk fault.
+    pub(crate) fn load_adapter(&self, id: AdapterId) -> anyhow::Result<Arc<StoredAdapter>> {
+        enum Slot {
+            Resident(Arc<StoredAdapter>),
+            Tiered,
+            Gone,
+        }
+        let slot = self.with_registry(|r| match r.get(id) {
+            Some(e) => match e.resident() {
+                Some(a) => Slot::Resident(Arc::clone(a)),
+                None => Slot::Tiered,
+            },
+            None => Slot::Gone,
+        });
+        match slot {
+            Slot::Resident(a) => Ok(a),
+            Slot::Tiered => {
+                let tier =
+                    self.tier.as_ref().ok_or_else(|| anyhow!("adapter {id} tiered but no tier"))?;
+                tier.load(id)
+            }
+            Slot::Gone => Err(anyhow!("adapter {id} vanished before load")),
+        }
     }
 
     /// Run `f` under the registry read lock (poisoning is benign here —
@@ -77,29 +108,48 @@ impl std::fmt::Debug for MergeHook {
 /// message loop.
 pub(crate) type MergeDone = Box<dyn FnOnce(anyhow::Result<Vec<Tensor>>, Duration) + Send>;
 
-/// One queued merge.
+/// Completion callback for a factor fetch: the packed adapter loaded
+/// from the disk tier (or the error) and the host load time.
+pub(crate) type FetchDone = Box<dyn FnOnce(anyhow::Result<Arc<StoredAdapter>>, Duration) + Send>;
+
+/// What a pool thread should do with the adapter.
+pub(crate) enum JobKind {
+    /// Dequantize + merge against the base (merged execution path).
+    Merge(MergeDone),
+    /// Load packed factors from the disk tier (factor execution path).
+    Fetch(FetchDone),
+}
+
+/// One queued job.
 pub(crate) struct MergeJob {
     pub adapter: AdapterId,
-    pub done: MergeDone,
+    pub kind: JobKind,
 }
 
 /// The merge function: adapter id → merged host weight list.
 pub(crate) type MergeFn = Arc<dyn Fn(AdapterId) -> anyhow::Result<Vec<Tensor>> + Send + Sync>;
 
-/// Production merge function: clone the stored adapter out of the
-/// registry (cheap — packed form), then dequantize + merge against the
-/// shared base outside any lock.
+/// The fetch function: adapter id → packed factors.
+pub(crate) type FetchFn =
+    Arc<dyn Fn(AdapterId) -> anyhow::Result<Arc<StoredAdapter>> + Send + Sync>;
+
+/// Production merge function: resolve the stored adapter (resident arc
+/// or disk-tier read), then dequantize + merge against the shared base
+/// outside any lock.
 pub(crate) fn host_merge_fn(shared: Arc<Shared>, hook: Option<MergeHook>) -> MergeFn {
     Arc::new(move |id| {
         if let Some(h) = &hook {
             h.call(id);
         }
-        let stored = shared
-            .with_registry(|r| r.get(id).map(|e| e.adapter.clone()))
-            .ok_or_else(|| anyhow!("adapter {id} vanished before merge"))?;
+        let stored = shared.load_adapter(id)?;
         let deltas = stored.deltas();
         merge_adapter(&shared.base, &deltas)
     })
+}
+
+/// Production fetch function: resident arc or disk-tier read.
+pub(crate) fn host_fetch_fn(shared: Arc<Shared>) -> FetchFn {
+    Arc::new(move |id| shared.load_adapter(id))
 }
 
 /// Merge-pipeline concurrency counters, shared between the pool threads
@@ -155,7 +205,7 @@ pub(crate) struct MergePool {
 }
 
 impl MergePool {
-    pub(crate) fn new(n_workers: usize, merge_fn: MergeFn, clock: Clock) -> Self {
+    pub(crate) fn new(n_workers: usize, merge_fn: MergeFn, fetch_fn: FetchFn, clock: Clock) -> Self {
         let n = n_workers.max(1);
         let (tx, rx) = mpsc::channel::<MergeJob>();
         let rx = Arc::new(Mutex::new(rx));
@@ -164,12 +214,13 @@ impl MergePool {
         for i in 0..n {
             let rx = Arc::clone(&rx);
             let merge_fn = Arc::clone(&merge_fn);
+            let fetch_fn = Arc::clone(&fetch_fn);
             let clock = clock.clone();
             let stats = Arc::clone(&stats);
             let join = std::thread::Builder::new()
                 .name(format!("lq-merge-{i}"))
                 .spawn(move || loop {
-                    // hold the lock only for the dequeue, not the merge
+                    // hold the lock only for the dequeue, not the work
                     let job = {
                         let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
                         guard.recv()
@@ -178,13 +229,21 @@ impl MergePool {
                         Ok(job) => {
                             stats.enter();
                             // clock-based host time: under a virtual
-                            // clock an unfaulted merge is instantaneous
+                            // clock unfaulted work is instantaneous
                             // (real host work doesn't advance simulated
-                            // time) while an injected slow merge shows
-                            // its scripted virtual delay.
+                            // time) while an injected slow merge or
+                            // disk fault shows its scripted delay.
                             let t0 = clock.now();
-                            let result = merge_fn(job.adapter);
-                            (job.done)(result, clock.now().duration_since(t0));
+                            match job.kind {
+                                JobKind::Merge(done) => {
+                                    let result = merge_fn(job.adapter);
+                                    done(result, clock.now().duration_since(t0));
+                                }
+                                JobKind::Fetch(done) => {
+                                    let result = fetch_fn(job.adapter);
+                                    done(result, clock.now().duration_since(t0));
+                                }
+                            }
                             stats.exit();
                         }
                         Err(_) => return, // all senders gone
@@ -226,18 +285,22 @@ mod tests {
         Ok(Vec::new())
     }
 
+    fn no_tier_fetch() -> FetchFn {
+        Arc::new(|id| Err(anyhow!("no tier for adapter {id}")))
+    }
+
     #[test]
     fn jobs_complete_and_report_duration() {
-        let pool = MergePool::new(2, Arc::new(|_id| noop_weights()), Clock::real());
+        let pool = MergePool::new(2, Arc::new(|_id| noop_weights()), no_tier_fetch(), Clock::real());
         let (tx, rx) = channel();
         for id in 0..8u32 {
             let tx = tx.clone();
             pool.sender()
                 .send(MergeJob {
                     adapter: id,
-                    done: Box::new(move |res, dt| {
+                    kind: JobKind::Merge(Box::new(move |res, dt| {
                         let _ = tx.send((id, res.is_ok(), dt));
-                    }),
+                    })),
                 })
                 .unwrap();
         }
@@ -250,14 +313,19 @@ mod tests {
 
     #[test]
     fn errors_propagate_to_done() {
-        let pool = MergePool::new(1, Arc::new(|id| Err(anyhow!("no adapter {id}"))), Clock::real());
+        let pool = MergePool::new(
+            1,
+            Arc::new(|id| Err(anyhow!("no adapter {id}"))),
+            no_tier_fetch(),
+            Clock::real(),
+        );
         let (tx, rx) = channel();
         pool.sender()
             .send(MergeJob {
                 adapter: 7,
-                done: Box::new(move |res, _| {
+                kind: JobKind::Merge(Box::new(move |res, _| {
                     let _ = tx.send(res.unwrap_err().to_string());
-                }),
+                })),
             })
             .unwrap();
         let msg = rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -285,16 +353,16 @@ mod tests {
             gate.recv_timeout(Duration::from_secs(10)).expect("gate released");
             noop_weights()
         });
-        let pool = MergePool::new(2, merge_fn, Clock::real());
+        let pool = MergePool::new(2, merge_fn, no_tier_fetch(), Clock::real());
         let (done_tx, done_rx) = channel();
         for id in [0u32, 1] {
             let done_tx = done_tx.clone();
             pool.sender()
                 .send(MergeJob {
                     adapter: id,
-                    done: Box::new(move |res, _| {
+                    kind: JobKind::Merge(Box::new(move |res, _| {
                         let _ = done_tx.send((id, res.is_ok()));
-                    }),
+                    })),
                 })
                 .unwrap();
         }

@@ -61,7 +61,9 @@ impl Histogram {
         if self.count == 0 {
             return Duration::ZERO;
         }
-        let target = (q * self.count as f64).ceil() as u64;
+        // rank clamp mirrors LatencyStats::quantile: q = 0.0 must land
+        // on the first *occupied* bucket, not bucket 0's upper edge
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
         let mut acc = 0;
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
@@ -246,8 +248,21 @@ mod tests {
         let p95 = h.quantile(0.95);
         let p99 = h.quantile(0.99);
         assert!(p50 <= p95 && p95 <= p99);
+        assert!(h.quantile(0.0) <= p50, "q=0.0 is the distribution minimum");
         assert!(h.mean() >= Duration::from_micros(400));
         assert!(h.max() >= Duration::from_micros(1000));
+
+        // regression: on a histogram whose smallest sample is large,
+        // q = 0.0 must report that sample's bucket, not bucket 0's
+        // upper edge (2µs) via a zero target rank
+        let mut big = Histogram::new();
+        big.record(Duration::from_micros(1000));
+        assert!(
+            big.quantile(0.0) >= Duration::from_micros(1000),
+            "q=0.0 fell below the only sample: {:?}",
+            big.quantile(0.0)
+        );
+        assert_eq!(big.quantile(0.0), big.quantile(1.0));
     }
 
     #[test]

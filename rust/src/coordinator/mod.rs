@@ -32,11 +32,13 @@ pub mod metrics;
 pub mod pool;
 pub mod registry;
 pub mod server;
+pub mod tier;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
 pub use cache::{CacheStats, LruCache};
 pub use merge_worker::{MergeHook, MergeStatsSnapshot};
 pub use metrics::{Histogram, LatencyStats, ServerMetrics};
 pub use pool::{route, WorkerSnapshot};
-pub use registry::{AdapterId, AdapterRegistry, StoredAdapter};
-pub use server::{Coordinator, CoordinatorConfig, GenRequest, GenResponse, MergeStrategy};
+pub use registry::{AdapterId, AdapterRegistry, AdapterSlot, StoredAdapter};
+pub use server::{Coordinator, CoordinatorConfig, GenRequest, GenResponse, MergeStrategy, TierConfig};
+pub use tier::{AdapterTier, DiskFault, LoadHook};

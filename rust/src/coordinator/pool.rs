@@ -39,7 +39,7 @@
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
 use super::cache::{CacheStats, LruCache};
-use super::merge_worker::{MergeJob, Shared};
+use super::merge_worker::{JobKind, MergeJob, Shared};
 use super::metrics::ServerMetrics;
 use super::registry::{AdapterId, StoredAdapter};
 use super::server::{GenRequest, GenResponse, MergeStrategy, Responder};
@@ -51,6 +51,7 @@ use crate::eval::tasks::TOKENS;
 use crate::loraquant::FactorSource;
 use crate::loraquant::QFactors;
 use crate::model::merge::base_weight_list;
+use crate::workload::ArrivalPredictor;
 #[cfg(not(feature = "pjrt"))]
 use crate::runtime::DecodeState;
 use crate::runtime::{DeviceWeights, Engine};
@@ -109,6 +110,12 @@ pub(crate) struct WorkerConfig {
     /// Time source: real in production, virtual under the scenario
     /// simulator (see `crate::clock`).
     pub clock: Clock,
+    /// This worker's share of the in-RAM packed-factor cache budget
+    /// (only consulted when the shared disk tier is enabled).
+    pub factor_cache_bytes: usize,
+    /// Warm adapters ahead of their predicted next arrival (per-tenant
+    /// inter-arrival EWMA; see `workload::ArrivalPredictor`).
+    pub predictive_prefetch: bool,
 }
 
 /// One worker's metrics snapshot. Taken **after** the worker's release
@@ -133,6 +140,11 @@ pub struct WorkerSnapshot {
     /// Merge completions held by the ingest sequencer (completed, but
     /// waiting for an earlier-submitted merge to land first).
     pub held_merges: usize,
+    /// Adapters with a disk-tier factor fetch in flight on this worker.
+    pub inflight_fetches: usize,
+    /// In-RAM packed-factor cache stats (all zero when tiering is off).
+    pub factor_cache: CacheStats,
+    pub factor_cache_used_bytes: usize,
 }
 
 type Payload = (GenRequest, Responder);
@@ -152,14 +164,22 @@ pub(crate) enum WorkerMsg {
         result: anyhow::Result<Vec<Tensor>>,
         host_time: Duration,
     },
+    /// A disk-tier factor fetch completed (shares the merge sequencer's
+    /// numbering, so merge and fetch completions ingest in one
+    /// deterministic submission order).
+    Fetched {
+        seq: u64,
+        adapter: AdapterId,
+        result: anyhow::Result<Arc<StoredAdapter>>,
+        host_time: Duration,
+    },
     Shutdown,
 }
 
-/// A completed merge waiting in the ingest sequencer.
-struct HeldMerge {
-    adapter: AdapterId,
-    result: anyhow::Result<Vec<Tensor>>,
-    host_time: Duration,
+/// A completed merge or fetch waiting in the ingest sequencer.
+enum HeldJob {
+    Merge { adapter: AdapterId, result: anyhow::Result<Vec<Tensor>>, host_time: Duration },
+    Fetch { adapter: AdapterId, result: anyhow::Result<Arc<StoredAdapter>>, host_time: Duration },
 }
 
 /// A merge in flight for one adapter on this worker.
@@ -170,6 +190,18 @@ struct Inflight {
     /// Batches parked until the merged weights arrive.
     parked: Vec<Vec<Queued>>,
     /// Prefetch acks to fire once the weights are resident.
+    waiters: Vec<mpsc::Sender<anyhow::Result<()>>>,
+}
+
+/// A disk-tier factor fetch in flight for one adapter on this worker.
+/// The initiating request-path probe counted exactly one factor-cache
+/// miss; requests arriving while the fetch is in flight park silently,
+/// so `factor_cache.misses == disk_loads` on the request path.
+#[derive(Default)]
+struct FetchInflight {
+    /// Requests parked until the packed factors arrive.
+    parked: Vec<Queued>,
+    /// Prefetch acks to fire once the factors are resident.
     waiters: Vec<mpsc::Sender<anyhow::Result<()>>>,
 }
 
@@ -212,10 +244,14 @@ pub(crate) fn worker_main(
             Ok(WorkerMsg::Prefetch(id, ack)) => w.on_prefetch(id, ack),
             Ok(WorkerMsg::Invalidate(id)) => {
                 w.cache.remove(&id);
+                w.factor_cache.remove(&id);
             }
             Ok(WorkerMsg::Metrics(tx)) => metrics_reply = Some(tx),
             Ok(WorkerMsg::Merged { seq, adapter, result, host_time }) => {
-                w.ingest_merged(seq, adapter, result, host_time);
+                w.ingest(seq, HeldJob::Merge { adapter, result, host_time });
+            }
+            Ok(WorkerMsg::Fetched { seq, adapter, result, host_time }) => {
+                w.ingest(seq, HeldJob::Fetch { adapter, result, host_time });
             }
             Ok(WorkerMsg::Shutdown) => draining = true,
             Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -248,7 +284,8 @@ pub(crate) fn worker_main(
         if let Some(tx) = metrics_reply {
             let _ = tx.send(w.snapshot());
         }
-        if draining && w.batcher.pending() == 0 && w.inflight.is_empty() {
+        if draining && w.batcher.pending() == 0 && w.inflight.is_empty() && w.fetching.is_empty()
+        {
             return;
         }
     }
@@ -262,8 +299,16 @@ struct Worker {
     progs: Vec<(usize, String)>,
     batcher: DynamicBatcher<Payload>,
     cache: LruCache<AdapterId, DeviceWeights>,
+    /// Byte-budgeted in-RAM cache of tiered adapters' packed factors
+    /// (the layer between the merged-weight cache above and the disk
+    /// tier below; untouched when tiering is off).
+    factor_cache: LruCache<AdapterId, Arc<StoredAdapter>>,
     metrics: ServerMetrics,
     inflight: HashMap<AdapterId, Inflight>,
+    /// Disk-tier factor fetches in flight.
+    fetching: HashMap<AdapterId, FetchInflight>,
+    /// Predictive warm-ahead state (None unless enabled).
+    predictor: Option<ArrivalPredictor>,
     merge_tx: mpsc::Sender<MergeJob>,
     self_tx: mpsc::Sender<WorkerMsg>,
     strategy: MergeStrategy,
@@ -281,8 +326,8 @@ struct Worker {
     merge_seq: u64,
     /// Next sequence number the ingest sequencer will apply.
     next_ingest: u64,
-    /// Completed merges waiting on an earlier-submitted one.
-    held: BTreeMap<u64, HeldMerge>,
+    /// Completed merges/fetches waiting on an earlier-submitted one.
+    held: BTreeMap<u64, HeldJob>,
     /// The persistent continuous-batching session (lazily created; its
     /// KV cache and scratch arena are reused across every decode group).
     #[cfg(not(feature = "pjrt"))]
@@ -327,8 +372,11 @@ impl Worker {
                 group_by_adapter: cfg.strategy != MergeStrategy::Factor,
             }),
             cache: LruCache::new(cfg.cache_budget_bytes),
+            factor_cache: LruCache::new(cfg.factor_cache_bytes.max(1)),
             metrics: ServerMetrics::new(),
             inflight: HashMap::new(),
+            fetching: HashMap::new(),
+            predictor: cfg.predictive_prefetch.then(ArrivalPredictor::new),
             merge_tx,
             self_tx,
             strategy: cfg.strategy,
@@ -360,8 +408,12 @@ impl Worker {
                 .inflight
                 .values()
                 .map(|fl| fl.parked.iter().map(Vec::len).sum::<usize>())
-                .sum(),
+                .sum::<usize>()
+                + self.fetching.values().map(|fl| fl.parked.len()).sum::<usize>(),
             held_merges: self.held.len(),
+            inflight_fetches: self.fetching.len(),
+            factor_cache: self.factor_cache.stats(),
+            factor_cache_used_bytes: self.factor_cache.used_bytes(),
         }
     }
 
@@ -385,6 +437,21 @@ impl Worker {
             )));
             return;
         }
+        if self.predictor.is_some() {
+            // predictive warm-ahead: note this arrival, then pull any
+            // adapter whose predicted next arrival is due toward RAM
+            let now = self.clock.now();
+            let due = {
+                let p = self.predictor.as_mut().expect("checked");
+                p.observe(adapter, now);
+                p.due(now)
+            };
+            for id in due {
+                if id != adapter {
+                    self.warm(id);
+                }
+            }
+        }
         self.batcher.push(PendingRequest {
             adapter,
             enqueued: self.clock.now(),
@@ -394,14 +461,23 @@ impl Worker {
 
     fn on_prefetch(&mut self, id: AdapterId, ack: mpsc::Sender<anyhow::Result<()>>) {
         if self.strategy == MergeStrategy::Factor {
-            // nothing to warm: the factor path decodes over the shared
-            // base weights and never materializes per-adapter state
-            let result = if self.shared.with_registry(|r| r.get(id).is_none()) {
-                Err(anyhow!("unknown adapter {id}"))
-            } else {
-                Ok(())
-            };
-            let _ = ack.send(result);
+            if self.shared.with_registry(|r| r.get(id).is_none()) {
+                let _ = ack.send(Err(anyhow!("unknown adapter {id}")));
+                return;
+            }
+            // factors already in RAM (registry-resident, or in the factor
+            // cache — refresh its recency): nothing to load. Without a
+            // disk tier this is every registered adapter.
+            if self.factor_cache.touch(&id) || self.factors_available(id) {
+                let _ = ack.send(Ok(()));
+                return;
+            }
+            if let Some(fl) = self.fetching.get_mut(&id) {
+                fl.waiters.push(ack);
+                return;
+            }
+            self.fetching.insert(id, FetchInflight { parked: Vec::new(), waiters: vec![ack] });
+            self.submit_fetch(id);
             return;
         }
         if self.cache.touch(&id) {
@@ -462,13 +538,19 @@ impl Worker {
                 (MergeStrategy::Factor, _) => {
                     // pure factor serving: every batch of the drain joins
                     // one heterogeneous session, counted as one batch per
-                    // drain (no cache lookups on this path)
+                    // drain (the merged cache is never consulted on this
+                    // path; tiered adapters whose factors are on disk park
+                    // behind a fetch instead of joining the group)
+                    let ready = self.partition_tiered(batch.requests);
+                    if ready.is_empty() {
+                        continue;
+                    }
                     match groups.iter_mut().find_map(|g| match g {
                         Group::Factor(reqs, _) => Some(reqs),
                         Group::Merged(..) => None,
                     }) {
-                        Some(reqs) => reqs.extend(batch.requests),
-                        None => groups.push(Group::Factor(batch.requests, 1)),
+                        Some(reqs) => reqs.extend(ready),
+                        None => groups.push(Group::Factor(ready, 1)),
                     }
                 }
                 (MergeStrategy::Merged, Some(id)) => {
@@ -508,6 +590,14 @@ impl Worker {
                         reqs.extend(batch.requests);
                         continue;
                     }
+                    // tiered adapter whose factors are on disk: the
+                    // no-cold-cliff factor fallback can't bind, so park
+                    // behind the in-flight merge without a second counted
+                    // lookup (mirrors the Merged strategy's park path)
+                    if self.inflight.contains_key(&id) && !self.factors_available(id) {
+                        self.inflight.get_mut(&id).expect("checked").parked.push(batch.requests);
+                        continue;
+                    }
                     if self.cache.get(&id).is_some() {
                         groups.push(Group::Merged(id, batch.requests));
                     } else {
@@ -527,6 +617,15 @@ impl Worker {
                                 },
                             );
                             self.submit_merge(id);
+                        }
+                        if !self.factors_available(id) {
+                            // factors on disk: ride out the merge parked
+                            self.inflight
+                                .get_mut(&id)
+                                .expect("just ensured")
+                                .parked
+                                .push(batch.requests);
+                            continue;
                         }
                         match groups.iter_mut().find_map(|g| match g {
                             Group::Factor(reqs, counted) => Some((reqs, counted)),
@@ -559,11 +658,23 @@ impl Worker {
 
     fn on_batch(&mut self, batch: Batch<Payload>) {
         match (self.strategy, batch.adapter) {
-            // pure factor serving: heterogeneous batch, no cache, no
-            // merge queue — straight to decode
-            (MergeStrategy::Factor, _) => self.run_batch_factor(batch.requests),
+            // pure factor serving: heterogeneous batch, no merged cache,
+            // no merge queue — straight to decode (tiered adapters park
+            // behind a disk fetch first)
+            (MergeStrategy::Factor, _) => {
+                let ready = self.partition_tiered(batch.requests);
+                if !ready.is_empty() {
+                    self.run_batch_factor(ready);
+                }
+            }
             (MergeStrategy::Merged, Some(id)) => self.on_batch_merged(id, batch.requests),
             (MergeStrategy::Auto, Some(id)) => {
+                // tiered factors on disk: no factor fallback — park behind
+                // the in-flight merge without a second counted lookup
+                if self.inflight.contains_key(&id) && !self.factors_available(id) {
+                    self.inflight.get_mut(&id).expect("checked").parked.push(batch.requests);
+                    return;
+                }
                 // one counted lookup per batch, same as the merged path
                 if self.cache.get(&id).is_some() {
                     self.run_batch_merged(id, batch.requests);
@@ -581,7 +692,15 @@ impl Worker {
                         );
                         self.submit_merge(id);
                     }
-                    self.run_batch_factor(batch.requests);
+                    if self.factors_available(id) {
+                        self.run_batch_factor(batch.requests);
+                    } else {
+                        self.inflight
+                            .get_mut(&id)
+                            .expect("just ensured")
+                            .parked
+                            .push(batch.requests);
+                    }
                 }
             }
             (_, None) => {
@@ -621,12 +740,45 @@ impl Worker {
         let tx = self.self_tx.clone();
         let job = MergeJob {
             adapter: id,
-            done: Box::new(move |result, host_time| {
+            kind: JobKind::Merge(Box::new(move |result, host_time| {
                 let _ = tx.send(WorkerMsg::Merged { seq, adapter: id, result, host_time });
-            }),
+            })),
         };
         if self.merge_tx.send(job).is_err() {
-            self.ingest_merged(seq, id, Err(anyhow!("merge pool unavailable")), Duration::ZERO);
+            self.ingest(
+                seq,
+                HeldJob::Merge {
+                    adapter: id,
+                    result: Err(anyhow!("merge pool unavailable")),
+                    host_time: Duration::ZERO,
+                },
+            );
+        }
+    }
+
+    /// Queue a disk-tier factor fetch on the merge pool (same threads, so
+    /// scripted disk latency parks off the executor workers; same
+    /// sequence numbering, so merge and fetch completions share one
+    /// deterministic ingest order under the virtual clock).
+    fn submit_fetch(&mut self, id: AdapterId) {
+        let seq = self.merge_seq;
+        self.merge_seq += 1;
+        let tx = self.self_tx.clone();
+        let job = MergeJob {
+            adapter: id,
+            kind: JobKind::Fetch(Box::new(move |result, host_time| {
+                let _ = tx.send(WorkerMsg::Fetched { seq, adapter: id, result, host_time });
+            })),
+        };
+        if self.merge_tx.send(job).is_err() {
+            self.ingest(
+                seq,
+                HeldJob::Fetch {
+                    adapter: id,
+                    result: Err(anyhow!("merge pool unavailable")),
+                    host_time: Duration::ZERO,
+                },
+            );
         }
     }
 
@@ -643,21 +795,168 @@ impl Worker {
     /// sequencing would park a fast adapter's batches behind another
     /// adapter's slow merge (cross-adapter head-of-line blocking), and
     /// production has no byte-identical-trace contract to pay for.
-    fn ingest_merged(
-        &mut self,
-        seq: u64,
-        adapter: AdapterId,
-        result: anyhow::Result<Vec<Tensor>>,
-        host_time: Duration,
-    ) {
+    fn ingest(&mut self, seq: u64, job: HeldJob) {
         if !self.clock.is_virtual() {
-            self.on_merged(adapter, result, host_time);
+            self.apply_job(job);
             return;
         }
-        self.held.insert(seq, HeldMerge { adapter, result, host_time });
-        while let Some(h) = self.held.remove(&self.next_ingest) {
+        self.held.insert(seq, job);
+        while let Some(j) = self.held.remove(&self.next_ingest) {
             self.next_ingest += 1;
-            self.on_merged(h.adapter, h.result, h.host_time);
+            self.apply_job(j);
+        }
+    }
+
+    fn apply_job(&mut self, job: HeldJob) {
+        match job {
+            HeldJob::Merge { adapter, result, host_time } => {
+                self.on_merged(adapter, result, host_time)
+            }
+            HeldJob::Fetch { adapter, result, host_time } => {
+                self.on_fetched(adapter, result, host_time)
+            }
+        }
+    }
+
+    /// A disk-tier fetch landed: install the packed factors in the factor
+    /// cache, ack prefetch waiters, and decode everything parked behind
+    /// the load. Fetch host time (including scripted disk latency) records
+    /// into the merge-latency histogram — it is the same class of
+    /// background host work.
+    fn on_fetched(
+        &mut self,
+        id: AdapterId,
+        result: anyhow::Result<Arc<StoredAdapter>>,
+        host_time: Duration,
+    ) {
+        let Some(fl) = self.fetching.remove(&id) else { return };
+        match result {
+            Ok(arc) => {
+                if let Some(h) = self.metrics.merge_latency.as_mut() {
+                    h.record(host_time);
+                }
+                let bytes = arc.bytes();
+                self.factor_cache.insert(id, arc, bytes);
+                for ack in fl.waiters {
+                    let _ = ack.send(Ok(()));
+                }
+                if !fl.parked.is_empty() {
+                    self.drain_fetch_parked(fl.parked);
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for ack in fl.waiters {
+                    let _ = ack.send(Err(anyhow!("{msg}")));
+                }
+                for r in fl.parked {
+                    let _ = r.payload.1.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
+    /// Decode the requests that parked behind a completed fetch. The
+    /// continuous scheduler feeds them all into one factor-form session
+    /// (lanes admit incrementally, so the group may exceed a bucket); the
+    /// lock-step fallback chunks to the largest compiled bucket.
+    fn drain_fetch_parked(&mut self, parked: Vec<Queued>) {
+        #[cfg(not(feature = "pjrt"))]
+        if self.continuous {
+            self.run_group_factor(parked, 1);
+            return;
+        }
+        let bucket = self.progs.last().expect("buckets validated non-empty").0;
+        let mut head = parked;
+        while !head.is_empty() {
+            let tail = head.split_off(head.len().min(bucket));
+            self.run_batch_factor(std::mem::take(&mut head));
+            head = tail;
+        }
+    }
+
+    /// Split factor-path requests into ready (factors in RAM) vs parked
+    /// behind a disk fetch. Exactly one factor-cache miss is counted per
+    /// submitted fetch and none while one is in flight, so on the request
+    /// path `factor_cache.misses == tier disk loads`.
+    fn partition_tiered(&mut self, requests: Vec<Queued>) -> Vec<Queued> {
+        if self.shared.tier.is_none() {
+            return requests;
+        }
+        enum Place {
+            Resident,
+            Tiered,
+            Gone,
+        }
+        let mut ready = Vec::with_capacity(requests.len());
+        for q in requests {
+            let id = q.adapter;
+            let place = self.shared.with_registry(|r| match r.get(id) {
+                Some(e) if e.resident().is_some() => Place::Resident,
+                Some(_) => Place::Tiered,
+                None => Place::Gone,
+            });
+            match place {
+                Place::Resident => ready.push(q),
+                Place::Gone => {
+                    let _ = q.payload.1.send(Err(anyhow!("unknown adapter {id}")));
+                }
+                Place::Tiered => {
+                    if let Some(fl) = self.fetching.get_mut(&id) {
+                        // fetch already in flight: park without counting
+                        fl.parked.push(q);
+                    } else if self.factor_cache.get(&id).is_some() {
+                        ready.push(q);
+                    } else {
+                        // the probe above counted this load's one miss
+                        self.fetching
+                            .insert(id, FetchInflight { parked: vec![q], waiters: Vec::new() });
+                        self.submit_fetch(id);
+                    }
+                }
+            }
+        }
+        ready
+    }
+
+    /// Whether `id`'s packed factors can be bound right now (registry
+    /// resident, or in the factor cache). Unknown adapters report `true`
+    /// so the caller's normal unknown-adapter error path fires instead.
+    fn factors_available(&self, id: AdapterId) -> bool {
+        if self.shared.tier.is_none() {
+            return true;
+        }
+        if self.factor_cache.peek(&id).is_some() {
+            return true;
+        }
+        self.shared.with_registry(|r| r.get(id).is_none_or(|e| e.resident().is_some()))
+    }
+
+    /// Predictive warm-ahead: pull an adapter toward the serving tier
+    /// ahead of its predicted next arrival. Never counts cache stats and
+    /// never parks requests — purely a background fill.
+    fn warm(&mut self, id: AdapterId) {
+        if self.shared.with_registry(|r| r.get(id).is_none()) {
+            return;
+        }
+        if self.strategy == MergeStrategy::Factor {
+            if self.factor_cache.touch(&id)
+                || self.fetching.contains_key(&id)
+                || self.factors_available(id)
+            {
+                return;
+            }
+            self.fetching.insert(id, FetchInflight::default());
+            self.submit_fetch(id);
+        } else {
+            if self.cache.touch(&id) || self.inflight.contains_key(&id) {
+                return;
+            }
+            self.inflight.insert(
+                id,
+                Inflight { miss_counted: false, parked: Vec::new(), waiters: Vec::new() },
+            );
+            self.submit_merge(id);
         }
     }
 
@@ -750,28 +1049,63 @@ impl Worker {
     /// factor view and serve the (possibly heterogeneous) batch over the
     /// unmerged base weights. No cache, no merge queue.
     fn run_batch_factor(&mut self, requests: Vec<Queued>) {
-        let arcs: Vec<Option<Arc<StoredAdapter>>> = self.shared.with_registry(|r| {
-            requests.iter().map(|q| r.get(q.adapter).map(|e| e.adapter.clone())).collect()
-        });
-        // adapters unregistered since enqueue fail their own requests only
-        let mut valid = Vec::with_capacity(requests.len());
-        let mut adapters = Vec::with_capacity(requests.len());
-        for (r, arc) in requests.into_iter().zip(arcs) {
-            match arc {
-                Some(a) => {
-                    valid.push(r);
-                    adapters.push(a);
-                }
-                None => {
-                    let _ = r.payload.1.send(Err(anyhow!("unknown adapter {}", r.adapter)));
-                }
-            }
-        }
+        let (valid, adapters) = self.resolve_factors(requests);
         if valid.is_empty() {
             return;
         }
         let outcome = self.decode_factor(&valid, &adapters);
         self.finish_batch(valid, outcome, true);
+    }
+
+    /// Resolve each request's adapter to packed factors: the registry's
+    /// resident arc, else the worker's factor cache (peek — the request
+    /// path's counted probe already happened in `partition_tiered`).
+    /// A vanished or unexpectedly non-resident adapter fails only its own
+    /// requests.
+    fn resolve_factors(&mut self, requests: Vec<Queued>) -> (Vec<Queued>, Vec<Arc<StoredAdapter>>) {
+        enum Got {
+            Resident(Arc<StoredAdapter>),
+            Tiered,
+            Gone,
+        }
+        let got: Vec<Got> = self.shared.with_registry(|r| {
+            requests
+                .iter()
+                .map(|q| match r.get(q.adapter) {
+                    Some(e) => match e.resident() {
+                        Some(a) => Got::Resident(Arc::clone(a)),
+                        None => Got::Tiered,
+                    },
+                    None => Got::Gone,
+                })
+                .collect()
+        });
+        let mut valid = Vec::with_capacity(requests.len());
+        let mut adapters = Vec::with_capacity(requests.len());
+        for (r, g) in requests.into_iter().zip(got) {
+            match g {
+                Got::Resident(a) => {
+                    valid.push(r);
+                    adapters.push(a);
+                }
+                Got::Tiered => match self.factor_cache.peek(&r.adapter).cloned() {
+                    Some(a) => {
+                        valid.push(r);
+                        adapters.push(a);
+                    }
+                    None => {
+                        let _ = r
+                            .payload
+                            .1
+                            .send(Err(anyhow!("adapter {} factors not resident", r.adapter)));
+                    }
+                },
+                Got::Gone => {
+                    let _ = r.payload.1.send(Err(anyhow!("unknown adapter {}", r.adapter)));
+                }
+            }
+        }
+        (valid, adapters)
     }
 
     /// Respond + account for one decoded (or failed) batch.
@@ -824,22 +1158,7 @@ impl Worker {
     /// `on_batches_continuous`).
     #[cfg(not(feature = "pjrt"))]
     fn run_group_factor(&mut self, requests: Vec<Queued>, counted: u64) {
-        let arcs: Vec<Option<Arc<StoredAdapter>>> = self.shared.with_registry(|r| {
-            requests.iter().map(|q| r.get(q.adapter).map(|e| e.adapter.clone())).collect()
-        });
-        let mut valid = Vec::with_capacity(requests.len());
-        let mut adapters = Vec::with_capacity(requests.len());
-        for (r, arc) in requests.into_iter().zip(arcs) {
-            match arc {
-                Some(a) => {
-                    valid.push(r);
-                    adapters.push(a);
-                }
-                None => {
-                    let _ = r.payload.1.send(Err(anyhow!("unknown adapter {}", r.adapter)));
-                }
-            }
-        }
+        let (valid, adapters) = self.resolve_factors(requests);
         if valid.is_empty() {
             return;
         }

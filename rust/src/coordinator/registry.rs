@@ -75,15 +75,52 @@ impl crate::loraquant::FactorSource for StoredAdapter {
     }
 }
 
-/// Entry metadata kept alongside the adapter. The adapter itself is
-/// `Arc`-shared so executor workers can hold a batch's adapters across a
-/// factor-form decode without copying packed bytes or holding the
-/// registry lock.
+/// Where an adapter's packed factors currently live.
+#[derive(Debug, Clone)]
+pub enum AdapterSlot {
+    /// Factors resident in RAM, `Arc`-shared so executor workers can
+    /// hold a batch's adapters across a factor-form decode without
+    /// copying packed bytes or holding the registry lock.
+    Resident(Arc<StoredAdapter>),
+    /// Factors demoted to the on-disk tier (`coordinator::tier`); the
+    /// registry keeps only metadata and the tier loads on miss.
+    Tiered,
+}
+
+/// Entry metadata kept alongside the adapter. Size/precision accounting
+/// is captured at registration so it survives demotion to disk.
 #[derive(Debug, Clone)]
 pub struct RegistryEntry {
-    pub adapter: Arc<StoredAdapter>,
+    slot: AdapterSlot,
     /// Which eval task this adapter serves (used by examples/benches).
     pub task: String,
+    bytes: usize,
+    avg_bits: f64,
+}
+
+impl RegistryEntry {
+    /// The resident factors, if any.
+    pub fn resident(&self) -> Option<&Arc<StoredAdapter>> {
+        match &self.slot {
+            AdapterSlot::Resident(a) => Some(a),
+            AdapterSlot::Tiered => None,
+        }
+    }
+
+    /// Whether the factors have been demoted to the disk tier.
+    pub fn is_tiered(&self) -> bool {
+        matches!(self.slot, AdapterSlot::Tiered)
+    }
+
+    /// At-rest packed bytes (valid whether resident or tiered).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Average bits per original parameter (Eq. 10; 16 for FP16).
+    pub fn avg_bits(&self) -> f64 {
+        self.avg_bits
+    }
 }
 
 /// The adapter store.
@@ -98,12 +135,32 @@ impl AdapterRegistry {
         Self::default()
     }
 
-    /// Register an adapter; returns its id.
+    /// Register an adapter (resident); returns its id.
     pub fn register(&mut self, adapter: StoredAdapter, task: impl Into<String>) -> AdapterId {
         let id = self.next_id;
         self.next_id += 1;
-        self.entries.insert(id, RegistryEntry { adapter: Arc::new(adapter), task: task.into() });
+        let (bytes, avg_bits) = (adapter.bytes(), adapter.avg_bits());
+        self.entries.insert(
+            id,
+            RegistryEntry {
+                slot: AdapterSlot::Resident(Arc::new(adapter)),
+                task: task.into(),
+                bytes,
+                avg_bits,
+            },
+        );
         id
+    }
+
+    /// Demote an adapter's factors to the disk tier, dropping the
+    /// resident `Arc` (in-flight batches holding clones keep decoding).
+    /// Returns the dropped handle, or `None` if absent/already tiered.
+    pub fn demote(&mut self, id: AdapterId) -> Option<Arc<StoredAdapter>> {
+        let e = self.entries.get_mut(&id)?;
+        match std::mem::replace(&mut e.slot, AdapterSlot::Tiered) {
+            AdapterSlot::Resident(a) => Some(a),
+            AdapterSlot::Tiered => None,
+        }
     }
 
     /// Remove an adapter (returns whether it existed).
@@ -127,9 +184,15 @@ impl AdapterRegistry {
         self.entries.keys().copied().collect()
     }
 
-    /// Total at-rest bytes across all adapters (Fig. 6 y-axis).
+    /// Total at-rest bytes across all adapters (Fig. 6 y-axis),
+    /// wherever they live.
     pub fn total_bytes(&self) -> usize {
-        self.entries.values().map(|e| e.adapter.bytes()).sum()
+        self.entries.values().map(|e| e.bytes).sum()
+    }
+
+    /// RAM-resident at-rest bytes only (excludes tiered adapters).
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.values().filter(|e| !e.is_tiered()).map(|e| e.bytes).sum()
     }
 
     /// Mean avg-bits across adapters.
@@ -137,7 +200,7 @@ impl AdapterRegistry {
         if self.entries.is_empty() {
             return 0.0;
         }
-        self.entries.values().map(|e| e.adapter.avg_bits()).sum::<f64>() / self.entries.len() as f64
+        self.entries.values().map(|e| e.avg_bits).sum::<f64>() / self.entries.len() as f64
     }
 }
 
@@ -182,6 +245,29 @@ mod tests {
         assert!(q.bytes() * 4 < fp.bytes(), "quant {} vs fp16 {}", q.bytes(), fp.bytes());
         assert!(q.avg_bits() < 2.5);
         assert_eq!(fp.avg_bits(), 16.0);
+    }
+
+    #[test]
+    fn demote_keeps_metadata_but_drops_residency() {
+        let mut rng = Rng::new(145);
+        let mut reg = AdapterRegistry::new();
+        let a = quantized(&mut rng);
+        let (bytes, bits) = (a.bytes(), a.avg_bits());
+        let id = reg.register(a, "t");
+        assert!(reg.get(id).unwrap().resident().is_some());
+        assert_eq!(reg.resident_bytes(), bytes);
+
+        let dropped = reg.demote(id).expect("first demotion returns the arc");
+        assert_eq!(dropped.bytes(), bytes);
+        let e = reg.get(id).unwrap();
+        assert!(e.is_tiered() && e.resident().is_none());
+        // accounting survives demotion; residency accounting does not
+        assert_eq!((e.bytes(), reg.total_bytes()), (bytes, bytes));
+        assert_eq!(e.avg_bits(), bits);
+        assert_eq!(reg.resident_bytes(), 0);
+
+        assert!(reg.demote(id).is_none(), "already tiered");
+        assert!(reg.demote(999).is_none(), "unknown id");
     }
 
     #[test]

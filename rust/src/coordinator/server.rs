@@ -16,10 +16,13 @@
 //! traffic through the same merge pipeline.
 
 use super::cache::CacheStats;
-use super::merge_worker::{host_merge_fn, MergeHook, MergePool, MergeStats, MergeStatsSnapshot, Shared};
+use super::merge_worker::{
+    host_fetch_fn, host_merge_fn, MergeHook, MergePool, MergeStats, MergeStatsSnapshot, Shared,
+};
 use super::metrics::ServerMetrics;
 use super::pool::{route, worker_main, WorkerConfig, WorkerMsg, WorkerSnapshot};
 use super::registry::{AdapterId, AdapterRegistry, StoredAdapter};
+use super::tier::{AdapterTier, DiskFault, LoadHook};
 use crate::clock::Clock;
 use crate::model::BaseWeights;
 use anyhow::{bail, Context};
@@ -70,6 +73,38 @@ impl std::fmt::Display for MergeStrategy {
     }
 }
 
+/// Disk-tier configuration (DESIGN.md §14). When set, quantized
+/// adapters spill to `adapter_dir` at registration (the registry keeps
+/// metadata only) and their packed factors page back in through the
+/// merge pool on demand, bounded in RAM by a byte-budgeted per-worker
+/// factor cache.
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    /// Directory holding one packed tensorfile per adapter.
+    pub adapter_dir: PathBuf,
+    /// Total in-RAM factor-cache budget in bytes, split across workers.
+    pub factor_cache_bytes: usize,
+    /// Scripted disk-read latency (scenario faults; DESIGN.md §14).
+    pub disk_fault: Option<DiskFault>,
+    /// Warm adapters ahead of their predicted next arrival (per-tenant
+    /// inter-arrival EWMA; `workload::ArrivalPredictor`).
+    pub predictive_prefetch: bool,
+    /// Instrumentation called at the start of every disk load.
+    pub load_hook: Option<LoadHook>,
+}
+
+impl TierConfig {
+    pub fn new(adapter_dir: impl Into<PathBuf>, factor_cache_bytes: usize) -> Self {
+        Self {
+            adapter_dir: adapter_dir.into(),
+            factor_cache_bytes,
+            disk_fault: None,
+            predictive_prefetch: false,
+            load_hook: None,
+        }
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -115,6 +150,9 @@ pub struct CoordinatorConfig {
     /// pool. Real by default; the scenario simulator injects a virtual
     /// clock here to replay traces deterministically (DESIGN.md §9).
     pub clock: Clock,
+    /// Optional disk tier below the caches (DESIGN.md §14). `None` keeps
+    /// every registered adapter RAM-resident (the pre-tiering behavior).
+    pub tier: Option<TierConfig>,
 }
 
 impl CoordinatorConfig {
@@ -133,6 +171,7 @@ impl CoordinatorConfig {
             prefill_chunk: 0,
             merge_hook: None,
             clock: Clock::real(),
+            tier: None,
         }
     }
 
@@ -178,6 +217,12 @@ impl CoordinatorConfig {
     /// pool run in simulated time).
     pub fn with_clock(mut self, clock: Clock) -> Self {
         self.clock = clock;
+        self
+    }
+
+    /// Builder sugar: enable the disk tier.
+    pub fn with_tier(mut self, tier: TierConfig) -> Self {
+        self.tier = Some(tier);
         self
     }
 
@@ -255,10 +300,20 @@ impl Coordinator {
         }
         let n_workers = cfg.workers.max(1);
         let base = BaseWeights::load(cfg.artifacts_dir.join(&cfg.model))?;
-        let shared = Arc::new(Shared::new(base));
+        let tier = match &cfg.tier {
+            Some(t) => Some(AdapterTier::new(
+                t.adapter_dir.clone(),
+                cfg.clock.clone(),
+                t.disk_fault,
+                t.load_hook.clone(),
+            )?),
+            None => None,
+        };
+        let shared = Arc::new(Shared::new(base, tier));
         let merge_pool = MergePool::new(
             cfg.merge_workers,
             host_merge_fn(Arc::clone(&shared), cfg.merge_hook.clone()),
+            host_fetch_fn(Arc::clone(&shared)),
             cfg.clock.clone(),
         );
         let merge_stats = merge_pool.stats();
@@ -275,6 +330,12 @@ impl Coordinator {
             continuous: cfg.continuous && cfg!(not(feature = "pjrt")),
             prefill_chunk: cfg.prefill_chunk,
             clock: cfg.clock.clone(),
+            factor_cache_bytes: cfg
+                .tier
+                .as_ref()
+                .map(|t| (t.factor_cache_bytes / n_workers).max(1))
+                .unwrap_or(1),
+            predictive_prefetch: cfg.tier.as_ref().is_some_and(|t| t.predictive_prefetch),
         };
 
         let mut txs = Vec::with_capacity(n_workers);
@@ -369,13 +430,38 @@ impl Coordinator {
         task: impl Into<String>,
     ) -> anyhow::Result<AdapterId> {
         let task = task.into();
-        Ok(self.links.shared.with_registry_mut(|r| r.register(adapter, task)))
+        let id = self.links.shared.with_registry_mut(|r| r.register(adapter, task));
+        if let Some(tier) = self.links.shared.tier.as_ref() {
+            let arc = self
+                .links
+                .shared
+                .with_registry(|r| r.get(id).and_then(|e| e.resident().cloned()));
+            if let Some(a) = arc {
+                match tier.put(id, &a) {
+                    // spilled: drop the resident copy — the factor cache
+                    // and merge pool page it back in on demand
+                    Ok(true) => {
+                        self.links.shared.with_registry_mut(|r| r.demote(id));
+                    }
+                    // FP16 adapters have no at-rest codec: stay resident
+                    Ok(false) => {}
+                    Err(e) => {
+                        self.links.shared.with_registry_mut(|r| r.remove(id));
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        Ok(id)
     }
 
     /// Remove an adapter and invalidate its cached merged weights.
     pub fn remove_adapter(&self, id: AdapterId) -> anyhow::Result<bool> {
         let existed = self.links.shared.with_registry_mut(|r| r.remove(id));
         if existed {
+            if let Some(tier) = self.links.shared.tier.as_ref() {
+                tier.remove(id);
+            }
             let _ = self.worker_for(id).send(WorkerMsg::Invalidate(id));
         }
         Ok(existed)
@@ -417,6 +503,30 @@ impl Coordinator {
         }
         let n = self.links.shared.with_registry(|r| r.len());
         Ok((metrics, cache, n))
+    }
+
+    /// Aggregated factor-cache stats across workers (all zero when
+    /// tiering is off).
+    pub fn factor_cache_stats(&self) -> anyhow::Result<CacheStats> {
+        let snaps = self.metrics_per_worker()?;
+        let mut st = CacheStats::default();
+        for s in &snaps {
+            st.hits += s.factor_cache.hits;
+            st.misses += s.factor_cache.misses;
+            st.evictions += s.factor_cache.evictions;
+        }
+        Ok(st)
+    }
+
+    /// Disk-tier counters `(disk_loads, spilled)`; zeros when tiering is
+    /// off.
+    pub fn tier_stats(&self) -> (u64, u64) {
+        self.links
+            .shared
+            .tier
+            .as_ref()
+            .map(|t| (t.disk_loads(), t.spilled()))
+            .unwrap_or((0, 0))
     }
 
     /// Stop the pool (in-flight and parked requests finish first).

@@ -1,0 +1,208 @@
+//! The on-disk adapter tier: packed factors at rest, one tensorfile per
+//! adapter, loaded by explicit read-on-miss (no libc / mmap dependency).
+//!
+//! The paper's ultra-low-bit factors are exactly small enough to page in
+//! on demand: a 2@0.9 adapter is a few KB, so the registry can hold
+//! metadata for millions of tenants while only the working set's factors
+//! occupy RAM (the per-worker factor cache, `coordinator/pool.rs`) and
+//! only the hot subset's merged weights occupy the device LruCache above
+//! it. All loads run on merge-pool threads — never on an executor worker
+//! — so a scripted disk-latency fault can park on the virtual clock
+//! without deadlocking the scenario driver's metrics barrier (the same
+//! contract as `SlowMerge`; DESIGN.md §14).
+
+use super::registry::{AdapterId, StoredAdapter};
+use crate::adapter::store;
+use crate::clock::Clock;
+use anyhow::Context;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Observer called with the adapter id at the start of every disk load,
+/// on the loading (merge-pool) thread — the scenario harness records
+/// `DiskLoad` events through it, mirroring `MergeHook`.
+#[derive(Clone)]
+pub struct LoadHook(Arc<dyn Fn(AdapterId) + Send + Sync>);
+
+impl LoadHook {
+    pub fn new(f: impl Fn(AdapterId) + Send + Sync + 'static) -> Self {
+        Self(Arc::new(f))
+    }
+
+    pub fn call(&self, id: AdapterId) {
+        (self.0)(id)
+    }
+}
+
+impl std::fmt::Debug for LoadHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("LoadHook(..)")
+    }
+}
+
+/// Scripted disk-read latency (`FaultPlan::disk_latency`): every load of
+/// a matching adapter parks on the clock for `delay` before reading.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DiskFault {
+    /// Restrict to one adapter; `None` hits every load.
+    pub adapter: Option<AdapterId>,
+    pub delay: Duration,
+}
+
+/// The disk tier. Thread-safe: loads may run concurrently on several
+/// merge-pool threads.
+pub struct AdapterTier {
+    dir: PathBuf,
+    clock: Clock,
+    fault: Option<DiskFault>,
+    hook: Option<LoadHook>,
+    disk_loads: AtomicU64,
+    spilled: AtomicU64,
+}
+
+impl std::fmt::Debug for AdapterTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AdapterTier")
+            .field("dir", &self.dir)
+            .field("fault", &self.fault)
+            .field("disk_loads", &self.disk_loads)
+            .finish_non_exhaustive()
+    }
+}
+
+impl AdapterTier {
+    /// Open (creating if needed) a tier rooted at `dir`.
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        clock: Clock,
+        fault: Option<DiskFault>,
+        hook: Option<LoadHook>,
+    ) -> anyhow::Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating adapter tier dir {}", dir.display()))?;
+        Ok(Self {
+            dir,
+            clock,
+            fault,
+            hook,
+            disk_loads: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path(&self, id: AdapterId) -> PathBuf {
+        self.dir.join(format!("adapter-{id:08}.lq.bin"))
+    }
+
+    /// Spill an adapter's packed factors to disk. Returns `true` when it
+    /// was written (and may therefore be demoted). FP16 adapters have no
+    /// at-rest codec (`LoraAdapter` is load-only) and stay RAM-resident:
+    /// `false` without touching disk.
+    pub fn put(&self, id: AdapterId, adapter: &StoredAdapter) -> anyhow::Result<bool> {
+        match adapter {
+            StoredAdapter::Quantized(q) => {
+                store::save(self.path(id), q)
+                    .with_context(|| format!("spilling adapter {id} to tier"))?;
+                self.spilled.fetch_add(1, Ordering::SeqCst);
+                Ok(true)
+            }
+            StoredAdapter::Fp16(_) => Ok(false),
+        }
+    }
+
+    /// Read an adapter back from disk. Must only be called from a
+    /// merge-pool thread: a scripted disk fault parks here on the clock,
+    /// and executor workers sleeping on the virtual clock would deadlock
+    /// the quiescence barrier.
+    pub fn load(&self, id: AdapterId) -> anyhow::Result<Arc<StoredAdapter>> {
+        if let Some(h) = &self.hook {
+            h.call(id);
+        }
+        if let Some(f) = &self.fault {
+            if f.adapter.is_none_or(|a| a == id) {
+                let now = self.clock.now();
+                self.clock.sleep_until(now + f.delay);
+            }
+        }
+        let q = store::load(self.path(id))
+            .with_context(|| format!("loading adapter {id} from tier"))?;
+        self.disk_loads.fetch_add(1, Ordering::SeqCst);
+        Ok(Arc::new(StoredAdapter::Quantized(q)))
+    }
+
+    /// Best-effort removal of a spilled file (adapter unregistered).
+    pub fn remove(&self, id: AdapterId) {
+        let _ = std::fs::remove_file(self.path(id));
+    }
+
+    /// Completed disk loads since construction.
+    pub fn disk_loads(&self) -> u64 {
+        self.disk_loads.load(Ordering::SeqCst)
+    }
+
+    /// Adapters spilled since construction.
+    pub fn spilled(&self) -> u64 {
+        self.spilled.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::LoraAdapter;
+    use crate::testutil::{synth_model_config, synth_quantized_adapter, Rng};
+
+    fn tmp_tier(tag: &str) -> AdapterTier {
+        let dir = std::env::temp_dir().join(format!("lq_tier_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        AdapterTier::new(dir, Clock::real(), None, None).unwrap()
+    }
+
+    #[test]
+    fn put_load_remove_roundtrip() {
+        let tier = tmp_tier("rt");
+        let cfg = synth_model_config();
+        let adapter = synth_quantized_adapter(&cfg, 7);
+        assert!(tier.put(3, &adapter).unwrap());
+        let back = tier.load(3).unwrap();
+        assert_eq!(tier.disk_loads(), 1);
+        assert_eq!(back.bytes(), adapter.bytes());
+        // dequantized deltas are bitwise-stable through the codec
+        let (d0, d1) = (adapter.deltas(), back.deltas());
+        assert_eq!(d0.len(), d1.len());
+        for (site, m) in &d0 {
+            assert!(m.sub(&d1[site]).fro_norm() == 0.0, "{site} drifted through disk");
+        }
+        tier.remove(3);
+        assert!(tier.load(3).is_err(), "removed file must not load");
+        let _ = std::fs::remove_dir_all(tier.dir());
+    }
+
+    #[test]
+    fn fp16_adapters_stay_resident() {
+        let tier = tmp_tier("fp");
+        let mut rng = Rng::new(9);
+        let (b, a) = rng.lora_pair(16, 16, 4, 0.7);
+        let mut fp = LoraAdapter::default();
+        fp.sites.insert("l0.wq".into(), (a, b));
+        assert!(!tier.put(1, &StoredAdapter::Fp16(fp)).unwrap());
+        assert!(tier.load(1).is_err(), "nothing was spilled");
+        assert_eq!(tier.spilled(), 0);
+        let _ = std::fs::remove_dir_all(tier.dir());
+    }
+
+    #[test]
+    fn missing_file_is_err_not_panic() {
+        let tier = tmp_tier("miss");
+        let err = tier.load(42).unwrap_err().to_string();
+        assert!(err.contains("adapter 42"), "{err}");
+        let _ = std::fs::remove_dir_all(tier.dir());
+    }
+}

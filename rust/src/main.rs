@@ -7,11 +7,14 @@
 //! loraquant serve    --model tiny-llama-s --requests 200 --rate 200 --adapters 12 \
 //!                    [--workers 4] [--merge-workers 2] [--compute-threads 2] \
 //!                    [--buckets 1,8] [--prefetch] [--lockstep] \
-//!                    [--prefill-chunk N] [--merge-strategy merged|factor|auto]
+//!                    [--prefill-chunk N] [--merge-strategy merged|factor|auto] \
+//!                    [--adapter-dir DIR] [--factor-cache-kb N] [--disk-latency-ms N]
 //! loraquant serve-sim --requests 200 --rate 200 --adapters 4 --merge-strategy all \
 //!                    [--workers 4] [--compute-threads 2] [--zipf 1.1] [--seed 7] \
 //!                    [--slow-merge-ms 50] [--churn] [--prefetch] [--log] \
-//!                    [--lockstep] [--prefill-chunk N] [--golden PATH] [--model NAME]
+//!                    [--lockstep] [--prefill-chunk N] [--golden PATH] [--model NAME] \
+//!                    [--tiered] [--factor-cache-kb N] [--disk-latency-ms N] \
+//!                    [--predictive-prefetch]
 //!
 //! `--lockstep` disables the continuous-batching scheduler (DESIGN.md
 //! §11) and decodes batch by batch — the comparison baseline for the
@@ -19,7 +22,12 @@
 //! long-prompt prefill into N-token chunks inside the continuous
 //! scheduler (DESIGN.md §13) so short requests are not blocked behind a
 //! long prompt; 0 (the default) keeps monolithic admission. Tokens are
-//! bit-identical at every chunk size.
+//! bit-identical at every chunk size. `--adapter-dir` (serve) and
+//! `--tiered` (serve-sim) spill packed adapters to an on-disk tier at
+//! registration and page factors back on miss through a byte-budgeted
+//! per-worker cache (DESIGN.md §14); `--disk-latency-ms` scripts the
+//! read latency, and `--predictive-prefetch` warms tenants whose
+//! arrival cadence says they are due.
 //! loraquant info     --model tiny-llama-s
 //! ```
 //!
@@ -34,7 +42,8 @@ use anyhow::{bail, Context};
 use loraquant::adapter::{store, LoraAdapter};
 use loraquant::cli::Args;
 use loraquant::coordinator::{
-    Coordinator, CoordinatorConfig, GenRequest, MergeStrategy, StoredAdapter,
+    Coordinator, CoordinatorConfig, DiskFault, GenRequest, MergeStrategy, StoredAdapter,
+    TierConfig,
 };
 use loraquant::eval::{evaluate, EvalSet};
 use loraquant::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
@@ -160,6 +169,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.merge_strategy = args.str_or("merge-strategy", "merged").parse()?;
     cfg.continuous = !args.has_flag("lockstep");
     cfg.prefill_chunk = args.usize_or("prefill-chunk", 0)?;
+    if let Some(adapter_dir) = args.opt("adapter-dir") {
+        let mut tier = TierConfig::new(adapter_dir, args.usize_or("factor-cache-kb", 1 << 10)? << 10);
+        if let Some(ms) = args.opt("disk-latency-ms") {
+            let delay = Duration::from_millis(ms.parse().context("--disk-latency-ms: bad integer")?);
+            tier.disk_fault = Some(DiskFault { adapter: None, delay });
+        }
+        tier.predictive_prefetch = args.has_flag("predictive-prefetch");
+        cfg.tier = Some(tier);
+    }
     let workers = cfg.workers;
     let strategy = cfg.merge_strategy;
     let (coord, join) = Coordinator::start(cfg)?;
@@ -222,6 +240,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cache.evictions,
         reg
     );
+    let (disk_loads, spilled) = coord.tier_stats();
+    if spilled > 0 {
+        let fc = coord.factor_cache_stats()?;
+        println!(
+            "  tier: spilled={spilled} disk_loads={disk_loads} factor-cache: hits={} misses={} evictions={}",
+            fc.hits, fc.misses, fc.evictions
+        );
+    }
     if workers > 1 {
         for s in coord.metrics_per_worker()? {
             println!(
@@ -242,7 +268,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// Replay a deterministic serving scenario under virtual time.
 fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
     use loraquant::scenario::{
-        run_scenario, ChurnAction, ClockMode, FaultPlan, ScenarioEnv, ScenarioSpec, SlowMerge,
+        run_scenario, ChurnAction, ClockMode, DiskLatency, FaultPlan, ScenarioEnv, ScenarioSpec,
+        SlowMerge,
     };
 
     if cfg!(feature = "pjrt") && args.opt("model").is_none() {
@@ -270,6 +297,14 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             .map(|v| v.parse().context("--slow-merge-adapter: bad id"))
             .transpose()?;
         faults.slow_merge = Some(SlowMerge { adapter, delay });
+    }
+    if let Some(ms) = args.opt("disk-latency-ms") {
+        let delay = Duration::from_millis(ms.parse().context("--disk-latency-ms: bad integer")?);
+        let adapter = args
+            .opt("disk-latency-adapter")
+            .map(|v| v.parse().context("--disk-latency-adapter: bad id"))
+            .transpose()?;
+        faults.disk_latency = Some(DiskLatency { adapter, delay });
     }
     if args.has_flag("churn") {
         // a scripted mid-trace outage + arrival: remove tenant 0 a third
@@ -313,6 +348,9 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             max_new_spread: args.usize_or("max-new-spread", 0)?,
             prefetch: args.has_flag("prefetch"),
             faults: faults.clone(),
+            tiered: args.has_flag("tiered"),
+            factor_cache_bytes: args.usize_or("factor-cache-kb", 1 << 10)? << 10,
+            predictive_prefetch: args.has_flag("predictive-prefetch"),
         };
         let run = run_scenario(&spec, &env)?;
         print!("{}", run.summary.render());

@@ -20,6 +20,9 @@ pub enum EventKind {
     Remove { adapter: AdapterId },
     /// A merge began on a merge-pool thread (before any scripted delay).
     MergeBegin { adapter: AdapterId },
+    /// A disk-tier factor load began on a merge-pool thread (before any
+    /// scripted disk-latency delay).
+    DiskLoad { adapter: AdapterId },
     /// Prefetch acknowledged for an adapter.
     Prefetch { adapter: AdapterId, ok: bool },
     /// Request submitted to the coordinator.
@@ -38,10 +41,11 @@ impl EventKind {
             EventKind::Register { .. } => 0,
             EventKind::Remove { .. } => 1,
             EventKind::MergeBegin { .. } => 2,
-            EventKind::Prefetch { .. } => 3,
-            EventKind::Submit { .. } => 4,
-            EventKind::Complete { .. } => 5,
-            EventKind::Fail { .. } => 6,
+            EventKind::DiskLoad { .. } => 3,
+            EventKind::Prefetch { .. } => 4,
+            EventKind::Submit { .. } => 5,
+            EventKind::Complete { .. } => 6,
+            EventKind::Fail { .. } => 7,
         }
     }
 
@@ -50,6 +54,7 @@ impl EventKind {
             EventKind::Register { adapter }
             | EventKind::Remove { adapter }
             | EventKind::MergeBegin { adapter }
+            | EventKind::DiskLoad { adapter }
             | EventKind::Prefetch { adapter, .. }
             | EventKind::Submit { adapter, .. }
             | EventKind::Complete { adapter, .. }
@@ -82,6 +87,9 @@ impl std::fmt::Display for Event {
             EventKind::Remove { adapter } => write!(f, "{t_us:>10} remove   adapter={adapter}"),
             EventKind::MergeBegin { adapter } => {
                 write!(f, "{t_us:>10} merge    adapter={adapter}")
+            }
+            EventKind::DiskLoad { adapter } => {
+                write!(f, "{t_us:>10} diskload adapter={adapter}")
             }
             EventKind::Prefetch { adapter, ok } => {
                 write!(f, "{t_us:>10} prefetch adapter={adapter} ok={ok}")

@@ -58,4 +58,4 @@ pub mod spec;
 
 pub use events::{Event, EventKind};
 pub use sim::{run_scenario, ScenarioRun, ScenarioSummary};
-pub use spec::{ChurnAction, ClockMode, FaultPlan, ScenarioEnv, ScenarioSpec, SlowMerge};
+pub use spec::{ChurnAction, ClockMode, DiskLatency, FaultPlan, ScenarioEnv, ScenarioSpec, SlowMerge};

@@ -21,14 +21,16 @@ use super::events::{render, sort_canonical, Event, EventKind};
 use super::spec::{ChurnAction, ClockMode, ScenarioEnv, ScenarioSpec, SlowMerge};
 use crate::clock::{Clock, VirtualClock};
 use crate::coordinator::{
-    AdapterId, CacheStats, Coordinator, CoordinatorConfig, GenRequest, GenResponse, LatencyStats,
-    MergeHook, MergeStatsSnapshot, MergeStrategy, WorkerSnapshot,
+    AdapterId, CacheStats, Coordinator, CoordinatorConfig, DiskFault, GenRequest, GenResponse,
+    LatencyStats, LoadHook, MergeHook, MergeStatsSnapshot, MergeStrategy, TierConfig,
+    WorkerSnapshot,
 };
 use crate::eval::tasks::TOKENS;
 use crate::testutil::Rng;
 use crate::workload::{generate, Arrival};
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -85,6 +87,13 @@ pub struct ScenarioSummary {
     /// Prefill/admission forward passes across the pool.
     pub prefill_passes: u64,
     pub cache: CacheStats,
+    /// In-RAM factor-cache stats (all zero unless the spec is tiered).
+    pub factor_cache: CacheStats,
+    /// Disk-tier loads completed (zero unless tiered).
+    pub disk_loads: u64,
+    /// Adapters spilled to the disk tier at registration (zero unless
+    /// tiered).
+    pub spilled: u64,
     pub merges: MergeStatsSnapshot,
     /// Real wall-clock time the whole run took (the virtual-clock payoff:
     /// seconds of simulated trace in milliseconds of wall).
@@ -99,6 +108,7 @@ impl ScenarioSummary {
              makespan={:?} p50={:?} p95={:?} max={:?}\n\
              batches={} (factor={}) mean_batch={:.2} tokens={} steps={} prefills={}\n\
              cache: hits={} misses={} evictions={} | merges: started={} peak_overlap={}\n\
+             tier: spilled={} disk_loads={} factor_cache: hits={} misses={} evictions={}\n\
              real wall: {:?}\n",
             self.name,
             self.strategy,
@@ -121,6 +131,11 @@ impl ScenarioSummary {
             self.cache.evictions,
             self.merges.started,
             self.merges.peak_overlap,
+            self.spilled,
+            self.disk_loads,
+            self.factor_cache.hits,
+            self.factor_cache.misses,
+            self.factor_cache.evictions,
             self.real_wall,
         );
         for (id, stats) in &self.per_adapter {
@@ -168,6 +183,36 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
         })
     };
 
+    // The scenario owns the spill directory: unique per run so parallel
+    // tests never share files, removed after the pool drains.
+    let tier_dir = if spec.tiered {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        Some(std::env::temp_dir().join(format!("lq_tier_{}_{seq}", std::process::id())))
+    } else {
+        None
+    };
+    let tier_cfg = tier_dir.as_ref().map(|dir| {
+        let events = Arc::clone(&events);
+        let clock = clock.clone();
+        let mut t = TierConfig::new(dir, spec.factor_cache_bytes);
+        t.predictive_prefetch = spec.predictive_prefetch;
+        t.disk_fault = spec
+            .faults
+            .disk_latency
+            .map(|d| DiskFault { adapter: d.adapter, delay: d.delay });
+        // records DiskLoad on the loading merge-pool thread, before any
+        // scripted latency parks it (mirrors the MergeBegin hook)
+        t.load_hook = Some(LoadHook::new(move |id| {
+            let now = clock.now();
+            events
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(Event { t: now.duration_since(origin), kind: EventKind::DiskLoad { adapter: id } });
+        }));
+        t
+    });
+
     let mut cfg = CoordinatorConfig::new(&env.artifacts, &env.model)
         .with_workers(spec.workers)
         .with_buckets(spec.buckets.clone())
@@ -180,6 +225,7 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
     cfg.merge_workers = spec.merge_workers;
     cfg.compute_threads = spec.compute_threads;
     cfg.merge_hook = Some(hook);
+    cfg.tier = tier_cfg;
     let (coord, join) = Coordinator::start(cfg).context("starting scenario coordinator")?;
 
     let mut driver = Driver {
@@ -209,8 +255,12 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
     }
     coord.shutdown();
     drop(driver);
+    let joined = join.join();
+    if let Some(dir) = &tier_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
     let run = result?;
-    let _ = join.join();
+    let _ = joined;
 
     let mut run = run;
     run.summary.real_wall = wall0.elapsed();
@@ -340,7 +390,8 @@ impl Driver<'_> {
                 // clock, advance to the earliest wake; otherwise real
                 // host work is still running — poll.
                 let snaps = self.coord.metrics_per_worker()?;
-                let inflight: usize = snaps.iter().map(|s| s.inflight_merges).sum();
+                let inflight: usize =
+                    snaps.iter().map(|s| s.inflight_merges + s.inflight_fetches).sum();
                 let held: usize = snaps.iter().map(|s| s.held_merges).sum();
                 let (sleepers, earliest) = vc.sleepers();
                 let mstats = self.coord.merge_stats();
@@ -434,7 +485,8 @@ impl Driver<'_> {
             self.drain_responses();
             let queued: usize = snaps.iter().map(|s| s.queued_requests).sum();
             let parked: usize = snaps.iter().map(|s| s.parked_requests).sum();
-            let inflight: usize = snaps.iter().map(|s| s.inflight_merges).sum();
+            let inflight: usize =
+                snaps.iter().map(|s| s.inflight_merges + s.inflight_fetches).sum();
             let held: usize = snaps.iter().map(|s| s.held_merges).sum();
             let (sleepers, _) = vc.sleepers();
             let mstats = self.coord.merge_stats();
@@ -580,6 +632,8 @@ impl Driver<'_> {
 
     fn finish(&mut self) -> anyhow::Result<ScenarioRun> {
         let (m, cache, _) = self.coord.metrics()?;
+        let factor_cache = self.coord.factor_cache_stats()?;
+        let (disk_loads, spilled) = self.coord.tier_stats();
         let merges = self.coord.merge_stats();
         let mut events = {
             let mut guard = self.events.lock().unwrap_or_else(|e| e.into_inner());
@@ -624,6 +678,9 @@ impl Driver<'_> {
             decode_steps: m.decode_steps,
             prefill_passes: m.prefill_passes,
             cache,
+            factor_cache,
+            disk_loads,
+            spilled,
             merges,
             real_wall: Duration::ZERO, // stamped by run_scenario
         };

@@ -32,6 +32,15 @@ pub struct SlowMerge {
     pub delay: Duration,
 }
 
+/// Scripted disk-read latency for the adapter tier: every tier load of
+/// `adapter` (or every load when `None`) parks for `delay` on the
+/// scenario clock before reading. Only meaningful with `tiered` set.
+#[derive(Debug, Clone, Copy)]
+pub struct DiskLatency {
+    pub adapter: Option<AdapterId>,
+    pub delay: Duration,
+}
+
 /// A scripted registry mutation at a virtual offset from trace start.
 #[derive(Debug, Clone, Copy)]
 pub enum ChurnAction {
@@ -57,11 +66,13 @@ pub struct FaultPlan {
     pub slow_merge: Option<SlowMerge>,
     /// Registry churn, applied in `at` order.
     pub churn: Vec<ChurnAction>,
+    /// Scripted disk-read latency on the adapter tier (DESIGN.md §14).
+    pub disk_latency: Option<DiskLatency>,
 }
 
 impl FaultPlan {
     pub fn is_empty(&self) -> bool {
-        self.slow_merge.is_none() && self.churn.is_empty()
+        self.slow_merge.is_none() && self.churn.is_empty() && self.disk_latency.is_none()
     }
 }
 
@@ -114,6 +125,16 @@ pub struct ScenarioSpec {
     pub max_new_spread: usize,
     /// Warm every adapter's merged weights before the trace.
     pub prefetch: bool,
+    /// Enable the disk tier (DESIGN.md §14): adapters spill to a
+    /// scenario-owned directory at registration; packed factors page back
+    /// in through the merge pool, bounded by `factor_cache_bytes`.
+    pub tiered: bool,
+    /// Total in-RAM factor-cache budget (split across workers). Only
+    /// meaningful with `tiered`.
+    pub factor_cache_bytes: usize,
+    /// Warm adapters ahead of their predicted next arrival
+    /// (`workload::ArrivalPredictor`). Only meaningful with `tiered`.
+    pub predictive_prefetch: bool,
     pub faults: FaultPlan,
 }
 
@@ -140,6 +161,9 @@ impl Default for ScenarioSpec {
             max_new: 2,
             max_new_spread: 0,
             prefetch: false,
+            tiered: false,
+            factor_cache_bytes: 1 << 20,
+            predictive_prefetch: false,
             faults: FaultPlan::default(),
         }
     }
@@ -273,11 +297,11 @@ mod tests {
     fn churn_sorts_by_time() {
         let spec = ScenarioSpec {
             faults: FaultPlan {
-                slow_merge: None,
                 churn: vec![
                     ChurnAction::Remove { at: Duration::from_millis(30), target: 0 },
                     ChurnAction::Register { at: Duration::from_millis(10), pool_index: 1 },
                 ],
+                ..Default::default()
             },
             ..Default::default()
         };

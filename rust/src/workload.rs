@@ -4,7 +4,8 @@
 
 use crate::coordinator::registry::AdapterId;
 use crate::testutil::Rng;
-use std::time::Duration;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 /// Workload parameters.
 #[derive(Debug, Clone, Copy)]
@@ -51,6 +52,108 @@ pub fn generate(cfg: &WorkloadConfig, adapters: &[AdapterId]) -> Vec<Arrival> {
         out.push(Arrival { at: Duration::from_secs_f64(t), adapter: adapters[perm[pick]] });
     }
     out
+}
+
+/// Per-tenant arrival tracking for predictive prefetch: a bounded hot
+/// set of tenants, each with an EWMA of its inter-arrival gap. Under the
+/// Zipf mix the head tenants re-arrive on a stable cadence, so "predicted
+/// next arrival = last arrival + EWMA gap" is enough signal to pull an
+/// adapter's factors off disk *before* the request that needs them
+/// (DESIGN.md §14). Driven entirely by the injected clock's instants, so
+/// predictions are deterministic under the scenario simulator.
+#[derive(Debug)]
+pub struct ArrivalPredictor {
+    tracks: HashMap<AdapterId, Track>,
+    /// Hot-set bound: when full, the least-seen tenant is dropped (Zipf
+    /// tail tenants never accumulate enough arrivals to predict anyway).
+    capacity: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Track {
+    count: u64,
+    last: Instant,
+    /// EWMA of the inter-arrival gap (undefined until `count >= 2`).
+    ewma_gap: Duration,
+}
+
+/// EWMA smoothing factor: new gap weighted 0.3 (integer arithmetic:
+/// 3/10), history 0.7.
+const EWMA_NUM: u32 = 3;
+const EWMA_DEN: u32 = 10;
+
+impl Default for ArrivalPredictor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ArrivalPredictor {
+    pub fn new() -> Self {
+        Self::with_capacity(64)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self { tracks: HashMap::new(), capacity: capacity.max(1) }
+    }
+
+    /// Record one arrival for `id` at `now`.
+    pub fn observe(&mut self, id: AdapterId, now: Instant) {
+        if let Some(t) = self.tracks.get_mut(&id) {
+            let gap = now.duration_since(t.last);
+            t.ewma_gap = if t.count == 1 {
+                gap
+            } else {
+                (t.ewma_gap * (EWMA_DEN - EWMA_NUM) + gap * EWMA_NUM) / EWMA_DEN
+            };
+            t.count += 1;
+            t.last = now;
+            return;
+        }
+        if self.tracks.len() >= self.capacity {
+            // evict the least-seen (ties: oldest last-arrival, then the
+            // smallest id, so eviction is deterministic)
+            if let Some((&victim, _)) = self
+                .tracks
+                .iter()
+                .min_by_key(|(&vid, t)| (t.count, t.last, vid))
+            {
+                self.tracks.remove(&victim);
+            }
+        }
+        self.tracks.insert(id, Track { count: 1, last: now, ewma_gap: Duration::ZERO });
+    }
+
+    /// Tenants whose predicted next arrival (`last + ewma_gap`) is due at
+    /// `now`, sorted by id (deterministic). A tenant needs at least two
+    /// observed arrivals to have a gap estimate, and goes stale — no
+    /// prediction — once `now` exceeds four estimated gaps since its last
+    /// arrival (its cadence evidently broke).
+    pub fn due(&self, now: Instant) -> Vec<AdapterId> {
+        let mut out: Vec<AdapterId> = self
+            .tracks
+            .iter()
+            .filter(|(_, t)| {
+                if t.count < 2 || t.ewma_gap.is_zero() {
+                    return false;
+                }
+                let since = now.duration_since(t.last);
+                since + t.ewma_gap / 2 >= t.ewma_gap && since <= t.ewma_gap * 4
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Tracked-tenant count (tests/diagnostics).
+    pub fn len(&self) -> usize {
+        self.tracks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tracks.is_empty()
+    }
 }
 
 /// Closed-loop variant: just the Zipf-popular adapter sequence, no
@@ -195,6 +298,55 @@ mod tests {
             "permuted rank-frequency slope {slope:.3} should be ≈ {:.1}",
             -alpha
         );
+    }
+
+    #[test]
+    fn predictor_learns_cadence_and_predicts_due() {
+        let t0 = Instant::now();
+        let mut p = ArrivalPredictor::new();
+        let ms = Duration::from_millis;
+        // tenant 1 arrives every 10ms; tenant 2 seen once (no estimate)
+        for k in 0..5u64 {
+            p.observe(1, t0 + ms(10 * k));
+        }
+        p.observe(2, t0 + ms(3));
+        assert!(p.due(t0 + ms(41)).is_empty(), "half a gap early: not due yet");
+        assert_eq!(p.due(t0 + ms(50)), vec![1], "one full gap after last arrival");
+        assert_eq!(p.due(t0 + ms(46)), vec![1], "due fires from half a gap out");
+        assert!(p.due(t0 + ms(200)).is_empty(), "stale after 4 gaps without arrivals");
+    }
+
+    #[test]
+    fn predictor_capacity_evicts_least_seen() {
+        let t0 = Instant::now();
+        let ms = Duration::from_millis;
+        let mut p = ArrivalPredictor::with_capacity(3);
+        // tenants 0,1 get two arrivals; 2 gets one; 3 displaces 2
+        for k in 0..2u64 {
+            p.observe(0, t0 + ms(k * 10));
+            p.observe(1, t0 + ms(k * 10 + 1));
+        }
+        p.observe(2, t0 + ms(5));
+        assert_eq!(p.len(), 3);
+        p.observe(3, t0 + ms(20));
+        assert_eq!(p.len(), 3, "capacity bound holds");
+        // 2 (count 1) was the eviction victim: 0 and 1 still predict
+        let due = p.due(t0 + ms(30));
+        assert!(due.contains(&0) && due.contains(&1), "{due:?}");
+    }
+
+    #[test]
+    fn predictor_is_deterministic_for_equal_inputs() {
+        let t0 = Instant::now();
+        let ms = Duration::from_millis;
+        let run = || {
+            let mut p = ArrivalPredictor::with_capacity(8);
+            for k in 0..30u64 {
+                p.observe((k % 5) as AdapterId, t0 + ms(k * 3));
+            }
+            p.due(t0 + ms(100))
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

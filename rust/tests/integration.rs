@@ -38,12 +38,12 @@ fn pipeline_to_disk_to_registry() {
     let mut reg = AdapterRegistry::new();
     let id_fp = reg.register(StoredAdapter::Fp16(fp), "t");
     let id_q = reg.register(StoredAdapter::Quantized(q2), "t");
-    let fp_bytes = reg.get(id_fp).unwrap().adapter.bytes();
-    let q_bytes = reg.get(id_q).unwrap().adapter.bytes();
+    let fp_bytes = reg.get(id_fp).unwrap().bytes();
+    let q_bytes = reg.get(id_q).unwrap().bytes();
     assert!(q_bytes * 5 < fp_bytes, "quantized {q_bytes} vs fp {fp_bytes}");
     // deltas from both paths have matching shapes
-    let d_fp = reg.get(id_fp).unwrap().adapter.deltas();
-    let d_q = reg.get(id_q).unwrap().adapter.deltas();
+    let d_fp = reg.get(id_fp).unwrap().resident().unwrap().deltas();
+    let d_q = reg.get(id_q).unwrap().resident().unwrap().deltas();
     for (site, m) in &d_fp {
         assert_eq!(m.shape(), d_q[site].shape());
     }
@@ -129,7 +129,7 @@ fn every_low_mode_roundtrips_through_store() {
         let cfg = LoraQuantConfig { low_mode, ste: None, ..Default::default() };
         let mut q = QuantizedLora::default();
         q.sites.insert("s".into(), quantize_site(&b, &a, &cfg));
-        let dec = store::decode(&store::encode(&q)).unwrap();
+        let dec = store::decode(&store::encode(&q).unwrap()).unwrap();
         assert!(
             dec.sites["s"].dequant_delta().sub(&q.sites["s"].dequant_delta()).fro_norm() < 1e-6,
             "{low_mode:?}"

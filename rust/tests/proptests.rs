@@ -5,6 +5,7 @@
 
 use loraquant::loraquant::{
     quantize_site, reparameterize, select_h, split_at, HSelect, LoraQuantConfig, LowMode,
+    QuantizedLora,
 };
 use loraquant::quant::{
     bin_dequant, bin_quant, pack_codes, rtn_dequant, rtn_quant, unpack_codes, Axis, QuantAxis,
@@ -544,6 +545,54 @@ fn prop_chunked_prefill_matches_monolithic_prefill() {
         }
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The ISSUE-8 codec contract: the at-rest store is a *lossless* codec
+/// for quantized adapters — packed codes, scales and zero points survive
+/// encode → decode bit-for-bit across every low mode × 1/2/3-bit high
+/// parts × all four quantization-axis pairs × ratio/static rank splits
+/// (including `h == r`, where no low parts exist at all). Pinned three
+/// ways: the dequantized delta is bit-identical, storage accounting is
+/// unchanged, and re-encoding the decoded adapter reproduces the exact
+/// tensor map — so a decode bug cannot hide behind a mirror-image
+/// encode bug. The disk tier (DESIGN.md §14) leans on this: tiered
+/// serving is bit-equal to resident serving only because this codec is.
+#[test]
+fn prop_store_codec_roundtrip_is_bit_exact() {
+    use loraquant::adapter::store;
+    check_with(Config { cases: 48, seed: 1808 }, "store encode/decode bit-exact", |rng| {
+        let (m, n, r) = rand_dims(rng);
+        let (b, a) = rng.lora_pair(m, n, r, rng.range_f32(0.4, 0.9));
+        let bits = 1 + rng.below(3) as u32; // 1, 2, 3
+        let low_mode = [LowMode::Bin, LowMode::Rtn1, LowMode::Prune][rng.below(3)];
+        let hselect = if rng.below(2) == 0 {
+            HSelect::Ratio(rng.range_f32(0.3, 0.95))
+        } else {
+            HSelect::Static(1 + rng.below(r))
+        };
+        let cfg = LoraQuantConfig {
+            bits_high: bits,
+            axis: QuantAxis::all()[rng.below(4)],
+            low_mode,
+            hselect,
+            group: [16, 32, 64][rng.below(3)],
+            ste: None,
+            ..Default::default()
+        };
+        let mut q = QuantizedLora::default();
+        q.sites.insert("l0.wq".into(), quantize_site(&b, &a, &cfg));
+        let enc = store::encode(&q).unwrap();
+        let dec = store::decode(&enc).unwrap();
+        let tag = format!("bits={bits} low={low_mode:?} hselect={hselect:?}");
+        assert_eq!(dec.storage_bits(), q.storage_bits(), "{tag}: storage bits");
+        let d0 = q.sites["l0.wq"].dequant_delta();
+        let d1 = dec.sites["l0.wq"].dequant_delta();
+        assert_eq!(d0.shape(), d1.shape(), "{tag}: delta shape");
+        for (i, (x, y)) in d0.data().iter().zip(d1.data()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: delta[{i}] {x:e} vs {y:e}");
+        }
+        assert_eq!(store::encode(&dec).unwrap(), enc, "{tag}: re-encode fixpoint");
+    });
 }
 
 #[test]

@@ -204,7 +204,10 @@ fn slow_merge_parks_merged_but_not_auto() {
         // at the 4th (near-instant) arrival, not at the max-wait deadline
         buckets: vec![1, 4],
         workload: WorkloadConfig { rate: 1e9, zipf_alpha: 0.0, n_requests: 4, seed: 3 },
-        faults: FaultPlan { slow_merge: Some(SlowMerge { adapter: None, delay }), churn: vec![] },
+        faults: FaultPlan {
+            slow_merge: Some(SlowMerge { adapter: None, delay }),
+            ..Default::default()
+        },
         ..Default::default()
     };
 
@@ -249,11 +252,11 @@ fn cache_thrash_with_churn_never_breaks_decode() {
         cache_budget_bytes: 64 << 10,
         workload: WorkloadConfig { rate: 400.0, zipf_alpha: 0.3, n_requests: 200, seed: 29 },
         faults: FaultPlan {
-            slow_merge: None,
             churn: vec![
                 ChurnAction::Register { at: Duration::from_millis(100), pool_index: 1 },
                 ChurnAction::Register { at: Duration::from_millis(250), pool_index: 2 },
             ],
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -280,8 +283,8 @@ fn mid_trace_remove_fails_fast_and_spares_other_tenants() {
         round_robin: true, // every tenant keeps arriving all trace long
         workload: WorkloadConfig { rate: 200.0, zipf_alpha: 0.0, n_requests: 120, seed: 13 },
         faults: FaultPlan {
-            slow_merge: None,
             churn: vec![ChurnAction::Remove { at: Duration::from_millis(150), target: 0 }],
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -359,7 +362,7 @@ fn continuous_batching_reduces_decode_steps_on_staggered_mixed_lengths() {
         max_new_spread: 8,
         faults: FaultPlan {
             slow_merge: Some(SlowMerge { adapter: None, delay: Duration::from_millis(50) }),
-            churn: vec![],
+            ..Default::default()
         },
         ..Default::default()
     };

@@ -1,0 +1,197 @@
+//! Tiered adapter-store acceptance (DESIGN.md §14): the disk tier +
+//! factor cache below the merged-weight cache must change *where* packed
+//! factors live, never *what* gets decoded. Everything runs the full
+//! coordinator under the virtual clock; the serving contract under test:
+//!
+//! * tiered decode tokens are byte-identical to fully-resident serving
+//!   for every strategy, at a factor-cache budget far below the fleet;
+//! * the factor cache's counted request-path misses equal the tier's
+//!   completed disk loads (no silent double-loading);
+//! * tiered traces — including scripted disk-latency faults — are
+//!   byte-reproducible across runs and compute-thread counts.
+//!
+//! Reference engine only: the synthetic scenario environment has no HLO
+//! artifacts for the PJRT backend.
+#![cfg(not(feature = "pjrt"))]
+
+use loraquant::coordinator::MergeStrategy;
+use loraquant::scenario::{
+    run_scenario, ClockMode, DiskLatency, EventKind, FaultPlan, ScenarioEnv, ScenarioSpec,
+};
+use loraquant::workload::WorkloadConfig;
+use std::time::Duration;
+
+/// A tiered spec whose factor cache holds ~`cache_adapters` of the
+/// fleet's packed adapters (well under 5% in every test that uses it).
+fn tiered_spec(env: &ScenarioEnv, strategy: MergeStrategy, tenants: usize) -> ScenarioSpec {
+    let unit = env.adapters[0].1.bytes();
+    ScenarioSpec {
+        name: format!("tiering/{strategy}"),
+        mode: ClockMode::Virtual,
+        strategy,
+        n_adapters: tenants,
+        tiered: true,
+        factor_cache_bytes: unit * 2,
+        workload: WorkloadConfig { rate: 400.0, zipf_alpha: 1.1, n_requests: 200, seed: 23 },
+        ..Default::default()
+    }
+}
+
+/// The headline contract: spilling every adapter to disk and paging
+/// factors through a cache that holds 2 of 50 tenants (4%) must not
+/// change a single decoded token relative to fully-resident serving.
+/// Merged and factor runs compare against their own resident twins (the
+/// decode path is unchanged, so the codec round-trip must be exact);
+/// auto compares against tiered merged — with factors on disk a cold
+/// auto batch parks behind its merge instead of decoding factor-form, so
+/// every auto request rides the merged path bit-for-bit.
+#[test]
+fn tiered_tokens_bit_identical_to_resident_serving() {
+    let env = ScenarioEnv::synth("tierid", 4).unwrap();
+    let mut merged_tiered_tokens = None;
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor] {
+        let tiered = tiered_spec(&env, strategy, 50);
+        let resident = ScenarioSpec { tiered: false, ..tiered.clone() };
+        let a = run_scenario(&tiered, &env).unwrap();
+        let b = run_scenario(&resident, &env).unwrap();
+        assert_eq!(a.summary.ok, 200, "{strategy}: tiered run must complete every request");
+        assert_eq!(b.summary.ok, 200);
+        assert_eq!(a.tokens, b.tokens, "{strategy}: tiering must not change a single token");
+        assert_eq!(a.summary.spilled, 50, "{strategy}: every quantized tenant spills");
+        assert!(a.summary.disk_loads > 0, "{strategy}: the tier must actually serve loads");
+        if strategy == MergeStrategy::Merged {
+            merged_tiered_tokens = Some(a.tokens);
+        }
+    }
+    let auto = run_scenario(&tiered_spec(&env, MergeStrategy::Auto, 50), &env).unwrap();
+    assert_eq!(auto.summary.ok, 200, "auto: tiered run must complete every request");
+    assert_eq!(
+        Some(auto.tokens),
+        merged_tiered_tokens,
+        "auto with factors on disk must ride the merged path bit-for-bit"
+    );
+}
+
+/// The counting contract on the factor path: exactly one counted
+/// factor-cache miss per submitted disk fetch, none while one is in
+/// flight, so `misses == disk_loads` (no prefetch, no predictor — those
+/// warm without counting).
+#[test]
+fn factor_cache_misses_equal_disk_loads() {
+    let env = ScenarioEnv::synth("tiercount", 4).unwrap();
+    let spec = tiered_spec(&env, MergeStrategy::Factor, 40);
+    let run = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.summary.ok, 200);
+    assert!(run.summary.disk_loads > 0, "a 2-of-40 cache must page from disk");
+    assert_eq!(
+        run.summary.factor_cache.misses, run.summary.disk_loads,
+        "every counted miss is one disk load and vice versa"
+    );
+    assert!(run.summary.factor_cache.evictions > 0, "the tight budget must evict");
+    // the log records each load on the merge-pool thread
+    let loads =
+        run.events.iter().filter(|e| matches!(e.kind, EventKind::DiskLoad { .. })).count() as u64;
+    assert_eq!(loads, run.summary.disk_loads);
+}
+
+/// Scripted disk latency is a first-class fault: every tier load parks
+/// for the scripted delay on the virtual clock, the whole trace stays
+/// byte-reproducible across runs and compute-thread counts, and no
+/// request fails.
+#[test]
+fn disk_latency_fault_is_deterministic_across_runs_and_threads() {
+    let env = ScenarioEnv::synth("tierfault", 4).unwrap();
+    for strategy in [MergeStrategy::Factor, MergeStrategy::Merged] {
+        let spec = |threads: usize| ScenarioSpec {
+            compute_threads: threads,
+            faults: FaultPlan {
+                disk_latency: Some(DiskLatency {
+                    adapter: None,
+                    delay: Duration::from_millis(3),
+                }),
+                ..Default::default()
+            },
+            ..tiered_spec(&env, strategy, 30)
+        };
+        let a = run_scenario(&spec(1), &env).unwrap();
+        assert_eq!(a.summary.ok, 200, "{strategy}: faulted tiered run must still complete");
+        // some request really rode out a scripted disk read
+        assert!(
+            a.summary.latency.max() >= Duration::from_millis(3),
+            "{strategy}: scripted disk latency must be visible end to end ({:?})",
+            a.summary.latency.max()
+        );
+        let b = run_scenario(&spec(1), &env).unwrap();
+        assert_eq!(a.log(), b.log(), "{strategy}: faulted tiered trace must be reproducible");
+        let c = run_scenario(&spec(4), &env).unwrap();
+        assert_eq!(a.log(), c.log(), "{strategy}: trace must not depend on compute threads");
+        assert_eq!(a.tokens, c.tokens);
+    }
+}
+
+/// Pool-size invariance carries over to tiered serving: per-request
+/// tokens are identical with 1 and 4 workers (routing and per-worker
+/// factor caches change, results don't).
+#[test]
+fn tiered_tokens_identical_across_worker_counts() {
+    let env = ScenarioEnv::synth("tierworkers", 4).unwrap();
+    for strategy in [MergeStrategy::Merged, MergeStrategy::Factor] {
+        let one = run_scenario(&tiered_spec(&env, strategy, 30).with_workers(1), &env).unwrap();
+        let four = run_scenario(&tiered_spec(&env, strategy, 30).with_workers(4), &env).unwrap();
+        assert_eq!(one.summary.ok, 200);
+        assert_eq!(four.summary.ok, 200);
+        assert_eq!(
+            one.tokens, four.tokens,
+            "{strategy}: tiered tokens must not depend on pool size"
+        );
+    }
+}
+
+/// Predictive prefetch rides the trace's own arrival cadence: it may
+/// only move loads earlier (warm fills never count misses), must not
+/// change tokens, and the predictor-driven trace is itself
+/// deterministic.
+#[test]
+fn predictive_prefetch_keeps_tokens_and_is_deterministic() {
+    let env = ScenarioEnv::synth("tierpred", 4).unwrap();
+    let base = tiered_spec(&env, MergeStrategy::Factor, 40);
+    let predictive = ScenarioSpec { predictive_prefetch: true, ..base.clone() };
+    let plain = run_scenario(&base, &env).unwrap();
+    let a = run_scenario(&predictive, &env).unwrap();
+    assert_eq!(a.summary.ok, 200, "predictive run must complete every request");
+    assert_eq!(a.tokens, plain.tokens, "warm-ahead must not change tokens");
+    // warm fills load from disk without counting a miss, so loads can
+    // only meet or exceed the counted request-path misses
+    assert!(
+        a.summary.disk_loads >= a.summary.factor_cache.misses,
+        "warm fills must never count request-path misses ({} loads < {} misses)",
+        a.summary.disk_loads,
+        a.summary.factor_cache.misses
+    );
+    let b = run_scenario(&predictive, &env).unwrap();
+    assert_eq!(a.log(), b.log(), "predictor-driven trace must be reproducible");
+}
+
+/// Scale: a 1000-tenant Zipf fleet served through a factor cache holding
+/// 2 adapters (0.2% of the fleet) completes with zero decode failures
+/// and — with no faults — zero added latency: under the virtual clock an
+/// unfaulted disk load is instantaneous, so nothing waits longer than
+/// the batcher deadline.
+#[test]
+fn thousand_tenants_through_two_adapter_cache() {
+    let env = ScenarioEnv::synth("tierscale", 8).unwrap();
+    let spec = ScenarioSpec {
+        workload: WorkloadConfig { rate: 800.0, zipf_alpha: 1.1, n_requests: 300, seed: 31 },
+        ..tiered_spec(&env, MergeStrategy::Factor, 1000)
+    };
+    let run = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.summary.failed, 0, "no decode failures at 1000 tenants");
+    assert_eq!(run.summary.ok, 300);
+    assert_eq!(run.summary.spilled, 1000);
+    assert!(run.summary.disk_loads > 0);
+    assert!(
+        run.summary.latency.max() <= spec.max_wait,
+        "unfaulted tiered p100 must stay within the batcher deadline ({:?})",
+        run.summary.latency.max()
+    );
+}
