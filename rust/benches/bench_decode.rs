@@ -161,10 +161,10 @@ fn main() -> anyhow::Result<()> {
     rows.push(format!(r#"{{"mode":"kernel_serial","threads":1,"matmul_us":{serial_us:.2}}}"#));
     for threads in [2usize, 4] {
         let pool = ComputePool::new(threads);
-        pool.matmul_flat(&a, m, k, &b, n, &mut c); // warm the workers
+        pool.matmul_flat(&a, m, k, &b, n, &mut c).unwrap(); // warm the workers
         let t0 = Instant::now();
         for _ in 0..MM_REPS {
-            pool.matmul_flat(&a, m, k, &b, n, &mut c);
+            pool.matmul_flat(&a, m, k, &b, n, &mut c).unwrap();
         }
         let pool_us = mean_us(t0.elapsed(), MM_REPS);
         let t0 = Instant::now();

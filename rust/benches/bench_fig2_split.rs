@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
                 };
                 let mut q = QuantizedLora::default();
                 for (site, (a, b)) in &td.lora.sites {
-                    q.sites.insert(site.clone(), quantize_site(b, a, &cfg));
+                    q.sites.insert(site.clone(), quantize_site(b, a, &cfg)?);
                 }
                 let deltas = loraquant::model::merge::quant_deltas(&q);
                 scores.insert(name, ctx.eval_deltas(&deltas, &td.eval)?);

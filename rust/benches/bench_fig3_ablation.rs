@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
                 let cfg = fig3_variant(kind, rho, 128);
                 let mut q = QuantizedLora::default();
                 for (site, (a, b)) in &td.lora.sites {
-                    q.sites.insert(site.clone(), quantize_site(b, a, &cfg));
+                    q.sites.insert(site.clone(), quantize_site(b, a, &cfg)?);
                 }
                 if kind == "loraquant" {
                     bits_of_main = q.avg_bits();

@@ -79,7 +79,7 @@ fn run(
 ) -> anyhow::Result<(f64, f64)> {
     let mut q = QuantizedLora::default();
     for (site, (a, b)) in &td.lora.sites {
-        q.sites.insert(site.clone(), quantize_site(b, a, cfg));
+        q.sites.insert(site.clone(), quantize_site(b, a, cfg)?);
     }
     let deltas = loraquant::model::merge::quant_deltas(&q);
     Ok((q.avg_bits(), ctx.eval_deltas(&deltas, &td.eval)?))

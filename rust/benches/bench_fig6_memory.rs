@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let qcfg = lq(2, 0.8);
     let mut q = QuantizedLora::default();
     for (site, (a, b)) in &lora.sites {
-        q.sites.insert(site.clone(), quantize_site(b, a, &qcfg));
+        q.sites.insert(site.clone(), quantize_site(b, a, &qcfg)?);
     }
 
     println!("# Figure 6 — memory vs number of loaded adapters (model {model})");

@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
 
         for threads in [2usize, 4] {
             let pool = ComputePool::new(threads);
-            let us = time_us(|| pool.matmul_flat(&a, m, k, &b, n, &mut c));
+            let us = time_us(|| pool.matmul_flat(&a, m, k, &b, n, &mut c).unwrap());
             assert_bits_eq(&c, &want, "dense pool");
             emit(&format!("pool{threads}"), us);
         }

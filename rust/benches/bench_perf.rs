@@ -56,11 +56,11 @@ fn main() {
 
     let cfg = LoraQuantConfig::default();
     let r = bench("quantize_site full pipeline (512x128 r16)", 1, 10, || {
-        quantize_site(&b, &a, &cfg)
+        quantize_site(&b, &a, &cfg).unwrap()
     });
     println!("{r}");
 
-    let site = quantize_site(&b, &a, &cfg);
+    let site = quantize_site(&b, &a, &cfg).unwrap();
     let r = bench_for("dequant_delta (512x128)", budget, || site.dequant_delta());
     println!("{r}");
 

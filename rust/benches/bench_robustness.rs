@@ -1,0 +1,215 @@
+//! Fault-contained serving benchmark (DESIGN.md §15): what the ISSUE-9
+//! robustness machinery costs and what it buys, measured on the same
+//! `scenario::run_scenario` path the robustness test suite pins, under
+//! the virtual clock — so every number is reproducible.
+//!
+//! Rows:
+//! 1. **deadline storm** — a 2000/s burst against a 15 ms per-request
+//!    deadline vs the same trace deadline-free: completed vs timed-out
+//!    counts and tail latency (timeouts bound the tail by construction);
+//! 2. **fault soak** — scripted merge panic + permanently failing disk
+//!    loads (→ quarantine) in one tiered trace: containment counters
+//!    (respawns, quarantines, per-kind failures) and survivor throughput;
+//! 3. **retry ladder** — a transient 2-failure disk fault with 0 vs 2
+//!    retries: the retry budget converts hard failures into +backoff
+//!    latency;
+//! 4. **load shedding** — a depth-2 admission cap under a 4000/s burst
+//!    vs uncapped: sheds traded for bounded queue delay.
+//!
+//! Results land in `BENCH_robustness.json`. Reference engine only: the
+//! synthetic scenario environment has no HLO artifacts for PJRT.
+
+use loraquant::coordinator::MergeStrategy;
+use loraquant::scenario::{
+    run_scenario, DiskError, FaultPlan, ScenarioEnv, ScenarioSpec, ScriptedPanic,
+};
+use loraquant::workload::WorkloadConfig;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    if cfg!(feature = "pjrt") {
+        eprintln!("bench_robustness: skipped — the synthetic scenario env has no PJRT artifacts");
+        return Ok(());
+    }
+    let env = ScenarioEnv::synth("robustbench", 8)?;
+    let unit = env.adapters[0].1.bytes();
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // ---- row 1: deadline storm vs deadline-free --------------------------
+    println!("# Deadline storm — 2000/s Zipf burst, 15ms deadline vs none (virtual time)");
+    for with_deadline in [false, true] {
+        let spec = ScenarioSpec {
+            name: format!("deadline_storm/deadline={with_deadline}"),
+            strategy: MergeStrategy::Merged,
+            max_wait: Duration::from_secs(1),
+            request_timeout: with_deadline.then(|| Duration::from_millis(15)),
+            workload: WorkloadConfig { rate: 2000.0, zipf_alpha: 1.1, n_requests: 600, seed: 7 },
+            n_adapters: 8,
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        println!(
+            "deadline={:<5} | {}/{} ok timeouts={} | p50={:?} p99={:?} max={:?} | wall {:?}",
+            with_deadline,
+            s.ok,
+            s.requests,
+            s.timeouts,
+            s.latency.quantile(0.5),
+            s.latency.quantile(0.99),
+            s.latency.max(),
+            s.real_wall,
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"deadline_storm","deadline_ms":{},"requests":{},"ok":{},"timeouts":{},"p50_us":{},"p99_us":{},"max_us":{},"wall_ms":{}}}"#,
+            if with_deadline { 15 } else { 0 },
+            s.requests,
+            s.ok,
+            s.timeouts,
+            s.latency.quantile(0.5).as_micros(),
+            s.latency.quantile(0.99).as_micros(),
+            s.latency.max().as_micros(),
+            s.real_wall.as_millis(),
+        ));
+    }
+
+    // ---- row 2: fault soak — panic + permanent disk failure --------------
+    println!("\n# Fault soak — scripted merge panic (adapter 1) + permanent disk failure (adapter 2)");
+    for faulted in [false, true] {
+        let spec = ScenarioSpec {
+            name: format!("fault_soak/faulted={faulted}"),
+            strategy: MergeStrategy::Merged,
+            tiered: true,
+            factor_cache_bytes: unit * 16,
+            n_adapters: 8,
+            disk_retries: if faulted { 2 } else { 0 },
+            disk_backoff: Duration::from_millis(1),
+            workload: WorkloadConfig { rate: 400.0, zipf_alpha: 1.1, n_requests: 400, seed: 11 },
+            faults: if faulted {
+                FaultPlan {
+                    panic: Some(ScriptedPanic { adapter: 1, first_n: 1 }),
+                    disk_error: Some(DiskError { adapter: Some(2), first_n: u32::MAX }),
+                    ..Default::default()
+                }
+            } else {
+                FaultPlan::default()
+            },
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        println!(
+            "faulted={:<5} | {}/{} ok failed={:?} | respawns={} quarantined={} disk_retries={} | p99={:?} | wall {:?}",
+            faulted,
+            s.ok,
+            s.requests,
+            s.failed_by_kind,
+            s.worker_respawns,
+            s.quarantined,
+            s.disk_retries,
+            s.latency.quantile(0.99),
+            s.real_wall,
+        );
+        let by_kind: Vec<String> = s
+            .failed_by_kind
+            .iter()
+            .map(|(k, v)| format!(r#""{k}":{v}"#))
+            .collect();
+        json_rows.push(format!(
+            r#"{{"scenario":"fault_soak","faulted":{faulted},"requests":{},"ok":{},"failed":{},"failed_by_kind":{{{}}},"worker_respawns":{},"quarantined":{},"disk_retries":{},"p99_us":{},"wall_ms":{}}}"#,
+            s.requests,
+            s.ok,
+            s.failed,
+            by_kind.join(","),
+            s.worker_respawns,
+            s.quarantined,
+            s.disk_retries,
+            s.latency.quantile(0.99).as_micros(),
+            s.real_wall.as_millis(),
+        ));
+    }
+
+    // ---- row 3: retry ladder — transient fault, 0 vs 2 retries -----------
+    println!("\n# Retry ladder — first 2 loads of adapter 2 fail; retry budget 0 vs 2 (1ms backoff)");
+    for retries in [0u32, 2] {
+        let spec = ScenarioSpec {
+            name: format!("retry_ladder/retries={retries}"),
+            strategy: MergeStrategy::Factor,
+            tiered: true,
+            factor_cache_bytes: unit * 16,
+            n_adapters: 8,
+            round_robin: true,
+            disk_retries: retries,
+            disk_backoff: Duration::from_millis(1),
+            workload: WorkloadConfig { rate: 400.0, zipf_alpha: 1.1, n_requests: 400, seed: 13 },
+            faults: FaultPlan {
+                disk_error: Some(DiskError { adapter: Some(2), first_n: 2 }),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        println!(
+            "retries={retries} | {}/{} ok failed={} quarantined={} disk_retries={} | p99={:?}",
+            s.ok,
+            s.requests,
+            s.failed,
+            s.quarantined,
+            s.disk_retries,
+            s.latency.quantile(0.99),
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"retry_ladder","retries":{retries},"requests":{},"ok":{},"failed":{},"quarantined":{},"disk_retries":{},"p99_us":{}}}"#,
+            s.requests,
+            s.ok,
+            s.failed,
+            s.quarantined,
+            s.disk_retries,
+            s.latency.quantile(0.99).as_micros(),
+        ));
+    }
+
+    // ---- row 4: load shedding — depth-2 cap vs uncapped ------------------
+    println!("\n# Load shedding — 4000/s burst, admission cap 2 vs uncapped");
+    for cap in [None, Some(2usize)] {
+        let spec = ScenarioSpec {
+            name: format!("shed/cap={cap:?}"),
+            strategy: MergeStrategy::Factor,
+            queue_cap: cap,
+            workload: WorkloadConfig { rate: 4000.0, zipf_alpha: 1.1, n_requests: 400, seed: 17 },
+            n_adapters: 8,
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        println!(
+            "cap={:<7} | {}/{} ok sheds={} | p50={:?} p99={:?} | wall {:?}",
+            format!("{cap:?}"),
+            s.ok,
+            s.requests,
+            s.sheds,
+            s.latency.quantile(0.5),
+            s.latency.quantile(0.99),
+            s.real_wall,
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"shed","cap":{},"requests":{},"ok":{},"sheds":{},"p50_us":{},"p99_us":{},"wall_ms":{}}}"#,
+            cap.map_or(0, |c| c),
+            s.requests,
+            s.ok,
+            s.sheds,
+            s.latency.quantile(0.5).as_micros(),
+            s.latency.quantile(0.99).as_micros(),
+            s.real_wall.as_millis(),
+        ));
+    }
+
+    let json = format!(
+        "{{\"bench\":\"robustness\",\"model\":\"synth\",\"synthetic\":true,\"scenarios\":[{}]}}\n",
+        json_rows.join(",")
+    );
+    std::fs::write("BENCH_robustness.json", &json)?;
+    println!("\nwrote BENCH_robustness.json ({} scenario rows)", json_rows.len());
+    Ok(())
+}

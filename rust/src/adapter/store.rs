@@ -238,10 +238,12 @@ mod tests {
         let mut rng = Rng::new(81);
         let (b, a) = rng.lora_pair(64, 48, 8, 0.7);
         let mut lora = QuantizedLora::default();
-        lora.sites.insert("l0.wq".into(), quantize_site(&b, &a, &LoraQuantConfig::default()));
+        lora.sites
+            .insert("l0.wq".into(), quantize_site(&b, &a, &LoraQuantConfig::default()).unwrap());
         lora.sites.insert(
             "l0.w1".into(),
-            quantize_site(&b, &a, &LoraQuantConfig { low_mode: LowMode::Prune, ..Default::default() }),
+            quantize_site(&b, &a, &LoraQuantConfig { low_mode: LowMode::Prune, ..Default::default() })
+                .unwrap(),
         );
         let enc = encode(&lora).unwrap();
         let dec = decode(&enc).unwrap();
@@ -261,8 +263,8 @@ mod tests {
     fn encode_rejects_heterogeneous_low_parts() {
         let mut rng = Rng::new(83);
         let (b, a) = rng.lora_pair(32, 24, 4, 0.7);
-        let bin = quantize_site(&b, &a, &low_cfg(LowMode::Bin));
-        let rtn = quantize_site(&b, &a, &low_cfg(LowMode::Rtn1));
+        let bin = quantize_site(&b, &a, &low_cfg(LowMode::Bin)).unwrap();
+        let rtn = quantize_site(&b, &a, &low_cfg(LowMode::Rtn1)).unwrap();
         let mut site = bin.clone();
         site.al = rtn.al.clone();
         assert!(matches!(site.bl, Some(LowQuantized::Bin(_))), "setup needs a Bin bl");
@@ -279,7 +281,7 @@ mod tests {
     fn encode_rejects_asymmetric_low_parts() {
         let mut rng = Rng::new(84);
         let (b, a) = rng.lora_pair(32, 24, 4, 0.7);
-        let mut site = quantize_site(&b, &a, &low_cfg(LowMode::Bin));
+        let mut site = quantize_site(&b, &a, &low_cfg(LowMode::Bin)).unwrap();
         assert!(site.al.is_some(), "setup needs a low part");
         site.bl = None;
         let mut lora = QuantizedLora::default();
@@ -295,7 +297,7 @@ mod tests {
         let mut rng = Rng::new(85);
         let (b, a) = rng.lora_pair(32, 24, 4, 0.7);
         let mut lora = QuantizedLora::default();
-        lora.sites.insert("l0.wq".into(), quantize_site(&b, &a, &low_cfg(LowMode::Bin)));
+        lora.sites.insert("l0.wq".into(), quantize_site(&b, &a, &low_cfg(LowMode::Bin)).unwrap());
         let full = encode(&lora).unwrap();
         for leaf in ["packed", "scale", "zero"] {
             let mut t = full.clone();
@@ -312,7 +314,7 @@ mod tests {
         let mut rng = Rng::new(86);
         let (b, a) = rng.lora_pair(32, 24, 4, 0.7);
         let mut lora = QuantizedLora::default();
-        lora.sites.insert("l0.wq".into(), quantize_site(&b, &a, &low_cfg(LowMode::Bin)));
+        lora.sites.insert("l0.wq".into(), quantize_site(&b, &a, &low_cfg(LowMode::Bin)).unwrap());
         let mut t = encode(&lora).unwrap();
         let shape = t["l0.wq.bl.shape"].as_i32().unwrap().to_vec();
         t.insert(
@@ -328,7 +330,10 @@ mod tests {
         let mut rng = Rng::new(82);
         let (b, a) = rng.lora_pair(32, 32, 4, 0.6);
         let mut lora = QuantizedLora::default();
-        lora.sites.insert("l1.wo".into(), quantize_site(&b, &a, &LoraQuantConfig::variant(3, 0.8)));
+        lora.sites.insert(
+            "l1.wo".into(),
+            quantize_site(&b, &a, &LoraQuantConfig::variant(3, 0.8)).unwrap(),
+        );
         let tmp = std::env::temp_dir().join("lq_store_test.bin");
         save(&tmp, &lora).unwrap();
         let back = load(&tmp).unwrap();

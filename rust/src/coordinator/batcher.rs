@@ -40,6 +40,10 @@ impl Default for BatcherConfig {
 pub struct PendingRequest<T> {
     pub adapter: AdapterId,
     pub enqueued: Instant,
+    /// Absolute per-request deadline: once it passes, the request is
+    /// handed back by [`DynamicBatcher::expire`] instead of being
+    /// released in a batch (`None` = no deadline).
+    pub deadline: Option<Instant>,
     pub payload: T,
 }
 
@@ -120,15 +124,46 @@ impl<T> DynamicBatcher<T> {
         expired.map(|id| self.drain(id))
     }
 
+    /// Remove and return every queued request whose deadline is at or
+    /// before `now` — the batcher-level timeout pass. Requests that
+    /// expire here never reach a worker; the caller answers each with a
+    /// `Timeout`. Queue order among survivors is preserved.
+    pub fn expire(&mut self, now: Instant) -> Vec<PendingRequest<T>> {
+        let mut out = Vec::new();
+        self.queues.retain(|_, q| {
+            let mut kept = VecDeque::with_capacity(q.len());
+            for r in q.drain(..) {
+                if r.deadline.is_some_and(|d| d <= now) {
+                    out.push(r);
+                } else {
+                    kept.push_back(r);
+                }
+            }
+            *q = kept;
+            !q.is_empty()
+        });
+        self.pending -= out.len();
+        out
+    }
+
     /// Time until the oldest queued request expires (drives the server's
-    /// `recv_timeout`); `None` when idle.
+    /// `recv_timeout`); `None` when idle. Considers both the max-wait
+    /// release clock and every queued request's own deadline, so the
+    /// server wakes in time to run the [`DynamicBatcher::expire`] pass.
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.queues
             .values()
-            .filter_map(|q| q.front())
-            .map(|r| {
-                let waited = now.duration_since(r.enqueued);
-                self.cfg.max_wait.saturating_sub(waited)
+            .flat_map(|q| {
+                let release = q.front().map(|r| {
+                    let waited = now.duration_since(r.enqueued);
+                    self.cfg.max_wait.saturating_sub(waited)
+                });
+                let request = q
+                    .iter()
+                    .filter_map(|r| r.deadline)
+                    .map(|d| d.saturating_duration_since(now))
+                    .min();
+                [release, request].into_iter().flatten().collect::<Vec<_>>()
             })
             .min()
     }
@@ -150,7 +185,7 @@ mod tests {
     use super::*;
 
     fn req(adapter: AdapterId, t: Instant) -> PendingRequest<u32> {
-        PendingRequest { adapter, enqueued: t, payload: 0 }
+        PendingRequest { adapter, enqueued: t, deadline: None, payload: 0 }
     }
 
     #[test]
@@ -329,6 +364,57 @@ mod tests {
         b.pop_ready(t0 + Duration::from_millis(10)).unwrap();
         let later = t0 + Duration::from_millis(11);
         assert!(b.next_deadline(later).is_none(), "idle again after drain");
+    }
+
+    #[test]
+    fn expire_removes_only_past_deadline_requests_preserving_order() {
+        let t0 = Instant::now();
+        let cfg =
+            BatcherConfig { bucket: 8, max_wait: Duration::from_secs(3600), ..Default::default() };
+        let mut b = DynamicBatcher::new(cfg);
+        let mut push = |adapter, payload, deadline_ms: Option<u64>| {
+            b.push(PendingRequest {
+                adapter,
+                enqueued: t0,
+                deadline: deadline_ms.map(|ms| t0 + Duration::from_millis(ms)),
+                payload,
+            });
+        };
+        push(1, 10u32, Some(5)); // expires
+        push(1, 11, None); // survives (no deadline)
+        push(1, 12, Some(50)); // survives (future deadline)
+        push(2, 20, Some(5)); // expires
+        let expired = b.expire(t0 + Duration::from_millis(5));
+        let mut gone: Vec<u32> = expired.iter().map(|r| r.payload).collect();
+        gone.sort_unstable();
+        assert_eq!(gone, vec![10, 20], "deadline <= now expires (inclusive)");
+        assert_eq!(b.pending(), 2);
+        // survivors keep their FIFO order inside the adapter queue
+        let batch = b.pop_flush().unwrap();
+        assert_eq!(batch.adapter, Some(1));
+        let payloads: Vec<u32> = batch.requests.iter().map(|r| r.payload).collect();
+        assert_eq!(payloads, vec![11, 12]);
+        // expiring an empty batcher is a no-op
+        assert!(b.expire(t0 + Duration::from_secs(9)).is_empty() || b.pending() == 0);
+    }
+
+    #[test]
+    fn next_deadline_sees_request_deadlines() {
+        let t0 = Instant::now();
+        let cfg =
+            BatcherConfig { bucket: 8, max_wait: Duration::from_secs(3600), ..Default::default() };
+        let mut b = DynamicBatcher::new(cfg);
+        b.push(PendingRequest {
+            adapter: 1,
+            enqueued: t0,
+            deadline: Some(t0 + Duration::from_millis(7)),
+            payload: 0u32,
+        });
+        // max_wait is an hour away: the wake-up must come from the
+        // request's own deadline instead
+        let d = b.next_deadline(t0).unwrap();
+        assert_eq!(d, Duration::from_millis(7));
+        assert_eq!(b.next_deadline(t0 + Duration::from_millis(9)), Some(Duration::ZERO));
     }
 
     #[test]

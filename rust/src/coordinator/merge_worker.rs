@@ -48,8 +48,10 @@ impl Shared {
             Resident(Arc<StoredAdapter>),
             Tiered,
             Gone,
+            Quarantined,
         }
         let slot = self.with_registry(|r| match r.get(id) {
+            Some(e) if e.is_quarantined() => Slot::Quarantined,
             Some(e) => match e.resident() {
                 Some(a) => Slot::Resident(Arc::clone(a)),
                 None => Slot::Tiered,
@@ -61,9 +63,24 @@ impl Shared {
             Slot::Tiered => {
                 let tier =
                     self.tier.as_ref().ok_or_else(|| anyhow!("adapter {id} tiered but no tier"))?;
-                tier.load(id)
+                match tier.load(id) {
+                    Ok(a) => Ok(a),
+                    Err(e) => {
+                        // the tier's retry policy is exhausted — this is
+                        // a permanent failure. Quarantine the slot so
+                        // subsequent requests fail fast instead of
+                        // re-parking on the broken disk path.
+                        if self.with_registry_mut(|r| r.quarantine(id)) {
+                            tier.note_quarantined(id);
+                        }
+                        Err(e)
+                    }
+                }
             }
             Slot::Gone => Err(anyhow!("adapter {id} vanished before load")),
+            Slot::Quarantined => {
+                Err(anyhow!("adapter {id} unavailable: quarantined after permanent load failure"))
+            }
         }
     }
 
@@ -164,6 +181,8 @@ pub struct MergeStats {
     peak_overlap: AtomicUsize,
     started: AtomicU64,
     completed: AtomicU64,
+    /// Worker threads respawned after a contained job panic.
+    worker_respawns: AtomicU64,
 }
 
 /// A point-in-time copy of [`MergeStats`].
@@ -173,6 +192,7 @@ pub struct MergeStatsSnapshot {
     pub peak_overlap: usize,
     pub started: u64,
     pub completed: u64,
+    pub worker_respawns: u64,
 }
 
 impl MergeStats {
@@ -193,14 +213,108 @@ impl MergeStats {
             peak_overlap: self.peak_overlap.load(Ordering::SeqCst),
             started: self.started.load(Ordering::SeqCst),
             completed: self.completed.load(Ordering::SeqCst),
+            worker_respawns: self.worker_respawns.load(Ordering::SeqCst),
         }
     }
+}
+
+/// Everything a merge-worker thread needs — cloneable so a panicked
+/// worker's replacement can be spawned with the same context (the
+/// "phoenix" supervision path; DESIGN.md §15).
+#[derive(Clone)]
+struct WorkerCtx {
+    name: String,
+    rx: Arc<Mutex<mpsc::Receiver<MergeJob>>>,
+    merge_fn: MergeFn,
+    fetch_fn: FetchFn,
+    clock: Clock,
+    stats: Arc<MergeStats>,
+    /// Join handles of respawned workers, drained at shutdown.
+    respawned: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+fn spawn_worker(ctx: WorkerCtx) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(ctx.name.clone())
+        .spawn(move || worker_loop(ctx))
+        .expect("spawning merge worker")
+}
+
+/// One worker's drain loop. A panic inside the merge/fetch function is
+/// **contained**: the job's requests get a structured `Err` carrying the
+/// panic payload, the concurrency accounting still exits (so the
+/// coordinator's quiescence tracking holds), and the worker respawns a
+/// replacement thread with a clean stack before retiring itself.
+fn worker_loop(ctx: WorkerCtx) {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    loop {
+        // hold the lock only for the dequeue, not the work
+        let job = {
+            let guard = ctx.rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        let Ok(job) = job else { return }; // all senders gone
+        ctx.stats.enter();
+        // clock-based host time: under a virtual clock unfaulted work is
+        // instantaneous (real host work doesn't advance simulated time)
+        // while an injected slow merge or disk fault shows its scripted
+        // delay.
+        let t0 = ctx.clock.now();
+        let adapter = job.adapter;
+        let panicked = match job.kind {
+            JobKind::Merge(done) => {
+                let result = catch_unwind(AssertUnwindSafe(|| (ctx.merge_fn)(adapter)));
+                let dt = ctx.clock.now().duration_since(t0);
+                match result {
+                    Ok(r) => {
+                        done(r, dt);
+                        false
+                    }
+                    Err(p) => {
+                        done(Err(panic_err(adapter, p)), dt);
+                        true
+                    }
+                }
+            }
+            JobKind::Fetch(done) => {
+                let result = catch_unwind(AssertUnwindSafe(|| (ctx.fetch_fn)(adapter)));
+                let dt = ctx.clock.now().duration_since(t0);
+                match result {
+                    Ok(r) => {
+                        done(r, dt);
+                        false
+                    }
+                    Err(p) => {
+                        done(Err(panic_err(adapter, p)), dt);
+                        true
+                    }
+                }
+            }
+        };
+        ctx.stats.exit();
+        if panicked {
+            // phoenix: hand the queue to a fresh thread (clean stack, no
+            // stale thread-local state) and retire this one
+            ctx.stats.worker_respawns.fetch_add(1, Ordering::SeqCst);
+            let replacement = spawn_worker(ctx.clone());
+            ctx.respawned.lock().unwrap_or_else(|e| e.into_inner()).push(replacement);
+            return;
+        }
+    }
+}
+
+fn panic_err(adapter: AdapterId, p: Box<dyn std::any::Any + Send>) -> anyhow::Error {
+    anyhow!(
+        "merge worker panicked on adapter {adapter}: {}",
+        crate::scheduler::workers::payload_str(p)
+    )
 }
 
 /// A fixed pool of merge-worker threads draining one shared job queue.
 pub(crate) struct MergePool {
     tx: Option<mpsc::Sender<MergeJob>>,
     joins: Vec<std::thread::JoinHandle<()>>,
+    respawned: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     stats: Arc<MergeStats>,
 }
 
@@ -210,49 +324,20 @@ impl MergePool {
         let (tx, rx) = mpsc::channel::<MergeJob>();
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(MergeStats::default());
+        let respawned = Arc::new(Mutex::new(Vec::new()));
         let mut joins = Vec::with_capacity(n);
         for i in 0..n {
-            let rx = Arc::clone(&rx);
-            let merge_fn = Arc::clone(&merge_fn);
-            let fetch_fn = Arc::clone(&fetch_fn);
-            let clock = clock.clone();
-            let stats = Arc::clone(&stats);
-            let join = std::thread::Builder::new()
-                .name(format!("lq-merge-{i}"))
-                .spawn(move || loop {
-                    // hold the lock only for the dequeue, not the work
-                    let job = {
-                        let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => {
-                            stats.enter();
-                            // clock-based host time: under a virtual
-                            // clock unfaulted work is instantaneous
-                            // (real host work doesn't advance simulated
-                            // time) while an injected slow merge or
-                            // disk fault shows its scripted delay.
-                            let t0 = clock.now();
-                            match job.kind {
-                                JobKind::Merge(done) => {
-                                    let result = merge_fn(job.adapter);
-                                    done(result, clock.now().duration_since(t0));
-                                }
-                                JobKind::Fetch(done) => {
-                                    let result = fetch_fn(job.adapter);
-                                    done(result, clock.now().duration_since(t0));
-                                }
-                            }
-                            stats.exit();
-                        }
-                        Err(_) => return, // all senders gone
-                    }
-                })
-                .expect("spawning merge worker");
-            joins.push(join);
+            joins.push(spawn_worker(WorkerCtx {
+                name: format!("lq-merge-{i}"),
+                rx: Arc::clone(&rx),
+                merge_fn: Arc::clone(&merge_fn),
+                fetch_fn: Arc::clone(&fetch_fn),
+                clock: clock.clone(),
+                stats: Arc::clone(&stats),
+                respawned: Arc::clone(&respawned),
+            }));
         }
-        Self { tx: Some(tx), joins, stats }
+        Self { tx: Some(tx), joins, respawned, stats }
     }
 
     /// Shared concurrency counters (held by the coordinator handle).
@@ -265,13 +350,27 @@ impl MergePool {
         self.tx.as_ref().expect("merge pool already shut down").clone()
     }
 
-    /// Drop the queue and join every merge thread. Callers must ensure
-    /// all other senders (worker-held clones) are gone first, or this
-    /// blocks until they are.
+    /// Drop the queue and join every merge thread — including workers
+    /// respawned after contained panics (a joined phoenix may itself
+    /// have respawned, so drain until the list is empty). Callers must
+    /// ensure all other senders (worker-held clones) are gone first, or
+    /// this blocks until they are.
     pub(crate) fn shutdown(mut self) {
         self.tx = None;
         for j in self.joins.drain(..) {
             let _ = j.join();
+        }
+        loop {
+            let handles: Vec<_> = {
+                let mut guard = self.respawned.lock().unwrap_or_else(|e| e.into_inner());
+                std::mem::take(&mut *guard)
+            };
+            if handles.is_empty() {
+                break;
+            }
+            for j in handles {
+                let _ = j.join();
+            }
         }
     }
 }
@@ -382,13 +481,98 @@ mod tests {
         let t0 = std::time::Instant::now();
         loop {
             let stats = pool.stats().snapshot();
-            if stats == MergeStatsSnapshot { inflight: 0, peak_overlap: 2, started: 2, completed: 2 }
+            if stats
+                == MergeStatsSnapshot {
+                    inflight: 0,
+                    peak_overlap: 2,
+                    started: 2,
+                    completed: 2,
+                    worker_respawns: 0,
+                }
             {
                 break;
             }
             assert!(t0.elapsed() < Duration::from_secs(5), "stats never settled: {stats:?}");
             std::thread::yield_now();
         }
+        pool.shutdown();
+    }
+
+    /// The fault-containment proof: a merge that panics fails only its
+    /// own job (structured error carrying the payload), the pool keeps
+    /// serving later jobs on a respawned worker, and shutdown still
+    /// joins cleanly.
+    #[test]
+    fn merge_panic_is_contained_and_the_worker_respawns() {
+        let merge_fn: MergeFn = Arc::new(|id| {
+            if id == 13 {
+                panic!("scripted merge panic on {id}");
+            }
+            noop_weights()
+        });
+        let pool = MergePool::new(1, merge_fn, no_tier_fetch(), Clock::real());
+        let (tx, rx) = channel();
+        for id in [7u32, 13, 9] {
+            let tx = tx.clone();
+            pool.sender()
+                .send(MergeJob {
+                    adapter: id,
+                    kind: JobKind::Merge(Box::new(move |res, _| {
+                        let _ = tx.send((id, res.map_err(|e| e.to_string())));
+                    })),
+                })
+                .unwrap();
+        }
+        let mut results = std::collections::BTreeMap::new();
+        for _ in 0..3 {
+            let (id, res) = rx.recv_timeout(Duration::from_secs(5)).expect(
+                "every job must answer: a swallowed panic would hang the third request here",
+            );
+            results.insert(id, res);
+        }
+        assert!(results[&7].is_ok());
+        assert!(results[&9].is_ok(), "job after the panic runs on the respawned worker");
+        let err = results[&13].as_ref().unwrap_err();
+        assert!(
+            err.contains("panicked on adapter 13") && err.contains("scripted merge panic"),
+            "{err}"
+        );
+        let t0 = std::time::Instant::now();
+        loop {
+            let stats = pool.stats().snapshot();
+            if stats
+                == MergeStatsSnapshot {
+                    inflight: 0,
+                    peak_overlap: 1,
+                    started: 3,
+                    completed: 3,
+                    worker_respawns: 1,
+                }
+            {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "stats never settled: {stats:?}");
+            std::thread::yield_now();
+        }
+        pool.shutdown();
+    }
+
+    /// Same containment contract on the fetch path.
+    #[test]
+    fn fetch_panic_answers_with_structured_error() {
+        let fetch_fn: FetchFn = Arc::new(|_id| panic!("fetch blew up"));
+        let pool = MergePool::new(2, Arc::new(|_| noop_weights()), fetch_fn, Clock::real());
+        let (tx, rx) = channel();
+        pool.sender()
+            .send(MergeJob {
+                adapter: 3,
+                kind: JobKind::Fetch(Box::new(move |res, _| {
+                    let _ = tx.send(res.map(|_| ()).map_err(|e| e.to_string()));
+                })),
+            })
+            .unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.contains("panicked on adapter 3") && err.contains("fetch blew up"), "{err}");
         pool.shutdown();
     }
 }

@@ -97,6 +97,12 @@ pub struct ServerMetrics {
     pub decode_steps: u64,
     /// Prefill/admission forward passes.
     pub prefill_passes: u64,
+    /// Requests retired past their deadline (DESIGN.md §15).
+    pub timeouts: u64,
+    /// Requests retired by a cancel token.
+    pub cancellations: u64,
+    /// Requests shed at admission (`Overloaded`; queue depth cap).
+    pub sheds: u64,
 }
 
 impl ServerMetrics {
@@ -131,6 +137,9 @@ impl ServerMetrics {
         self.tokens_generated += other.tokens_generated;
         self.decode_steps += other.decode_steps;
         self.prefill_passes += other.prefill_passes;
+        self.timeouts += other.timeouts;
+        self.cancellations += other.cancellations;
+        self.sheds += other.sheds;
     }
 
     /// Mean batch occupancy.
@@ -300,10 +309,13 @@ mod tests {
         let mut w1 = ServerMetrics::new();
         w0.requests = 3;
         w0.batches = 2;
+        w0.timeouts = 1;
         w0.e2e_latency.as_mut().unwrap().record(Duration::from_millis(1));
         w1.requests = 5;
         w1.batches = 1;
         w1.tokens_generated = 9;
+        w1.cancellations = 2;
+        w1.sheds = 4;
         w1.e2e_latency.as_mut().unwrap().record(Duration::from_millis(4));
         let mut total = ServerMetrics::new();
         total.absorb(&w0);
@@ -311,6 +323,7 @@ mod tests {
         assert_eq!(total.requests, 8);
         assert_eq!(total.batches, 3);
         assert_eq!(total.tokens_generated, 9);
+        assert_eq!((total.timeouts, total.cancellations, total.sheds), (1, 2, 4));
         assert_eq!(total.e2e_latency.as_ref().unwrap().count(), 2);
     }
 }

@@ -40,5 +40,8 @@ pub use merge_worker::{MergeHook, MergeStatsSnapshot};
 pub use metrics::{Histogram, LatencyStats, ServerMetrics};
 pub use pool::{route, WorkerSnapshot};
 pub use registry::{AdapterId, AdapterRegistry, AdapterSlot, StoredAdapter};
-pub use server::{Coordinator, CoordinatorConfig, GenRequest, GenResponse, MergeStrategy, TierConfig};
-pub use tier::{AdapterTier, DiskFault, LoadHook};
+pub use server::{
+    Coordinator, CoordinatorConfig, FailKind, GenRequest, GenResponse, MergeStrategy,
+    RequestOptions, ServeError, TierConfig,
+};
+pub use tier::{AdapterTier, DiskErrorFault, DiskFault, LoadHook, TierEvent, TierEventHook};

@@ -42,7 +42,7 @@ use super::cache::{CacheStats, LruCache};
 use super::merge_worker::{JobKind, MergeJob, Shared};
 use super::metrics::ServerMetrics;
 use super::registry::{AdapterId, StoredAdapter};
-use super::server::{GenRequest, GenResponse, MergeStrategy, Responder};
+use super::server::{FailKind, GenRequest, GenResponse, MergeStrategy, Responder, ServeError};
 use crate::adapter::fmt::Tensor;
 use crate::clock::Clock;
 use crate::eval::decode::{decode_lockstep, EngineStepper};
@@ -56,7 +56,9 @@ use crate::workload::ArrivalPredictor;
 use crate::runtime::DecodeState;
 use crate::runtime::{DeviceWeights, Engine};
 #[cfg(not(feature = "pjrt"))]
-use crate::scheduler::engine_loop::{run_continuous, ContinuousConfig, SessionStepper};
+use crate::scheduler::engine_loop::{
+    run_continuous, ContinuousConfig, RequestOutcome, SessionStepper,
+};
 #[cfg(not(feature = "pjrt"))]
 use crate::scheduler::queue::{AdmissionQueue, LaneRequest};
 use anyhow::anyhow;
@@ -116,6 +118,11 @@ pub(crate) struct WorkerConfig {
     /// Warm adapters ahead of their predicted next arrival (per-tenant
     /// inter-arrival EWMA; see `workload::ArrivalPredictor`).
     pub predictive_prefetch: bool,
+    /// Default per-request deadline (a request's own deadline wins).
+    pub request_timeout: Option<Duration>,
+    /// Admission-queue depth cap: arrivals beyond this many pending shed
+    /// with `FailKind::Overloaded` (DESIGN.md §15).
+    pub queue_cap: Option<usize>,
 }
 
 /// One worker's metrics snapshot. Taken **after** the worker's release
@@ -242,10 +249,7 @@ pub(crate) fn worker_main(
         match rx.recv_timeout(timeout) {
             Ok(WorkerMsg::Gen(req, resp)) => w.on_gen(req, resp),
             Ok(WorkerMsg::Prefetch(id, ack)) => w.on_prefetch(id, ack),
-            Ok(WorkerMsg::Invalidate(id)) => {
-                w.cache.remove(&id);
-                w.factor_cache.remove(&id);
-            }
+            Ok(WorkerMsg::Invalidate(id)) => w.on_invalidate(id),
             Ok(WorkerMsg::Metrics(tx)) => metrics_reply = Some(tx),
             Ok(WorkerMsg::Merged { seq, adapter, result, host_time }) => {
                 w.ingest(seq, HeldJob::Merge { adapter, result, host_time });
@@ -265,6 +269,9 @@ pub(crate) fn worker_main(
             // batches release immediately instead of waiting out their
             // deadline.
             let mut batches = Vec::new();
+            // deadlines that passed while queued retire here, before the
+            // release pass — an expired request never occupies a lane
+            w.expire_queued();
             loop {
                 let batch = if draining {
                     w.batcher.pop_flush()
@@ -319,6 +326,12 @@ struct Worker {
     #[cfg_attr(feature = "pjrt", allow(dead_code))]
     prefill_chunk: usize,
     clock: Clock,
+    /// Batcher max wait (the shed path's `retry_after` unit).
+    max_wait: Duration,
+    /// Default per-request deadline (a request's own deadline wins).
+    request_timeout: Option<Duration>,
+    /// Admission depth cap (None = never shed).
+    queue_cap: Option<usize>,
     /// Unmerged base weights, resident once per worker — the substrate the
     /// factor-form path decodes over (None under `Merged`).
     base_weights: Option<DeviceWeights>,
@@ -383,6 +396,9 @@ impl Worker {
             continuous: cfg.continuous,
             prefill_chunk: cfg.prefill_chunk,
             clock: cfg.clock,
+            max_wait: cfg.max_wait,
+            request_timeout: cfg.request_timeout,
+            queue_cap: cfg.queue_cap,
             base_weights,
             merge_seq: 0,
             next_ingest: 0,
@@ -419,23 +435,68 @@ impl Worker {
 
     fn on_gen(&mut self, req: GenRequest, resp: Responder) {
         let adapter = req.adapter;
-        if self.shared.with_registry(|r| r.get(adapter).is_none()) {
-            let _ = resp.send(Err(anyhow!("unknown adapter {adapter}")));
-            return;
+        enum Known {
+            Ok,
+            Quarantined,
+            Unknown,
+        }
+        let known = self.shared.with_registry(|r| match r.get(adapter) {
+            None => Known::Unknown,
+            Some(e) if e.is_quarantined() => Known::Quarantined,
+            Some(_) => Known::Ok,
+        });
+        match known {
+            Known::Ok => {}
+            Known::Unknown => {
+                let _ = resp.send(Err(ServeError::new(
+                    FailKind::AdapterUnavailable,
+                    format!("unknown adapter {adapter}"),
+                )));
+                return;
+            }
+            // fail fast instead of re-parking behind a doomed disk load
+            Known::Quarantined => {
+                let _ = resp.send(Err(ServeError::new(
+                    FailKind::AdapterUnavailable,
+                    format!(
+                        "adapter {adapter} unavailable: quarantined after permanent load failure"
+                    ),
+                )));
+                return;
+            }
         }
         // An empty prompt has no logits row to decode from (rejected
         // again inside decode_lockstep, but failing early is cheaper).
         if req.prompt.is_empty() {
-            let _ = resp.send(Err(anyhow!("empty prompt")));
+            let _ = resp.send(Err(ServeError::new(FailKind::Rejected, "empty prompt")));
             return;
         }
         let t_len = self.shared.base.cfg.seq_len;
         if req.prompt.len() >= t_len {
-            let _ = resp.send(Err(anyhow!(
-                "prompt length {} leaves no room to generate (seq_len {t_len})",
-                req.prompt.len()
+            let _ = resp.send(Err(ServeError::new(
+                FailKind::Rejected,
+                format!(
+                    "prompt length {} leaves no room to generate (seq_len {t_len})",
+                    req.prompt.len()
+                ),
             )));
             return;
+        }
+        if let Some(cap) = self.queue_cap {
+            let pending = self.batcher.pending();
+            if pending >= cap {
+                // HTTP-429 semantics: the hint scales with how far past
+                // capacity the queue is, in units of the batcher's max
+                // wait (one "drain generation" per cap's worth of depth)
+                let retry_after =
+                    self.max_wait.saturating_mul((pending + 1) as u32) / (cap as u32).max(1);
+                self.metrics.sheds += 1;
+                let _ = resp.send(Err(ServeError::overloaded(
+                    retry_after,
+                    format!("queue depth {pending} at cap {cap}"),
+                )));
+                return;
+            }
         }
         if self.predictor.is_some() {
             // predictive warm-ahead: note this arrival, then pull any
@@ -452,11 +513,39 @@ impl Worker {
                 }
             }
         }
-        self.batcher.push(PendingRequest {
-            adapter,
-            enqueued: self.clock.now(),
-            payload: (req, resp),
-        });
+        let now = self.clock.now();
+        // a request's own deadline wins over the pool-wide default
+        let deadline = req
+            .options
+            .deadline
+            .or_else(|| self.request_timeout.map(|t| now + t));
+        self.batcher.push(PendingRequest { adapter, enqueued: now, deadline, payload: (req, resp) });
+    }
+
+    /// Retire queued requests whose deadline passed while they waited
+    /// for release — they never reach a decode lane.
+    fn expire_queued(&mut self) {
+        let now = self.clock.now();
+        for r in self.batcher.expire(now) {
+            self.metrics.timeouts += 1;
+            let waited = now.duration_since(r.enqueued);
+            let _ = r.payload.1.send(Err(ServeError::new(
+                FailKind::Timeout,
+                format!("deadline exceeded after {waited:?} queued"),
+            )));
+        }
+    }
+
+    /// Drop an adapter's cached state (removal or quarantine): merged
+    /// weights, packed factors, and its predictive-prefetch track (a
+    /// quarantined adapter must not be pulled back toward RAM by the
+    /// predictor).
+    fn on_invalidate(&mut self, id: AdapterId) {
+        self.cache.remove(&id);
+        self.factor_cache.remove(&id);
+        if let Some(p) = self.predictor.as_mut() {
+            p.forget(id);
+        }
     }
 
     fn on_prefetch(&mut self, id: AdapterId, ack: mpsc::Sender<anyhow::Result<()>>) {
@@ -642,8 +731,10 @@ impl Worker {
                 (_, None) => {
                     // per-adapter batchers always tag their batches
                     for r in batch.requests {
-                        let _ =
-                            r.payload.1.send(Err(anyhow!("internal: untagged adapter batch")));
+                        let _ = r.payload.1.send(Err(ServeError::new(
+                            FailKind::Internal,
+                            "untagged adapter batch",
+                        )));
                     }
                 }
             }
@@ -706,7 +797,10 @@ impl Worker {
             (_, None) => {
                 // per-adapter batchers always tag their batches
                 for r in batch.requests {
-                    let _ = r.payload.1.send(Err(anyhow!("internal: untagged adapter batch")));
+                    let _ = r
+                        .payload
+                        .1
+                        .send(Err(ServeError::new(FailKind::Internal, "untagged adapter batch")));
                 }
             }
         }
@@ -846,14 +940,26 @@ impl Worker {
             }
             Err(e) => {
                 let msg = format!("{e:#}");
+                let err = self.load_failure(id, &msg);
                 for ack in fl.waiters {
                     let _ = ack.send(Err(anyhow!("{msg}")));
                 }
                 for r in fl.parked {
-                    let _ = r.payload.1.send(Err(anyhow!("{msg}")));
+                    let _ = r.payload.1.send(Err(err.clone()));
                 }
             }
         }
+    }
+
+    /// Classify a background load/merge failure for the requests it
+    /// strands: a quarantined adapter (permanent disk failure) is
+    /// `AdapterUnavailable`; anything else (worker panic, upload error)
+    /// is `Internal`.
+    fn load_failure(&self, id: AdapterId, msg: &str) -> ServeError {
+        let quarantined =
+            self.shared.with_registry(|r| r.get(id).is_some_and(|e| e.is_quarantined()));
+        let kind = if quarantined { FailKind::AdapterUnavailable } else { FailKind::Internal };
+        ServeError::new(kind, msg)
     }
 
     /// Decode the requests that parked behind a completed fetch. The
@@ -886,12 +992,14 @@ impl Worker {
         enum Place {
             Resident,
             Tiered,
+            Quarantined,
             Gone,
         }
         let mut ready = Vec::with_capacity(requests.len());
         for q in requests {
             let id = q.adapter;
             let place = self.shared.with_registry(|r| match r.get(id) {
+                Some(e) if e.is_quarantined() => Place::Quarantined,
                 Some(e) if e.resident().is_some() => Place::Resident,
                 Some(_) => Place::Tiered,
                 None => Place::Gone,
@@ -899,7 +1007,20 @@ impl Worker {
             match place {
                 Place::Resident => ready.push(q),
                 Place::Gone => {
-                    let _ = q.payload.1.send(Err(anyhow!("unknown adapter {id}")));
+                    let _ = q.payload.1.send(Err(ServeError::new(
+                        FailKind::AdapterUnavailable,
+                        format!("unknown adapter {id}"),
+                    )));
+                }
+                // quarantined mid-queue: fail fast, never re-park behind
+                // a disk load that is known to fail
+                Place::Quarantined => {
+                    let _ = q.payload.1.send(Err(ServeError::new(
+                        FailKind::AdapterUnavailable,
+                        format!(
+                            "adapter {id} unavailable: quarantined after permanent load failure"
+                        ),
+                    )));
                 }
                 Place::Tiered => {
                     if let Some(fl) = self.fetching.get_mut(&id) {
@@ -936,7 +1057,8 @@ impl Worker {
     /// ahead of its predicted next arrival. Never counts cache stats and
     /// never parks requests — purely a background fill.
     fn warm(&mut self, id: AdapterId) {
-        if self.shared.with_registry(|r| r.get(id).is_none()) {
+        // unknown or quarantined: never pull toward RAM in the background
+        if self.shared.with_registry(|r| r.get(id).is_none_or(|e| e.is_quarantined())) {
             return;
         }
         if self.strategy == MergeStrategy::Factor {
@@ -989,12 +1111,13 @@ impl Worker {
             }
             Err(e) => {
                 let msg = format!("{e:#}");
+                let err = self.load_failure(id, &msg);
                 for ack in fl.waiters {
                     let _ = ack.send(Err(anyhow!("{msg}")));
                 }
                 for requests in fl.parked {
                     for r in requests {
-                        let _ = r.payload.1.send(Err(anyhow!("{msg}")));
+                        let _ = r.payload.1.send(Err(err.clone()));
                     }
                 }
             }
@@ -1094,14 +1217,17 @@ impl Worker {
                         adapters.push(a);
                     }
                     None => {
-                        let _ = r
-                            .payload
-                            .1
-                            .send(Err(anyhow!("adapter {} factors not resident", r.adapter)));
+                        let _ = r.payload.1.send(Err(ServeError::new(
+                            FailKind::Internal,
+                            format!("adapter {} factors not resident", r.adapter),
+                        )));
                     }
                 },
                 Got::Gone => {
-                    let _ = r.payload.1.send(Err(anyhow!("unknown adapter {}", r.adapter)));
+                    let _ = r.payload.1.send(Err(ServeError::new(
+                        FailKind::AdapterUnavailable,
+                        format!("unknown adapter {}", r.adapter),
+                    )));
                 }
             }
         }
@@ -1133,9 +1259,11 @@ impl Worker {
                 }
             }
             Err(e) => {
-                let msg = format!("{e:#}");
+                // a contained compute panic or decode error fails only
+                // this batch's requests (DESIGN.md §15)
+                let err = ServeError::new(FailKind::Internal, format!("{e:#}"));
                 for r in requests {
-                    let _ = r.payload.1.send(Err(anyhow!("{msg}")));
+                    let _ = r.payload.1.send(Err(err.clone()));
                 }
             }
         }
@@ -1177,7 +1305,7 @@ impl Worker {
         merged: Option<AdapterId>,
         requests: &[Queued],
         adapters: &[Arc<StoredAdapter>],
-    ) -> anyhow::Result<Vec<Option<Vec<i32>>>> {
+    ) -> anyhow::Result<Vec<Option<(Vec<i32>, RequestOutcome)>>> {
         let cfg = &self.shared.base.cfg;
         let (t_len, vocab) = (cfg.seq_len, cfg.vocab);
         let (lanes, prog) = {
@@ -1208,9 +1336,11 @@ impl Worker {
                     src
                 }),
                 enqueued: q.enqueued,
+                deadline: q.deadline,
+                cancel: req.options.cancel.clone(),
             });
         }
-        let mut outputs: Vec<Option<Vec<i32>>> = vec![None; requests.len()];
+        let mut outputs: Vec<Option<(Vec<i32>, RequestOutcome)>> = vec![None; requests.len()];
         let mut ttfts: Vec<Duration> = Vec::with_capacity(requests.len());
         let ccfg =
             ContinuousConfig { lanes, seq_len: t_len, vocab, prefill_chunk: self.prefill_chunk };
@@ -1218,8 +1348,13 @@ impl Worker {
         let run = {
             let mut stepper = SessionStepper::new(&self.engine, prog, weights, &mut self.session);
             run_continuous(&mut stepper, &ccfg, &mut self.admission, &self.clock, |fin| {
-                ttfts.push(fin.ttft);
-                outputs[fin.id as usize] = Some(fin.tokens);
+                // ttft measures completed service; a request retired by
+                // its deadline or a cancel token never produced a first
+                // token the caller saw
+                if fin.outcome == RequestOutcome::Done {
+                    ttfts.push(fin.ttft);
+                }
+                outputs[fin.id as usize] = Some((fin.tokens, fin.outcome));
             })
         };
         match run {
@@ -1255,16 +1390,16 @@ impl Worker {
     fn finish_group(
         &mut self,
         requests: Vec<Queued>,
-        outcome: anyhow::Result<Vec<Option<Vec<i32>>>>,
+        outcome: anyhow::Result<Vec<Option<(Vec<i32>, RequestOutcome)>>>,
         factor: bool,
         counted: u64,
     ) {
         match outcome {
             Ok(outputs) => {
                 let now = self.clock.now();
-                for (r, tokens) in requests.into_iter().zip(outputs) {
-                    match tokens {
-                        Some(tokens) => {
+                for (r, out) in requests.into_iter().zip(outputs) {
+                    match out {
+                        Some((tokens, RequestOutcome::Done)) => {
                             let e2e = now.duration_since(r.enqueued);
                             if let Some(h) = self.metrics.e2e_latency.as_mut() {
                                 h.record(e2e);
@@ -1273,13 +1408,33 @@ impl Worker {
                             self.metrics.tokens_generated += tokens.len() as u64;
                             let _ = r.payload.1.send(Ok(GenResponse { tokens, e2e }));
                         }
+                        Some((tokens, RequestOutcome::Timeout)) => {
+                            self.metrics.timeouts += 1;
+                            let _ = r.payload.1.send(Err(ServeError::new(
+                                FailKind::Timeout,
+                                format!(
+                                    "deadline exceeded after {} generated token(s)",
+                                    tokens.len()
+                                ),
+                            )));
+                        }
+                        Some((tokens, RequestOutcome::Cancelled)) => {
+                            self.metrics.cancellations += 1;
+                            let _ = r.payload.1.send(Err(ServeError::new(
+                                FailKind::Cancelled,
+                                format!(
+                                    "cancelled after {} generated token(s)",
+                                    tokens.len()
+                                ),
+                            )));
+                        }
                         None => {
                             // unreachable: run_continuous completes every
                             // admitted request or errors the whole group
-                            let _ = r
-                                .payload
-                                .1
-                                .send(Err(anyhow!("internal: request missed by scheduler")));
+                            let _ = r.payload.1.send(Err(ServeError::new(
+                                FailKind::Internal,
+                                "request missed by scheduler",
+                            )));
                         }
                     }
                 }
@@ -1289,9 +1444,11 @@ impl Worker {
                 }
             }
             Err(e) => {
-                let msg = format!("{e:#}");
+                // a contained compute panic or session error fails only
+                // this group's requests (DESIGN.md §15)
+                let err = ServeError::new(FailKind::Internal, format!("{e:#}"));
                 for r in requests {
-                    let _ = r.payload.1.send(Err(anyhow!("{msg}")));
+                    let _ = r.payload.1.send(Err(err.clone()));
                 }
             }
         }

@@ -96,6 +96,11 @@ pub struct RegistryEntry {
     pub task: String,
     bytes: usize,
     avg_bits: f64,
+    /// Set after a permanent tier-load failure (or by scripted churn):
+    /// requests for a quarantined adapter fail fast with
+    /// `AdapterUnavailable` instead of re-parking on a broken disk path
+    /// (DESIGN.md §15). Metadata survives; `recover` clears the flag.
+    quarantined: bool,
 }
 
 impl RegistryEntry {
@@ -110,6 +115,11 @@ impl RegistryEntry {
     /// Whether the factors have been demoted to the disk tier.
     pub fn is_tiered(&self) -> bool {
         matches!(self.slot, AdapterSlot::Tiered)
+    }
+
+    /// Whether the adapter is quarantined (fail fast, don't load).
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined
     }
 
     /// At-rest packed bytes (valid whether resident or tiered).
@@ -147,9 +157,40 @@ impl AdapterRegistry {
                 task: task.into(),
                 bytes,
                 avg_bits,
+                quarantined: false,
             },
         );
         id
+    }
+
+    /// Quarantine an adapter: keep its metadata but make every lookup
+    /// fail fast until [`AdapterRegistry::recover`]. Returns whether the
+    /// adapter exists and was not already quarantined.
+    pub fn quarantine(&mut self, id: AdapterId) -> bool {
+        match self.entries.get_mut(&id) {
+            Some(e) if !e.quarantined => {
+                e.quarantined = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Lift a quarantine (the operator fixed the disk / re-uploaded the
+    /// artifact). Returns whether the adapter exists and was quarantined.
+    pub fn recover(&mut self, id: AdapterId) -> bool {
+        match self.entries.get_mut(&id) {
+            Some(e) if e.quarantined => {
+                e.quarantined = false;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Ids currently quarantined (scenario summary accounting).
+    pub fn quarantined_ids(&self) -> Vec<AdapterId> {
+        self.entries.iter().filter(|(_, e)| e.quarantined).map(|(&id, _)| id).collect()
     }
 
     /// Demote an adapter's factors to the disk tier, dropping the
@@ -213,7 +254,8 @@ mod tests {
     fn quantized(rng: &mut Rng) -> StoredAdapter {
         let (b, a) = rng.lora_pair(64, 64, 8, 0.7);
         let mut q = QuantizedLora::default();
-        q.sites.insert("l0.wq".into(), quantize_site(&b, &a, &LoraQuantConfig::default()));
+        q.sites
+            .insert("l0.wq".into(), quantize_site(&b, &a, &LoraQuantConfig::default()).unwrap());
         StoredAdapter::Quantized(q)
     }
 
@@ -268,6 +310,29 @@ mod tests {
 
         assert!(reg.demote(id).is_none(), "already tiered");
         assert!(reg.demote(999).is_none(), "unknown id");
+    }
+
+    #[test]
+    fn quarantine_and_recover_toggle_without_losing_metadata() {
+        let mut rng = Rng::new(146);
+        let mut reg = AdapterRegistry::new();
+        let a = quantized(&mut rng);
+        let bytes = a.bytes();
+        let id = reg.register(a, "t");
+        assert!(!reg.get(id).unwrap().is_quarantined());
+        assert!(reg.quarantine(id));
+        assert!(!reg.quarantine(id), "second quarantine is a no-op");
+        assert!(reg.get(id).unwrap().is_quarantined());
+        assert_eq!(reg.quarantined_ids(), vec![id]);
+        // metadata and residency accounting are untouched
+        assert_eq!(reg.get(id).unwrap().bytes(), bytes);
+        assert!(reg.get(id).unwrap().resident().is_some());
+        assert!(reg.recover(id));
+        assert!(!reg.recover(id), "second recover is a no-op");
+        assert!(!reg.get(id).unwrap().is_quarantined());
+        assert!(reg.quarantined_ids().is_empty());
+        assert!(!reg.quarantine(999), "unknown id");
+        assert!(!reg.recover(999), "unknown id");
     }
 
     #[test]

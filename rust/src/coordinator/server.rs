@@ -22,14 +22,15 @@ use super::merge_worker::{
 use super::metrics::ServerMetrics;
 use super::pool::{route, worker_main, WorkerConfig, WorkerMsg, WorkerSnapshot};
 use super::registry::{AdapterId, AdapterRegistry, StoredAdapter};
-use super::tier::{AdapterTier, DiskFault, LoadHook};
+use super::tier::{AdapterTier, DiskErrorFault, DiskFault, LoadHook, TierEventHook};
 use crate::clock::Clock;
 use crate::model::BaseWeights;
 use anyhow::{bail, Context};
 use std::path::PathBuf;
 use std::str::FromStr;
+use std::sync::atomic::AtomicBool;
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How adapters execute (DESIGN.md §8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -91,6 +92,15 @@ pub struct TierConfig {
     pub predictive_prefetch: bool,
     /// Instrumentation called at the start of every disk load.
     pub load_hook: Option<LoadHook>,
+    /// Retries after a failed disk load before the adapter is
+    /// quarantined (DESIGN.md §15). `0` = fail on the first error.
+    pub max_retries: u32,
+    /// Base retry backoff, doubled per attempt on the pool clock.
+    pub backoff: Duration,
+    /// Scripted disk-read failures (scenario faults; DESIGN.md §15).
+    pub disk_error: Option<DiskErrorFault>,
+    /// Observer for disk-load errors and quarantines.
+    pub event_hook: Option<TierEventHook>,
 }
 
 impl TierConfig {
@@ -101,7 +111,19 @@ impl TierConfig {
             disk_fault: None,
             predictive_prefetch: false,
             load_hook: None,
+            max_retries: 0,
+            backoff: Duration::ZERO,
+            disk_error: None,
+            event_hook: None,
         }
+    }
+
+    /// Builder sugar: bounded retry with exponential backoff on disk
+    /// load errors.
+    pub fn with_retry(mut self, max_retries: u32, backoff: Duration) -> Self {
+        self.max_retries = max_retries;
+        self.backoff = backoff;
+        self
     }
 }
 
@@ -153,6 +175,14 @@ pub struct CoordinatorConfig {
     /// Optional disk tier below the caches (DESIGN.md §14). `None` keeps
     /// every registered adapter RAM-resident (the pre-tiering behavior).
     pub tier: Option<TierConfig>,
+    /// Default per-request deadline, measured from submission
+    /// (DESIGN.md §15). A request's own `deadline` wins when set.
+    /// `None` = requests never expire.
+    pub request_timeout: Option<Duration>,
+    /// Admission-queue depth cap per worker: requests arriving beyond
+    /// this many pending are shed with [`FailKind::Overloaded`] and a
+    /// `retry_after` hint (HTTP-429 semantics). `None` = unbounded.
+    pub queue_cap: Option<usize>,
 }
 
 impl CoordinatorConfig {
@@ -172,6 +202,8 @@ impl CoordinatorConfig {
             merge_hook: None,
             clock: Clock::real(),
             tier: None,
+            request_timeout: None,
+            queue_cap: None,
         }
     }
 
@@ -226,6 +258,18 @@ impl CoordinatorConfig {
         self
     }
 
+    /// Builder sugar: set the default per-request deadline.
+    pub fn with_request_timeout(mut self, timeout: Duration) -> Self {
+        self.request_timeout = Some(timeout);
+        self
+    }
+
+    /// Builder sugar: cap the per-worker admission queue (load shedding).
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = Some(cap);
+        self
+    }
+
     /// Buckets sorted ascending, deduplicated, validated.
     fn normalized_buckets(&self) -> anyhow::Result<Vec<usize>> {
         let mut b = self.buckets.clone();
@@ -249,6 +293,41 @@ pub struct GenRequest {
     pub prompt: Vec<i32>,
     /// Maximum new tokens (generation also stops at EOS).
     pub max_new: usize,
+    /// Per-request lifecycle options (DESIGN.md §15).
+    pub options: RequestOptions,
+}
+
+impl GenRequest {
+    pub fn new(adapter: AdapterId, prompt: Vec<i32>, max_new: usize) -> Self {
+        Self { adapter, prompt, max_new, options: RequestOptions::default() }
+    }
+
+    /// Builder sugar: absolute deadline for this request.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.options.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder sugar: attach a cancel token (set it to `true` to retire
+    /// the request at the scheduler's next cancel-check).
+    pub fn with_cancel(mut self, cancel: Arc<AtomicBool>) -> Self {
+        self.options.cancel = Some(cancel);
+        self
+    }
+}
+
+/// Per-request lifecycle options: deadline + cancellation
+/// (DESIGN.md §15). Default (`None`/`None`) = run to completion.
+#[derive(Debug, Clone, Default)]
+pub struct RequestOptions {
+    /// Absolute deadline; past it the request retires with
+    /// [`FailKind::Timeout`] wherever it is (queued, batched, or
+    /// mid-decode). Overrides `CoordinatorConfig::request_timeout`.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancel token; flip to `true` and the scheduler
+    /// retires the request with [`FailKind::Cancelled`] at its next
+    /// cancel-check. Cancellation wins over a simultaneous timeout.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 /// A generation response.
@@ -260,7 +339,74 @@ pub struct GenResponse {
     pub e2e: Duration,
 }
 
-pub(crate) type Responder = mpsc::Sender<anyhow::Result<GenResponse>>;
+/// Why a request failed (DESIGN.md §15). The typed channel lets
+/// callers branch on the failure class (retry on `Overloaded`, give up
+/// on `AdapterUnavailable`, …) without parsing message strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FailKind {
+    /// Deadline passed before the request finished.
+    Timeout,
+    /// Caller flipped the cancel token.
+    Cancelled,
+    /// Shed at admission: queue depth cap reached (HTTP-429).
+    Overloaded,
+    /// Adapter quarantined after a permanent disk-load failure, or
+    /// unknown to the registry.
+    AdapterUnavailable,
+    /// A worker task panicked or another invariant broke; the failure
+    /// is contained to this request's group.
+    Internal,
+    /// Request was malformed (empty prompt, missing BOS, …).
+    Rejected,
+}
+
+impl std::fmt::Display for FailKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Timeout => "timeout",
+            Self::Cancelled => "cancelled",
+            Self::Overloaded => "overloaded",
+            Self::AdapterUnavailable => "adapter-unavailable",
+            Self::Internal => "internal",
+            Self::Rejected => "rejected",
+        })
+    }
+}
+
+/// A structured request failure: the class, an optional client backoff
+/// hint (`Overloaded` only), and a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeError {
+    pub kind: FailKind,
+    /// Suggested client backoff before resubmitting (shed responses;
+    /// derived from queue depth).
+    pub retry_after: Option<Duration>,
+    pub msg: String,
+}
+
+impl ServeError {
+    pub fn new(kind: FailKind, msg: impl Into<String>) -> Self {
+        Self { kind, retry_after: None, msg: msg.into() }
+    }
+
+    pub fn overloaded(retry_after: Duration, msg: impl Into<String>) -> Self {
+        Self { kind: FailKind::Overloaded, retry_after: Some(retry_after), msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind, self.msg)?;
+        if let Some(ra) = self.retry_after {
+            write!(f, " (retry after {ra:?})")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+pub(crate) type Responder = mpsc::Sender<Result<GenResponse, ServeError>>;
 
 /// The handle's shared links. Dropping the last clone shuts the pool
 /// down (workers drain in-flight work first).
@@ -301,12 +447,17 @@ impl Coordinator {
         let n_workers = cfg.workers.max(1);
         let base = BaseWeights::load(cfg.artifacts_dir.join(&cfg.model))?;
         let tier = match &cfg.tier {
-            Some(t) => Some(AdapterTier::new(
-                t.adapter_dir.clone(),
-                cfg.clock.clone(),
-                t.disk_fault,
-                t.load_hook.clone(),
-            )?),
+            Some(t) => Some(
+                AdapterTier::new(
+                    t.adapter_dir.clone(),
+                    cfg.clock.clone(),
+                    t.disk_fault,
+                    t.load_hook.clone(),
+                )?
+                .with_retry(t.max_retries, t.backoff)
+                .with_disk_errors(t.disk_error)
+                .with_events(t.event_hook.clone()),
+            ),
             None => None,
         };
         let shared = Arc::new(Shared::new(base, tier));
@@ -336,6 +487,8 @@ impl Coordinator {
                 .map(|t| (t.factor_cache_bytes / n_workers).max(1))
                 .unwrap_or(1),
             predictive_prefetch: cfg.tier.as_ref().is_some_and(|t| t.predictive_prefetch),
+            request_timeout: cfg.request_timeout,
+            queue_cap: cfg.queue_cap,
         };
 
         let mut txs = Vec::with_capacity(n_workers);
@@ -397,20 +550,22 @@ impl Coordinator {
         &self.links.workers[route(adapter, self.links.workers.len())]
     }
 
-    /// Submit a request and return a receiver for its response.
+    /// Submit a request and return a receiver for its (typed) response.
     pub fn generate_async(
         &self,
         req: GenRequest,
-    ) -> mpsc::Receiver<anyhow::Result<GenResponse>> {
+    ) -> mpsc::Receiver<Result<GenResponse, ServeError>> {
         let (tx, rx) = mpsc::channel();
         // send failure surfaces as a dropped responder → RecvError
         let _ = self.worker_for(req.adapter).send(WorkerMsg::Gen(req, tx));
         rx
     }
 
-    /// Submit and wait.
+    /// Submit and wait. Failures flatten into `anyhow` (the typed
+    /// [`ServeError`] stays downcastable); use [`Self::generate_async`]
+    /// to branch on [`FailKind`] directly.
     pub fn generate(&self, req: GenRequest) -> anyhow::Result<GenResponse> {
-        self.generate_async(req).recv().context("executor gone")?
+        Ok(self.generate_async(req).recv().context("executor gone")??)
     }
 
     /// Warm an adapter's merged weights on its owning worker ahead of
@@ -527,6 +682,31 @@ impl Coordinator {
             .as_ref()
             .map(|t| (t.disk_loads(), t.spilled()))
             .unwrap_or((0, 0))
+    }
+
+    /// Disk-load retries absorbed by the tier's backoff loop; zero when
+    /// tiering (or retry) is off.
+    pub fn disk_retries(&self) -> u64 {
+        self.links.shared.tier.as_ref().map(|t| t.disk_retries()).unwrap_or(0)
+    }
+
+    /// Quarantine an adapter: later requests fail fast with
+    /// [`FailKind::AdapterUnavailable`] until [`Self::recover_adapter`].
+    /// Cached merged weights are invalidated so the fault is visible
+    /// immediately, not only on the next cache miss. Returns `false` if
+    /// the adapter is unknown or already quarantined.
+    pub fn quarantine_adapter(&self, id: AdapterId) -> bool {
+        let changed = self.links.shared.with_registry_mut(|r| r.quarantine(id));
+        if changed {
+            let _ = self.worker_for(id).send(WorkerMsg::Invalidate(id));
+        }
+        changed
+    }
+
+    /// Lift a quarantine. Returns `false` if the adapter is unknown or
+    /// not quarantined.
+    pub fn recover_adapter(&self, id: AdapterId) -> bool {
+        self.links.shared.with_registry_mut(|r| r.recover(id))
     }
 
     /// Stop the pool (in-flight and parked requests finish first).

@@ -14,10 +14,11 @@
 use super::registry::{AdapterId, StoredAdapter};
 use crate::adapter::store;
 use crate::clock::Clock;
-use anyhow::Context;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Observer called with the adapter id at the start of every disk load,
@@ -51,6 +52,51 @@ pub struct DiskFault {
     pub delay: Duration,
 }
 
+/// Scripted disk-read **errors** (`FaultPlan::disk_error`): the first
+/// `first_n` load attempts of a matching adapter fail with an injected
+/// I/O error, counted per adapter, deterministically. Interplay with the
+/// retry policy: `first_n <= max_retries` means the load eventually
+/// succeeds with `first_n` visible retries; `first_n > max_retries`
+/// means a permanent failure the caller quarantines (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DiskErrorFault {
+    /// Restrict to one adapter; `None` hits every load.
+    pub adapter: Option<AdapterId>,
+    /// How many leading attempts fail per adapter.
+    pub first_n: u32,
+}
+
+/// Structured tier fault telemetry, fired on the loading (merge-pool)
+/// thread — the scenario harness records `DiskError` / `Quarantine`
+/// events through it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierEvent {
+    /// One load attempt failed (`attempt` is 0-based).
+    LoadError { adapter: AdapterId, attempt: u32 },
+    /// The adapter was quarantined after a permanent load failure.
+    Quarantined { adapter: AdapterId },
+}
+
+/// Observer for [`TierEvent`]s, mirroring [`LoadHook`].
+#[derive(Clone)]
+pub struct TierEventHook(Arc<dyn Fn(&TierEvent) + Send + Sync>);
+
+impl TierEventHook {
+    pub fn new(f: impl Fn(&TierEvent) + Send + Sync + 'static) -> Self {
+        Self(Arc::new(f))
+    }
+
+    pub fn call(&self, ev: &TierEvent) {
+        (self.0)(ev)
+    }
+}
+
+impl std::fmt::Debug for TierEventHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("TierEventHook(..)")
+    }
+}
+
 /// The disk tier. Thread-safe: loads may run concurrently on several
 /// merge-pool threads.
 pub struct AdapterTier {
@@ -60,6 +106,17 @@ pub struct AdapterTier {
     hook: Option<LoadHook>,
     disk_loads: AtomicU64,
     spilled: AtomicU64,
+    /// Failed attempts retried (not counting the final give-up).
+    disk_retries: AtomicU64,
+    /// Extra attempts after a failed load before giving up (0 = none).
+    max_retries: u32,
+    /// Base delay before the first retry; doubles per attempt, parked on
+    /// the (virtual) clock so backoff is deterministic under a driver.
+    backoff: Duration,
+    error_fault: Option<DiskErrorFault>,
+    /// Per-adapter injected-failure counters for `error_fault`.
+    error_counts: Mutex<BTreeMap<AdapterId, u32>>,
+    events: Option<TierEventHook>,
 }
 
 impl std::fmt::Debug for AdapterTier {
@@ -90,11 +147,51 @@ impl AdapterTier {
             hook,
             disk_loads: AtomicU64::new(0),
             spilled: AtomicU64::new(0),
+            disk_retries: AtomicU64::new(0),
+            max_retries: 0,
+            backoff: Duration::ZERO,
+            error_fault: None,
+            error_counts: Mutex::new(BTreeMap::new()),
+            events: None,
         })
+    }
+
+    /// Retry policy for failed loads: up to `max_retries` extra attempts
+    /// with exponential backoff starting at `backoff` (doubling per
+    /// attempt, slept on the tier's clock).
+    pub fn with_retry(mut self, max_retries: u32, backoff: Duration) -> Self {
+        self.max_retries = max_retries;
+        self.backoff = backoff;
+        self
+    }
+
+    /// Scripted disk-error injection (see [`DiskErrorFault`]).
+    pub fn with_disk_errors(mut self, fault: Option<DiskErrorFault>) -> Self {
+        self.error_fault = fault;
+        self
+    }
+
+    /// Structured fault telemetry (see [`TierEventHook`]).
+    pub fn with_events(mut self, hook: Option<TierEventHook>) -> Self {
+        self.events = hook;
+        self
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    fn emit(&self, ev: TierEvent) {
+        if let Some(h) = &self.events {
+            h.call(&ev);
+        }
+    }
+
+    /// Record (and publish) that the caller quarantined `id` after a
+    /// permanent load failure — the tier owns the event hook, the
+    /// registry owns the flag.
+    pub fn note_quarantined(&self, id: AdapterId) {
+        self.emit(TierEvent::Quarantined { adapter: id });
     }
 
     fn path(&self, id: AdapterId) -> PathBuf {
@@ -117,11 +214,40 @@ impl AdapterTier {
         }
     }
 
-    /// Read an adapter back from disk. Must only be called from a
-    /// merge-pool thread: a scripted disk fault parks here on the clock,
-    /// and executor workers sleeping on the virtual clock would deadlock
-    /// the quiescence barrier.
+    /// Read an adapter back from disk, retrying failed attempts under
+    /// the tier's backoff policy. Must only be called from a merge-pool
+    /// thread: scripted disk faults and retry backoff park here on the
+    /// clock, and executor workers sleeping on the virtual clock would
+    /// deadlock the quiescence barrier. An `Err` is **permanent** — the
+    /// policy is already exhausted — so callers quarantine on it.
     pub fn load(&self, id: AdapterId) -> anyhow::Result<Arc<StoredAdapter>> {
+        let mut attempt: u32 = 0;
+        loop {
+            match self.load_once(id) {
+                Ok(a) => return Ok(a),
+                Err(e) => {
+                    self.emit(TierEvent::LoadError { adapter: id, attempt });
+                    if attempt >= self.max_retries {
+                        return Err(e.context(format!(
+                            "adapter {id}: tier load failed permanently after {} attempt(s)",
+                            attempt + 1
+                        )));
+                    }
+                    self.disk_retries.fetch_add(1, Ordering::SeqCst);
+                    let delay = self.backoff.saturating_mul(1u32 << attempt.min(16));
+                    if !delay.is_zero() {
+                        let now = self.clock.now();
+                        self.clock.sleep_until(now + delay);
+                    }
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// One load attempt: observer hook, scripted latency, scripted
+    /// error, then the real read.
+    fn load_once(&self, id: AdapterId) -> anyhow::Result<Arc<StoredAdapter>> {
         if let Some(h) = &self.hook {
             h.call(id);
         }
@@ -129,6 +255,17 @@ impl AdapterTier {
             if f.adapter.is_none_or(|a| a == id) {
                 let now = self.clock.now();
                 self.clock.sleep_until(now + f.delay);
+            }
+        }
+        if let Some(ef) = &self.error_fault {
+            if ef.adapter.is_none_or(|a| a == id) {
+                let mut counts = self.error_counts.lock().unwrap_or_else(|e| e.into_inner());
+                let n = counts.entry(id).or_insert(0);
+                if *n < ef.first_n {
+                    *n += 1;
+                    let k = *n;
+                    bail!("injected disk error on adapter {id} (failure {k} of {})", ef.first_n);
+                }
             }
         }
         let q = store::load(self.path(id))
@@ -150,6 +287,12 @@ impl AdapterTier {
     /// Adapters spilled since construction.
     pub fn spilled(&self) -> u64 {
         self.spilled.load(Ordering::SeqCst)
+    }
+
+    /// Failed load attempts that were retried (permanent give-ups not
+    /// included — those surface as `Err` from [`AdapterTier::load`]).
+    pub fn disk_retries(&self) -> u64 {
+        self.disk_retries.load(Ordering::SeqCst)
     }
 }
 
@@ -203,6 +346,80 @@ mod tests {
         let tier = tmp_tier("miss");
         let err = tier.load(42).unwrap_err().to_string();
         assert!(err.contains("adapter 42"), "{err}");
+        let _ = std::fs::remove_dir_all(tier.dir());
+    }
+
+    #[test]
+    fn transient_disk_errors_are_retried_to_success() {
+        // 2 injected failures, 3 retries allowed: the load must succeed
+        // with exactly 2 retries on the counter and the events visible
+        let events = Arc::new(Mutex::new(Vec::new()));
+        let ev2 = Arc::clone(&events);
+        let tier = tmp_tier("retry_ok")
+            .with_retry(3, Duration::ZERO)
+            .with_disk_errors(Some(DiskErrorFault { adapter: Some(5), first_n: 2 }))
+            .with_events(Some(TierEventHook::new(move |ev| ev2.lock().unwrap().push(*ev))));
+        let cfg = synth_model_config();
+        let adapter = synth_quantized_adapter(&cfg, 11);
+        tier.put(5, &adapter).unwrap();
+        let back = tier.load(5).expect("first_n <= max_retries must succeed");
+        assert_eq!(back.bytes(), adapter.bytes());
+        assert_eq!(tier.disk_retries(), 2);
+        assert_eq!(tier.disk_loads(), 1);
+        assert_eq!(
+            *events.lock().unwrap(),
+            vec![
+                TierEvent::LoadError { adapter: 5, attempt: 0 },
+                TierEvent::LoadError { adapter: 5, attempt: 1 },
+            ]
+        );
+        // the per-adapter failure budget is spent: later loads are clean
+        tier.load(5).unwrap();
+        assert_eq!(tier.disk_retries(), 2);
+        let _ = std::fs::remove_dir_all(tier.dir());
+    }
+
+    #[test]
+    fn exhausted_retries_fail_permanently_and_spare_other_adapters() {
+        let tier = tmp_tier("retry_perm")
+            .with_retry(1, Duration::ZERO)
+            .with_disk_errors(Some(DiskErrorFault { adapter: Some(5), first_n: 9 }));
+        let cfg = synth_model_config();
+        tier.put(5, &synth_quantized_adapter(&cfg, 12)).unwrap();
+        tier.put(6, &synth_quantized_adapter(&cfg, 13)).unwrap();
+        let err = tier.load(5).unwrap_err().to_string();
+        assert!(err.contains("permanently after 2 attempt(s)"), "{err}");
+        assert_eq!(tier.disk_retries(), 1);
+        tier.load(6).expect("fault targets adapter 5 only");
+        let _ = std::fs::remove_dir_all(tier.dir());
+    }
+
+    #[test]
+    fn retry_backoff_parks_on_the_virtual_clock() {
+        use crate::clock::VirtualClock;
+        let vc = VirtualClock::new();
+        let dir = std::env::temp_dir().join(format!("lq_tier_vbk_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tier = Arc::new(
+            AdapterTier::new(dir, Clock::virtual_from(&vc), None, None)
+                .unwrap()
+                .with_retry(2, Duration::from_millis(10))
+                .with_disk_errors(Some(DiskErrorFault { adapter: None, first_n: 2 })),
+        );
+        let cfg = synth_model_config();
+        tier.put(1, &synth_quantized_adapter(&cfg, 14)).unwrap();
+        let t2 = Arc::clone(&tier);
+        let j = std::thread::spawn(move || t2.load(1).map(|a| a.bytes()));
+        // drive the backoff sleeps: 10ms after attempt 0, 20ms after
+        // attempt 1 — advance in steps until both sleepers release
+        let t0 = std::time::Instant::now();
+        while !j.is_finished() {
+            vc.advance(Duration::from_millis(5));
+            assert!(t0.elapsed() < Duration::from_secs(10), "load never finished");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        j.join().unwrap().expect("retries succeed after backoff");
+        assert_eq!(tier.disk_retries(), 2);
         let _ = std::fs::remove_dir_all(tier.dir());
     }
 }

@@ -189,7 +189,10 @@ pub fn apply_method(
         Method::LoraQuant(cfg) => {
             let mut q = QuantizedLora::default();
             for (site, (a, b)) in &td.lora.sites {
-                q.sites.insert(site.clone(), quantize_site(b, a, cfg));
+                q.sites.insert(
+                    site.clone(),
+                    quantize_site(b, a, cfg).expect("experiment grids use well-formed configs"),
+                );
             }
             let deltas = crate::model::merge::quant_deltas(&q);
             (deltas, q.avg_bits())

@@ -293,7 +293,7 @@ mod tests {
         let x = rng.matrix(5, 40, 1.0);
         for axis in QuantAxis::all() {
             let cfg = LoraQuantConfig { axis, ste: None, group: 16, ..Default::default() };
-            let site = quantize_site(&b, &a, &cfg);
+            let site = quantize_site(&b, &a, &cfg).unwrap();
             let delta = site.dequant_delta();
             let oracle = matmul_a_bt(&x, &delta).scale(1.5);
             let mut y = Matrix::zeros(5, 48);
@@ -314,7 +314,7 @@ mod tests {
                 group: 16,
                 ..Default::default()
             };
-            let site = quantize_site(&b, &a, &cfg);
+            let site = quantize_site(&b, &a, &cfg).unwrap();
             let err = site.factors().materialize_delta().rel_err(&site.dequant_delta());
             assert!(err < 1e-5, "{low_mode:?}: {err}");
         }
@@ -341,7 +341,7 @@ mod tests {
         let mut rng = Rng::new(85);
         let (b, a) = rng.lora_pair(40, 32, 8, 0.7);
         let cfg = LoraQuantConfig { ste: None, group: 16, ..Default::default() };
-        let site = quantize_site(&b, &a, &cfg);
+        let site = quantize_site(&b, &a, &cfg).unwrap();
         let sf = site.factors();
         let mut fs = FactorScratch::default();
         // first apply warms the scratch; later applies must not change
@@ -375,7 +375,7 @@ mod tests {
             group: 16,
             ..Default::default()
         };
-        let site = quantize_site(&b, &a, &cfg);
+        let site = quantize_site(&b, &a, &cfg).unwrap();
         assert_eq!(site.factors().pairs.len(), 1);
         assert!(site.factors().materialize_delta().rel_err(&site.dequant_delta()) < 1e-5);
         // prune with h == r: only the high pair exists
@@ -386,7 +386,7 @@ mod tests {
             group: 16,
             ..Default::default()
         };
-        let site = quantize_site(&b, &a, &cfg);
+        let site = quantize_site(&b, &a, &cfg).unwrap();
         assert_eq!(site.factors().pairs.len(), 1);
         assert!(site.factors().materialize_delta().rel_err(&site.dequant_delta()) < 1e-5);
     }

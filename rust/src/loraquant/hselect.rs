@@ -7,6 +7,7 @@
 
 use crate::tensor::{norm2, Matrix};
 use crate::testutil::Rng;
+use anyhow::bail;
 
 /// How to pick the number of high-precision components.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -54,29 +55,38 @@ pub fn select_h(s: &[f32], rule: HSelect) -> usize {
 }
 
 /// Component indices of the original factors chosen as "important" under a
-/// Fig. 2 baseline strategy (`h` many of `0..r`).
-pub fn baseline_indices(b: &Matrix, a: &Matrix, h: usize, strategy: SplitStrategy) -> Vec<usize> {
+/// Fig. 2 baseline strategy (`h` many of `0..r`). `SplitStrategy::Svd`
+/// is a configuration error here — the SVD split keeps leading
+/// reparameterized components instead of selecting original indices.
+pub fn baseline_indices(
+    b: &Matrix,
+    a: &Matrix,
+    h: usize,
+    strategy: SplitStrategy,
+) -> anyhow::Result<Vec<usize>> {
     let r = b.cols();
     let h = h.min(r);
     match strategy {
-        SplitStrategy::Svd => panic!("SVD strategy does not use index selection"),
+        SplitStrategy::Svd => {
+            bail!("SVD strategy does not use index selection (use the reparameterized split)")
+        }
         SplitStrategy::Random { seed } => {
             let mut idx: Vec<usize> = (0..r).collect();
             let mut rng = Rng::new(seed);
             rng.shuffle(&mut idx);
             idx.truncate(h);
             idx.sort_unstable();
-            idx
+            Ok(idx)
         }
         SplitStrategy::Norm => {
             // ||b_i a_i^T||_F = ||b_i|| * ||a_i||
             let mut scored: Vec<(usize, f32)> = (0..r)
                 .map(|i| (i, norm2(&b.col(i)) * norm2(a.row(i))))
                 .collect();
-            scored.sort_by(|x, y| y.1.partial_cmp(&x.1).unwrap());
+            scored.sort_by(|x, y| y.1.total_cmp(&x.1));
             let mut idx: Vec<usize> = scored.into_iter().take(h).map(|(i, _)| i).collect();
             idx.sort_unstable();
-            idx
+            Ok(idx)
         }
     }
 }
@@ -123,7 +133,7 @@ mod tests {
         // component 1 has much larger norm than 0 and 2
         let b = Matrix::from_fn(4, 3, |_, j| if j == 1 { 10.0 } else { 0.1 });
         let a = Matrix::from_fn(3, 4, |i, _| if i == 1 { 10.0 } else { 0.1 });
-        assert_eq!(baseline_indices(&b, &a, 1, SplitStrategy::Norm), vec![1]);
+        assert_eq!(baseline_indices(&b, &a, 1, SplitStrategy::Norm).unwrap(), vec![1]);
     }
 
     #[test]
@@ -131,9 +141,18 @@ mod tests {
         use crate::tensor::Matrix;
         let b = Matrix::zeros(4, 8);
         let a = Matrix::zeros(8, 4);
-        let i1 = baseline_indices(&b, &a, 3, SplitStrategy::Random { seed: 7 });
-        let i2 = baseline_indices(&b, &a, 3, SplitStrategy::Random { seed: 7 });
+        let i1 = baseline_indices(&b, &a, 3, SplitStrategy::Random { seed: 7 }).unwrap();
+        let i2 = baseline_indices(&b, &a, 3, SplitStrategy::Random { seed: 7 }).unwrap();
         assert_eq!(i1, i2);
         assert_eq!(i1.len(), 3);
+    }
+
+    #[test]
+    fn svd_strategy_is_a_structured_error_not_a_panic() {
+        use crate::tensor::Matrix;
+        let b = Matrix::zeros(4, 3);
+        let a = Matrix::zeros(3, 4);
+        let err = baseline_indices(&b, &a, 2, SplitStrategy::Svd).unwrap_err();
+        assert!(err.to_string().contains("index selection"), "{err}");
     }
 }

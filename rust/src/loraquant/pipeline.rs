@@ -187,10 +187,18 @@ impl QuantizedLora {
 }
 
 /// Algorithm 1 for one site: split → (STE) → mixed-precision quantize.
-pub fn quantize_site(b: &Matrix, a: &Matrix, cfg: &LoraQuantConfig) -> QuantizedSite {
+/// Malformed inputs or configurations (shape mismatch, a baseline split
+/// strategy paired with the variance-ratio rule) are structured errors,
+/// not panics — a bad adapter fails its own registration, never the
+/// process (DESIGN.md §15).
+pub fn quantize_site(
+    b: &Matrix,
+    a: &Matrix,
+    cfg: &LoraQuantConfig,
+) -> anyhow::Result<QuantizedSite> {
     let (m, r) = b.shape();
     let n = a.cols();
-    assert_eq!(a.rows(), r, "B {:?} vs A {:?}", b.shape(), a.shape());
+    anyhow::ensure!(a.rows() == r, "rank mismatch: B {:?} vs A {:?}", b.shape(), a.shape());
 
     // 1) split
     let mut sub: SubLoras = match cfg.strategy {
@@ -202,12 +210,12 @@ pub fn quantize_site(b: &Matrix, a: &Matrix, cfg: &LoraQuantConfig) -> Quantized
         _ => {
             let h = match cfg.hselect {
                 HSelect::Static(h) => h,
-                HSelect::Ratio(_) => panic!(
+                HSelect::Ratio(_) => anyhow::bail!(
                     "baseline split strategies (random/norm) require HSelect::Static \
                      — the variance-ratio rule is defined on the SVD spectrum"
                 ),
             };
-            let idx = baseline_indices(b, a, h, cfg.strategy);
+            let idx = baseline_indices(b, a, h, cfg.strategy)?;
             split_by_indices(b, a, &idx)
         }
     };
@@ -251,7 +259,7 @@ pub fn quantize_site(b: &Matrix, a: &Matrix, cfg: &LoraQuantConfig) -> Quantized
         }
     };
 
-    QuantizedSite { m, n, r, h: sub.h, bh, ah, bl, al, axis: cfg.axis }
+    Ok(QuantizedSite { m, n, r, h: sub.h, bh, ah, bl, al, axis: cfg.axis })
 }
 
 #[cfg(test)]
@@ -269,7 +277,7 @@ mod tests {
     fn default_pipeline_reconstructs_reasonably() {
         let mut rng = Rng::new(71);
         let (b, a, ba) = sample(&mut rng);
-        let site = quantize_site(&b, &a, &LoraQuantConfig::default());
+        let site = quantize_site(&b, &a, &LoraQuantConfig::default()).unwrap();
         let err = site.dequant_delta().rel_err(&ba);
         // Weight-space error at <2 avg bits is sizeable; what matters (and
         // what the paper claims) is that it beats flat ultra-low-bit
@@ -286,7 +294,8 @@ mod tests {
                 ste: None,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let bin_err = bin_only.dequant_delta().rel_err(&ba);
         assert!(err < bin_err * 0.85, "loraquant {err} vs all-binary {bin_err}");
     }
@@ -295,8 +304,8 @@ mod tests {
     fn higher_rho_more_bits_less_error() {
         let mut rng = Rng::new(72);
         let (b, a, ba) = sample(&mut rng);
-        let lo = quantize_site(&b, &a, &LoraQuantConfig::variant(2, 0.5));
-        let hi = quantize_site(&b, &a, &LoraQuantConfig::variant(2, 0.99));
+        let lo = quantize_site(&b, &a, &LoraQuantConfig::variant(2, 0.5)).unwrap();
+        let hi = quantize_site(&b, &a, &LoraQuantConfig::variant(2, 0.99)).unwrap();
         assert!(hi.avg_bits() > lo.avg_bits());
         let e_lo = lo.dequant_delta().rel_err(&ba);
         let e_hi = hi.dequant_delta().rel_err(&ba);
@@ -313,13 +322,14 @@ mod tests {
             ste: None,
             ..Default::default()
         };
-        let pruned = quantize_site(&b, &a, &cfg);
+        let pruned = quantize_site(&b, &a, &cfg).unwrap();
         assert!(pruned.bl.is_none());
         let full = quantize_site(
             &b,
             &a,
             &LoraQuantConfig { ste: None, hselect: HSelect::Ratio(0.5), ..Default::default() },
-        );
+        )
+        .unwrap();
         assert!(
             pruned.dequant_delta().rel_err(&ba) > full.dequant_delta().rel_err(&ba),
             "binary low sub-LoRA must beat pruning"
@@ -333,8 +343,8 @@ mod tests {
         let (b, a, ba) = sample(&mut rng);
         let base = LoraQuantConfig { ste: None, ..Default::default() };
         let opt = LoraQuantConfig::default();
-        let e0 = quantize_site(&b, &a, &base).dequant_delta().rel_err(&ba);
-        let e1 = quantize_site(&b, &a, &opt).dequant_delta().rel_err(&ba);
+        let e0 = quantize_site(&b, &a, &base).unwrap().dequant_delta().rel_err(&ba);
+        let e1 = quantize_site(&b, &a, &opt).unwrap().dequant_delta().rel_err(&ba);
         assert!(e1 <= e0 * 1.02, "ste {e1} vs none {e0}");
     }
 
@@ -348,7 +358,7 @@ mod tests {
                 ste: None,
                 ..Default::default()
             };
-            let site = quantize_site(&b, &a, &cfg);
+            let site = quantize_site(&b, &a, &cfg).unwrap();
             assert_eq!(site.h, h);
             // still produces a usable delta
             assert!(site.dequant_delta().rel_err(&ba) < 1.0);
@@ -370,16 +380,35 @@ mod tests {
             ste: None,
             ..Default::default()
         };
-        let site = quantize_site(&b, &a, &cfg);
+        let site = quantize_site(&b, &a, &cfg).unwrap();
         assert_eq!(site.h, 4);
         assert!(site.dequant_delta().rel_err(&ba) < 1.0);
+    }
+
+    #[test]
+    fn malformed_configs_error_instead_of_panicking() {
+        let mut rng = Rng::new(78);
+        let (b, a, _) = sample(&mut rng);
+        // variance-ratio rule with a non-SVD split: defined only on the
+        // SVD spectrum, so this must be a structured Err
+        let cfg = LoraQuantConfig {
+            strategy: SplitStrategy::Norm,
+            hselect: HSelect::Ratio(0.9),
+            ..Default::default()
+        };
+        let err = quantize_site(&b, &a, &cfg).unwrap_err();
+        assert!(err.to_string().contains("HSelect::Static"), "{err}");
+        // rank mismatch between B and A
+        let bad_a = Matrix::zeros(a.rows() + 1, a.cols());
+        let err = quantize_site(&b, &bad_a, &LoraQuantConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("rank mismatch"), "{err}");
     }
 
     #[test]
     fn avg_bits_accounting_consistency() {
         let mut rng = Rng::new(77);
         let (b, a, _) = sample(&mut rng);
-        let site = quantize_site(&b, &a, &LoraQuantConfig::default());
+        let site = quantize_site(&b, &a, &LoraQuantConfig::default()).unwrap();
         let mut lora = QuantizedLora::default();
         lora.sites.insert("l0.wq".into(), site.clone());
         lora.sites.insert("l0.wk".into(), site);

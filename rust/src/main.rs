@@ -8,7 +8,9 @@
 //!                    [--workers 4] [--merge-workers 2] [--compute-threads 2] \
 //!                    [--buckets 1,8] [--prefetch] [--lockstep] \
 //!                    [--prefill-chunk N] [--merge-strategy merged|factor|auto] \
-//!                    [--adapter-dir DIR] [--factor-cache-kb N] [--disk-latency-ms N]
+//!                    [--adapter-dir DIR] [--factor-cache-kb N] [--disk-latency-ms N] \
+//!                    [--request-timeout-ms N] [--queue-cap N] [--disk-retries N] \
+//!                    [--disk-backoff-ms N]
 //! loraquant serve-sim --requests 200 --rate 200 --adapters 4 --merge-strategy all \
 //!                    [--workers 4] [--compute-threads 2] [--zipf 1.1] [--seed 7] \
 //!                    [--slow-merge-ms 50] [--churn] [--prefetch] [--log] \
@@ -97,7 +99,7 @@ fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
     let t0 = Instant::now();
     let mut q = QuantizedLora::default();
     for (site, (a, b)) in &lora.sites {
-        q.sites.insert(site.clone(), quantize_site(b, a, &cfg));
+        q.sites.insert(site.clone(), quantize_site(b, a, &cfg)?);
     }
     let dt = t0.elapsed();
     store::save(&out, &q)?;
@@ -169,12 +171,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.merge_strategy = args.str_or("merge-strategy", "merged").parse()?;
     cfg.continuous = !args.has_flag("lockstep");
     cfg.prefill_chunk = args.usize_or("prefill-chunk", 0)?;
+    if let Some(ms) = args.opt("request-timeout-ms") {
+        let timeout = Duration::from_millis(ms.parse().context("--request-timeout-ms: bad integer")?);
+        cfg.request_timeout = Some(timeout);
+    }
+    if let Some(cap) = args.opt("queue-cap") {
+        cfg.queue_cap = Some(cap.parse().context("--queue-cap: bad integer")?);
+    }
     if let Some(adapter_dir) = args.opt("adapter-dir") {
         let mut tier = TierConfig::new(adapter_dir, args.usize_or("factor-cache-kb", 1 << 10)? << 10);
         if let Some(ms) = args.opt("disk-latency-ms") {
             let delay = Duration::from_millis(ms.parse().context("--disk-latency-ms: bad integer")?);
             tier.disk_fault = Some(DiskFault { adapter: None, delay });
         }
+        tier.max_retries = args.usize_or("disk-retries", 0)? as u32;
+        tier.backoff =
+            Duration::from_millis(args.usize_or("disk-backoff-ms", 0)? as u64);
         tier.predictive_prefetch = args.has_flag("predictive-prefetch");
         cfg.tier = Some(tier);
     }
@@ -191,7 +203,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let lora = LoraAdapter::load(format!("{dir}/{model}/{task}.lora.bin"))?;
         let mut q = QuantizedLora::default();
         for (site, (a, b)) in &lora.sites {
-            q.sites.insert(site.clone(), quantize_site(b, a, &qcfg));
+            q.sites.insert(site.clone(), quantize_site(b, a, &qcfg)?);
         }
         ids.push(coord.register_adapter(StoredAdapter::Quantized(q), task)?);
     }
@@ -218,11 +230,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         if arr.at > elapsed {
             std::thread::sleep(arr.at - elapsed);
         }
-        receivers.push(coord.generate_async(GenRequest {
-            adapter: arr.adapter,
-            prompt: vec![1, 5, 4, 7, 3], // BOS d0 MARK d2 SEP
-            max_new: 4,
-        }));
+        receivers.push(coord.generate_async(GenRequest::new(
+            arr.adapter,
+            vec![1, 5, 4, 7, 3], // BOS d0 MARK d2 SEP
+            4,
+        )));
     }
     let mut ok = 0;
     for rx in receivers {
@@ -268,8 +280,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// Replay a deterministic serving scenario under virtual time.
 fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
     use loraquant::scenario::{
-        run_scenario, ChurnAction, ClockMode, DiskLatency, FaultPlan, ScenarioEnv, ScenarioSpec,
-        SlowMerge,
+        run_scenario, ChurnAction, ClockMode, DiskError, DiskLatency, FaultPlan, ScenarioEnv,
+        ScenarioSpec, ScriptedPanic, SlowMerge,
     };
 
     if cfg!(feature = "pjrt") && args.opt("model").is_none() {
@@ -305,6 +317,19 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             .map(|v| v.parse().context("--disk-latency-adapter: bad id"))
             .transpose()?;
         faults.disk_latency = Some(DiskLatency { adapter, delay });
+    }
+    if let Some(n) = args.opt("disk-error-first-n") {
+        let first_n = n.parse().context("--disk-error-first-n: bad integer")?;
+        let adapter = args
+            .opt("disk-error-adapter")
+            .map(|v| v.parse().context("--disk-error-adapter: bad id"))
+            .transpose()?;
+        faults.disk_error = Some(DiskError { adapter, first_n });
+    }
+    if let Some(id) = args.opt("panic-adapter") {
+        let adapter = id.parse().context("--panic-adapter: bad id")?;
+        let first_n = args.usize_or("panic-first-n", 1)? as u32;
+        faults.panic = Some(ScriptedPanic { adapter, first_n });
     }
     if args.has_flag("churn") {
         // a scripted mid-trace outage + arrival: remove tenant 0 a third
@@ -351,6 +376,17 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             tiered: args.has_flag("tiered"),
             factor_cache_bytes: args.usize_or("factor-cache-kb", 1 << 10)? << 10,
             predictive_prefetch: args.has_flag("predictive-prefetch"),
+            request_timeout: args
+                .opt("request-timeout-ms")
+                .map(|v| v.parse().context("--request-timeout-ms: bad integer"))
+                .transpose()?
+                .map(Duration::from_millis),
+            queue_cap: args
+                .opt("queue-cap")
+                .map(|v| v.parse().context("--queue-cap: bad integer"))
+                .transpose()?,
+            disk_retries: args.usize_or("disk-retries", 0)? as u32,
+            disk_backoff: Duration::from_millis(args.usize_or("disk-backoff-ms", 0)? as u64),
         };
         let run = run_scenario(&spec, &env)?;
         print!("{}", run.summary.render());

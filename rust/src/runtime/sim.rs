@@ -45,7 +45,7 @@ use crate::loraquant::{FactorScratch, FactorSource, QFactors, SiteFactors};
 use crate::model::ModelConfig;
 use crate::scheduler::workers::{ComputePool, SendPtr};
 use crate::tensor::{dot, matmul_flat, simd};
-use anyhow::{bail, Context};
+use anyhow::{anyhow, bail, Context};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -1036,6 +1036,8 @@ fn apply_adapters(
 
 /// One partitioned (or serial) matmul: the pool variant is bit-identical
 /// to the serial kernel (whole output rows, same accumulation order).
+/// A panicking pool partition surfaces as `Err` (contained by the pool;
+/// the caller fails only this forward's request group).
 #[inline]
 fn mm(
     pool: Option<&ComputePool>,
@@ -1045,10 +1047,13 @@ fn mm(
     b: &[f32],
     n: usize,
     c: &mut [f32],
-) {
+) -> anyhow::Result<()> {
     match pool {
-        Some(p) => p.matmul_flat(a, m, k, b, n, c),
-        None => matmul_flat(a, m, k, b, n, c),
+        Some(p) => p.matmul_flat(a, m, k, b, n, c).map_err(|p| anyhow!("compute pool: {p}")),
+        None => {
+            matmul_flat(a, m, k, b, n, c);
+            Ok(())
+        }
     }
 }
 
@@ -1148,11 +1153,11 @@ fn forward_core(
         // attention block
         let (g1, b1) = (pget(weights, li[0])?, pget(weights, li[1])?);
         layernorm(x, n, d, g1, b1, hx);
-        mm(pool, hx, n, d, pget(weights, li[2])?, d, q);
+        mm(pool, hx, n, d, pget(weights, li[2])?, d, q)?;
         apply_adapters(rows, adapters, &site[0], hx, (d, d), lora_s, q, factor);
-        mm(pool, hx, n, d, pget(weights, li[3])?, d, k);
+        mm(pool, hx, n, d, pget(weights, li[3])?, d, k)?;
         apply_adapters(rows, adapters, &site[1], hx, (d, d), lora_s, k, factor);
-        mm(pool, hx, n, d, pget(weights, li[4])?, d, v);
+        mm(pool, hx, n, d, pget(weights, li[4])?, d, v)?;
         apply_adapters(rows, adapters, &site[2], hx, (d, d), lora_s, v, factor);
         // publish this pass's K/V columns, then attend reading the cache
         for r in 0..n {
@@ -1181,13 +1186,14 @@ fn forward_core(
                         std::slice::from_raw_parts_mut(sc_ptr.0.add(i * sstride), sstride)
                     };
                     attention_rows(rows, lo, hi, q_ro, kv_ro, l, nh, hd, att_scale, att_c, sc_c);
-                });
+                })
+                .map_err(|p| anyhow!("compute pool: {p}"))?;
             }
             _ => {
                 attention_rows(rows, 0, n, q, kv, l, nh, hd, att_scale, att, &mut scores[..sstride])
             }
         }
-        mm(pool, att, n, d, pget(weights, li[5])?, d, proj);
+        mm(pool, att, n, d, pget(weights, li[5])?, d, proj)?;
         apply_adapters(rows, adapters, &site[3], att, (d, d), lora_s, proj, factor);
         for (xi, pi) in x.iter_mut().zip(proj.iter()) {
             *xi += pi;
@@ -1196,7 +1202,7 @@ fn forward_core(
         // FFN block
         let (g2, b2) = (pget(weights, li[6])?, pget(weights, li[7])?);
         layernorm(x, n, d, g2, b2, hx);
-        mm(pool, hx, n, d, pget(weights, li[8])?, f, h1);
+        mm(pool, hx, n, d, pget(weights, li[8])?, f, h1)?;
         apply_adapters(rows, adapters, &site[4], hx, (d, f), lora_s, h1, factor);
         if cfg.act_silu {
             for z in h1.iter_mut() {
@@ -1207,7 +1213,7 @@ fn forward_core(
                 *z = gelu(*z);
             }
         }
-        mm(pool, h1, n, f, pget(weights, li[9])?, d, h2);
+        mm(pool, h1, n, f, pget(weights, li[9])?, d, h2)?;
         apply_adapters(rows, adapters, &site[5], h1, (f, d), lora_s, h2, factor);
         for (xi, hi) in x.iter_mut().zip(h2.iter()) {
             *xi += hi;
@@ -1215,7 +1221,7 @@ fn forward_core(
     }
 
     layernorm(x, n, d, pget(weights, idx.lnf_g)?, pget(weights, idx.lnf_b)?, hx);
-    mm(pool, hx, n, d, pget(weights, idx.head)?, vo, logits);
+    mm(pool, hx, n, d, pget(weights, idx.head)?, vo, logits)?;
     Ok(())
 }
 

@@ -31,6 +31,15 @@ pub enum EventKind {
     Complete { req: usize, adapter: AdapterId, e2e: Duration, tokens: Vec<i32> },
     /// Request failed (e.g. its adapter was churned away).
     Fail { req: usize, adapter: AdapterId, error: String },
+    /// A scripted disk-tier load failure (attempt is 0-based: 0 is the
+    /// initial try, 1.. are retries).
+    DiskError { adapter: AdapterId, attempt: u32 },
+    /// A scripted merge-task panic fired on a pool thread.
+    Panic { adapter: AdapterId },
+    /// Adapter quarantined (scripted churn or permanent load failure).
+    Quarantine { adapter: AdapterId },
+    /// Adapter quarantine lifted via scripted churn.
+    Recover { adapter: AdapterId },
 }
 
 impl EventKind {
@@ -46,6 +55,10 @@ impl EventKind {
             EventKind::Submit { .. } => 5,
             EventKind::Complete { .. } => 6,
             EventKind::Fail { .. } => 7,
+            EventKind::DiskError { .. } => 8,
+            EventKind::Panic { .. } => 9,
+            EventKind::Quarantine { .. } => 10,
+            EventKind::Recover { .. } => 11,
         }
     }
 
@@ -58,7 +71,11 @@ impl EventKind {
             | EventKind::Prefetch { adapter, .. }
             | EventKind::Submit { adapter, .. }
             | EventKind::Complete { adapter, .. }
-            | EventKind::Fail { adapter, .. } => *adapter,
+            | EventKind::Fail { adapter, .. }
+            | EventKind::DiskError { adapter, .. }
+            | EventKind::Panic { adapter }
+            | EventKind::Quarantine { adapter }
+            | EventKind::Recover { adapter } => *adapter,
         }
     }
 
@@ -72,11 +89,19 @@ impl EventKind {
     }
 }
 
-/// Canonical order: (time, kind rank, adapter, request index). Events
-/// recorded concurrently (e.g. merge hooks on pool threads) land in a
-/// reproducible order regardless of real-time interleaving.
+/// Canonical order: (time, kind rank, adapter, request index, retry
+/// attempt). Events recorded concurrently (e.g. merge hooks on pool
+/// threads) land in a reproducible order regardless of real-time
+/// interleaving; the attempt tiebreak orders zero-backoff disk-error
+/// retries that share a virtual instant.
 pub fn sort_canonical(events: &mut [Event]) {
-    events.sort_by_key(|e| (e.t, e.kind.rank(), e.kind.adapter(), e.kind.req()));
+    events.sort_by_key(|e| {
+        let attempt = match e.kind {
+            EventKind::DiskError { attempt, .. } => attempt,
+            _ => 0,
+        };
+        (e.t, e.kind.rank(), e.kind.adapter(), e.kind.req(), attempt)
+    });
 }
 
 impl std::fmt::Display for Event {
@@ -109,6 +134,14 @@ impl std::fmt::Display for Event {
             EventKind::Fail { req, adapter, error } => {
                 write!(f, "{t_us:>10} fail     req={req} adapter={adapter} error={error}")
             }
+            EventKind::DiskError { adapter, attempt } => {
+                write!(f, "{t_us:>10} diskerr  adapter={adapter} attempt={attempt}")
+            }
+            EventKind::Panic { adapter } => write!(f, "{t_us:>10} panic    adapter={adapter}"),
+            EventKind::Quarantine { adapter } => {
+                write!(f, "{t_us:>10} quarant  adapter={adapter}")
+            }
+            EventKind::Recover { adapter } => write!(f, "{t_us:>10} recover  adapter={adapter}"),
         }
     }
 }

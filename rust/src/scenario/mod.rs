@@ -49,8 +49,17 @@
 //! * **Cache-budget thrash** — a spec-level `cache_budget_bytes` small
 //!   enough that resident adapters evict each other; decode correctness
 //!   must be unaffected (an adapter is never evicted mid-decode).
+//! * **Disk errors** ([`DiskError`]) — the first N tier loads of an
+//!   adapter return `Err`, driving the bounded retry/backoff loop and,
+//!   past the budget, quarantine (DESIGN.md §15).
+//! * **Scripted panics** ([`ScriptedPanic`]) — the first N merge jobs
+//!   for an adapter panic on the pool thread; only that adapter's parked
+//!   requests fail, and the supervisor respawns the worker.
+//! * **Quarantine churn** ([`ChurnAction::Quarantine`] /
+//!   [`ChurnAction::Recover`]) — scripted availability flaps: requests
+//!   fail fast while quarantined and serve normally after recovery.
 //!
-//! See rust/DESIGN.md §9.
+//! See rust/DESIGN.md §9 and §15.
 
 pub mod events;
 pub mod sim;
@@ -58,4 +67,7 @@ pub mod spec;
 
 pub use events::{Event, EventKind};
 pub use sim::{run_scenario, ScenarioRun, ScenarioSummary};
-pub use spec::{ChurnAction, ClockMode, DiskLatency, FaultPlan, ScenarioEnv, ScenarioSpec, SlowMerge};
+pub use spec::{
+    ChurnAction, ClockMode, DiskError, DiskLatency, FaultPlan, ScenarioEnv, ScenarioSpec,
+    ScriptedPanic, SlowMerge,
+};

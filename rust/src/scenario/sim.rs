@@ -18,19 +18,19 @@
 //! fault delays — which is what the golden traces pin.
 
 use super::events::{render, sort_canonical, Event, EventKind};
-use super::spec::{ChurnAction, ClockMode, ScenarioEnv, ScenarioSpec, SlowMerge};
+use super::spec::{ChurnAction, ClockMode, ScenarioEnv, ScenarioSpec, ScriptedPanic, SlowMerge};
 use crate::clock::{Clock, VirtualClock};
 use crate::coordinator::{
-    AdapterId, CacheStats, Coordinator, CoordinatorConfig, DiskFault, GenRequest, GenResponse,
-    LatencyStats, LoadHook, MergeHook, MergeStatsSnapshot, MergeStrategy, TierConfig,
-    WorkerSnapshot,
+    AdapterId, CacheStats, Coordinator, CoordinatorConfig, DiskErrorFault, DiskFault, FailKind,
+    GenRequest, GenResponse, LatencyStats, LoadHook, MergeHook, MergeStatsSnapshot, MergeStrategy,
+    ServeError, TierConfig, TierEvent, TierEventHook, WorkerSnapshot,
 };
 use crate::eval::tasks::TOKENS;
 use crate::testutil::Rng;
 use crate::workload::{generate, Arrival};
-use anyhow::{bail, Context};
+use anyhow::{bail, ensure, Context};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -40,7 +40,7 @@ const STALL_TIMEOUT: Duration = Duration::from_secs(30);
 /// Real-time poll interval while waiting for background progress.
 const POLL: Duration = Duration::from_micros(200);
 
-type GenRx = mpsc::Receiver<anyhow::Result<GenResponse>>;
+type GenRx = mpsc::Receiver<Result<GenResponse, ServeError>>;
 type AckRx = mpsc::Receiver<anyhow::Result<()>>;
 
 /// Everything a scenario run produced.
@@ -94,6 +94,22 @@ pub struct ScenarioSummary {
     /// Adapters spilled to the disk tier at registration (zero unless
     /// tiered).
     pub spilled: u64,
+    /// Requests retired past their deadline (queued or mid-decode).
+    pub timeouts: u64,
+    /// Requests retired by a cancel token.
+    pub cancellations: u64,
+    /// Requests shed at admission by the queue depth cap.
+    pub sheds: u64,
+    /// Disk-tier load retries that ran (zero unless faults scripted).
+    pub disk_retries: u64,
+    /// Quarantine transitions observed (scripted churn or permanent
+    /// load failure).
+    pub quarantined: u64,
+    /// Merge/fetch pool workers respawned after a contained panic.
+    pub worker_respawns: u64,
+    /// Failure counts keyed by [`FailKind`] kebab-case name. The driver
+    /// asserts `ok + Σ failed_by_kind == submitted` before returning.
+    pub failed_by_kind: BTreeMap<String, usize>,
     pub merges: MergeStatsSnapshot,
     /// Real wall-clock time the whole run took (the virtual-clock payoff:
     /// seconds of simulated trace in milliseconds of wall).
@@ -138,6 +154,22 @@ impl ScenarioSummary {
             self.factor_cache.evictions,
             self.real_wall,
         );
+        if self.timeouts + self.cancellations + self.sheds + self.disk_retries
+            + self.quarantined
+            + self.worker_respawns
+            > 0
+        {
+            out.push_str(&format!(
+                "faults: timeouts={} cancels={} sheds={} disk_retries={} quarantined={} \
+                 respawns={}\n",
+                self.timeouts,
+                self.cancellations,
+                self.sheds,
+                self.disk_retries,
+                self.quarantined,
+                self.worker_respawns,
+            ));
+        }
         for (id, stats) in &self.per_adapter {
             out.push_str(&format!(
                 "  adapter {id}: n={} p50={:?} p95={:?} max={:?}\n",
@@ -163,18 +195,32 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
     let origin = clock.now();
     let events: Arc<Mutex<Vec<Event>>> = Arc::new(Mutex::new(Vec::new()));
 
-    // The merge hook records merge starts and applies the scripted slow
-    // merge by parking the merge thread on the scenario clock.
+    // The merge hook records merge starts, fires any scripted panic
+    // (contained by the pool's catch_unwind; only the target adapter's
+    // parked requests fail), and applies the scripted slow merge by
+    // parking the merge thread on the scenario clock.
     let hook = {
         let events = Arc::clone(&events);
         let clock = clock.clone();
         let slow: Option<SlowMerge> = spec.faults.slow_merge;
+        let scripted_panic: Option<ScriptedPanic> = spec.faults.panic;
+        let panics_fired = Arc::new(AtomicU32::new(0));
         MergeHook::new(move |id| {
             let now = clock.now();
+            let t = now.duration_since(origin);
             events
                 .lock()
                 .unwrap_or_else(|e| e.into_inner())
-                .push(Event { t: now.duration_since(origin), kind: EventKind::MergeBegin { adapter: id } });
+                .push(Event { t, kind: EventKind::MergeBegin { adapter: id } });
+            if let Some(p) = scripted_panic {
+                if p.adapter == id && panics_fired.fetch_add(1, Ordering::SeqCst) < p.first_n {
+                    events
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push(Event { t, kind: EventKind::Panic { adapter: id } });
+                    panic!("scripted merge panic: adapter {id}");
+                }
+            }
             if let Some(sm) = slow {
                 if sm.adapter.is_none_or(|a| a == id) {
                     clock.sleep_until(now + sm.delay);
@@ -201,6 +247,26 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
             .faults
             .disk_latency
             .map(|d| DiskFault { adapter: d.adapter, delay: d.delay });
+        t.disk_error = spec
+            .faults
+            .disk_error
+            .map(|d| DiskErrorFault { adapter: d.adapter, first_n: d.first_n });
+        t.max_retries = spec.disk_retries;
+        t.backoff = spec.disk_backoff;
+        // records DiskError/Quarantine on the loading merge-pool thread
+        // as the retry loop observes them (mirrors the MergeBegin hook)
+        let tier_events = Arc::clone(&events);
+        let tier_clock = clock.clone();
+        t.event_hook = Some(TierEventHook::new(move |ev| {
+            let t_off = tier_clock.now().duration_since(origin);
+            let kind = match *ev {
+                TierEvent::LoadError { adapter, attempt } => {
+                    EventKind::DiskError { adapter, attempt }
+                }
+                TierEvent::Quarantined { adapter } => EventKind::Quarantine { adapter },
+            };
+            tier_events.lock().unwrap_or_else(|e| e.into_inner()).push(Event { t: t_off, kind });
+        }));
         // records DiskLoad on the loading merge-pool thread, before any
         // scripted latency parks it (mirrors the MergeBegin hook)
         t.load_hook = Some(LoadHook::new(move |id| {
@@ -224,6 +290,8 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
     cfg.cache_budget_bytes = spec.cache_budget_bytes;
     cfg.merge_workers = spec.merge_workers;
     cfg.compute_threads = spec.compute_threads;
+    cfg.request_timeout = spec.request_timeout;
+    cfg.queue_cap = spec.queue_cap;
     cfg.merge_hook = Some(hook);
     cfg.tier = tier_cfg;
     let (coord, join) = Coordinator::start(cfg).context("starting scenario coordinator")?;
@@ -246,6 +314,7 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
         submitted: 0,
         completed: 0,
         failed: 0,
+        failed_by_kind: BTreeMap::new(),
     };
     let result = driver.run();
     // Wake any merge thread still parked on the virtual clock (possible
@@ -288,6 +357,8 @@ struct Driver<'a> {
     submitted: usize,
     completed: usize,
     failed: usize,
+    /// Failure counts keyed by `FailKind` kebab-case name.
+    failed_by_kind: BTreeMap<String, usize>,
 }
 
 impl Driver<'_> {
@@ -542,7 +613,10 @@ impl Driver<'_> {
             match rx.recv_timeout(STALL_TIMEOUT) {
                 Ok(res) => self.record_response(idx, res),
                 Err(_) => {
-                    self.record_response(idx, Err(anyhow::anyhow!("response timed out")));
+                    self.record_response(
+                        idx,
+                        Err(ServeError::new(FailKind::Internal, "response timed out")),
+                    );
                 }
             }
         }
@@ -561,11 +635,11 @@ impl Driver<'_> {
         } else {
             self.spec.max_new
         };
-        let rx = self.coord.generate_async(GenRequest {
+        let rx = self.coord.generate_async(GenRequest::new(
             adapter,
-            prompt: self.prompts[idx].clone(),
+            self.prompts[idx].clone(),
             max_new,
-        });
+        ));
         self.outstanding.push((idx, rx));
         self.submitted += 1;
     }
@@ -582,6 +656,18 @@ impl Driver<'_> {
                 let _ = self.coord.remove_adapter(id)?;
                 self.push_event(self.offset(), EventKind::Remove { adapter: id });
             }
+            ChurnAction::Quarantine { target, .. } => {
+                let id = self.ids[target % self.ids.len()];
+                if self.coord.quarantine_adapter(id) {
+                    self.push_event(self.offset(), EventKind::Quarantine { adapter: id });
+                }
+            }
+            ChurnAction::Recover { target, .. } => {
+                let id = self.ids[target % self.ids.len()];
+                if self.coord.recover_adapter(id) {
+                    self.push_event(self.offset(), EventKind::Recover { adapter: id });
+                }
+            }
         }
         Ok(())
     }
@@ -593,14 +679,17 @@ impl Driver<'_> {
                 Ok(res) => self.record_response(idx, res),
                 Err(mpsc::TryRecvError::Empty) => still.push((idx, rx)),
                 Err(mpsc::TryRecvError::Disconnected) => {
-                    self.record_response(idx, Err(anyhow::anyhow!("responder dropped")));
+                    self.record_response(
+                        idx,
+                        Err(ServeError::new(FailKind::Internal, "responder dropped")),
+                    );
                 }
             }
         }
         self.outstanding = still;
     }
 
-    fn record_response(&mut self, idx: usize, res: anyhow::Result<GenResponse>) {
+    fn record_response(&mut self, idx: usize, res: Result<GenResponse, ServeError>) {
         let adapter = self.schedule[idx].adapter;
         match res {
             Ok(resp) => {
@@ -622,8 +711,9 @@ impl Driver<'_> {
             Err(e) => {
                 self.push_event(
                     self.offset(),
-                    EventKind::Fail { req: idx, adapter, error: format!("{e:#}") },
+                    EventKind::Fail { req: idx, adapter, error: format!("{e}") },
                 );
+                *self.failed_by_kind.entry(e.kind.to_string()).or_insert(0) += 1;
                 self.failed += 1;
             }
         }
@@ -657,6 +747,24 @@ impl Driver<'_> {
         for &(id, d) in &self.e2e {
             by_adapter.entry(id).or_default().push(d);
         }
+        // The counting contract (DESIGN.md §15): every submitted request
+        // retires exactly once, as a completion or as one typed failure.
+        let failed_total: usize = self.failed_by_kind.values().sum();
+        ensure!(
+            failed_total == self.failed,
+            "failure accounting broke: Σ failed_by_kind={failed_total} != failed={}",
+            self.failed
+        );
+        ensure!(
+            self.e2e.len() + failed_total == self.submitted,
+            "request accounting broke: ok={} + failed={failed_total} != submitted={}",
+            self.e2e.len(),
+            self.submitted
+        );
+        let quarantined = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Quarantine { .. }))
+            .count() as u64;
         let summary = ScenarioSummary {
             name: self.spec.name.clone(),
             strategy: self.spec.strategy,
@@ -681,6 +789,13 @@ impl Driver<'_> {
             factor_cache,
             disk_loads,
             spilled,
+            timeouts: m.timeouts,
+            cancellations: m.cancellations,
+            sheds: m.sheds,
+            disk_retries: self.coord.disk_retries(),
+            quarantined,
+            worker_respawns: merges.worker_respawns,
+            failed_by_kind: std::mem::take(&mut self.failed_by_kind),
             merges,
             real_wall: Duration::ZERO, // stamped by run_scenario
         };

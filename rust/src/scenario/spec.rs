@@ -41,6 +41,26 @@ pub struct DiskLatency {
     pub delay: Duration,
 }
 
+/// Scripted disk-read *failures* for the adapter tier: the first
+/// `first_n` tier loads of `adapter` (or of any adapter when `None`)
+/// return `Err`, exercising the retry/backoff/quarantine path
+/// (DESIGN.md §15). Only meaningful with `tiered` set.
+#[derive(Debug, Clone, Copy)]
+pub struct DiskError {
+    pub adapter: Option<AdapterId>,
+    pub first_n: u32,
+}
+
+/// A scripted merge-task panic: the first `first_n` merge jobs for
+/// `adapter` panic inside the merge pool. Exercises panic containment
+/// (DESIGN.md §15): only the requests parked on that adapter fail with
+/// a structured `Internal` error; the supervisor respawns the worker.
+#[derive(Debug, Clone, Copy)]
+pub struct ScriptedPanic {
+    pub adapter: AdapterId,
+    pub first_n: u32,
+}
+
 /// A scripted registry mutation at a virtual offset from trace start.
 #[derive(Debug, Clone, Copy)]
 pub enum ChurnAction {
@@ -50,12 +70,22 @@ pub enum ChurnAction {
     /// Remove the `target`-th initially-registered adapter at time `at`
     /// (its remaining arrivals fail fast — the scripted outage).
     Remove { at: Duration, target: usize },
+    /// Quarantine the `target`-th initially-registered adapter at time
+    /// `at`: its arrivals fail fast with `AdapterUnavailable` until a
+    /// matching `Recover` lifts the quarantine.
+    Quarantine { at: Duration, target: usize },
+    /// Lift the quarantine on the `target`-th initially-registered
+    /// adapter at time `at` (no-op if it was never quarantined).
+    Recover { at: Duration, target: usize },
 }
 
 impl ChurnAction {
     pub fn at(&self) -> Duration {
         match *self {
-            ChurnAction::Register { at, .. } | ChurnAction::Remove { at, .. } => at,
+            ChurnAction::Register { at, .. }
+            | ChurnAction::Remove { at, .. }
+            | ChurnAction::Quarantine { at, .. }
+            | ChurnAction::Recover { at, .. } => at,
         }
     }
 }
@@ -68,11 +98,19 @@ pub struct FaultPlan {
     pub churn: Vec<ChurnAction>,
     /// Scripted disk-read latency on the adapter tier (DESIGN.md §14).
     pub disk_latency: Option<DiskLatency>,
+    /// Scripted disk-read failures on the adapter tier (DESIGN.md §15).
+    pub disk_error: Option<DiskError>,
+    /// Scripted merge-task panics (DESIGN.md §15).
+    pub panic: Option<ScriptedPanic>,
 }
 
 impl FaultPlan {
     pub fn is_empty(&self) -> bool {
-        self.slow_merge.is_none() && self.churn.is_empty() && self.disk_latency.is_none()
+        self.slow_merge.is_none()
+            && self.churn.is_empty()
+            && self.disk_latency.is_none()
+            && self.disk_error.is_none()
+            && self.panic.is_none()
     }
 }
 
@@ -135,6 +173,20 @@ pub struct ScenarioSpec {
     /// Warm adapters ahead of their predicted next arrival
     /// (`workload::ArrivalPredictor`). Only meaningful with `tiered`.
     pub predictive_prefetch: bool,
+    /// Per-request deadline measured from submission (DESIGN.md §15):
+    /// requests past their deadline retire with a structured `Timeout`
+    /// whether queued or mid-decode. `None` (the default) disables
+    /// deadline enforcement.
+    pub request_timeout: Option<Duration>,
+    /// Admission-queue depth cap (DESIGN.md §15): submissions beyond the
+    /// cap are shed with `Overloaded { retry_after }`. `None` disables
+    /// shedding.
+    pub queue_cap: Option<usize>,
+    /// Bounded retries for failing tier loads (DESIGN.md §15). 0 = fail
+    /// on first error.
+    pub disk_retries: u32,
+    /// Virtual-clock backoff between tier-load retries.
+    pub disk_backoff: Duration,
     pub faults: FaultPlan,
 }
 
@@ -164,6 +216,10 @@ impl Default for ScenarioSpec {
             tiered: false,
             factor_cache_bytes: 1 << 20,
             predictive_prefetch: false,
+            request_timeout: None,
+            queue_cap: None,
+            disk_retries: 0,
+            disk_backoff: Duration::ZERO,
             faults: FaultPlan::default(),
         }
     }
@@ -239,7 +295,7 @@ impl ScenarioEnv {
                     .with_context(|| format!("loading trained adapter for task {task}"))?;
             let mut q = QuantizedLora::default();
             for (site, (a, b)) in &lora.sites {
-                q.sites.insert(site.clone(), quantize_site(b, a, &qcfg));
+                q.sites.insert(site.clone(), quantize_site(b, a, &qcfg)?);
             }
             adapters.push((task.to_string(), StoredAdapter::Quantized(q)));
         }

@@ -47,6 +47,7 @@ use crate::eval::tasks::TOKENS;
 use crate::loraquant::FactorSource;
 use crate::runtime::{DecodeState, DeviceWeights, Engine};
 use anyhow::{bail, Context};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -66,12 +67,29 @@ pub struct ContinuousConfig {
     pub prefill_chunk: usize,
 }
 
+/// Why a request retired (DESIGN.md §15). Early retirement never
+/// perturbs the surviving lanes: every row-wise kernel is per-lane
+/// independent, so survivors stay bit-identical to an unfaulted run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Ran to EOS, budget, or the end of the sequence.
+    Done,
+    /// The deadline passed — while queued, at admission, or mid-decode.
+    Timeout,
+    /// The cancel token was observed set (takes precedence over an
+    /// expired deadline: an explicit caller action beats the clock).
+    Cancelled,
+}
+
 /// One request's outcome.
 #[derive(Debug, Clone)]
 pub struct FinishedRequest {
     /// The id the caller stamped on the [`LaneRequest`].
     pub id: u64,
     pub tenant: AdapterId,
+    /// How the request retired. `tokens` holds whatever was generated
+    /// before an early retirement (possibly empty).
+    pub outcome: RequestOutcome,
     /// Generated tokens, EOS excluded (identical to the lock-step path).
     pub tokens: Vec<i32>,
     /// Enqueue → first consumed token (admission wait + prefill; zero
@@ -93,8 +111,12 @@ pub struct LoopStats {
     pub decode_steps: u64,
     /// Admission forward passes (mid-flight prefills).
     pub admits: u64,
-    /// Requests completed.
+    /// Requests completed with [`RequestOutcome::Done`].
     pub finished: u64,
+    /// Requests retired past their deadline (queued or mid-decode).
+    pub timeouts: u64,
+    /// Requests retired by a cancel token.
+    pub cancellations: u64,
     /// Tokens generated (EOS excluded).
     pub tokens: u64,
     /// High-water mark of concurrently occupied lanes.
@@ -115,6 +137,32 @@ struct LaneState {
     ttft: Option<Duration>,
     /// `work_rows` when the first token was consumed.
     first_token_work: Option<u64>,
+    deadline: Option<Instant>,
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+/// Fault status of a queued-or-running request at `now`: `Cancelled`
+/// wins over `Timeout` (see [`RequestOutcome`]), `None` = keep going.
+fn fault_outcome(
+    deadline: Option<Instant>,
+    cancel: Option<&Arc<AtomicBool>>,
+    now: Instant,
+) -> Option<RequestOutcome> {
+    if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+        return Some(RequestOutcome::Cancelled);
+    }
+    if deadline.is_some_and(|d| d <= now) {
+        return Some(RequestOutcome::Timeout);
+    }
+    None
+}
+
+fn count_outcome(stats: &mut LoopStats, outcome: RequestOutcome) {
+    match outcome {
+        RequestOutcome::Done => stats.finished += 1,
+        RequestOutcome::Timeout => stats.timeouts += 1,
+        RequestOutcome::Cancelled => stats.cancellations += 1,
+    }
 }
 
 /// In-flight chunked prefill of a lane's prompt.
@@ -167,6 +215,7 @@ fn consume_row(
         on_done(FinishedRequest {
             id: ls.id,
             tenant: ls.tenant,
+            outcome: RequestOutcome::Done,
             tokens: ls.generated,
             ttft: ls.ttft.unwrap_or_default(),
             first_token_work: ls.first_token_work.unwrap_or_default(),
@@ -197,6 +246,33 @@ pub fn run_continuous(
     // for the whole run
     let mut out: Vec<f32> = Vec::new();
     loop {
+        // ---- fault scan: retire cancelled / expired lanes early ----
+        // Runs before admission so a freed slot is refilled this very
+        // cycle. Survivors are untouched (per-lane independence), so
+        // their tokens stay bit-identical to an unfaulted run.
+        let now = clock.now();
+        for l in 0..lanes {
+            let Some(outcome) = occ[l]
+                .as_ref()
+                .and_then(|ls| fault_outcome(ls.deadline, ls.cancel.as_ref(), now))
+            else {
+                continue;
+            };
+            let ls = occ[l].take().expect("lane occupied");
+            chunking[l] = None;
+            stepper.retire(l);
+            queue.release(ls.tenant);
+            count_outcome(&mut stats, outcome);
+            stats.tokens += ls.generated.len() as u64;
+            on_done(FinishedRequest {
+                id: ls.id,
+                tenant: ls.tenant,
+                outcome,
+                tokens: ls.generated,
+                ttft: ls.ttft.unwrap_or_default(),
+                first_token_work: ls.first_token_work.unwrap_or_default(),
+            });
+        }
         // ---- admit into free lanes, fairness order ----
         let mut admitted: Vec<usize> = Vec::new();
         let mut bound: Vec<Option<Arc<dyn FactorSource>>> = Vec::new();
@@ -206,6 +282,21 @@ pub fn run_continuous(
             }
             let (req, budget) = loop {
                 let Some(r) = queue.pop_next() else { break 'fill };
+                // expired or cancelled while queued: retire without
+                // claiming a lane or paying any forward pass
+                if let Some(outcome) = fault_outcome(r.deadline, r.cancel.as_ref(), clock.now()) {
+                    queue.release(r.tenant);
+                    count_outcome(&mut stats, outcome);
+                    on_done(FinishedRequest {
+                        id: r.id,
+                        tenant: r.tenant,
+                        outcome,
+                        tokens: Vec::new(),
+                        ttft: clock.now().duration_since(r.enqueued),
+                        first_token_work: stats.work_rows,
+                    });
+                    continue;
+                }
                 if r.prompt.is_empty() || r.prompt.len() >= cfg.seq_len {
                     bail!(
                         "run_continuous: inadmissible prompt length {} (seq_len {})",
@@ -221,6 +312,7 @@ pub fn run_continuous(
                     on_done(FinishedRequest {
                         id: r.id,
                         tenant: r.tenant,
+                        outcome: RequestOutcome::Done,
                         tokens: Vec::new(),
                         ttft: clock.now().duration_since(r.enqueued),
                         first_token_work: stats.work_rows,
@@ -240,6 +332,8 @@ pub fn run_continuous(
                 enqueued: req.enqueued,
                 ttft: None,
                 first_token_work: None,
+                deadline: req.deadline,
+                cancel: req.cancel.clone(),
             });
             if cfg.prefill_chunk > 0 && req.prompt.len() > cfg.prefill_chunk {
                 // long prompt: claim the lane now, stream the prefill in
@@ -521,7 +615,16 @@ mod tests {
     }
 
     fn req(id: u64, tenant: AdapterId, prompt: Vec<i32>, budget: usize) -> LaneRequest {
-        LaneRequest { id, tenant, prompt, budget, adapter: None, enqueued: Instant::now() }
+        LaneRequest {
+            id,
+            tenant,
+            prompt,
+            budget,
+            adapter: None,
+            enqueued: Instant::now(),
+            deadline: None,
+            cancel: None,
+        }
     }
 
     /// Lock-step oracle for one request alone (per-lane independence
@@ -629,6 +732,79 @@ mod tests {
             .unwrap();
         assert_eq!(order, vec![1, 2, 1, 2, 1, 2], "token charges must alternate the tenants");
         assert!(queue.spent(1) >= 3 && queue.spent(2) >= 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn expired_request_times_out_and_survivors_match_the_oracle() {
+        let (dir, cfg, engine, w) = fixture("deadline");
+        let clock = Clock::real();
+        let mut queue = AdmissionQueue::new();
+        // request 0 is already past its deadline when the loop starts;
+        // request 1 is unconstrained and must be byte-identical to its
+        // solo lock-step run despite the neighbor's early retirement
+        let mut dead = req(0, 1, vec![1, 2, 3], 4);
+        dead.deadline = Some(Instant::now());
+        queue.push(dead);
+        queue.push(req(1, 2, vec![2, 4, 6], 3));
+        let mut slot = None;
+        let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
+        let ccfg =
+            ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab, prefill_chunk: 0 };
+        let mut fins: Vec<FinishedRequest> = Vec::new();
+        let stats =
+            run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| fins.push(fin)).unwrap();
+        assert_eq!((stats.finished, stats.timeouts, stats.cancellations), (1, 1, 0));
+        let timed_out = fins.iter().find(|f| f.id == 0).unwrap();
+        assert_eq!(timed_out.outcome, RequestOutcome::Timeout);
+        assert!(timed_out.tokens.is_empty(), "expired in queue: no lane, no tokens");
+        let survivor = fins.iter().find(|f| f.id == 1).unwrap();
+        assert_eq!(survivor.outcome, RequestOutcome::Done);
+        assert_eq!(survivor.tokens, solo(&engine, &cfg, &w, &[2, 4, 6], 3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cancel_token_retires_a_lane_mid_decode_keeping_partial_tokens() {
+        let (dir, cfg, engine, w) = fixture("cancel");
+        let clock = Clock::real();
+        let oracle = solo(&engine, &cfg, &w, &[1, 2, 3], 6);
+        assert!(oracle.len() >= 2, "fixture must decode several tokens for the test to bite");
+        let token = Arc::new(AtomicBool::new(false));
+        let mut queue = AdmissionQueue::new();
+        let mut victim = req(0, 1, vec![1, 2, 3], 6);
+        victim.cancel = Some(token.clone());
+        queue.push(victim);
+        // the trigger request: budget 1, so it finishes in the admission
+        // wave; its completion callback flips the victim's cancel token —
+        // a deterministic mid-decode cancellation point
+        queue.push(req(1, 2, vec![2, 4], 1));
+        let mut slot = None;
+        let mut stepper = SessionStepper::new(&engine, "synth/b4", &w, &mut slot);
+        let ccfg =
+            ContinuousConfig { lanes: 2, seq_len: cfg.seq_len, vocab: cfg.vocab, prefill_chunk: 0 };
+        let mut fins: Vec<FinishedRequest> = Vec::new();
+        let stats = run_continuous(&mut stepper, &ccfg, &mut queue, &clock, |fin| {
+            if fin.id == 1 {
+                token.store(true, Ordering::Relaxed);
+            }
+            fins.push(fin);
+        })
+        .unwrap();
+        assert_eq!((stats.finished, stats.timeouts, stats.cancellations), (1, 0, 1));
+        let cancelled = fins.iter().find(|f| f.id == 0).unwrap();
+        assert_eq!(cancelled.outcome, RequestOutcome::Cancelled);
+        assert!(
+            !cancelled.tokens.is_empty() && cancelled.tokens.len() < oracle.len(),
+            "cancelled mid-decode: {} of {} tokens",
+            cancelled.tokens.len(),
+            oracle.len()
+        );
+        assert_eq!(
+            cancelled.tokens[..],
+            oracle[..cancelled.tokens.len()],
+            "partial tokens are a prefix of the uncancelled oracle"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -21,6 +21,7 @@
 use crate::coordinator::registry::AdapterId;
 use crate::loraquant::FactorSource;
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -38,6 +39,14 @@ pub struct LaneRequest {
     pub adapter: Option<Arc<dyn FactorSource>>,
     /// Submission instant (TTFT accounting; scenario clock or real).
     pub enqueued: Instant,
+    /// Absolute deadline: past it the request retires with a `Timeout`
+    /// outcome instead of decoding further (checked at admission and
+    /// between decode steps; DESIGN.md §15).
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation token: when set to `true` the request
+    /// retires with a `Cancelled` outcome at the next lane scan,
+    /// keeping whatever tokens it already generated.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl std::fmt::Debug for LaneRequest {
@@ -48,6 +57,7 @@ impl std::fmt::Debug for LaneRequest {
             .field("prompt_len", &self.prompt.len())
             .field("budget", &self.budget)
             .field("adapter", &self.adapter.is_some())
+            .field("deadline", &self.deadline.is_some())
             .finish()
     }
 }
@@ -69,11 +79,39 @@ pub struct AdmissionQueue {
     /// Monotone arrival stamp for FIFO tie-breaks across tenants.
     arrivals: u64,
     pending: usize,
+    /// Load-shed depth cap: [`AdmissionQueue::try_push`] refuses new
+    /// work once `pending()` reaches it (`None` = unbounded).
+    depth_cap: Option<usize>,
 }
 
 impl AdmissionQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set (or clear) the load-shed depth cap consulted by
+    /// [`AdmissionQueue::try_push`]. In-service lanes don't count —
+    /// only not-yet-admitted requests.
+    pub fn set_depth_cap(&mut self, cap: Option<usize>) {
+        self.depth_cap = cap;
+    }
+
+    pub fn depth_cap(&self) -> Option<usize> {
+        self.depth_cap
+    }
+
+    /// Enqueue unless the depth cap is reached, in which case the
+    /// request is handed back untouched so the caller can answer
+    /// `Overloaded` (HTTP-429 semantics; DESIGN.md §15). Fairness
+    /// counters are not perturbed by a shed.
+    pub fn try_push(&mut self, req: LaneRequest) -> Result<(), LaneRequest> {
+        if let Some(cap) = self.depth_cap {
+            if self.pending >= cap {
+                return Err(req);
+            }
+        }
+        self.push(req);
+        Ok(())
     }
 
     /// Enqueue a request. A tenant whose queue was empty re-enters at the
@@ -183,6 +221,8 @@ mod tests {
             budget: 4,
             adapter: None,
             enqueued: Instant::now(),
+            deadline: None,
+            cancel: None,
         }
     }
 
@@ -295,6 +335,28 @@ mod tests {
         assert_eq!(drained[0].tenant, 2);
         assert!(q.is_empty());
         assert_eq!(q.spent(4), 9, "fairness counters survive a drain");
+    }
+
+    #[test]
+    fn depth_cap_sheds_without_touching_fairness() {
+        let mut q = AdmissionQueue::new();
+        q.set_depth_cap(Some(2));
+        assert!(q.try_push(req(0, 1)).is_ok());
+        assert!(q.try_push(req(1, 2)).is_ok());
+        let shed = q.try_push(req(2, 3)).expect_err("cap reached: request comes back");
+        assert_eq!(shed.id, 2);
+        assert_eq!(q.pending(), 2);
+        assert_eq!(q.spent(3), 0, "a shed tenant is never floored to the watermark");
+        // admitting one request frees queue depth (in-service lanes
+        // don't count against the cap)
+        let r = q.pop_next().unwrap();
+        assert!(q.try_push(req(3, 3)).is_ok());
+        q.release(r.tenant);
+        // uncapped queues never shed
+        q.set_depth_cap(None);
+        for i in 0..16 {
+            assert!(q.try_push(req(10 + i, 4)).is_ok());
+        }
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //! the only scheduling freedom steal order adds — cannot affect a single
 //! output bit. `threads = 1` (or a single task) degenerates to a plain
 //! serial call on the caller's thread.
+//!
+//! Fault contract (DESIGN.md §15): a panicking task is *contained* — it
+//! counts as completed for the park-gate/quiescence accounting, every
+//! sibling task still runs, the worker threads survive, and
+//! [`ComputePool::run`] returns a structured `Err` carrying the lowest
+//! panicking task's payload instead of re-raising. One poisoned request
+//! group fails; the engine and the process do not.
 
 use crate::tensor::{matmul_flat, matmul_flat_rows};
 use std::collections::VecDeque;
@@ -53,9 +60,25 @@ struct PoolState {
     job: Option<Job>,
     /// Tasks claimed but not yet completed, plus tasks never claimed.
     remaining: usize,
-    /// A task panicked (re-raised on the calling thread).
-    panicked: bool,
+    /// Lowest-task-index panic of the current job, with its payload.
+    /// `run` reports it as a structured `Err` instead of re-raising; the
+    /// park-gate accounting treats a panicked task as completed, so the
+    /// quiescence barrier still drains.
+    panic: Option<(usize, String)>,
     shutdown: bool,
+}
+
+/// Render a `catch_unwind` payload as text (panics carry `String` or
+/// `&'static str` in practice). Shared with the merge pool's
+/// panic-containment path.
+pub(crate) fn payload_str(p: Box<dyn std::any::Any + Send>) -> String {
+    match p.downcast::<String>() {
+        Ok(s) => *s,
+        Err(p) => match p.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => "<non-string panic payload>".into(),
+        },
+    }
 }
 
 struct PoolShared {
@@ -169,12 +192,29 @@ impl ComputePool {
     /// produce the same output for task `i` no matter which thread runs
     /// it — true by construction for the disjoint output partitions this
     /// pool exists for.
-    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    ///
+    /// A panicking task is contained, not re-raised: every other task
+    /// still runs, the barrier still drains, the worker threads survive,
+    /// and `run` returns `Err` carrying the panic payload of the
+    /// *lowest* panicking task index (deterministic when several tasks
+    /// panic). Callers fail only the work of this call — one poisoned
+    /// request group never kills the engine or the process.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) -> Result<(), String> {
         if tasks <= 1 || self.threads <= 1 {
+            // serial fast path: same containment contract — every task
+            // runs, the lowest-index payload is the one reported
+            let mut panic: Option<(usize, String)> = None;
             for t in 0..tasks {
-                f(t);
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(t))) {
+                    if panic.is_none() {
+                        panic = Some((t, payload_str(p)));
+                    }
+                }
             }
-            return;
+            return match panic {
+                None => Ok(()),
+                Some((t, msg)) => Err(format!("task {t} panicked: {msg}")),
+            };
         }
         // Erase the closure's lifetime for the shared job cell (fat
         // reference → fat raw pointer, same layout); the wait below keeps
@@ -186,7 +226,7 @@ impl ComputePool {
             debug_assert!(st.job.is_none(), "ComputePool::run is not reentrant");
             st.job = Some(Job { f: erased, tasks });
             st.remaining = tasks;
-            st.panicked = false;
+            st.panic = None;
             // Publish the park-gate count under the state mutex *before*
             // seeding the injector: a worker that scans between runs must
             // never find a queued task whose count isn't visible yet
@@ -199,31 +239,44 @@ impl ComputePool {
         self.shared.work.notify_all();
         // The caller participates in its own job instead of just waiting.
         while let Some(task) = try_claim(&self.shared, 0) {
-            let ok = catch_unwind(AssertUnwindSafe(|| f(task))).is_ok();
-            finish_task(&self.shared, ok);
+            let res = catch_unwind(AssertUnwindSafe(|| f(task)));
+            finish_task(&self.shared, res.err().map(|p| (task, payload_str(p))));
         }
         let mut st = lock(&self.shared);
         while st.remaining > 0 {
             st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         st.job = None; // idempotent: the last finisher already cleared it
-        let panicked = st.panicked;
+        let panicked = st.panic.take();
         drop(st);
-        assert!(!panicked, "ComputePool: a partitioned task panicked");
+        match panicked {
+            None => Ok(()),
+            Some((t, msg)) => Err(format!("task {t} panicked: {msg}")),
+        }
     }
 
     /// `C[m,n] = A[m,k] @ B[k,n]` with output rows partitioned across the
     /// pool — the persistent-pool replacement for
     /// [`crate::tensor::matmul_flat_threaded`]. Bit-identical to the
     /// serial kernel at every thread count (each row accumulates in the
-    /// same order; partitioning only distributes whole rows).
-    pub fn matmul_flat(&self, a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    /// same order; partitioning only distributes whole rows). A panicking
+    /// partition surfaces as `Err` (see [`ComputePool::run`]).
+    pub fn matmul_flat(
+        &self,
+        a: &[f32],
+        m: usize,
+        k: usize,
+        b: &[f32],
+        n: usize,
+        c: &mut [f32],
+    ) -> Result<(), String> {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
         debug_assert_eq!(c.len(), m * n);
         let t = self.threads.min(m.max(1));
         if t <= 1 || n == 0 {
-            return matmul_flat(a, m, k, b, n, c);
+            matmul_flat(a, m, k, b, n, c);
+            return Ok(());
         }
         let chunk = m.div_ceil(t);
         let tasks = m.div_ceil(chunk);
@@ -235,7 +288,7 @@ impl ComputePool {
             let cs = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(lo * n), (hi - lo) * n) };
             cs.fill(0.0);
             matmul_flat_rows(&a[lo * k..hi * k], hi - lo, k, b, n, cs);
-        });
+        })
     }
 }
 
@@ -282,15 +335,21 @@ fn worker_loop(shared: &PoolShared, me: usize) {
         // Safety: see `Job` — the publishing `run` call keeps the closure
         // alive until `remaining` reaches zero, which happens strictly
         // after this call returns.
-        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (*f)(task) })).is_ok();
-        finish_task(shared, ok);
+        let res = catch_unwind(AssertUnwindSafe(|| unsafe { (*f)(task) }));
+        finish_task(shared, res.err().map(|p| (task, payload_str(p))));
     }
 }
 
-fn finish_task(shared: &PoolShared, ok: bool) {
+/// Book one task as completed — panicked or not, it decrements
+/// `remaining`, so the barrier in `run` always drains. When several
+/// tasks panic, the lowest task index's payload wins (claim order is
+/// scheduling-dependent; the reported error must not be).
+fn finish_task(shared: &PoolShared, panic: Option<(usize, String)>) {
     let mut st = lock(shared);
-    if !ok {
-        st.panicked = true;
+    if let Some((t, msg)) = panic {
+        if st.panic.as_ref().is_none_or(|(p, _)| t < *p) {
+            st.panic = Some((t, msg));
+        }
     }
     st.remaining -= 1;
     if st.remaining == 0 {
@@ -323,7 +382,8 @@ mod tests {
             let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
             pool.run(tasks, &|i| {
                 hits[i].fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
             for (i, h) in hits.iter().enumerate() {
                 assert_eq!(h.load(Ordering::SeqCst), 1, "task {i} of {tasks}");
             }
@@ -339,7 +399,8 @@ mod tests {
         for _ in 0..200 {
             pool.run(3, &|i| {
                 total.fetch_add(i + 1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         assert_eq!(total.load(Ordering::SeqCst), 200 * 6);
     }
@@ -361,27 +422,63 @@ mod tests {
                 sink.fetch_add(acc, Ordering::Relaxed);
             }
             hits[i].fetch_add(1, Ordering::SeqCst);
-        });
+        })
+        .unwrap();
         for (i, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::SeqCst), 1, "task {i}");
         }
     }
 
     #[test]
-    fn task_panic_propagates_to_caller_and_pool_survives() {
+    fn task_panic_is_contained_with_payload_and_pool_survives() {
         let pool = ComputePool::new(3);
-        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            pool.run(8, &|i| {
+        let err = pool
+            .run(8, &|i| {
                 assert!(i != 5, "induced task failure");
-            });
-        }));
-        assert!(res.is_err(), "the task panic must re-raise on the caller");
-        // the barrier drained every task, so the pool stays usable
+            })
+            .expect_err("the task panic must surface as a structured error, not re-raise");
+        assert!(
+            err.contains("task 5") && err.contains("induced task failure"),
+            "error must name the task and carry its payload: {err}"
+        );
+        // the park gate treated the panicked task as completed, so the
+        // barrier drained and every worker thread is still alive
         let hits = AtomicUsize::new(0);
         pool.run(6, &|_| {
             hits.fetch_add(1, Ordering::SeqCst);
-        });
+        })
+        .unwrap();
         assert_eq!(hits.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn lowest_index_panic_wins_and_serial_path_contains_too() {
+        // several tasks panic: which worker claims which task is
+        // scheduling-dependent, the reported payload must not be
+        let pool = ComputePool::new(4);
+        for _ in 0..20 {
+            let err = pool
+                .run(16, &|i| {
+                    if i % 3 == 2 {
+                        panic!("boom {i}");
+                    }
+                })
+                .unwrap_err();
+            assert!(err.contains("task 2 panicked: boom 2"), "{err}");
+        }
+        // threads=1 degenerates to the serial loop — same contract
+        let serial = ComputePool::new(1);
+        let hits = AtomicUsize::new(0);
+        let err = serial
+            .run(4, &|i| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                if i >= 1 {
+                    panic!("boom {i}");
+                }
+            })
+            .unwrap_err();
+        assert!(err.contains("task 1 panicked: boom 1"), "{err}");
+        assert_eq!(hits.load(Ordering::SeqCst), 4, "remaining serial tasks still ran");
     }
 
     #[test]
@@ -393,7 +490,8 @@ mod tests {
         let hits = AtomicUsize::new(0);
         pool.run(5, &|_| {
             hits.fetch_add(1, Ordering::SeqCst);
-        });
+        })
+        .unwrap();
         assert_eq!(hits.load(Ordering::SeqCst), 5);
         out[0] = 1;
         assert_eq!(out[0], 1);
@@ -423,7 +521,7 @@ mod tests {
             for threads in [1usize, 2, 3, 4, 16] {
                 let pool = ComputePool::new(threads);
                 let mut par = vec![f32::NAN; m * n];
-                pool.matmul_flat(&a, m, k, &b, n, &mut par);
+                pool.matmul_flat(&a, m, k, &b, n, &mut par).unwrap();
                 assert_eq!(par, serial, "m={m} threads={threads} must be bit-identical");
             }
         }
@@ -449,7 +547,7 @@ mod tests {
         for threads in [1usize, 2, 4] {
             let pool = ComputePool::new(threads);
             let mut par = vec![0.0f32; m * n];
-            pool.matmul_flat(&a, m, k, &b, n, &mut par);
+            pool.matmul_flat(&a, m, k, &b, n, &mut par).unwrap();
             for (i, (p, o)) in par.iter().zip(&oracle).enumerate() {
                 assert!(
                     p.to_bits() == o.to_bits() || (p.is_nan() && o.is_nan()),
@@ -470,7 +568,7 @@ mod tests {
             let mut serial = vec![0.0f32; m * n];
             matmul_flat(&a, m, k, &b, n, &mut serial);
             let mut par = vec![f32::NAN; m * n];
-            pool.matmul_flat(&a, m, k, &b, n, &mut par);
+            pool.matmul_flat(&a, m, k, &b, n, &mut par).unwrap();
             assert_eq!(par, serial);
         }
     }
@@ -480,7 +578,7 @@ mod tests {
         // constructing and dropping pools repeatedly must not leak or hang
         for _ in 0..8 {
             let pool = ComputePool::new(3);
-            pool.run(2, &|_| {});
+            pool.run(2, &|_| {}).unwrap();
             drop(pool);
         }
     }

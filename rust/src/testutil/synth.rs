@@ -94,7 +94,7 @@ pub fn synth_quantized_adapter(cfg: &ModelConfig, seed: u64) -> StoredAdapter {
         let short = site.rsplit_once('.').map(|(_, s)| s).unwrap_or(site.as_str());
         let (n_in, m_out) = cfg.site_shape(short).expect("known site");
         let (b, a) = rng.lora_pair(m_out, n_in, cfg.lora_rank, 0.7);
-        q.sites.insert(site, quantize_site(&b, &a, &qcfg));
+        q.sites.insert(site, quantize_site(&b, &a, &qcfg).expect("synth config is well-formed"));
     }
     StoredAdapter::Quantized(q)
 }

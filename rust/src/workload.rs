@@ -146,6 +146,13 @@ impl ArrivalPredictor {
         out
     }
 
+    /// Drop a tenant's track entirely — called when its adapter is
+    /// removed or quarantined, so a broken tenant can't keep triggering
+    /// speculative prefetches of an unloadable adapter.
+    pub fn forget(&mut self, id: AdapterId) {
+        self.tracks.remove(&id);
+    }
+
     /// Tracked-tenant count (tests/diagnostics).
     pub fn len(&self) -> usize {
         self.tracks.len()
@@ -314,6 +321,23 @@ mod tests {
         assert_eq!(p.due(t0 + ms(50)), vec![1], "one full gap after last arrival");
         assert_eq!(p.due(t0 + ms(46)), vec![1], "due fires from half a gap out");
         assert!(p.due(t0 + ms(200)).is_empty(), "stale after 4 gaps without arrivals");
+    }
+
+    #[test]
+    fn predictor_forget_drops_the_track() {
+        let t0 = Instant::now();
+        let ms = Duration::from_millis;
+        let mut p = ArrivalPredictor::new();
+        for k in 0..4u64 {
+            p.observe(1, t0 + ms(10 * k));
+            p.observe(2, t0 + ms(10 * k + 3));
+        }
+        assert_eq!(p.due(t0 + ms(43)), vec![1, 2], "both tenants predict before the forget");
+        p.forget(1);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.due(t0 + ms(43)), vec![2], "forgotten tenant must not predict");
+        p.forget(99); // unknown id is a no-op
+        assert_eq!(p.len(), 1);
     }
 
     #[test]

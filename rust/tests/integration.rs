@@ -19,7 +19,7 @@ fn build_adapter(seed: u64) -> (LoraAdapter, QuantizedLora) {
     let mut q = QuantizedLora::default();
     for (name, m, n) in SITES {
         let (b, a) = rng.lora_pair(m, n, 16, 0.7);
-        q.sites.insert(format!("l0.{name}"), quantize_site(&b, &a, &LoraQuantConfig::default()));
+        q.sites.insert(format!("l0.{name}"), quantize_site(&b, &a, &LoraQuantConfig::default()).unwrap());
         fp.sites.insert(format!("l0.{name}"), (a, b));
     }
     (fp, q)
@@ -60,7 +60,8 @@ fn loraquant_beats_flat_baselines_at_lower_bits() {
             &b,
             &a,
             &LoraQuantConfig { group: 128, ..LoraQuantConfig::variant(2, 0.9) },
-        );
+        )
+        .unwrap();
         let e_lq = site.dequant_delta().rel_err(&ba);
         let bin = FlatQuantizer::bin(128).quantize(&b, &a, None);
         let rtn1 = FlatQuantizer::rtn(1, 128).quantize(&b, &a, None);
@@ -89,7 +90,8 @@ fn method_error_ordering_matches_paper_shape() {
     let e_rtn2 = err(FlatQuantizer::rtn(2, 128).quantize(&b, &a, None).dequant_delta());
     let e_pb = err(PbLlm::default().quantize(&b, &a, None).dequant_delta());
     let e_bi = err(BiLlm::default().quantize(&b, &a, None).dequant_delta());
-    let lq3 = quantize_site(&b, &a, &LoraQuantConfig { group: 128, ..LoraQuantConfig::variant(3, 0.9) });
+    let lq3 = quantize_site(&b, &a, &LoraQuantConfig { group: 128, ..LoraQuantConfig::variant(3, 0.9) })
+        .unwrap();
     let e_lq3 = err(lq3.dequant_delta());
     assert!(e_bin < e_rtn1, "bin {e_bin} < rtn1 {e_rtn1}");
     assert!(e_rtn2 < e_bin, "rtn2 {e_rtn2} < bin {e_bin}");
@@ -128,7 +130,7 @@ fn every_low_mode_roundtrips_through_store() {
     for low_mode in [LowMode::Bin, LowMode::Rtn1, LowMode::Prune] {
         let cfg = LoraQuantConfig { low_mode, ste: None, ..Default::default() };
         let mut q = QuantizedLora::default();
-        q.sites.insert("s".into(), quantize_site(&b, &a, &cfg));
+        q.sites.insert("s".into(), quantize_site(&b, &a, &cfg).unwrap());
         let dec = store::decode(&store::encode(&q).unwrap()).unwrap();
         assert!(
             dec.sites["s"].dequant_delta().sub(&q.sites["s"].dequant_delta()).fro_norm() < 1e-6,
@@ -150,7 +152,7 @@ fn split_strategies_consistent_with_static_h() {
             ste: None,
             ..Default::default()
         };
-        let site = quantize_site(&b, &a, &cfg);
+        let site = quantize_site(&b, &a, &cfg).unwrap();
         assert_eq!(site.h, 6);
         errs.push(site.dequant_delta().rel_err(&ba));
     }

@@ -181,7 +181,7 @@ fn prop_factor_form_matches_materialized_oracle() {
             ste: None,
             ..Default::default()
         };
-        let site = quantize_site(&b, &a, &cfg);
+        let site = quantize_site(&b, &a, &cfg).unwrap();
         let scaling = rng.range_f32(0.5, 2.5);
         let rows = 1 + rng.below(6);
         let x = rng.matrix(rows, n, 1.0);
@@ -245,7 +245,7 @@ fn prop_incremental_decode_matches_full_recompute_oracle() {
             let short = site.rsplit_once('.').unwrap().1;
             let (n_in, m_out) = cfg.site_shape(short).unwrap();
             let (b, a) = rng.lora_pair(m_out, n_in, cfg.lora_rank, 0.7);
-            q.sites.insert(site, quantize_site(&b, &a, &qcfg));
+            q.sites.insert(site, quantize_site(&b, &a, &qcfg).unwrap());
         }
         let w_merged = engine
             .upload_weights(&merge_adapter(&base, &quant_deltas(&q)).unwrap())
@@ -364,7 +364,7 @@ fn prop_continuous_matches_lockstep_oracle() {
                     let short = site.rsplit_once('.').unwrap().1;
                     let (n_in, m_out) = cfg.site_shape(short).unwrap();
                     let (b, a) = rng.lora_pair(m_out, n_in, cfg.lora_rank, 0.7);
-                    q.sites.insert(site, quantize_site(&b, &a, &qcfg));
+                    q.sites.insert(site, quantize_site(&b, &a, &qcfg).unwrap());
                 }
                 Arc::new(q)
             })
@@ -494,7 +494,7 @@ fn prop_chunked_prefill_matches_monolithic_prefill() {
             let short = site.rsplit_once('.').unwrap().1;
             let (n_in, m_out) = cfg.site_shape(short).unwrap();
             let (b, a) = rng.lora_pair(m_out, n_in, cfg.lora_rank, 0.7);
-            q.sites.insert(site, quantize_site(&b, &a, &qcfg));
+            q.sites.insert(site, quantize_site(&b, &a, &qcfg).unwrap());
         }
         let stored = Arc::new(q);
         let w_merged = engine
@@ -580,7 +580,7 @@ fn prop_store_codec_roundtrip_is_bit_exact() {
             ..Default::default()
         };
         let mut q = QuantizedLora::default();
-        q.sites.insert("l0.wq".into(), quantize_site(&b, &a, &cfg));
+        q.sites.insert("l0.wq".into(), quantize_site(&b, &a, &cfg).unwrap());
         let enc = store::encode(&q).unwrap();
         let dec = store::decode(&enc).unwrap();
         let tag = format!("bits={bits} low={low_mode:?} hselect={hselect:?}");
@@ -606,7 +606,7 @@ fn prop_avg_bits_between_low_and_high() {
             ste: None,
             ..LoraQuantConfig::variant(bits, rng.range_f32(0.3, 0.99))
         };
-        let site = quantize_site(&b, &a, &cfg);
+        let site = quantize_site(&b, &a, &cfg).unwrap();
         let ab = site.avg_bits();
         assert!(ab >= 1.0, "{ab}");
         // + scale overhead can push slightly past bits for tiny groups
@@ -838,8 +838,82 @@ fn prop_pool_matmul_bit_identical_at_every_thread_count() {
         for t in [1usize, 2, 4] {
             let pool = ComputePool::new(t);
             let mut got = vec![0.0f32; m * n];
-            pool.matmul_flat(&a, m, k, &b, n, &mut got);
+            pool.matmul_flat(&a, m, k, &b, n, &mut got).unwrap();
             assert_bits_eq(&got, &want, &format!("pool threads={t} {m}x{k}x{n}"));
+        }
+    });
+}
+
+/// §15 cancellation containment: a request whose cancel token is set
+/// retires with a structured `Cancelled` before claiming a lane, and —
+/// the containment half — never perturbs anyone else: every surviving
+/// request decodes bit-identically to a cancel-free run of the same
+/// trace. Random adapter mixes, budgets, and cancel masks; runs on the
+/// real clock, so the property is also timing-robust (per-lane
+/// independence, not schedule luck).
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn prop_cancellation_leaves_survivors_bit_identical() {
+    use loraquant::coordinator::{Coordinator, CoordinatorConfig, FailKind, GenRequest};
+    use loraquant::testutil::{synth_model_config, synth_quantized_adapter, write_synth_model};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let dir = std::env::temp_dir().join(format!("lq_prop_cancel_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = synth_model_config();
+    write_synth_model(&dir, "synth", &cfg, &[1, 4], 42).unwrap();
+
+    let start = |dir: &std::path::Path| {
+        let mut c = CoordinatorConfig::new(dir, "synth").with_workers(1).with_buckets(vec![1, 4]);
+        c.max_wait = Duration::from_millis(1);
+        Coordinator::start(c).expect("coordinator start")
+    };
+    check_with(Config { cases: 6, seed: 0xCA9CE1 }, "cancelled requests leave no trace", |rng| {
+        // a per-case request plan: (adapter index, budget, cancelled?)
+        let n = 8 + rng.below(5);
+        let mut plan: Vec<(usize, usize, bool)> =
+            (0..n).map(|_| (rng.below(2), 1 + rng.below(3), rng.below(3) == 0)).collect();
+        if plan.iter().all(|&(.., c)| !c) {
+            plan[0].2 = true; // at least one cancellation per case
+        }
+        let run = |cancels_armed: bool| {
+            let (coord, join) = start(&dir);
+            let ids = [
+                coord.register_adapter(synth_quantized_adapter(&cfg, 900), "a").unwrap(),
+                coord.register_adapter(synth_quantized_adapter(&cfg, 901), "b").unwrap(),
+            ];
+            let rxs: Vec<_> = plan
+                .iter()
+                .map(|&(a, budget, cancelled)| {
+                    let mut req = GenRequest::new(ids[a], vec![1, 5, 4, 7, 3], budget);
+                    if cancels_armed && cancelled {
+                        // pre-flipped: the scheduler must observe it at
+                        // admission, before the request claims a lane
+                        req = req.with_cancel(Arc::new(AtomicBool::new(true)));
+                    }
+                    coord.generate_async(req)
+                })
+                .collect();
+            let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+            coord.shutdown();
+            join.join().unwrap();
+            results
+        };
+        let faulted = run(true);
+        let clean = run(false);
+        for (i, (&(.., cancelled), (got, want))) in
+            plan.iter().zip(faulted.iter().zip(&clean)).enumerate()
+        {
+            let want = want.as_ref().expect("clean run completes every request");
+            if cancelled {
+                let err = got.as_ref().expect_err("pre-cancelled request must not complete");
+                assert_eq!(err.kind, FailKind::Cancelled, "req {i}: {err}");
+            } else {
+                let got = got.as_ref().expect("survivor must complete");
+                assert_eq!(got.tokens, want.tokens, "req {i}: survivor tokens must be bit-identical");
+            }
         }
     });
 }

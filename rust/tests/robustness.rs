@@ -1,0 +1,449 @@
+//! Fault-contained serving acceptance (DESIGN.md §15): deadlines,
+//! panic isolation, retrying disk loads, quarantine, and load shedding
+//! must fail *only the requests a fault targets*, with structured error
+//! kinds, while every survivor decodes bit-identically to an unfaulted
+//! oracle run. Everything rides the full coordinator under the virtual
+//! clock, so every trace — including the fault events themselves — is
+//! byte-reproducible.
+//!
+//! Reference engine only: the synthetic scenario environment has no HLO
+//! artifacts for the PJRT backend.
+#![cfg(not(feature = "pjrt"))]
+
+use loraquant::coordinator::MergeStrategy;
+use loraquant::scenario::{
+    run_scenario, ChurnAction, DiskError, EventKind, FaultPlan, ScenarioEnv, ScenarioRun,
+    ScenarioSpec, ScriptedPanic,
+};
+use loraquant::workload::WorkloadConfig;
+use std::time::Duration;
+
+const MS: fn(u64) -> Duration = Duration::from_millis;
+
+/// Every request that survived the faulted run must have decoded the
+/// exact tokens the unfaulted oracle produced at the same trace index.
+fn assert_survivors_match_oracle(faulted: &ScenarioRun, oracle: &ScenarioRun, what: &str) {
+    assert_eq!(faulted.tokens.len(), oracle.tokens.len());
+    for (i, (got, want)) in faulted.tokens.iter().zip(&oracle.tokens).enumerate() {
+        if let Some(got) = got {
+            assert_eq!(
+                Some(got),
+                want.as_ref(),
+                "{what}: survivor req {i} must be bit-identical to the oracle"
+            );
+        }
+    }
+}
+
+/// The `(req, adapter, error)` triples of every `Fail` event.
+fn fails(run: &ScenarioRun) -> Vec<(usize, u32, String)> {
+    run.events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::Fail { req, adapter, error } => Some((*req, *adapter, error.clone())),
+            _ => None,
+        })
+        .collect()
+}
+
+fn count_kind(run: &ScenarioRun, pred: impl Fn(&EventKind) -> bool) -> usize {
+    run.events.iter().filter(|e| pred(&e.kind)).count()
+}
+
+/// A deadline storm: 200 requests at 2000/s against a max-wait far past
+/// the 15 ms per-request deadline, so only bucket-full releases beat the
+/// clock. Rare tenants' stragglers retire with a structured `Timeout`
+/// at *exactly* submit + deadline; every survivor is bit-identical to a
+/// deadline-free oracle; and the whole trace — including the timeout
+/// schedule — is byte-reproducible across runs, compute threads, and
+/// worker counts.
+#[test]
+fn deadline_storm_times_out_stragglers_and_pins_survivors() {
+    let env = ScenarioEnv::synth("rb_deadline", 4).unwrap();
+    let timeout = MS(15);
+    let spec = |threads: usize, workers: usize| ScenarioSpec {
+        name: "robustness/deadline".into(),
+        strategy: MergeStrategy::Merged,
+        compute_threads: threads,
+        workers,
+        max_wait: Duration::from_secs(1),
+        request_timeout: Some(timeout),
+        workload: WorkloadConfig { rate: 2000.0, zipf_alpha: 1.1, n_requests: 200, seed: 7 },
+        ..Default::default()
+    };
+    let run = run_scenario(&spec(1, 1), &env).unwrap();
+    assert!(run.summary.ok > 0, "hot tenants must still complete under the storm");
+    assert!(run.summary.failed > 0, "stragglers must time out under a 15ms deadline");
+    assert_eq!(run.summary.ok + run.summary.failed, 200, "every request resolves");
+    assert_eq!(run.summary.timeouts, run.summary.failed as u64);
+    assert_eq!(run.summary.cancellations, 0);
+    assert_eq!(run.summary.sheds, 0);
+    assert_eq!(
+        run.summary.failed_by_kind.get("timeout"),
+        Some(&run.summary.failed),
+        "every failure must be a structured timeout: {:?}",
+        run.summary.failed_by_kind
+    );
+    // a timeout retires at exactly submit + deadline on the virtual clock
+    for (req, _, error) in fails(&run) {
+        assert!(error.starts_with("timeout:"), "req {req}: {error}");
+        let submit = run
+            .events
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::Submit { req: r, .. } if r == req))
+            .expect("every failed request was submitted");
+        let fail = run
+            .events
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::Fail { req: r, .. } if r == req))
+            .unwrap();
+        assert_eq!(
+            fail.t - submit.t,
+            timeout,
+            "req {req}: queued expiry must fire exactly at the deadline"
+        );
+    }
+    let oracle = run_scenario(
+        &ScenarioSpec { request_timeout: None, ..spec(1, 1) },
+        &env,
+    )
+    .unwrap();
+    assert_eq!(oracle.summary.ok, 200, "the deadline-free oracle completes everything");
+    assert_survivors_match_oracle(&run, &oracle, "deadline storm");
+    // byte-reproducible: across runs, compute threads, and worker counts
+    let again = run_scenario(&spec(1, 1), &env).unwrap();
+    assert_eq!(run.log(), again.log(), "storm trace must be reproducible");
+    let threaded = run_scenario(&spec(4, 1), &env).unwrap();
+    assert_eq!(run.log(), threaded.log(), "trace must not depend on compute threads");
+    let two_workers = run_scenario(&spec(1, 2), &env).unwrap();
+    assert_eq!(
+        run.log(),
+        two_workers.log(),
+        "per-adapter queues are worker-count invariant, so the trace is too"
+    );
+}
+
+/// Panic containment: the first merge for adapter 1 panics on the pool
+/// thread. Only the requests parked on that merge fail (structured
+/// `Internal`), the supervisor respawns the dead worker exactly once,
+/// and the very next adapter-1 batch re-merges and serves normally.
+#[test]
+fn scripted_panic_fails_only_target_adapter_and_respawns_worker() {
+    let env = ScenarioEnv::synth("rb_panic", 4).unwrap();
+    let spec = |threads: usize| ScenarioSpec {
+        name: "robustness/panic".into(),
+        strategy: MergeStrategy::Merged,
+        compute_threads: threads,
+        round_robin: true,
+        faults: FaultPlan {
+            panic: Some(ScriptedPanic { adapter: 1, first_n: 1 }),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let run = run_scenario(&spec(1), &env).unwrap();
+    let failed = run.summary.failed;
+    assert!(failed >= 1, "the panicked merge must fail its parked requests");
+    assert_eq!(run.summary.ok, 64 - failed);
+    for (req, adapter, error) in fails(&run) {
+        assert_eq!(adapter, 1, "req {req}: a panic must only fail its own adapter's group");
+        assert!(error.starts_with("internal:"), "req {req}: {error}");
+    }
+    assert_eq!(run.summary.failed_by_kind.get("internal"), Some(&failed));
+    assert_eq!(run.summary.failed_by_kind.len(), 1);
+    assert_eq!(count_kind(&run, |k| matches!(k, EventKind::Panic { adapter: 1 })), 1);
+    assert_eq!(run.summary.worker_respawns, 1, "the supervisor must respawn the dead worker");
+    // recovery: later adapter-1 batches re-merge and complete
+    let adapter1_completes =
+        count_kind(&run, |k| matches!(k, EventKind::Complete { adapter: 1, .. }));
+    assert_eq!(adapter1_completes, 16 - failed, "post-respawn adapter-1 traffic must serve");
+    let oracle =
+        run_scenario(&ScenarioSpec { faults: FaultPlan::default(), ..spec(1) }, &env).unwrap();
+    assert_eq!(oracle.summary.ok, 64);
+    assert_survivors_match_oracle(&run, &oracle, "scripted panic");
+    let again = run_scenario(&spec(1), &env).unwrap();
+    assert_eq!(run.log(), again.log(), "panic trace must be reproducible");
+    let threaded = run_scenario(&spec(4), &env).unwrap();
+    assert_eq!(run.log(), threaded.log(), "trace must not depend on compute threads");
+}
+
+/// A tiered spec for the disk-fault tests: every adapter on disk, a
+/// factor cache generous enough that each adapter loads exactly once.
+fn disk_spec(env: &ScenarioEnv, name: &str) -> ScenarioSpec {
+    let unit = env.adapters[0].1.bytes();
+    ScenarioSpec {
+        name: name.into(),
+        strategy: MergeStrategy::Factor,
+        round_robin: true,
+        tiered: true,
+        factor_cache_bytes: unit * 8,
+        ..Default::default()
+    }
+}
+
+/// Transient disk faults: the first two loads of adapter 2 fail, the
+/// bounded retry loop (2 retries, 1 ms virtual backoff) absorbs both,
+/// and not a single request fails or decodes differently.
+#[test]
+fn disk_error_retries_recover_without_failures() {
+    let env = ScenarioEnv::synth("rb_retry", 4).unwrap();
+    let spec = |threads: usize| ScenarioSpec {
+        compute_threads: threads,
+        disk_retries: 2,
+        disk_backoff: MS(1),
+        faults: FaultPlan {
+            disk_error: Some(DiskError { adapter: Some(2), first_n: 2 }),
+            ..Default::default()
+        },
+        ..disk_spec(&env, "robustness/disk-retry")
+    };
+    let run = run_scenario(&spec(1), &env).unwrap();
+    assert_eq!(run.summary.failed, 0, "retries must absorb the transient fault");
+    assert_eq!(run.summary.ok, 64);
+    assert_eq!(run.summary.disk_retries, 2, "both scripted failures cost one retry each");
+    let attempts: Vec<u32> = run
+        .events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::DiskError { adapter: 2, attempt } => Some(attempt),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(attempts, vec![0, 1], "initial try then first retry fail; second retry lands");
+    let oracle = run_scenario(
+        &ScenarioSpec {
+            disk_retries: 0,
+            disk_backoff: Duration::ZERO,
+            faults: FaultPlan::default(),
+            ..spec(1)
+        },
+        &env,
+    )
+    .unwrap();
+    assert_eq!(run.tokens, oracle.tokens, "retried loads must not change a single token");
+    let again = run_scenario(&spec(1), &env).unwrap();
+    assert_eq!(run.log(), again.log(), "retry trace must be reproducible");
+    let threaded = run_scenario(&spec(4), &env).unwrap();
+    assert_eq!(run.log(), threaded.log(), "trace must not depend on compute threads");
+}
+
+/// Permanent disk faults: every load of adapter 2 fails, the retry
+/// budget (1 retry) exhausts, and the adapter is quarantined — all 16 of
+/// its round-robin requests fail fast with `AdapterUnavailable` while
+/// the other 48 serve bit-identically to an unfaulted oracle.
+#[test]
+fn disk_error_exhaustion_quarantines_adapter() {
+    let env = ScenarioEnv::synth("rb_quarantine", 4).unwrap();
+    let spec = ScenarioSpec {
+        disk_retries: 1,
+        disk_backoff: MS(1),
+        faults: FaultPlan {
+            disk_error: Some(DiskError { adapter: Some(2), first_n: u32::MAX }),
+            ..Default::default()
+        },
+        ..disk_spec(&env, "robustness/disk-quarantine")
+    };
+    let run = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.summary.failed, 16, "exactly the quarantined tenant's requests fail");
+    assert_eq!(run.summary.ok, 48);
+    assert_eq!(run.summary.failed_by_kind.get("adapter-unavailable"), Some(&16));
+    assert_eq!(run.summary.failed_by_kind.len(), 1);
+    for (req, adapter, _) in fails(&run) {
+        assert_eq!(adapter, 2, "req {req}: quarantine must not leak to other tenants");
+    }
+    assert_eq!(run.summary.quarantined, 1);
+    assert_eq!(count_kind(&run, |k| matches!(k, EventKind::Quarantine { adapter: 2 })), 1);
+    assert_eq!(run.summary.disk_retries, 1, "one retry, then the budget exhausts");
+    assert_eq!(
+        count_kind(&run, |k| matches!(k, EventKind::DiskError { adapter: 2, .. })),
+        2,
+        "initial try + one retry, then no further load is attempted"
+    );
+    let oracle = run_scenario(
+        &ScenarioSpec {
+            disk_retries: 0,
+            disk_backoff: Duration::ZERO,
+            faults: FaultPlan::default(),
+            ..spec.clone()
+        },
+        &env,
+    )
+    .unwrap();
+    assert_eq!(oracle.summary.ok, 64);
+    assert_survivors_match_oracle(&run, &oracle, "disk quarantine");
+    let again = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.log(), again.log(), "quarantine trace must be reproducible");
+}
+
+/// Scripted availability flaps: adapter 3 is quarantined at 80 ms and
+/// recovered at 160 ms. Its requests inside the window fail fast with
+/// the quarantine error; traffic before and after the window serves
+/// normally, bit-identical to a churn-free oracle.
+#[test]
+fn quarantine_churn_flaps_availability_deterministically() {
+    let env = ScenarioEnv::synth("rb_churn", 4).unwrap();
+    let spec = ScenarioSpec {
+        name: "robustness/quarantine-churn".into(),
+        strategy: MergeStrategy::Merged,
+        round_robin: true,
+        faults: FaultPlan {
+            churn: vec![
+                ChurnAction::Quarantine { at: MS(80), target: 3 },
+                ChurnAction::Recover { at: MS(160), target: 3 },
+            ],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let run = run_scenario(&spec, &env).unwrap();
+    assert!(run.summary.failed > 0, "in-window adapter-3 requests must fail fast");
+    assert_eq!(run.summary.ok + run.summary.failed, 64);
+    for (req, adapter, error) in fails(&run) {
+        assert_eq!(adapter, 3, "req {req}: the flap must only fail the quarantined tenant");
+        assert!(error.contains("quarantined"), "req {req}: {error}");
+    }
+    assert_eq!(
+        run.summary.failed_by_kind.get("adapter-unavailable"),
+        Some(&run.summary.failed)
+    );
+    assert_eq!(run.summary.quarantined, 1);
+    assert_eq!(count_kind(&run, |k| matches!(k, EventKind::Quarantine { adapter: 3 })), 1);
+    assert_eq!(count_kind(&run, |k| matches!(k, EventKind::Recover { adapter: 3 })), 1);
+    // the tenant serves on both sides of the outage window
+    let complete_at = |pred: &dyn Fn(Duration) -> bool| {
+        run.events.iter().any(
+            |e| matches!(e.kind, EventKind::Complete { adapter: 3, .. } if pred(e.t)),
+        )
+    };
+    assert!(complete_at(&|t| t < MS(80)), "adapter 3 must serve before the quarantine");
+    assert!(complete_at(&|t| t > MS(160)), "adapter 3 must serve again after recovery");
+    let oracle =
+        run_scenario(&ScenarioSpec { faults: FaultPlan::default(), ..spec.clone() }, &env)
+            .unwrap();
+    assert_eq!(oracle.summary.ok, 64);
+    assert_survivors_match_oracle(&run, &oracle, "quarantine churn");
+    let again = run_scenario(&spec, &env).unwrap();
+    assert_eq!(run.log(), again.log(), "churn trace must be reproducible");
+}
+
+/// Load shedding: a depth-2 admission cap against a 4000/s arrival burst
+/// sheds deterministically with a structured `Overloaded` carrying a
+/// `retry_after` hint; admitted requests all complete.
+#[test]
+fn queue_cap_sheds_overload_with_retry_hint() {
+    let env = ScenarioEnv::synth("rb_shed", 4).unwrap();
+    let spec = |threads: usize| ScenarioSpec {
+        name: "robustness/shed".into(),
+        strategy: MergeStrategy::Factor,
+        compute_threads: threads,
+        queue_cap: Some(2),
+        workload: WorkloadConfig { rate: 4000.0, zipf_alpha: 1.1, n_requests: 64, seed: 7 },
+        ..Default::default()
+    };
+    let run = run_scenario(&spec(1), &env).unwrap();
+    assert!(run.summary.failed > 0, "a depth-2 cap must shed under a 4000/s burst");
+    assert!(run.summary.ok >= 2, "admitted requests must complete");
+    assert_eq!(run.summary.ok + run.summary.failed, 64);
+    assert_eq!(run.summary.sheds, run.summary.failed as u64, "every failure is a shed");
+    assert_eq!(run.summary.failed_by_kind.get("overloaded"), Some(&run.summary.failed));
+    assert_eq!(run.summary.failed_by_kind.len(), 1);
+    for (req, _, error) in fails(&run) {
+        assert!(error.starts_with("overloaded:"), "req {req}: {error}");
+        assert!(error.contains("retry after"), "req {req}: shed must carry a backoff hint");
+    }
+    let again = run_scenario(&spec(1), &env).unwrap();
+    assert_eq!(run.log(), again.log(), "shed trace must be reproducible");
+    let threaded = run_scenario(&spec(4), &env).unwrap();
+    assert_eq!(run.log(), threaded.log(), "trace must not depend on compute threads");
+}
+
+/// The combined storm the issue asks for: a deadline storm, a scripted
+/// merge panic (adapter 1), and permanently failing disk loads
+/// (adapter 2 → quarantine) all in one tiered trace. Non-timeout
+/// failures stay pinned to their target adapters, every fault counter
+/// fires, survivors are bit-identical to an unfaulted oracle, and the
+/// whole trace is byte-reproducible.
+#[test]
+fn combined_fault_storm_is_reproducible_and_contained() {
+    let env = ScenarioEnv::synth("rb_storm", 4).unwrap();
+    let unit = env.adapters[0].1.bytes();
+    let spec = |threads: usize, workers: usize| ScenarioSpec {
+        name: "robustness/combined".into(),
+        strategy: MergeStrategy::Merged,
+        compute_threads: threads,
+        workers,
+        buckets: vec![1, 4],
+        max_wait: Duration::from_secs(1),
+        request_timeout: Some(MS(15)),
+        tiered: true,
+        factor_cache_bytes: unit * 8,
+        disk_retries: 2,
+        disk_backoff: MS(1),
+        workload: WorkloadConfig { rate: 2000.0, zipf_alpha: 1.1, n_requests: 200, seed: 7 },
+        faults: FaultPlan {
+            panic: Some(ScriptedPanic { adapter: 1, first_n: 1 }),
+            disk_error: Some(DiskError { adapter: Some(2), first_n: u32::MAX }),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let run = run_scenario(&spec(1, 1), &env).unwrap();
+    assert!(run.summary.ok > 0, "the hot tenant must keep serving through the storm");
+    assert!(run.summary.failed > 0);
+    assert_eq!(run.summary.ok + run.summary.failed, 200);
+    // every fault family fired
+    assert!(run.summary.timeouts > 0, "the deadline storm must retire stragglers");
+    assert_eq!(run.summary.worker_respawns, 1);
+    assert_eq!(count_kind(&run, |k| matches!(k, EventKind::Panic { adapter: 1 })), 1);
+    assert_eq!(run.summary.quarantined, 1);
+    assert_eq!(run.summary.disk_retries, 2);
+    assert_eq!(
+        count_kind(&run, |k| matches!(k, EventKind::DiskError { adapter: 2, .. })),
+        3,
+        "initial try + both retries fail, then the adapter quarantines"
+    );
+    // structured accounting: only the three expected failure classes
+    assert_eq!(run.summary.timeouts as usize, run.summary.failed_by_kind["timeout"]);
+    for kind in run.summary.failed_by_kind.keys() {
+        assert!(
+            ["timeout", "internal", "adapter-unavailable"].contains(&kind.as_str()),
+            "unexpected failure class {kind}"
+        );
+    }
+    // non-timeout failures stay pinned to the adapter their fault targets
+    for (req, adapter, error) in fails(&run) {
+        if error.starts_with("internal:") {
+            assert_eq!(adapter, 1, "req {req}: panic fallout must stay on adapter 1");
+        } else if error.starts_with("adapter-unavailable:") {
+            assert_eq!(adapter, 2, "req {req}: quarantine fallout must stay on adapter 2");
+        } else {
+            assert!(error.starts_with("timeout:"), "req {req}: {error}");
+        }
+    }
+    let oracle = run_scenario(
+        &ScenarioSpec {
+            request_timeout: None,
+            disk_retries: 0,
+            disk_backoff: Duration::ZERO,
+            faults: FaultPlan::default(),
+            ..spec(1, 1)
+        },
+        &env,
+    )
+    .unwrap();
+    assert_eq!(oracle.summary.ok, 200, "the unfaulted oracle completes everything");
+    assert_survivors_match_oracle(&run, &oracle, "combined storm");
+    // byte-reproducible across runs and compute threads; worker-count
+    // invariant in results (tokens + failure set)
+    let again = run_scenario(&spec(1, 1), &env).unwrap();
+    assert_eq!(run.log(), again.log(), "combined trace must be reproducible");
+    let threaded = run_scenario(&spec(4, 1), &env).unwrap();
+    assert_eq!(run.log(), threaded.log(), "trace must not depend on compute threads");
+    let two_workers = run_scenario(&spec(1, 2), &env).unwrap();
+    assert_eq!(run.tokens, two_workers.tokens, "tokens must not depend on pool size");
+    assert_eq!(
+        fails(&run).iter().map(|(r, ..)| *r).collect::<Vec<_>>(),
+        fails(&two_workers).iter().map(|(r, ..)| *r).collect::<Vec<_>>(),
+        "the failure set must not depend on pool size"
+    );
+}

@@ -35,7 +35,7 @@ fn quantized_adapter(dir: &Path, task: &str) -> StoredAdapter {
     let lora = LoraAdapter::load(dir.join(MODEL).join(format!("{task}.lora.bin"))).unwrap();
     let mut q = QuantizedLora::default();
     for (site, (a, b)) in &lora.sites {
-        q.sites.insert(site.clone(), quantize_site(b, a, &LoraQuantConfig::variant(2, 0.9)));
+        q.sites.insert(site.clone(), quantize_site(b, a, &LoraQuantConfig::variant(2, 0.9)).unwrap());
     }
     StoredAdapter::Quantized(q)
 }
@@ -50,7 +50,7 @@ fn serves_requests_and_reports_metrics() {
     let id = coord.register_adapter(quantized_adapter(dir, "modadd"), "modadd").unwrap();
     // BOS d5 MARK d7 SEP — ask for 2 answer tokens
     let resp = coord
-        .generate(GenRequest { adapter: id, prompt: vec![1, 10, 4, 12, 3], max_new: 2 })
+        .generate(GenRequest::new(id, vec![1, 10, 4, 12, 3], 2))
         .unwrap();
     assert_eq!(resp.tokens.len(), 2);
     assert!(resp.tokens.iter().all(|&t| (0..64).contains(&t)));
@@ -69,7 +69,7 @@ fn unknown_adapter_is_rejected() {
         return;
     };
     let err = coord
-        .generate(GenRequest { adapter: 999, prompt: vec![1, 3], max_new: 1 })
+        .generate(GenRequest::new(999, vec![1, 3], 1))
         .unwrap_err();
     assert!(err.to_string().contains("unknown adapter"));
     coord.shutdown();
@@ -88,11 +88,7 @@ fn batching_groups_by_adapter_and_caches_weights() {
     let mut rxs = Vec::new();
     for i in 0..16 {
         let adapter = if i % 2 == 0 { id0 } else { id1 };
-        rxs.push(coord.generate_async(GenRequest {
-            adapter,
-            prompt: vec![1, 10, 4, 12, 3],
-            max_new: 2,
-        }));
+        rxs.push(coord.generate_async(GenRequest::new(adapter, vec![1, 10, 4, 12, 3], 2)));
     }
     for rx in rxs {
         rx.recv().unwrap().unwrap();
@@ -126,10 +122,10 @@ fn quantized_and_fp16_agree_often() {
         let d2 = 5 + ((i * 3) % 10) as i32;
         let prompt = vec![1, d1, 4, d2, 3];
         let r_fp = coord
-            .generate(GenRequest { adapter: fp_id, prompt: prompt.clone(), max_new: 2 })
+            .generate(GenRequest::new(fp_id, prompt.clone(), 2))
             .unwrap();
         let r_q = coord
-            .generate(GenRequest { adapter: q_id, prompt, max_new: 2 })
+            .generate(GenRequest::new(q_id, prompt, 2))
             .unwrap();
         if r_fp.tokens == r_q.tokens {
             agree += 1;
@@ -176,7 +172,7 @@ mod pool_tests {
     }
 
     fn req(adapter: u32) -> GenRequest {
-        GenRequest { adapter, prompt: vec![1, 5, 4, 7, 3], max_new: 2 }
+        GenRequest::new(adapter, vec![1, 5, 4, 7, 3], 2)
     }
 
     /// Acceptance: under `--merge-strategy factor` a mixed-adapter batch
@@ -249,7 +245,7 @@ mod pool_tests {
             let mut outs = Vec::new();
             for p in &prompts {
                 let resp = coord
-                    .generate(GenRequest { adapter: id, prompt: p.clone(), max_new: 4 })
+                    .generate(GenRequest::new(id, p.clone(), 4))
                     .unwrap();
                 outs.push(resp.tokens);
             }
@@ -502,12 +498,12 @@ mod pool_tests {
         let (coord, join) = Coordinator::start(pool_config(&dir, 1)).unwrap();
         let id = coord.register_adapter(synth_quantized_adapter(&mcfg, 21), "t").unwrap();
         let err = coord
-            .generate(GenRequest { adapter: id, prompt: vec![], max_new: 1 })
+            .generate(GenRequest::new(id, vec![], 1))
             .unwrap_err();
         assert!(err.to_string().contains("empty prompt"));
         let long = vec![1i32; mcfg.seq_len + 4];
         let err = coord
-            .generate(GenRequest { adapter: id, prompt: long, max_new: 1 })
+            .generate(GenRequest::new(id, long, 1))
             .unwrap_err();
         assert!(err.to_string().contains("no room to generate"));
         // the worker must still be alive and serving
