@@ -106,11 +106,11 @@ fn main() -> anyhow::Result<()> {
         if arr.at > el {
             std::thread::sleep(arr.at - el);
         }
-        rxs.push(coord.generate_async(GenRequest {
-            adapter: arr.adapter,
-            prompt: vec![TOKENS::BOS, 5, TOKENS::MARK, 7, TOKENS::SEP],
-            max_new: 3,
-        }));
+        rxs.push(coord.generate_async(GenRequest::new(
+            arr.adapter,
+            vec![TOKENS::BOS, 5, TOKENS::MARK, 7, TOKENS::SEP],
+            3,
+        )));
     }
     let ok = rxs.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
     let wall = start.elapsed();
@@ -145,7 +145,7 @@ fn served_score(
     let mut rxs = Vec::new();
     for i in 0..set.len() {
         let prompt = set.prompts[i][..set.plens[i]].to_vec();
-        rxs.push(coord.generate_async(GenRequest { adapter, prompt, max_new: set.refs[i].len() }));
+        rxs.push(coord.generate_async(GenRequest::new(adapter, prompt, set.refs[i].len())));
     }
     let mut total = 0.0;
     for (i, rx) in rxs.into_iter().enumerate() {

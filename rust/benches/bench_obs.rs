@@ -1,0 +1,84 @@
+//! Observability overhead benchmark (DESIGN.md §16): what request-
+//! lifecycle tracing costs on the serving hot path, measured on the
+//! same `scenario::run_scenario` path the obs test suite pins.
+//!
+//! Three configurations of one storm trace (2000/s, 8 tenants):
+//! 1. **off** — `spec.trace = false`: the baseline; stage accounting
+//!    still runs (it is always on), but no recorder exists and no span
+//!    is pushed;
+//! 2. **record** — tracing on, nothing exported: the per-thread
+//!    ring-buffer cost the recorder adds to every retirement;
+//! 3. **export** — tracing on plus the Chrome trace JSON and Prometheus
+//!    text renders, timed separately (export happens at quiescence, off
+//!    the serving path).
+//!
+//! Results land in `BENCH_obs.json`. Reference engine only: the
+//! synthetic scenario environment has no HLO artifacts for PJRT.
+
+use loraquant::coordinator::MergeStrategy;
+use loraquant::scenario::{run_scenario, ScenarioEnv, ScenarioSpec};
+use loraquant::workload::WorkloadConfig;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    if cfg!(feature = "pjrt") {
+        eprintln!("bench_obs: skipped — the synthetic scenario env has no PJRT artifacts");
+        return Ok(());
+    }
+    let env = ScenarioEnv::synth("obsbench", 8)?;
+    let mut json_rows: Vec<String> = Vec::new();
+
+    println!("# Tracing overhead — 2000/s storm, 1000 requests, 8 tenants (virtual time)");
+    for mode in ["off", "record", "export"] {
+        let spec = ScenarioSpec {
+            name: format!("obs_overhead/{mode}"),
+            strategy: MergeStrategy::Merged,
+            n_adapters: 8,
+            max_wait: Duration::from_millis(5),
+            trace: mode != "off",
+            workload: WorkloadConfig { rate: 2000.0, zipf_alpha: 1.1, n_requests: 1000, seed: 7 },
+            ..Default::default()
+        };
+        let run = run_scenario(&spec, &env)?;
+        let s = &run.summary;
+        let (export_wall, trace_bytes) = if mode == "export" {
+            let t0 = Instant::now();
+            let trace = run.trace_json();
+            let metrics = run.metrics_text.clone();
+            (t0.elapsed(), trace.len() + metrics.len())
+        } else {
+            (Duration::ZERO, 0)
+        };
+        let tok_s = s.tokens_generated as f64 / s.real_wall.as_secs_f64().max(1e-9);
+        println!(
+            "mode={mode:<7} | {}/{} ok tokens={} | {:.0} tok/s wall {:?} | spans={} export {:?} ({} B)",
+            s.ok,
+            s.requests,
+            s.tokens_generated,
+            tok_s,
+            s.real_wall,
+            run.spans.len(),
+            export_wall,
+            trace_bytes,
+        );
+        json_rows.push(format!(
+            r#"{{"scenario":"tracing_overhead","mode":"{mode}","requests":{},"ok":{},"tokens":{},"tok_per_s":{:.1},"wall_ms":{},"spans":{},"export_us":{},"trace_bytes":{}}}"#,
+            s.requests,
+            s.ok,
+            s.tokens_generated,
+            tok_s,
+            s.real_wall.as_millis(),
+            run.spans.len(),
+            export_wall.as_micros(),
+            trace_bytes,
+        ));
+    }
+
+    let json = format!(
+        "{{\"bench\":\"obs\",\"model\":\"synth\",\"synthetic\":true,\"scenarios\":[{}]}}\n",
+        json_rows.join(",")
+    );
+    std::fs::write("BENCH_obs.json", &json)?;
+    println!("\nwrote BENCH_obs.json ({} scenario rows)", json_rows.len());
+    Ok(())
+}

@@ -18,6 +18,12 @@
 //! the driver can see it ([`VirtualClock::sleepers`]) and include it in
 //! its next-event computation. Advancing the clock wakes every sleeper
 //! whose deadline has been reached.
+//!
+//! The observability layer ([`crate::obs`]) stamps its lifecycle spans
+//! from this same clock: because workers only observe a frozen virtual
+//! clock between driver barriers, span timestamps are a function of the
+//! schedule, which is what makes exported traces byte-reproducible
+//! (DESIGN.md §16).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};

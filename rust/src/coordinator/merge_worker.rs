@@ -19,6 +19,7 @@ use super::tier::AdapterTier;
 use crate::adapter::fmt::Tensor;
 use crate::clock::Clock;
 use crate::model::{merge_adapter, BaseWeights};
+use crate::obs::{SpanKind, TraceRecorder};
 use anyhow::anyhow;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -231,6 +232,8 @@ struct WorkerCtx {
     stats: Arc<MergeStats>,
     /// Join handles of respawned workers, drained at shutdown.
     respawned: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    /// Job-span recorder (DESIGN.md §16); `None` records nothing.
+    trace: Option<TraceRecorder>,
 }
 
 fn spawn_worker(ctx: WorkerCtx) -> std::thread::JoinHandle<()> {
@@ -247,6 +250,9 @@ fn spawn_worker(ctx: WorkerCtx) -> std::thread::JoinHandle<()> {
 /// replacement thread with a clean stack before retiring itself.
 fn worker_loop(ctx: WorkerCtx) {
     use std::panic::{catch_unwind, AssertUnwindSafe};
+    // one trace shard per pool thread, taken on the thread itself — a
+    // phoenix replacement re-enters worker_loop and gets a fresh shard
+    let trace = ctx.trace.as_ref().map(TraceRecorder::handle);
     loop {
         // hold the lock only for the dequeue, not the work
         let job = {
@@ -264,31 +270,35 @@ fn worker_loop(ctx: WorkerCtx) {
         let panicked = match job.kind {
             JobKind::Merge(done) => {
                 let result = catch_unwind(AssertUnwindSafe(|| (ctx.merge_fn)(adapter)));
-                let dt = ctx.clock.now().duration_since(t0);
-                match result {
-                    Ok(r) => {
-                        done(r, dt);
-                        false
-                    }
-                    Err(p) => {
-                        done(Err(panic_err(adapter, p)), dt);
-                        true
-                    }
+                let t1 = ctx.clock.now();
+                let (r, panicked) = match result {
+                    Ok(r) => (r, false),
+                    Err(p) => (Err(panic_err(adapter, p)), true),
+                };
+                if let Some(h) = &trace {
+                    h.span(t0, t1, SpanKind::MergeJob {
+                        adapter: u64::from(adapter),
+                        ok: r.is_ok(),
+                    });
                 }
+                done(r, t1.duration_since(t0));
+                panicked
             }
             JobKind::Fetch(done) => {
                 let result = catch_unwind(AssertUnwindSafe(|| (ctx.fetch_fn)(adapter)));
-                let dt = ctx.clock.now().duration_since(t0);
-                match result {
-                    Ok(r) => {
-                        done(r, dt);
-                        false
-                    }
-                    Err(p) => {
-                        done(Err(panic_err(adapter, p)), dt);
-                        true
-                    }
+                let t1 = ctx.clock.now();
+                let (r, panicked) = match result {
+                    Ok(r) => (r, false),
+                    Err(p) => (Err(panic_err(adapter, p)), true),
+                };
+                if let Some(h) = &trace {
+                    h.span(t0, t1, SpanKind::FetchJob {
+                        adapter: u64::from(adapter),
+                        ok: r.is_ok(),
+                    });
                 }
+                done(r, t1.duration_since(t0));
+                panicked
             }
         };
         ctx.stats.exit();
@@ -319,7 +329,13 @@ pub(crate) struct MergePool {
 }
 
 impl MergePool {
-    pub(crate) fn new(n_workers: usize, merge_fn: MergeFn, fetch_fn: FetchFn, clock: Clock) -> Self {
+    pub(crate) fn new(
+        n_workers: usize,
+        merge_fn: MergeFn,
+        fetch_fn: FetchFn,
+        clock: Clock,
+        trace: Option<TraceRecorder>,
+    ) -> Self {
         let n = n_workers.max(1);
         let (tx, rx) = mpsc::channel::<MergeJob>();
         let rx = Arc::new(Mutex::new(rx));
@@ -335,6 +351,7 @@ impl MergePool {
                 clock: clock.clone(),
                 stats: Arc::clone(&stats),
                 respawned: Arc::clone(&respawned),
+                trace: trace.clone(),
             }));
         }
         Self { tx: Some(tx), joins, respawned, stats }
@@ -390,7 +407,8 @@ mod tests {
 
     #[test]
     fn jobs_complete_and_report_duration() {
-        let pool = MergePool::new(2, Arc::new(|_id| noop_weights()), no_tier_fetch(), Clock::real());
+        let pool =
+            MergePool::new(2, Arc::new(|_id| noop_weights()), no_tier_fetch(), Clock::real(), None);
         let (tx, rx) = channel();
         for id in 0..8u32 {
             let tx = tx.clone();
@@ -417,6 +435,7 @@ mod tests {
             Arc::new(|id| Err(anyhow!("no adapter {id}"))),
             no_tier_fetch(),
             Clock::real(),
+            None,
         );
         let (tx, rx) = channel();
         pool.sender()
@@ -452,7 +471,7 @@ mod tests {
             gate.recv_timeout(Duration::from_secs(10)).expect("gate released");
             noop_weights()
         });
-        let pool = MergePool::new(2, merge_fn, no_tier_fetch(), Clock::real());
+        let pool = MergePool::new(2, merge_fn, no_tier_fetch(), Clock::real(), None);
         let (done_tx, done_rx) = channel();
         for id in [0u32, 1] {
             let done_tx = done_tx.clone();
@@ -510,7 +529,7 @@ mod tests {
             }
             noop_weights()
         });
-        let pool = MergePool::new(1, merge_fn, no_tier_fetch(), Clock::real());
+        let pool = MergePool::new(1, merge_fn, no_tier_fetch(), Clock::real(), None);
         let (tx, rx) = channel();
         for id in [7u32, 13, 9] {
             let tx = tx.clone();
@@ -561,7 +580,7 @@ mod tests {
     #[test]
     fn fetch_panic_answers_with_structured_error() {
         let fetch_fn: FetchFn = Arc::new(|_id| panic!("fetch blew up"));
-        let pool = MergePool::new(2, Arc::new(|_| noop_weights()), fetch_fn, Clock::real());
+        let pool = MergePool::new(2, Arc::new(|_| noop_weights()), fetch_fn, Clock::real(), None);
         let (tx, rx) = channel();
         pool.sender()
             .send(MergeJob {

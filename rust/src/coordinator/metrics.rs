@@ -1,5 +1,9 @@
-//! Serving metrics: log-scale latency histogram + throughput counters.
+//! Serving metrics: log-scale latency histogram + throughput counters,
+//! plus the Prometheus-registry builder for the `/metrics` exposition
+//! (DESIGN.md §16).
 
+use super::pool::WorkerSnapshot;
+use crate::obs::MetricsRegistry;
 use std::time::Duration;
 
 /// Log-bucketed latency histogram (1µs … ~17min, 2× buckets).
@@ -23,11 +27,13 @@ impl Histogram {
     }
 
     pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
+        // Saturate: a pathological duration (> u64::MAX µs) lands in the
+        // top bucket instead of wrapping into a small one.
+        let us = u64::try_from(d.as_micros()).unwrap_or(u64::MAX).max(1);
         let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
         self.buckets[idx] += 1;
         self.count += 1;
-        self.sum_us += us;
+        self.sum_us = self.sum_us.saturating_add(us);
         self.max_us = self.max_us.max(us);
     }
 
@@ -46,6 +52,28 @@ impl Histogram {
         Duration::from_micros(self.max_us)
     }
 
+    /// Full bucket export for the Prometheus exposition
+    /// (DESIGN.md §16): ascending `(upper edge µs, cumulative count)`
+    /// pairs with trailing empty buckets trimmed. The `+Inf` row is
+    /// appended by the renderer ([`crate::obs::prom`]).
+    pub fn bucket_export(&self) -> Vec<(u64, u64)> {
+        let last = self.buckets.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+        let mut acc = 0;
+        self.buckets[..last]
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                acc += c;
+                (1u64 << (i + 1), acc)
+            })
+            .collect()
+    }
+
+    /// Running sum in microseconds (the exposition's `_sum`).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
     /// Fold another histogram into this one (per-worker aggregation).
     pub fn absorb(&mut self, other: &Histogram) {
         for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
@@ -56,7 +84,13 @@ impl Histogram {
         self.max_us = self.max_us.max(other.max_us);
     }
 
-    /// Approximate quantile from bucket boundaries (upper edge).
+    /// Approximate quantile from bucket boundaries. Reports the
+    /// **upper edge** of the bucket holding the target rank — bucket
+    /// `i` spans `[2^i, 2^{i+1})` µs, so the result over-reports the
+    /// true quantile by up to 2×. Assertions should use exact stats
+    /// ([`LatencyStats`], the per-stage
+    /// [`crate::obs::StageBreakdown`] sums); this histogram exists for
+    /// cheap streaming aggregation and the `/metrics` exposition.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -151,9 +185,12 @@ impl ServerMetrics {
         }
     }
 
-    /// One-line human-readable summary.
+    /// One-line human-readable summary. A `Default`-constructed value
+    /// has no histograms; render a zero-count summary instead of
+    /// panicking.
     pub fn summary(&self) -> String {
-        let e2e = self.e2e_latency.as_ref().unwrap();
+        let zero = Histogram::new();
+        let e2e = self.e2e_latency.as_ref().unwrap_or(&zero);
         format!(
             "requests={} batches={} (factor={}) mean_batch={:.2} steps={} p50={:?} p95={:?} p99={:?} mean={:?}",
             self.requests,
@@ -169,6 +206,88 @@ impl ServerMetrics {
     }
 }
 
+/// Build the pool's Prometheus registry from per-worker snapshots
+/// (DESIGN.md §16): pool-wide counters and full-bucket latency
+/// histograms, per-worker occupancy gauges (queue depth, parked
+/// requests, merge/fetch in-flight, cache bytes), plus the quarantine
+/// gauge and the trace ring-buffer drop counter. Deterministic given
+/// the snapshots — rendering sorts by name and label.
+pub fn pool_registry(
+    snaps: &[WorkerSnapshot],
+    quarantined: usize,
+    trace_dropped: Option<u64>,
+) -> MetricsRegistry {
+    let mut total = ServerMetrics::new();
+    for s in snaps {
+        total.absorb(&s.metrics);
+    }
+    let mut reg = MetricsRegistry::new();
+    for (name, help, v) in [
+        ("lq_requests_total", "Requests retired successfully.", total.requests),
+        ("lq_tokens_generated_total", "Generated tokens across all requests.", total.tokens_generated),
+        ("lq_batches_total", "Decode batches/groups executed.", total.batches),
+        ("lq_factor_batches_total", "Batches decoded on the factor-form path.", total.factor_batches),
+        ("lq_decode_steps_total", "Decode-step forward passes.", total.decode_steps),
+        ("lq_prefill_passes_total", "Prefill/admission forward passes.", total.prefill_passes),
+        ("lq_timeouts_total", "Requests retired past their deadline.", total.timeouts),
+        ("lq_cancellations_total", "Requests retired by a cancel token.", total.cancellations),
+        ("lq_sheds_total", "Requests shed at admission (queue cap).", total.sheds),
+    ] {
+        reg.counter(name, help, &[], v);
+    }
+    for (name, help, h) in [
+        ("lq_e2e_latency_us", "End-to-end request latency (µs).", &total.e2e_latency),
+        ("lq_ttft_latency_us", "Submission to first token (µs).", &total.ttft_latency),
+        ("lq_exec_latency_us", "Batch/group execution latency (µs).", &total.exec_latency),
+        ("lq_merge_latency_us", "Host dequant+merge latency (µs).", &total.merge_latency),
+    ] {
+        if let Some(h) = h {
+            reg.histogram(name, help, &[], h.bucket_export(), h.sum_us() as f64, h.count());
+        }
+    }
+    for s in snaps {
+        let w = s.worker.to_string();
+        let labels: &[(&str, &str)] = &[("worker", &w)];
+        for (name, help, v) in [
+            ("lq_queue_depth", "Admission-queued requests.", s.queued_requests as f64),
+            ("lq_parked_requests", "Requests parked behind merges/fetches.", s.parked_requests as f64),
+            ("lq_inflight_merges", "Adapters with a merge in flight.", s.inflight_merges as f64),
+            ("lq_held_merges", "Merge completions held by the ingest sequencer.", s.held_merges as f64),
+            ("lq_inflight_fetches", "Adapters with a disk-tier fetch in flight.", s.inflight_fetches as f64),
+            ("lq_cache_bytes", "Merged-weight cache bytes resident.", s.cache_used_bytes as f64),
+            ("lq_cache_entries", "Adapters with merged weights cached.", s.cached_adapters as f64),
+            ("lq_factor_cache_bytes", "Packed-factor cache bytes resident.", s.factor_cache_used_bytes as f64),
+        ] {
+            reg.gauge(name, help, labels, v);
+        }
+        for (name, help, v) in [
+            ("lq_cache_hits_total", "Merged-weight cache hits.", s.cache.hits),
+            ("lq_cache_misses_total", "Merged-weight cache misses.", s.cache.misses),
+            ("lq_cache_evictions_total", "Merged-weight cache evictions.", s.cache.evictions),
+            ("lq_factor_cache_hits_total", "Packed-factor cache hits.", s.factor_cache.hits),
+            ("lq_factor_cache_misses_total", "Packed-factor cache misses.", s.factor_cache.misses),
+            ("lq_factor_cache_evictions_total", "Packed-factor cache evictions.", s.factor_cache.evictions),
+        ] {
+            reg.counter(name, help, labels, v);
+        }
+    }
+    reg.gauge(
+        "lq_quarantined_adapters",
+        "Adapters quarantined after permanent load failure.",
+        &[],
+        quarantined as f64,
+    );
+    if let Some(d) = trace_dropped {
+        reg.counter(
+            "lq_trace_dropped_spans_total",
+            "Trace spans discarded to ring-buffer overflow.",
+            &[],
+            d,
+        );
+    }
+    reg
+}
+
 /// Exact order statistics over a set of latency samples — the scenario
 /// simulator's per-adapter summary unit. Unlike [`Histogram`] (log-scale
 /// buckets, built for cheap streaming aggregation), this sorts the raw
@@ -182,7 +301,12 @@ pub struct LatencyStats {
 
 impl LatencyStats {
     pub fn from_samples(samples: &[Duration]) -> Self {
-        let mut sorted_us: Vec<u64> = samples.iter().map(|d| d.as_micros() as u64).collect();
+        // Saturating, like Histogram::record: never wrap a pathological
+        // duration into a small sample.
+        let mut sorted_us: Vec<u64> = samples
+            .iter()
+            .map(|d| u64::try_from(d.as_micros()).unwrap_or(u64::MAX))
+            .collect();
         sorted_us.sort_unstable();
         Self { sorted_us }
     }
@@ -279,6 +403,128 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.99), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn summary_on_default_metrics_does_not_panic() {
+        // regression: summary() unwrapped e2e_latency, which is None on
+        // a Default-constructed value
+        let s = ServerMetrics::default().summary();
+        assert!(s.contains("requests=0"), "zero-count summary expected: {s}");
+        let s = ServerMetrics::new().summary();
+        assert!(s.contains("requests=0"));
+    }
+
+    #[test]
+    fn record_saturates_pathological_durations() {
+        // regression: `d.as_micros() as u64` wrapped u128 → u64, filing
+        // a ~584-million-year duration into a small bucket
+        let mut h = Histogram::new();
+        h.record(Duration::MAX);
+        assert_eq!(h.max(), Duration::from_micros(u64::MAX));
+        // the sample lands in the *top* bucket, whose upper edge is
+        // what quantile reports
+        assert_eq!(h.quantile(1.0), Duration::from_micros(1 << 30));
+        let s = LatencyStats::from_samples(&[Duration::MAX]);
+        assert_eq!(s.max(), Duration::from_micros(u64::MAX));
+    }
+
+    #[test]
+    fn quantile_reports_bucket_upper_edge() {
+        // Documented contract (DESIGN.md §16): the histogram quantile is
+        // the holding bucket's upper edge — up to 2× above the true
+        // value — so exact per-stage stats are the assertion source of
+        // truth, not this.
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(3)); // bucket [2,4)
+        assert_eq!(h.quantile(1.0), Duration::from_micros(4));
+    }
+
+    #[test]
+    fn bucket_export_is_cumulative_and_trimmed() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(1)); // bucket [1,2) → edge 2
+        h.record(Duration::from_micros(3)); // bucket [2,4) → edge 4
+        h.record(Duration::from_micros(3));
+        let buckets = h.bucket_export();
+        assert_eq!(buckets, vec![(2, 1), (4, 3)]);
+        assert!(Histogram::new().bucket_export().is_empty());
+        assert_eq!(h.sum_us(), 7);
+    }
+
+    #[test]
+    fn pool_registry_renders_golden() {
+        use super::super::cache::CacheStats;
+        let mut m = ServerMetrics::new();
+        m.requests = 2;
+        m.tokens_generated = 5;
+        m.batches = 1;
+        m.e2e_latency.as_mut().unwrap().record(Duration::from_micros(3));
+        let snap = WorkerSnapshot {
+            worker: 0,
+            metrics: m,
+            cache: CacheStats { hits: 4, misses: 1, evictions: 0 },
+            cache_used_bytes: 1024,
+            cached_adapters: 1,
+            queued_requests: 2,
+            next_release_in: None,
+            inflight_merges: 1,
+            parked_requests: 3,
+            held_merges: 0,
+            inflight_fetches: 0,
+            factor_cache: CacheStats::default(),
+            factor_cache_used_bytes: 0,
+        };
+        let reg = pool_registry(&[snap], 1, Some(0));
+        let text = reg.render();
+        // line order is stable (BTreeMap by name, then label) — pin a
+        // representative slice of the exposition
+        for line in [
+            "# TYPE lq_e2e_latency_us histogram",
+            "lq_e2e_latency_us_bucket{le=\"4\"} 1",
+            "lq_e2e_latency_us_bucket{le=\"+Inf\"} 1",
+            "lq_e2e_latency_us_sum 3",
+            "lq_e2e_latency_us_count 1",
+            "lq_requests_total 2",
+            "lq_tokens_generated_total 5",
+            "lq_queue_depth{worker=\"0\"} 2",
+            "lq_parked_requests{worker=\"0\"} 3",
+            "lq_inflight_merges{worker=\"0\"} 1",
+            "lq_cache_bytes{worker=\"0\"} 1024",
+            "lq_cache_hits_total{worker=\"0\"} 4",
+            "lq_quarantined_adapters 1",
+            "lq_trace_dropped_spans_total 0",
+        ] {
+            assert!(text.contains(line), "missing `{line}` in:\n{text}");
+        }
+        // rendering is a pure function of the snapshots
+        let reg2 = pool_registry(
+            &[WorkerSnapshot {
+                worker: 0,
+                metrics: {
+                    let mut m = ServerMetrics::new();
+                    m.requests = 2;
+                    m.tokens_generated = 5;
+                    m.batches = 1;
+                    m.e2e_latency.as_mut().unwrap().record(Duration::from_micros(3));
+                    m
+                },
+                cache: CacheStats { hits: 4, misses: 1, evictions: 0 },
+                cache_used_bytes: 1024,
+                cached_adapters: 1,
+                queued_requests: 2,
+                next_release_in: None,
+                inflight_merges: 1,
+                parked_requests: 3,
+                held_merges: 0,
+                inflight_fetches: 0,
+                factor_cache: CacheStats::default(),
+                factor_cache_used_bytes: 0,
+            }],
+            1,
+            Some(0),
+        );
+        assert_eq!(text, reg2.render());
     }
 
     #[test]

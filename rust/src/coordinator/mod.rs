@@ -21,7 +21,8 @@
 //!   different adapters' misses merge in parallel.
 //! * [`server`] — configuration plus the cloneable, `Send`
 //!   [`Coordinator`] handle (generate / prefetch / register / metrics).
-//! * [`metrics`] — latency histograms + counters, aggregated per worker.
+//! * [`metrics`] — latency histograms + counters, aggregated per worker,
+//!   plus the Prometheus exposition registry builder (DESIGN.md §16).
 //!
 //! See rust/DESIGN.md §4 for the serving architecture.
 
@@ -37,7 +38,7 @@ pub mod tier;
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PendingRequest};
 pub use cache::{CacheStats, LruCache};
 pub use merge_worker::{MergeHook, MergeStatsSnapshot};
-pub use metrics::{Histogram, LatencyStats, ServerMetrics};
+pub use metrics::{pool_registry, Histogram, LatencyStats, ServerMetrics};
 pub use pool::{route, WorkerSnapshot};
 pub use registry::{AdapterId, AdapterRegistry, AdapterSlot, StoredAdapter};
 pub use server::{

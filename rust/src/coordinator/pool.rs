@@ -51,6 +51,7 @@ use crate::eval::tasks::TOKENS;
 use crate::loraquant::FactorSource;
 use crate::loraquant::QFactors;
 use crate::model::merge::base_weight_list;
+use crate::obs::{Stage, StageBreakdown, StageTrack, TraceHandle, TraceRecorder};
 use crate::workload::ArrivalPredictor;
 #[cfg(not(feature = "pjrt"))]
 use crate::runtime::DecodeState;
@@ -65,7 +66,7 @@ use anyhow::anyhow;
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// 64-bit finalizer (murmur3-style) for rendezvous scores.
 fn mix64(mut z: u64) -> u64 {
@@ -123,6 +124,10 @@ pub(crate) struct WorkerConfig {
     /// Admission-queue depth cap: arrivals beyond this many pending shed
     /// with `FailKind::Overloaded` (DESIGN.md §15).
     pub queue_cap: Option<usize>,
+    /// Request-lifecycle span recorder (DESIGN.md §16). Each worker
+    /// thread takes its own [`TraceHandle`] at startup; `None` records
+    /// nothing.
+    pub trace: Option<TraceRecorder>,
 }
 
 /// One worker's metrics snapshot. Taken **after** the worker's release
@@ -154,8 +159,18 @@ pub struct WorkerSnapshot {
     pub factor_cache_used_bytes: usize,
 }
 
-type Payload = (GenRequest, Responder);
+type Payload = (GenRequest, Responder, StageTrack);
 type Queued = PendingRequest<Payload>;
+
+/// Stamp a stage transition on every request of a parking batch: the
+/// time since each request's last boundary books to the stage it is
+/// leaving (see [`StageTrack::advance`]).
+fn park_stage(clock: &Clock, requests: &mut [Queued], stage: Stage) {
+    let now = clock.now();
+    for r in requests.iter_mut() {
+        r.payload.2.advance(now, stage);
+    }
+}
 
 /// Messages a worker thread consumes.
 pub(crate) enum WorkerMsg {
@@ -332,6 +347,8 @@ struct Worker {
     request_timeout: Option<Duration>,
     /// Admission depth cap (None = never shed).
     queue_cap: Option<usize>,
+    /// This worker thread's span-recording endpoint (DESIGN.md §16).
+    trace: Option<TraceHandle>,
     /// Unmerged base weights, resident once per worker — the substrate the
     /// factor-form path decodes over (None under `Merged`).
     base_weights: Option<DeviceWeights>,
@@ -399,6 +416,9 @@ impl Worker {
             max_wait: cfg.max_wait,
             request_timeout: cfg.request_timeout,
             queue_cap: cfg.queue_cap,
+            // one shard per worker thread: `new` runs on the spawned
+            // thread, so a respawned worker gets a fresh shard too
+            trace: cfg.trace.as_ref().map(TraceRecorder::handle),
             base_weights,
             merge_seq: 0,
             next_ingest: 0,
@@ -433,6 +453,70 @@ impl Worker {
         }
     }
 
+    /// Reject a request at admission (never queued): a zero-length
+    /// stage breakdown (terminal `Queued`) keeps the driver's
+    /// `Σ stages == e2e` accounting total, and the `Failed` marker
+    /// lands in the trace.
+    fn reject(&self, req: &GenRequest, resp: Responder, err: ServeError) {
+        let b = StageBreakdown::default();
+        if let Some(h) = &self.trace {
+            let now = self.clock.now();
+            h.record_request(
+                req.tag,
+                u64::from(req.adapter),
+                now,
+                &b,
+                Some(&err.kind.to_string()),
+            );
+        }
+        let _ = resp.send(Err(err.with_stages(b)));
+    }
+
+    /// Fail one tracked request: close its stage track (the tail books
+    /// to the stage the failure struck in, which becomes `terminal`),
+    /// attach the breakdown to the error, and record the span timeline.
+    fn fail_request(&self, q: Queued, err: &ServeError, now: Instant) {
+        let (req, resp, track) = q.payload;
+        let start = track.started();
+        let b = track.finish(now);
+        if let Some(h) = &self.trace {
+            h.record_request(
+                req.tag,
+                u64::from(req.adapter),
+                start,
+                &b,
+                Some(&err.kind.to_string()),
+            );
+        }
+        let _ = resp.send(Err(err.clone().with_stages(b)));
+    }
+
+    /// Retire one successful request: close its stage track, attach the
+    /// breakdown to the response, and record its span timeline. With a
+    /// known first-token instant the tail splits prefill from decode;
+    /// without one (lock-step path, zero-budget completions) the whole
+    /// tail books to the track's current stage.
+    fn respond_ok(
+        &self,
+        mut r: Queued,
+        tokens: Vec<i32>,
+        e2e: Duration,
+        first_token: Option<Instant>,
+        now: Instant,
+    ) {
+        if let Some(ft) = first_token {
+            r.payload.2.advance(ft, Stage::Decode);
+        }
+        let (req, resp, track) = r.payload;
+        let start = track.started();
+        let b = track.finish(now);
+        debug_assert_eq!(b.sum(), e2e, "stage breakdown must telescope to e2e");
+        if let Some(h) = &self.trace {
+            h.record_request(req.tag, u64::from(req.adapter), start, &b, None);
+        }
+        let _ = resp.send(Ok(GenResponse { tokens, e2e, stages: b }));
+    }
+
     fn on_gen(&mut self, req: GenRequest, resp: Responder) {
         let adapter = req.adapter;
         enum Known {
@@ -448,38 +532,50 @@ impl Worker {
         match known {
             Known::Ok => {}
             Known::Unknown => {
-                let _ = resp.send(Err(ServeError::new(
-                    FailKind::AdapterUnavailable,
-                    format!("unknown adapter {adapter}"),
-                )));
+                self.reject(
+                    &req,
+                    resp,
+                    ServeError::new(
+                        FailKind::AdapterUnavailable,
+                        format!("unknown adapter {adapter}"),
+                    ),
+                );
                 return;
             }
             // fail fast instead of re-parking behind a doomed disk load
             Known::Quarantined => {
-                let _ = resp.send(Err(ServeError::new(
-                    FailKind::AdapterUnavailable,
-                    format!(
-                        "adapter {adapter} unavailable: quarantined after permanent load failure"
+                self.reject(
+                    &req,
+                    resp,
+                    ServeError::new(
+                        FailKind::AdapterUnavailable,
+                        format!(
+                            "adapter {adapter} unavailable: quarantined after permanent load failure"
+                        ),
                     ),
-                )));
+                );
                 return;
             }
         }
         // An empty prompt has no logits row to decode from (rejected
         // again inside decode_lockstep, but failing early is cheaper).
         if req.prompt.is_empty() {
-            let _ = resp.send(Err(ServeError::new(FailKind::Rejected, "empty prompt")));
+            self.reject(&req, resp, ServeError::new(FailKind::Rejected, "empty prompt"));
             return;
         }
         let t_len = self.shared.base.cfg.seq_len;
         if req.prompt.len() >= t_len {
-            let _ = resp.send(Err(ServeError::new(
-                FailKind::Rejected,
-                format!(
-                    "prompt length {} leaves no room to generate (seq_len {t_len})",
-                    req.prompt.len()
+            self.reject(
+                &req,
+                resp,
+                ServeError::new(
+                    FailKind::Rejected,
+                    format!(
+                        "prompt length {} leaves no room to generate (seq_len {t_len})",
+                        req.prompt.len()
+                    ),
                 ),
-            )));
+            );
             return;
         }
         if let Some(cap) = self.queue_cap {
@@ -491,10 +587,11 @@ impl Worker {
                 let retry_after =
                     self.max_wait.saturating_mul((pending + 1) as u32) / (cap as u32).max(1);
                 self.metrics.sheds += 1;
-                let _ = resp.send(Err(ServeError::overloaded(
-                    retry_after,
-                    format!("queue depth {pending} at cap {cap}"),
-                )));
+                self.reject(
+                    &req,
+                    resp,
+                    ServeError::overloaded(retry_after, format!("queue depth {pending} at cap {cap}")),
+                );
                 return;
             }
         }
@@ -519,7 +616,11 @@ impl Worker {
             .options
             .deadline
             .or_else(|| self.request_timeout.map(|t| now + t));
-        self.batcher.push(PendingRequest { adapter, enqueued: now, deadline, payload: (req, resp) });
+        // the stage track opens at the same instant as `enqueued`, so
+        // the breakdown telescopes to exactly the reported e2e
+        let track = StageTrack::begin(now);
+        self.batcher
+            .push(PendingRequest { adapter, enqueued: now, deadline, payload: (req, resp, track) });
     }
 
     /// Retire queued requests whose deadline passed while they waited
@@ -529,10 +630,11 @@ impl Worker {
         for r in self.batcher.expire(now) {
             self.metrics.timeouts += 1;
             let waited = now.duration_since(r.enqueued);
-            let _ = r.payload.1.send(Err(ServeError::new(
+            let err = ServeError::new(
                 FailKind::Timeout,
                 format!("deadline exceeded after {waited:?} queued"),
-            )));
+            );
+            self.fail_request(r, &err, now);
         }
     }
 
@@ -647,7 +749,9 @@ impl Worker {
                         // merge already in flight — park behind it; the
                         // post-merge drain feeds every parked batch into
                         // one group
-                        fl.parked.push(batch.requests);
+                        let mut requests = batch.requests;
+                        park_stage(&self.clock, &mut requests, Stage::MergeWait);
+                        fl.parked.push(requests);
                         continue;
                     }
                     if let Some(reqs) = groups.iter_mut().find_map(|g| match g {
@@ -660,11 +764,13 @@ impl Worker {
                     if self.cache.get(&id).is_some() {
                         groups.push(Group::Merged(id, batch.requests));
                     } else {
+                        let mut requests = batch.requests;
+                        park_stage(&self.clock, &mut requests, Stage::MergeWait);
                         self.inflight.insert(
                             id,
                             Inflight {
                                 miss_counted: true,
-                                parked: vec![batch.requests],
+                                parked: vec![requests],
                                 waiters: Vec::new(),
                             },
                         );
@@ -684,7 +790,9 @@ impl Worker {
                     // behind the in-flight merge without a second counted
                     // lookup (mirrors the Merged strategy's park path)
                     if self.inflight.contains_key(&id) && !self.factors_available(id) {
-                        self.inflight.get_mut(&id).expect("checked").parked.push(batch.requests);
+                        let mut requests = batch.requests;
+                        park_stage(&self.clock, &mut requests, Stage::MergeWait);
+                        self.inflight.get_mut(&id).expect("checked").parked.push(requests);
                         continue;
                     }
                     if self.cache.get(&id).is_some() {
@@ -709,11 +817,13 @@ impl Worker {
                         }
                         if !self.factors_available(id) {
                             // factors on disk: ride out the merge parked
+                            let mut requests = batch.requests;
+                            park_stage(&self.clock, &mut requests, Stage::MergeWait);
                             self.inflight
                                 .get_mut(&id)
                                 .expect("just ensured")
                                 .parked
-                                .push(batch.requests);
+                                .push(requests);
                             continue;
                         }
                         match groups.iter_mut().find_map(|g| match g {
@@ -730,11 +840,10 @@ impl Worker {
                 }
                 (_, None) => {
                     // per-adapter batchers always tag their batches
+                    let err = ServeError::new(FailKind::Internal, "untagged adapter batch");
+                    let now = self.clock.now();
                     for r in batch.requests {
-                        let _ = r.payload.1.send(Err(ServeError::new(
-                            FailKind::Internal,
-                            "untagged adapter batch",
-                        )));
+                        self.fail_request(r, &err, now);
                     }
                 }
             }
@@ -763,7 +872,9 @@ impl Worker {
                 // tiered factors on disk: no factor fallback — park behind
                 // the in-flight merge without a second counted lookup
                 if self.inflight.contains_key(&id) && !self.factors_available(id) {
-                    self.inflight.get_mut(&id).expect("checked").parked.push(batch.requests);
+                    let mut requests = batch.requests;
+                    park_stage(&self.clock, &mut requests, Stage::MergeWait);
+                    self.inflight.get_mut(&id).expect("checked").parked.push(requests);
                     return;
                 }
                 // one counted lookup per batch, same as the merged path
@@ -786,27 +897,28 @@ impl Worker {
                     if self.factors_available(id) {
                         self.run_batch_factor(batch.requests);
                     } else {
+                        let mut requests = batch.requests;
+                        park_stage(&self.clock, &mut requests, Stage::MergeWait);
                         self.inflight
                             .get_mut(&id)
                             .expect("just ensured")
                             .parked
-                            .push(batch.requests);
+                            .push(requests);
                     }
                 }
             }
             (_, None) => {
                 // per-adapter batchers always tag their batches
+                let err = ServeError::new(FailKind::Internal, "untagged adapter batch");
+                let now = self.clock.now();
                 for r in batch.requests {
-                    let _ = r
-                        .payload
-                        .1
-                        .send(Err(ServeError::new(FailKind::Internal, "untagged adapter batch")));
+                    self.fail_request(r, &err, now);
                 }
             }
         }
     }
 
-    fn on_batch_merged(&mut self, id: AdapterId, requests: Vec<Queued>) {
+    fn on_batch_merged(&mut self, id: AdapterId, mut requests: Vec<Queued>) {
         if let Some(fl) = self.inflight.get_mut(&id) {
             // merge already in flight — park behind it. The batch's cache
             // lookup is deferred to the drain, so on the error-free path
@@ -814,12 +926,14 @@ impl Worker {
             // (hits + misses == batches); failed merges abort their
             // parked batches before decode, so neither counter moves in
             // lock-step there.
+            park_stage(&self.clock, &mut requests, Stage::MergeWait);
             fl.parked.push(requests);
             return;
         }
         if self.cache.get(&id).is_some() {
             self.run_batch_merged(id, requests);
         } else {
+            park_stage(&self.clock, &mut requests, Stage::MergeWait);
             self.inflight.insert(
                 id,
                 Inflight { miss_counted: true, parked: vec![requests], waiters: Vec::new() },
@@ -941,11 +1055,14 @@ impl Worker {
             Err(e) => {
                 let msg = format!("{e:#}");
                 let err = self.load_failure(id, &msg);
+                let now = self.clock.now();
                 for ack in fl.waiters {
                     let _ = ack.send(Err(anyhow!("{msg}")));
                 }
+                // stranded requests fail in `FetchWait` — the stage the
+                // fault struck in becomes the breakdown's terminal
                 for r in fl.parked {
-                    let _ = r.payload.1.send(Err(err.clone()));
+                    self.fail_request(r, &err, now);
                 }
             }
         }
@@ -996,7 +1113,7 @@ impl Worker {
             Gone,
         }
         let mut ready = Vec::with_capacity(requests.len());
-        for q in requests {
+        for mut q in requests {
             let id = q.adapter;
             let place = self.shared.with_registry(|r| match r.get(id) {
                 Some(e) if e.is_quarantined() => Place::Quarantined,
@@ -1007,29 +1124,33 @@ impl Worker {
             match place {
                 Place::Resident => ready.push(q),
                 Place::Gone => {
-                    let _ = q.payload.1.send(Err(ServeError::new(
+                    let err = ServeError::new(
                         FailKind::AdapterUnavailable,
                         format!("unknown adapter {id}"),
-                    )));
+                    );
+                    self.fail_request(q, &err, self.clock.now());
                 }
                 // quarantined mid-queue: fail fast, never re-park behind
                 // a disk load that is known to fail
                 Place::Quarantined => {
-                    let _ = q.payload.1.send(Err(ServeError::new(
+                    let err = ServeError::new(
                         FailKind::AdapterUnavailable,
                         format!(
                             "adapter {id} unavailable: quarantined after permanent load failure"
                         ),
-                    )));
+                    );
+                    self.fail_request(q, &err, self.clock.now());
                 }
                 Place::Tiered => {
                     if let Some(fl) = self.fetching.get_mut(&id) {
                         // fetch already in flight: park without counting
+                        q.payload.2.advance(self.clock.now(), Stage::FetchWait);
                         fl.parked.push(q);
                     } else if self.factor_cache.get(&id).is_some() {
                         ready.push(q);
                     } else {
                         // the probe above counted this load's one miss
+                        q.payload.2.advance(self.clock.now(), Stage::FetchWait);
                         self.fetching
                             .insert(id, FetchInflight { parked: vec![q], waiters: Vec::new() });
                         self.submit_fetch(id);
@@ -1112,12 +1233,14 @@ impl Worker {
             Err(e) => {
                 let msg = format!("{e:#}");
                 let err = self.load_failure(id, &msg);
+                let now = self.clock.now();
                 for ack in fl.waiters {
                     let _ = ack.send(Err(anyhow!("{msg}")));
                 }
+                // stranded requests fail in `MergeWait`
                 for requests in fl.parked {
                     for r in requests {
-                        let _ = r.payload.1.send(Err(err.clone()));
+                        self.fail_request(r, &err, now);
                     }
                 }
             }
@@ -1164,8 +1287,9 @@ impl Worker {
     }
 
     fn run_batch_merged(&mut self, adapter: AdapterId, requests: Vec<Queued>) {
+        let t_exec = self.clock.now();
         let outcome = self.decode_merged(adapter, &requests);
-        self.finish_batch(requests, outcome, false);
+        self.finish_batch(requests, outcome, false, t_exec);
     }
 
     /// Factor-form decode: resolve every request's adapter to a packed
@@ -1176,8 +1300,9 @@ impl Worker {
         if valid.is_empty() {
             return;
         }
+        let t_exec = self.clock.now();
         let outcome = self.decode_factor(&valid, &adapters);
-        self.finish_batch(valid, outcome, true);
+        self.finish_batch(valid, outcome, true, t_exec);
     }
 
     /// Resolve each request's adapter to packed factors: the registry's
@@ -1217,41 +1342,48 @@ impl Worker {
                         adapters.push(a);
                     }
                     None => {
-                        let _ = r.payload.1.send(Err(ServeError::new(
+                        let err = ServeError::new(
                             FailKind::Internal,
                             format!("adapter {} factors not resident", r.adapter),
-                        )));
+                        );
+                        self.fail_request(r, &err, self.clock.now());
                     }
                 },
                 Got::Gone => {
-                    let _ = r.payload.1.send(Err(ServeError::new(
+                    let err = ServeError::new(
                         FailKind::AdapterUnavailable,
                         format!("unknown adapter {}", r.adapter),
-                    )));
+                    );
+                    self.fail_request(r, &err, self.clock.now());
                 }
             }
         }
         (valid, adapters)
     }
 
-    /// Respond + account for one decoded (or failed) batch.
+    /// Respond + account for one decoded (or failed) batch. `t_exec` is
+    /// the instant the batch entered execution: the lock-step path has
+    /// no per-request prefill/decode boundary, so the whole execution
+    /// window books to `Decode` in the stage breakdown (DESIGN.md §16).
     fn finish_batch(
         &mut self,
         requests: Vec<Queued>,
         outcome: anyhow::Result<Vec<Vec<i32>>>,
         factor: bool,
+        t_exec: Instant,
     ) {
         match outcome {
             Ok(outputs) => {
                 let now = self.clock.now();
-                for (r, tokens) in requests.into_iter().zip(outputs) {
+                for (mut r, tokens) in requests.into_iter().zip(outputs) {
+                    r.payload.2.advance(t_exec, Stage::Decode);
                     let e2e = now.duration_since(r.enqueued);
                     if let Some(h) = self.metrics.e2e_latency.as_mut() {
                         h.record(e2e);
                     }
                     self.metrics.requests += 1;
                     self.metrics.tokens_generated += tokens.len() as u64;
-                    let _ = r.payload.1.send(Ok(GenResponse { tokens, e2e }));
+                    self.respond_ok(r, tokens, e2e, None, now);
                 }
                 self.metrics.batches += 1;
                 if factor {
@@ -1262,8 +1394,10 @@ impl Worker {
                 // a contained compute panic or decode error fails only
                 // this batch's requests (DESIGN.md §15)
                 let err = ServeError::new(FailKind::Internal, format!("{e:#}"));
-                for r in requests {
-                    let _ = r.payload.1.send(Err(err.clone()));
+                let now = self.clock.now();
+                for mut r in requests {
+                    r.payload.2.advance(t_exec, Stage::Decode);
+                    self.fail_request(r, &err, now);
                 }
             }
         }
@@ -1275,8 +1409,9 @@ impl Worker {
     /// freed lanes re-admitted mid-flight.
     #[cfg(not(feature = "pjrt"))]
     fn run_group_merged(&mut self, adapter: AdapterId, requests: Vec<Queued>) {
+        let t_exec = self.clock.now();
         let outcome = self.decode_group(Some(adapter), &requests, &[]);
-        self.finish_group(requests, outcome, false, 1);
+        self.finish_group(requests, outcome, false, 1, t_exec);
     }
 
     /// Decode one heterogeneous factor-form group: per-request adapters
@@ -1290,8 +1425,9 @@ impl Worker {
         if valid.is_empty() {
             return;
         }
+        let t_exec = self.clock.now();
         let outcome = self.decode_group(None, &valid, &adapters);
-        self.finish_group(valid, outcome, true, counted);
+        self.finish_group(valid, outcome, true, counted, t_exec);
     }
 
     /// Run one decode group through `scheduler::run_continuous` over the
@@ -1305,7 +1441,7 @@ impl Worker {
         merged: Option<AdapterId>,
         requests: &[Queued],
         adapters: &[Arc<StoredAdapter>],
-    ) -> anyhow::Result<Vec<Option<(Vec<i32>, RequestOutcome)>>> {
+    ) -> anyhow::Result<Vec<Option<(Vec<i32>, RequestOutcome, Option<Instant>)>>> {
         let cfg = &self.shared.base.cfg;
         let (t_len, vocab) = (cfg.seq_len, cfg.vocab);
         let (lanes, prog) = {
@@ -1340,7 +1476,8 @@ impl Worker {
                 cancel: req.options.cancel.clone(),
             });
         }
-        let mut outputs: Vec<Option<(Vec<i32>, RequestOutcome)>> = vec![None; requests.len()];
+        let mut outputs: Vec<Option<(Vec<i32>, RequestOutcome, Option<Instant>)>> =
+            vec![None; requests.len()];
         let mut ttfts: Vec<Duration> = Vec::with_capacity(requests.len());
         let ccfg =
             ContinuousConfig { lanes, seq_len: t_len, vocab, prefill_chunk: self.prefill_chunk };
@@ -1354,7 +1491,7 @@ impl Worker {
                 if fin.outcome == RequestOutcome::Done {
                     ttfts.push(fin.ttft);
                 }
-                outputs[fin.id as usize] = Some((fin.tokens, fin.outcome));
+                outputs[fin.id as usize] = Some((fin.tokens, fin.outcome, fin.first_token));
             })
         };
         match run {
@@ -1390,51 +1527,65 @@ impl Worker {
     fn finish_group(
         &mut self,
         requests: Vec<Queued>,
-        outcome: anyhow::Result<Vec<Option<(Vec<i32>, RequestOutcome)>>>,
+        outcome: anyhow::Result<Vec<Option<(Vec<i32>, RequestOutcome, Option<Instant>)>>>,
         factor: bool,
         counted: u64,
+        t_exec: Instant,
     ) {
         match outcome {
             Ok(outputs) => {
                 let now = self.clock.now();
-                for (r, out) in requests.into_iter().zip(outputs) {
+                for (mut r, out) in requests.into_iter().zip(outputs) {
+                    // entering execution ends the wait stages; the window
+                    // up to the first consumed token is prefill, the rest
+                    // decode (DESIGN.md §16)
+                    r.payload.2.advance(t_exec, Stage::Prefill);
                     match out {
-                        Some((tokens, RequestOutcome::Done)) => {
+                        Some((tokens, RequestOutcome::Done, first)) => {
                             let e2e = now.duration_since(r.enqueued);
                             if let Some(h) = self.metrics.e2e_latency.as_mut() {
                                 h.record(e2e);
                             }
                             self.metrics.requests += 1;
                             self.metrics.tokens_generated += tokens.len() as u64;
-                            let _ = r.payload.1.send(Ok(GenResponse { tokens, e2e }));
+                            self.respond_ok(r, tokens, e2e, first, now);
                         }
-                        Some((tokens, RequestOutcome::Timeout)) => {
+                        Some((tokens, RequestOutcome::Timeout, first)) => {
                             self.metrics.timeouts += 1;
-                            let _ = r.payload.1.send(Err(ServeError::new(
+                            if let Some(ft) = first {
+                                r.payload.2.advance(ft, Stage::Decode);
+                            }
+                            let err = ServeError::new(
                                 FailKind::Timeout,
                                 format!(
                                     "deadline exceeded after {} generated token(s)",
                                     tokens.len()
                                 ),
-                            )));
+                            );
+                            self.fail_request(r, &err, now);
                         }
-                        Some((tokens, RequestOutcome::Cancelled)) => {
+                        Some((tokens, RequestOutcome::Cancelled, first)) => {
                             self.metrics.cancellations += 1;
-                            let _ = r.payload.1.send(Err(ServeError::new(
+                            if let Some(ft) = first {
+                                r.payload.2.advance(ft, Stage::Decode);
+                            }
+                            let err = ServeError::new(
                                 FailKind::Cancelled,
                                 format!(
                                     "cancelled after {} generated token(s)",
                                     tokens.len()
                                 ),
-                            )));
+                            );
+                            self.fail_request(r, &err, now);
                         }
                         None => {
                             // unreachable: run_continuous completes every
                             // admitted request or errors the whole group
-                            let _ = r.payload.1.send(Err(ServeError::new(
+                            let err = ServeError::new(
                                 FailKind::Internal,
                                 "request missed by scheduler",
-                            )));
+                            );
+                            self.fail_request(r, &err, now);
                         }
                     }
                 }
@@ -1447,8 +1598,10 @@ impl Worker {
                 // a contained compute panic or session error fails only
                 // this group's requests (DESIGN.md §15)
                 let err = ServeError::new(FailKind::Internal, format!("{e:#}"));
-                for r in requests {
-                    let _ = r.payload.1.send(Err(err.clone()));
+                let now = self.clock.now();
+                for mut r in requests {
+                    r.payload.2.advance(t_exec, Stage::Prefill);
+                    self.fail_request(r, &err, now);
                 }
             }
         }

@@ -25,6 +25,7 @@ use super::registry::{AdapterId, AdapterRegistry, StoredAdapter};
 use super::tier::{AdapterTier, DiskErrorFault, DiskFault, LoadHook, TierEventHook};
 use crate::clock::Clock;
 use crate::model::BaseWeights;
+use crate::obs::{StageBreakdown, TraceRecorder};
 use anyhow::{bail, Context};
 use std::path::PathBuf;
 use std::str::FromStr;
@@ -183,6 +184,10 @@ pub struct CoordinatorConfig {
     /// this many pending are shed with [`FailKind::Overloaded`] and a
     /// `retry_after` hint (HTTP-429 semantics). `None` = unbounded.
     pub queue_cap: Option<usize>,
+    /// Request-lifecycle span recorder (DESIGN.md §16). Executor and
+    /// merge-pool threads record stage/job spans into per-thread shards
+    /// of this recorder; `None` (the default) records nothing.
+    pub trace: Option<TraceRecorder>,
 }
 
 impl CoordinatorConfig {
@@ -204,6 +209,7 @@ impl CoordinatorConfig {
             tier: None,
             request_timeout: None,
             queue_cap: None,
+            trace: None,
         }
     }
 
@@ -270,6 +276,12 @@ impl CoordinatorConfig {
         self
     }
 
+    /// Builder sugar: record request-lifecycle spans into `trace`.
+    pub fn with_trace(mut self, trace: TraceRecorder) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
     /// Buckets sorted ascending, deduplicated, validated.
     fn normalized_buckets(&self) -> anyhow::Result<Vec<usize>> {
         let mut b = self.buckets.clone();
@@ -295,11 +307,22 @@ pub struct GenRequest {
     pub max_new: usize,
     /// Per-request lifecycle options (DESIGN.md §15).
     pub options: RequestOptions,
+    /// Caller-assigned trace tag: the identity of this request's track
+    /// in the lifecycle trace (DESIGN.md §16). The scenario driver
+    /// stamps submission indices here so exported traces are stable
+    /// across thread interleavings; `0` for untagged callers.
+    pub tag: u64,
 }
 
 impl GenRequest {
     pub fn new(adapter: AdapterId, prompt: Vec<i32>, max_new: usize) -> Self {
-        Self { adapter, prompt, max_new, options: RequestOptions::default() }
+        Self { adapter, prompt, max_new, options: RequestOptions::default(), tag: 0 }
+    }
+
+    /// Builder sugar: tag this request's lifecycle-trace track.
+    pub fn with_tag(mut self, tag: u64) -> Self {
+        self.tag = tag;
+        self
     }
 
     /// Builder sugar: absolute deadline for this request.
@@ -337,6 +360,9 @@ pub struct GenResponse {
     pub tokens: Vec<i32>,
     /// End-to-end latency (enqueue → response).
     pub e2e: Duration,
+    /// Per-stage latency attribution (DESIGN.md §16). Telescoping by
+    /// construction: `stages.sum() == e2e` exactly.
+    pub stages: StageBreakdown,
 }
 
 /// Why a request failed (DESIGN.md §15). The typed channel lets
@@ -382,15 +408,30 @@ pub struct ServeError {
     /// derived from queue depth).
     pub retry_after: Option<Duration>,
     pub msg: String,
+    /// Stage attribution up to the failure (DESIGN.md §16): the
+    /// breakdown's `terminal` names the stage the failure struck in.
+    /// `None` on failures raised outside the tracked request path.
+    pub stages: Option<StageBreakdown>,
 }
 
 impl ServeError {
     pub fn new(kind: FailKind, msg: impl Into<String>) -> Self {
-        Self { kind, retry_after: None, msg: msg.into() }
+        Self { kind, retry_after: None, msg: msg.into(), stages: None }
     }
 
     pub fn overloaded(retry_after: Duration, msg: impl Into<String>) -> Self {
-        Self { kind: FailKind::Overloaded, retry_after: Some(retry_after), msg: msg.into() }
+        Self {
+            kind: FailKind::Overloaded,
+            retry_after: Some(retry_after),
+            msg: msg.into(),
+            stages: None,
+        }
+    }
+
+    /// Attach the failed request's stage breakdown.
+    pub fn with_stages(mut self, stages: StageBreakdown) -> Self {
+        self.stages = Some(stages);
+        self
     }
 }
 
@@ -466,6 +507,7 @@ impl Coordinator {
             host_merge_fn(Arc::clone(&shared), cfg.merge_hook.clone()),
             host_fetch_fn(Arc::clone(&shared)),
             cfg.clock.clone(),
+            cfg.trace.clone(),
         );
         let merge_stats = merge_pool.stats();
         let wcfg = WorkerConfig {
@@ -489,6 +531,7 @@ impl Coordinator {
             predictive_prefetch: cfg.tier.as_ref().is_some_and(|t| t.predictive_prefetch),
             request_timeout: cfg.request_timeout,
             queue_cap: cfg.queue_cap,
+            trace: cfg.trace.clone(),
         };
 
         let mut txs = Vec::with_capacity(n_workers);

@@ -38,6 +38,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod loraquant;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod scenario;

@@ -10,13 +10,14 @@
 //!                    [--prefill-chunk N] [--merge-strategy merged|factor|auto] \
 //!                    [--adapter-dir DIR] [--factor-cache-kb N] [--disk-latency-ms N] \
 //!                    [--request-timeout-ms N] [--queue-cap N] [--disk-retries N] \
-//!                    [--disk-backoff-ms N]
+//!                    [--disk-backoff-ms N] [--metrics-out PATH]
 //! loraquant serve-sim --requests 200 --rate 200 --adapters 4 --merge-strategy all \
 //!                    [--workers 4] [--compute-threads 2] [--zipf 1.1] [--seed 7] \
 //!                    [--slow-merge-ms 50] [--churn] [--prefetch] [--log] \
 //!                    [--lockstep] [--prefill-chunk N] [--golden PATH] [--model NAME] \
 //!                    [--tiered] [--factor-cache-kb N] [--disk-latency-ms N] \
-//!                    [--predictive-prefetch]
+//!                    [--predictive-prefetch] [--trace-out PATH] [--metrics-out PATH] \
+//!                    [--no-trace]
 //!
 //! `--lockstep` disables the continuous-batching scheduler (DESIGN.md
 //! §11) and decodes batch by batch — the comparison baseline for the
@@ -37,6 +38,12 @@
 //! **virtual clock** (DESIGN.md §9): seconds of simulated trace run in
 //! milliseconds of wall clock with a deterministic event log. Without
 //! `--model` it synthesizes a hermetic model, so it needs no artifacts.
+//! `--trace-out` writes the request-lifecycle trace as Chrome
+//! trace-event JSON (load in Perfetto / `chrome://tracing`) and
+//! `--metrics-out` the Prometheus text exposition (DESIGN.md §16); with
+//! `--merge-strategy all` the files get a `.{strategy}` suffix like
+//! `--golden`. `--no-trace` disables span recording (the bench
+//! baseline).
 //!
 //! Everything else runs without python (`make artifacts` must have run).
 
@@ -44,8 +51,8 @@ use anyhow::{bail, Context};
 use loraquant::adapter::{store, LoraAdapter};
 use loraquant::cli::Args;
 use loraquant::coordinator::{
-    Coordinator, CoordinatorConfig, DiskFault, GenRequest, MergeStrategy, StoredAdapter,
-    TierConfig,
+    pool_registry, Coordinator, CoordinatorConfig, DiskFault, GenRequest, MergeStrategy,
+    StoredAdapter, TierConfig,
 };
 use loraquant::eval::{evaluate, EvalSet};
 use loraquant::loraquant::{quantize_site, LoraQuantConfig, QuantizedLora};
@@ -272,6 +279,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    if let Some(path) = args.opt("metrics-out") {
+        let snaps = coord.metrics_per_worker()?;
+        let quarantined = coord.with_registry(|r| r.quarantined_ids().len());
+        std::fs::write(path, pool_registry(&snaps, quarantined, None).render())?;
+        println!("wrote {path}");
+    }
     coord.shutdown();
     let _ = join.join();
     Ok(())
@@ -351,6 +364,7 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
         }
         s => vec![s.parse()?],
     };
+    let multi = strategies.len() > 1;
 
     for strategy in strategies {
         let spec = ScenarioSpec {
@@ -387,6 +401,7 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
                 .transpose()?,
             disk_retries: args.usize_or("disk-retries", 0)? as u32,
             disk_backoff: Duration::from_millis(args.usize_or("disk-backoff-ms", 0)? as u64),
+            trace: !args.has_flag("no-trace"),
         };
         let run = run_scenario(&spec, &env)?;
         print!("{}", run.summary.render());
@@ -397,6 +412,20 @@ fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
             let file = format!("{path}.{strategy}.log");
             std::fs::write(&file, run.log())?;
             println!("wrote {file} ({} events)", run.events.len());
+        }
+        // one strategy → the exact path (Perfetto-loadable as named);
+        // `all` → a `.{strategy}` suffix like --golden
+        if let Some(path) = args.opt("trace-out") {
+            let file =
+                if multi { format!("{path}.{strategy}") } else { path.to_string() };
+            std::fs::write(&file, run.trace_json())?;
+            println!("wrote {file} ({} spans)", run.spans.len());
+        }
+        if let Some(path) = args.opt("metrics-out") {
+            let file =
+                if multi { format!("{path}.{strategy}") } else { path.to_string() };
+            std::fs::write(&file, &run.metrics_text)?;
+            println!("wrote {file}");
         }
         println!();
     }

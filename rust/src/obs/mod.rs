@@ -1,0 +1,24 @@
+//! Observability: deterministic request-lifecycle tracing,
+//! stage-attributed latency, and Prometheus-style metrics exposition
+//! (DESIGN.md §16).
+//!
+//! [`trace`] records typed stage and job spans through per-thread ring
+//! buffers stamped from the shared [`crate::clock::Clock`]; under the
+//! virtual clock the drained, canonically-ordered trace is
+//! byte-identical across runs, compute-thread counts, and worker
+//! counts — the same discipline as `scenario/events.rs`. [`prom`] is a
+//! minimal counters/gauges/histograms registry rendering the
+//! Prometheus text exposition format with a stable line order.
+//!
+//! Nothing in here depends on the coordinator: the pool, the merge
+//! workers, and the scenario driver all consume these types, never the
+//! other way around.
+
+pub mod prom;
+pub mod trace;
+
+pub use prom::{MetricsRegistry, Sample};
+pub use trace::{
+    chrome_trace_json, Span, SpanKind, Stage, StageBreakdown, StageTrack, TraceHandle,
+    TraceRecorder, STAGES,
+};

@@ -1,0 +1,213 @@
+//! Minimal Prometheus text-format metrics registry (DESIGN.md §16).
+//!
+//! A [`MetricsRegistry`] is a point-in-time snapshot: callers *set*
+//! fully-aggregated values (the pool's counters and gauges already
+//! exist elsewhere; this layer only names and renders them). Rendering
+//! is deterministic — metrics sort by name, samples by label string —
+//! so the exposition can be golden-tested byte-for-byte.
+//!
+//! Conventions: counters end in `_total`, histogram/duration metrics
+//! carry a `_us` unit suffix (bucket edges are integral microseconds),
+//! and every metric in this repo is prefixed `lq_`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One sample value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Sample {
+    Counter(u64),
+    Gauge(f64),
+    /// Full-bucket histogram: `(upper edge, cumulative count)` pairs in
+    /// ascending edge order (the `+Inf` row is appended from `count` at
+    /// render time), plus the running sum and total count.
+    Histogram { buckets: Vec<(u64, u64)>, sum: f64, count: u64 },
+}
+
+struct Metric {
+    help: String,
+    /// Prometheus TYPE: `counter` | `gauge` | `histogram`.
+    kind: &'static str,
+    /// Serialized label pairs (without braces, e.g. `worker="0"`) →
+    /// sample. BTreeMap keeps the render order stable.
+    samples: BTreeMap<String, Sample>,
+}
+
+/// A metrics snapshot rendering Prometheus text exposition format.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    metrics: BTreeMap<String, Metric>,
+}
+
+/// Serialize label pairs in the order given (callers pass a fixed
+/// order, so identical inputs render identical lines). Values are
+/// escaped per the exposition format.
+fn label_str(labels: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+        let _ = write!(out, "{k}=\"{escaped}\"");
+    }
+    out
+}
+
+/// `123` for whole numbers, shortest-roundtrip decimals otherwise —
+/// both deterministic.
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn set(&mut self, name: &str, help: &str, kind: &'static str, labels: &[(&str, &str)], s: Sample) {
+        self.metrics
+            .entry(name.to_string())
+            .or_insert_with(|| Metric { help: help.to_string(), kind, samples: BTreeMap::new() })
+            .samples
+            .insert(label_str(labels), s);
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: u64) {
+        self.set(name, help, "counter", labels, Sample::Counter(v));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        self.set(name, help, "gauge", labels, Sample::Gauge(v));
+    }
+
+    /// `buckets` are `(upper edge, cumulative count)` in ascending edge
+    /// order; `count` is the total (and the implied `+Inf` row).
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        buckets: Vec<(u64, u64)>,
+        sum: f64,
+        count: u64,
+    ) {
+        self.set(name, help, "histogram", labels, Sample::Histogram { buckets, sum, count });
+    }
+
+    /// Render the exposition text. Stable: metrics in name order,
+    /// samples in label order, one trailing newline.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, m) in &self.metrics {
+            let _ = writeln!(out, "# HELP {name} {}", m.help);
+            let _ = writeln!(out, "# TYPE {name} {}", m.kind);
+            for (labels, sample) in &m.samples {
+                match sample {
+                    Sample::Counter(v) => {
+                        let _ = writeln!(out, "{name}{} {v}", braced(labels));
+                    }
+                    Sample::Gauge(v) => {
+                        let _ = writeln!(out, "{name}{} {}", braced(labels), fmt_f64(*v));
+                    }
+                    Sample::Histogram { buckets, sum, count } => {
+                        for (le, cum) in buckets {
+                            let _ = writeln!(
+                                out,
+                                "{name}_bucket{} {cum}",
+                                braced(&join(labels, &format!("le=\"{le}\"")))
+                            );
+                        }
+                        let _ = writeln!(
+                            out,
+                            "{name}_bucket{} {count}",
+                            braced(&join(labels, "le=\"+Inf\""))
+                        );
+                        let _ = writeln!(out, "{name}_sum{} {}", braced(labels), fmt_f64(*sum));
+                        let _ = writeln!(out, "{name}_count{} {count}", braced(labels));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn braced(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+fn join(labels: &str, extra: &str) -> String {
+    if labels.is_empty() {
+        extra.to_string()
+    } else {
+        format!("{labels},{extra}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_sorted_and_stable() {
+        let mut reg = MetricsRegistry::new();
+        reg.gauge("lq_queue_depth", "Admission-queued requests.", &[("worker", "1")], 3.0);
+        reg.gauge("lq_queue_depth", "Admission-queued requests.", &[("worker", "0")], 0.5);
+        reg.counter("lq_requests_total", "Requests admitted.", &[], 42);
+        let text = reg.render();
+        let expected = "\
+# HELP lq_queue_depth Admission-queued requests.
+# TYPE lq_queue_depth gauge
+lq_queue_depth{worker=\"0\"} 0.5
+lq_queue_depth{worker=\"1\"} 3
+# HELP lq_requests_total Requests admitted.
+# TYPE lq_requests_total counter
+lq_requests_total 42
+";
+        assert_eq!(text, expected);
+        // Insertion order must not matter.
+        let mut reg2 = MetricsRegistry::new();
+        reg2.counter("lq_requests_total", "Requests admitted.", &[], 42);
+        reg2.gauge("lq_queue_depth", "Admission-queued requests.", &[("worker", "0")], 0.5);
+        reg2.gauge("lq_queue_depth", "Admission-queued requests.", &[("worker", "1")], 3.0);
+        assert_eq!(reg2.render(), expected);
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_and_inf() {
+        let mut reg = MetricsRegistry::new();
+        reg.histogram(
+            "lq_e2e_latency_us",
+            "End-to-end latency (µs).",
+            &[],
+            vec![(2, 1), (4, 3)],
+            7.0,
+            4,
+        );
+        let text = reg.render();
+        let expected = "\
+# HELP lq_e2e_latency_us End-to-end latency (µs).
+# TYPE lq_e2e_latency_us histogram
+lq_e2e_latency_us_bucket{le=\"2\"} 1
+lq_e2e_latency_us_bucket{le=\"4\"} 3
+lq_e2e_latency_us_bucket{le=\"+Inf\"} 4
+lq_e2e_latency_us_sum 7
+lq_e2e_latency_us_count 4
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn label_values_escape() {
+        assert_eq!(label_str(&[("k", "a\"b\\c")]), "k=\"a\\\"b\\\\c\"");
+    }
+}

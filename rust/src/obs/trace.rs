@@ -1,0 +1,595 @@
+//! Request-lifecycle span recording on the shared [`Clock`] timeline
+//! (DESIGN.md §16).
+//!
+//! ## Determinism contract
+//!
+//! Every span carries offsets from a fixed trace **origin**, stamped
+//! from the pool's [`crate::clock::Clock`]. Under the virtual clock the
+//! scenario driver only advances time at quiescence barriers, so every
+//! worker and merge thread reads a *frozen* clock between advances: the
+//! timestamp a span gets is a function of the schedule, never of thread
+//! interleaving. Span identity is logical — request tag and adapter id,
+//! never a worker index or OS thread id (routing changes with the
+//! worker count; thread ids change run to run). Draining canonically
+//! sorts the per-thread ring buffers with the same discipline as
+//! `scenario/events.rs`, so the exported trace is **byte-identical
+//! across runs, compute-thread counts, and worker counts**.
+//!
+//! ## Stage accounting
+//!
+//! [`StageTrack`] attributes a request's lifetime to stages by
+//! boundary differencing: each transition adds `now − last_boundary`
+//! to the stage being left, and retirement attributes the tail to the
+//! terminal stage. The resulting [`StageBreakdown`] therefore
+//! telescopes — `queued + merge_wait + fetch_wait + prefill + decode
+//! == e2e` holds *by construction*, on any clock, faulted or not.
+//! Exported stage spans are synthesized from the cumulative breakdown
+//! as one contiguous run per visited stage (in pipeline order: queued,
+//! fetch, merge, prefill, decode); the breakdown is the source of
+//! truth, the spans visualize it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Lifecycle stage of a request inside the serving pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Stage {
+    /// Admission-queued behind the dynamic batcher's release deadline.
+    #[default]
+    Queued = 0,
+    /// Parked behind a dequant+merge job on the merge pool.
+    MergeWait = 1,
+    /// Parked behind a disk-tier factor fetch (incl. retries/backoff).
+    FetchWait = 2,
+    /// Prompt prefill (admission passes, chunked or monolithic).
+    Prefill = 3,
+    /// Decoding on a live lane (first token → retirement).
+    Decode = 4,
+}
+
+/// All stages, in `StageBreakdown` accounting order.
+pub const STAGES: [Stage; 5] =
+    [Stage::Queued, Stage::MergeWait, Stage::FetchWait, Stage::Prefill, Stage::Decode];
+
+/// Stage-span synthesis order: the tiered pipeline fetches factors
+/// before it merges, so exported timelines read
+/// queued → fetch → merge → prefill → decode.
+const SYNTH_ORDER: [Stage; 5] =
+    [Stage::Queued, Stage::FetchWait, Stage::MergeWait, Stage::Prefill, Stage::Decode];
+
+impl Stage {
+    /// Span name in the exported Chrome trace (the DESIGN.md §16
+    /// taxonomy).
+    pub fn span_name(self) -> &'static str {
+        match self {
+            Stage::Queued => "Queued",
+            Stage::MergeWait => "MergeWait",
+            Stage::FetchWait => "FetchWait",
+            Stage::Prefill => "PrefillChunk",
+            Stage::Decode => "DecodeActive",
+        }
+    }
+
+    /// Kebab-case label for metrics and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Queued => "queued",
+            Stage::MergeWait => "merge-wait",
+            Stage::FetchWait => "fetch-wait",
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+        }
+    }
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Cumulative per-stage durations of one retired request. Telescoping
+/// (see the module docs): [`Self::sum`] equals the end-to-end latency
+/// exactly, so these exact durations — not the bucketed
+/// [`crate::coordinator::Histogram`] — are the source of truth for
+/// assertions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StageBreakdown {
+    pub queued: Duration,
+    pub merge_wait: Duration,
+    pub fetch_wait: Duration,
+    pub prefill: Duration,
+    pub decode: Duration,
+    /// Stage the request was in when it retired. For failures this
+    /// names where the [`crate::coordinator::FailKind`] struck (a
+    /// queued timeout retires in `Queued`, a mid-decode cancel in
+    /// `Decode`, a merge-panic casualty in `MergeWait`, …).
+    pub terminal: Stage,
+}
+
+impl StageBreakdown {
+    pub fn get(&self, s: Stage) -> Duration {
+        match s {
+            Stage::Queued => self.queued,
+            Stage::MergeWait => self.merge_wait,
+            Stage::FetchWait => self.fetch_wait,
+            Stage::Prefill => self.prefill,
+            Stage::Decode => self.decode,
+        }
+    }
+
+    fn get_mut(&mut self, s: Stage) -> &mut Duration {
+        match s {
+            Stage::Queued => &mut self.queued,
+            Stage::MergeWait => &mut self.merge_wait,
+            Stage::FetchWait => &mut self.fetch_wait,
+            Stage::Prefill => &mut self.prefill,
+            Stage::Decode => &mut self.decode,
+        }
+    }
+
+    /// Σ stages — equals the request's end-to-end latency exactly.
+    pub fn sum(&self) -> Duration {
+        self.queued + self.merge_wait + self.fetch_wait + self.prefill + self.decode
+    }
+}
+
+/// Boundary-differencing stage accounting for one in-flight request.
+///
+/// Created at admission; [`Self::advance`]d at every stage transition;
+/// consumed by [`Self::finish`] at retirement. Monotone inputs only
+/// (all instants come from one `Clock`), but every subtraction
+/// saturates so a pathological timeline degrades to zero rather than
+/// panicking.
+#[derive(Debug, Clone)]
+pub struct StageTrack {
+    started: Instant,
+    last: Instant,
+    current: Stage,
+    acc: StageBreakdown,
+}
+
+impl StageTrack {
+    /// Start tracking at admission time (stage = `Queued`).
+    pub fn begin(now: Instant) -> Self {
+        Self { started: now, last: now, current: Stage::Queued, acc: StageBreakdown::default() }
+    }
+
+    /// The stage the request is currently in.
+    pub fn current(&self) -> Stage {
+        self.current
+    }
+
+    /// Admission instant (the `e2e` epoch).
+    pub fn started(&self) -> Instant {
+        self.started
+    }
+
+    /// Leave the current stage at `now`, attributing the elapsed time
+    /// to it, and enter `next`.
+    pub fn advance(&mut self, now: Instant, next: Stage) {
+        *self.acc.get_mut(self.current) += now.saturating_duration_since(self.last);
+        self.last = now;
+        self.current = next;
+    }
+
+    /// Retire at `now`: the tail is attributed to the current stage,
+    /// which becomes the breakdown's `terminal`.
+    pub fn finish(mut self, now: Instant) -> StageBreakdown {
+        *self.acc.get_mut(self.current) += now.saturating_duration_since(self.last);
+        self.acc.terminal = self.current;
+        self.acc
+    }
+}
+
+/// What a span describes. Identity is logical (request tag, adapter
+/// id) — see the module docs' determinism contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One lifecycle stage of a request (synthesized at retirement).
+    Stage { req: u64, adapter: u64, stage: Stage },
+    /// Terminal marker: the request retired with a response.
+    Retired { req: u64, adapter: u64 },
+    /// Terminal marker: the request failed; `kind` is the
+    /// [`crate::coordinator::FailKind`] kebab-case name.
+    Failed { req: u64, adapter: u64, kind: String },
+    /// A dequant+merge job on the merge pool (`ok = false`: the job
+    /// panicked or errored; containment is the pool's problem).
+    MergeJob { adapter: u64, ok: bool },
+    /// A disk-tier factor fetch on the merge pool (one span covers the
+    /// whole retry/backoff loop).
+    FetchJob { adapter: u64, ok: bool },
+}
+
+impl SpanKind {
+    /// Canonical same-instant ordering rank (cf.
+    /// `scenario::EventKind::rank`).
+    fn rank(&self) -> u8 {
+        match self {
+            SpanKind::Stage { .. } => 0,
+            SpanKind::Retired { .. } => 1,
+            SpanKind::Failed { .. } => 2,
+            SpanKind::MergeJob { .. } => 3,
+            SpanKind::FetchJob { .. } => 4,
+        }
+    }
+
+    fn adapter(&self) -> u64 {
+        match *self {
+            SpanKind::Stage { adapter, .. }
+            | SpanKind::Retired { adapter, .. }
+            | SpanKind::Failed { adapter, .. }
+            | SpanKind::MergeJob { adapter, .. }
+            | SpanKind::FetchJob { adapter, .. } => adapter,
+        }
+    }
+
+    fn req(&self) -> u64 {
+        match *self {
+            SpanKind::Stage { req, .. }
+            | SpanKind::Retired { req, .. }
+            | SpanKind::Failed { req, .. } => req,
+            SpanKind::MergeJob { .. } | SpanKind::FetchJob { .. } => 0,
+        }
+    }
+
+    fn detail(&self) -> u8 {
+        match *self {
+            SpanKind::Stage { stage, .. } => stage as u8,
+            SpanKind::MergeJob { ok, .. } | SpanKind::FetchJob { ok, .. } => u8::from(ok),
+            _ => 0,
+        }
+    }
+
+    fn fail_kind(&self) -> &str {
+        match self {
+            SpanKind::Failed { kind, .. } => kind,
+            _ => "",
+        }
+    }
+}
+
+/// One recorded span: `[t0, t1]` offsets from the trace origin.
+/// Instant markers have `t0 == t1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub t0: Duration,
+    pub t1: Duration,
+    pub kind: SpanKind,
+}
+
+/// Canonical total order: `(t0, kind rank, adapter, req, detail, t1)`,
+/// then the failure-kind string. Any remaining ties are identical
+/// spans, so the order is schedule-deterministic.
+pub fn sort_spans(spans: &mut [Span]) {
+    spans.sort_by(|a, b| {
+        let ka = (a.t0, a.kind.rank(), a.kind.adapter(), a.kind.req(), a.kind.detail(), a.t1);
+        let kb = (b.t0, b.kind.rank(), b.kind.adapter(), b.kind.req(), b.kind.detail(), b.t1);
+        ka.cmp(&kb).then_with(|| a.kind.fail_kind().cmp(b.kind.fail_kind()))
+    });
+}
+
+struct RecorderInner {
+    origin: Instant,
+    /// Ring-buffer capacity per shard; the oldest span is dropped (and
+    /// counted) on overflow so recording never blocks or allocates
+    /// unboundedly.
+    cap: usize,
+    shards: Mutex<Vec<Arc<Mutex<VecDeque<Span>>>>>,
+    dropped: AtomicU64,
+}
+
+/// A cloneable span recorder. Each recording thread takes its own
+/// [`TraceHandle`] (one ring-buffer shard, one mutex nobody else
+/// touches on the hot path); [`Self::drain`] collects and canonically
+/// sorts all shards at a quiescence barrier.
+#[derive(Clone)]
+pub struct TraceRecorder {
+    inner: Arc<RecorderInner>,
+}
+
+// `CoordinatorConfig`/`WorkerConfig` derive Debug; the shard contents
+// are noise, so render opaquely like `MergeHook`.
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("TraceRecorder(..)")
+    }
+}
+
+impl TraceRecorder {
+    /// Default per-thread ring capacity: ~6 spans per request means
+    /// this absorbs >10k retirements per thread between drains.
+    pub const DEFAULT_CAP: usize = 1 << 16;
+
+    /// A recorder whose spans are offsets from `origin` (the scenario
+    /// trace start, or pool startup for a live server).
+    pub fn new(origin: Instant, cap_per_thread: usize) -> Self {
+        Self {
+            inner: Arc::new(RecorderInner {
+                origin,
+                cap: cap_per_thread.max(1),
+                shards: Mutex::new(Vec::new()),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn origin(&self) -> Instant {
+        self.inner.origin
+    }
+
+    /// Register a fresh per-thread shard. Call once per recording
+    /// thread (workers call this at thread start, so a respawned
+    /// phoenix thread gets its own shard too).
+    pub fn handle(&self) -> TraceHandle {
+        let shard = Arc::new(Mutex::new(VecDeque::new()));
+        self.inner
+            .shards
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(Arc::clone(&shard));
+        TraceHandle { inner: Arc::clone(&self.inner), shard }
+    }
+
+    /// Drain every shard and return the canonically-sorted spans. Only
+    /// deterministic when the pool is quiescent (the scenario driver
+    /// drains after its final metrics barrier).
+    pub fn drain(&self) -> Vec<Span> {
+        let shards = self.inner.shards.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = Vec::new();
+        for shard in shards.iter() {
+            let mut buf = shard.lock().unwrap_or_else(|e| e.into_inner());
+            out.extend(buf.drain(..));
+        }
+        drop(shards);
+        sort_spans(&mut out);
+        out
+    }
+
+    /// Spans discarded to ring overflow since construction.
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// One thread's recording endpoint (see [`TraceRecorder::handle`]).
+pub struct TraceHandle {
+    inner: Arc<RecorderInner>,
+    shard: Arc<Mutex<VecDeque<Span>>>,
+}
+
+impl TraceHandle {
+    /// Record a `[t0, t1]` span; instants convert to origin offsets
+    /// here (clamping below the origin, and `t1` below `t0`, to zero
+    /// length rather than panicking).
+    pub fn span(&self, t0: Instant, t1: Instant, kind: SpanKind) {
+        let a = t0.saturating_duration_since(self.inner.origin);
+        let b = t1.saturating_duration_since(self.inner.origin).max(a);
+        self.push(Span { t0: a, t1: b, kind });
+    }
+
+    /// Record an instant marker.
+    pub fn instant(&self, t: Instant, kind: SpanKind) {
+        self.span(t, t, kind);
+    }
+
+    /// Emit one retired request's synthesized stage timeline: a
+    /// contiguous run per visited (non-zero) stage in pipeline order
+    /// from `start`, plus the terminal `Retired`/`Failed` marker.
+    pub fn record_request(
+        &self,
+        req: u64,
+        adapter: u64,
+        start: Instant,
+        b: &StageBreakdown,
+        failed: Option<&str>,
+    ) {
+        let mut cursor = start;
+        for stage in SYNTH_ORDER {
+            let d = b.get(stage);
+            if d.is_zero() {
+                continue;
+            }
+            let end = cursor + d;
+            self.span(cursor, end, SpanKind::Stage { req, adapter, stage });
+            cursor = end;
+        }
+        let kind = match failed {
+            Some(k) => SpanKind::Failed { req, adapter, kind: k.to_string() },
+            None => SpanKind::Retired { req, adapter },
+        };
+        self.instant(cursor, kind);
+    }
+
+    fn push(&self, s: Span) {
+        let mut buf = self.shard.lock().unwrap_or_else(|e| e.into_inner());
+        if buf.len() >= self.inner.cap {
+            buf.pop_front();
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.push_back(s);
+    }
+}
+
+// ---- Chrome trace-event export -----------------------------------------
+
+/// Microseconds with nanosecond decimals — Chrome's `ts`/`dur` unit is
+/// µs and accepts fractional values, so nothing is truncated.
+fn us(d: Duration) -> String {
+    let ns = d.as_nanos();
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+fn event_json(s: &Span) -> String {
+    let dur = us(s.t1.saturating_sub(s.t0));
+    let ts = us(s.t0);
+    match &s.kind {
+        SpanKind::Stage { req, adapter, stage } => format!(
+            "{{\"name\":\"{}\",\"cat\":\"request\",\"ph\":\"X\",\"pid\":0,\"tid\":{req},\
+             \"ts\":{ts},\"dur\":{dur},\"args\":{{\"adapter\":{adapter},\"req\":{req}}}}}",
+            stage.span_name()
+        ),
+        SpanKind::Retired { req, adapter } => format!(
+            "{{\"name\":\"Retired\",\"cat\":\"request\",\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\
+             \"tid\":{req},\"ts\":{ts},\"args\":{{\"adapter\":{adapter},\"req\":{req}}}}}"
+        ),
+        SpanKind::Failed { req, adapter, kind } => format!(
+            "{{\"name\":\"Failed:{kind}\",\"cat\":\"request\",\"ph\":\"i\",\"s\":\"t\",\
+             \"pid\":0,\"tid\":{req},\"ts\":{ts},\
+             \"args\":{{\"adapter\":{adapter},\"req\":{req}}}}}"
+        ),
+        SpanKind::MergeJob { adapter, ok } => format!(
+            "{{\"name\":\"MergeJob\",\"cat\":\"merge\",\"ph\":\"X\",\"pid\":0,\
+             \"tid\":{},\"ts\":{ts},\"dur\":{dur},\
+             \"args\":{{\"adapter\":{adapter},\"ok\":{ok}}}}}",
+            JOB_TID_BASE + adapter
+        ),
+        SpanKind::FetchJob { adapter, ok } => format!(
+            "{{\"name\":\"FetchJob\",\"cat\":\"fetch\",\"ph\":\"X\",\"pid\":0,\
+             \"tid\":{},\"ts\":{ts},\"dur\":{dur},\
+             \"args\":{{\"adapter\":{adapter},\"ok\":{ok}}}}}",
+            JOB_TID_BASE + adapter
+        ),
+    }
+}
+
+/// Request tracks use `tid = req`; merge-pool job tracks live above
+/// this base at `tid = JOB_TID_BASE + adapter`. Both are logical ids,
+/// so the layout (and the bytes) are identical at any worker count.
+const JOB_TID_BASE: u64 = 1_000_000;
+
+/// Render canonically-sorted spans as Chrome trace-event JSON
+/// (`chrome://tracing` / Perfetto's legacy loader). One event per
+/// line; `ts`/`dur` in fractional microseconds.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let mut out = String::with_capacity(32 + spans.len() * 160);
+    out.push_str("{\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        out.push_str(if i == 0 { "\n" } else { ",\n" });
+        out.push_str(&event_json(s));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(base: Instant, ms: u64) -> Instant {
+        base + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn stage_track_telescopes_exactly() {
+        let base = Instant::now();
+        let mut track = StageTrack::begin(base);
+        track.advance(t(base, 3), Stage::FetchWait);
+        track.advance(t(base, 10), Stage::MergeWait);
+        track.advance(t(base, 11), Stage::Prefill);
+        track.advance(t(base, 11), Stage::Decode);
+        let b = track.finish(t(base, 25));
+        assert_eq!(b.queued, Duration::from_millis(3));
+        assert_eq!(b.fetch_wait, Duration::from_millis(7));
+        assert_eq!(b.merge_wait, Duration::from_millis(1));
+        assert_eq!(b.prefill, Duration::ZERO);
+        assert_eq!(b.decode, Duration::from_millis(14));
+        assert_eq!(b.terminal, Stage::Decode);
+        // The invariant the scenario driver asserts per request.
+        assert_eq!(b.sum(), Duration::from_millis(25));
+    }
+
+    #[test]
+    fn stage_track_tail_goes_to_terminal_stage() {
+        let base = Instant::now();
+        let track = StageTrack::begin(base);
+        let b = track.finish(t(base, 5));
+        assert_eq!(b.terminal, Stage::Queued);
+        assert_eq!(b.queued, Duration::from_millis(5));
+        assert_eq!(b.sum(), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn ring_buffer_drops_oldest_and_counts() {
+        let base = Instant::now();
+        let rec = TraceRecorder::new(base, 2);
+        let h = rec.handle();
+        for i in 0..5u64 {
+            h.instant(t(base, i), SpanKind::Retired { req: i, adapter: 0 });
+        }
+        assert_eq!(rec.dropped(), 3);
+        let spans = rec.drain();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].t0, Duration::from_millis(3));
+        assert_eq!(rec.drain().len(), 0, "drain must empty the shards");
+    }
+
+    #[test]
+    fn drain_is_canonical_across_shards() {
+        let base = Instant::now();
+        let rec = TraceRecorder::new(base, 64);
+        let h1 = rec.handle();
+        let h2 = rec.handle();
+        // Same spans pushed to different shards in different orders
+        // must drain identically.
+        h1.instant(t(base, 2), SpanKind::Retired { req: 1, adapter: 0 });
+        h2.span(t(base, 1), t(base, 2), SpanKind::MergeJob { adapter: 0, ok: true });
+        h2.instant(t(base, 1), SpanKind::Failed { req: 0, adapter: 1, kind: "timeout".into() });
+        let a = rec.drain();
+        let h1 = rec.handle();
+        let h2 = rec.handle();
+        h1.instant(t(base, 1), SpanKind::Failed { req: 0, adapter: 1, kind: "timeout".into() });
+        h1.instant(t(base, 2), SpanKind::Retired { req: 1, adapter: 0 });
+        h2.span(t(base, 1), t(base, 2), SpanKind::MergeJob { adapter: 0, ok: true });
+        let b = rec.drain();
+        assert_eq!(a, b);
+        assert_eq!(chrome_trace_json(&a), chrome_trace_json(&b));
+    }
+
+    #[test]
+    fn record_request_synthesizes_contiguous_spans() {
+        let base = Instant::now();
+        let rec = TraceRecorder::new(base, 64);
+        let h = rec.handle();
+        let b = StageBreakdown {
+            queued: Duration::from_millis(2),
+            fetch_wait: Duration::from_millis(3),
+            merge_wait: Duration::ZERO,
+            prefill: Duration::from_millis(1),
+            decode: Duration::from_millis(4),
+            terminal: Stage::Decode,
+        };
+        h.record_request(7, 3, base, &b, None);
+        let spans = rec.drain();
+        // queued, fetch-wait, prefill, decode (merge-wait skipped), + marker
+        assert_eq!(spans.len(), 5);
+        let mut cursor = Duration::ZERO;
+        for s in spans.iter().take(4) {
+            assert_eq!(s.t0, cursor, "stage spans must be contiguous");
+            cursor = s.t1;
+        }
+        assert_eq!(cursor, b.sum());
+        assert!(matches!(spans[4].kind, SpanKind::Retired { req: 7, adapter: 3 }));
+        assert_eq!(spans[4].t0, b.sum());
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let base = Instant::now();
+        let rec = TraceRecorder::new(base, 64);
+        let h = rec.handle();
+        h.span(
+            base,
+            base + Duration::from_nanos(1_500),
+            SpanKind::Stage { req: 0, adapter: 2, stage: Stage::Queued },
+        );
+        let json = chrome_trace_json(&rec.drain());
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"name\":\"Queued\""));
+        assert!(json.contains("\"dur\":1.500"), "ns must survive as fractional µs: {json}");
+        assert!(json.trim_end().ends_with("]}"));
+        assert_eq!(chrome_trace_json(&[]), "{\"traceEvents\":[\n]}\n");
+    }
+}

@@ -1,5 +1,10 @@
 //! The scenario event log: timestamped, canonically ordered, rendered as
 //! stable text lines — the unit golden-trace tests compare.
+//!
+//! The request-lifecycle span trace ([`crate::obs::trace`]) applies the
+//! same canonical-ordering discipline to its per-thread shards, so its
+//! Chrome trace export is byte-reproducible for the same reason this
+//! log is (DESIGN.md §16).
 
 use crate::coordinator::AdapterId;
 use std::time::Duration;

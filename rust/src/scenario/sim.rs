@@ -21,10 +21,12 @@ use super::events::{render, sort_canonical, Event, EventKind};
 use super::spec::{ChurnAction, ClockMode, ScenarioEnv, ScenarioSpec, ScriptedPanic, SlowMerge};
 use crate::clock::{Clock, VirtualClock};
 use crate::coordinator::{
-    AdapterId, CacheStats, Coordinator, CoordinatorConfig, DiskErrorFault, DiskFault, FailKind,
-    GenRequest, GenResponse, LatencyStats, LoadHook, MergeHook, MergeStatsSnapshot, MergeStrategy,
-    ServeError, TierConfig, TierEvent, TierEventHook, WorkerSnapshot,
+    pool_registry, AdapterId, CacheStats, Coordinator, CoordinatorConfig, DiskErrorFault,
+    DiskFault, FailKind, GenRequest, GenResponse, LatencyStats, LoadHook, MergeHook,
+    MergeStatsSnapshot, MergeStrategy, ServeError, ServerMetrics, TierConfig, TierEvent,
+    TierEventHook, WorkerSnapshot,
 };
+use crate::obs::{chrome_trace_json, Span, Stage, StageBreakdown, TraceRecorder, STAGES};
 use crate::eval::tasks::TOKENS;
 use crate::testutil::Rng;
 use crate::workload::{generate, Arrival};
@@ -49,6 +51,19 @@ pub struct ScenarioRun {
     pub events: Vec<Event>,
     /// Per-request generated tokens (`None` = the request failed).
     pub tokens: Vec<Option<Vec<i32>>>,
+    /// Per-request stage breakdown (DESIGN.md §16), indexed like
+    /// `tokens`. Successful requests always carry one (`sum() == e2e`
+    /// exactly); failures carry one when the request was tracked, with
+    /// `terminal` naming the stage the failure struck in.
+    pub stages: Vec<Option<StageBreakdown>>,
+    /// Canonically-sorted lifecycle spans, drained at trace end
+    /// (empty when `spec.trace` is off). Byte-identical across runs,
+    /// compute-thread counts, and worker counts under the virtual
+    /// clock.
+    pub spans: Vec<Span>,
+    /// Prometheus text exposition rendered from the final quiescent
+    /// snapshot (empty when the pool was unreachable).
+    pub metrics_text: String,
     pub summary: ScenarioSummary,
 }
 
@@ -56,6 +71,13 @@ impl ScenarioRun {
     /// The golden-trace artifact: one stable text line per event.
     pub fn log(&self) -> String {
         render(&self.events)
+    }
+
+    /// The Chrome trace-event export of [`Self::spans`]
+    /// (`chrome://tracing` / Perfetto). Byte-identical whenever the
+    /// span list is.
+    pub fn trace_json(&self) -> String {
+        chrome_trace_json(&self.spans)
     }
 }
 
@@ -77,6 +99,12 @@ pub struct ScenarioSummary {
     pub latency: LatencyStats,
     /// Per-adapter latency order statistics (registry id order).
     pub per_adapter: Vec<(AdapterId, LatencyStats)>,
+    /// Pool-wide exact per-stage latency stats over completed requests
+    /// (DESIGN.md §16): for every sample, Σ stages == e2e.
+    pub stage_latency: Vec<(Stage, LatencyStats)>,
+    /// Per-adapter per-stage stats, next to `per_adapter` (registry id
+    /// order).
+    pub per_adapter_stages: Vec<(AdapterId, Vec<(Stage, LatencyStats)>)>,
     pub batches: u64,
     pub factor_batches: u64,
     pub mean_batch: f64,
@@ -170,6 +198,22 @@ impl ScenarioSummary {
                 self.worker_respawns,
             ));
         }
+        fn stage_line(indent: &str, stages: &[(Stage, LatencyStats)]) -> String {
+            let mut line = format!("{indent}stages:");
+            for (stage, stats) in stages {
+                line.push_str(&format!(
+                    " {}(p50={:?} p95={:?})",
+                    stage.label(),
+                    stats.quantile(0.5),
+                    stats.quantile(0.95),
+                ));
+            }
+            line.push('\n');
+            line
+        }
+        if !self.stage_latency.is_empty() {
+            out.push_str(&stage_line("", &self.stage_latency));
+        }
         for (id, stats) in &self.per_adapter {
             out.push_str(&format!(
                 "  adapter {id}: n={} p50={:?} p95={:?} max={:?}\n",
@@ -178,6 +222,11 @@ impl ScenarioSummary {
                 stats.quantile(0.95),
                 stats.max(),
             ));
+            if let Some((_, stages)) =
+                self.per_adapter_stages.iter().find(|(aid, _)| aid == id)
+            {
+                out.push_str(&stage_line("    ", stages));
+            }
         }
         out
     }
@@ -194,6 +243,9 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
     let clock = vc.as_ref().map_or_else(Clock::real, Clock::virtual_from);
     let origin = clock.now();
     let events: Arc<Mutex<Vec<Event>>> = Arc::new(Mutex::new(Vec::new()));
+    // Lifecycle tracing (DESIGN.md §16): spans are offsets from the
+    // scenario origin, so the export is origin-independent.
+    let trace = spec.trace.then(|| TraceRecorder::new(origin, TraceRecorder::DEFAULT_CAP));
 
     // The merge hook records merge starts, fires any scripted panic
     // (contained by the pool's catch_unwind; only the target adapter's
@@ -294,6 +346,7 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
     cfg.queue_cap = spec.queue_cap;
     cfg.merge_hook = Some(hook);
     cfg.tier = tier_cfg;
+    cfg.trace = trace.clone();
     let (coord, join) = Coordinator::start(cfg).context("starting scenario coordinator")?;
 
     let mut driver = Driver {
@@ -311,6 +364,9 @@ pub fn run_scenario(spec: &ScenarioSpec, env: &ScenarioEnv) -> anyhow::Result<Sc
         outstanding: Vec::new(),
         tokens: Vec::new(),
         e2e: Vec::new(),
+        stages: Vec::new(),
+        stage_violations: Vec::new(),
+        trace,
         submitted: 0,
         completed: 0,
         failed: 0,
@@ -354,6 +410,15 @@ struct Driver<'a> {
     tokens: Vec<Option<Vec<i32>>>,
     /// Completed requests' (adapter, e2e) for the summary.
     e2e: Vec<(AdapterId, Duration)>,
+    /// Per-request stage breakdowns (indexed like `tokens`).
+    stages: Vec<Option<StageBreakdown>>,
+    /// Broken `Σ stages == e2e` invariants, surfaced as one error at
+    /// finish (never expected: the breakdown telescopes by
+    /// construction).
+    stage_violations: Vec<String>,
+    /// Lifecycle span recorder shared with the pool (`None`: tracing
+    /// off).
+    trace: Option<TraceRecorder>,
     submitted: usize,
     completed: usize,
     failed: usize,
@@ -395,6 +460,7 @@ impl Driver<'_> {
             .collect();
         self.submit_offset = vec![Duration::ZERO; n];
         self.tokens = vec![None; n];
+        self.stages = vec![None; n];
 
         if self.spec.prefetch {
             self.prefetch_all()?;
@@ -635,11 +701,12 @@ impl Driver<'_> {
         } else {
             self.spec.max_new
         };
-        let rx = self.coord.generate_async(GenRequest::new(
-            adapter,
-            self.prompts[idx].clone(),
-            max_new,
-        ));
+        // the tag is the request's trace-track identity: submission
+        // indices are schedule-derived, so exported traces are stable
+        // across thread interleavings (DESIGN.md §16)
+        let rx = self.coord.generate_async(
+            GenRequest::new(adapter, self.prompts[idx].clone(), max_new).with_tag(idx as u64),
+        );
         self.outstanding.push((idx, rx));
         self.submitted += 1;
     }
@@ -707,6 +774,15 @@ impl Driver<'_> {
                 );
                 self.e2e.push((adapter, resp.e2e));
                 self.tokens[idx] = Some(resp.tokens);
+                // the §16 accounting invariant: exact, not approximate
+                if resp.stages.sum() != resp.e2e {
+                    self.stage_violations.push(format!(
+                        "req {idx}: Σ stages {:?} != e2e {:?}",
+                        resp.stages.sum(),
+                        resp.e2e
+                    ));
+                }
+                self.stages[idx] = Some(resp.stages);
             }
             Err(e) => {
                 self.push_event(
@@ -715,13 +791,24 @@ impl Driver<'_> {
                 );
                 *self.failed_by_kind.entry(e.kind.to_string()).or_insert(0) += 1;
                 self.failed += 1;
+                self.stages[idx] = e.stages;
             }
         }
         self.completed += 1;
     }
 
     fn finish(&mut self) -> anyhow::Result<ScenarioRun> {
-        let (m, cache, _) = self.coord.metrics()?;
+        // One snapshot round-trip feeds both the summary aggregates and
+        // the Prometheus registry, so the two exports can't disagree.
+        let snaps = self.coord.metrics_per_worker()?;
+        let mut m = ServerMetrics::new();
+        let mut cache = CacheStats::default();
+        for s in &snaps {
+            m.absorb(&s.metrics);
+            cache.hits += s.cache.hits;
+            cache.misses += s.cache.misses;
+            cache.evictions += s.cache.evictions;
+        }
         let factor_cache = self.coord.factor_cache_stats()?;
         let (disk_loads, spilled) = self.coord.tier_stats();
         let merges = self.coord.merge_stats();
@@ -765,6 +852,56 @@ impl Driver<'_> {
             .iter()
             .filter(|e| matches!(e.kind, EventKind::Quarantine { .. }))
             .count() as u64;
+        // The §16 invariant is exact (the breakdown telescopes by
+        // construction), so any violation is a bug, not noise.
+        ensure!(
+            self.stage_violations.is_empty(),
+            "stage accounting broke: {}",
+            self.stage_violations.join("; ")
+        );
+        // Per-stage latency over successfully retired requests, exact
+        // percentiles pool-wide and per adapter (DESIGN.md §16).
+        let mut stage_samples: Vec<Vec<Duration>> = vec![Vec::new(); STAGES.len()];
+        let mut adapter_stage: BTreeMap<AdapterId, Vec<Vec<Duration>>> = BTreeMap::new();
+        for (idx, b) in self.stages.iter().enumerate() {
+            if self.tokens[idx].is_none() {
+                continue; // failures report their terminal stage via spans
+            }
+            let Some(b) = b else { continue };
+            let per = adapter_stage
+                .entry(self.schedule[idx].adapter)
+                .or_insert_with(|| vec![Vec::new(); STAGES.len()]);
+            for (i, &s) in STAGES.iter().enumerate() {
+                stage_samples[i].push(b.get(s));
+                per[i].push(b.get(s));
+            }
+        }
+        let stage_latency: Vec<(Stage, LatencyStats)> = STAGES
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (s, LatencyStats::from_samples(&stage_samples[i])))
+            .collect();
+        let per_adapter_stages: Vec<(AdapterId, Vec<(Stage, LatencyStats)>)> = adapter_stage
+            .into_iter()
+            .map(|(id, per)| {
+                let by_stage = STAGES
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &s)| (s, LatencyStats::from_samples(&per[i])))
+                    .collect();
+                (id, by_stage)
+            })
+            .collect();
+        // Drain the trace shards (all threads quiesced) and render the
+        // Prometheus exposition from the same worker snapshots.
+        let spans = self.trace.as_ref().map(|t| t.drain()).unwrap_or_default();
+        let quarantined_adapters = self.coord.with_registry(|r| r.quarantined_ids().len());
+        let metrics_text = pool_registry(
+            &snaps,
+            quarantined_adapters,
+            self.trace.as_ref().map(|t| t.dropped()),
+        )
+        .render();
         let summary = ScenarioSummary {
             name: self.spec.name.clone(),
             strategy: self.spec.strategy,
@@ -779,6 +916,8 @@ impl Driver<'_> {
                 .into_iter()
                 .map(|(id, ds)| (id, LatencyStats::from_samples(&ds)))
                 .collect(),
+            stage_latency,
+            per_adapter_stages,
             batches: m.batches,
             factor_batches: m.factor_batches,
             mean_batch: m.mean_batch_size(),
@@ -799,6 +938,13 @@ impl Driver<'_> {
             merges,
             real_wall: Duration::ZERO, // stamped by run_scenario
         };
-        Ok(ScenarioRun { events, tokens: std::mem::take(&mut self.tokens), summary })
+        Ok(ScenarioRun {
+            events,
+            tokens: std::mem::take(&mut self.tokens),
+            stages: std::mem::take(&mut self.stages),
+            spans,
+            metrics_text,
+            summary,
+        })
     }
 }

@@ -187,6 +187,11 @@ pub struct ScenarioSpec {
     pub disk_retries: u32,
     /// Virtual-clock backoff between tier-load retries.
     pub disk_backoff: Duration,
+    /// Record request-lifecycle spans (DESIGN.md §16). On by default:
+    /// ring-buffer recording is off the latency path, and the run's
+    /// `trace_json()` export + per-stage breakdowns need it. `false`
+    /// pins the tracing-disabled configuration (bench baseline).
+    pub trace: bool,
     pub faults: FaultPlan,
 }
 
@@ -220,6 +225,7 @@ impl Default for ScenarioSpec {
             queue_cap: None,
             disk_retries: 0,
             disk_backoff: Duration::ZERO,
+            trace: true,
             faults: FaultPlan::default(),
         }
     }

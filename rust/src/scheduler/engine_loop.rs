@@ -95,6 +95,12 @@ pub struct FinishedRequest {
     /// Enqueue → first consumed token (admission wait + prefill; zero
     /// virtual time under the scenario clock).
     pub ttft: Duration,
+    /// Clock instant the first token was consumed. `None` when the
+    /// request retired without producing output (queued expiry, zero
+    /// budget, a pre-output cancel) — unlike `ttft`, which reads as the
+    /// retirement time on those paths, this is unambiguous, so stage
+    /// attribution splits prefill from decode on it (DESIGN.md §16).
+    pub first_token: Option<Instant>,
     /// [`LoopStats::work_rows`] at the moment the first token was
     /// consumed — a deterministic, clock-independent TTFT proxy (forward
     /// rows the session computed before this request produced output).
@@ -135,6 +141,7 @@ struct LaneState {
     generated: Vec<i32>,
     enqueued: Instant,
     ttft: Option<Duration>,
+    first_token: Option<Instant>,
     /// `work_rows` when the first token was consumed.
     first_token_work: Option<u64>,
     deadline: Option<Instant>,
@@ -203,7 +210,9 @@ fn consume_row(
     );
     queue.charge(ls.tenant, 1);
     if ls.ttft.is_none() {
-        ls.ttft = Some(clock.now().duration_since(ls.enqueued));
+        let now = clock.now();
+        ls.ttft = Some(now.duration_since(ls.enqueued));
+        ls.first_token = Some(now);
         ls.first_token_work = Some(stats.work_rows);
     }
     if done {
@@ -218,6 +227,7 @@ fn consume_row(
             outcome: RequestOutcome::Done,
             tokens: ls.generated,
             ttft: ls.ttft.unwrap_or_default(),
+            first_token: ls.first_token,
             first_token_work: ls.first_token_work.unwrap_or_default(),
         });
     }
@@ -270,6 +280,7 @@ pub fn run_continuous(
                 outcome,
                 tokens: ls.generated,
                 ttft: ls.ttft.unwrap_or_default(),
+                first_token: ls.first_token,
                 first_token_work: ls.first_token_work.unwrap_or_default(),
             });
         }
@@ -293,6 +304,7 @@ pub fn run_continuous(
                         outcome,
                         tokens: Vec::new(),
                         ttft: clock.now().duration_since(r.enqueued),
+                        first_token: None,
                         first_token_work: stats.work_rows,
                     });
                     continue;
@@ -315,6 +327,7 @@ pub fn run_continuous(
                         outcome: RequestOutcome::Done,
                         tokens: Vec::new(),
                         ttft: clock.now().duration_since(r.enqueued),
+                        first_token: None,
                         first_token_work: stats.work_rows,
                     });
                     continue;
@@ -331,6 +344,7 @@ pub fn run_continuous(
                 generated: Vec::new(),
                 enqueued: req.enqueued,
                 ttft: None,
+                first_token: None,
                 first_token_work: None,
                 deadline: req.deadline,
                 cancel: req.cancel.clone(),
